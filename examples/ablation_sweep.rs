@@ -1,0 +1,66 @@
+//! Ablation sweep: the efficiency–accuracy trade-off surface of QUOKA on
+//! one workload — budget × N_Q × scoring/aggregation variants — in one run
+//! (paper §4.5 condensed).
+//!
+//! ```bash
+//! cargo run --release --example ablation_sweep
+//! ```
+
+use quoka::eval::EvalOpts;
+use quoka::select::{Quoka, QuokaConfig, QueryAgg, Scoring};
+use quoka::util::timing::Table;
+use quoka::workload::ruler;
+
+fn main() -> anyhow::Result<()> {
+    println!("== QUOKA ablation sweep (RULER proxy, t=4096, B_CP=128) ==\n");
+    let t_len = 4096usize;
+    let opts = EvalOpts { skip_fidelity: true, ..Default::default() };
+
+    // Budget sweep.
+    let mut budget_table = Table::new(&["B_SA", "score", "kv fraction"]);
+    for budget in [128usize, 256, 512, 1024, 2048] {
+        let q = Quoka::default();
+        let s = ruler::score(&q, budget, t_len, 128, 5, &opts);
+        budget_table.row(vec![
+            budget.to_string(),
+            format!("{s:.1}"),
+            format!("{:.1}%", 100.0 * budget as f32 / t_len as f32),
+        ]);
+    }
+    println!("budget sweep:");
+    budget_table.print();
+
+    // N_Q sweep.
+    let mut nq_table = Table::new(&["N_Q", "score"]);
+    for nq in [2usize, 4, 8, 16, 32, 64] {
+        let q = Quoka::new(QuokaConfig { n_q: nq, ..QuokaConfig::default() });
+        let s = ruler::score(&q, 512, t_len, 128, 5, &opts);
+        nq_table.row(vec![nq.to_string(), format!("{s:.1}")]);
+    }
+    println!("\nN_Q sweep (B_SA=512):");
+    nq_table.print();
+
+    // Design-choice ablations.
+    let mut var_table = Table::new(&["variant", "score"]);
+    let variants: Vec<(&str, QuokaConfig)> = vec![
+        ("cosine+max (QUOKA)", QuokaConfig::default()),
+        ("dot+max", QuokaConfig { scoring: Scoring::Dot, ..QuokaConfig::default() }),
+        ("cosine+mean", QuokaConfig { query_agg: QueryAgg::Mean, ..QuokaConfig::default() }),
+        (
+            "dot+mean",
+            QuokaConfig {
+                scoring: Scoring::Dot,
+                query_agg: QueryAgg::Mean,
+                ..QuokaConfig::default()
+            },
+        ),
+    ];
+    for (name, cfg) in variants {
+        let s = ruler::score(&Quoka::new(cfg), 512, t_len, 128, 5, &opts);
+        var_table.row(vec![name.to_string(), format!("{s:.1}")]);
+    }
+    println!("\ndesign ablations (B_SA=512):");
+    var_table.print();
+    println!("\nexpected shape: graceful budget degradation; flat N_Q; cosine+max on top.");
+    Ok(())
+}

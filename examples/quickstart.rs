@@ -1,0 +1,55 @@
+//! Quickstart: spin up the engine in-process, serve a few requests with
+//! QUOKA selection, and print latency numbers.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//! Uses the host backend (no artifacts needed). For the compiled PJRT
+//! path, see `examples/serve_e2e.rs`.
+
+use quoka::coordinator::{Engine, EngineCfg, PolicySpec, SchedCfg};
+use quoka::workload::corpus::{ByteTokenizer, Corpus};
+
+fn main() -> anyhow::Result<()> {
+    // 1. An engine over the small GQA model with chunked prefill (B_CP=128)
+    //    and continuous batching.
+    let mut engine = Engine::new_host(
+        "serve-small",
+        EngineCfg {
+            sched: SchedCfg { b_cp: 128, step_tokens: 256, max_running: 4 },
+            ..EngineCfg::default()
+        },
+    )?;
+    let tok = ByteTokenizer::new(engine.model_cfg().vocab);
+
+    // 2. Three prompts; each request picks its own selection policy.
+    let mut corpus = Corpus::new(7);
+    let prompts = [
+        (corpus.text(2000), "quoka", 512),
+        (corpus.text(3000), "dense", 0),
+        (corpus.text(2500), "sample", 512),
+    ];
+    for (text, policy, budget) in &prompts {
+        let id = engine.submit(
+            tok.encode(text),
+            8,
+            PolicySpec { name: policy.to_string(), budget: *budget },
+        )?;
+        println!("submitted request {id} with policy={policy}");
+    }
+
+    // 3. Run the engine to completion and report.
+    let results = engine.run_to_completion()?;
+    for r in &results {
+        println!(
+            "request {}: prompt={} tok, generated={} tok, ttft={:.1} ms, tpot={:.2} ms",
+            r.id,
+            r.prompt_tokens,
+            r.generated.len(),
+            r.ttft_s * 1e3,
+            r.tpot_s * 1e3,
+        );
+    }
+    println!("\nengine: {}", engine.metrics.summary());
+    Ok(())
+}

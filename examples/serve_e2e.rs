@@ -1,0 +1,86 @@
+//! End-to-end validation run (EXPERIMENTS.md §E2E): start the full stack —
+//! PJRT artifacts compiled from the JAX/Pallas model, the Rust engine with
+//! Sarathi-style chunked prefill, the TCP server — and serve a batched
+//! request mix, comparing dense vs QUOKA TTFT/throughput on the same
+//! workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_e2e
+//! QUOKA_E2E_BACKEND=host cargo run --release --example serve_e2e   # no artifacts
+//! ```
+
+use quoka::coordinator::{Engine, EngineCfg, SchedCfg};
+use quoka::server::{serve, Client, WireRequest};
+use quoka::workload::corpus::{request_mix, Corpus};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let backend = std::env::var("QUOKA_E2E_BACKEND").unwrap_or_else(|_| {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            "pjrt".into()
+        } else {
+            "host".into()
+        }
+    });
+    println!("== QUOKA-Serve end-to-end validation (backend: {backend}) ==");
+
+    let cfg = EngineCfg {
+        sched: SchedCfg { b_cp: 128, step_tokens: 384, max_running: 8 },
+        pool_blocks: 8192,
+        block_tokens: 128,
+        seed: 0,
+    };
+    let b2 = backend.clone();
+    let handle = serve(
+        move || match b2.as_str() {
+            "pjrt" => Engine::new_pjrt("artifacts", cfg),
+            _ => Engine::new_host("serve-small", cfg),
+        },
+        "127.0.0.1:0",
+    )?;
+    let addr = handle.addr;
+    println!("server on {addr}");
+
+    // A mixed batch: prompt lengths log-uniform in [512, 3072], 16 decode
+    // tokens each (kept modest so the dense baseline finishes on CPU).
+    let mix = request_mix(6, 512, 3072, 16, 42);
+    let mut corpus = Corpus::new(9);
+    let prompts: Vec<String> = mix.iter().map(|r| corpus.text(r.prompt_tokens)).collect();
+
+    for (policy, budget) in [("dense", 0usize), ("quoka", 1024)] {
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for (i, prompt) in prompts.iter().enumerate() {
+            let prompt = prompt.clone();
+            let max_new = mix[i].decode_tokens;
+            let policy = policy.to_string();
+            handles.push(std::thread::spawn(move || -> anyhow::Result<_> {
+                let mut c = Client::connect(addr)?;
+                c.request(&WireRequest { prompt, max_new, policy, budget })
+            }));
+        }
+        let mut ttfts = Vec::new();
+        let mut total_tokens = 0usize;
+        for h in handles {
+            let r = h.join().unwrap()?;
+            ttfts.push(r.ttft_ms);
+            total_tokens += r.prompt_tokens + r.generated;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = ttfts.iter().sum::<f64>() / ttfts.len() as f64;
+        println!(
+            "[{policy:>5}] batch of {}: wall {:.2}s, throughput {:.0} tok/s, \
+             TTFT mean {:.0}ms / p50 {:.0}ms / max {:.0}ms",
+            prompts.len(),
+            wall,
+            total_tokens as f64 / wall,
+            mean,
+            ttfts[ttfts.len() / 2],
+            ttfts[ttfts.len() - 1],
+        );
+    }
+    println!("expected shape: quoka TTFT <= dense, gap widening with prompt length");
+    handle.shutdown();
+    Ok(())
+}

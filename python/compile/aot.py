@@ -1,0 +1,195 @@
+"""AOT pipeline: lower the L2/L1 graphs to HLO *text* artifacts.
+
+Python runs exactly once (``make artifacts``); the Rust engine loads the
+text with ``HloModuleProto::from_text_file``, compiles on the PJRT CPU
+client, and executes with weights/caches as device buffers.
+
+HLO **text** — not ``serialize()`` — is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids that the crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+
+Artifacts (per KV bucket L, serve-small config):
+  layer_dense_T{L}        hidden[128,dm] ... -> (hidden', k_self, v_self)
+  layer_quoka_T{L}        same, with Alg. 1 inside (B_SA, N_Q static)
+  layer_dense_decode_T{L} s = 1 variant
+  layer_quoka_decode_T{L} s = 1 variant
+  embed_p / embed_d       token embedding for prefill chunk / decode step
+  logits                  tied LM head over one hidden row
+  quoka_select_T{L}       standalone Alg. 1 scorer (parity tests / hybrid)
+
+``manifest.json`` records the model config, bucket list, static
+hyperparameters and the exact argument order of every artifact — the
+contract the Rust runtime loads.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.quoka_select import quoka_scores
+from .kernels.ref import preaggregate_ref, query_subselect_ref, topk_desc
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(fn, example_args):
+    """jit → lower → StableHLO → XlaComputation → HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def layer_arg_specs(cfg, s, bucket):
+    """(name, spec) list for a layer-step artifact, in call order."""
+    dm, dh, nkv = cfg["d_model"], cfg["d_head"], cfg["n_kv_heads"]
+    args = [("hidden", spec((s, dm)))]
+    args += [(n, spec(sh)) for n, sh in M.layer_weight_shapes(cfg)]
+    args += [
+        ("k_cache", spec((nkv, bucket, dh))),
+        ("v_cache", spec((nkv, bucket, dh))),
+        ("t_len", spec((), I32)),
+        ("pos0", spec((), I32)),
+    ]
+    return args
+
+
+def build_layer(cfg, s, bucket, kind, b_sa, n_q_sel):
+    """Return (fn, example_specs) for one layer-step artifact."""
+    names = [n for n, _ in M.layer_weight_shapes(cfg)]
+    causal = s > 1
+
+    def fn(hidden, *rest):
+        lw = dict(zip(names, rest[: len(names)]))
+        k_cache, v_cache, t_len, pos0 = rest[len(names):]
+        if kind == "dense":
+            out = M.layer_dense(cfg, hidden, lw, k_cache, v_cache, t_len, pos0, causal_self=causal)
+        else:
+            out = M.layer_quoka(
+                cfg, hidden, lw, k_cache, v_cache, t_len, pos0,
+                b_sa=b_sa, n_q_sel=n_q_sel, causal_self=causal,
+            )
+        return out  # (hidden', k_self, v_self)
+
+    specs = [sp for _, sp in layer_arg_specs(cfg, s, bucket)]
+    return fn, specs
+
+
+def build_embed(cfg, s):
+    def fn(tokens, embedding):
+        return (M.embed(tokens, embedding),)
+
+    return fn, [spec((s,), I32), spec((cfg["vocab"], cfg["d_model"]))]
+
+
+def build_logits(cfg):
+    def fn(hidden_row, final_norm, embedding):
+        return (M.logits(hidden_row, final_norm, embedding, cfg["norm_eps"]),)
+
+    return fn, [spec((cfg["d_model"],)), spec((cfg["d_model"],)), spec((cfg["vocab"], cfg["d_model"]))]
+
+
+def build_select(cfg, s, bucket, b_sa, n_q_sel):
+    """Standalone Algorithm-1 scorer: q + cache -> (indices, scores)."""
+    nkv, dh = cfg["n_kv_heads"], cfg["d_head"]
+
+    def fn(q, k_cache, t_len):
+        n_q_eff = min(n_q_sel, s)
+        q_sel = query_subselect_ref(q, n_q_eff) if s > n_q_eff else q
+        qbar = preaggregate_ref(q_sel, nkv)
+        scores = quoka_scores(qbar, k_cache, t_len)
+        top_scores, idx = topk_desc(scores, b_sa)
+        return idx.astype(I32), top_scores
+
+    return fn, [spec((cfg["n_q_heads"], s, dh)), spec((nkv, bucket, dh)), spec((), I32)]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--model", default="serve-small")
+    ap.add_argument("--buckets", default="1024,4096,16384,65536",
+                    help="KV bucket lengths (comma separated, multiples of 512)")
+    ap.add_argument("--b-cp", type=int, default=128, help="prefill chunk size")
+    ap.add_argument("--b-sa", type=int, default=1024, help="selection budget baked into quoka artifacts")
+    ap.add_argument("--n-q", type=int, default=16, help="max retained queries (N_Q)")
+    ap.add_argument("--quick", action="store_true", help="only the smallest bucket (CI)")
+    args = ap.parse_args()
+
+    cfg = M.model_config(args.model)
+    buckets = [int(b) for b in args.buckets.split(",")]
+    if args.quick:
+        buckets = buckets[:1]
+    for b in buckets:
+        assert b % 512 == 0, f"bucket {b} must be a multiple of the kernel tile (512)"
+        assert b >= args.b_sa, f"bucket {b} < B_SA {args.b_sa}"
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    artifacts = []
+
+    def emit(name, fn, specs, **meta):
+        path = f"{name}.hlo.txt"
+        text = to_hlo_text(fn, specs)
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        artifacts.append(dict(name=name, file=path, **meta))
+        print(f"  wrote {path} ({len(text) / 1024:.0f} KiB)")
+
+    print(f"AOT-lowering model={cfg['name']} buckets={buckets} "
+          f"B_CP={args.b_cp} B_SA={args.b_sa} N_Q={args.n_q}")
+
+    for s, tag in [(args.b_cp, ""), (1, "_decode")]:
+        for bucket in buckets:
+            for kind in ["dense", "quoka"]:
+                fn, specs = build_layer(cfg, s, bucket, kind, args.b_sa, args.n_q)
+                emit(
+                    f"layer_{kind}{tag}_T{bucket}", fn, specs,
+                    kind=kind, s=s, bucket=bucket,
+                    args=[n for n, _ in layer_arg_specs(cfg, s, bucket)],
+                    outs=["hidden", "k_self", "v_self"],
+                )
+
+    for s, tag in [(args.b_cp, "embed_p"), (1, "embed_d")]:
+        fn, specs = build_embed(cfg, s)
+        emit(tag, fn, specs, kind="embed", s=s, args=["tokens", "embedding"], outs=["hidden"])
+
+    fn, specs = build_logits(cfg)
+    emit("logits", fn, specs, kind="logits", args=["hidden_row", "final_norm", "embedding"], outs=["logits"])
+
+    for bucket in buckets:
+        fn, specs = build_select(cfg, args.b_cp, bucket, args.b_sa, args.n_q)
+        emit(
+            f"quoka_select_T{bucket}", fn, specs,
+            kind="select", s=args.b_cp, bucket=bucket,
+            args=["q", "k_cache", "t_len"], outs=["indices", "scores"],
+        )
+
+    manifest = dict(
+        model=cfg,
+        buckets=buckets,
+        b_cp=args.b_cp,
+        b_sa=args.b_sa,
+        n_q_sel=args.n_q,
+        layer_weights=[n for n, _ in M.layer_weight_shapes(cfg)],
+        artifacts=artifacts,
+    )
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote manifest.json ({len(artifacts)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

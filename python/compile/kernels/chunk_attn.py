@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: flash-style chunk attention over [past | self] KV.
+
+One grid cell per query head. Inside, the key/value buffer is streamed in
+``L_TILE`` tiles with the classic online-softmax recurrence (running max
+``m``, running normalizer ``l``, rescaled accumulator ``acc``), so the
+working set per step is one K tile + one V tile + the chunk's query block —
+the FlashAttention HBM→VMEM schedule expressed with a ``fori_loop`` instead
+of CUDA threadblocks (DESIGN.md §Hardware-Adaptation).
+
+Masking follows the engine's combined-buffer layout: columns ``< n_past``
+are selected past tokens (always visible), columns ``n_past .. n_past+s``
+are the chunk's own tokens (causally visible), everything after is padding.
+
+Lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+L_TILE = 512
+NEG = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, n_past_ref, o_ref, *, l_tile, causal_self, g):
+    """One query head.
+
+    q_ref: [1, s, d]; k_ref/v_ref: [1, L, d] (this head's KV-group slab);
+    n_past_ref: [1] int32; o_ref: [1, s, d].
+    """
+    q = q_ref[0].astype(jnp.float32)  # [s, d]
+    s, d = q.shape
+    length = k_ref.shape[1]
+    n_past = n_past_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    rows = jax.lax.iota(jnp.int32, s)[:, None]  # [s, 1]
+
+    def body(i, carry):
+        m, l, acc = carry
+        start = i * l_tile
+        kt = jax.lax.dynamic_slice(k_ref[0], (start, 0), (l_tile, d)).astype(jnp.float32)
+        vt = jax.lax.dynamic_slice(v_ref[0], (start, 0), (l_tile, d)).astype(jnp.float32)
+        logits = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ()))) * scale  # [s, l_tile]
+        cols = start + jax.lax.iota(jnp.int32, l_tile)[None, :]  # [1, l_tile]
+        past_ok = cols < n_past
+        if causal_self:
+            self_ok = (cols >= n_past) & (cols - n_past <= rows) & (cols < n_past + s)
+        else:
+            self_ok = (cols >= n_past) & (cols < n_past + s)
+        logits = jnp.where(past_ok | self_ok, logits, NEG)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=1))  # [s]
+        p = jnp.exp(logits - m_new[:, None])  # [s, l_tile]
+        alpha = jnp.exp(m - m_new)  # [s]
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + p @ vt
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((s,), NEG, jnp.float32)
+    l0 = jnp.zeros((s,), jnp.float32)
+    acc0 = jnp.zeros((s, d), jnp.float32)
+    n_tiles = length // l_tile
+    m, l, acc = jax.lax.fori_loop(0, n_tiles, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0, :, :] = out.astype(o_ref.dtype)
+    del g
+
+
+@functools.partial(jax.jit, static_argnames=("l_tile", "causal_self"))
+def chunk_attention(q, k, v, n_past, l_tile=L_TILE, causal_self=True):
+    """Pallas-backed chunk attention.
+
+    Args:
+      q: ``[n_q_heads, s, d]``.
+      k, v: ``[n_kv, L, d]`` with ``L`` a multiple of ``l_tile``.
+      n_past: scalar int32 — valid past rows.
+      causal_self: apply the in-chunk causal mask (False for decode).
+
+    Returns:
+      ``[n_q_heads, s, d]``.
+    """
+    n_q, s, d = q.shape
+    n_kv, length, _ = k.shape
+    g = n_q // n_kv
+    assert length % l_tile == 0, f"L={length} not a multiple of {l_tile}"
+    n_past_arr = jnp.asarray(n_past, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, l_tile=l_tile, causal_self=causal_self, g=g),
+        grid=(n_q,),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda h: (h, 0, 0)),
+            # Each query head reads its KV-group head h // g.
+            pl.BlockSpec((1, length, d), lambda h: (h // g, 0, 0)),
+            pl.BlockSpec((1, length, d), lambda h: (h // g, 0, 0)),
+            pl.BlockSpec((1,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, s, d), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v, n_past_arr)

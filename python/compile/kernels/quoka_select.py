@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: QUOKA cosine scoring with max aggregation.
+
+The hot loop of Algorithm 1 (lines 6-10): stream the key cache through
+VMEM in tiles along the sequence axis, normalize each tile, multiply by the
+tiny pre-aggregated query block ``Q̄`` (resident in VMEM for the whole
+grid), and max-reduce over the query axis.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is
+``(n_kv, T // K_TILE)``; per step the kernel touches one ``[K_TILE, d]``
+key tile (128 KiB at the default 512×64 f32) plus the ``[N_Q, d]`` query
+block (4 KiB) — far under VMEM, with the ``N_Q×d×K_TILE`` matmul feeding
+the MXU. A CUDA port would assign the same tile to a threadblock; the
+BlockSpec expresses the identical HBM→scratch schedule.
+
+Lowered with ``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode emits plain HLO with identical numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Keys processed per grid step.
+K_TILE = 512
+
+
+def _score_kernel(qbar_ref, k_ref, t_len_ref, out_ref, *, k_tile):
+    """One (kv_head, key-tile) grid cell.
+
+    qbar_ref: [n_q, d] — this head's pre-aggregated queries (whole block).
+    k_ref:    [k_tile, d] — one tile of this head's keys.
+    t_len_ref:[1] int32 — valid cache length.
+    out_ref:  [k_tile] — max-aggregated cosine scores for the tile.
+    """
+    tile_idx = pl.program_id(1)
+    k = k_ref[0].astype(jnp.float32)  # [k_tile, d]
+    # Normalize keys (cosine scoring): zero rows stay zero.
+    norms = jnp.sqrt(jnp.sum(k * k, axis=-1, keepdims=True))
+    kn = k / jnp.maximum(norms, 1e-9)
+    qb = qbar_ref[0].astype(jnp.float32)  # [n_q, d]
+    # [n_q, k_tile] similarity block on the MXU, then max over queries.
+    s = jax.lax.dot_general(qb, kn, (((1,), (1,)), ((), ())))
+    smax = jnp.max(s, axis=0)
+    # Mask the invalid tail of the cache.
+    base = tile_idx * k_tile
+    pos = base + jax.lax.iota(jnp.int32, k_tile)
+    valid = pos < t_len_ref[0]
+    out_ref[0, :] = jnp.where(valid, smax, -jnp.inf).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k_tile",))
+def quoka_scores(qbar, k, t_len, k_tile=K_TILE):
+    """Pallas-backed QUOKA scores.
+
+    Args:
+      qbar: ``[n_kv, n_q, d]`` pre-aggregated normalized queries.
+      k: ``[n_kv, T, d]`` raw keys; ``T`` must be a multiple of ``k_tile``
+         (the AOT pipeline buckets T in powers of two ≥ ``k_tile``).
+      t_len: scalar int32 valid length.
+
+    Returns:
+      ``[n_kv, T]`` scores, -inf on the invalid tail.
+    """
+    n_kv, n_q, d = qbar.shape
+    _, t, _ = k.shape
+    assert t % k_tile == 0, f"T={t} must be a multiple of k_tile={k_tile}"
+    t_len_arr = jnp.asarray(t_len, jnp.int32).reshape(1)
+    grid = (n_kv, t // k_tile)
+    return pl.pallas_call(
+        functools.partial(_score_kernel, k_tile=k_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_q, d), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, k_tile, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1,), lambda h, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, k_tile), lambda h, i: (h, i)),
+        out_shape=jax.ShapeDtypeStruct((n_kv, t), jnp.float32),
+        interpret=True,
+    )(qbar, k, t_len_arr)

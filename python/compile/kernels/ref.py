@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is checked against these references by
+``python/tests/test_kernels.py`` (hypothesis sweeps over shapes) before the
+AOT pipeline is allowed to embed it in an artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_desc(x, k):
+    """Sort-based descending top-k: ``(values, indices)`` along the last
+    axis, ties broken by lower index.
+
+    ``jax.lax.top_k`` lowers to the dedicated ``topk(..., largest=true)``
+    HLO op, which the xla_extension 0.5.1 text parser (the Rust runtime's
+    XLA) rejects; a comparator ``sort`` parses everywhere. Used by every
+    graph that gets AOT-lowered.
+    """
+    n = x.shape[-1]
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), x.shape)
+    neg_sorted, idx_sorted = jax.lax.sort((-x, idx), dimension=-1, num_keys=1, is_stable=True)
+    return -neg_sorted[..., :k], idx_sorted[..., :k]
+
+
+def quoka_scores_ref(qbar, k, t_len):
+    """QUOKA cosine scores with max aggregation (paper Alg. 1, lines 6-10).
+
+    Args:
+      qbar: ``[n_kv, n_q, d]`` pre-aggregated (group-mean of normalized)
+        queries. NOT re-normalized here — normalization happened before the
+        group mean, per the pre-aggregation identity.
+      k: ``[n_kv, T, d]`` raw keys.
+      t_len: scalar — valid prefix of the T axis.
+
+    Returns:
+      ``[n_kv, T]`` scores; invalid tail = -inf.
+    """
+    kn = k / jnp.maximum(jnp.linalg.norm(k, axis=-1, keepdims=True), 1e-9)
+    s = jnp.einsum("hqd,htd->hqt", qbar, kn)  # [n_kv, n_q, T]
+    smax = jnp.max(s, axis=1)  # [n_kv, T]
+    valid = jnp.arange(k.shape[1])[None, :] < t_len
+    return jnp.where(valid, smax, -jnp.inf)
+
+
+def attention_ref(q, k, v, n_past, causal_self):
+    """Masked attention over a combined [past | self] KV buffer.
+
+    Args:
+      q: ``[n_q_heads, s, d]``.
+      k, v: ``[n_kv, L, d]`` — the first ``n_past`` rows are past (always
+        visible), rows ``n_past..n_past+s`` are the chunk's own tokens
+        (causally visible when ``causal_self``), anything beyond is padding.
+      n_past: scalar int32.
+      causal_self: python bool — False for pure decode (s == 1).
+
+    Returns:
+      ``[n_q_heads, s, d]``.
+    """
+    n_q, s, d = q.shape
+    n_kv, length, _ = k.shape
+    g = n_q // n_kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32)).astype(q.dtype)
+    kk = jnp.repeat(k, g, axis=0)  # [n_q, L, d]
+    vv = jnp.repeat(v, g, axis=0)
+    logits = jnp.einsum("hsd,htd->hst", q, kk) * scale  # [n_q, s, L]
+    cols = jnp.arange(length)[None, None, :]
+    rows = jnp.arange(s)[None, :, None]
+    past_ok = cols < n_past
+    if causal_self:
+        self_ok = (cols >= n_past) & (cols - n_past <= rows) & (cols < n_past + s)
+    else:
+        self_ok = (cols >= n_past) & (cols < n_past + s)
+    mask = past_ok | self_ok
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("hst,htd->hsd", w, vv)
+
+
+def query_subselect_ref(q, n_q_sel):
+    """Stage-1 query subselection (Alg. 1 lines 1-5), per Q head.
+
+    Args:
+      q: ``[n_heads, s, d]``.
+      n_q_sel: static int — queries retained per head.
+
+    Returns:
+      ``[n_heads, n_q_sel, d]`` the retained queries (most-dissimilar-from-
+      mean first).
+    """
+    m = jnp.mean(q, axis=1, keepdims=True)  # [h, 1, d]
+    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    mn = m / jnp.maximum(jnp.linalg.norm(m, axis=-1, keepdims=True), 1e-9)
+    sims = jnp.sum(qn * mn, axis=-1)  # [h, s]
+    _, idx = topk_desc(-sims, n_q_sel)  # most dissimilar
+    return jnp.take_along_axis(q, idx[:, :, None], axis=1)
+
+
+def preaggregate_ref(q_sel, n_kv):
+    """Normalize retained queries and mean them over each KV group.
+
+    Args:
+      q_sel: ``[n_q_heads, n_q_sel, d]``.
+      n_kv: number of KV heads.
+
+    Returns:
+      ``[n_kv, n_q_sel, d]``.
+    """
+    qn = q_sel / jnp.maximum(jnp.linalg.norm(q_sel, axis=-1, keepdims=True), 1e-9)
+    h, nq, d = qn.shape
+    g = h // n_kv
+    return jnp.mean(qn.reshape(n_kv, g, nq, d), axis=1)

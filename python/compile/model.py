@@ -1,0 +1,218 @@
+"""L2: the serving model's compute graph in JAX, calling the L1 kernels.
+
+Mirrors ``rust/src/model/transformer.rs`` operation-for-operation (RMSNorm →
+QKV+RoPE → attention → output projection → SwiGLU FFN, tied LM head) so the
+host backend and the PJRT artifact path are numerically interchangeable
+(checked by ``rust/tests/parity.rs``).
+
+Two layer-step variants are lowered per KV bucket:
+
+- ``layer_dense``  — attention over the full (bucketed) cache: the paper's
+  dense chunked-prefill baseline.
+- ``layer_quoka``  — Algorithm 1 end-to-end *inside XLA*: query
+  subselection → pre-aggregation → the Pallas scoring kernel → static
+  ``top_k(B_SA)`` → gather → dense attention over the reduced buffer. The
+  whole selection pipeline lowers into the same HLO module as the layer.
+
+Python runs only at AOT time; the Rust engine feeds these graphs weights
+and caches as PJRT buffers.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.chunk_attn import chunk_attention
+from .kernels.quoka_select import quoka_scores
+from .kernels.ref import preaggregate_ref, query_subselect_ref, topk_desc
+
+
+def rmsnorm(x, w, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope(x, positions, theta):
+    """Rotary embedding matching the Rust implementation: pairs
+    ``(x[2i], x[2i+1])`` rotated by ``pos * theta^(-2i/d)``.
+
+    x: ``[..., s, d]``; positions: ``[s]`` int32.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    i = jnp.arange(half, dtype=jnp.float32)
+    freq = theta ** (-2.0 * i / d)  # [half]
+    angle = positions.astype(jnp.float32)[:, None] * freq[None, :]  # [s, half]
+    sin, cos = jnp.sin(angle), jnp.cos(angle)
+    shape = x.shape[:-1] + (half, 2)
+    x2 = x.reshape(shape)
+    a, b = x2[..., 0], x2[..., 1]
+    ra = a * cos - b * sin
+    rb = a * sin + b * cos
+    return jnp.stack([ra, rb], axis=-1).reshape(x.shape)
+
+
+def split_heads(x, n_heads, d_head):
+    """``[s, H*dh] -> [H, s, dh]``."""
+    s = x.shape[0]
+    return x.reshape(s, n_heads, d_head).transpose(1, 0, 2)
+
+
+def merge_heads(x):
+    """``[H, s, dh] -> [s, H*dh]``."""
+    h, s, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(s, h * dh)
+
+
+def embed(tokens, embedding):
+    """Token embedding gather. tokens: ``[s]`` int32."""
+    return jnp.take(embedding, tokens, axis=0)
+
+
+def logits(hidden_row, final_norm, embedding, eps):
+    """Tied LM head over one hidden row ``[d_model]``."""
+    normed = rmsnorm(hidden_row[None, :], final_norm, eps)[0]
+    return embedding @ normed
+
+
+def _qkv(hidden, cfg, lw, positions):
+    """Shared prefix: norm, projections, head split, RoPE."""
+    normed = rmsnorm(hidden, lw["attn_norm"], cfg["norm_eps"])
+    q = split_heads(normed @ lw["wq"], cfg["n_q_heads"], cfg["d_head"])
+    k = split_heads(normed @ lw["wk"], cfg["n_kv_heads"], cfg["d_head"])
+    v = split_heads(normed @ lw["wv"], cfg["n_kv_heads"], cfg["d_head"])
+    if cfg["use_rope"]:
+        q = rope(q, positions, cfg["rope_theta"])
+        k = rope(k, positions, cfg["rope_theta"])
+    return normed, q, k, v
+
+
+def _ffn(hidden, cfg, lw):
+    normed = rmsnorm(hidden, lw["ffn_norm"], cfg["norm_eps"])
+    gate = normed @ lw["w_gate"]
+    up = normed @ lw["w_up"]
+    act = jax.nn.silu(gate) * up
+    return act @ lw["w_down"]
+
+
+def _finish_layer(hidden, attn_heads, cfg, lw):
+    hidden = hidden + merge_heads(attn_heads) @ lw["wo"]
+    hidden = hidden + _ffn(hidden, cfg, lw)
+    return hidden
+
+
+def layer_dense(cfg, hidden, lw, k_cache, v_cache, t_len, pos0, causal_self=True):
+    """Dense-baseline layer step over a bucketed cache.
+
+    Args:
+      hidden: ``[s, d_model]``; k_cache/v_cache: ``[n_kv, L, d]`` with
+        ``t_len`` valid rows; pos0: scalar — absolute position of the
+        chunk's first token.
+
+    Returns:
+      (hidden', k_self, v_self) — the chunk's KV for the Rust engine to
+      append to its cache.
+    """
+    s = hidden.shape[0]
+    positions = pos0 + jnp.arange(s, dtype=jnp.int32)
+    _, q, k_self, v_self = _qkv(hidden, cfg, lw, positions)
+    # Combined [past | self] buffer: write self keys after the valid past.
+    # The bucket always leaves >= s rows of headroom (enforced at AOT time).
+    k_comb = jax.lax.dynamic_update_slice(k_cache, k_self, (0, t_len, 0))
+    v_comb = jax.lax.dynamic_update_slice(v_cache, v_self, (0, t_len, 0))
+    attn = chunk_attention(q, k_comb, v_comb, t_len, causal_self=causal_self)
+    return _finish_layer(hidden, attn, cfg, lw), k_self, v_self
+
+
+def layer_quoka(cfg, hidden, lw, k_cache, v_cache, t_len, pos0, *, b_sa, n_q_sel, causal_self=True):
+    """QUOKA layer step: Algorithm 1 + dense attention on the reduced set.
+
+    ``b_sa`` (selection budget) and ``n_q_sel`` (max retained queries) are
+    static — baked into the artifact and recorded in the manifest.
+    """
+    s = hidden.shape[0]
+    positions = pos0 + jnp.arange(s, dtype=jnp.int32)
+    _, q, k_self, v_self = _qkv(hidden, cfg, lw, positions)
+
+    # --- Algorithm 1 ---
+    n_q_eff = min(n_q_sel, s)
+    q_sel = query_subselect_ref(q, n_q_eff) if s > n_q_eff else q
+    qbar = preaggregate_ref(q_sel, cfg["n_kv_heads"])  # [n_kv, n_q_eff, d]
+    scores = quoka_scores(qbar, k_cache, t_len)  # [n_kv, L]
+    _, idx = topk_desc(scores, b_sa)  # [n_kv, b_sa]; -inf tail sorts last
+    k_sel = jnp.take_along_axis(k_cache, idx[:, :, None], axis=1)  # [n_kv, b_sa, d]
+    v_sel = jnp.take_along_axis(v_cache, idx[:, :, None], axis=1)
+    n_valid = jnp.minimum(t_len, b_sa)
+
+    # --- dense kernel over [selected | self] (fixed shape: QUOKA's point) ---
+    # Extend by s rows first so the self-KV write never clamps into the
+    # selected region when n_valid == b_sa.
+    n_kv, _, dh = k_sel.shape
+    zpad = jnp.zeros((n_kv, s, dh), k_sel.dtype)
+    k_comb = jax.lax.dynamic_update_slice(
+        jnp.concatenate([k_sel, zpad], axis=1), k_self, (0, n_valid, 0)
+    )
+    v_comb = jax.lax.dynamic_update_slice(
+        jnp.concatenate([v_sel, zpad], axis=1), v_self, (0, n_valid, 0)
+    )
+    # Pad the combined buffer to a tile multiple for the Pallas kernel.
+    length = k_comb.shape[1]
+    pad = (-length) % 128
+    if pad:
+        k_comb = jnp.pad(k_comb, ((0, 0), (0, pad), (0, 0)))
+        v_comb = jnp.pad(v_comb, ((0, 0), (0, pad), (0, 0)))
+    attn = chunk_attention(q, k_comb, v_comb, n_valid, l_tile=128, causal_self=causal_self)
+    return _finish_layer(hidden, attn, cfg, lw), k_self, v_self
+
+
+def model_config(name="serve-small"):
+    """Python mirror of ``ModelConfig::serve_small()`` / ``tiny()``."""
+    if name == "serve-small":
+        return dict(
+            name="serve-small",
+            vocab=4096,
+            d_model=256,
+            n_layers=4,
+            n_q_heads=8,
+            n_kv_heads=2,
+            d_head=32,
+            d_ff=768,
+            rope_theta=500_000.0,
+            use_rope=True,
+            n_experts=0,
+            norm_eps=1e-5,
+            max_seq=65_536,
+        )
+    if name == "tiny":
+        return dict(
+            name="tiny",
+            vocab=257,
+            d_model=32,
+            n_layers=2,
+            n_q_heads=4,
+            n_kv_heads=2,
+            d_head=8,
+            d_ff=64,
+            rope_theta=10_000.0,
+            use_rope=True,
+            n_experts=0,
+            norm_eps=1e-5,
+            max_seq=4096,
+        )
+    raise ValueError(f"unknown python model config {name!r}")
+
+
+def layer_weight_shapes(cfg):
+    """Ordered (name, shape) list — the artifact argument contract."""
+    dm, dh = cfg["d_model"], cfg["d_head"]
+    dq, dkv = cfg["n_q_heads"] * dh, cfg["n_kv_heads"] * dh
+    return [
+        ("attn_norm", (dm,)),
+        ("wq", (dm, dq)),
+        ("wk", (dm, dkv)),
+        ("wv", (dm, dkv)),
+        ("wo", (dq, dm)),
+        ("ffn_norm", (dm,)),
+        ("w_gate", (dm, cfg["d_ff"])),
+        ("w_up", (dm, cfg["d_ff"])),
+        ("w_down", (cfg["d_ff"], dm)),
+    ]

@@ -1,0 +1,139 @@
+"""L2 correctness: layer steps, RoPE semantics, QUOKA-vs-dense agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.model_config("tiny")
+
+
+def weights(rng, cfg):
+    return {n: jnp.asarray(rng.normal(size=sh) / np.sqrt(sh[0]), jnp.float32)
+            for n, sh in M.layer_weight_shapes(cfg)}
+
+
+def test_rope_positional_invariance():
+    """<rope(q,m), rope(k,n)> depends only on m−n (the property the Rust
+    implementation is also tested for — shared semantics)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 8)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(1, 8)), jnp.float32)
+    dots = []
+    for m, n in [(5, 2), (13, 10), (103, 100)]:
+        a = M.rope(x, jnp.asarray([m], jnp.int32), 10_000.0)
+        b = M.rope(y, jnp.asarray([n], jnp.int32), 10_000.0)
+        dots.append(float(jnp.sum(a * b)))
+    assert abs(dots[0] - dots[1]) < 1e-4
+    assert abs(dots[1] - dots[2]) < 1e-4
+
+
+def test_rope_matches_rust_formula():
+    """Pairs (2i, 2i+1) rotated by pos * theta^(-2i/d) — exact match with
+    rust/src/tensor/ops.rs::rope."""
+    x = jnp.asarray([[1.0, 2.0, 3.0, 4.0]], jnp.float32)
+    out = np.asarray(M.rope(x, jnp.asarray([7], jnp.int32), 10_000.0))[0]
+    d, pos = 4, 7.0
+    want = np.zeros(4, np.float32)
+    for i in range(2):
+        freq = 10_000.0 ** (-2.0 * i / d)
+        ang = pos * freq
+        a, b = x[0, 2 * i], x[0, 2 * i + 1]
+        want[2 * i] = a * np.cos(ang) - b * np.sin(ang)
+        want[2 * i + 1] = a * np.sin(ang) + b * np.cos(ang)
+    np.testing.assert_allclose(out, want, rtol=1e-5)
+
+
+def test_head_split_merge_roundtrip():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(5, 4 * 8)), jnp.float32)
+    h = M.split_heads(x, 4, 8)
+    assert h.shape == (4, 5, 8)
+    back = M.merge_heads(h)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def _run_layer(kind, cfg, s, bucket, t_len, seed=3, **kw):
+    rng = np.random.default_rng(seed)
+    lw = weights(rng, cfg)
+    nkv, dh = cfg["n_kv_heads"], cfg["d_head"]
+    hidden = jnp.asarray(rng.normal(size=(s, cfg["d_model"])), jnp.float32)
+    k_cache = jnp.zeros((nkv, bucket, dh), jnp.float32)
+    v_cache = jnp.zeros((nkv, bucket, dh), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(nkv, t_len, dh)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(nkv, t_len, dh)), jnp.float32)
+    k_cache = k_cache.at[:, :t_len].set(kc)
+    v_cache = v_cache.at[:, :t_len].set(vc)
+    if kind == "dense":
+        out = M.layer_dense(cfg, hidden, lw, k_cache, v_cache, t_len, 40)
+    else:
+        out = M.layer_quoka(cfg, hidden, lw, k_cache, v_cache, t_len, 40, **kw)
+    return out
+
+
+def test_layer_dense_shapes():
+    cfg = CFG
+    h, ks, vs = _run_layer("dense", cfg, 8, 512, 100)
+    assert h.shape == (8, cfg["d_model"])
+    assert ks.shape == (cfg["n_kv_heads"], 8, cfg["d_head"])
+    assert bool(jnp.all(jnp.isfinite(h)))
+
+
+def test_layer_quoka_full_budget_equals_dense():
+    """With B_SA >= t_len QUOKA keeps the whole cache: outputs must match
+    the dense layer exactly (selection only reorders keys, and attention is
+    permutation-invariant)."""
+    cfg = CFG
+    hd, kd, vd = _run_layer("dense", cfg, 8, 512, 100, seed=5)
+    hq, kq, vq = _run_layer("quoka", cfg, 8, 512, 100, seed=5, b_sa=128, n_q_sel=16)
+    np.testing.assert_allclose(np.asarray(hd), np.asarray(hq), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(kd), np.asarray(kq), rtol=1e-5, atol=1e-6)
+
+
+def test_layer_quoka_tight_budget_runs_and_differs():
+    cfg = CFG
+    hd, _, _ = _run_layer("dense", cfg, 8, 512, 400, seed=6)
+    hq, _, _ = _run_layer("quoka", cfg, 8, 512, 400, seed=6, b_sa=32, n_q_sel=4)
+    assert bool(jnp.all(jnp.isfinite(hq)))
+    assert float(jnp.max(jnp.abs(hd - hq))) > 1e-6, "tight budget must actually sparsify"
+
+
+def test_layer_quoka_decode_path():
+    cfg = CFG
+    h, ks, vs = _run_layer("quoka", cfg, 1, 512, 300, seed=7, b_sa=64, n_q_sel=16, causal_self=False)
+    assert h.shape == (1, cfg["d_model"])
+    assert bool(jnp.all(jnp.isfinite(h)))
+
+
+def test_empty_cache_chunk():
+    """First chunk: t_len = 0 — both paths must work (pure self attention)."""
+    cfg = CFG
+    hd, _, _ = _run_layer("dense", cfg, 8, 512, 0, seed=8)
+    hq, _, _ = _run_layer("quoka", cfg, 8, 512, 0, seed=8, b_sa=64, n_q_sel=16)
+    np.testing.assert_allclose(np.asarray(hd), np.asarray(hq), rtol=2e-4, atol=2e-5)
+
+
+def test_logits_tied_head():
+    cfg = CFG
+    rng = np.random.default_rng(9)
+    emb = jnp.asarray(rng.normal(size=(cfg["vocab"], cfg["d_model"])), jnp.float32)
+    row = jnp.asarray(rng.normal(size=(cfg["d_model"],)), jnp.float32)
+    norm = jnp.ones((cfg["d_model"],), jnp.float32)
+    out = M.logits(row, norm, emb, cfg["norm_eps"])
+    assert out.shape == (cfg["vocab"],)
+    # Tied head: logits = emb @ rmsnorm(row).
+    normed = np.asarray(M.rmsnorm(row[None, :], norm, cfg["norm_eps"]))[0]
+    want = np.asarray(emb) @ normed
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-5)
+
+
+def test_embed_gather():
+    cfg = CFG
+    emb = jnp.arange(cfg["vocab"] * cfg["d_model"], dtype=jnp.float32).reshape(cfg["vocab"], -1)
+    toks = jnp.asarray([0, 5, 2], jnp.int32)
+    out = M.embed(toks, emb)
+    np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(emb[5]))

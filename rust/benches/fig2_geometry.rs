@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig2_geometry` — regenerates the paper's Figure 2.
+fn main() {
+    quoka::bench::tables::fig2_geometry();
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig3_deviation` — regenerates the paper's Figure 3.
+fn main() {
+    quoka::bench::tables::fig3_deviation();
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig4_niah` — regenerates the paper's Figures 4 and 7.
+fn main() {
+    quoka::bench::tables::fig4_niah();
+}

@@ -1,0 +1,5 @@
+//! `cargo bench --bench fig5_latency` — regenerates the paper's Figure 5.
+fn main() {
+    quoka::bench::latency::fig5_attention();
+    quoka::bench::latency::fig5_ttft();
+}

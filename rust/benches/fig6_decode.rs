@@ -1,0 +1,4 @@
+//! `cargo bench --bench fig6_decode` — regenerates the paper's Figure 6.
+fn main() {
+    quoka::bench::latency::fig6_decode();
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench micro_hotpath` — regenerates the paper's §Perf hot-path microbench.
+fn main() {
+    quoka::bench::latency::micro_hotpath();
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench table10_aggregation` — regenerates the paper's Table 10.
+fn main() {
+    quoka::bench::tables::table10_aggregation();
+}

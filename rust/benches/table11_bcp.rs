@@ -1,0 +1,4 @@
+//! `cargo bench --bench table11_bcp` — regenerates the paper's Table 11.
+fn main() {
+    quoka::bench::tables::table11_bcp();
+}

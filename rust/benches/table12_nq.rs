@@ -1,0 +1,4 @@
+//! `cargo bench --bench table12_nq` — regenerates the paper's Table 12.
+fn main() {
+    quoka::bench::tables::table12_nq();
+}

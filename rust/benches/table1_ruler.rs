@@ -1,0 +1,4 @@
+//! `cargo bench --bench table1_ruler` — regenerates the paper's Table 1.
+fn main() {
+    quoka::bench::tables::table1_ruler();
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench table2_ruler_budget` — regenerates the paper's Tables 2 and 5.
+fn main() {
+    quoka::bench::tables::table2_ruler_budget();
+}

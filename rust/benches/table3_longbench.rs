@@ -1,0 +1,4 @@
+//! `cargo bench --bench table3_longbench` — regenerates the paper's Tables 3, 6 and 7.
+fn main() {
+    quoka::bench::tables::table3_longbench();
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench table4_complexity` — regenerates the paper's Table 4.
+fn main() {
+    quoka::bench::tables::table4_complexity();
+}

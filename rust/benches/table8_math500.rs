@@ -1,0 +1,4 @@
+//! `cargo bench --bench table8_math500` — regenerates the paper's Table 8.
+fn main() {
+    quoka::bench::tables::table8_math500();
+}

@@ -1,0 +1,4 @@
+//! `cargo bench --bench table9_scoring` — regenerates the paper's Table 9.
+fn main() {
+    quoka::bench::tables::table9_scoring();
+}

@@ -1,0 +1,28 @@
+//! Shared benchmark drivers.
+//!
+//! Every `rust/benches/*` target regenerates one paper table or figure by
+//! dispatching into [`tables`] / [`latency`]; the `quoka bench <id>` CLI
+//! uses the same functions, so numbers agree regardless of entry point.
+
+pub mod tables;
+pub mod latency;
+
+pub use crate::util::timing::{bench, heatmap, BenchCfg, Stats, Table};
+
+/// `QUOKA_BENCH_FULL=1` enables the paper-scale grids; the default is a
+/// reduced sweep suitable for CI (same code paths, smaller lengths).
+pub fn full_mode() -> bool {
+    std::env::var("QUOKA_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Standard bench header naming the reproduced paper item.
+pub fn banner(id: &str, paper_item: &str, note: &str) {
+    println!("=== {id} — reproduces {paper_item} ===");
+    if !note.is_empty() {
+        println!("{note}");
+    }
+    if !full_mode() {
+        println!("(quick grid; QUOKA_BENCH_FULL=1 for the paper-scale sweep)");
+    }
+    println!();
+}

@@ -1,0 +1,150 @@
+//! Paged KV-block allocator (vLLM-style accounting).
+//!
+//! The engine's physical KV floats live in per-sequence buffers (host or
+//! PJRT); this allocator is the *capacity manager*: token storage is
+//! accounted in fixed-size blocks, admission is denied when the pool is
+//! exhausted, and completed sequences return their blocks. Invariants
+//! (never lease a block twice, exact free accounting) are property-tested
+//! in `rust/tests/coordinator_props.rs`.
+
+/// Fixed-size block allocator over a bounded pool.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    block_tokens: usize,
+    free: Vec<u32>,
+    total: usize,
+    leased: std::collections::HashSet<u32>,
+}
+
+impl BlockAllocator {
+    pub fn new(total_blocks: usize, block_tokens: usize) -> BlockAllocator {
+        assert!(block_tokens > 0 && total_blocks > 0);
+        BlockAllocator {
+            block_tokens,
+            free: (0..total_blocks as u32).rev().collect(),
+            total: total_blocks,
+            leased: Default::default(),
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks needed to store `tokens`.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// True when `n` more blocks can be leased.
+    pub fn can_alloc(&self, n: usize) -> bool {
+        self.free.len() >= n
+    }
+
+    /// Lease `n` blocks (all-or-nothing).
+    pub fn alloc(&mut self, n: usize) -> Option<Vec<u32>> {
+        if self.free.len() < n {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.free.pop().unwrap();
+            let fresh = self.leased.insert(b);
+            debug_assert!(fresh, "double lease of block {b}");
+            out.push(b);
+        }
+        Some(out)
+    }
+
+    /// Grow a lease so it covers `tokens` total; appends new blocks to
+    /// `blocks`. Returns false (and changes nothing) when the pool is dry.
+    pub fn ensure(&mut self, blocks: &mut Vec<u32>, tokens: usize) -> bool {
+        let need = self.blocks_for(tokens);
+        if blocks.len() >= need {
+            return true;
+        }
+        match self.alloc(need - blocks.len()) {
+            Some(mut more) => {
+                blocks.append(&mut more);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Return blocks to the pool.
+    pub fn release(&mut self, blocks: &mut Vec<u32>) {
+        for b in blocks.drain(..) {
+            assert!(self.leased.remove(&b), "release of un-leased block {b}");
+            self.free.push(b);
+        }
+    }
+
+    /// Pool utilization in [0,1].
+    pub fn utilization(&self) -> f32 {
+        1.0 - self.free.len() as f32 / self.total as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut a = BlockAllocator::new(8, 128);
+        let mut lease = a.alloc(3).unwrap();
+        assert_eq!(a.free_blocks(), 5);
+        a.release(&mut lease);
+        assert_eq!(a.free_blocks(), 8);
+        assert!(lease.is_empty());
+    }
+
+    #[test]
+    fn all_or_nothing() {
+        let mut a = BlockAllocator::new(4, 128);
+        assert!(a.alloc(5).is_none());
+        assert_eq!(a.free_blocks(), 4);
+    }
+
+    #[test]
+    fn ensure_grows_incrementally() {
+        let mut a = BlockAllocator::new(10, 100);
+        let mut lease = Vec::new();
+        assert!(a.ensure(&mut lease, 250)); // 3 blocks
+        assert_eq!(lease.len(), 3);
+        assert!(a.ensure(&mut lease, 300)); // still 3
+        assert_eq!(lease.len(), 3);
+        assert!(a.ensure(&mut lease, 301)); // 4th
+        assert_eq!(lease.len(), 4);
+        assert_eq!(a.free_blocks(), 6);
+    }
+
+    #[test]
+    fn ensure_fails_cleanly_when_dry() {
+        let mut a = BlockAllocator::new(2, 100);
+        let mut lease = Vec::new();
+        assert!(!a.ensure(&mut lease, 500));
+        assert!(lease.is_empty());
+        assert_eq!(a.free_blocks(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "un-leased")]
+    fn double_release_panics() {
+        let mut a = BlockAllocator::new(4, 100);
+        let lease = a.alloc(1).unwrap();
+        let mut l1 = lease.clone();
+        let mut l2 = lease;
+        a.release(&mut l1);
+        a.release(&mut l2);
+    }
+}

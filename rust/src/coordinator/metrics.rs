@@ -1,0 +1,102 @@
+//! Engine metrics: the numbers behind the paper's latency figures.
+
+use std::time::Duration;
+
+/// Running aggregate of engine activity.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub steps: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub requests_finished: u64,
+    /// Wall time inside attention+selection (the paper's "attention
+    /// module" latency), seconds.
+    pub attention_s: f64,
+    /// Wall time of whole engine steps, seconds.
+    pub step_s: f64,
+    /// Sum of per-request TTFT / TPOT for averaging.
+    pub ttft_sum_s: f64,
+    pub tpot_sum_s: f64,
+    pub tpot_count: u64,
+    /// Peak KV bytes resident across sequences.
+    pub peak_kv_bytes: usize,
+}
+
+impl Metrics {
+    pub fn record_step(&mut self, dur: Duration, prefill: usize, decode: usize) {
+        self.steps += 1;
+        self.step_s += dur.as_secs_f64();
+        self.prefill_tokens += prefill as u64;
+        self.decode_tokens += decode as u64;
+    }
+
+    pub fn record_finish(&mut self, ttft_s: f64, tpot_s: f64, had_tpot: bool) {
+        self.requests_finished += 1;
+        self.ttft_sum_s += ttft_s;
+        if had_tpot {
+            self.tpot_sum_s += tpot_s;
+            self.tpot_count += 1;
+        }
+    }
+
+    pub fn mean_ttft_s(&self) -> f64 {
+        if self.requests_finished == 0 {
+            0.0
+        } else {
+            self.ttft_sum_s / self.requests_finished as f64
+        }
+    }
+
+    pub fn mean_tpot_s(&self) -> f64 {
+        if self.tpot_count == 0 {
+            0.0
+        } else {
+            self.tpot_sum_s / self.tpot_count as f64
+        }
+    }
+
+    /// Total token throughput (prefill + decode) per engine-second.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.step_s == 0.0 {
+            0.0
+        } else {
+            (self.prefill_tokens + self.decode_tokens) as f64 / self.step_s
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "steps={} prefill_tok={} decode_tok={} finished={} \
+             mean_ttft={:.1}ms mean_tpot={:.1}ms throughput={:.0} tok/s \
+             attention={:.1}% of step time",
+            self.steps,
+            self.prefill_tokens,
+            self.decode_tokens,
+            self.requests_finished,
+            self.mean_ttft_s() * 1e3,
+            self.mean_tpot_s() * 1e3,
+            self.tokens_per_s(),
+            if self.step_s > 0.0 { 100.0 * self.attention_s / self.step_s } else { 0.0 },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let mut m = Metrics::default();
+        m.record_step(Duration::from_millis(100), 128, 2);
+        m.record_step(Duration::from_millis(100), 0, 4);
+        m.record_finish(0.5, 0.01, true);
+        m.record_finish(0.3, 0.0, false);
+        assert_eq!(m.prefill_tokens, 128);
+        assert_eq!(m.decode_tokens, 6);
+        assert!((m.mean_ttft_s() - 0.4).abs() < 1e-9);
+        assert!((m.mean_tpot_s() - 0.01).abs() < 1e-9);
+        assert!((m.tokens_per_s() - 670.0).abs() < 1.0);
+        assert!(m.summary().contains("finished=2"));
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator: the serving system.
+//!
+//! Request lifecycle, paged KV-block accounting, Sarathi-style chunked
+//! prefill + decode scheduling, and the engine loop over either execution
+//! backend. This is where the paper's method lives as a *system feature*:
+//! QUOKA (or any baseline policy) is a per-request `PolicySpec` applied at
+//! every layer of every scheduled chunk.
+
+pub mod request;
+pub mod kv_blocks;
+pub mod scheduler;
+pub mod metrics;
+pub mod engine;
+
+pub use engine::{Backend, Engine, EngineCfg};
+pub use kv_blocks::BlockAllocator;
+pub use metrics::Metrics;
+pub use request::{PolicySpec, Request, RequestResult};
+pub use scheduler::{SchedCfg, Scheduler, StepPlan, WorkItem};

@@ -1,0 +1,142 @@
+//! Request lifecycle types.
+
+use std::time::Instant;
+
+/// How a request's attention is sparsified.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicySpec {
+    /// Selection policy name (see `select::policy_by_name`). The PJRT
+    /// backend supports `dense` and `quoka`; all names run on `host`.
+    pub name: String,
+    /// Selection budget `B_SA`.
+    pub budget: usize,
+}
+
+impl Default for PolicySpec {
+    fn default() -> Self {
+        PolicySpec { name: "quoka".into(), budget: 1024 }
+    }
+}
+
+/// An inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub policy: PolicySpec,
+}
+
+/// Terminal result for one request.
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    pub id: u64,
+    pub generated: Vec<u32>,
+    /// Time to first token (prefill complete + 1 decode), seconds.
+    pub ttft_s: f64,
+    /// Mean time per output token (after the first), seconds.
+    pub tpot_s: f64,
+    pub prompt_tokens: usize,
+    /// Wall time in the engine (admission → completion).
+    pub total_s: f64,
+}
+
+/// Scheduler-visible sequence phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// `next` = offset of the next un-prefilled prompt token.
+    Prefill { next: usize },
+    Decode,
+    Finished,
+}
+
+/// Engine-internal per-sequence bookkeeping.
+pub struct SeqEntry {
+    pub req: Request,
+    pub phase: Phase,
+    pub generated: Vec<u32>,
+    pub admitted_at: Instant,
+    pub first_token_at: Option<Instant>,
+    pub finished_at: Option<Instant>,
+    /// KV blocks currently leased from the block allocator.
+    pub blocks: Vec<u32>,
+}
+
+impl SeqEntry {
+    pub fn new(req: Request) -> SeqEntry {
+        SeqEntry {
+            req,
+            phase: Phase::Prefill { next: 0 },
+            generated: Vec::new(),
+            admitted_at: Instant::now(),
+            first_token_at: None,
+            finished_at: None,
+            blocks: Vec::new(),
+        }
+    }
+
+    /// Total tokens this sequence holds in the KV cache right now.
+    pub fn cache_tokens(&self) -> usize {
+        let prefilled = match self.phase {
+            Phase::Prefill { next } => next,
+            _ => self.req.tokens.len(),
+        };
+        prefilled + self.generated.len()
+    }
+
+    pub fn result(&self) -> RequestResult {
+        let end = self.finished_at.unwrap_or_else(Instant::now);
+        let ttft = self
+            .first_token_at
+            .map(|t| (t - self.admitted_at).as_secs_f64())
+            .unwrap_or_default();
+        let n_out = self.generated.len();
+        let tpot = if n_out > 1 {
+            self.first_token_at
+                .map(|t| (end - t).as_secs_f64() / (n_out - 1) as f64)
+                .unwrap_or_default()
+        } else {
+            0.0
+        };
+        RequestResult {
+            id: self.req.id,
+            generated: self.generated.clone(),
+            ttft_s: ttft,
+            tpot_s: tpot,
+            prompt_tokens: self.req.tokens.len(),
+            total_s: (end - self.admitted_at).as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request { id: 1, tokens: vec![1; 300], max_new_tokens: 4, policy: PolicySpec::default() }
+    }
+
+    #[test]
+    fn cache_tokens_tracks_phase() {
+        let mut e = SeqEntry::new(req());
+        assert_eq!(e.cache_tokens(), 0);
+        e.phase = Phase::Prefill { next: 128 };
+        assert_eq!(e.cache_tokens(), 128);
+        e.phase = Phase::Decode;
+        e.generated.push(9);
+        assert_eq!(e.cache_tokens(), 301);
+    }
+
+    #[test]
+    fn result_times_are_ordered() {
+        let mut e = SeqEntry::new(req());
+        e.first_token_at = Some(e.admitted_at + std::time::Duration::from_millis(50));
+        e.generated = vec![1, 2, 3];
+        e.finished_at = Some(e.admitted_at + std::time::Duration::from_millis(150));
+        let r = e.result();
+        assert!((r.ttft_s - 0.05).abs() < 1e-6);
+        assert!((r.tpot_s - 0.05).abs() < 1e-6);
+        assert!((r.total_s - 0.15).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,237 @@
+//! Sarathi-style chunked-prefill + decode scheduler.
+//!
+//! Each engine step gets a *token budget*. Decodes (one token each) are
+//! scheduled first — they are latency-critical — and the remaining budget
+//! is filled with prefill chunks of at most `B_CP` tokens, FCFS across
+//! running sequences. Waiting sequences are admitted while the KV block
+//! pool and the running-set cap allow. This is the interleaving that makes
+//! chunked prefill (and thus QUOKA) matter: prefill work is sliced so
+//! decode latency stays bounded (Agrawal et al., 2023/2024).
+
+use super::kv_blocks::BlockAllocator;
+use super::request::{Phase, SeqEntry};
+use std::collections::VecDeque;
+
+/// Scheduler configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedCfg {
+    /// Prefill chunk size `B_CP`.
+    pub b_cp: usize,
+    /// Max tokens processed per engine step (decode + prefill).
+    pub step_tokens: usize,
+    /// Max concurrently running sequences.
+    pub max_running: usize,
+}
+
+impl Default for SchedCfg {
+    fn default() -> Self {
+        SchedCfg { b_cp: 128, step_tokens: 256, max_running: 8 }
+    }
+}
+
+/// One unit of scheduled work.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WorkItem {
+    /// Prefill `tokens[range]` of sequence `id`.
+    PrefillChunk { id: u64, start: usize, len: usize },
+    /// One decode step for sequence `id`.
+    Decode { id: u64 },
+}
+
+/// The per-step plan.
+#[derive(Clone, Debug, Default)]
+pub struct StepPlan {
+    pub items: Vec<WorkItem>,
+    pub admitted: Vec<u64>,
+    pub scheduled_tokens: usize,
+}
+
+/// FCFS scheduler state.
+pub struct Scheduler {
+    pub cfg: SchedCfg,
+    /// Request ids waiting for admission, FCFS.
+    pub waiting: VecDeque<u64>,
+    /// Running ids in admission order.
+    pub running: Vec<u64>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedCfg) -> Scheduler {
+        Scheduler { cfg, waiting: VecDeque::new(), running: Vec::new() }
+    }
+
+    pub fn enqueue(&mut self, id: u64) {
+        self.waiting.push_back(id);
+    }
+
+    /// Remove a finished/cancelled id from the running set.
+    pub fn retire(&mut self, id: u64) {
+        self.running.retain(|&r| r != id);
+    }
+
+    /// Build the next step plan.
+    ///
+    /// `seqs` must resolve every id in `waiting`/`running`. Admission
+    /// reserves KV blocks for the *whole prompt plus one decode block* up
+    /// front (conservative, prevents mid-prefill eviction).
+    pub fn plan(
+        &mut self,
+        seqs: &mut std::collections::HashMap<u64, SeqEntry>,
+        blocks: &mut BlockAllocator,
+    ) -> StepPlan {
+        let mut plan = StepPlan::default();
+
+        // ---- admission ----
+        while self.running.len() < self.cfg.max_running {
+            let Some(&cand) = self.waiting.front() else { break };
+            let entry = seqs.get_mut(&cand).expect("waiting id unknown");
+            let need = blocks.blocks_for(entry.req.tokens.len() + entry.req.max_new_tokens);
+            match blocks.alloc(need) {
+                Some(lease) => {
+                    entry.blocks = lease;
+                    self.waiting.pop_front();
+                    self.running.push(cand);
+                    plan.admitted.push(cand);
+                }
+                None => break, // FCFS: don't skip ahead of the head-of-line
+            }
+        }
+
+        // ---- decodes first (latency-critical) ----
+        let mut budget = self.cfg.step_tokens;
+        for &id in &self.running {
+            if budget == 0 {
+                break;
+            }
+            if matches!(seqs[&id].phase, Phase::Decode) {
+                plan.items.push(WorkItem::Decode { id });
+                budget -= 1;
+            }
+        }
+
+        // ---- prefill chunks with the remaining budget ----
+        for &id in &self.running {
+            if budget == 0 {
+                break;
+            }
+            if let Phase::Prefill { next } = seqs[&id].phase {
+                let remaining = seqs[&id].req.tokens.len() - next;
+                if remaining == 0 {
+                    continue;
+                }
+                let len = remaining.min(self.cfg.b_cp).min(budget);
+                plan.items.push(WorkItem::PrefillChunk { id, start: next, len });
+                budget -= len;
+            }
+        }
+
+        plan.scheduled_tokens = self.cfg.step_tokens - budget;
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{PolicySpec, Request};
+    use std::collections::HashMap;
+
+    fn mk(seqs: &mut HashMap<u64, SeqEntry>, id: u64, prompt: usize, max_new: usize) {
+        seqs.insert(
+            id,
+            SeqEntry::new(Request {
+                id,
+                tokens: vec![1; prompt],
+                max_new_tokens: max_new,
+                policy: PolicySpec::default(),
+            }),
+        );
+    }
+
+    #[test]
+    fn admits_fcfs_until_blocks_exhausted() {
+        let mut seqs = HashMap::new();
+        let mut blocks = BlockAllocator::new(6, 128); // 768 tokens capacity
+        let mut s = Scheduler::new(SchedCfg::default());
+        mk(&mut seqs, 1, 300, 10); // needs 3 blocks
+        mk(&mut seqs, 2, 300, 10); // needs 3 blocks
+        mk(&mut seqs, 3, 100, 10); // needs 1 — but FCFS blocked
+        s.enqueue(1);
+        s.enqueue(2);
+        s.enqueue(3);
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(plan.admitted, vec![1, 2]);
+        assert_eq!(s.waiting.len(), 1, "id 3 must wait (no head-of-line bypass)");
+    }
+
+    #[test]
+    fn decode_scheduled_before_prefill() {
+        let mut seqs = HashMap::new();
+        let mut blocks = BlockAllocator::new(64, 128);
+        let mut s = Scheduler::new(SchedCfg { b_cp: 128, step_tokens: 160, max_running: 4 });
+        mk(&mut seqs, 1, 512, 4);
+        mk(&mut seqs, 2, 512, 4);
+        s.enqueue(1);
+        s.enqueue(2);
+        let _ = s.plan(&mut seqs, &mut blocks);
+        seqs.get_mut(&1).unwrap().phase = Phase::Decode;
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(plan.items[0], WorkItem::Decode { id: 1 });
+        // Remaining 159 tokens go to seq 2's prefill, capped at b_cp=128.
+        assert_eq!(plan.items[1], WorkItem::PrefillChunk { id: 2, start: 0, len: 128 });
+        assert_eq!(plan.scheduled_tokens, 129);
+    }
+
+    #[test]
+    fn step_token_budget_respected() {
+        let mut seqs = HashMap::new();
+        let mut blocks = BlockAllocator::new(64, 128);
+        let cfg = SchedCfg { b_cp: 128, step_tokens: 200, max_running: 8 };
+        let mut s = Scheduler::new(cfg);
+        for id in 1..=4 {
+            mk(&mut seqs, id, 1000, 4);
+            s.enqueue(id);
+        }
+        let plan = s.plan(&mut seqs, &mut blocks);
+        let total: usize = plan
+            .items
+            .iter()
+            .map(|i| match i {
+                WorkItem::Decode { .. } => 1,
+                WorkItem::PrefillChunk { len, .. } => *len,
+            })
+            .sum();
+        assert!(total <= 200);
+        assert_eq!(plan.scheduled_tokens, total);
+    }
+
+    #[test]
+    fn short_tail_chunk() {
+        let mut seqs = HashMap::new();
+        let mut blocks = BlockAllocator::new(64, 128);
+        let mut s = Scheduler::new(SchedCfg::default());
+        mk(&mut seqs, 1, 130, 2);
+        s.enqueue(1);
+        let p1 = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(p1.items[0], WorkItem::PrefillChunk { id: 1, start: 0, len: 128 });
+        seqs.get_mut(&1).unwrap().phase = Phase::Prefill { next: 128 };
+        let p2 = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(p2.items[0], WorkItem::PrefillChunk { id: 1, start: 128, len: 2 });
+    }
+
+    #[test]
+    fn retire_frees_running_slot() {
+        let mut seqs = HashMap::new();
+        let mut blocks = BlockAllocator::new(64, 128);
+        let mut s = Scheduler::new(SchedCfg { max_running: 1, ..SchedCfg::default() });
+        mk(&mut seqs, 1, 100, 2);
+        mk(&mut seqs, 2, 100, 2);
+        s.enqueue(1);
+        s.enqueue(2);
+        let _ = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(s.running, vec![1]);
+        s.retire(1);
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(plan.admitted, vec![2]);
+    }
+}

@@ -1,0 +1,271 @@
+//! Evaluation harness: run a selection policy over a geometry task's
+//! chunked prefill and score it.
+//!
+//! Two proxy metrics (DESIGN.md §6):
+//! - **recall** — at each needle's query chunk, the fraction of the
+//!   needle's ground-truth cache indices the policy retained (averaged
+//!   over KV heads). This is what NIAH/RULER-style retrieval measures.
+//! - **fidelity** — `1 − relL2(sparse attention output, dense attention
+//!   output)` on the probe chunk's retrieval rows plus a sample of
+//!   ordinary rows. This is what perplexity-style scores (LongBench
+//!   summarization etc.) measure.
+//!
+//! Selection at a chunk is independent of earlier selections (QUOKA never
+//! evicts — the cache always holds every token), so probing only the
+//! chunks that matter is exact, not an approximation, and keeps 32k-token
+//! sweeps tractable on CPU.
+
+use crate::select::{KCache, QChunk, SelectCtx, Selection, SelectionPolicy};
+use crate::tensor::ops::{axpy, dot, rel_l2, softmax};
+use crate::workload::geometry::GeometryTask;
+
+/// Score for one (task, policy, budget) run.
+#[derive(Clone, Debug, Default)]
+pub struct TaskScore {
+    /// Per-needle recall in [0,1].
+    pub needle_recall: Vec<f32>,
+    /// Attention-output fidelity in [0,1] averaged over probes.
+    pub fidelity: f32,
+    /// Mean fraction of the cache retained.
+    pub kv_frac: f32,
+    /// Selection FLOPs tallied.
+    pub select_flops: u64,
+}
+
+impl TaskScore {
+    /// Mean recall (1.0 when no needles).
+    pub fn recall(&self) -> f32 {
+        if self.needle_recall.is_empty() {
+            1.0
+        } else {
+            self.needle_recall.iter().sum::<f32>() / self.needle_recall.len() as f32
+        }
+    }
+
+    /// Recall-gated fidelity: the headline task score in [0,1].
+    pub fn score(&self) -> f32 {
+        self.recall() * self.fidelity
+    }
+
+    /// Product of needle recalls (multi-hop scoring: every hop must land).
+    pub fn chained_recall(&self) -> f32 {
+        self.needle_recall.iter().product()
+    }
+}
+
+/// Evaluation options.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOpts {
+    /// Ordinary query rows sampled for fidelity (plus all retrieval rows).
+    pub fidelity_rows: usize,
+    /// Skip the fidelity computation (recall-only sweeps are much faster).
+    pub skip_fidelity: bool,
+    pub seed: u64,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        EvalOpts { fidelity_rows: 4, skip_fidelity: false, seed: 0 }
+    }
+}
+
+/// Evaluate `policy` on `task` at `budget`.
+pub fn eval_policy(
+    task: &GeometryTask,
+    policy: &dyn SelectionPolicy,
+    budget: usize,
+    opts: &EvalOpts,
+) -> TaskScore {
+    let cfg = &task.cfg;
+    let (d, nq, nkv) = (cfg.d, cfg.n_q_heads, cfg.n_kv_heads);
+    let mut ctx = SelectCtx::new(opts.seed);
+    let mut score = TaskScore { needle_recall: vec![0.0; task.needles.len()], ..Default::default() };
+    let mut fid_sum = 0.0;
+    let mut fid_n = 0usize;
+    let mut kv_sum = 0.0;
+    let mut kv_n = 0usize;
+
+    for &c in &task.probe_chunks() {
+        let t_past = c * cfg.b_cp;
+        if t_past == 0 {
+            continue;
+        }
+        let qd = task.q_chunk(c);
+        let s = qd.len() / (nq * d);
+        let q = QChunk::new(&qd, nq, s, d);
+        // The cache view: K rows [n_kv, t_past, d] — stored stride is the
+        // full task length, so build a per-probe contiguous copy per head.
+        let mut kc = vec![0.0f32; nkv * t_past * d];
+        let mut vc = vec![0.0f32; nkv * t_past * d];
+        for h in 0..nkv {
+            let src = h * cfg.t * d;
+            kc[h * t_past * d..(h + 1) * t_past * d]
+                .copy_from_slice(&task.k[src..src + t_past * d]);
+            vc[h * t_past * d..(h + 1) * t_past * d]
+                .copy_from_slice(&task.v[src..src + t_past * d]);
+        }
+        let k = KCache::new(&kc, nkv, t_past, t_past, d);
+
+        ctx.begin_step();
+        // Probe at a representative mid-stack layer: layer-dependent
+        // policies (TidalDecode's dense early layers, LessIsMore's
+        // selection stride) must exhibit their *selection* behaviour, not
+        // their layer-0 special case.
+        ctx.layer = 2;
+        let sel = policy.select(&q, &k, budget, &mut ctx);
+
+        // ---- recall ----
+        for &(_, ni) in task.retrieval_rows(c) {
+            let truth = task.needles[ni].truth();
+            let mut hit = 0usize;
+            let mut total = 0usize;
+            for h in 0..nkv {
+                let idx = sel.head_indices(h, t_past);
+                for want in truth.clone() {
+                    total += 1;
+                    if idx.binary_search(&(want as u32)).is_ok() {
+                        hit += 1;
+                    }
+                }
+            }
+            // A needle may be queried from several retrieval rows; the
+            // selection is per-chunk so recall is identical — keep max.
+            let r = hit as f32 / total.max(1) as f32;
+            if r > score.needle_recall[ni] {
+                score.needle_recall[ni] = r;
+            }
+        }
+
+        kv_sum += sel.total(nkv, t_past) as f32 / (nkv * t_past) as f32;
+        kv_n += 1;
+
+        // ---- fidelity ----
+        if !opts.skip_fidelity {
+            let mut rows: Vec<usize> = task.retrieval_rows(c).iter().map(|&(r, _)| r).collect();
+            let mut rr = crate::util::Rng::new(opts.seed ^ 0xF1D ^ c as u64);
+            for _ in 0..opts.fidelity_rows {
+                rows.push(rr.below(s));
+            }
+            rows.sort_unstable();
+            rows.dedup();
+            fid_sum += fidelity(&q, &k, &vc, &sel, &rows) as f64 as f32;
+            fid_n += 1;
+        }
+    }
+
+    score.fidelity = if opts.skip_fidelity || fid_n == 0 { 1.0 } else { fid_sum / fid_n as f32 };
+    score.kv_frac = if kv_n == 0 { 1.0 } else { kv_sum / kv_n as f32 };
+    score.select_flops = ctx.cost.flops();
+    score
+}
+
+/// `1 − relL2` between sparse and dense attention outputs on `rows`.
+fn fidelity(q: &QChunk, k: &KCache, v: &[f32], sel: &Selection, rows: &[usize]) -> f32 {
+    let (d, t) = (q.d, k.t);
+    let nkv = k.n_heads;
+    let g = q.n_heads / nkv;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut dense_out = Vec::new();
+    let mut sparse_out = Vec::new();
+    let mut logits = vec![0.0f32; t];
+    for h in 0..q.n_heads {
+        let kv_h = h / g;
+        let khead = k.head(kv_h);
+        let vhead = &v[kv_h * t * d..(kv_h + 1) * t * d];
+        let idx = sel.head_indices(kv_h, t);
+        for &r in rows {
+            let qrow = q.query(h, r);
+            // Dense.
+            for ti in 0..t {
+                logits[ti] = dot(qrow, &khead[ti * d..(ti + 1) * d]) * scale;
+            }
+            softmax(&mut logits);
+            let mut od = vec![0.0f32; d];
+            for ti in 0..t {
+                if logits[ti] > 1e-8 {
+                    axpy(logits[ti], &vhead[ti * d..(ti + 1) * d], &mut od);
+                }
+            }
+            // Sparse (same computation restricted to the selection).
+            let mut slog: Vec<f32> = idx
+                .iter()
+                .map(|&ti| dot(qrow, &khead[ti as usize * d..(ti as usize + 1) * d]) * scale)
+                .collect();
+            softmax(&mut slog);
+            let mut os = vec![0.0f32; d];
+            for (j, &ti) in idx.iter().enumerate() {
+                if slog[j] > 1e-8 {
+                    axpy(slog[j], &vhead[ti as usize * d..(ti as usize + 1) * d], &mut os);
+                }
+            }
+            dense_out.extend_from_slice(&od);
+            sparse_out.extend_from_slice(&os);
+        }
+    }
+    (1.0 - rel_l2(&dense_out, &sparse_out)).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::policy_by_name;
+    use crate::workload::geometry::{GeometryConfig, GeometryTask, Needle};
+
+    fn task(t: usize, seed: u64) -> GeometryTask {
+        let cfg = GeometryConfig { t, seed, ..Default::default() };
+        let needles = vec![
+            Needle { key_pos: t / 4, width: 4, query_chunk: t / 128 - 1, dir: 0 },
+            Needle { key_pos: t / 2, width: 4, query_chunk: t / 128 - 1, dir: 1 },
+        ];
+        GeometryTask::generate(cfg, needles)
+    }
+
+    #[test]
+    fn dense_scores_perfectly() {
+        let t = task(2048, 1);
+        let dense = policy_by_name("dense").unwrap();
+        let s = eval_policy(&t, dense.as_ref(), usize::MAX, &EvalOpts::default());
+        assert_eq!(s.recall(), 1.0);
+        assert!(s.fidelity > 0.999);
+        assert_eq!(s.kv_frac, 1.0);
+    }
+
+    #[test]
+    fn quoka_beats_keydiff_on_retrieval() {
+        let t = task(2048, 2);
+        let opts = EvalOpts { skip_fidelity: true, ..Default::default() };
+        let quoka = policy_by_name("quoka").unwrap();
+        let keydiff = policy_by_name("keydiff").unwrap();
+        let sq = eval_policy(&t, quoka.as_ref(), 128, &opts);
+        let sk = eval_policy(&t, keydiff.as_ref(), 128, &opts);
+        assert!(sq.recall() >= sk.recall(), "{} vs {}", sq.recall(), sk.recall());
+        assert!(sq.recall() > 0.9, "quoka recall {}", sq.recall());
+    }
+
+    #[test]
+    fn budget_fraction_respected() {
+        let t = task(2048, 3);
+        let quoka = policy_by_name("quoka").unwrap();
+        let s = eval_policy(
+            &t,
+            quoka.as_ref(),
+            128,
+            &EvalOpts { skip_fidelity: true, ..Default::default() },
+        );
+        // Probe at chunk 15: cache = 1920 entries; 128/1920 ≈ 6.7%.
+        assert!(s.kv_frac < 0.10, "kv_frac {}", s.kv_frac);
+        assert!(s.select_flops > 0);
+    }
+
+    #[test]
+    fn fidelity_penalizes_missing_needle() {
+        // KeyDiff is query-agnostic; at a small budget it should lose
+        // fidelity on retrieval rows relative to QUOKA.
+        let t = task(2048, 4);
+        let quoka = policy_by_name("quoka").unwrap();
+        let keydiff = policy_by_name("keydiff").unwrap();
+        let sq = eval_policy(&t, quoka.as_ref(), 96, &EvalOpts::default());
+        let sk = eval_policy(&t, keydiff.as_ref(), 96, &EvalOpts::default());
+        assert!(sq.score() > sk.score(), "{} vs {}", sq.score(), sk.score());
+    }
+}

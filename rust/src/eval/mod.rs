@@ -1,0 +1,7 @@
+//! Evaluation: the scoring harness over geometry tasks plus the statistics
+//! behind the paper's observation figures.
+
+pub mod harness;
+pub mod stats;
+
+pub use harness::{eval_policy, EvalOpts, TaskScore};

@@ -1,0 +1,146 @@
+//! Statistics for the paper's empirical-observation figures.
+//!
+//! - Fig. 2b: 2-D PCA projection of queries and keys;
+//! - Fig. 2c: correlation between `S_q = −CosSim(M_Q, q)` and
+//!   `max_k A[q, k]` (excluding the sink token);
+//! - Fig. 3: distribution of the max-vs-mean deviation of attention scores
+//!   along the query and head axes.
+
+use crate::tensor::linalg::{principal_components, project};
+use crate::tensor::ops::{dot, mean_rows, pearson, softmax};
+use crate::util::Rng;
+
+/// Per-query `S_q` values: negative cosine similarity to the mean query.
+pub fn sq_scores(q: &[f32], s: usize, d: usize) -> Vec<f32> {
+    let mut mean = vec![0.0; d];
+    mean_rows(q, s, d, &mut mean);
+    crate::tensor::linalg::cosine_to_vec(q, d, &mean)
+        .into_iter()
+        .map(|c| -c)
+        .collect()
+}
+
+/// Per-query max post-softmax attention weight over keys, excluding the
+/// sink (index 0) when `skip_sink`.
+pub fn max_attention(q: &[f32], k: &[f32], s: usize, t: usize, d: usize, skip_sink: bool) -> Vec<f32> {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut row = vec![0.0f32; t];
+    (0..s)
+        .map(|i| {
+            let qrow = &q[i * d..(i + 1) * d];
+            for ti in 0..t {
+                row[ti] = dot(qrow, &k[ti * d..(ti + 1) * d]) * scale;
+            }
+            softmax(&mut row);
+            let start = if skip_sink { 1 } else { 0 };
+            row[start..].iter().copied().fold(0.0, f32::max)
+        })
+        .collect()
+}
+
+/// Fig. 2c: Pearson correlation of `S_q` with `max_k(A)`.
+pub fn sq_attention_correlation(q: &[f32], k: &[f32], s: usize, t: usize, d: usize) -> f32 {
+    let sq = sq_scores(q, s, d);
+    let ma = max_attention(q, k, s, t, d, true);
+    pearson(&sq, &ma)
+}
+
+/// Fig. 2b: project queries and keys onto the keys' top-2 PCA plane.
+/// Returns (q_proj `[s,2]`, k_proj `[t,2]`).
+pub fn pca_projection(q: &[f32], k: &[f32], s: usize, t: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut joint = Vec::with_capacity((s + t) * d);
+    joint.extend_from_slice(q);
+    joint.extend_from_slice(k);
+    let comps = principal_components(&joint, d, 2, 30, &mut rng);
+    (project(q, d, &comps), project(k, d, &comps))
+}
+
+/// Fig. 3: deviations `max(x) − mean(x)` of per-key score columns along an
+/// axis. `scores` is `[rows, cols]`; deviation is computed per column over
+/// rows (rows = queries or heads).
+pub fn max_mean_deviation(scores: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0; cols];
+    for c in 0..cols {
+        let mut m = f32::NEG_INFINITY;
+        let mut sum = 0.0;
+        for r in 0..rows {
+            let v = scores[r * cols + c];
+            sum += v;
+            if v > m {
+                m = v;
+            }
+        }
+        out[c] = m - sum / rows as f32;
+    }
+    out
+}
+
+/// Histogram of values into `bins` equal-width buckets over [lo, hi].
+pub fn histogram(vals: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f32;
+    for &v in vals {
+        let b = (((v - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        h[b] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::geometry::{GeometryConfig, GeometryTask, Needle};
+
+    fn probe() -> (Vec<f32>, Vec<f32>, usize, usize, usize) {
+        let cfg = GeometryConfig { t: 1024, seed: 7, ..Default::default() };
+        let task = GeometryTask::generate(
+            cfg,
+            vec![Needle { key_pos: 256, width: 4, query_chunk: 7, dir: 0 }],
+        );
+        let q = task.q_chunk(7);
+        let d = task.cfg.d;
+        // Head 0 only.
+        let s = q.len() / (task.cfg.n_q_heads * d);
+        let qh = q[..s * d].to_vec();
+        let kh = task.k[..896 * d].to_vec();
+        (qh, kh, s, 896, d)
+    }
+
+    #[test]
+    fn sq_correlates_with_max_attention() {
+        // The paper's core empirical claim (Fig. 2c): queries dissimilar
+        // from the mean query interact more strongly with keys.
+        let (q, k, s, t, d) = probe();
+        let r = sq_attention_correlation(&q, &k, s, t, d);
+        assert!(r > 0.5, "expected strong positive correlation, got {r}");
+    }
+
+    #[test]
+    fn pca_separates_queries_from_keys() {
+        let (q, k, s, t, d) = probe();
+        let (qp, kp) = pca_projection(&q, &k, s, t, d, 1);
+        // Cluster centroids in the 2-D plane should be well separated
+        // relative to within-cluster spread (Fig. 2b's visual).
+        let cq = [
+            qp.iter().step_by(2).sum::<f32>() / s as f32,
+            qp.iter().skip(1).step_by(2).sum::<f32>() / s as f32,
+        ];
+        let ck = [
+            kp.iter().step_by(2).sum::<f32>() / t as f32,
+            kp.iter().skip(1).step_by(2).sum::<f32>() / t as f32,
+        ];
+        let dist = ((cq[0] - ck[0]).powi(2) + (cq[1] - ck[1]).powi(2)).sqrt();
+        assert!(dist > 1.0, "centroid distance {dist}");
+    }
+
+    #[test]
+    fn deviation_and_histogram() {
+        let scores = vec![0.0, 1.0, 0.5, 0.5, 1.0, 0.0];
+        let dev = max_mean_deviation(&scores, 2, 3);
+        assert!((dev[0] - 0.25).abs() < 1e-6);
+        assert!(dev[1].abs() < 1e-6);
+        let h = histogram(&dev, 0.0, 1.0, 4);
+        assert_eq!(h.iter().sum::<usize>(), 3);
+    }
+}

@@ -1,0 +1,39 @@
+//! # QUOKA-Serve
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via PJRT) serving framework that
+//! reproduces *"QUOKA: Query-Oriented KV Selection For Efficient LLM
+//! Prefill"* (Jones et al., Qualcomm AI Research, 2026).
+//!
+//! The paper's contribution — sub-selecting the KV cache for each chunked
+//! prefill block by (1) retaining the queries most *dissimilar* from the
+//! mean query, (2) scoring keys by cosine similarity against those queries
+//! with GQA *pre-aggregation*, and (3) max-aggregating scores over the
+//! query axis before a top-`B_SA` gather — is integrated as a first-class
+//! selection policy of an LLM serving engine with continuous batching and
+//! Sarathi-style chunked prefill.
+//!
+//! Layer map:
+//! - **L3 (this crate)** — request router, batcher, chunked-prefill +
+//!   decode scheduler, paged KV cache, QUOKA + 7 baseline selection
+//!   policies, metrics, CLI and TCP server. Python never runs here.
+//! - **L2/L1 (python/compile)** — JAX transformer pieces and Pallas
+//!   kernels, AOT-lowered once to HLO text artifacts.
+//! - **runtime** — PJRT CPU client that loads and executes those artifacts
+//!   from the L3 hot path.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every paper table/figure to a bench target.
+
+pub mod util;
+pub mod tensor;
+pub mod select;
+pub mod model;
+pub mod workload;
+pub mod eval;
+pub mod runtime;
+pub mod coordinator;
+pub mod server;
+pub mod bench;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

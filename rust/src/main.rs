@@ -1,0 +1,270 @@
+//! QUOKA-Serve CLI — the leader entrypoint.
+//!
+//! ```text
+//! quoka serve   --backend pjrt --artifacts artifacts --addr 127.0.0.1:7700
+//! quoka request --addr 127.0.0.1:7700 --prompt "…" --policy quoka
+//! quoka bench   table1_ruler            (any DESIGN.md §6 experiment id)
+//! quoka eval    --workload ruler --policy quoka --budget 1024 --length 4096
+//! quoka inspect --artifacts artifacts
+//! ```
+
+use quoka::bench::{latency, tables};
+use quoka::coordinator::{Engine, EngineCfg, SchedCfg};
+use quoka::server::{serve, Client, WireRequest};
+use quoka::util::cli::{usage, Args, OptSpec};
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(argv),
+        "request" => cmd_request(argv),
+        "bench" => cmd_bench(argv),
+        "eval" => cmd_eval(argv),
+        "inspect" => cmd_inspect(argv),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "QUOKA-Serve — query-oriented KV selection for efficient LLM prefill\n\n\
+         COMMANDS:\n\
+         \x20 serve     start the serving engine (TCP, newline-JSON)\n\
+         \x20 request   send one request to a running server\n\
+         \x20 bench     regenerate a paper table/figure (see DESIGN.md §6)\n\
+         \x20 eval      score one policy on one workload\n\
+         \x20 inspect   print the artifact manifest + model summary\n\n\
+         Run 'quoka <command> --help' for options."
+    );
+}
+
+fn serve_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "backend", help: "host | pjrt", default: Some("host"), boolean: false },
+        OptSpec { name: "preset", help: "model preset for --backend host", default: Some("serve-small"), boolean: false },
+        OptSpec { name: "artifacts", help: "artifact dir for --backend pjrt", default: Some("artifacts"), boolean: false },
+        OptSpec { name: "addr", help: "listen address", default: Some("127.0.0.1:7700"), boolean: false },
+        OptSpec { name: "b-cp", help: "prefill chunk size", default: Some("128"), boolean: false },
+        OptSpec { name: "step-tokens", help: "token budget per engine step", default: Some("256"), boolean: false },
+        OptSpec { name: "max-running", help: "max concurrent sequences", default: Some("8"), boolean: false },
+        OptSpec { name: "pool-blocks", help: "KV pool blocks (x block-tokens capacity)", default: Some("4096"), boolean: false },
+        OptSpec { name: "block-tokens", help: "tokens per KV block", default: Some("128"), boolean: false },
+        OptSpec { name: "seed", help: "weight seed", default: Some("0"), boolean: false },
+        OptSpec { name: "help", help: "show help", default: None, boolean: true },
+    ]
+}
+
+fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
+    let specs = serve_specs();
+    let a = Args::parse(argv, &specs)?;
+    if a.bool("help") {
+        println!("{}", usage("serve", "Start the serving engine.", &specs));
+        return Ok(());
+    }
+    let cfg = EngineCfg {
+        sched: SchedCfg {
+            b_cp: a.usize("b-cp")?,
+            step_tokens: a.usize("step-tokens")?,
+            max_running: a.usize("max-running")?,
+        },
+        pool_blocks: a.usize("pool-blocks")?,
+        block_tokens: a.usize("block-tokens")?,
+        seed: a.usize("seed")? as u64,
+    };
+    let backend = a.str("backend")?;
+    let preset = a.str("preset")?;
+    let artifacts = a.str("artifacts")?;
+    let addr = a.str("addr")?;
+    println!("starting quoka-serve backend={backend} addr={addr}");
+    let handle = serve(
+        move || match backend.as_str() {
+            "host" => Engine::new_host(&preset, cfg),
+            "pjrt" => Engine::new_pjrt(&artifacts, cfg),
+            other => anyhow::bail!("unknown backend '{other}'"),
+        },
+        &addr,
+    )?;
+    println!("listening on {} — newline-JSON requests; Ctrl-C to stop", handle.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_request(argv: Vec<String>) -> anyhow::Result<()> {
+    let specs = vec![
+        OptSpec { name: "addr", help: "server address", default: Some("127.0.0.1:7700"), boolean: false },
+        OptSpec { name: "prompt", help: "prompt text", default: None, boolean: false },
+        OptSpec { name: "max-new", help: "tokens to generate", default: Some("16"), boolean: false },
+        OptSpec { name: "policy", help: "selection policy", default: Some("quoka"), boolean: false },
+        OptSpec { name: "budget", help: "selection budget B_SA", default: Some("1024"), boolean: false },
+        OptSpec { name: "help", help: "show help", default: None, boolean: true },
+    ];
+    let a = Args::parse(argv, &specs)?;
+    if a.bool("help") {
+        println!("{}", usage("request", "Send one request to a running server.", &specs));
+        return Ok(());
+    }
+    let addr: std::net::SocketAddr = a.str("addr")?.parse()?;
+    let mut c = Client::connect(addr)?;
+    let resp = c.request(&WireRequest {
+        prompt: a.str("prompt")?,
+        max_new: a.usize("max-new")?,
+        policy: a.str("policy")?,
+        budget: a.usize("budget")?,
+    })?;
+    println!(
+        "id={} ttft={:.1}ms tpot={:.2}ms prompt_tokens={} generated={}\ntext: {:?}",
+        resp.id, resp.ttft_ms, resp.tpot_ms, resp.prompt_tokens, resp.generated, resp.text
+    );
+    Ok(())
+}
+
+fn cmd_bench(argv: Vec<String>) -> anyhow::Result<()> {
+    let id = argv.first().map(|s| s.as_str()).unwrap_or("list");
+    match id {
+        "fig2_geometry" => drop(tables::fig2_geometry()),
+        "fig3_deviation" => drop(tables::fig3_deviation()),
+        "fig4_niah" => drop(tables::fig4_niah()),
+        "table1_ruler" => drop(tables::table1_ruler()),
+        "table2_ruler_budget" => drop(tables::table2_ruler_budget()),
+        "table3_longbench" => drop(tables::table3_longbench()),
+        "table4_complexity" => drop(tables::table4_complexity()),
+        "table8_math500" => drop(tables::table8_math500()),
+        "table9_scoring" => drop(tables::table9_scoring()),
+        "table10_aggregation" => drop(tables::table10_aggregation()),
+        "table11_bcp" => drop(tables::table11_bcp()),
+        "table12_nq" => drop(tables::table12_nq()),
+        "fig5_latency" => {
+            latency::fig5_attention();
+            latency::fig5_ttft();
+        }
+        "fig6_decode" => drop(latency::fig6_decode()),
+        "micro_hotpath" => drop(latency::micro_hotpath()),
+        "all" => {
+            for id in [
+                "fig2_geometry", "fig3_deviation", "fig4_niah", "table1_ruler",
+                "table2_ruler_budget", "table3_longbench", "table4_complexity",
+                "table8_math500", "table9_scoring", "table10_aggregation",
+                "table11_bcp", "table12_nq", "fig5_latency", "fig6_decode",
+                "micro_hotpath",
+            ] {
+                cmd_bench(vec![id.to_string()])?;
+            }
+        }
+        _ => {
+            println!(
+                "experiments (DESIGN.md §6):\n  fig2_geometry fig3_deviation fig4_niah\n  \
+                 table1_ruler table2_ruler_budget table3_longbench table4_complexity\n  \
+                 table8_math500 table9_scoring table10_aggregation table11_bcp table12_nq\n  \
+                 fig5_latency fig6_decode micro_hotpath all\n\n\
+                 QUOKA_BENCH_FULL=1 for paper-scale grids."
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(argv: Vec<String>) -> anyhow::Result<()> {
+    let specs = vec![
+        OptSpec { name: "workload", help: "ruler | longbench | niah | math500", default: Some("ruler"), boolean: false },
+        OptSpec { name: "policy", help: "selection policy", default: Some("quoka"), boolean: false },
+        OptSpec { name: "budget", help: "B_SA", default: Some("1024"), boolean: false },
+        OptSpec { name: "length", help: "prompt length", default: Some("4096"), boolean: false },
+        OptSpec { name: "b-cp", help: "chunk size", default: Some("128"), boolean: false },
+        OptSpec { name: "seed", help: "workload seed", default: Some("0"), boolean: false },
+        OptSpec { name: "help", help: "show help", default: None, boolean: true },
+    ];
+    let a = Args::parse(argv, &specs)?;
+    if a.bool("help") {
+        println!("{}", usage("eval", "Score one policy on one workload.", &specs));
+        return Ok(());
+    }
+    let policy = quoka::select::policy_by_name(&a.str("policy")?)?;
+    let budget = a.usize("budget")?;
+    let (t, b_cp, seed) = (a.usize("length")?, a.usize("b-cp")?, a.usize("seed")? as u64);
+    let opts = quoka::eval::EvalOpts::default();
+    match a.str("workload")?.as_str() {
+        "ruler" => {
+            let s = quoka::workload::ruler::score(policy.as_ref(), budget, t, b_cp, seed, &opts);
+            println!("RULER score: {s:.2}");
+        }
+        "longbench" => {
+            let (per, mean) =
+                quoka::workload::longbench::scores(policy.as_ref(), budget, t, b_cp, seed, &opts);
+            for (fam, v) in per {
+                println!("  {fam:<14} {v:.3}");
+            }
+            println!("LongBench normalized mean: {mean:.3}");
+        }
+        "niah" => {
+            let cell = quoka::workload::niah::NiahCell { length: t, depth: 0.5 };
+            let task = quoka::workload::niah::build(&cell, b_cp, seed);
+            let s = quoka::eval::eval_policy(&task, policy.as_ref(), budget, &opts);
+            println!(
+                "NIAH recall={:.3} fidelity={:.3} kv_frac={:.3}",
+                s.recall(),
+                s.fidelity,
+                s.kv_frac
+            );
+        }
+        "math500" => {
+            let task = quoka::workload::math500::build(t, 6, b_cp, seed);
+            let s = quoka::workload::math500::run(&task, policy.as_ref(), budget, 128, seed);
+            println!("Math500 flex={:.3} exact={:.3} gen_len={:.1}", s.flex, s.exact, s.gen_len);
+        }
+        other => anyhow::bail!("unknown workload '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_inspect(argv: Vec<String>) -> anyhow::Result<()> {
+    let specs = vec![
+        OptSpec { name: "artifacts", help: "artifact dir", default: Some("artifacts"), boolean: false },
+        OptSpec { name: "help", help: "show help", default: None, boolean: true },
+    ];
+    let a = Args::parse(argv, &specs)?;
+    if a.bool("help") {
+        println!("{}", usage("inspect", "Print manifest + model summary.", &specs));
+        return Ok(());
+    }
+    let dir = a.str("artifacts")?;
+    let m = quoka::runtime::Manifest::load(format!("{dir}/manifest.json"))?;
+    let cfg = &m.model;
+    println!(
+        "model {} — {} params, {} layers, {}q/{}kv heads (g={}), d_head {}, vocab {}",
+        cfg.name,
+        cfg.param_count(),
+        cfg.n_layers,
+        cfg.n_q_heads,
+        cfg.n_kv_heads,
+        cfg.group_size(),
+        cfg.d_head,
+        cfg.vocab
+    );
+    println!(
+        "chunked prefill: B_CP={}  selection: B_SA={} N_Q={}  buckets {:?}",
+        m.b_cp, m.b_sa, m.n_q_sel, m.buckets
+    );
+    println!("{} artifacts:", m.artifacts.len());
+    for art in &m.artifacts {
+        println!("  {:<28} {:<8} s={:<4} bucket={}", art.name, art.kind, art.s, art.bucket);
+    }
+    Ok(())
+}

@@ -1,0 +1,226 @@
+//! Model configuration and the simulated-model presets.
+//!
+//! Offline substitution for the paper's checkpoint zoo (DESIGN.md §3): each
+//! preset mirrors a paper model's *architecture class* — GQA ratio, RoPE vs
+//! NoPE, dense-FFN vs MoE — at a scale the CPU testbed can serve. QUOKA is
+//! training-free and purely geometric, so the selection behaviour under
+//! test depends on these structural knobs, not on parameter count.
+
+use crate::util::json::Json;
+
+/// Decoder-only transformer configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    /// RoPE base; ignored when `use_rope` is false (NoPE variant).
+    pub rope_theta: f32,
+    pub use_rope: bool,
+    /// MoE expert count (0 ⇒ dense FFN). Top-1 routing when > 0.
+    pub n_experts: usize,
+    pub norm_eps: f32,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    /// Total parameter count (for reporting).
+    pub fn param_count(&self) -> usize {
+        let attn = self.d_model * self.d_head * (self.n_q_heads + 2 * self.n_kv_heads)
+            + self.n_q_heads * self.d_head * self.d_model;
+        let ffn_units = if self.n_experts > 0 { self.n_experts } else { 1 };
+        let ffn = ffn_units * 3 * self.d_model * self.d_ff
+            + if self.n_experts > 0 { self.d_model * self.n_experts } else { 0 };
+        let per_layer = attn + ffn + 2 * self.d_model;
+        self.vocab * self.d_model * 2 + self.n_layers * per_layer + self.d_model
+    }
+
+    /// GQA group size.
+    pub fn group_size(&self) -> usize {
+        self.n_q_heads / self.n_kv_heads
+    }
+
+    /// A minimal config for unit tests.
+    pub fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            vocab: 257,
+            d_model: 32,
+            n_layers: 2,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 64,
+            rope_theta: 10_000.0,
+            use_rope: true,
+            n_experts: 0,
+            norm_eps: 1e-5,
+            max_seq: 4096,
+        }
+    }
+
+    /// The serving default: a small GQA transformer the CPU PJRT backend
+    /// serves end-to-end (the "load a small real model" substitute).
+    pub fn serve_small() -> ModelConfig {
+        ModelConfig {
+            name: "serve-small".into(),
+            vocab: 4096,
+            d_model: 256,
+            n_layers: 4,
+            n_q_heads: 8,
+            n_kv_heads: 2,
+            d_head: 32,
+            d_ff: 768,
+            rope_theta: 500_000.0,
+            use_rope: true,
+            n_experts: 0,
+            norm_eps: 1e-5,
+            max_seq: 65_536,
+        }
+    }
+
+    /// Construct a preset by name (see [`sim_roster`]).
+    pub fn preset(name: &str) -> anyhow::Result<ModelConfig> {
+        let base = ModelConfig::serve_small();
+        Ok(match name {
+            "tiny" => ModelConfig::tiny(),
+            "serve-small" => base,
+            // Llama-3.2-3B: 24 q heads / 8 kv heads (g=4), RoPE, dense FFN.
+            "llama32-3b-sim" => ModelConfig {
+                name: name.into(),
+                n_layers: 4,
+                n_q_heads: 12,
+                n_kv_heads: 4,
+                d_head: 32,
+                rope_theta: 500_000.0,
+                ..base
+            },
+            // Qwen-2.5-3B: 16/2 GQA (g=8), RoPE, dense FFN.
+            "qwen25-3b-sim" => ModelConfig {
+                name: name.into(),
+                n_layers: 4,
+                n_q_heads: 16,
+                n_kv_heads: 2,
+                d_head: 32,
+                rope_theta: 1_000_000.0,
+                ..base
+            },
+            // Qwen3-4B: 32/8 (g=4), RoPE.
+            "qwen3-4b-sim" => ModelConfig {
+                name: name.into(),
+                n_layers: 4,
+                n_q_heads: 16,
+                n_kv_heads: 4,
+                d_head: 32,
+                rope_theta: 1_000_000.0,
+                ..base
+            },
+            // SmolLM3: 16/4 with NoPE on a subset of layers — modelled as
+            // NoPE everywhere (the harder case for positional recall).
+            "smollm3-sim" => ModelConfig {
+                name: name.into(),
+                n_layers: 4,
+                n_q_heads: 16,
+                n_kv_heads: 4,
+                d_head: 32,
+                use_rope: false,
+                ..base
+            },
+            // GPT-OSS-20B: MoE FFN (top-1 of 8 scaled-down experts), GQA 8.
+            "gptoss-20b-sim" => ModelConfig {
+                name: name.into(),
+                n_layers: 4,
+                n_q_heads: 16,
+                n_kv_heads: 2,
+                d_head: 32,
+                n_experts: 8,
+                d_ff: 256,
+                ..base
+            },
+            other => anyhow::bail!("unknown model preset '{other}'"),
+        })
+    }
+
+    /// Serialize for the AOT manifest handshake.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_q_heads", Json::num(self.n_q_heads as f64)),
+            ("n_kv_heads", Json::num(self.n_kv_heads as f64)),
+            ("d_head", Json::num(self.d_head as f64)),
+            ("d_ff", Json::num(self.d_ff as f64)),
+            ("rope_theta", Json::num(self.rope_theta as f64)),
+            ("use_rope", Json::Bool(self.use_rope)),
+            ("n_experts", Json::num(self.n_experts as f64)),
+            ("norm_eps", Json::num(self.norm_eps as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+        ])
+    }
+
+    /// Parse from the AOT manifest.
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.req("name")?.as_str().unwrap_or("?").to_string(),
+            vocab: j.req("vocab")?.as_usize().unwrap(),
+            d_model: j.req("d_model")?.as_usize().unwrap(),
+            n_layers: j.req("n_layers")?.as_usize().unwrap(),
+            n_q_heads: j.req("n_q_heads")?.as_usize().unwrap(),
+            n_kv_heads: j.req("n_kv_heads")?.as_usize().unwrap(),
+            d_head: j.req("d_head")?.as_usize().unwrap(),
+            d_ff: j.req("d_ff")?.as_usize().unwrap(),
+            rope_theta: j.req("rope_theta")?.as_f64().unwrap() as f32,
+            use_rope: j.req("use_rope")?.as_bool().unwrap_or(true),
+            n_experts: j.req("n_experts")?.as_usize().unwrap_or(0),
+            norm_eps: j.req("norm_eps")?.as_f64().unwrap() as f32,
+            max_seq: j.req("max_seq")?.as_usize().unwrap(),
+        })
+    }
+}
+
+/// The simulated roster standing in for the paper's model zoo (Table 1).
+pub fn sim_roster() -> Vec<&'static str> {
+    vec!["llama32-3b-sim", "qwen25-3b-sim", "qwen3-4b-sim", "smollm3-sim", "gptoss-20b-sim"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_are_consistent() {
+        for name in sim_roster().into_iter().chain(["tiny", "serve-small"]) {
+            let c = ModelConfig::preset(name).unwrap();
+            assert_eq!(c.n_q_heads % c.n_kv_heads, 0, "{name}");
+            assert!(c.group_size() >= 1);
+            assert!(c.param_count() > 0);
+        }
+        assert!(ModelConfig::preset("bogus").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ModelConfig::preset("gptoss-20b-sim").unwrap();
+        let j = c.to_json();
+        let back = ModelConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn roster_covers_architecture_classes() {
+        let cfgs: Vec<_> = sim_roster()
+            .into_iter()
+            .map(|n| ModelConfig::preset(n).unwrap())
+            .collect();
+        assert!(cfgs.iter().any(|c| !c.use_rope), "need a NoPE variant");
+        assert!(cfgs.iter().any(|c| c.n_experts > 0), "need an MoE variant");
+        assert!(cfgs.iter().any(|c| c.group_size() >= 8), "need a wide-GQA variant");
+    }
+}

@@ -1,0 +1,15 @@
+//! Model substrate: configuration, deterministic synthetic weights, the
+//! host (pure-Rust) transformer reference, and its attention kernels.
+//!
+//! The PJRT artifact path (`crate::runtime`) executes the same architecture
+//! compiled from JAX; `rust/tests/parity.rs` checks the two agree.
+
+pub mod config;
+pub mod weights;
+pub mod attention;
+pub mod transformer;
+
+pub use attention::KvBuffers;
+pub use config::{sim_roster, ModelConfig};
+pub use transformer::{HostModel, SeqState};
+pub use weights::Weights;

@@ -1,0 +1,390 @@
+//! Host (pure-Rust) transformer forward pass.
+//!
+//! This is the reference implementation the PJRT artifact path is checked
+//! against, and the `--backend host` execution engine (the paper's "works
+//! on CPUs / standard linear algebra" portability story). It implements
+//! chunked prefill per Eq. (2) with a pluggable [`SelectionPolicy`] applied
+//! to the KV cache of every layer, plus single-token decode.
+
+use super::attention::{chunk_attention, KvBuffers};
+use super::config::ModelConfig;
+use super::weights::Weights;
+use crate::select::{QChunk, SelectCtx, Selection, SelectionPolicy};
+use crate::tensor::matmul::matmul;
+use crate::tensor::ops::{rmsnorm, rope, silu};
+
+/// Per-sequence inference state: one KV buffer per layer + token count.
+pub struct SeqState {
+    pub caches: Vec<KvBuffers>,
+    /// Tokens processed so far (== caches[l].t).
+    pub pos: usize,
+}
+
+impl SeqState {
+    pub fn new(cfg: &ModelConfig) -> SeqState {
+        SeqState {
+            caches: (0..cfg.n_layers)
+                .map(|_| KvBuffers::new(cfg.n_kv_heads, cfg.d_head, 256))
+                .collect(),
+            pos: 0,
+        }
+    }
+
+    pub fn kv_bytes(&self) -> usize {
+        self.caches.iter().map(|c| c.resident_bytes()).sum()
+    }
+}
+
+/// Reusable forward-pass scratch (zero steady-state allocation).
+#[derive(Default)]
+struct FwdScratch {
+    normed: Vec<f32>,
+    q_proj: Vec<f32>,
+    k_proj: Vec<f32>,
+    v_proj: Vec<f32>,
+    q_heads: Vec<f32>,
+    k_heads: Vec<f32>,
+    v_heads: Vec<f32>,
+    attn_heads: Vec<f32>,
+    attn_merged: Vec<f32>,
+    attn_out: Vec<f32>,
+    ffn_gate: Vec<f32>,
+    ffn_up: Vec<f32>,
+    ffn_out: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+fn fit(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+    &mut buf[..n]
+}
+
+/// The host model: weights + scratch.
+pub struct HostModel {
+    pub w: Weights,
+    scratch: std::cell::RefCell<FwdScratch>,
+}
+
+impl HostModel {
+    pub fn new(w: Weights) -> HostModel {
+        HostModel { w, scratch: Default::default() }
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.w.cfg
+    }
+
+    /// Process one prefill chunk (or one decode token when `tokens.len()==1`
+    /// after prefill). Applies `policy` to every layer's past cache,
+    /// appends the chunk's KV, and returns the final hidden states
+    /// `[s, d_model]`.
+    pub fn forward_chunk(
+        &self,
+        state: &mut SeqState,
+        tokens: &[u32],
+        policy: &dyn SelectionPolicy,
+        budget: usize,
+        ctx: &mut SelectCtx,
+    ) -> Vec<f32> {
+        let cfg = &self.w.cfg;
+        let (s, dm, dh) = (tokens.len(), cfg.d_model, cfg.d_head);
+        let (nq, nkv) = (cfg.n_q_heads, cfg.n_kv_heads);
+        let (dq, dkv) = (nq * dh, nkv * dh);
+        assert!(s > 0);
+
+        // Embedding gather.
+        let mut hidden = vec![0.0f32; s * dm];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize % cfg.vocab;
+            hidden[i * dm..(i + 1) * dm].copy_from_slice(self.w.embedding.row(tok));
+        }
+
+        let mut sc_guard = self.scratch.borrow_mut();
+        let sc = &mut *sc_guard; // reborrow: allow disjoint field borrows
+        ctx.n_layers = cfg.n_layers;
+        for (l, lw) in self.w.layers.iter().enumerate() {
+            ctx.layer = l;
+            // ---- attention block ----
+            let normed = fit(&mut sc.normed, s * dm);
+            for i in 0..s {
+                rmsnorm(
+                    &hidden[i * dm..(i + 1) * dm],
+                    lw.attn_norm.data(),
+                    cfg.norm_eps,
+                    &mut normed[i * dm..(i + 1) * dm],
+                );
+            }
+            let q_proj = fit(&mut sc.q_proj, s * dq);
+            matmul(normed, lw.wq.data(), s, dm, dq, q_proj);
+            let k_proj = fit(&mut sc.k_proj, s * dkv);
+            matmul(normed, lw.wk.data(), s, dm, dkv, k_proj);
+            let v_proj = fit(&mut sc.v_proj, s * dkv);
+            matmul(normed, lw.wv.data(), s, dm, dkv, v_proj);
+
+            // [s, H*dh] → [H, s, dh] with RoPE on Q/K.
+            let q_heads = fit(&mut sc.q_heads, nq * s * dh);
+            for h in 0..nq {
+                for i in 0..s {
+                    let src = i * dq + h * dh;
+                    let dst = (h * s + i) * dh;
+                    q_heads[dst..dst + dh].copy_from_slice(&q_proj[src..src + dh]);
+                    if cfg.use_rope {
+                        rope(&mut q_heads[dst..dst + dh], state.pos + i, cfg.rope_theta);
+                    }
+                }
+            }
+            let k_heads = fit(&mut sc.k_heads, nkv * s * dh);
+            let v_heads = fit(&mut sc.v_heads, nkv * s * dh);
+            for h in 0..nkv {
+                for i in 0..s {
+                    let src = i * dkv + h * dh;
+                    let dst = (h * s + i) * dh;
+                    k_heads[dst..dst + dh].copy_from_slice(&k_proj[src..src + dh]);
+                    if cfg.use_rope {
+                        rope(&mut k_heads[dst..dst + dh], state.pos + i, cfg.rope_theta);
+                    }
+                    v_heads[dst..dst + dh].copy_from_slice(&v_proj[src..src + dh]);
+                }
+            }
+
+            // ---- selection over the past cache + attention ----
+            let cache = &state.caches[l];
+            let sel = if cache.t == 0 || policy.is_dense() {
+                Selection::All
+            } else {
+                let qv = QChunk::new(&q_heads[..nq * s * dh], nq, s, dh);
+                policy.select(&qv, &cache.k_view(), budget, ctx)
+            };
+            ctx.cost.bump_calls();
+            let attn_heads = fit(&mut sc.attn_heads, nq * s * dh);
+            chunk_attention(
+                &q_heads[..nq * s * dh],
+                nq,
+                s,
+                dh,
+                &k_heads[..nkv * s * dh],
+                &v_heads[..nkv * s * dh],
+                cache,
+                &sel,
+                &mut sc.scores,
+                attn_heads,
+            );
+
+            // [H, s, dh] → [s, H*dh], project out, residual.
+            let attn_merged = fit(&mut sc.attn_merged, s * dq);
+            for h in 0..nq {
+                for i in 0..s {
+                    let src = (h * s + i) * dh;
+                    let dst = i * dq + h * dh;
+                    attn_merged[dst..dst + dh].copy_from_slice(&attn_heads[src..src + dh]);
+                }
+            }
+            let attn_out = fit(&mut sc.attn_out, s * dm);
+            matmul(attn_merged, lw.wo.data(), s, dq, dm, attn_out);
+            for (hv, ov) in hidden.iter_mut().zip(attn_out.iter()) {
+                *hv += ov;
+            }
+
+            // Append the chunk's KV to the cache (full retention).
+            state.caches[l].append(&sc.k_heads[..nkv * s * dh], &sc.v_heads[..nkv * s * dh], s);
+
+            // ---- FFN block (SwiGLU; optional top-1 MoE) ----
+            let normed = fit(&mut sc.normed, s * dm);
+            for i in 0..s {
+                rmsnorm(
+                    &hidden[i * dm..(i + 1) * dm],
+                    lw.ffn_norm.data(),
+                    cfg.norm_eps,
+                    &mut normed[i * dm..(i + 1) * dm],
+                );
+            }
+            let d_ff = cfg.d_ff;
+            let ffn_out = fit(&mut sc.ffn_out, s * dm);
+            if cfg.n_experts == 0 {
+                let gate = fit(&mut sc.ffn_gate, s * d_ff);
+                matmul(normed, lw.w_gate.data(), s, dm, d_ff, gate);
+                let up = fit(&mut sc.ffn_up, s * d_ff);
+                matmul(normed, lw.w_up.data(), s, dm, d_ff, up);
+                for (gv, uv) in gate.iter_mut().zip(up.iter()) {
+                    *gv = silu(*gv) * uv;
+                }
+                matmul(gate, lw.w_down.data(), s, d_ff, dm, ffn_out);
+            } else {
+                // Top-1 routing per token.
+                for i in 0..s {
+                    let x = &normed[i * dm..(i + 1) * dm];
+                    let mut best = (0usize, f32::NEG_INFINITY);
+                    for e in 0..cfg.n_experts {
+                        let mut score = 0.0;
+                        for j in 0..dm {
+                            score += x[j] * lw.router.data()[j * cfg.n_experts + e];
+                        }
+                        if score > best.1 {
+                            best = (e, score);
+                        }
+                    }
+                    let (wg, wu, wd) = if best.0 == 0 {
+                        (lw.w_gate.data(), lw.w_up.data(), lw.w_down.data())
+                    } else {
+                        let ex = &lw.experts[best.0 - 1];
+                        (ex.0.data(), ex.1.data(), ex.2.data())
+                    };
+                    let gate = fit(&mut sc.ffn_gate, d_ff);
+                    matmul(x, wg, 1, dm, d_ff, gate);
+                    let up = fit(&mut sc.ffn_up, d_ff);
+                    matmul(x, wu, 1, dm, d_ff, up);
+                    for (gv, uv) in gate.iter_mut().zip(up.iter()) {
+                        *gv = silu(*gv) * uv;
+                    }
+                    matmul(gate, wd, 1, d_ff, dm, &mut ffn_out[i * dm..(i + 1) * dm]);
+                }
+            }
+            for (hv, fv) in hidden.iter_mut().zip(ffn_out.iter()) {
+                *hv += fv;
+            }
+        }
+        state.pos += s;
+        hidden
+    }
+
+    /// Logits for one hidden row (tied embedding head after final norm).
+    pub fn logits(&self, hidden_row: &[f32]) -> Vec<f32> {
+        let cfg = &self.w.cfg;
+        let dm = cfg.d_model;
+        let mut normed = vec![0.0; dm];
+        rmsnorm(hidden_row, self.w.final_norm.data(), cfg.norm_eps, &mut normed);
+        let mut out = vec![0.0; cfg.vocab];
+        crate::tensor::matmul::matmul_bt(&normed, self.w.embedding.data(), 1, dm, cfg.vocab, &mut out);
+        out
+    }
+
+    /// Greedy next token from the last row of `hidden`.
+    pub fn greedy_next(&self, hidden: &[f32]) -> u32 {
+        let dm = self.w.cfg.d_model;
+        let last = &hidden[hidden.len() - dm..];
+        let logits = self.logits(last);
+        crate::tensor::ops::topk_indices(&logits, 1)[0] as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::dense::Dense;
+    use crate::select::Quoka;
+
+    fn model(preset: &str) -> HostModel {
+        let cfg = ModelConfig::preset(preset).unwrap();
+        HostModel::new(Weights::generate(&cfg, 1234))
+    }
+
+    #[test]
+    fn chunked_prefill_equals_single_shot_under_dense() {
+        // Chunked prefill with full attention must equal processing the
+        // whole prompt at once (Eq. 2's exactness).
+        let m = model("tiny");
+        let tokens: Vec<u32> = (0..12).map(|i| (i * 37 % 251) as u32).collect();
+        let mut ctx = SelectCtx::new(0);
+
+        let mut s1 = SeqState::new(m.cfg());
+        let h_once = m.forward_chunk(&mut s1, &tokens, &Dense, usize::MAX, &mut ctx);
+
+        let mut s2 = SeqState::new(m.cfg());
+        let mut last = Vec::new();
+        for chunk in tokens.chunks(4) {
+            last = m.forward_chunk(&mut s2, chunk, &Dense, usize::MAX, &mut ctx);
+        }
+        let dm = m.cfg().d_model;
+        let a = &h_once[h_once.len() - dm..];
+        let b = &last[last.len() - dm..];
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+        assert_eq!(s1.caches[0].t, 12);
+        assert_eq!(s2.caches[0].t, 12);
+    }
+
+    #[test]
+    fn quoka_with_large_budget_matches_dense() {
+        let m = model("tiny");
+        let tokens: Vec<u32> = (0..16).map(|i| (i * 13 % 251) as u32).collect();
+        let mut ctx = SelectCtx::new(0);
+        let mut sd = SeqState::new(m.cfg());
+        let mut sq = SeqState::new(m.cfg());
+        let (mut hd, mut hq) = (Vec::new(), Vec::new());
+        for chunk in tokens.chunks(4) {
+            hd = m.forward_chunk(&mut sd, chunk, &Dense, usize::MAX, &mut ctx);
+            hq = m.forward_chunk(&mut sq, chunk, &Quoka::default(), 1 << 20, &mut ctx);
+        }
+        for (x, y) in hd.iter().zip(&hq) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn quoka_error_shrinks_with_budget() {
+        // A random-weight model has diffuse attention (the worst case for
+        // sparsity), so absolute error at small budgets is large; the
+        // QUOKA-relevant property is monotone improvement toward dense as
+        // the budget grows.
+        let m = model("tiny");
+        let tokens: Vec<u32> = (0..64).map(|i| (i * 31 % 251) as u32).collect();
+        let err_at = |budget: usize| -> f32 {
+            let mut ctx = SelectCtx::new(0);
+            let mut sd = SeqState::new(m.cfg());
+            let mut sq = SeqState::new(m.cfg());
+            let (mut hd, mut hq) = (Vec::new(), Vec::new());
+            for chunk in tokens.chunks(16) {
+                hd = m.forward_chunk(&mut sd, chunk, &Dense, usize::MAX, &mut ctx);
+                hq = m.forward_chunk(&mut sq, chunk, &Quoka::default(), budget, &mut ctx);
+            }
+            crate::tensor::ops::rel_l2(&hd, &hq)
+        };
+        let (e8, e40, e64) = (err_at(8), err_at(40), err_at(64));
+        assert!(e40 < e8, "e40 {e40} !< e8 {e8}");
+        assert!(e64 < 0.05, "budget >= T must be near-exact, got {e64}");
+    }
+
+    #[test]
+    fn decode_path_and_logits() {
+        let m = model("tiny");
+        let mut st = SeqState::new(m.cfg());
+        let mut ctx = SelectCtx::new(0);
+        let h = m.forward_chunk(&mut st, &[1, 2, 3, 4], &Dense, usize::MAX, &mut ctx);
+        let next = m.greedy_next(&h);
+        assert!((next as usize) < m.cfg().vocab);
+        let h2 = m.forward_chunk(&mut st, &[next], &Quoka::default(), 64, &mut ctx);
+        assert_eq!(h2.len(), m.cfg().d_model);
+        assert_eq!(st.pos, 5);
+        let logits = m.logits(&h2);
+        assert_eq!(logits.len(), m.cfg().vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn moe_and_nope_variants_run() {
+        for preset in ["gptoss-20b-sim", "smollm3-sim"] {
+            let cfg = ModelConfig::preset(preset).unwrap();
+            // Shrink for test speed.
+            let cfg = ModelConfig { d_model: 64, d_ff: 96, n_layers: 2, vocab: 128, ..cfg };
+            let m = HostModel::new(Weights::generate(&cfg, 5));
+            let mut st = SeqState::new(&cfg);
+            let mut ctx = SelectCtx::new(0);
+            let h = m.forward_chunk(&mut st, &[5, 6, 7], &Quoka::default(), 8, &mut ctx);
+            assert!(h.iter().all(|x| x.is_finite()), "{preset}");
+        }
+    }
+
+    #[test]
+    fn deterministic_forward() {
+        let m = model("tiny");
+        let mut a = SeqState::new(m.cfg());
+        let mut b = SeqState::new(m.cfg());
+        let mut ctx = SelectCtx::new(3);
+        let ha = m.forward_chunk(&mut a, &[9, 8, 7], &Dense, usize::MAX, &mut ctx);
+        let hb = m.forward_chunk(&mut b, &[9, 8, 7], &Dense, usize::MAX, &mut ctx);
+        assert_eq!(ha, hb);
+    }
+}

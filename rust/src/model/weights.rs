@@ -1,0 +1,147 @@
+//! Deterministic synthetic weights.
+//!
+//! Weights are generated from a seed with per-tensor derived streams, so
+//! the Rust host backend, the PJRT artifact path and the Python test suite
+//! can all materialize byte-identical parameters without any checkpoint
+//! file (the offline substitution for real model weights, DESIGN.md §3).
+//!
+//! Initialization follows standard transformer practice (scaled normal,
+//! `σ = 1/√fan_in`), which produces the query/key statistics the selection
+//! policies operate on.
+
+use super::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// One transformer layer's parameters.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    /// `[d_model]` pre-attention RMSNorm gain.
+    pub attn_norm: Tensor,
+    /// `[d_model, n_q_heads*d_head]`.
+    pub wq: Tensor,
+    /// `[d_model, n_kv_heads*d_head]`.
+    pub wk: Tensor,
+    /// `[d_model, n_kv_heads*d_head]`.
+    pub wv: Tensor,
+    /// `[n_q_heads*d_head, d_model]`.
+    pub wo: Tensor,
+    /// `[d_model]` pre-FFN RMSNorm gain.
+    pub ffn_norm: Tensor,
+    /// Dense FFN (SwiGLU): gate/up `[d_model, d_ff]`, down `[d_ff, d_model]`.
+    /// For MoE these hold expert 0; extra experts live in `experts`.
+    pub w_gate: Tensor,
+    pub w_up: Tensor,
+    pub w_down: Tensor,
+    /// MoE router `[d_model, n_experts]` (empty when dense).
+    pub router: Tensor,
+    /// Experts 1.. (expert 0 uses the dense tensors above).
+    pub experts: Vec<(Tensor, Tensor, Tensor)>,
+}
+
+/// Full model parameters.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub cfg: ModelConfig,
+    /// `[vocab, d_model]` token embedding (also the tied LM head).
+    pub embedding: Tensor,
+    pub layers: Vec<LayerWeights>,
+    /// `[d_model]` final RMSNorm gain.
+    pub final_norm: Tensor,
+}
+
+fn proj(rng: &mut Rng, rows: usize, cols: usize) -> Tensor {
+    let sigma = 1.0 / (rows as f32).sqrt();
+    Tensor::randn(&[rows, cols], rng, sigma)
+}
+
+fn gain(dim: usize) -> Tensor {
+    Tensor::from_vec(&[dim], vec![1.0; dim])
+}
+
+impl Weights {
+    /// Generate the full parameter set for `cfg` from `seed`.
+    pub fn generate(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut root = Rng::new(seed);
+        let d = cfg.d_model;
+        let dq = cfg.n_q_heads * cfg.d_head;
+        let dkv = cfg.n_kv_heads * cfg.d_head;
+        let embedding = {
+            let mut r = root.fork(0xE0B);
+            Tensor::randn(&[cfg.vocab, d], &mut r, 0.02)
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|l| {
+                let mut r = root.fork(0x1000 + l as u64);
+                let n_extra = cfg.n_experts.saturating_sub(1);
+                LayerWeights {
+                    attn_norm: gain(d),
+                    wq: proj(&mut r, d, dq),
+                    wk: proj(&mut r, d, dkv),
+                    wv: proj(&mut r, d, dkv),
+                    wo: proj(&mut r, dq, d),
+                    ffn_norm: gain(d),
+                    w_gate: proj(&mut r, d, cfg.d_ff),
+                    w_up: proj(&mut r, d, cfg.d_ff),
+                    w_down: proj(&mut r, cfg.d_ff, d),
+                    router: if cfg.n_experts > 0 {
+                        proj(&mut r, d, cfg.n_experts)
+                    } else {
+                        Tensor::zeros(&[0])
+                    },
+                    experts: (0..n_extra)
+                        .map(|_| {
+                            (
+                                proj(&mut r, d, cfg.d_ff),
+                                proj(&mut r, d, cfg.d_ff),
+                                proj(&mut r, cfg.d_ff, d),
+                            )
+                        })
+                        .collect(),
+                }
+            })
+            .collect();
+        Weights { cfg: cfg.clone(), embedding, layers, final_norm: gain(d) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_calls() {
+        let cfg = ModelConfig::tiny();
+        let a = Weights::generate(&cfg, 7);
+        let b = Weights::generate(&cfg, 7);
+        assert_eq!(a.embedding, b.embedding);
+        assert_eq!(a.layers[1].wq, b.layers[1].wq);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let cfg = ModelConfig::tiny();
+        let a = Weights::generate(&cfg, 1);
+        let b = Weights::generate(&cfg, 2);
+        assert!(a.embedding.max_abs_diff(&b.embedding) > 0.0);
+    }
+
+    #[test]
+    fn shapes_match_config() {
+        let cfg = ModelConfig::preset("gptoss-20b-sim").unwrap();
+        let w = Weights::generate(&cfg, 3);
+        assert_eq!(w.embedding.shape(), &[cfg.vocab, cfg.d_model]);
+        let l = &w.layers[0];
+        assert_eq!(l.wq.shape(), &[cfg.d_model, cfg.n_q_heads * cfg.d_head]);
+        assert_eq!(l.wk.shape(), &[cfg.d_model, cfg.n_kv_heads * cfg.d_head]);
+        assert_eq!(l.router.shape(), &[cfg.d_model, cfg.n_experts]);
+        assert_eq!(l.experts.len(), cfg.n_experts - 1);
+    }
+
+    #[test]
+    fn layers_are_independent_streams() {
+        let cfg = ModelConfig::tiny();
+        let w = Weights::generate(&cfg, 9);
+        assert!(w.layers[0].wq.max_abs_diff(&w.layers[1].wq) > 0.0);
+    }
+}

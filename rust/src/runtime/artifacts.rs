@@ -1,0 +1,155 @@
+//! Manifest parsing — the AOT ↔ runtime contract.
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One artifact entry from `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// Chunk width this artifact was lowered for (0 when n/a).
+    pub s: usize,
+    /// KV bucket length (0 when n/a).
+    pub bucket: usize,
+    /// Argument order.
+    pub args: Vec<String>,
+    /// Output order.
+    pub outs: Vec<String>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: ModelConfig,
+    /// Ascending KV bucket lengths.
+    pub buckets: Vec<usize>,
+    pub b_cp: usize,
+    /// Selection budget baked into the quoka artifacts.
+    pub b_sa: usize,
+    pub n_q_sel: usize,
+    pub layer_weights: Vec<String>,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        Manifest::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let model = ModelConfig::from_json(j.req("model")?)?;
+        let buckets = j
+            .req("buckets")?
+            .as_arr()
+            .context("buckets must be an array")?
+            .iter()
+            .map(|b| b.as_usize().unwrap())
+            .collect::<Vec<_>>();
+        let artifacts = j
+            .req("artifacts")?
+            .as_arr()
+            .context("artifacts must be an array")?
+            .iter()
+            .map(|a| {
+                let strs = |key: &str| -> Vec<String> {
+                    a.get(key)
+                        .and_then(|v| v.as_arr())
+                        .map(|v| v.iter().filter_map(|s| s.as_str()).map(String::from).collect())
+                        .unwrap_or_default()
+                };
+                Ok(ArtifactEntry {
+                    name: a.req("name")?.as_str().unwrap().to_string(),
+                    file: a.req("file")?.as_str().unwrap().to_string(),
+                    kind: a.get("kind").and_then(|k| k.as_str()).unwrap_or("").to_string(),
+                    s: a.get("s").and_then(|v| v.as_usize()).unwrap_or(0),
+                    bucket: a.get("bucket").and_then(|v| v.as_usize()).unwrap_or(0),
+                    args: strs("args"),
+                    outs: strs("outs"),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            model,
+            buckets,
+            b_cp: j.req("b_cp")?.as_usize().unwrap(),
+            b_sa: j.req("b_sa")?.as_usize().unwrap(),
+            n_q_sel: j.req("n_q_sel")?.as_usize().unwrap(),
+            layer_weights: j
+                .req("layer_weights")?
+                .as_arr()
+                .context("layer_weights")?
+                .iter()
+                .filter_map(|s| s.as_str())
+                .map(String::from)
+                .collect(),
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Smallest bucket with room for `t_past + s` rows.
+    pub fn bucket_for(&self, t_past: usize, s: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| t_past + s <= b)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no bucket fits t={} + s={} (buckets: {:?})",
+                    t_past,
+                    s,
+                    self.buckets
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> &'static str {
+        r#"{
+          "model": {"name":"tiny","vocab":257,"d_model":32,"n_layers":2,
+                    "n_q_heads":4,"n_kv_heads":2,"d_head":8,"d_ff":64,
+                    "rope_theta":10000.0,"use_rope":true,"n_experts":0,
+                    "norm_eps":1e-5,"max_seq":4096},
+          "buckets": [1024, 4096],
+          "b_cp": 128, "b_sa": 1024, "n_q_sel": 16,
+          "layer_weights": ["attn_norm","wq"],
+          "artifacts": [
+            {"name":"layer_dense_T1024","file":"layer_dense_T1024.hlo.txt",
+             "kind":"dense","s":128,"bucket":1024,
+             "args":["hidden","attn_norm"],"outs":["hidden","k_self","v_self"]}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(&Json::parse(sample()).unwrap()).unwrap();
+        assert_eq!(m.model.name, "tiny");
+        assert_eq!(m.buckets, vec![1024, 4096]);
+        assert_eq!(m.artifact("layer_dense_T1024").unwrap().s, 128);
+        assert!(m.artifact("nope").is_none());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::from_json(&Json::parse(sample()).unwrap()).unwrap();
+        assert_eq!(m.bucket_for(0, 128).unwrap(), 1024);
+        assert_eq!(m.bucket_for(896, 128).unwrap(), 1024);
+        assert_eq!(m.bucket_for(897, 128).unwrap(), 4096);
+        assert!(m.bucket_for(4096, 128).is_err());
+    }
+}

@@ -1,0 +1,287 @@
+//! The PJRT execution backend: the artifact-driven counterpart of
+//! [`crate::model::HostModel`].
+//!
+//! Weights are uploaded once as device buffers; per chunk the engine
+//! uploads the (bucketed) KV cache and hidden state, runs one layer-step
+//! executable per layer (`layer_dense_T{b}` or `layer_quoka_T{b}`), and
+//! appends the returned self-KV to the host-side cache. The QUOKA variant
+//! runs Algorithm 1 *inside* the artifact — selection, gather and reduced
+//! attention all in one XLA module.
+
+use super::{Manifest, Runtime};
+use crate::model::{ModelConfig, Weights};
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+/// Per-layer uploaded weight buffers (order = manifest.layer_weights).
+struct LayerBufs(Vec<PjRtBuffer>);
+
+/// Uploaded model parameters.
+struct WeightBufs {
+    embedding: PjRtBuffer,
+    final_norm: PjRtBuffer,
+    layers: Vec<LayerBufs>,
+}
+
+/// Attention mode per request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnMode {
+    Dense,
+    Quoka,
+}
+
+impl AttnMode {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            AttnMode::Dense => "dense",
+            AttnMode::Quoka => "quoka",
+        }
+    }
+}
+
+/// Per-sequence state: host-side per-layer KV caches stored at the stride
+/// of the current bucket (so uploads are direct slices).
+pub struct PjrtSeq {
+    /// `[n_layers][n_kv * bucket * d]`.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Current bucket (stride) of the caches.
+    bucket: usize,
+    /// Valid rows.
+    pub t: usize,
+    pub pos: usize,
+}
+
+impl PjrtSeq {
+    pub fn new(m: &Manifest) -> PjrtSeq {
+        let cfg = &m.model;
+        let bucket = m.buckets[0];
+        let n = cfg.n_kv_heads * bucket * cfg.d_head;
+        PjrtSeq {
+            k: (0..cfg.n_layers).map(|_| vec![0.0; n]).collect(),
+            v: (0..cfg.n_layers).map(|_| vec![0.0; n]).collect(),
+            bucket,
+            t: 0,
+            pos: 0,
+        }
+    }
+
+    /// Grow the caches to `bucket`, re-striding each head slab.
+    fn grow(&mut self, cfg: &ModelConfig, bucket: usize) {
+        if bucket <= self.bucket {
+            return;
+        }
+        let (nkv, d) = (cfg.n_kv_heads, cfg.d_head);
+        for layer in 0..self.k.len() {
+            let mut k2 = vec![0.0; nkv * bucket * d];
+            let mut v2 = vec![0.0; nkv * bucket * d];
+            for h in 0..nkv {
+                let src = h * self.bucket * d;
+                let dst = h * bucket * d;
+                let n = self.t * d;
+                k2[dst..dst + n].copy_from_slice(&self.k[layer][src..src + n]);
+                v2[dst..dst + n].copy_from_slice(&self.v[layer][src..src + n]);
+            }
+            self.k[layer] = k2;
+            self.v[layer] = v2;
+        }
+        self.bucket = bucket;
+    }
+
+    /// Append `s_real` rows of self-KV (layout `[n_kv, s_art, d]`, first
+    /// `s_real` rows of each head valid).
+    fn append(&mut self, cfg: &ModelConfig, layer: usize, k_self: &[f32], v_self: &[f32], s_art: usize, s_real: usize) {
+        let (nkv, d) = (cfg.n_kv_heads, cfg.d_head);
+        for h in 0..nkv {
+            let dst = h * self.bucket * d + self.t * d;
+            let src = h * s_art * d;
+            let n = s_real * d;
+            self.k[layer][dst..dst + n].copy_from_slice(&k_self[src..src + n]);
+            self.v[layer][dst..dst + n].copy_from_slice(&v_self[src..src + n]);
+        }
+    }
+
+    /// KV bytes resident.
+    pub fn kv_bytes(&self, cfg: &ModelConfig) -> usize {
+        2 * self.k.len() * cfg.n_kv_heads * self.bucket * cfg.d_head * 4
+    }
+
+    /// Benchmark helper: fill the caches with `t` random rows (standing in
+    /// for an already-prefilled context) so per-chunk latency can be
+    /// measured at arbitrary cache depths without paying a full prefill.
+    pub fn fill_random(&mut self, m: &Manifest, t: usize, seed: u64) {
+        let cfg = m.model.clone();
+        let bucket = m.bucket_for(t, m.b_cp).expect("t exceeds largest bucket");
+        self.grow(&cfg, bucket);
+        let mut rng = crate::util::Rng::new(seed);
+        let (nkv, d) = (cfg.n_kv_heads, cfg.d_head);
+        for layer in 0..self.k.len() {
+            for h in 0..nkv {
+                let base = h * self.bucket * d;
+                rng.fill_normal(&mut self.k[layer][base..base + t * d], 0.5);
+                rng.fill_normal(&mut self.v[layer][base..base + t * d], 0.5);
+            }
+        }
+        self.t = t;
+        self.pos = t;
+    }
+}
+
+/// The PJRT-backed model backend.
+pub struct PjrtBackend {
+    pub rt: Runtime,
+    w: WeightBufs,
+}
+
+impl PjrtBackend {
+    /// Load artifacts and upload the weights generated from `seed`.
+    pub fn load(artifact_dir: &str, seed: u64) -> Result<PjrtBackend> {
+        let rt = Runtime::load(artifact_dir)?;
+        Self::with_runtime(rt, seed)
+    }
+
+    /// Lazy-compile variant (artifacts compiled on first use).
+    pub fn load_lazy(artifact_dir: &str, seed: u64) -> Result<PjrtBackend> {
+        let rt = Runtime::load_lazy(artifact_dir)?;
+        Self::with_runtime(rt, seed)
+    }
+
+    fn with_runtime(rt: Runtime, seed: u64) -> Result<PjrtBackend> {
+        let weights = Weights::generate(&rt.manifest.model, seed);
+        let cfg = &rt.manifest.model;
+        let embedding = rt.buf_f32(weights.embedding.data(), &[cfg.vocab, cfg.d_model])?;
+        let final_norm = rt.buf_f32(weights.final_norm.data(), &[cfg.d_model])?;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for lw in &weights.layers {
+            let named: Vec<(&str, &crate::tensor::Tensor)> = vec![
+                ("attn_norm", &lw.attn_norm),
+                ("wq", &lw.wq),
+                ("wk", &lw.wk),
+                ("wv", &lw.wv),
+                ("wo", &lw.wo),
+                ("ffn_norm", &lw.ffn_norm),
+                ("w_gate", &lw.w_gate),
+                ("w_up", &lw.w_up),
+                ("w_down", &lw.w_down),
+            ];
+            let mut bufs = Vec::new();
+            for want in &rt.manifest.layer_weights {
+                let (_, t) = named
+                    .iter()
+                    .find(|(n, _)| n == want)
+                    .with_context(|| format!("unknown layer weight '{want}' in manifest"))?;
+                bufs.push(rt.buf_f32(t.data(), t.shape())?);
+            }
+            layers.push(LayerBufs(bufs));
+        }
+        Ok(PjrtBackend { rt, w: WeightBufs { embedding, final_norm, layers } })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.rt.manifest
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.rt.manifest.model
+    }
+
+    /// Run one prefill chunk (`tokens.len() <= B_CP`). Returns the hidden
+    /// rows `[s_real, d_model]`.
+    pub fn prefill_chunk(
+        &mut self,
+        seq: &mut PjrtSeq,
+        tokens: &[u32],
+        mode: AttnMode,
+    ) -> Result<Vec<f32>> {
+        let b_cp = self.rt.manifest.b_cp;
+        anyhow::ensure!(
+            !tokens.is_empty() && tokens.len() <= b_cp,
+            "chunk must be 1..={b_cp} tokens"
+        );
+        self.forward(seq, tokens, mode, false)
+    }
+
+    /// Run one decode step; returns the next token (greedy) and its logits.
+    pub fn decode_step(
+        &mut self,
+        seq: &mut PjrtSeq,
+        token: u32,
+        mode: AttnMode,
+    ) -> Result<(u32, Vec<f32>)> {
+        let hidden = self.forward(seq, &[token], mode, true)?;
+        let logits = self.logits(&hidden)?;
+        let next = crate::tensor::ops::topk_indices(&logits, 1)[0] as u32;
+        Ok((next, logits))
+    }
+
+    /// Logits for one hidden row.
+    pub fn logits(&mut self, hidden_row: &[f32]) -> Result<Vec<f32>> {
+        let cfg = self.cfg().clone();
+        let h = self.rt.buf_f32(&hidden_row[..cfg.d_model], &[cfg.d_model])?;
+        let outs = self.rt.run("logits", &[&h, &self.w.final_norm, &self.w.embedding])?;
+        let mut lit = outs[0].to_literal_sync()?;
+        let parts = lit.decompose_tuple()?;
+        Ok(parts[0].to_vec::<f32>()?)
+    }
+
+    fn forward(
+        &mut self,
+        seq: &mut PjrtSeq,
+        tokens: &[u32],
+        mode: AttnMode,
+        decode: bool,
+    ) -> Result<Vec<f32>> {
+        let cfg = self.cfg().clone();
+        let m_bcp = self.rt.manifest.b_cp;
+        let s_real = tokens.len();
+        let s_art = if decode { 1 } else { m_bcp };
+        // Pick and, if needed, grow into the bucket for this step.
+        let bucket = self.rt.manifest.bucket_for(seq.t, s_art)?;
+        seq.grow(&cfg, bucket);
+
+        // Embed (pad the chunk to the artifact width).
+        let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        padded.resize(s_art, 0);
+        let tok_buf = self.rt.buf_i32(&padded, &[s_art])?;
+        let embed_name = if decode { "embed_d" } else { "embed_p" };
+        let outs = self.rt.run(embed_name, &[&tok_buf, &self.w.embedding])?;
+        let mut lit = outs[0].to_literal_sync()?;
+        let mut hidden = lit.decompose_tuple()?[0].to_vec::<f32>()?;
+
+        let tag = mode.tag();
+        let layer_name = if decode {
+            format!("layer_{tag}_decode_T{bucket}")
+        } else {
+            format!("layer_{tag}_T{bucket}")
+        };
+        let (nkv, d) = (cfg.n_kv_heads, cfg.d_head);
+        let t_len = self.rt.buf_scalar_i32(seq.t as i32)?;
+        let pos0 = self.rt.buf_scalar_i32(seq.pos as i32)?;
+
+        for layer in 0..cfg.n_layers {
+            let h_buf = self.rt.buf_f32(&hidden, &[s_art, cfg.d_model])?;
+            let k_buf = self.rt.buf_f32(&seq.k[layer], &[nkv, bucket, d])?;
+            let v_buf = self.rt.buf_f32(&seq.v[layer], &[nkv, bucket, d])?;
+            let mut args: Vec<&PjRtBuffer> = vec![&h_buf];
+            for wbuf in &self.w.layers[layer].0 {
+                args.push(wbuf);
+            }
+            args.push(&k_buf);
+            args.push(&v_buf);
+            args.push(&t_len);
+            args.push(&pos0);
+            let outs = self.rt.run(&layer_name, &args)?;
+            let mut lit = outs[0].to_literal_sync()?;
+            let parts = lit.decompose_tuple()?;
+            hidden = parts[0].to_vec::<f32>()?;
+            let k_self = parts[1].to_vec::<f32>()?;
+            let v_self = parts[2].to_vec::<f32>()?;
+            seq.append(&cfg, layer, &k_self, &v_self, s_art, s_real);
+        }
+        seq.t += s_real;
+        seq.pos += s_real;
+
+        hidden.truncate(s_real * cfg.d_model);
+        Ok(hidden)
+    }
+}

@@ -1,0 +1,114 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute from the hot
+//! path with weights resident as device buffers.
+//!
+//! The interchange contract is `artifacts/manifest.json` +
+//! `artifacts/*.hlo.txt`, produced by `python/compile/aot.py`. Python never
+//! runs at serve time; this module is the only consumer of the artifacts.
+
+pub mod artifacts;
+pub mod exec;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use exec::{PjrtBackend, PjrtSeq};
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled-executable cache over one PJRT client.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory, create the CPU PJRT client and compile
+    /// every artifact listed in the manifest (compile-once semantics; a
+    /// few hundred ms per module on the CPU plugin).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut rt = Runtime { client, dir, manifest, execs: HashMap::new() };
+        let names: Vec<String> = rt.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for name in names {
+            rt.compile(&name)?;
+        }
+        Ok(rt)
+    }
+
+    /// Load lazily (compile on first use) — faster startup for tools that
+    /// touch one artifact.
+    pub fn load_lazy(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, execs: HashMap::new() })
+    }
+
+    fn compile(&mut self, name: &str) -> Result<()> {
+        if self.execs.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.execs.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Fetch a compiled executable, compiling lazily if needed.
+    pub fn exec(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.compile(name)?;
+        Ok(self.execs.get(name).unwrap())
+    }
+
+    /// Upload a host f32 slice as a device buffer with the given dims.
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a host i32 slice.
+    pub fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Scalar i32 buffer.
+    pub fn buf_scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+
+    /// Run an executable on buffers; returns the un-tupled output buffers.
+    pub fn run(
+        &mut self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        self.compile(name)?;
+        let exe = self.execs.get(name).unwrap();
+        let outs = exe.execute_b(args).with_context(|| format!("executing {name}"))?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// Copy a buffer back to host as f32.
+    pub fn to_host_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Copy a buffer back to host as i32.
+    pub fn to_host_i32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<i32>> {
+        let lit = buf.to_literal_sync()?;
+        Ok(lit.to_vec::<i32>()?)
+    }
+}

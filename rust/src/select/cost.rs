@@ -1,0 +1,134 @@
+//! Cost accounting for Table 4 (runtime & memory complexity).
+//!
+//! Policies tally the FLOPs they execute and the score/projection bytes
+//! they materialize; [`analytic`] evaluates the paper's closed-form
+//! complexity expressions at the same parameters so the bench
+//! `table4_complexity` can check measured-vs-formula scaling directly.
+
+/// Accumulated measured cost.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostCounter {
+    flops: u64,
+    bytes: u64,
+    calls: u64,
+}
+
+impl CostCounter {
+    #[inline]
+    pub fn add_flops(&mut self, f: u64) {
+        self.flops += f;
+    }
+    #[inline]
+    pub fn add_bytes(&mut self, b: u64) {
+        self.bytes += b;
+    }
+    pub fn bump_calls(&mut self) {
+        self.calls += 1;
+    }
+    pub fn flops(&self) -> u64 {
+        self.flops
+    }
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+    pub fn reset(&mut self) {
+        *self = CostCounter::default();
+    }
+}
+
+/// Parameters of the paper's complexity table.
+#[derive(Clone, Copy, Debug)]
+pub struct CostParams {
+    /// Prefill chunk size `B_CP`.
+    pub b_cp: usize,
+    /// KV cache length `T`.
+    pub t: usize,
+    /// Query heads `n_Q`.
+    pub n_q_heads: usize,
+    /// KV heads `n_KV`.
+    pub n_kv_heads: usize,
+    /// Head dim `d`.
+    pub d: usize,
+    /// Subselected queries `N_Q`.
+    pub n_q_sel: usize,
+    /// Down-projection dim `d_l` (SparQ/Loki).
+    pub d_l: usize,
+    /// Layer count `L` (LessIsMore amortization).
+    pub layers: usize,
+}
+
+/// The paper's Table 4 closed forms (up to constant factors), evaluated so
+/// scaling ratios can be compared against measured counters.
+pub fn analytic(method: &str, p: &CostParams) -> (f64, f64) {
+    let (b_cp, t) = (p.b_cp as f64, p.t as f64);
+    let (n_q, n_kv, d) = (p.n_q_heads as f64, p.n_kv_heads as f64, p.d as f64);
+    let nq_sel = p.n_q_sel as f64;
+    let d_l = p.d_l as f64;
+    let layers = p.layers as f64;
+    match method {
+        // O(B_CP + N_Q(1 + d n_KV) T) runtime, O(n_KV N_Q T) memory
+        "quoka" => (b_cp + nq_sel * (1.0 + d * n_kv) * t, n_kv * nq_sel * t),
+        // O((d n_Q + n_Q/n_KV + n_KV) N_Q T), O(n_Q N_Q T)
+        "sample" => ((d * n_q + n_q / n_kv + n_kv) * nq_sel * t, n_q * nq_sel * t),
+        // O(B_CP T d_l n_Q), O(n_Q B_CP T)
+        "sparq" => (b_cp * t * d_l * n_q, n_q * b_cp * t),
+        // O(d_l n_Q (B_CP T + d(B_CP + T))), O(n_Q B_CP T)
+        "loki" => (d_l * n_q * (b_cp * t + d * (b_cp + t)), n_q * b_cp * t),
+        // O(d n_Q B_CP T / L), O(n_Q B_CP T / L)
+        "lessismore" => (d * n_q * b_cp * t / layers, n_q * b_cp * t / layers),
+        _ => (0.0, 0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(t: usize) -> CostParams {
+        CostParams {
+            b_cp: 128,
+            t,
+            n_q_heads: 8,
+            n_kv_heads: 2,
+            d: 64,
+            n_q_sel: 16,
+            d_l: 64,
+            layers: 8,
+        }
+    }
+
+    #[test]
+    fn counter_accumulates() {
+        let mut c = CostCounter::default();
+        c.add_flops(10);
+        c.add_flops(5);
+        c.add_bytes(3);
+        assert_eq!(c.flops(), 15);
+        assert_eq!(c.bytes(), 3);
+        c.reset();
+        assert_eq!(c.flops(), 0);
+    }
+
+    #[test]
+    fn quoka_scales_with_nkv_not_nq() {
+        // The paper's asymptotic point: QUOKA's terms carry n_KV, sample
+        // attention's carry n_Q (> n_KV).
+        let (rq, mq) = analytic("quoka", &p(8192));
+        let (rs, ms) = analytic("sample", &p(8192));
+        assert!(rq < rs);
+        assert!(mq < ms);
+    }
+
+    #[test]
+    fn linear_in_t() {
+        for m in ["quoka", "sample", "sparq", "loki", "lessismore"] {
+            let (r1, _) = analytic(m, &p(4096));
+            let (r2, _) = analytic(m, &p(8192));
+            let ratio = r2 / r1;
+            assert!((ratio - 2.0).abs() < 0.1, "{m}: {ratio}");
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Dense baseline: no selection — every query attends to the full cache.
+
+use super::{KCache, QChunk, SelectCtx, Selection, SelectionPolicy};
+
+/// Full attention (the paper's dense baseline).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Dense;
+
+impl SelectionPolicy for Dense {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn select(&self, _q: &QChunk, _k: &KCache, _budget: usize, _ctx: &mut SelectCtx) -> Selection {
+        Selection::All
+    }
+
+    fn is_dense(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn always_selects_everything() {
+        let mut rng = Rng::new(1);
+        let qd = rng.normal_vec(2 * 4 * 8, 1.0);
+        let kd = rng.normal_vec(1 * 32 * 8, 1.0);
+        let q = QChunk::new(&qd, 2, 4, 8);
+        let k = KCache::new(&kd, 1, 32, 32, 8);
+        let sel = Dense.select(&q, &k, 4, &mut SelectCtx::new(0));
+        assert_eq!(sel, Selection::All);
+        assert_eq!(sel.head_len(0, k.t), 32);
+    }
+}

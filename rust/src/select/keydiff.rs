@@ -1,0 +1,87 @@
+//! KeyDiff baseline (Park et al., 2025 — the paper's own prior work).
+//!
+//! Query-*agnostic* eviction scoring: keys are ranked by their cosine
+//! *dissimilarity* to the mean key — distinctive keys are retained, keys in
+//! the redundant cluster are dropped. Cheap (one pass over K, no Q at all)
+//! but blind to what the current queries actually need, which is why the
+//! paper reports it trailing query-aware methods on RULER.
+
+use super::{topk_ascending, KCache, QChunk, SelectCtx, Selection, SelectionPolicy};
+use crate::tensor::ops::{dot, l2_norm, mean_rows};
+
+/// Key-geometry-only selection.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KeyDiff;
+
+impl SelectionPolicy for KeyDiff {
+    fn name(&self) -> &'static str {
+        "keydiff"
+    }
+
+    fn select(&self, _q: &QChunk, k: &KCache, budget: usize, ctx: &mut SelectCtx) -> Selection {
+        let t = k.t;
+        if t <= budget {
+            return Selection::All;
+        }
+        let d = k.d;
+        let mut per_head = Vec::with_capacity(k.n_heads);
+        for kv in 0..k.n_heads {
+            let khead = k.head(kv);
+            let (scores, mean) = ctx.scratch.bufs_ac(t, d);
+            mean_rows(&khead[..t * d], t, d, mean);
+            let mn = l2_norm(&*mean);
+            for ti in 0..t {
+                let key = &khead[ti * d..(ti + 1) * d];
+                let n = l2_norm(key);
+                scores[ti] = if n == 0.0 || mn == 0.0 {
+                    0.0
+                } else {
+                    -dot(key, mean) / (n * mn) // dissimilarity
+                };
+            }
+            ctx.cost.add_flops((t * 4 * d) as u64);
+            ctx.cost.add_bytes((t * d * 4) as u64);
+            per_head.push(topk_ascending(scores, budget));
+        }
+        Selection::PerHead(per_head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn keeps_distinctive_keys() {
+        let (t, d) = (100usize, 8usize);
+        let mut rng = Rng::new(61);
+        let mut kd = vec![0.0; t * d];
+        for i in 0..t {
+            kd[i * d] = 1.0; // redundant cluster on e0
+            for j in 0..d {
+                kd[i * d + j] += rng.normal() * 0.02;
+            }
+        }
+        kd[42 * d] = 0.0;
+        kd[42 * d + 3] = 1.0; // distinctive key
+        let qd = rng.normal_vec(4 * d, 1.0);
+        let q = QChunk::new(&qd, 1, 4, d);
+        let k = KCache::new(&kd, 1, t, t, d);
+        let sel = KeyDiff.select(&q, &k, 5, &mut SelectCtx::new(0));
+        assert!(sel.head_indices(0, t).contains(&42));
+    }
+
+    #[test]
+    fn ignores_queries_entirely() {
+        let mut rng = Rng::new(62);
+        let (t, d) = (64usize, 8usize);
+        let kd = rng.normal_vec(t * d, 1.0);
+        let qa = rng.normal_vec(4 * d, 1.0);
+        let qb = rng.normal_vec(4 * d, 1.0);
+        let k = KCache::new(&kd, 1, t, t, d);
+        let sa = KeyDiff.select(&QChunk::new(&qa, 1, 4, d), &k, 8, &mut SelectCtx::new(0));
+        let sb = KeyDiff.select(&QChunk::new(&qb, 1, 4, d), &k, 8, &mut SelectCtx::new(0));
+        assert_eq!(sa, sb);
+    }
+}

@@ -1,0 +1,323 @@
+//! KV-cache selection policies.
+//!
+//! The heart of the reproduction: QUOKA (Algorithm 1 of the paper) plus the
+//! baselines it is evaluated against — SampleAttention, SparQ, Loki,
+//! LessIsMore, SnapKV, KeyDiff and the dense no-op. Every policy implements
+//! [`SelectionPolicy`]: given the chunk's queries and the KV cache for one
+//! layer, return (per KV head) the indices of at most `budget` cache
+//! entries the attention kernel should see.
+//!
+//! All policies run on the host tensor substrate (standard linear algebra —
+//! the paper's portability claim) and tally FLOP/byte counters so Table 4's
+//! complexity comparison can be *measured*, not just asserted.
+
+pub mod quoka;
+pub mod dense;
+pub mod sample_attention;
+pub mod sparq;
+pub mod loki;
+pub mod less_is_more;
+pub mod snapkv;
+pub mod keydiff;
+pub mod tidal_decode;
+pub mod cost;
+
+pub use cost::CostCounter;
+pub use quoka::{Quoka, QuokaConfig, Scoring, QueryAgg};
+
+use crate::util::Rng;
+
+/// Query chunk view, layout `[n_heads, s, d]` row-major.
+#[derive(Clone, Copy)]
+pub struct QChunk<'a> {
+    pub data: &'a [f32],
+    pub n_heads: usize,
+    pub s: usize,
+    pub d: usize,
+}
+
+impl<'a> QChunk<'a> {
+    pub fn new(data: &'a [f32], n_heads: usize, s: usize, d: usize) -> Self {
+        debug_assert_eq!(data.len(), n_heads * s * d);
+        QChunk { data, n_heads, s, d }
+    }
+
+    /// Head `h` as an `[s, d]` slice.
+    #[inline]
+    pub fn head(&self, h: usize) -> &'a [f32] {
+        let n = self.s * self.d;
+        &self.data[h * n..(h + 1) * n]
+    }
+
+    /// Query row `(h, i)`.
+    #[inline]
+    pub fn query(&self, h: usize, i: usize) -> &'a [f32] {
+        let base = (h * self.s + i) * self.d;
+        &self.data[base..base + self.d]
+    }
+}
+
+/// Key-cache view for one layer, layout `[n_heads, capacity, d]` with the
+/// first `t` rows of each head valid.
+#[derive(Clone, Copy)]
+pub struct KCache<'a> {
+    pub data: &'a [f32],
+    pub n_heads: usize,
+    /// Valid (filled) length.
+    pub t: usize,
+    /// Row capacity of each head slab (`>= t`).
+    pub capacity: usize,
+    pub d: usize,
+}
+
+impl<'a> KCache<'a> {
+    pub fn new(data: &'a [f32], n_heads: usize, t: usize, capacity: usize, d: usize) -> Self {
+        debug_assert!(t <= capacity);
+        debug_assert_eq!(data.len(), n_heads * capacity * d);
+        KCache { data, n_heads, t, capacity, d }
+    }
+
+    /// Head `h` as a `[capacity, d]` slice (only `..t` rows valid).
+    #[inline]
+    pub fn head(&self, h: usize) -> &'a [f32] {
+        let n = self.capacity * self.d;
+        &self.data[h * n..(h + 1) * n]
+    }
+
+    /// Key row `(h, i)`.
+    #[inline]
+    pub fn key(&self, h: usize, i: usize) -> &'a [f32] {
+        let base = h * self.capacity * self.d + i * self.d;
+        &self.data[base..base + self.d]
+    }
+}
+
+/// Result of a selection: per-KV-head ascending index lists into the cache.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Selection {
+    /// Keep everything (dense attention, or `t <= budget`).
+    All,
+    /// `indices[kv_head]` — ascending, unique, each `< t`, `len <= budget`.
+    PerHead(Vec<Vec<u32>>),
+}
+
+impl Selection {
+    /// Indices for a head, materializing `All` as `0..t`.
+    pub fn head_indices(&self, h: usize, t: usize) -> Vec<u32> {
+        match self {
+            Selection::All => (0..t as u32).collect(),
+            Selection::PerHead(v) => v[h].clone(),
+        }
+    }
+
+    /// Number of retained entries for head `h`.
+    pub fn head_len(&self, h: usize, t: usize) -> usize {
+        match self {
+            Selection::All => t,
+            Selection::PerHead(v) => v[h].len(),
+        }
+    }
+
+    /// Total retained entries across heads.
+    pub fn total(&self, n_heads: usize, t: usize) -> usize {
+        match self {
+            Selection::All => n_heads * t,
+            Selection::PerHead(v) => v.iter().map(|x| x.len()).sum(),
+        }
+    }
+}
+
+/// Mutable per-call context: scratch space, cost counters, cross-layer
+/// state (LessIsMore index reuse) and a deterministic RNG (SampleAttention).
+pub struct SelectCtx {
+    pub rng: Rng,
+    pub cost: CostCounter,
+    /// Current layer index (0-based) — layer-dependent policies read this.
+    pub layer: usize,
+    /// Total number of layers.
+    pub n_layers: usize,
+    /// Indices shared across layers within the current engine step
+    /// (LessIsMore writes at its selection layers, reads elsewhere).
+    pub shared_indices: Option<Vec<Vec<u32>>>,
+    /// Scratch buffers reused across calls to avoid steady-state allocation.
+    pub scratch: Scratch,
+}
+
+impl SelectCtx {
+    pub fn new(seed: u64) -> SelectCtx {
+        SelectCtx {
+            rng: Rng::new(seed),
+            cost: CostCounter::default(),
+            layer: 0,
+            n_layers: 1,
+            shared_indices: None,
+            scratch: Scratch::default(),
+        }
+    }
+
+    /// Reset per-step state (layer counter + shared indices), keeping
+    /// scratch capacity and cumulative cost counters.
+    pub fn begin_step(&mut self) {
+        self.layer = 0;
+        self.shared_indices = None;
+    }
+}
+
+/// Reusable scratch buffers.
+#[derive(Default)]
+pub struct Scratch {
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    pub c: Vec<f32>,
+    pub idx: Vec<usize>,
+}
+
+impl Scratch {
+    /// Borrow `a` resized to `n` (contents undefined).
+    pub fn buf_a(&mut self, n: usize) -> &mut [f32] {
+        if self.a.len() < n {
+            self.a.resize(n, 0.0);
+        }
+        &mut self.a[..n]
+    }
+    pub fn buf_b(&mut self, n: usize) -> &mut [f32] {
+        if self.b.len() < n {
+            self.b.resize(n, 0.0);
+        }
+        &mut self.b[..n]
+    }
+    pub fn buf_c(&mut self, n: usize) -> &mut [f32] {
+        if self.c.len() < n {
+            self.c.resize(n, 0.0);
+        }
+        &mut self.c[..n]
+    }
+
+    /// Split-borrow `a` and `b` simultaneously.
+    pub fn bufs_ab(&mut self, na: usize, nb: usize) -> (&mut [f32], &mut [f32]) {
+        if self.a.len() < na {
+            self.a.resize(na, 0.0);
+        }
+        if self.b.len() < nb {
+            self.b.resize(nb, 0.0);
+        }
+        (&mut self.a[..na], &mut self.b[..nb])
+    }
+
+    /// Split-borrow `a` and `c` simultaneously.
+    pub fn bufs_ac(&mut self, na: usize, nc: usize) -> (&mut [f32], &mut [f32]) {
+        if self.a.len() < na {
+            self.a.resize(na, 0.0);
+        }
+        if self.c.len() < nc {
+            self.c.resize(nc, 0.0);
+        }
+        (&mut self.a[..na], &mut self.c[..nc])
+    }
+}
+
+/// A KV-cache selection policy.
+pub trait SelectionPolicy: Send + Sync {
+    /// Stable identifier used by CLI flags and bench tables.
+    fn name(&self) -> &'static str;
+
+    /// Select at most `budget` cache indices per KV head for this chunk.
+    ///
+    /// Contract (property-tested in `rust/tests/select_props.rs`):
+    /// - returned indices are unique, ascending, `< k.t`;
+    /// - each head's list has `len == min(budget, k.t)` unless the policy
+    ///   is layer-skipping and reuses shared indices;
+    /// - `Selection::All` may be returned when `k.t <= budget`.
+    fn select(&self, q: &QChunk, k: &KCache, budget: usize, ctx: &mut SelectCtx) -> Selection;
+
+    /// True when this policy is a dense no-op.
+    fn is_dense(&self) -> bool {
+        false
+    }
+}
+
+/// Number of query heads per KV head (GQA group size).
+#[inline]
+pub fn group_size(n_q_heads: usize, n_kv_heads: usize) -> usize {
+    debug_assert_eq!(n_q_heads % n_kv_heads, 0);
+    n_q_heads / n_kv_heads
+}
+
+/// Shared helper: top-`budget` indices of a score vector, returned
+/// ascending (the gather-friendly order that preserves token positions).
+pub fn topk_ascending(scores: &[f32], budget: usize) -> Vec<u32> {
+    crate::tensor::ops::topk_indices_sorted(scores, budget)
+        .into_iter()
+        .map(|i| i as u32)
+        .collect()
+}
+
+/// Construct a policy by name with paper-default hyperparameters. Central
+/// registry so the CLI, benches and tests agree on names.
+pub fn policy_by_name(name: &str) -> anyhow::Result<Box<dyn SelectionPolicy>> {
+    Ok(match name {
+        "dense" | "full" => Box::new(dense::Dense),
+        "quoka" => Box::new(Quoka::default()),
+        "quoka-dot" => Box::new(Quoka::new(QuokaConfig { scoring: Scoring::Dot, ..QuokaConfig::default() })),
+        "quoka-mean" => Box::new(Quoka::new(QuokaConfig { query_agg: QueryAgg::Mean, ..QuokaConfig::default() })),
+        "sample" | "sample_attention" => Box::new(sample_attention::SampleAttention::default()),
+        "sparq" => Box::new(sparq::SparQ::default()),
+        "loki" => Box::new(loki::Loki::default()),
+        "lessismore" | "less_is_more" => Box::new(less_is_more::LessIsMore::default()),
+        "snapkv" => Box::new(snapkv::SnapKv::default()),
+        "keydiff" => Box::new(keydiff::KeyDiff::default()),
+        "tidaldecode" | "tidal_decode" => Box::new(tidal_decode::TidalDecode::default()),
+        other => anyhow::bail!(
+            "unknown selection policy '{other}' (known: dense, quoka, quoka-dot, quoka-mean, \
+             sample, sparq, loki, lessismore, snapkv, keydiff, tidaldecode)"
+        ),
+    })
+}
+
+/// The method roster used by the paper's comparison tables (Table 1 order).
+pub fn comparison_roster() -> Vec<&'static str> {
+    vec!["snapkv", "keydiff", "lessismore", "loki", "sparq", "sample", "quoka"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_knows_all_methods() {
+        for name in comparison_roster() {
+            assert!(policy_by_name(name).is_ok(), "{name}");
+        }
+        assert!(policy_by_name("dense").unwrap().is_dense());
+        assert!(policy_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn selection_accessors() {
+        let s = Selection::PerHead(vec![vec![0, 2], vec![1]]);
+        assert_eq!(s.head_indices(0, 5), vec![0, 2]);
+        assert_eq!(s.head_len(1, 5), 1);
+        assert_eq!(s.total(2, 5), 3);
+        let all = Selection::All;
+        assert_eq!(all.head_indices(0, 3), vec![0, 1, 2]);
+        assert_eq!(all.total(2, 3), 6);
+    }
+
+    #[test]
+    fn views_index_correctly() {
+        let data: Vec<f32> = (0..2 * 3 * 4).map(|i| i as f32).collect();
+        let q = QChunk::new(&data, 2, 3, 4);
+        assert_eq!(q.query(1, 2)[0], (1 * 3 + 2) as f32 * 4.0);
+        let k = KCache::new(&data, 2, 2, 3, 4);
+        assert_eq!(k.key(1, 1)[0], (1 * 3 + 1) as f32 * 4.0);
+    }
+
+    #[test]
+    fn scratch_reuses_capacity() {
+        let mut s = Scratch::default();
+        s.buf_a(100);
+        let p1 = s.a.as_ptr();
+        s.buf_a(50);
+        assert_eq!(p1, s.a.as_ptr());
+    }
+}

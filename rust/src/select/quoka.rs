@@ -1,0 +1,430 @@
+//! QUOKA: Query-oriented KV selection (paper Algorithm 1).
+//!
+//! Three stages per chunk:
+//! 1. **Query subselection** — when the chunk holds more than `N_Q` queries,
+//!    rank each query `q` by `S_q = -CosSim(M_Q, q)` (angular distance from
+//!    the per-head mean query `M_Q`) and keep the top `N_Q`. Theorem 1 shows
+//!    these are exactly the queries that can attend strongly to keys the
+//!    mean query ignores.
+//! 2. **Cosine-similarity scoring with GQA pre-aggregation** — normalize the
+//!    retained queries and the keys; *average the normalized queries across
+//!    each KV group first* (valid because the mean commutes with `Q̄Kᵀ`),
+//!    then score `S = Q̄Kᵀ ∈ [N_Q, T]` per KV head. Pre-aggregation cuts
+//!    both compute and memory by the group size versus aggregating scores.
+//! 3. **Max aggregation + top-k** — `Ŝ = max over queries` (preserving rare
+//!    but strong query–key interactions; Table 10), then keep the top
+//!    `B_SA` keys per KV head.
+//!
+//! The ablation switches ([`Scoring::Dot`], [`QueryAgg::Mean`]) reproduce
+//! Tables 9 and 10.
+
+use super::{group_size, topk_ascending, KCache, QChunk, SelectCtx, Selection, SelectionPolicy};
+use crate::tensor::ops::{dot, l2_norm, mean_rows, topk_indices};
+
+struct SyncPtr(*mut f32);
+unsafe impl Sync for SyncPtr {}
+unsafe impl Send for SyncPtr {}
+
+/// Key-relevance scoring function (Table 9 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scoring {
+    /// Cosine similarity (the QUOKA default): bounded, scale-free, stable
+    /// under aggregation.
+    Cosine,
+    /// Raw dot product `QKᵀ` (what most prior query-dependent methods use).
+    Dot,
+}
+
+/// Aggregation across the (subselected) query axis (Table 10 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryAgg {
+    /// Maximum over queries (the QUOKA default) — keeps heavy-tailed
+    /// outlier interactions visible.
+    Max,
+    /// Mean over queries — obscures rare but important interactions.
+    Mean,
+}
+
+/// QUOKA hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct QuokaConfig {
+    /// Max queries retained per head (`N_Q`); paper default 16.
+    pub n_q: usize,
+    pub scoring: Scoring,
+    pub query_agg: QueryAgg,
+}
+
+impl Default for QuokaConfig {
+    fn default() -> Self {
+        QuokaConfig { n_q: 16, scoring: Scoring::Cosine, query_agg: QueryAgg::Max }
+    }
+}
+
+/// The QUOKA selection policy.
+#[derive(Clone, Debug, Default)]
+pub struct Quoka {
+    pub cfg: QuokaConfig,
+}
+
+impl Quoka {
+    pub fn new(cfg: QuokaConfig) -> Quoka {
+        Quoka { cfg }
+    }
+
+    /// Stage 1: indices of the `n_q` queries of head `h` with the *lowest*
+    /// cosine similarity to the head's mean query.
+    fn subselect_queries(&self, q: &QChunk, h: usize, ctx: &mut SelectCtx) -> Vec<usize> {
+        let (s, d) = (q.s, q.d);
+        if s <= self.cfg.n_q {
+            return (0..s).collect();
+        }
+        let head = q.head(h);
+        let mean = ctx.scratch.buf_c(d);
+        mean_rows(head, s, d, mean);
+        let mean_norm = l2_norm(mean);
+        ctx.cost.add_flops((2 * s * d) as u64); // mean + norms
+        // S_q = -CosSim(M_Q, q_i); rank descending by S_q == ascending CosSim.
+        let neg_sims: Vec<f32> = (0..s)
+            .map(|i| {
+                let qi = &head[i * d..(i + 1) * d];
+                let n = l2_norm(qi);
+                if n == 0.0 || mean_norm == 0.0 {
+                    0.0
+                } else {
+                    -dot(qi, mean) / (n * mean_norm)
+                }
+            })
+            .collect();
+        ctx.cost.add_flops((2 * s * d) as u64);
+        // Rank order (most dissimilar first), NOT index order: Alg. 1's
+        // group pre-aggregation pairs retained queries across the KV
+        // group's heads by this rank, which keeps the pairing invariant to
+        // query order within the chunk.
+        topk_indices(&neg_sims, self.cfg.n_q)
+    }
+}
+
+impl SelectionPolicy for Quoka {
+    fn name(&self) -> &'static str {
+        match (self.cfg.scoring, self.cfg.query_agg) {
+            (Scoring::Cosine, QueryAgg::Max) => "quoka",
+            (Scoring::Dot, _) => "quoka-dot",
+            (Scoring::Cosine, QueryAgg::Mean) => "quoka-mean",
+        }
+    }
+
+    fn select(&self, q: &QChunk, k: &KCache, budget: usize, ctx: &mut SelectCtx) -> Selection {
+        let t = k.t;
+        if t <= budget {
+            return Selection::All;
+        }
+        let d = q.d;
+        let n_kv = k.n_heads;
+        let g = group_size(q.n_heads, n_kv);
+        let n_q_eff = self.cfg.n_q.min(q.s);
+
+        let mut per_head = Vec::with_capacity(n_kv);
+        for kv in 0..n_kv {
+            // ---- Stage 1 + 2a: per Q-head subselection, normalization and
+            // pre-aggregation of normalized queries over the KV group.
+            // qbar layout: [n_q_eff, d].
+            let mut qbar = vec![0.0f32; n_q_eff * d];
+            for gq in 0..g {
+                let h = kv * g + gq;
+                let keep = self.subselect_queries(q, h, ctx);
+                debug_assert_eq!(keep.len(), n_q_eff);
+                let head = q.head(h);
+                for (slot, &qi) in keep.iter().enumerate() {
+                    let row = &head[qi * d..(qi + 1) * d];
+                    match self.cfg.scoring {
+                        Scoring::Cosine => {
+                            // Normalize before averaging: the group mean of
+                            // unit queries, dotted with unit keys, equals the
+                            // group-mean cosine score (pre-aggregation).
+                            let n = l2_norm(row);
+                            let inv = if n > 0.0 { 1.0 / (n * g as f32) } else { 0.0 };
+                            for (o, &v) in qbar[slot * d..(slot + 1) * d].iter_mut().zip(row) {
+                                *o += v * inv;
+                            }
+                        }
+                        Scoring::Dot => {
+                            let inv = 1.0 / g as f32;
+                            for (o, &v) in qbar[slot * d..(slot + 1) * d].iter_mut().zip(row) {
+                                *o += v * inv;
+                            }
+                        }
+                    }
+                }
+            }
+            ctx.cost.add_flops((g * n_q_eff * 2 * d) as u64);
+            ctx.cost.add_bytes((n_q_eff * d * 4) as u64);
+
+            // ---- Stage 2b: S = Q̄ Kᵀ over the valid cache rows, with keys
+            // normalized for cosine scoring.
+            // ---- Stage 3: aggregate over the query axis into score[t].
+            let khead = k.head(kv);
+            let scores = ctx.scratch.buf_a(t);
+            // The key scan parallelizes over disjoint tiles of the score
+            // vector (§Perf: the scan is the selection's only O(T) term).
+            let threads = if t * n_q_eff * d > 1 << 21 {
+                crate::util::threadpool::default_workers()
+            } else {
+                1
+            };
+            const TILE: usize = 2048;
+            let n_tiles = t.div_ceil(TILE);
+            let scores_ptr = SyncPtr(scores.as_mut_ptr());
+            let sp = &scores_ptr;
+            let scoring = self.cfg.scoring;
+            let agg = self.cfg.query_agg;
+            let qbar_ref = &qbar;
+            crate::util::threadpool::parallel_for(n_tiles, threads, |tile| {
+                let lo = tile * TILE;
+                let hi = (lo + TILE).min(t);
+                // SAFETY: tiles write disjoint score ranges.
+                let out = unsafe { std::slice::from_raw_parts_mut(sp.0.add(lo), hi - lo) };
+                for (o, ti) in (lo..hi).enumerate() {
+                    let key = &khead[ti * d..(ti + 1) * d];
+                    let kinv = match scoring {
+                        Scoring::Cosine => {
+                            let n = l2_norm(key);
+                            if n > 0.0 {
+                                1.0 / n
+                            } else {
+                                0.0
+                            }
+                        }
+                        Scoring::Dot => 1.0,
+                    };
+                    out[o] = match agg {
+                        QueryAgg::Max => {
+                            let mut best = f32::NEG_INFINITY;
+                            for nq in 0..n_q_eff {
+                                let s = dot(&qbar_ref[nq * d..(nq + 1) * d], key) * kinv;
+                                if s > best {
+                                    best = s;
+                                }
+                            }
+                            best
+                        }
+                        QueryAgg::Mean => {
+                            let mut acc = 0.0;
+                            for nq in 0..n_q_eff {
+                                acc += dot(&qbar_ref[nq * d..(nq + 1) * d], key) * kinv;
+                            }
+                            acc / n_q_eff as f32
+                        }
+                    };
+                }
+            });
+            ctx.cost.add_flops((t * n_q_eff * 2 * d) as u64);
+            ctx.cost.add_bytes((t * d * 4) as u64);
+
+            per_head.push(topk_ascending(scores, budget));
+        }
+        Selection::PerHead(per_head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Build a toy geometry where the ground truth is known:
+    /// - most queries cluster around +e0 (near the mean),
+    /// - one "retrieval" query points at +e1 (dissimilar from the mean),
+    /// - most keys cluster at -e0 (ignored by everyone),
+    /// - one "needle" key points at +e1 (only the retrieval query wants it).
+    fn toy(d: usize, s: usize, t: usize, needle: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(99);
+        let mut q = vec![0.0; s * d];
+        for i in 0..s {
+            q[i * d] = 1.0; // cluster on e0
+            for j in 0..d {
+                q[i * d + j] += rng.normal() * 0.05;
+            }
+        }
+        // Last query is the retrieval query on e1.
+        let last = s - 1;
+        q[last * d] = 0.0;
+        q[last * d + 1] = 1.0;
+        let mut k = vec![0.0; t * d];
+        for i in 0..t {
+            k[i * d] = -1.0; // anti-aligned cluster
+            for j in 0..d {
+                k[i * d + j] += rng.normal() * 0.05;
+            }
+        }
+        k[needle * d] = 0.0;
+        k[needle * d + 1] = 1.0; // the needle aligns with the retrieval query
+        (q, k)
+    }
+
+    #[test]
+    fn finds_planted_needle() {
+        let (d, s, t, needle) = (16usize, 32usize, 256usize, 137usize);
+        let (qd, kd) = toy(d, s, t, needle);
+        let q = QChunk::new(&qd, 1, s, d);
+        let k = KCache::new(&kd, 1, t, t, d);
+        let mut ctx = SelectCtx::new(0);
+        let quoka = Quoka::default();
+        let sel = quoka.select(&q, &k, 16, &mut ctx);
+        let idx = sel.head_indices(0, t);
+        assert!(idx.contains(&(needle as u32)), "needle {needle} not in {idx:?}");
+    }
+
+    #[test]
+    fn mean_aggregation_misses_needle_when_max_finds_it() {
+        // With many near-mean queries and one retrieval query, the mean
+        // over *all* scores dilutes the needle; max keeps it. This is the
+        // paper's Table 10 mechanism in miniature.
+        let (d, s, t, needle) = (16usize, 64usize, 512usize, 300usize);
+        let (qd, mut kd) = toy(d, s, t, needle);
+        // Distractor keys partially aligned with the query cluster: every
+        // near-mean query gives them cos ≈ 0.89, so their MEAN score beats
+        // the needle's (≈ 1/64) while their MAX (0.89) stays below the
+        // needle's (≈ 0.99 from the retrieval query).
+        for i in 0..20 {
+            for j in 0..d {
+                kd[i * d + j] = 0.0;
+            }
+            kd[i * d] = 1.0;
+            kd[i * d + 2] = 0.5;
+        }
+        let q = QChunk::new(&qd, 1, s, d);
+        let k = KCache::new(&kd, 1, t, t, d);
+
+        // Disable query subselection (n_q = s) to isolate the aggregation
+        // axis: with subselection on, even the mean variant can win.
+        let mut ctx = SelectCtx::new(0);
+        let maxv = Quoka::new(QuokaConfig { n_q: s, ..QuokaConfig::default() });
+        let sel_max = maxv.select(&q, &k, 8, &mut ctx);
+        assert!(sel_max.head_indices(0, t).contains(&(needle as u32)));
+
+        let meanv = Quoka::new(QuokaConfig { n_q: s, query_agg: QueryAgg::Mean, ..QuokaConfig::default() });
+        let sel_mean = meanv.select(&q, &k, 8, &mut ctx);
+        assert!(
+            !sel_mean.head_indices(0, t).contains(&(needle as u32)),
+            "mean aggregation over 64 near-mean queries should dilute a single needle"
+        );
+    }
+
+    #[test]
+    fn query_subselection_keeps_dissimilar_query() {
+        let (d, s, _t, _n) = (16usize, 32usize, 64usize, 0usize);
+        let (qd, _) = toy(d, s, 64, 0);
+        let q = QChunk::new(&qd, 1, s, d);
+        let quoka = Quoka::new(QuokaConfig { n_q: 4, ..QuokaConfig::default() });
+        let mut ctx = SelectCtx::new(0);
+        let keep = quoka.subselect_queries(&q, 0, &mut ctx);
+        assert_eq!(keep.len(), 4);
+        assert!(keep.contains(&(s - 1)), "the e1 retrieval query must rank most dissimilar");
+    }
+
+    #[test]
+    fn returns_all_under_budget() {
+        let mut rng = Rng::new(5);
+        let (d, s, t) = (8usize, 4usize, 10usize);
+        let qd = rng.normal_vec(s * d, 1.0);
+        let kd = rng.normal_vec(t * d, 1.0);
+        let q = QChunk::new(&qd, 1, s, d);
+        let k = KCache::new(&kd, 1, t, t, d);
+        let sel = Quoka::default().select(&q, &k, 32, &mut SelectCtx::new(0));
+        assert_eq!(sel, Selection::All);
+    }
+
+    #[test]
+    fn respects_budget_and_order() {
+        let mut rng = Rng::new(6);
+        let (d, s, t, nh, nkv) = (8usize, 16usize, 128usize, 4usize, 2usize);
+        let qd = rng.normal_vec(nh * s * d, 1.0);
+        let kd = rng.normal_vec(nkv * t * d, 1.0);
+        let q = QChunk::new(&qd, nh, s, d);
+        let k = KCache::new(&kd, nkv, t, t, d);
+        let sel = Quoka::default().select(&q, &k, 16, &mut SelectCtx::new(0));
+        if let Selection::PerHead(v) = sel {
+            assert_eq!(v.len(), nkv);
+            for head in v {
+                assert_eq!(head.len(), 16);
+                for w in head.windows(2) {
+                    assert!(w[0] < w[1]);
+                }
+                assert!(head.iter().all(|&i| (i as usize) < t));
+            }
+        } else {
+            panic!("expected PerHead");
+        }
+    }
+
+    #[test]
+    fn gqa_preaggregation_equals_postaggregation() {
+        // The paper's pre-aggregation claim: averaging normalized queries
+        // across the KV group before QKᵀ equals averaging the per-head
+        // cosine score matrices. Verify numerically on random data by
+        // comparing selections with group size 2 vs an explicit
+        // post-aggregated construction.
+        let mut rng = Rng::new(7);
+        let (d, s, t, g) = (8usize, 4usize, 96usize, 2usize);
+        let qd = rng.normal_vec(g * s * d, 1.0);
+        let kd = rng.normal_vec(t * d, 1.0);
+        let q = QChunk::new(&qd, g, s, d);
+        let k = KCache::new(&kd, 1, t, t, d);
+        let quoka = Quoka::new(QuokaConfig { n_q: s, ..QuokaConfig::default() });
+        let sel = quoka.select(&q, &k, 8, &mut SelectCtx::new(0));
+
+        // Explicit post-aggregation oracle.
+        let mut scores = vec![f32::NEG_INFINITY; t];
+        for ti in 0..t {
+            for qi in 0..s {
+                let mut acc = 0.0;
+                for h in 0..g {
+                    acc += crate::tensor::ops::cosine(q.query(h, qi), k.key(0, ti));
+                }
+                let v = acc / g as f32;
+                if v > scores[ti] {
+                    scores[ti] = v;
+                }
+            }
+        }
+        let want = topk_ascending(&scores, 8);
+        assert_eq!(sel.head_indices(0, t), want);
+    }
+
+    #[test]
+    fn cosine_beats_dot_under_key_norm_attack() {
+        // Plant a needle with a *small-norm* key while an irrelevant key has
+        // a huge norm: dot scoring chases the big norm, cosine does not.
+        let (d, s, t, needle, loud) = (8usize, 4usize, 64usize, 20usize, 40usize);
+        let mut rng = Rng::new(8);
+        let mut qd = vec![0.0; s * d];
+        for i in 0..s {
+            qd[i * d + 1] = 1.0;
+            for j in 0..d {
+                qd[i * d + j] += rng.normal() * 0.01;
+            }
+        }
+        let mut kd = vec![0.0; t * d];
+        for i in 0..t {
+            kd[i * d] = -1.0;
+            for j in 0..d {
+                kd[i * d + j] += rng.normal() * 0.01;
+            }
+        }
+        kd[needle * d] = 0.0;
+        kd[needle * d + 1] = 0.2; // perfectly aligned but small norm
+        kd[loud * d] = -40.0; // huge norm, partial alignment: cos≈0.6 but
+        kd[loud * d + 1] = 30.0; // dot ≈ 30 ≫ the needle's 0.2
+        let q = QChunk::new(&qd, 1, s, d);
+        let k = KCache::new(&kd, 1, t, t, d);
+        let cos_sel = Quoka::default().select(&q, &k, 4, &mut SelectCtx::new(0));
+        assert!(cos_sel.head_indices(0, t).contains(&(needle as u32)));
+        let dot_sel = Quoka::new(QuokaConfig { scoring: Scoring::Dot, ..QuokaConfig::default() })
+            .select(&q, &k, 1, &mut SelectCtx::new(0));
+        // Under dot scoring, the needle cannot be the single top key
+        // because |needle| is tiny; cosine keeps it on top.
+        let cos_top = Quoka::default().select(&q, &k, 1, &mut SelectCtx::new(0));
+        assert_eq!(cos_top.head_indices(0, t), vec![needle as u32]);
+        assert_ne!(dot_sel.head_indices(0, t), vec![needle as u32]);
+    }
+}

@@ -1,0 +1,132 @@
+//! SampleAttention baseline (Zhu et al., 2024).
+//!
+//! Targets prefill but treats the chunk's queries *homogeneously*: it
+//! uniformly samples `N_Q` queries per head, computes real softmax attention
+//! logits against the cache, then **averages** the resulting weights across
+//! queries and across the KV group's heads before the top-k. Because the
+//! logits are computed per Q head (before aggregation), both its runtime and
+//! memory carry the full `n_Q` factor — the contrast QUOKA's pre-aggregation
+//! removes (paper Table 4).
+
+use super::{group_size, topk_ascending, KCache, QChunk, SelectCtx, Selection, SelectionPolicy};
+use crate::tensor::ops::{dot, softmax};
+
+/// Uniform-query-sampling selection.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleAttention {
+    /// Queries sampled per head; paper default 16.
+    pub n_q: usize,
+}
+
+impl Default for SampleAttention {
+    fn default() -> Self {
+        SampleAttention { n_q: 16 }
+    }
+}
+
+impl SelectionPolicy for SampleAttention {
+    fn name(&self) -> &'static str {
+        "sample"
+    }
+
+    fn select(&self, q: &QChunk, k: &KCache, budget: usize, ctx: &mut SelectCtx) -> Selection {
+        let t = k.t;
+        if t <= budget {
+            return Selection::All;
+        }
+        let d = q.d;
+        let scale = 1.0 / (d as f32).sqrt();
+        let n_kv = k.n_heads;
+        let g = group_size(q.n_heads, n_kv);
+        let n_q_eff = self.n_q.min(q.s);
+
+        // ONE uniform sample of query positions, shared across all heads —
+        // the "treats queries homogeneously" design the paper contrasts
+        // with QUOKA's per-head geometric ranking.
+        let sample = ctx.rng.sample_indices(q.s, n_q_eff);
+
+        let mut per_head = Vec::with_capacity(n_kv);
+        for kv in 0..n_kv {
+            let khead = k.head(kv);
+            let agg = ctx.scratch.buf_a(t);
+            agg.iter_mut().for_each(|v| *v = 0.0);
+            let mut row = vec![0.0f32; t];
+            for gq in 0..g {
+                let h = kv * g + gq;
+                for &qi in &sample {
+                    let qrow = q.query(h, qi);
+                    for ti in 0..t {
+                        row[ti] = dot(qrow, &khead[ti * d..(ti + 1) * d]) * scale;
+                    }
+                    softmax(&mut row);
+                    for ti in 0..t {
+                        agg[ti] += row[ti];
+                    }
+                }
+                ctx.cost.add_flops((n_q_eff * t * (2 * d + 4)) as u64);
+                // Memory: per-Q-head logits materialized (the n_Q factor).
+                ctx.cost.add_bytes((n_q_eff * t * 4) as u64);
+            }
+            per_head.push(topk_ascending(agg, budget));
+        }
+        Selection::PerHead(per_head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn selects_budget_many_valid_indices() {
+        let mut rng = Rng::new(2);
+        let (nh, nkv, s, t, d) = (4usize, 2usize, 32usize, 200usize, 8usize);
+        let qd = rng.normal_vec(nh * s * d, 1.0);
+        let kd = rng.normal_vec(nkv * t * d, 1.0);
+        let q = QChunk::new(&qd, nh, s, d);
+        let k = KCache::new(&kd, nkv, t, t, d);
+        let sel = SampleAttention::default().select(&q, &k, 24, &mut SelectCtx::new(3));
+        for h in 0..nkv {
+            let idx = sel.head_indices(h, t);
+            assert_eq!(idx.len(), 24);
+            for w in idx.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn finds_key_all_queries_want() {
+        // A key aligned with the *mean* query direction is found easily by
+        // mean aggregation (it is the outlier-needle case where this
+        // baseline breaks; see quoka tests).
+        let (s, t, d, hot) = (16usize, 128usize, 8usize, 77usize);
+        let mut rng = Rng::new(4);
+        let mut qd = vec![0.0; s * d];
+        for i in 0..s {
+            qd[i * d] = 1.0;
+            for j in 0..d {
+                qd[i * d + j] += rng.normal() * 0.05;
+            }
+        }
+        let mut kd = rng.normal_vec(t * d, 0.05);
+        kd[hot * d] = 5.0; // aligned with every query
+        let q = QChunk::new(&qd, 1, s, d);
+        let k = KCache::new(&kd, 1, t, t, d);
+        let sel = SampleAttention::default().select(&q, &k, 8, &mut SelectCtx::new(5));
+        assert!(sel.head_indices(0, t).contains(&(hot as u32)));
+    }
+
+    #[test]
+    fn deterministic_given_ctx_seed() {
+        let mut rng = Rng::new(6);
+        let qd = rng.normal_vec(2 * 32 * 8, 1.0);
+        let kd = rng.normal_vec(1 * 100 * 8, 1.0);
+        let q = QChunk::new(&qd, 2, 32, 8);
+        let k = KCache::new(&kd, 1, 100, 100, 8);
+        let a = SampleAttention::default().select(&q, &k, 10, &mut SelectCtx::new(42));
+        let b = SampleAttention::default().select(&q, &k, 10, &mut SelectCtx::new(42));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,147 @@
+//! SnapKV baseline (Li et al., 2024).
+//!
+//! Built for generation-time cache *eviction*: score each cached key by the
+//! softmax attention mass it receives from an **observation window** (the
+//! last `window` queries of the chunk), pool the scores over a small kernel
+//! along the key axis (cluster retention), and keep the top `B_SA`. Queries
+//! outside the window are ignored — the homogeneous-query assumption QUOKA
+//! drops.
+
+use super::{group_size, topk_ascending, KCache, QChunk, SelectCtx, Selection, SelectionPolicy};
+use crate::tensor::ops::{dot, softmax};
+
+/// Observation-window attention-mass selection.
+#[derive(Clone, Copy, Debug)]
+pub struct SnapKv {
+    /// Observation window (queries at the chunk tail).
+    pub window: usize,
+    /// Max-pool kernel width along the key axis.
+    pub pool: usize,
+}
+
+impl Default for SnapKv {
+    fn default() -> Self {
+        SnapKv { window: 16, pool: 7 }
+    }
+}
+
+impl SelectionPolicy for SnapKv {
+    fn name(&self) -> &'static str {
+        "snapkv"
+    }
+
+    fn select(&self, q: &QChunk, k: &KCache, budget: usize, ctx: &mut SelectCtx) -> Selection {
+        let t = k.t;
+        if t <= budget {
+            return Selection::All;
+        }
+        let d = q.d;
+        let scale = 1.0 / (d as f32).sqrt();
+        let n_kv = k.n_heads;
+        let g = group_size(q.n_heads, n_kv);
+        let w = self.window.min(q.s);
+        let w_start = q.s - w;
+
+        let mut per_head = Vec::with_capacity(n_kv);
+        let mut row = vec![0.0f32; t];
+        for kv in 0..n_kv {
+            let khead = k.head(kv);
+            let (agg, pooled) = ctx.scratch.bufs_ab(t, t);
+            agg.iter_mut().for_each(|v| *v = 0.0);
+            for gq in 0..g {
+                let h = kv * g + gq;
+                for i in w_start..q.s {
+                    let qrow = q.query(h, i);
+                    for ti in 0..t {
+                        row[ti] = dot(qrow, &khead[ti * d..(ti + 1) * d]) * scale;
+                    }
+                    softmax(&mut row);
+                    for ti in 0..t {
+                        agg[ti] += row[ti];
+                    }
+                }
+                ctx.cost.add_flops((w * t * (2 * d + 4)) as u64);
+                ctx.cost.add_bytes((w * t * 4) as u64);
+            }
+            // Max-pool along the key axis: a strong key promotes its
+            // neighbourhood (SnapKV's clustering trick).
+            let half = self.pool / 2;
+            for ti in 0..t {
+                let lo = ti.saturating_sub(half);
+                let hi = (ti + half + 1).min(t);
+                let mut m = f32::NEG_INFINITY;
+                for tj in lo..hi {
+                    if agg[tj] > m {
+                        m = agg[tj];
+                    }
+                }
+                pooled[ti] = m;
+            }
+            per_head.push(topk_ascending(pooled, budget));
+        }
+        Selection::PerHead(per_head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn window_queries_drive_selection() {
+        // A key matched only by EARLY queries (outside the window) should
+        // lose to a key matched by the LAST query.
+        let (s, t, d) = (32usize, 128usize, 8usize);
+        let mut rng = Rng::new(51);
+        let mut qd = rng.normal_vec(s * d, 0.05);
+        // early query 0 points at e0; last query points at e1
+        qd[0] = 3.0;
+        qd[(s - 1) * d + 1] = 3.0;
+        let mut kd = rng.normal_vec(t * d, 0.05);
+        kd[30 * d] = 4.0; // matches early query only
+        kd[90 * d + 1] = 4.0; // matches window query
+        let q = QChunk::new(&qd, 1, s, d);
+        let k = KCache::new(&kd, 1, t, t, d);
+        let snap = SnapKv { window: 4, pool: 1 };
+        let sel = snap.select(&q, &k, 4, &mut SelectCtx::new(0));
+        let idx = sel.head_indices(0, t);
+        assert!(idx.contains(&90), "window-matched key missing: {idx:?}");
+        assert!(!idx.contains(&30), "out-of-window key should be missed by SnapKV");
+    }
+
+    #[test]
+    fn pooling_promotes_neighbourhood() {
+        let (s, t, d) = (8usize, 64usize, 8usize);
+        let mut rng = Rng::new(52);
+        let mut qd = rng.normal_vec(s * d, 0.02);
+        for i in 0..s {
+            qd[i * d] = 1.0;
+        }
+        let mut kd = rng.normal_vec(t * d, 0.02);
+        kd[40 * d] = 5.0;
+        let q = QChunk::new(&qd, 1, s, d);
+        let k = KCache::new(&kd, 1, t, t, d);
+        let sel = SnapKv { window: 8, pool: 7 }.select(&q, &k, 7, &mut SelectCtx::new(0));
+        let idx = sel.head_indices(0, t);
+        // The hot key and its pooled neighbours should be present.
+        assert!(idx.contains(&40));
+        assert!(idx.contains(&39) || idx.contains(&41), "{idx:?}");
+    }
+
+    #[test]
+    fn contract_holds() {
+        let mut rng = Rng::new(53);
+        let (nh, nkv, s, t, d) = (4usize, 2usize, 16usize, 100usize, 8usize);
+        let qd = rng.normal_vec(nh * s * d, 1.0);
+        let kd = rng.normal_vec(nkv * t * d, 1.0);
+        let q = QChunk::new(&qd, nh, s, d);
+        let k = KCache::new(&kd, nkv, t, t, d);
+        let sel = SnapKv::default().select(&q, &k, 12, &mut SelectCtx::new(0));
+        for h in 0..nkv {
+            let idx = sel.head_indices(h, t);
+            assert_eq!(idx.len(), 12);
+            assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! SparQ baseline (Ribar et al., 2024).
+//!
+//! Bandwidth-oriented: pick the `r` channels where the chunk's queries carry
+//! the most mass (sum of |q| per channel), compute *approximate* attention
+//! logits using only those channels of Q and K, softmax, and mean-aggregate
+//! over queries and the KV group. Designed for single-query decode; under
+//! multi-query prefill the channel ranking blends all queries together.
+
+use super::{group_size, topk_ascending, KCache, QChunk, SelectCtx, Selection, SelectionPolicy};
+use crate::tensor::ops::{softmax, topk_indices};
+
+/// Channel-subselecting approximate-score policy.
+#[derive(Clone, Copy, Debug)]
+pub struct SparQ {
+    /// Channels retained (`d_l < d`). The paper keeps half the head dim
+    /// (64 of 128); our heads are `d = 64`, so the default is 32.
+    pub r: usize,
+}
+
+impl Default for SparQ {
+    fn default() -> Self {
+        SparQ { r: 32 }
+    }
+}
+
+impl SelectionPolicy for SparQ {
+    fn name(&self) -> &'static str {
+        "sparq"
+    }
+
+    fn select(&self, q: &QChunk, k: &KCache, budget: usize, ctx: &mut SelectCtx) -> Selection {
+        let t = k.t;
+        if t <= budget {
+            return Selection::All;
+        }
+        let d = q.d;
+        let r = self.r.min(d);
+        let n_kv = k.n_heads;
+        let g = group_size(q.n_heads, n_kv);
+
+        let mut per_head = Vec::with_capacity(n_kv);
+        let mut row = vec![0.0f32; t];
+        for kv in 0..n_kv {
+            let khead = k.head(kv);
+            let agg = ctx.scratch.buf_a(t);
+            agg.iter_mut().for_each(|v| *v = 0.0);
+            for gq in 0..g {
+                let h = kv * g + gq;
+                // Channel importance: sum_i |q_i[c]| over the chunk.
+                let mut chan = vec![0.0f32; d];
+                for i in 0..q.s {
+                    let qrow = q.query(h, i);
+                    for c in 0..d {
+                        chan[c] += qrow[c].abs();
+                    }
+                }
+                let keep = topk_indices(&chan, r);
+                ctx.cost.add_flops((q.s * d) as u64);
+                // Approximate logits over the reduced channels. SparQ scales
+                // by sqrt(d * mass_kept/mass_total) — we use sqrt(r) which
+                // preserves ranking (softmax is monotone in scale per row).
+                let scale = 1.0 / (r as f32).sqrt();
+                for i in 0..q.s {
+                    let qrow = q.query(h, i);
+                    for ti in 0..t {
+                        let key = &khead[ti * d..(ti + 1) * d];
+                        let mut s = 0.0;
+                        for &c in &keep {
+                            s += qrow[c] * key[c];
+                        }
+                        row[ti] = s * scale;
+                    }
+                    softmax(&mut row);
+                    for ti in 0..t {
+                        agg[ti] += row[ti];
+                    }
+                }
+                ctx.cost.add_flops((q.s * t * (2 * r + 4)) as u64);
+                ctx.cost.add_bytes((q.s * t * 4) as u64);
+            }
+            per_head.push(topk_ascending(agg, budget));
+        }
+        Selection::PerHead(per_head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn respects_contract() {
+        let mut rng = Rng::new(21);
+        let (nh, nkv, s, t, d) = (2usize, 1usize, 8usize, 120usize, 16usize);
+        let qd = rng.normal_vec(nh * s * d, 1.0);
+        let kd = rng.normal_vec(nkv * t * d, 1.0);
+        let q = QChunk::new(&qd, nh, s, d);
+        let k = KCache::new(&kd, nkv, t, t, d);
+        let sel = SparQ { r: 4 }.select(&q, &k, 10, &mut SelectCtx::new(0));
+        let idx = sel.head_indices(0, t);
+        assert_eq!(idx.len(), 10);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn channel_pruning_finds_strong_key_on_kept_channel() {
+        // Queries concentrate on channel 0; a key spikes there too — the
+        // reduced-channel logits must still surface it.
+        let (s, t, d, hot) = (8usize, 64usize, 16usize, 31usize);
+        let mut rng = Rng::new(22);
+        let mut qd = rng.normal_vec(s * d, 0.05);
+        for i in 0..s {
+            qd[i * d] = 2.0;
+        }
+        let mut kd = rng.normal_vec(t * d, 0.05);
+        kd[hot * d] = 4.0;
+        let q = QChunk::new(&qd, 1, s, d);
+        let k = KCache::new(&kd, 1, t, t, d);
+        let sel = SparQ { r: 2 }.select(&q, &k, 6, &mut SelectCtx::new(0));
+        assert!(sel.head_indices(0, t).contains(&(hot as u32)));
+    }
+
+    #[test]
+    fn r_clamped_to_head_dim() {
+        let mut rng = Rng::new(23);
+        let qd = rng.normal_vec(1 * 4 * 8, 1.0);
+        let kd = rng.normal_vec(1 * 50 * 8, 1.0);
+        let q = QChunk::new(&qd, 1, 4, 8);
+        let k = KCache::new(&kd, 1, 50, 50, 8);
+        // r=64 > d=8 must not panic.
+        let sel = SparQ::default().select(&q, &k, 5, &mut SelectCtx::new(0));
+        assert_eq!(sel.head_indices(0, 50).len(), 5);
+    }
+}

@@ -1,0 +1,145 @@
+//! TidalDecode baseline (Yang et al., 2024b) — position-persistent sparse
+//! attention, as used in the paper's LongBench comparison (Table 6).
+//!
+//! A few early *full* layers, then one re-selection layer computes token
+//! positions from real attention scores; every later layer reuses those
+//! positions verbatim (the "position persistent" idea — selection cost is
+//! paid once per step, not per layer). Designed for decode; under chunked
+//! prefill the persistent positions inherit the re-selection layer's
+//! homogeneous query treatment.
+
+use super::{group_size, topk_ascending, KCache, QChunk, SelectCtx, Selection, SelectionPolicy};
+use crate::tensor::ops::{dot, softmax};
+
+/// Position-persistent selection.
+#[derive(Clone, Copy, Debug)]
+pub struct TidalDecode {
+    /// Layers `< full_layers` run dense.
+    pub full_layers: usize,
+    /// The layer that computes the persistent positions.
+    pub select_layer: usize,
+    /// Queries scored at the selection layer (last-window, like decode).
+    pub obs_window: usize,
+}
+
+impl Default for TidalDecode {
+    fn default() -> Self {
+        TidalDecode { full_layers: 2, select_layer: 2, obs_window: 16 }
+    }
+}
+
+impl SelectionPolicy for TidalDecode {
+    fn name(&self) -> &'static str {
+        "tidaldecode"
+    }
+
+    fn select(&self, q: &QChunk, k: &KCache, budget: usize, ctx: &mut SelectCtx) -> Selection {
+        let t = k.t;
+        if t <= budget {
+            return Selection::All;
+        }
+        if ctx.layer < self.full_layers {
+            return Selection::All;
+        }
+        if ctx.layer != self.select_layer {
+            if let Some(shared) = &ctx.shared_indices {
+                if shared.len() == k.n_heads {
+                    let reused: Vec<Vec<u32>> = shared
+                        .iter()
+                        .map(|v| v.iter().copied().filter(|&i| (i as usize) < t).collect())
+                        .collect();
+                    return Selection::PerHead(reused);
+                }
+            }
+            // Shared state missing (e.g. probed in isolation): fall through
+            // and compute, as the re-selection layer would.
+        }
+
+        let d = q.d;
+        let scale = 1.0 / (d as f32).sqrt();
+        let n_kv = k.n_heads;
+        let g = group_size(q.n_heads, n_kv);
+        let w_start = q.s.saturating_sub(self.obs_window);
+
+        let mut per_head = Vec::with_capacity(n_kv);
+        let mut row = vec![0.0f32; t];
+        for kv in 0..n_kv {
+            let khead = k.head(kv);
+            let agg = ctx.scratch.buf_a(t);
+            agg.iter_mut().for_each(|v| *v = 0.0);
+            for gq in 0..g {
+                let h = kv * g + gq;
+                for i in w_start..q.s {
+                    let qrow = q.query(h, i);
+                    for ti in 0..t {
+                        row[ti] = dot(qrow, &khead[ti * d..(ti + 1) * d]) * scale;
+                    }
+                    softmax(&mut row);
+                    for ti in 0..t {
+                        agg[ti] += row[ti];
+                    }
+                }
+                ctx.cost.add_flops(((q.s - w_start) * t * (2 * d + 4)) as u64);
+                ctx.cost.add_bytes(((q.s - w_start) * t * 4) as u64);
+            }
+            per_head.push(topk_ascending(agg, budget));
+        }
+        ctx.shared_indices = Some(per_head.clone());
+        Selection::PerHead(per_head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mk(rng: &mut Rng, t: usize) -> (Vec<f32>, Vec<f32>) {
+        (rng.normal_vec(2 * 8 * 8, 1.0), rng.normal_vec(1 * t * 8, 1.0))
+    }
+
+    #[test]
+    fn early_layers_are_dense() {
+        let mut rng = Rng::new(71);
+        let (qd, kd) = mk(&mut rng, 100);
+        let q = QChunk::new(&qd, 2, 8, 8);
+        let k = KCache::new(&kd, 1, 100, 100, 8);
+        let mut ctx = SelectCtx::new(0);
+        ctx.layer = 0;
+        assert_eq!(TidalDecode::default().select(&q, &k, 16, &mut ctx), Selection::All);
+        ctx.layer = 1;
+        assert_eq!(TidalDecode::default().select(&q, &k, 16, &mut ctx), Selection::All);
+    }
+
+    #[test]
+    fn positions_persist_across_later_layers() {
+        let mut rng = Rng::new(72);
+        let (qd, kd) = mk(&mut rng, 120);
+        let q = QChunk::new(&qd, 2, 8, 8);
+        let k = KCache::new(&kd, 1, 120, 120, 8);
+        let mut ctx = SelectCtx::new(0);
+        ctx.layer = 2;
+        let sel2 = TidalDecode::default().select(&q, &k, 16, &mut ctx);
+        assert!(ctx.shared_indices.is_some());
+        // Later layers with *different* queries reuse the same positions.
+        let qd2 = rng.normal_vec(2 * 8 * 8, 1.0);
+        let q2 = QChunk::new(&qd2, 2, 8, 8);
+        ctx.layer = 5;
+        let sel5 = TidalDecode::default().select(&q2, &k, 16, &mut ctx);
+        assert_eq!(sel2, sel5);
+    }
+
+    #[test]
+    fn isolated_probe_still_selects() {
+        // Without shared state at a late layer, it recomputes (contract
+        // safety for single-layer eval probes).
+        let mut rng = Rng::new(73);
+        let (qd, kd) = mk(&mut rng, 90);
+        let q = QChunk::new(&qd, 2, 8, 8);
+        let k = KCache::new(&kd, 1, 90, 90, 8);
+        let mut ctx = SelectCtx::new(0);
+        ctx.layer = 7;
+        let sel = TidalDecode::default().select(&q, &k, 12, &mut ctx);
+        assert_eq!(sel.head_indices(0, 90).len(), 12);
+    }
+}

@@ -1,0 +1,7 @@
+//! JSON-over-TCP serving front-end and client.
+
+pub mod proto;
+pub mod tcp;
+
+pub use proto::{WireRequest, WireResponse};
+pub use tcp::{serve, Client, ServerHandle};

@@ -1,0 +1,130 @@
+//! Wire protocol: newline-delimited JSON over TCP.
+//!
+//! Request:  `{"prompt": "...", "max_new": 16, "policy": "quoka", "budget": 1024}`
+//! Response: `{"id": 3, "text": "...", "ttft_ms": 12.5, "tpot_ms": 2.1,
+//!             "prompt_tokens": 812, "generated": 16}`
+//! Errors:   `{"error": "..."}`
+
+use crate::coordinator::request::RequestResult;
+use crate::util::json::Json;
+
+/// Parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    pub prompt: String,
+    pub max_new: usize,
+    pub policy: String,
+    pub budget: usize,
+}
+
+impl WireRequest {
+    pub fn parse(line: &str) -> anyhow::Result<WireRequest> {
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
+        Ok(WireRequest {
+            prompt: j
+                .req("prompt")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("prompt must be a string"))?
+                .to_string(),
+            max_new: j.get("max_new").and_then(|v| v.as_usize()).unwrap_or(16),
+            policy: j
+                .get("policy")
+                .and_then(|v| v.as_str())
+                .unwrap_or("quoka")
+                .to_string(),
+            budget: j.get("budget").and_then(|v| v.as_usize()).unwrap_or(1024),
+        })
+    }
+
+    pub fn to_line(&self) -> String {
+        Json::obj(vec![
+            ("prompt", Json::str(self.prompt.clone())),
+            ("max_new", Json::num(self.max_new as f64)),
+            ("policy", Json::str(self.policy.clone())),
+            ("budget", Json::num(self.budget as f64)),
+        ])
+        .to_string()
+    }
+}
+
+/// Render a result for the wire.
+pub fn result_line(r: &RequestResult, text: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::num(r.id as f64)),
+        ("text", Json::str(text)),
+        ("ttft_ms", Json::num(r.ttft_s * 1e3)),
+        ("tpot_ms", Json::num(r.tpot_s * 1e3)),
+        ("prompt_tokens", Json::num(r.prompt_tokens as f64)),
+        ("generated", Json::num(r.generated.len() as f64)),
+    ])
+    .to_string()
+}
+
+pub fn error_line(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
+/// Parsed server response (client side).
+#[derive(Clone, Debug)]
+pub struct WireResponse {
+    pub id: u64,
+    pub text: String,
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+    pub prompt_tokens: usize,
+    pub generated: usize,
+}
+
+impl WireResponse {
+    pub fn parse(line: &str) -> anyhow::Result<WireResponse> {
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad response json: {e}"))?;
+        if let Some(err) = j.get("error").and_then(|e| e.as_str()) {
+            anyhow::bail!("server error: {err}");
+        }
+        Ok(WireResponse {
+            id: j.req("id")?.as_usize().unwrap_or(0) as u64,
+            text: j.req("text")?.as_str().unwrap_or("").to_string(),
+            ttft_ms: j.req("ttft_ms")?.as_f64().unwrap_or(0.0),
+            tpot_ms: j.req("tpot_ms")?.as_f64().unwrap_or(0.0),
+            prompt_tokens: j.req("prompt_tokens")?.as_usize().unwrap_or(0),
+            generated: j.req("generated")?.as_usize().unwrap_or(0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = WireRequest { prompt: "hi\nthere".into(), max_new: 8, policy: "quoka".into(), budget: 512 };
+        let back = WireRequest::parse(&r.to_line()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn request_defaults() {
+        let r = WireRequest::parse(r#"{"prompt": "x"}"#).unwrap();
+        assert_eq!(r.max_new, 16);
+        assert_eq!(r.policy, "quoka");
+    }
+
+    #[test]
+    fn response_roundtrip_and_error() {
+        let rr = RequestResult {
+            id: 7,
+            generated: vec![1, 2],
+            ttft_s: 0.012,
+            tpot_s: 0.003,
+            prompt_tokens: 100,
+            total_s: 0.02,
+        };
+        let line = result_line(&rr, "out");
+        let resp = WireResponse::parse(&line).unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.generated, 2);
+        assert!(WireResponse::parse(&error_line("boom")).is_err());
+        assert!(WireRequest::parse("{nope").is_err());
+    }
+}

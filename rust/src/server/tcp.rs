@@ -1,0 +1,286 @@
+//! TCP serving front-end.
+//!
+//! One engine thread owns the [`Engine`] and loops: drain submissions →
+//! `step()` → dispatch finished results to per-request response channels.
+//! Connection threads parse newline-JSON requests, tokenize, submit, and
+//! block on their response channel — the classic leader/worker split with
+//! Rust owning the event loop end to end.
+
+use super::proto::{error_line, result_line, WireRequest, WireResponse};
+use crate::coordinator::{Engine, PolicySpec};
+use crate::workload::corpus::ByteTokenizer;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+enum ToEngine {
+    Submit {
+        wire: WireRequest,
+        resp: mpsc::Sender<String>,
+    },
+    Shutdown,
+}
+
+/// Handle for a running server.
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    tx: mpsc::Sender<ToEngine>,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Graceful shutdown: stops accepting, drains the engine.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(ToEngine::Shutdown);
+        // Nudge the accept loop.
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start serving on `addr` (use port 0 for an ephemeral port).
+///
+/// `make_engine` runs *inside* the engine thread: the PJRT client is not
+/// `Send` (Rc-based internals), so the engine must be born where it lives.
+pub fn serve<F>(make_engine: F, addr: &str) -> Result<ServerHandle>
+where
+    F: FnOnce() -> Result<Engine> + Send + 'static,
+{
+    let listener = TcpListener::bind(addr).context("bind")?;
+    let local = listener.local_addr()?;
+    let (tx, rx) = mpsc::channel::<ToEngine>();
+    let stop = Arc::new(AtomicBool::new(false));
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+
+    // Engine thread.
+    let engine_thread = std::thread::Builder::new()
+        .name("quoka-engine".into())
+        .spawn(move || {
+            let mut engine = match make_engine() {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            let vocab = engine.model_cfg().vocab;
+            let tok = ByteTokenizer::new(vocab);
+            let mut waiters: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
+            let mut open = true;
+            loop {
+                // Drain submissions without blocking while work remains.
+                loop {
+                    let msg = if engine.pending() > 0 {
+                        match rx.try_recv() {
+                            Ok(m) => m,
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                open = false;
+                                break;
+                            }
+                        }
+                    } else {
+                        match rx.recv() {
+                            Ok(m) => m,
+                            Err(_) => {
+                                open = false;
+                                break;
+                            }
+                        }
+                    };
+                    match msg {
+                        ToEngine::Submit { wire, resp } => {
+                            let tokens = tok.encode(&wire.prompt);
+                            let spec = PolicySpec { name: wire.policy.clone(), budget: wire.budget };
+                            match engine.submit(tokens, wire.max_new, spec) {
+                                Ok(id) => {
+                                    waiters.insert(id, resp);
+                                }
+                                Err(e) => {
+                                    let _ = resp.send(error_line(&e.to_string()));
+                                }
+                            }
+                        }
+                        ToEngine::Shutdown => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+                if engine.pending() > 0 {
+                    if let Err(e) = engine.step() {
+                        eprintln!("engine step error: {e:#}");
+                    }
+                    for r in engine.take_results() {
+                        if let Some(w) = waiters.remove(&r.id) {
+                            let text = tok.decode(&r.generated);
+                            let _ = w.send(result_line(&r, &text));
+                        }
+                    }
+                } else if !open {
+                    break;
+                }
+            }
+            eprintln!("engine: {}", engine.metrics.summary());
+        })?;
+
+    // Wait for the engine to come up (or fail fast).
+    match ready_rx.recv() {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => anyhow::bail!("engine startup failed: {e}"),
+        Err(_) => anyhow::bail!("engine thread died during startup"),
+    }
+
+    // Accept loop.
+    let tx_accept = tx.clone();
+    let stop_accept = Arc::clone(&stop);
+    let accept_thread = std::thread::Builder::new()
+        .name("quoka-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if stop_accept.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let tx = tx_accept.clone();
+                std::thread::spawn(move || handle_conn(stream, tx));
+            }
+        })?;
+
+    Ok(ServerHandle { addr: local, tx, stop, threads: vec![engine_thread, accept_thread] })
+}
+
+fn handle_conn(stream: TcpStream, tx: mpsc::Sender<ToEngine>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match WireRequest::parse(&line) {
+            Ok(wire) => {
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send(ToEngine::Submit { wire, resp: rtx }).is_err() {
+                    error_line("engine stopped")
+                } else {
+                    rrx.recv().unwrap_or_else(|_| error_line("engine dropped request"))
+                }
+            }
+            Err(e) => error_line(&e.to_string()),
+        };
+        if writer.write_all(reply.as_bytes()).and_then(|_| writer.write_all(b"\n")).is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Blocking client for examples/benches.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request and wait for its response.
+    pub fn request(&mut self, req: &WireRequest) -> Result<WireResponse> {
+        self.writer.write_all(req.to_line().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        WireResponse::parse(line.trim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EngineCfg, SchedCfg};
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let handle = serve(
+            || {
+                Engine::new_host(
+                    "tiny",
+                    EngineCfg {
+                        sched: SchedCfg { b_cp: 16, step_tokens: 64, max_running: 4 },
+                        pool_blocks: 256,
+                        block_tokens: 16,
+                        seed: 2,
+                    },
+                )
+            },
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let addr = handle.addr;
+
+        let mut c = Client::connect(addr).unwrap();
+        let resp = c
+            .request(&WireRequest {
+                prompt: "the quick brown fox".into(),
+                max_new: 4,
+                policy: "quoka".into(),
+                budget: 32,
+            })
+            .unwrap();
+        assert_eq!(resp.generated, 4);
+        assert!(resp.ttft_ms > 0.0);
+        assert_eq!(resp.prompt_tokens, 0 /* not echoed in text */ + 20);
+
+        // Concurrent clients.
+        let handles: Vec<_> = (0..3)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    c.request(&WireRequest {
+                        prompt: format!("request number {i}"),
+                        max_new: 2,
+                        policy: "dense".into(),
+                        budget: 0,
+                    })
+                    .unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let r = h.join().unwrap();
+            assert_eq!(r.generated, 2);
+        }
+
+        // Bad request gets an error, not a hang.
+        let mut c2 = Client::connect(addr).unwrap();
+        let err = c2.request(&WireRequest {
+            prompt: "x".into(),
+            max_new: 1,
+            policy: "bogus".into(),
+            budget: 1,
+        });
+        assert!(err.is_err());
+
+        handle.shutdown();
+    }
+}

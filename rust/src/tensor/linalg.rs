@@ -1,0 +1,163 @@
+//! Higher-level linear algebra used by the geometry analyses (Fig. 2) and
+//! the Loki baseline: row normalization, cosine-similarity matrices, and a
+//! small power-iteration PCA (top-2 principal components, enough for the
+//! paper's 2-D query/key geometry projection).
+
+use super::ops::{axpy, dot, normalize};
+use crate::util::Rng;
+
+/// Normalize every row of an `[n, d]` matrix in place.
+pub fn normalize_rows(mat: &mut [f32], d: usize) {
+    debug_assert_eq!(mat.len() % d, 0);
+    for row in mat.chunks_mut(d) {
+        normalize(row);
+    }
+}
+
+/// Cosine similarity of every row of `a[m,d]` against vector `v[d]`.
+pub fn cosine_to_vec(a: &[f32], d: usize, v: &[f32]) -> Vec<f32> {
+    let nv = dot(v, v).sqrt();
+    a.chunks(d)
+        .map(|row| {
+            let nr = dot(row, row).sqrt();
+            if nr == 0.0 || nv == 0.0 {
+                0.0
+            } else {
+                dot(row, v) / (nr * nv)
+            }
+        })
+        .collect()
+}
+
+/// Mean-center the rows of `mat[n,d]`, returning the mean.
+pub fn center_rows(mat: &mut [f32], d: usize) -> Vec<f32> {
+    let n = mat.len() / d;
+    let mut mean = vec![0.0; d];
+    for row in mat.chunks(d) {
+        axpy(1.0, row, &mut mean);
+    }
+    for v in mean.iter_mut() {
+        *v /= n as f32;
+    }
+    for row in mat.chunks_mut(d) {
+        for (x, m) in row.iter_mut().zip(&mean) {
+            *x -= m;
+        }
+    }
+    mean
+}
+
+/// Top-`k` principal directions of the rows of `mat[n,d]` via power
+/// iteration with deflation. Returns `k` unit vectors of length `d`.
+///
+/// Used for Fig. 2b (2-D PCA of queries and keys) and as the offline basis
+/// builder for the Loki baseline's low-rank key projection.
+pub fn principal_components(mat: &[f32], d: usize, k: usize, iters: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+    let n = mat.len() / d;
+    let mut comps: Vec<Vec<f32>> = Vec::with_capacity(k);
+    let mut centered = mat.to_vec();
+    center_rows(&mut centered, d);
+    for _ in 0..k {
+        let mut v = rng.normal_vec(d, 1.0);
+        normalize(&mut v);
+        for _ in 0..iters {
+            // w = Cov·v computed as Xᵀ(X v) without forming Cov.
+            let mut w = vec![0.0; d];
+            for row in centered.chunks(d) {
+                let p = dot(row, &v);
+                axpy(p, row, &mut w);
+            }
+            // Deflate previously found components.
+            for c in &comps {
+                let p = dot(&w, c);
+                axpy(-p, c, &mut w);
+            }
+            if normalize(&mut w) == 0.0 {
+                break;
+            }
+            v = w;
+        }
+        comps.push(v);
+    }
+    let _ = n;
+    comps
+}
+
+/// Project rows of `mat[n,d]` onto `comps` → `[n, comps.len()]`.
+pub fn project(mat: &[f32], d: usize, comps: &[Vec<f32>]) -> Vec<f32> {
+    let n = mat.len() / d;
+    let k = comps.len();
+    let mut out = vec![0.0; n * k];
+    for (i, row) in mat.chunks(d).enumerate() {
+        for (j, c) in comps.iter().enumerate() {
+            out[i * k + j] = dot(row, c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::l2_norm;
+
+    #[test]
+    fn normalize_rows_unit() {
+        let mut m = vec![3.0, 4.0, 0.0, 5.0];
+        normalize_rows(&mut m, 2);
+        assert!((l2_norm(&m[0..2]) - 1.0).abs() < 1e-6);
+        assert!((l2_norm(&m[2..4]) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_to_vec_matches_scalar() {
+        let a = vec![1.0, 0.0, 0.0, 1.0, -1.0, 0.0];
+        let sims = cosine_to_vec(&a, 2, &[1.0, 0.0]);
+        assert!((sims[0] - 1.0).abs() < 1e-6);
+        assert!(sims[1].abs() < 1e-6);
+        assert!((sims[2] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pca_finds_dominant_direction() {
+        let mut rng = Rng::new(42);
+        // Points stretched along (1,1)/sqrt(2) with small noise.
+        let dir = [std::f32::consts::FRAC_1_SQRT_2, std::f32::consts::FRAC_1_SQRT_2];
+        let mut mat = Vec::new();
+        for _ in 0..200 {
+            let t = rng.normal() * 5.0;
+            let noise = (rng.normal() * 0.1, rng.normal() * 0.1);
+            mat.push(t * dir[0] + noise.0);
+            mat.push(t * dir[1] + noise.1);
+        }
+        let comps = principal_components(&mat, 2, 1, 30, &mut rng);
+        let c = &comps[0];
+        let align = (c[0] * dir[0] + c[1] * dir[1]).abs();
+        assert!(align > 0.99, "align {align}");
+    }
+
+    #[test]
+    fn pca_components_orthogonal() {
+        let mut rng = Rng::new(43);
+        let mat = rng.normal_vec(100 * 8, 1.0);
+        let comps = principal_components(&mat, 8, 2, 40, &mut rng);
+        let d = dot(&comps[0], &comps[1]).abs();
+        assert!(d < 0.05, "dot {d}");
+    }
+
+    #[test]
+    fn center_rows_zero_mean() {
+        let mut m = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        center_rows(&mut m, 2);
+        let s0: f32 = m.iter().step_by(2).sum();
+        assert!(s0.abs() < 1e-5);
+    }
+
+    #[test]
+    fn project_shapes() {
+        let mat = vec![1.0, 0.0, 0.0, 2.0];
+        let comps = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let p = project(&mat, 2, &comps);
+        assert_eq!(p, vec![1.0, 0.0, 0.0, 2.0]);
+    }
+}

@@ -1,0 +1,202 @@
+//! From-scratch dense f32 tensor substrate.
+//!
+//! The host execution backend (and every selection policy) runs on this
+//! module; it is deliberately small: contiguous row-major `f32` storage, a
+//! shape vector, and the handful of kernels an attention stack needs
+//! (blocked matmul, softmax, rmsnorm, RoPE, top-k, gathers, norms).
+//!
+//! Hot-path functions operate directly on slices so the engine can reuse
+//! scratch buffers without allocation; [`Tensor`] is the convenience owner
+//! used at module boundaries and in tests.
+
+pub mod ops;
+pub mod matmul;
+pub mod linalg;
+
+pub use matmul::{matmul, matmul_bt};
+
+/// A contiguous row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor with the given shape.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Wrap existing data (len must match the shape product).
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Standard-normal random tensor.
+    pub fn randn(shape: &[usize], rng: &mut crate::util::Rng, sigma: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        let mut data = vec![0.0; n];
+        rng.fill_normal(&mut data, sigma);
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of dimensions.
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Dimension `i` (panics if out of range).
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    /// Reinterpret the shape (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2);
+        let d = self.shape[1];
+        &self.data[i * d..(i + 1) * d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.rank(), 2);
+        let d = self.shape[1];
+        &mut self.data[i * d..(i + 1) * d]
+    }
+
+    /// Sub-slab `[i]` of a rank-3 tensor, viewed as rank-2 data.
+    pub fn slab(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 3);
+        let n = self.shape[1] * self.shape[2];
+        &self.data[i * n..(i + 1) * n]
+    }
+
+    pub fn slab_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.rank(), 3);
+        let n = self.shape[1] * self.shape[2];
+        &mut self.data[i * n..(i + 1) * n]
+    }
+
+    /// Element at a full index.
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    fn offset(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&ix, &d)) in idx.iter().zip(&self.shape).enumerate() {
+            assert!(ix < d, "index {ix} out of bounds for dim {i} ({d})");
+            off = off * d + ix;
+        }
+        off
+    }
+
+    /// Max |a - b| between tensors of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative L2 error ‖a−b‖/‖a‖ (0 when both are 0).
+    pub fn rel_l2(&self, other: &Tensor) -> f32 {
+        ops::rel_l2(&self.data, &other.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn shape_and_index() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 3], 7.0);
+        assert_eq!(t.at(&[1, 2, 3]), 7.0);
+        assert_eq!(t.data()[1 * 12 + 2 * 4 + 3], 7.0);
+        assert_eq!(t.rank(), 3);
+        assert_eq!(t.dim(2), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_panics() {
+        let t = Tensor::zeros(&[2, 2]);
+        t.at(&[2, 0]);
+    }
+
+    #[test]
+    fn rows_and_slabs() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        let t3 = t.clone().reshape(&[1, 2, 3]);
+        assert_eq!(t3.slab(0), &[1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[100, 100], &mut rng, 2.0);
+        let mean: f32 = t.data().iter().sum::<f32>() / t.len() as f32;
+        let var: f32 = t.data().iter().map(|x| x * x).sum::<f32>() / t.len() as f32;
+        assert!(mean.abs() < 0.1);
+        assert!((var - 4.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0, 2.5]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+        assert!(a.rel_l2(&a) < 1e-9);
+    }
+}

@@ -1,0 +1,348 @@
+//! Slice-level numeric kernels used across the engine hot path.
+//!
+//! All functions operate on raw `&[f32]` so the coordinator can run them on
+//! reused scratch buffers with zero allocation in the steady state.
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 8 independent accumulators: strict-FP addition order otherwise
+    // blocks autovectorization; 8 lanes map onto one AVX2 register (two
+    // on AVX-512) and LLVM unrolls further on its own.
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    for i in 0..chunks {
+        let j = i * 8;
+        let (av, bv) = (&a[j..j + 8], &b[j..j + 8]);
+        for l in 0..8 {
+            acc[l] += av[l] * bv[l];
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for j in chunks * 8..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn l2_norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Normalize `a` to unit length in place; returns the original norm.
+/// Zero vectors are left untouched (norm 0 returned).
+#[inline]
+pub fn normalize(a: &mut [f32]) -> f32 {
+    let n = l2_norm(a);
+    if n > 0.0 {
+        let inv = 1.0 / n;
+        for v in a.iter_mut() {
+            *v *= inv;
+        }
+    }
+    n
+}
+
+/// Cosine similarity, defined as 0 when either vector is zero.
+#[inline]
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let na = l2_norm(a);
+    let nb = l2_norm(b);
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot(a, b) / (na * nb)
+    }
+}
+
+/// In-place numerically stable softmax over a row.
+pub fn softmax(row: &mut [f32]) {
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        // All -inf (fully masked): define as uniform zeros.
+        for v in row.iter_mut() {
+            *v = 0.0;
+        }
+        return;
+    }
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// RMSNorm: `x * w / sqrt(mean(x^2) + eps)`, written to `out`.
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), w.len());
+    debug_assert_eq!(x.len(), out.len());
+    let ms = dot(x, x) / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * w[i];
+    }
+}
+
+/// Rotary position embedding applied in place to a head vector of even
+/// dimension `d`, rotating pairs `(x[2i], x[2i+1])` by `pos * theta^(-2i/d)`.
+pub fn rope(x: &mut [f32], pos: usize, theta: f32) {
+    let d = x.len();
+    debug_assert!(d % 2 == 0);
+    let half = d / 2;
+    for i in 0..half {
+        let freq = theta.powf(-2.0 * i as f32 / d as f32);
+        let angle = pos as f32 * freq;
+        let (sin, cos) = angle.sin_cos();
+        let a = x[2 * i];
+        let b = x[2 * i + 1];
+        x[2 * i] = a * cos - b * sin;
+        x[2 * i + 1] = a * sin + b * cos;
+    }
+}
+
+/// SiLU (x * sigmoid(x)).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Mean over rows of an `[n, d]` matrix into `out[d]`.
+pub fn mean_rows(mat: &[f32], n: usize, d: usize, out: &mut [f32]) {
+    debug_assert_eq!(mat.len(), n * d);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for r in 0..n {
+        axpy(1.0, &mat[r * d..(r + 1) * d], out);
+    }
+    let inv = 1.0 / n as f32;
+    for v in out.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Indices of the `k` largest values (descending by value). Deterministic
+/// tie-break: lower index wins. O(n + k log k) via partial selection.
+pub fn topk_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return vec![];
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    let cmp = |&a: &usize, &b: &usize| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    };
+    if k < scores.len() {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(cmp);
+    idx
+}
+
+/// `topk_indices` then sorted ascending — the gather-friendly order used by
+/// the KV cache (preserves positional order of retained tokens).
+pub fn topk_indices_sorted(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut idx = topk_indices(scores, k);
+    idx.sort_unstable();
+    idx
+}
+
+/// Argsort descending.
+pub fn argsort_desc(scores: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Gather rows `idx` of an `[n, d]` matrix into `out[idx.len(), d]`.
+pub fn gather_rows(mat: &[f32], d: usize, idx: &[usize], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), idx.len() * d);
+    for (o, &i) in idx.iter().enumerate() {
+        out[o * d..(o + 1) * d].copy_from_slice(&mat[i * d..(i + 1) * d]);
+    }
+}
+
+/// Relative L2 error ‖a−b‖/max(‖a‖, tiny).
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (x, y) in a.iter().zip(b) {
+        num += ((x - y) * (x - y)) as f64;
+        den += (x * x) as f64;
+    }
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f32::INFINITY };
+    }
+    (num / den).sqrt() as f32
+}
+
+/// Pearson correlation of two samples.
+pub fn pearson(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let mx = x.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let my = y.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let (mut sxy, mut sxx, mut syy) = (0f64, 0f64, 0f64);
+    for (&a, &b) in x.iter().zip(y) {
+        let dx = a as f64 - mx;
+        let dy = b as f64 - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    (sxy / (sxx.sqrt() * syy.sqrt())) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..13).map(|i| (i * 2) as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut row = vec![1000.0, 1001.0, 999.0];
+        softmax(&mut row);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(row[1] > row[0] && row[0] > row[2]);
+    }
+
+    #[test]
+    fn softmax_all_masked() {
+        let mut row = vec![f32::NEG_INFINITY; 4];
+        softmax(&mut row);
+        assert!(row.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn normalize_unit_length() {
+        let mut v = vec![3.0, 4.0];
+        let n = normalize(&mut v);
+        assert!((n - 5.0).abs() < 1e-6);
+        assert!((l2_norm(&v) - 1.0).abs() < 1e-6);
+        let mut z = vec![0.0, 0.0];
+        assert_eq!(normalize(&mut z), 0.0);
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-6);
+        assert!((cosine(&[1.0, 1.0], &[2.0, 2.0]) - 1.0).abs() < 1e-6);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-6);
+        assert_eq!(cosine(&[0.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn rmsnorm_matches_definition() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let w = [1.0f32; 4];
+        let mut out = [0.0f32; 4];
+        rmsnorm(&x, &w, 1e-6, &mut out);
+        let ms = x.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        for i in 0..4 {
+            assert!((out[i] - x[i] / (ms + 1e-6).sqrt()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_is_positional() {
+        let mut a = vec![1.0, 2.0, 3.0, 4.0];
+        let before = l2_norm(&a);
+        rope(&mut a, 7, 10000.0);
+        assert!((l2_norm(&a) - before).abs() < 1e-4);
+        // pos 0 is the identity
+        let mut b = vec![1.0, 2.0, 3.0, 4.0];
+        rope(&mut b, 0, 10000.0);
+        assert_eq!(b, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rope_relative_property() {
+        // <rope(q,m), rope(k,n)> depends only on m-n for the same vectors.
+        let q0 = vec![0.3, -1.2, 0.7, 0.5];
+        let k0 = vec![1.0, 0.2, -0.4, 0.9];
+        let dots: Vec<f32> = [(3usize, 1usize), (10, 8), (22, 20)]
+            .iter()
+            .map(|&(m, n)| {
+                let mut q = q0.clone();
+                let mut k = k0.clone();
+                rope(&mut q, m, 10000.0);
+                rope(&mut k, n, 10000.0);
+                dot(&q, &k)
+            })
+            .collect();
+        assert!((dots[0] - dots[1]).abs() < 1e-4);
+        assert!((dots[1] - dots[2]).abs() < 1e-4);
+    }
+
+    #[test]
+    fn topk_matches_argsort() {
+        let scores = vec![0.1, 5.0, -2.0, 5.0, 3.3, 0.0];
+        assert_eq!(topk_indices(&scores, 3), argsort_desc(&scores)[..3].to_vec());
+        assert_eq!(topk_indices(&scores, 3), vec![1, 3, 4]);
+        assert_eq!(topk_indices_sorted(&scores, 3), vec![1, 3, 4]);
+        assert_eq!(topk_indices(&scores, 0), Vec::<usize>::new());
+        assert_eq!(topk_indices(&scores, 99).len(), 6);
+    }
+
+    #[test]
+    fn gather_and_mean() {
+        let mat = vec![1., 2., 3., 4., 5., 6.];
+        let mut out = vec![0.0; 4];
+        gather_rows(&mat, 2, &[2, 0], &mut out);
+        assert_eq!(out, vec![5., 6., 1., 2.]);
+        let mut m = vec![0.0; 2];
+        mean_rows(&mat, 3, 2, &mut m);
+        assert_eq!(m, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = vec![2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-6);
+        let z = vec![-1.0, -2.0, -3.0, -4.0];
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rel_l2_zero_and_nonzero() {
+        assert_eq!(rel_l2(&[0.0; 3], &[0.0; 3]), 0.0);
+        assert!(rel_l2(&[1.0, 0.0], &[0.0, 0.0]) > 0.9);
+    }
+}

@@ -1,0 +1,185 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generates usage text from registered option metadata.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for `--help` generation and validation.
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub boolean: bool,
+}
+
+/// Parsed arguments: `--key value` pairs plus positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw process args (everything after the subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, specs: &[OptSpec]) -> anyhow::Result<Args> {
+        let bools: std::collections::HashSet<&str> = specs
+            .iter()
+            .filter(|s| s.boolean)
+            .map(|s| s.name)
+            .collect();
+        let known: std::collections::HashSet<&str> = specs.iter().map(|s| s.name).collect();
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if !known.is_empty() && !known.contains(key.as_str()) {
+                    anyhow::bail!("unknown flag --{key} (try --help)");
+                }
+                let val = if bools.contains(key.as_str()) {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    it.next()
+                        .ok_or_else(|| anyhow::anyhow!("flag --{key} expects a value"))?
+                };
+                args.flags.insert(key, val);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        // Apply defaults.
+        for s in specs {
+            if let Some(d) = s.default {
+                args.flags.entry(s.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> anyhow::Result<String> {
+        self.get(key)
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn usize(&self, key: &str) -> anyhow::Result<usize> {
+        let v = self.str(key)?;
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("flag --{key} expects an integer, got '{v}'"))
+    }
+
+    pub fn f32(&self, key: &str) -> anyhow::Result<f32> {
+        let v = self.str(key)?;
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("flag --{key} expects a float, got '{v}'"))
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated integer list, e.g. `--lengths 4096,8192`.
+    pub fn usize_list(&self, key: &str) -> anyhow::Result<Vec<usize>> {
+        let v = self.str(key)?;
+        v.split(',')
+            .map(|p| {
+                p.trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("flag --{key}: bad integer '{p}'"))
+            })
+            .collect()
+    }
+
+    /// Comma-separated string list.
+    pub fn str_list(&self, key: &str) -> anyhow::Result<Vec<String>> {
+        Ok(self
+            .str(key)?
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect())
+    }
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nUSAGE:\n  quoka {cmd} [OPTIONS]\n\nOPTIONS:\n");
+    for spec in specs {
+        let d = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, d));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "n", help: "count", default: Some("4"), boolean: false },
+            OptSpec { name: "verbose", help: "talk", default: None, boolean: true },
+            OptSpec { name: "name", help: "name", default: None, boolean: false },
+        ]
+    }
+
+    fn parse(args: &[&str]) -> anyhow::Result<Args> {
+        Args::parse(args.iter().map(|s| s.to_string()), &specs())
+    }
+
+    #[test]
+    fn parses_pairs_and_defaults() {
+        let a = parse(&["--name", "x"]).unwrap();
+        assert_eq!(a.str("name").unwrap(), "x");
+        assert_eq!(a.usize("n").unwrap(), 4);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["--n=9"]).unwrap();
+        assert_eq!(a.usize("n").unwrap(), 9);
+    }
+
+    #[test]
+    fn boolean_flag() {
+        let a = parse(&["--verbose", "--n", "2"]).unwrap();
+        assert!(a.bool("verbose"));
+        assert_eq!(a.usize("n").unwrap(), 2);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["file1", "--n", "2", "file2"]).unwrap();
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(parse(&["--bogus", "1"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&["--name"]).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let sp = vec![OptSpec { name: "ls", help: "", default: None, boolean: false }];
+        let a = Args::parse(["--ls".to_string(), "1, 2,3".to_string()], &sp).unwrap();
+        assert_eq!(a.usize_list("ls").unwrap(), vec![1, 2, 3]);
+    }
+}

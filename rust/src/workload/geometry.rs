@@ -1,0 +1,414 @@
+//! GeometrySim: synthetic Q/K/V streams with trained-LLM attention geometry.
+//!
+//! The paper's accuracy benchmarks (NIAH, RULER, LongBench, Math500) probe
+//! one mechanism: *does the selection policy retain the cache entries that
+//! the chunk's queries actually need?* That mechanism depends only on the
+//! geometry of queries and keys — the structure Fig. 2 documents for real
+//! checkpoints:
+//!
+//! - most queries cluster tightly around a mean direction `u_q`;
+//! - the bulk of keys cluster in a region *anti-aligned* with `u_q`
+//!   (Fig. 2b: queries and keys separate in PCA space);
+//! - a sink token receives high attention from every query;
+//! - retrieval ("needle") keys point in distinctive directions matched by a
+//!   few dispersed queries that arise when the question is being processed
+//!   (exactly the low-`CosSim(M_Q, q)` queries Theorem 1 characterizes);
+//! - key norms vary widely (heavy tails), which is what makes raw-dot
+//!   scoring unstable (Table 9) — including "loud" partially-aligned
+//!   distractor keys with huge norms.
+//!
+//! Since no pretrained checkpoints are available offline, this module
+//! *generates* that geometry directly with controllable knobs, giving every
+//! benchmark a ground-truth relevant-KV set (DESIGN.md §3 documents the
+//! substitution).
+
+use crate::util::Rng;
+
+/// A planted retrieval target.
+#[derive(Clone, Debug)]
+pub struct Needle {
+    /// First key position of the needle span.
+    pub key_pos: usize,
+    /// Number of consecutive needle keys.
+    pub width: usize,
+    /// Chunk index whose queries seek this needle (must be after the
+    /// needle's own chunk so the needle is in the past cache).
+    pub query_chunk: usize,
+    /// Latent direction id (index into per-head needle directions).
+    pub dir: usize,
+}
+
+impl Needle {
+    /// Ground-truth relevant cache indices.
+    pub fn truth(&self) -> std::ops::Range<usize> {
+        self.key_pos..self.key_pos + self.width
+    }
+}
+
+/// Generator configuration.
+///
+/// Magnitudes are calibrated so post-softmax attention matches trained-LLM
+/// behaviour at `d = 64` (logit range ≈ ±8): ordinary queries concentrate
+/// on the sink, retrieval queries concentrate on their needle, the
+/// anti-aligned bulk receives ≈ e⁻⁴ tail mass.
+#[derive(Clone, Debug)]
+pub struct GeometryConfig {
+    pub d: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    /// Total prompt length.
+    pub t: usize,
+    /// Prefill chunk size `B_CP`.
+    pub b_cp: usize,
+    /// Relative noise: each row gets a perturbation of norm ≈
+    /// `noise × row_norm`.
+    pub noise: f32,
+    /// Std-dev of cluster-key norm spread (heavy upper tail).
+    pub key_norm_spread: f32,
+    /// Fraction of keys that are "loud" distractors: random direction,
+    /// huge norm — invisible to cosine scoring, a trap for raw-dot scoring
+    /// (Table 9's mechanism).
+    pub distractor_frac: f32,
+    /// Fraction of keys with random direction at ordinary norm ("junk"):
+    /// geometrically distinctive but semantically irrelevant — the trap
+    /// for query-agnostic eviction (KeyDiff).
+    pub junk_frac: f32,
+    /// Include an attention-sink key at position 0.
+    pub sink: bool,
+    /// Retrieval queries planted per needle in its query chunk.
+    pub retrieval_rows: usize,
+    pub seed: u64,
+}
+
+impl Default for GeometryConfig {
+    fn default() -> Self {
+        GeometryConfig {
+            d: 64,
+            n_q_heads: 8,
+            n_kv_heads: 2,
+            t: 4096,
+            b_cp: 128,
+            noise: 0.18,
+            key_norm_spread: 0.5,
+            distractor_frac: 0.02,
+            junk_frac: 0.10,
+            sink: true,
+            retrieval_rows: 4,
+            seed: 0,
+        }
+    }
+}
+
+// Calibrated magnitudes (see struct docs).
+const Q_NORM: f32 = 2.0;
+const RQ_NORM: f32 = 8.0;
+/// Retrieval queries keep a small mean-query component (they are the
+/// low-CosSim(M_Q, q) outliers of Theorem 1, but still live in the query
+/// half-space of Fig. 2b).
+const RQ_UQ: f32 = 0.5;
+/// Sink *values* are near-zero: sink tokens are "no-op" attention targets
+/// (Xiao et al., 2024), so policies that drop the sink lose little output
+/// fidelity even though the sink absorbs much of the attention mass.
+const SINK_V: f32 = 0.05;
+const SINK_NORM: f32 = 24.0;
+const CLUSTER_NORM: f32 = 20.0;
+const JUNK_NORM: f32 = 2.0;
+const DISTRACTOR_NORM: f32 = 32.0;
+const NEEDLE_NORM: f32 = 8.0;
+
+/// Per-KV-head latent directions.
+struct HeadLatent {
+    /// Query cluster direction.
+    u_q: Vec<f32>,
+    /// Key cluster direction (anti-aligned with `u_q` plus a twist).
+    u_k: Vec<f32>,
+    /// Needle directions.
+    w: Vec<Vec<f32>>,
+}
+
+/// A generated task: full K/V, lazily generated per-chunk Q, needles.
+pub struct GeometryTask {
+    pub cfg: GeometryConfig,
+    /// `[n_kv, t, d]`.
+    pub k: Vec<f32>,
+    /// `[n_kv, t, d]`.
+    pub v: Vec<f32>,
+    pub needles: Vec<Needle>,
+    latents: Vec<HeadLatent>,
+    /// Per-chunk retrieval rows: (row_in_chunk, needle_idx).
+    retrieval: std::collections::HashMap<usize, Vec<(usize, usize)>>,
+}
+
+fn unit(rng: &mut Rng, d: usize) -> Vec<f32> {
+    let mut v = rng.normal_vec(d, 1.0);
+    crate::tensor::ops::normalize(&mut v);
+    v
+}
+
+/// Unit vector orthogonalized against `base` (keeps needles distinguishable
+/// from the clusters).
+fn unit_orth(rng: &mut Rng, base: &[f32], d: usize) -> Vec<f32> {
+    let mut v = unit(rng, d);
+    let p = crate::tensor::ops::dot(&v, base);
+    crate::tensor::ops::axpy(-p, base, &mut v);
+    crate::tensor::ops::normalize(&mut v);
+    v
+}
+
+impl GeometryTask {
+    /// Generate a task with the given needles.
+    pub fn generate(cfg: GeometryConfig, needles: Vec<Needle>) -> GeometryTask {
+        let mut root = Rng::new(cfg.seed ^ 0x9E0);
+        let (d, n_kv, t) = (cfg.d, cfg.n_kv_heads, cfg.t);
+        let n_dirs = needles.iter().map(|n| n.dir + 1).max().unwrap_or(0);
+
+        // Validate needle placement.
+        for n in &needles {
+            assert!(n.key_pos + n.width <= t, "needle outside prompt");
+            assert!(
+                n.key_pos + n.width <= n.query_chunk * cfg.b_cp,
+                "needle must precede its query chunk"
+            );
+        }
+
+        let latents: Vec<HeadLatent> = (0..n_kv)
+            .map(|h| {
+                let mut r = root.fork(0xA11 + h as u64);
+                let u_q = unit(&mut r, d);
+                // Key cluster: anti-aligned with the query cluster plus a
+                // transverse component (Fig. 2b's separated clusters).
+                let twist = unit_orth(&mut r, &u_q, d);
+                let mut u_k = vec![0.0; d];
+                for j in 0..d {
+                    u_k[j] = -0.9 * u_q[j] + 0.45 * twist[j];
+                }
+                crate::tensor::ops::normalize(&mut u_k);
+                let w = (0..n_dirs).map(|_| unit_orth(&mut r, &u_q, d)).collect();
+                HeadLatent { u_q, u_k, w }
+            })
+            .collect();
+
+        // Key/value synthesis. Per-component noise sigma scales with the
+        // row norm so every class keeps its intended cosine structure.
+        let mut k = vec![0.0f32; n_kv * t * d];
+        let mut v = vec![0.0f32; n_kv * t * d];
+        let sd = (d as f32).sqrt();
+        for h in 0..n_kv {
+            let mut r = root.fork(0xC0 + h as u64);
+            let lat = &latents[h];
+            for i in 0..t {
+                let row = &mut k[(h * t + i) * d..(h * t + i + 1) * d];
+                let u = r.f32();
+                if cfg.sink && i == 0 {
+                    // Sink: aligned with the query cluster — every query
+                    // attends to it (Fig. 2c excludes it for this reason).
+                    let ns = cfg.noise * SINK_NORM / sd;
+                    for j in 0..d {
+                        row[j] = SINK_NORM * lat.u_q[j] + ns * r.normal();
+                    }
+                } else if u < cfg.distractor_frac {
+                    // Loud distractor: random direction, huge norm. Raw-dot
+                    // scores chase the norm; cosine scores ignore it.
+                    let dir = unit(&mut r, d);
+                    let norm = DISTRACTOR_NORM * (0.8 + 0.4 * r.f32());
+                    for j in 0..d {
+                        row[j] = norm * dir[j];
+                    }
+                } else if u < cfg.distractor_frac + cfg.junk_frac {
+                    // Junk: distinctive direction, ordinary norm — fools
+                    // key-geometry-only eviction, irrelevant to queries.
+                    let dir = unit(&mut r, d);
+                    let norm = JUNK_NORM * (1.0 + r.normal().abs());
+                    for j in 0..d {
+                        row[j] = norm * dir[j];
+                    }
+                } else {
+                    // Anti-aligned cluster key with heavy-tailed norm.
+                    let norm =
+                        (CLUSTER_NORM * (1.0 + cfg.key_norm_spread * r.normal().abs())).max(1.0);
+                    let ns = cfg.noise * norm / sd;
+                    for j in 0..d {
+                        row[j] = norm * lat.u_k[j] + ns * r.normal();
+                    }
+                }
+                let vrow = &mut v[(h * t + i) * d..(h * t + i + 1) * d];
+                let vscale = if cfg.sink && i == 0 { SINK_V } else { 0.3 };
+                for j in 0..d {
+                    vrow[j] = r.normal() * vscale;
+                }
+            }
+            // Stamp needles over the cluster keys. Needle key norms carry a
+            // heavy-tailed spread (some relevant passages are "quiet"):
+            // invisible to cosine scoring, fatal for raw-dot scoring when
+            // loud irrelevant keys compete (Table 9's mechanism).
+            for n in &needles {
+                let mult = 0.35 + 0.65 * ((n.key_pos.wrapping_mul(7919) % 97) as f32 / 97.0);
+                let norm = NEEDLE_NORM * mult;
+                let ns = cfg.noise * norm / sd * 0.5;
+                for i in n.truth() {
+                    let row = &mut k[(h * t + i) * d..(h * t + i + 1) * d];
+                    for j in 0..d {
+                        row[j] = norm * lat.w[n.dir][j] + ns * r.normal();
+                    }
+                    // Distinctive value so dropping the needle hurts
+                    // attention fidelity, not just recall.
+                    let vrow = &mut v[(h * t + i) * d..(h * t + i + 1) * d];
+                    for j in 0..d {
+                        vrow[j] = 2.0 * lat.w[n.dir][j] + 0.1 * r.normal();
+                    }
+                }
+            }
+        }
+
+        // Retrieval-row plan per chunk.
+        let mut retrieval: std::collections::HashMap<usize, Vec<(usize, usize)>> =
+            Default::default();
+        let mut rr = root.fork(0x9E77);
+        for (ni, n) in needles.iter().enumerate() {
+            let rows = rr.sample_indices(cfg.b_cp, cfg.retrieval_rows.min(cfg.b_cp));
+            retrieval
+                .entry(n.query_chunk)
+                .or_default()
+                .extend(rows.into_iter().map(|rw| (rw, ni)));
+        }
+
+        GeometryTask { cfg, k, v, needles, latents, retrieval }
+    }
+
+    /// Number of chunks.
+    pub fn n_chunks(&self) -> usize {
+        self.cfg.t.div_ceil(self.cfg.b_cp)
+    }
+
+    /// Queries for chunk `c`: `[n_q_heads, s, d]` where `s` is the chunk
+    /// width (the last chunk may be short).
+    pub fn q_chunk(&self, c: usize) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let (d, nq) = (cfg.d, cfg.n_q_heads);
+        let start = c * cfg.b_cp;
+        let s = cfg.b_cp.min(cfg.t - start);
+        let g = nq / cfg.n_kv_heads;
+        let mut out = vec![0.0f32; nq * s * d];
+        let plan = self.retrieval.get(&c);
+        for h in 0..nq {
+            let lat = &self.latents[h / g];
+            // Chunk+head-specific stream for reproducibility.
+            let mut r = Rng::new(cfg.seed ^ (0xBEEF + (c * 131 + h) as u64));
+            let sd = (d as f32).sqrt();
+            for i in 0..s {
+                let row = &mut out[(h * s + i) * d..(h * s + i + 1) * d];
+                let needle = plan.and_then(|p| {
+                    p.iter().find(|(rw, _)| *rw == i).map(|&(_, ni)| ni)
+                });
+                match needle {
+                    Some(ni) => {
+                        // Retrieval query: points at the needle direction —
+                        // low cosine similarity to the near-u_q mean query.
+                        let wdir = &lat.w[self.needles[ni].dir];
+                        let ns = 0.5 * cfg.noise * RQ_NORM / sd;
+                        for j in 0..d {
+                            row[j] = RQ_NORM * wdir[j] + RQ_UQ * lat.u_q[j] + ns * r.normal();
+                        }
+                    }
+                    None => {
+                        let ns = cfg.noise * Q_NORM / sd;
+                        for j in 0..d {
+                            row[j] = Q_NORM * lat.u_q[j] + ns * r.normal();
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The chunk indices worth probing (where needles are queried), with
+    /// the final chunk included when no needle exists.
+    pub fn probe_chunks(&self) -> Vec<usize> {
+        let mut cs: Vec<usize> = self.retrieval.keys().copied().collect();
+        if cs.is_empty() {
+            cs.push(self.n_chunks() - 1);
+        }
+        cs.sort_unstable();
+        cs.dedup();
+        cs
+    }
+
+    /// Retrieval rows planted in chunk `c` (row, needle index).
+    pub fn retrieval_rows(&self, c: usize) -> &[(usize, usize)] {
+        self.retrieval.get(&c).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::cosine;
+
+    fn task() -> GeometryTask {
+        let cfg = GeometryConfig { t: 1024, seed: 3, ..Default::default() };
+        let needles = vec![Needle { key_pos: 300, width: 4, query_chunk: 6, dir: 0 }];
+        GeometryTask::generate(cfg, needles)
+    }
+
+    #[test]
+    fn shapes_and_probes() {
+        let t = task();
+        assert_eq!(t.k.len(), 2 * 1024 * 64);
+        assert_eq!(t.n_chunks(), 8);
+        assert_eq!(t.probe_chunks(), vec![6]);
+        let q = t.q_chunk(6);
+        assert_eq!(q.len(), 8 * 128 * 64);
+        assert_eq!(t.retrieval_rows(6).len(), 4);
+        assert!(t.retrieval_rows(3).is_empty());
+    }
+
+    #[test]
+    fn geometry_matches_paper_structure() {
+        let t = task();
+        let d = t.cfg.d;
+        // (a) Bulk queries cluster: mean pairwise cosine among non-retrieval
+        // queries is high.
+        let q = t.q_chunk(3);
+        let q0 = &q[0..d];
+        let q5 = &q[5 * d..6 * d];
+        assert!(cosine(q0, q5) > 0.7);
+        // (b) Cluster keys are anti-aligned with queries (check the median
+        // over a window so junk/distractor rows don't flake the test).
+        let mut sims: Vec<f32> = (10..40).map(|i| cosine(q0, &t.k[i * d..(i + 1) * d])).collect();
+        sims.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(sims[sims.len() / 2] < -0.3, "median key cosine {}", sims[sims.len() / 2]);
+        // (c) The retrieval query aligns with the needle key and is
+        // dissimilar from ordinary queries.
+        let qprobe = t.q_chunk(6);
+        let (row, ni) = t.retrieval_rows(6)[0];
+        let needle_pos = t.needles[ni].key_pos;
+        let rq = &qprobe[row * d..(row + 1) * d];
+        let nk = &t.k[needle_pos * d..(needle_pos + 1) * d];
+        assert!(cosine(rq, nk) > 0.6, "retrieval query must match needle");
+        let ordinary = if row == 0 { 1 } else { 0 };
+        let oq = &qprobe[ordinary * d..(ordinary + 1) * d];
+        assert!(cosine(rq, oq) < 0.5, "retrieval query must be dissimilar from the cluster");
+        // (d) Sink key aligns with ordinary queries.
+        let sink = &t.k[0..d];
+        assert!(cosine(oq, sink) > 0.5);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = task();
+        let b = task();
+        assert_eq!(a.k, b.k);
+        assert_eq!(a.q_chunk(6), b.q_chunk(6));
+    }
+
+    #[test]
+    #[should_panic(expected = "needle must precede")]
+    fn rejects_needle_after_query() {
+        let cfg = GeometryConfig { t: 512, ..Default::default() };
+        GeometryTask::generate(
+            cfg,
+            vec![Needle { key_pos: 400, width: 4, query_chunk: 1, dir: 0 }],
+        );
+    }
+}

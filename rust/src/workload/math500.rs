@@ -1,0 +1,170 @@
+//! Math500 decode-phase workload (paper §4.4, Table 8).
+//!
+//! Generation-heavy reasoning: after a short prefill, the model emits a
+//! long chain-of-thought in which each reasoning step must retrieve a fact
+//! planted in the prompt. Selection runs per decode step with a single
+//! query (QUOKA's `N_Q` subselection is a no-op at `s = 1`, exactly as the
+//! paper notes).
+//!
+//! Proxy scoring mirrors Table 8's columns:
+//! - **flex match** — mean recall-gated fidelity over steps;
+//! - **exact match** — fraction of facts whose retrieval fully succeeded;
+//! - **gen length** — simulated steps to gather all facts: a step whose
+//!   fact was missed must be retried (failed retrieval ⇒ longer reasoning
+//!   traces, the effect the paper reports).
+
+use super::geometry::{GeometryConfig, GeometryTask, Needle};
+use crate::select::{KCache, QChunk, SelectCtx, SelectionPolicy};
+use crate::util::Rng;
+
+/// Decode-phase evaluation result (one Table 8 row cell-triple).
+#[derive(Clone, Copy, Debug)]
+pub struct MathScore {
+    pub flex: f32,
+    pub exact: f32,
+    pub gen_len: f32,
+}
+
+/// Build the reasoning prompt: `n_facts` facts inside a `t`-token prompt.
+/// Facts are queried during decode, so `query_chunk` points at the final
+/// prefill chunk (it only anchors validation; decode queries are built
+/// here).
+pub fn build(t: usize, n_facts: usize, b_cp: usize, seed: u64) -> GeometryTask {
+    let cfg = GeometryConfig { t, b_cp, seed, ..Default::default() };
+    let last = t.div_ceil(b_cp) - 1;
+    let needles = (0..n_facts)
+        .map(|i| Needle {
+            key_pos: 1 + i * (t - b_cp - 8) / n_facts,
+            width: 3,
+            query_chunk: last,
+            dir: i % 6,
+        })
+        .collect();
+    GeometryTask::generate(cfg, needles)
+}
+
+/// Run the decode simulation: `max_steps` reasoning steps, each retrying a
+/// fact until retrieved (or giving up after 4 tries).
+pub fn run(
+    task: &GeometryTask,
+    policy: &dyn SelectionPolicy,
+    budget: usize,
+    max_steps: usize,
+    seed: u64,
+) -> MathScore {
+    let cfg = &task.cfg;
+    let (d, nq, nkv) = (cfg.d, cfg.n_q_heads, cfg.n_kv_heads);
+    let g = nq / nkv;
+    let t = cfg.t;
+    let k = KCache::new(&task.k, nkv, t, t, d);
+    let mut ctx = SelectCtx::new(seed);
+    let mut rng = Rng::new(seed ^ 0x3A7);
+
+    let mut flex_sum = 0.0f32;
+    let mut steps = 0usize;
+    let mut exact_hits = 0usize;
+    let n_facts = task.needles.len();
+    let mut fact = 0usize;
+    let mut tries = 0usize;
+    let mut gen_len = 0usize;
+
+    while fact < n_facts && steps < max_steps {
+        steps += 1;
+        gen_len += 1;
+        let needle = &task.needles[fact];
+        // Single decode query aimed at the current fact (with step noise).
+        let mut qd = vec![0.0f32; nq * d];
+        for h in 0..nq {
+            // Same latent directions the generator used for this head group.
+            let probe = task.q_chunk(needle.query_chunk); // [nq, s, d]
+            let s_chunk = probe.len() / (nq * d);
+            // Use the planted retrieval row for this needle as the decode
+            // query template; fall back to row 0.
+            let row = task
+                .retrieval_rows(needle.query_chunk)
+                .iter()
+                .find(|&&(_, ni)| ni == fact % task.needles.len())
+                .map(|&(r, _)| r)
+                .unwrap_or(0)
+                .min(s_chunk - 1);
+            let src = (h * s_chunk + row) * d;
+            for j in 0..d {
+                qd[h * d + j] = probe[src + j] + 0.05 * rng.normal();
+            }
+        }
+        let q = QChunk::new(&qd, nq, 1, d);
+        ctx.begin_step();
+        ctx.layer = 2; // representative mid-stack layer (see eval::harness)
+        let sel = policy.select(&q, &k, budget, &mut ctx);
+
+        // Recall of the current fact.
+        let truth = needle.truth();
+        let mut hit = 0usize;
+        let mut total = 0usize;
+        for h in 0..nkv {
+            let idx = sel.head_indices(h, t);
+            for want in truth.clone() {
+                total += 1;
+                if idx.binary_search(&(want as u32)).is_ok() {
+                    hit += 1;
+                }
+            }
+        }
+        let recall = hit as f32 / total.max(1) as f32;
+        flex_sum += recall;
+        let _ = g;
+
+        if recall >= 0.99 {
+            exact_hits += 1;
+            fact += 1;
+            tries = 0;
+        } else {
+            tries += 1;
+            if tries >= 4 {
+                fact += 1; // give up on this fact
+                tries = 0;
+            }
+        }
+    }
+
+    MathScore {
+        flex: if steps == 0 { 0.0 } else { flex_sum / steps as f32 },
+        exact: exact_hits as f32 / n_facts.max(1) as f32,
+        gen_len: gen_len as f32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::policy_by_name;
+
+    #[test]
+    fn dense_retrieves_everything_in_min_steps() {
+        let task = build(1024, 4, 128, 1);
+        let dense = policy_by_name("dense").unwrap();
+        let s = run(&task, dense.as_ref(), usize::MAX, 64, 0);
+        assert_eq!(s.exact, 1.0);
+        assert_eq!(s.gen_len, 4.0);
+        assert!(s.flex > 0.99);
+    }
+
+    #[test]
+    fn quoka_decodes_with_short_traces() {
+        let task = build(1024, 4, 128, 2);
+        let quoka = policy_by_name("quoka").unwrap();
+        let s = run(&task, quoka.as_ref(), 128, 64, 0);
+        assert!(s.exact >= 0.75, "exact {}", s.exact);
+        assert!(s.gen_len <= 8.0, "gen_len {}", s.gen_len);
+    }
+
+    #[test]
+    fn failed_retrieval_lengthens_traces() {
+        let task = build(1024, 4, 128, 3);
+        let keydiff = policy_by_name("keydiff").unwrap();
+        let quoka = policy_by_name("quoka").unwrap();
+        let sk = run(&task, keydiff.as_ref(), 64, 64, 0);
+        let sq = run(&task, quoka.as_ref(), 64, 64, 0);
+        assert!(sk.gen_len >= sq.gen_len, "keydiff {} vs quoka {}", sk.gen_len, sq.gen_len);
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload generators: the offline substitutes for the paper's benchmark
+//! suites (DESIGN.md §3). Each produces geometry tasks with ground-truth
+//! relevant-KV sets, plus a token-level corpus for end-to-end serving.
+
+pub mod geometry;
+pub mod niah;
+pub mod ruler;
+pub mod longbench;
+pub mod math500;
+pub mod corpus;

@@ -1,0 +1,68 @@
+//! Needle-In-A-Haystack workload (paper §4.1, Figs. 4 & 7).
+//!
+//! A single needle is planted at a depth fraction of a long prompt; the
+//! question arrives in the final chunk. The benchmark sweeps depth × length
+//! and reports retrieval success per cell as a heatmap.
+
+use super::geometry::{GeometryConfig, GeometryTask, Needle};
+
+/// One NIAH cell specification.
+#[derive(Clone, Copy, Debug)]
+pub struct NiahCell {
+    pub length: usize,
+    /// Needle depth as a fraction of the prompt in [0,1).
+    pub depth: f32,
+}
+
+/// The paper's sweep: lengths up to 30k, 11 depth levels.
+pub fn grid(lengths: &[usize], n_depths: usize) -> Vec<NiahCell> {
+    let mut cells = Vec::new();
+    for &length in lengths {
+        for di in 0..n_depths {
+            let depth = di as f32 / n_depths as f32;
+            cells.push(NiahCell { length, depth });
+        }
+    }
+    cells
+}
+
+/// Build the geometry task for one cell.
+pub fn build(cell: &NiahCell, b_cp: usize, seed: u64) -> GeometryTask {
+    let cfg = GeometryConfig { t: cell.length, b_cp, seed, ..Default::default() };
+    let n_chunks = cell.length.div_ceil(b_cp);
+    let query_chunk = n_chunks - 1;
+    // Clamp the needle into the addressable past of the final chunk.
+    let max_pos = (query_chunk * b_cp).saturating_sub(8);
+    let key_pos = ((cell.length as f32 * cell.depth) as usize).min(max_pos).max(1);
+    let needles = vec![Needle { key_pos, width: 4, query_chunk, dir: 0 }];
+    GeometryTask::generate(cfg, needles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_all_cells() {
+        let g = grid(&[1024, 2048], 5);
+        assert_eq!(g.len(), 10);
+        assert!(g.iter().all(|c| c.depth < 1.0));
+    }
+
+    #[test]
+    fn deep_needle_stays_addressable() {
+        // depth ≈ 1.0 must still land before the final chunk.
+        let cell = NiahCell { length: 1024, depth: 0.999 };
+        let t = build(&cell, 128, 0);
+        let n = &t.needles[0];
+        assert!(n.key_pos + n.width <= n.query_chunk * 128);
+    }
+
+    #[test]
+    fn build_places_needle_at_depth() {
+        let cell = NiahCell { length: 4096, depth: 0.5 };
+        let t = build(&cell, 128, 1);
+        let pos = t.needles[0].key_pos as f32 / 4096.0;
+        assert!((pos - 0.5).abs() < 0.05);
+    }
+}

@@ -1,0 +1,131 @@
+//! RULER workload (paper §4.2, Tables 1, 2, 5).
+//!
+//! Four task families mirroring RULER's categories, each instantiated as a
+//! geometry task with ground-truth needles:
+//! - `single`   — one needle (NIAH);
+//! - `multikey` — four needles, all queried in the final chunk, among
+//!   distractor needles that are never queried;
+//! - `multihop` — a chain of needles queried from successive chunks;
+//!   scored as the *product* of recalls (every hop must land);
+//! - `aggregate` — sixteen relevant spans spread across the prompt, all
+//!   needed at once (CWE/FWE-style).
+
+use super::geometry::{GeometryConfig, GeometryTask, Needle};
+use crate::eval::harness::{eval_policy, EvalOpts, TaskScore};
+use crate::select::SelectionPolicy;
+
+/// RULER task families.
+pub const FAMILIES: [&str; 4] = ["single", "multikey", "multihop", "aggregate"];
+
+/// Build one family's task at prompt length `t`.
+pub fn build(family: &str, t: usize, b_cp: usize, seed: u64) -> GeometryTask {
+    build_with(family, GeometryConfig { t, b_cp, seed, ..Default::default() })
+}
+
+/// Build one family from a geometry prototype (heads/dims set by the
+/// caller — used to simulate the different model presets of Table 1).
+pub fn build_with(family: &str, cfg: GeometryConfig) -> GeometryTask {
+    let (t, b_cp) = (cfg.t, cfg.b_cp);
+    let last = t.div_ceil(b_cp) - 1;
+    let needles = match family {
+        "single" => vec![Needle { key_pos: t / 3, width: 4, query_chunk: last, dir: 0 }],
+        "multikey" => (0..4)
+            .map(|i| Needle {
+                key_pos: (i + 1) * t / 6,
+                width: 4,
+                query_chunk: last,
+                dir: i,
+            })
+            .collect(),
+        "multihop" => {
+            // Chain: each hop queried from a later chunk.
+            let hops = 3usize;
+            (0..hops)
+                .map(|i| {
+                    let qc = last - (hops - 1 - i) * (last / (hops + 1)).max(1);
+                    Needle {
+                        key_pos: (i + 1) * t / (hops + 2),
+                        width: 4,
+                        query_chunk: qc.min(last),
+                        dir: i,
+                    }
+                })
+                .collect()
+        }
+        "aggregate" => (0..16)
+            .map(|i| Needle {
+                key_pos: 1 + i * (t - b_cp - 8) / 16,
+                width: 2,
+                query_chunk: last,
+                dir: i % 6,
+            })
+            .collect(),
+        other => panic!("unknown RULER family {other}"),
+    };
+    GeometryTask::generate(cfg, needles)
+}
+
+/// RULER score (0–100) for one policy at one length: mean over families of
+/// the family score.
+pub fn score(
+    policy: &dyn SelectionPolicy,
+    budget: usize,
+    t: usize,
+    b_cp: usize,
+    seed: u64,
+    opts: &EvalOpts,
+) -> f32 {
+    score_with(policy, budget, GeometryConfig { t, b_cp, seed, ..Default::default() }, opts)
+}
+
+/// [`score`] from a geometry prototype.
+pub fn score_with(
+    policy: &dyn SelectionPolicy,
+    budget: usize,
+    proto: GeometryConfig,
+    opts: &EvalOpts,
+) -> f32 {
+    let mut total = 0.0;
+    for family in FAMILIES {
+        let task = build_with(family, proto.clone());
+        let s: TaskScore = eval_policy(&task, policy, budget, opts);
+        let fam_score = match family {
+            "multihop" => s.chained_recall() * s.fidelity,
+            _ => s.score(),
+        };
+        total += fam_score;
+    }
+    100.0 * total / FAMILIES.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::select::policy_by_name;
+
+    #[test]
+    fn families_build() {
+        for f in FAMILIES {
+            let t = build(f, 2048, 128, 0);
+            assert!(!t.needles.is_empty(), "{f}");
+        }
+    }
+
+    #[test]
+    fn dense_scores_100ish() {
+        let dense = policy_by_name("dense").unwrap();
+        let opts = EvalOpts { skip_fidelity: true, ..Default::default() };
+        let s = score(dense.as_ref(), usize::MAX, 1024, 128, 0, &opts);
+        assert!(s > 99.0, "{s}");
+    }
+
+    #[test]
+    fn quoka_above_keydiff_at_tight_budget() {
+        let opts = EvalOpts { skip_fidelity: true, ..Default::default() };
+        let quoka = policy_by_name("quoka").unwrap();
+        let keydiff = policy_by_name("keydiff").unwrap();
+        let sq = score(quoka.as_ref(), 128, 2048, 128, 1, &opts);
+        let sk = score(keydiff.as_ref(), 128, 2048, 128, 1, &opts);
+        assert!(sq > sk, "quoka {sq} vs keydiff {sk}");
+    }
+}

@@ -1,0 +1,222 @@
+//! Property tests over the coordinator: block accounting, scheduler
+//! budgets and fairness, engine conservation laws.
+
+use quoka::coordinator::request::{Phase, PolicySpec, Request, SeqEntry};
+use quoka::coordinator::{BlockAllocator, SchedCfg, Scheduler, WorkItem};
+use quoka::util::prop::{check, ensure, ensure_eq};
+use quoka::util::Rng;
+use std::collections::HashMap;
+
+// ------------------------------------------------------------- allocator
+
+#[test]
+fn allocator_never_leaks_or_double_leases() {
+    check(
+        "allocator-conservation",
+        16,
+        |rng: &mut Rng, size| {
+            // Random op sequence: (alloc n) / (release lease i).
+            let ops: Vec<(bool, usize)> =
+                (0..size * 4).map(|_| (rng.f32() < 0.6, 1 + rng.below(4))).collect();
+            ops
+        },
+        |ops| {
+            let total = 16usize;
+            let mut a = BlockAllocator::new(total, 128);
+            let mut leases: Vec<Vec<u32>> = Vec::new();
+            for &(is_alloc, n) in ops {
+                if is_alloc {
+                    if let Some(lease) = a.alloc(n) {
+                        leases.push(lease);
+                    }
+                } else if !leases.is_empty() {
+                    let i = n % leases.len();
+                    let mut l = leases.swap_remove(i);
+                    a.release(&mut l);
+                }
+                // Conservation: free + leased == total, and no block id is
+                // held by two leases.
+                let held: Vec<u32> = leases.iter().flatten().copied().collect();
+                let mut uniq = held.clone();
+                uniq.sort_unstable();
+                uniq.dedup();
+                ensure_eq(uniq.len(), held.len(), "duplicate block across leases")?;
+                ensure_eq(a.free_blocks() + held.len(), total, "conservation")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------- scheduler
+
+fn mk_seqs(rng: &mut Rng, n: usize) -> (HashMap<u64, SeqEntry>, Vec<u64>) {
+    let mut seqs = HashMap::new();
+    let ids: Vec<u64> = (1..=n as u64).collect();
+    for &id in &ids {
+        let prompt = 1 + rng.below(600);
+        seqs.insert(
+            id,
+            SeqEntry::new(Request {
+                id,
+                tokens: vec![1; prompt],
+                max_new_tokens: 1 + rng.below(8),
+                policy: PolicySpec::default(),
+            }),
+        );
+    }
+    (seqs, ids)
+}
+
+#[test]
+fn scheduler_never_exceeds_step_budget() {
+    check(
+        "sched-budget",
+        8,
+        |rng: &mut Rng, size| {
+            let n = 1 + rng.below(size.max(1));
+            let seed = rng.next_u64();
+            (n, seed)
+        },
+        |&(n, seed)| {
+            let mut rng = Rng::new(seed);
+            let (mut seqs, ids) = mk_seqs(&mut rng, n);
+            let mut blocks = BlockAllocator::new(64, 128);
+            let cfg = SchedCfg { b_cp: 128, step_tokens: 200, max_running: 6 };
+            let mut s = Scheduler::new(cfg);
+            for id in ids {
+                s.enqueue(id);
+            }
+            // Drive several plans, randomly advancing phases.
+            for _ in 0..10 {
+                let plan = s.plan(&mut seqs, &mut blocks);
+                let total: usize = plan
+                    .items
+                    .iter()
+                    .map(|i| match i {
+                        WorkItem::Decode { .. } => 1,
+                        WorkItem::PrefillChunk { len, .. } => *len,
+                    })
+                    .sum();
+                ensure(total <= cfg.step_tokens, "step budget exceeded")?;
+                ensure(s.running.len() <= cfg.max_running, "running cap exceeded")?;
+                // Apply the plan like the engine would.
+                for item in &plan.items {
+                    match *item {
+                        WorkItem::PrefillChunk { id, start, len } => {
+                            let e = seqs.get_mut(&id).unwrap();
+                            ensure(len > 0 && len <= cfg.b_cp, "chunk size bounds")?;
+                            ensure_eq(
+                                match e.phase {
+                                    Phase::Prefill { next } => next,
+                                    _ => usize::MAX,
+                                },
+                                start,
+                                "chunk starts at the prefill cursor",
+                            )?;
+                            e.phase = if start + len == e.req.tokens.len() {
+                                e.generated.push(0);
+                                Phase::Decode
+                            } else {
+                                Phase::Prefill { next: start + len }
+                            };
+                        }
+                        WorkItem::Decode { id } => {
+                            let e = seqs.get_mut(&id).unwrap();
+                            e.generated.push(0);
+                            if e.generated.len() >= e.req.max_new_tokens {
+                                e.phase = Phase::Finished;
+                            }
+                        }
+                    }
+                }
+                let done: Vec<u64> = seqs
+                    .iter()
+                    .filter(|(_, e)| e.phase == Phase::Finished)
+                    .map(|(&id, _)| id)
+                    .collect();
+                for id in done {
+                    let mut e = seqs.remove(&id).unwrap();
+                    blocks.release(&mut e.blocks);
+                    s.retire(id);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn scheduler_fcfs_admission_order() {
+    check(
+        "sched-fcfs",
+        8,
+        |rng: &mut Rng, size| (1 + rng.below(size.max(1)), rng.next_u64()),
+        |&(n, seed)| {
+            let mut rng = Rng::new(seed);
+            let (mut seqs, ids) = mk_seqs(&mut rng, n);
+            let mut blocks = BlockAllocator::new(256, 128);
+            let mut s = Scheduler::new(SchedCfg::default());
+            for &id in &ids {
+                s.enqueue(id);
+            }
+            let plan = s.plan(&mut seqs, &mut blocks);
+            // Admitted ids must be a prefix of submission order.
+            ensure(
+                plan.admitted.iter().zip(&ids).all(|(a, b)| a == b),
+                "admission must be FCFS",
+            )
+        },
+    );
+}
+
+// ------------------------------------------------------------- engine
+
+#[test]
+fn engine_conserves_blocks_and_tokens_across_random_mixes() {
+    use quoka::coordinator::{Engine, EngineCfg};
+    check(
+        "engine-conservation",
+        6,
+        |rng: &mut Rng, size| {
+            let n = 1 + rng.below(size.max(1));
+            let reqs: Vec<(usize, usize, &'static str)> = (0..n)
+                .map(|_| {
+                    let prompt = 8 + rng.below(120);
+                    let max_new = 1 + rng.below(4);
+                    let policy = ["dense", "quoka", "keydiff"][rng.below(3)];
+                    (prompt, max_new, policy)
+                })
+                .collect();
+            reqs
+        },
+        |reqs| {
+            let mut e = Engine::new_host(
+                "tiny",
+                EngineCfg {
+                    sched: SchedCfg { b_cp: 16, step_tokens: 64, max_running: 3 },
+                    pool_blocks: 128,
+                    block_tokens: 16,
+                    seed: 3,
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            for &(prompt, max_new, policy) in reqs {
+                e.submit(
+                    vec![1; prompt],
+                    max_new,
+                    PolicySpec { name: policy.into(), budget: 24 },
+                )
+                .map_err(|e| e.to_string())?;
+            }
+            let mut results = e.run_to_completion().map_err(|e| e.to_string())?;
+            results.sort_by_key(|r| r.id); // ids are issued in submit order
+            ensure_eq(results.len(), reqs.len(), "all requests complete")?;
+            for (r, &(_, max_new, _)) in results.iter().zip(reqs) {
+                ensure_eq(r.generated.len(), max_new, "generated exactly max_new")?;
+            }
+            ensure_eq(e.blocks.free_blocks(), 128, "every block returned")?;
+            Ok(())
+        },
+    );
+}

