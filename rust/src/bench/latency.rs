@@ -9,11 +9,11 @@
 //! on the same backend*.
 
 use super::{banner, full_mode};
-use crate::model::attention::{chunk_attention, KvBuffers};
+use crate::model::attention::{chunk_attention, reference_chunk_attention, AttnScratch, KvBuffers};
 use crate::model::{HostModel, ModelConfig, SeqState, Weights};
 use crate::select::{policy_by_name, QChunk, SelectCtx, Selection, SelectionPolicy};
-use crate::util::timing::{bench, BenchCfg, Table};
-use crate::util::Rng;
+use crate::util::timing::{bench, BenchCfg, Stats, Table};
+use crate::util::{Json, Rng};
 
 fn grid() -> Vec<usize> {
     if full_mode() {
@@ -46,7 +46,7 @@ fn attn_module_time(policy: &dyn SelectionPolicy, budget: usize, t: usize, cfg: 
     cache.append(&kk, &vv, t);
     let mut ctx = SelectCtx::new(0);
     let mut out = vec![0.0f32; nq * s * d];
-    let mut scores = Vec::new();
+    let mut scratch = AttnScratch::new();
     let stats = bench(bench_cfg(), || {
         let sel = if policy.is_dense() {
             Selection::All
@@ -54,7 +54,7 @@ fn attn_module_time(policy: &dyn SelectionPolicy, budget: usize, t: usize, cfg: 
             let qv = QChunk::new(&q, nq, s, d);
             policy.select(&qv, &cache.k_view(), budget, &mut ctx)
         };
-        chunk_attention(&q, nq, s, d, &k_self, &v_self, &cache, &sel, &mut scores, &mut out);
+        chunk_attention(&q, nq, s, d, &k_self, &v_self, &cache, &sel, &mut scratch, &mut out);
         std::hint::black_box(&out);
     });
     stats.mean_ns / 1e9
@@ -196,7 +196,7 @@ pub fn fig6_decode() -> Table {
         cache.append(&kk, &vv, depth);
         let mut ctx = SelectCtx::new(0);
         let mut out = vec![0.0f32; nq * d];
-        let mut scores = Vec::new();
+        let mut scratch = AttnScratch::new();
         let t0 = std::time::Instant::now();
         for _ in 0..n {
             let q = rng.normal_vec(nq * d, 1.0);
@@ -209,7 +209,7 @@ pub fn fig6_decode() -> Table {
                 policy.select(&qv, &cache.k_view(), budget, &mut ctx)
             };
             crate::model::attention::decode_attention(
-                &q, nq, d, &ks, &vs, &cache, &sel, &mut scores, &mut out,
+                &q, nq, d, &ks, &vs, &cache, &sel, &mut scratch, &mut out,
             );
             cache.append(&ks, &vs, 1);
             std::hint::black_box(&out);
@@ -236,18 +236,59 @@ pub fn fig6_decode() -> Table {
 }
 
 /// §Perf micro: the selection + gather + attention hot-path pieces.
+///
+/// Runs the acceptance configuration — 32 query / 8 KV heads, d=128,
+/// s=128 chunk, QUOKA budget ≈ 12 % of T — and reports the tiled kernel
+/// against the seed scalar kernel ([`reference_chunk_attention`]) on the
+/// *same selection*, so the speedup isolates the kernel rewrite.
+///
+/// Results are also written as JSON (`BENCH_OUT` env var, default
+/// `BENCH_hotpath.json` in the working directory; one entry per measured
+/// piece with keys `config`, `wall-ns`, `GFLOP/s`) so the perf trajectory
+/// is tracked PR over PR. `BENCH_SMOKE=1` selects the reduced
+/// configuration used by `scripts/bench_smoke.sh`.
 pub fn micro_hotpath() -> Table {
     banner(
         "micro_hotpath",
         "§Perf hot path",
-        "QUOKA selection wallclock by cache depth (host backend, B_SA=1024).",
+        "Chunked-prefill hot path: QUOKA select + tiled attention vs the seed kernel.",
     );
-    let cfg = ModelConfig::serve_small();
-    let (nq, nkv, d) = (cfg.n_q_heads, cfg.n_kv_heads, cfg.d_head);
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (nq, nkv, d) = (32usize, 8usize, 128usize);
     let s = 128usize;
-    let ts = if full_mode() { vec![4096, 16384, 65536] } else { vec![4096, 16384] };
-    let mut table = Table::new(&["T", "select ms", "attn(sel) ms", "attn(dense) ms", "GB/s scanned"]);
+    let ts: Vec<usize> = if smoke {
+        vec![16384]
+    } else if full_mode() {
+        vec![4096, 16384, 65536]
+    } else {
+        vec![4096, 16384]
+    };
+    let cfg = if smoke {
+        BenchCfg { warmup_iters: 1, measure_iters: 3, max_seconds: 30.0 }
+    } else {
+        bench_cfg()
+    };
+    let mut table = Table::new(&[
+        "T",
+        "budget",
+        "select ms",
+        "attn tiled ms",
+        "attn seed ms",
+        "speedup",
+        "attn dense ms",
+        "GFLOP/s tiled",
+    ]);
+    let mut entries: Vec<Json> = Vec::new();
+    let mut entry = |config: String, st: &Stats, flops: f64| {
+        entries.push(Json::obj(vec![
+            ("config", Json::str(config)),
+            ("wall-ns", Json::num(st.mean_ns)),
+            ("GFLOP/s", Json::num(flops / st.mean_ns)),
+        ]));
+    };
     for &t in &ts {
+        let budget = t * 12 / 100; // ≈ 12 % of the cache
+        let shape = format!("T={t} GQA={nq}q/{nkv}kv d={d} s={s} budget={budget}");
         let mut rng = Rng::new(91);
         let q = rng.normal_vec(nq * s * d, 1.0);
         let k_self = rng.normal_vec(nkv * s * d, 1.0);
@@ -259,31 +300,70 @@ pub fn micro_hotpath() -> Table {
         let quoka = policy_by_name("quoka").unwrap();
         let mut ctx = SelectCtx::new(0);
         let qv = QChunk::new(&q, nq, s, d);
-        let sel_stats = bench(bench_cfg(), || {
-            let sel = quoka.select(&qv, &cache.k_view(), 1024, &mut ctx);
+        let sel_stats = bench(cfg, || {
+            let sel = quoka.select(&qv, &cache.k_view(), budget, &mut ctx);
             std::hint::black_box(&sel);
         });
-        let sel = quoka.select(&qv, &cache.k_view(), 1024, &mut ctx);
+        // QUOKA scan flops: n_q_eff pre-aggregated queries × T keys × 2d
+        // per KV head (n_q from the paper-default config, not hardcoded).
+        let n_q_eff = crate::select::QuokaConfig::default().n_q.min(s) as f64;
+        let scan_flops = nkv as f64 * t as f64 * n_q_eff * 2.0 * d as f64;
+        entry(format!("select_quoka {shape}"), &sel_stats, scan_flops);
+
+        let sel = quoka.select(&qv, &cache.k_view(), budget, &mut ctx);
+        let n_sel: usize = (0..nkv).map(|h| sel.head_len(h, t)).sum::<usize>() / nkv;
         let mut out = vec![0.0f32; nq * s * d];
-        let mut scores = Vec::new();
-        let attn_sel = bench(bench_cfg(), || {
-            chunk_attention(&q, nq, s, d, &k_self, &v_self, &cache, &sel, &mut scores, &mut out);
+        let mut scratch = AttnScratch::new();
+        let attn_tiled = bench(cfg, || {
+            chunk_attention(&q, nq, s, d, &k_self, &v_self, &cache, &sel, &mut scratch, &mut out);
+            std::hint::black_box(&out);
         });
-        let attn_dense = bench(bench_cfg(), || {
+        // QKᵀ + AV over (selected past + causal self): 4d flops per
+        // (query, visible key).
+        let attn_flops =
+            (nq * s) as f64 * (n_sel as f64 + (s as f64 + 1.0) / 2.0) * (4 * d) as f64;
+        entry(format!("attn_tiled {shape}"), &attn_tiled, attn_flops);
+
+        let attn_seed = bench(cfg, || {
+            reference_chunk_attention(&q, nq, s, d, &k_self, &v_self, &cache, &sel, &mut out);
+            std::hint::black_box(&out);
+        });
+        entry(format!("attn_seed {shape}"), &attn_seed, attn_flops);
+
+        let attn_dense = bench(cfg, || {
             chunk_attention(
-                &q, nq, s, d, &k_self, &v_self, &cache, &Selection::All, &mut scores, &mut out,
+                &q, nq, s, d, &k_self, &v_self, &cache, &Selection::All, &mut scratch, &mut out,
             );
+            std::hint::black_box(&out);
         });
-        let bytes = (nkv * t * d * 4) as f64;
+        let dense_flops = (nq * s) as f64 * (t as f64 + (s as f64 + 1.0) / 2.0) * (4 * d) as f64;
+        entry(format!("attn_dense {shape}"), &attn_dense, dense_flops);
+
         table.row(vec![
             t.to_string(),
+            budget.to_string(),
             format!("{:.2}", sel_stats.mean_ms()),
-            format!("{:.2}", attn_sel.mean_ms()),
+            format!("{:.2}", attn_tiled.mean_ms()),
+            format!("{:.2}", attn_seed.mean_ms()),
+            format!("{:.2}x", attn_seed.mean_ns / attn_tiled.mean_ns),
             format!("{:.2}", attn_dense.mean_ms()),
-            format!("{:.2}", bytes / sel_stats.mean_ns),
+            format!("{:.2}", attn_flops / attn_tiled.mean_ns),
         ]);
     }
     table.print();
+    println!("speedup = seed scalar kernel / tiled kernel on the same QUOKA selection\n");
+
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    let doc = Json::obj(vec![
+        ("bench", Json::str("micro_hotpath")),
+        ("mode", Json::str(if smoke { "smoke" } else { "full" })),
+        ("entries", Json::arr(entries)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
     table
 }
 

@@ -120,10 +120,10 @@ pub fn eval_policy(
             let mut hit = 0usize;
             let mut total = 0usize;
             for h in 0..nkv {
-                let idx = sel.head_indices(h, t_past);
+                let hs = sel.head(h, t_past);
                 for want in truth.clone() {
                     total += 1;
-                    if idx.binary_search(&(want as u32)).is_ok() {
+                    if hs.contains(want as u32) {
                         hit += 1;
                     }
                 }
@@ -172,7 +172,8 @@ fn fidelity(q: &QChunk, k: &KCache, v: &[f32], sel: &Selection, rows: &[usize]) 
         let kv_h = h / g;
         let khead = k.head(kv_h);
         let vhead = &v[kv_h * t * d..(kv_h + 1) * t * d];
-        let idx = sel.head_indices(kv_h, t);
+        // Borrowed selection view — no per-(head, probe) index clone.
+        let hs = sel.head(kv_h, t);
         for &r in rows {
             let qrow = q.query(h, r);
             // Dense.
@@ -187,15 +188,15 @@ fn fidelity(q: &QChunk, k: &KCache, v: &[f32], sel: &Selection, rows: &[usize]) 
                 }
             }
             // Sparse (same computation restricted to the selection).
-            let mut slog: Vec<f32> = idx
+            let mut slog: Vec<f32> = hs
                 .iter()
-                .map(|&ti| dot(qrow, &khead[ti as usize * d..(ti as usize + 1) * d]) * scale)
+                .map(|ti| dot(qrow, &khead[ti * d..(ti + 1) * d]) * scale)
                 .collect();
             softmax(&mut slog);
             let mut os = vec![0.0f32; d];
-            for (j, &ti) in idx.iter().enumerate() {
+            for (j, ti) in hs.iter().enumerate() {
                 if slog[j] > 1e-8 {
-                    axpy(slog[j], &vhead[ti as usize * d..(ti as usize + 1) * d], &mut os);
+                    axpy(slog[j], &vhead[ti * d..(ti + 1) * d], &mut os);
                 }
             }
             dense_out.extend_from_slice(&od);

@@ -6,15 +6,71 @@
 //! everything selected is in the past) concatenated with the chunk's own
 //! keys under a causal mask. The full K/V is always appended to the cache
 //! afterwards; QUOKA sparsifies attention, it does not evict.
+//!
+//! ## Kernel architecture (group-tiled + online softmax)
+//!
+//! The hot path is a *group-tiled* kernel. Work is split into
+//! `(kv_head, query-block)` tasks; each task
+//!
+//! 1. resolves its KV head's selection **once per GQA group** (the seed
+//!    kernel re-materialized the same index list per query head) via the
+//!    borrowed [`Selection::head`] view,
+//! 2. walks the selected past in key tiles of [`KTILE`] rows, **gathering
+//!    each tile's K/V rows into contiguous scratch** so the score and
+//!    value loops stream sequential memory instead of chasing random cache
+//!    rows (`Selection::All` skips the gather — the head slab is already
+//!    contiguous),
+//! 3. scores every query of the group against the tile with the
+//!    register-blocked [`qk_block`] micro-kernel (2 queries × 4 keys), and
+//! 4. folds the tile into the output with a flash-style **online softmax**
+//!    ([`online_softmax_update`]): the score buffer shrinks from
+//!    O(selected + s) per query to tile size, V accumulation streams the
+//!    gathered tile, and a running (max, denominator) pair per query row
+//!    replaces the full-row normalization pass.
+//!
+//! The chunk's own keys are processed the same way with a causal bound
+//! (query `i` sees self positions `0..=i`) — no ±∞ score sentinels, masked
+//! positions are simply never scored.
+//!
+//! All tile/state buffers live in a caller-owned [`AttnScratch`] arena
+//! (one slot per worker) so steady-state chunk processing performs
+//! **no heap allocation** in the attention inner loop.
+//!
+//! [`KvBuffers`] additionally maintains an **incremental key-norm cache**:
+//! `1/‖k‖` per key, computed once at `append` time and exposed through
+//! `KCache::inv_norm` to every cosine-scoring selection policy (QUOKA,
+//! KeyDiff, …), deleting their per-chunk × per-layer O(T·d)
+//! renormalization scans.
+//!
+//! The seed scalar kernel is kept verbatim as
+//! [`reference_chunk_attention`] — the parity oracle for
+//! `rust/tests/attn_parity.rs` and the baseline the `micro_hotpath` bench
+//! measures speedup against.
 
-use crate::select::Selection;
-use crate::tensor::ops::{dot, softmax};
+use crate::select::{fit, HeadSel, Selection};
+use crate::tensor::ops::{av_accum, dot, l2_norm, qk_block, qk_dots, softmax};
+use crate::util::threadpool::SyncPtr;
+
+/// Key rows per gathered tile. 128 rows × d=128 × 4 B = 64 KiB per K/V
+/// tile — sized so one K tile + one V tile + the score block stay L2
+/// resident while still amortizing the gather.
+const KTILE: usize = 128;
+
+/// Query rows per task block (per KV head). Small enough that
+/// `n_kv × s/QBLOCK` tasks expose parallelism beyond the KV-head count,
+/// large enough that gathered tiles are reused across `g × QBLOCK` query
+/// rows.
+const QBLOCK: usize = 16;
 
 /// Growable per-layer KV storage, layout `[n_kv, capacity, d]` per tensor.
 #[derive(Clone, Debug)]
 pub struct KvBuffers {
     pub k: Vec<f32>,
     pub v: Vec<f32>,
+    /// Incremental key-norm cache: `1/‖k(h, i)‖` (0 for zero keys), layout
+    /// `[n_kv, capacity]`. Filled at `append` time, so cosine-scoring
+    /// policies never rescan the cache to renormalize.
+    pub k_inv_norm: Vec<f32>,
     pub n_kv: usize,
     pub d: usize,
     /// Valid rows per head.
@@ -29,6 +85,7 @@ impl KvBuffers {
         KvBuffers {
             k: vec![0.0; n_kv * cap * d],
             v: vec![0.0; n_kv * cap * d],
+            k_inv_norm: vec![0.0; n_kv * cap],
             n_kv,
             d,
             t: 0,
@@ -37,22 +94,28 @@ impl KvBuffers {
     }
 
     /// Append `s` tokens of per-head K/V (layout `[n_kv, s, d]`), growing
-    /// geometrically when needed.
+    /// geometrically when needed. Inverse key norms for the new rows are
+    /// computed here, once, and cached alongside the keys.
     pub fn append(&mut self, k_new: &[f32], v_new: &[f32], s: usize) {
         debug_assert_eq!(k_new.len(), self.n_kv * s * self.d);
         if self.t + s > self.capacity {
             let new_cap = (self.capacity * 2).max(self.t + s);
             let mut k2 = vec![0.0; self.n_kv * new_cap * self.d];
             let mut v2 = vec![0.0; self.n_kv * new_cap * self.d];
+            let mut n2 = vec![0.0; self.n_kv * new_cap];
             for h in 0..self.n_kv {
                 let src = h * self.capacity * self.d;
                 let dst = h * new_cap * self.d;
                 let n = self.t * self.d;
                 k2[dst..dst + n].copy_from_slice(&self.k[src..src + n]);
                 v2[dst..dst + n].copy_from_slice(&self.v[src..src + n]);
+                let nsrc = h * self.capacity;
+                let ndst = h * new_cap;
+                n2[ndst..ndst + self.t].copy_from_slice(&self.k_inv_norm[nsrc..nsrc + self.t]);
             }
             self.k = k2;
             self.v = v2;
+            self.k_inv_norm = n2;
             self.capacity = new_cap;
         }
         for h in 0..self.n_kv {
@@ -61,6 +124,12 @@ impl KvBuffers {
             let n = s * self.d;
             self.k[dst..dst + n].copy_from_slice(&k_new[src..src + n]);
             self.v[dst..dst + n].copy_from_slice(&v_new[src..src + n]);
+            for i in 0..s {
+                let row = &k_new[(h * s + i) * self.d..(h * s + i + 1) * self.d];
+                let norm = l2_norm(row);
+                self.k_inv_norm[h * self.capacity + self.t + i] =
+                    if norm > 0.0 { 1.0 / norm } else { 0.0 };
+            }
         }
         self.t += s;
     }
@@ -78,26 +147,80 @@ impl KvBuffers {
         &self.v[base..base + self.d]
     }
 
-    /// View as a selection-policy cache.
+    /// View as a selection-policy cache (carries the incremental norm
+    /// cache, so cosine policies skip their renormalization pass).
     pub fn k_view(&self) -> crate::select::KCache<'_> {
-        crate::select::KCache::new(&self.k, self.n_kv, self.t, self.capacity, self.d)
+        crate::select::KCache::with_norms(
+            &self.k,
+            self.n_kv,
+            self.t,
+            self.capacity,
+            self.d,
+            &self.k_inv_norm,
+        )
     }
 
-    /// Bytes currently resident (both K and V).
+    /// Bytes currently resident (K, V and the key-norm cache).
     pub fn resident_bytes(&self) -> usize {
-        2 * self.n_kv * self.capacity * self.d * 4
+        (2 * self.n_kv * self.capacity * self.d + self.n_kv * self.capacity) * 4
     }
 }
 
-/// Chunked-prefill attention.
+/// Reusable scratch arenas for the tiled attention kernel: one slot per
+/// *worker* (tasks are strided across workers, each of which reuses its
+/// slot serially), grown on demand and reused across calls — zero heap
+/// allocation in the steady state, and retained memory scales with core
+/// count rather than chunk size.
+#[derive(Default)]
+pub struct AttnScratch {
+    workers: Vec<TaskScratch>,
+}
+
+#[derive(Default)]
+struct TaskScratch {
+    /// Gathered contiguous K rows for the current tile, `[KTILE, d]`.
+    k_tile: Vec<f32>,
+    /// Gathered contiguous V rows for the current tile, `[KTILE, d]`.
+    v_tile: Vec<f32>,
+    /// Score block `[QBLOCK, KTILE]` — tile-local, replaces the seed
+    /// kernel's O(selected + s) per-query score row.
+    scores: Vec<f32>,
+    /// Online-softmax running max per (group head, query row).
+    m: Vec<f32>,
+    /// Online-softmax running denominator per (group head, query row).
+    l: Vec<f32>,
+}
+
+impl AttnScratch {
+    pub fn new() -> AttnScratch {
+        AttnScratch::default()
+    }
+
+    /// Total floats currently held across all worker arenas — test hook
+    /// for the "no steady-state allocation" invariant (stable across
+    /// repeated calls of the same shape).
+    pub fn allocated_floats(&self) -> usize {
+        self.workers
+            .iter()
+            .map(|t| {
+                t.k_tile.capacity()
+                    + t.v_tile.capacity()
+                    + t.scores.capacity()
+                    + t.m.capacity()
+                    + t.l.capacity()
+            })
+            .sum()
+    }
+}
+
+/// Chunked-prefill attention (group-tiled, online-softmax kernel).
 ///
 /// * `q` — `[n_q_heads, s, d]` RoPE'd queries for the chunk.
 /// * `k_self`/`v_self` — `[n_kv, s, d]` the chunk's own keys/values.
 /// * `cache` — past KV (`cache.t` rows, *excluding* the current chunk).
 /// * `sel` — selection over the past cache.
+/// * `scratch` — reusable tile/state arenas (see [`AttnScratch`]).
 /// * `out` — `[n_q_heads, s, d]` attention output (overwritten).
-///
-/// Scratch slices (`scores`) must hold `cache.t + s` f32s.
 #[allow(clippy::too_many_arguments)]
 pub fn chunk_attention(
     q: &[f32],
@@ -108,7 +231,7 @@ pub fn chunk_attention(
     v_self: &[f32],
     cache: &KvBuffers,
     sel: &Selection,
-    scores: &mut Vec<f32>,
+    scratch: &mut AttnScratch,
     out: &mut [f32],
 ) {
     debug_assert_eq!(q.len(), n_q_heads * s * d);
@@ -117,9 +240,287 @@ pub fn chunk_attention(
     let g = n_q_heads / n_kv;
     let t = cache.t;
 
-    // Heads are fully independent; fan the per-head kernel across the
-    // machine when the work is large enough to amortize thread wake-ups
-    // (§Perf: 3.4x on the dense 16k chunk at 8 heads).
+    let n_qblocks = s.div_ceil(QBLOCK);
+    let base_tasks = n_kv * n_qblocks;
+
+    // Tasks are fully independent; fan across the machine when the work is
+    // large enough to amortize thread wake-ups. Tasks are strided across
+    // workers (near-uniform cost per task), each worker serially reusing
+    // one scratch slot — so retained scratch is O(workers), not O(tasks).
+    let work = n_q_heads * s * (t + s) * d;
+    let workers_avail = if work > 1 << 21 {
+        crate::util::threadpool::default_workers()
+    } else {
+        1
+    };
+    // When (kv_head, q-block) tasks alone can't occupy the machine — the
+    // decode path has n_qblocks == 1, capping tasks at n_kv — split each
+    // GQA group across tasks as well. This repeats the tile gather per
+    // sub-group, so it's only enabled when tasks are scarce.
+    let g_split = if workers_avail > base_tasks {
+        workers_avail.div_ceil(base_tasks).min(g).max(1)
+    } else {
+        1
+    };
+    let heads_per_task = g.div_ceil(g_split);
+    let n_tasks = base_tasks * g_split;
+    let workers = workers_avail.min(n_tasks);
+    if scratch.workers.len() < workers {
+        scratch.workers.resize_with(workers, TaskScratch::default);
+    }
+
+    let out_ptr = SyncPtr::new(out.as_mut_ptr());
+    let worker_ptr = SyncPtr::new(scratch.workers.as_mut_ptr());
+    crate::util::threadpool::parallel_for(workers, workers, |w| {
+        // SAFETY: worker `w` owns exactly one scratch slot, and its strided
+        // task set writes exclusively to its own (head, query-row) slabs.
+        let ts = unsafe { &mut *worker_ptr.get().add(w) };
+        let mut task = w;
+        while task < n_tasks {
+            let kv = task / (n_qblocks * g_split);
+            let rem = task % (n_qblocks * g_split);
+            let qb = rem / g_split;
+            let gs = rem % g_split;
+            let q_lo = qb * QBLOCK;
+            let q_hi = ((qb + 1) * QBLOCK).min(s);
+            let gq_lo = gs * heads_per_task;
+            let gq_hi = ((gs + 1) * heads_per_task).min(g);
+            if gq_lo < gq_hi {
+                group_block_attention(
+                    q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, k_self, v_self, cache, sel, ts,
+                    out_ptr,
+                );
+            }
+            task += workers;
+        }
+    });
+}
+
+/// Re-borrow one output row `(h, qi)` from the shared output pointer.
+///
+/// # Safety
+/// The caller must be the unique writer of this row for the duration of
+/// the borrow (guaranteed by the disjoint task decomposition).
+#[inline]
+unsafe fn raw_row<'a>(p: SyncPtr<f32>, offset: usize, d: usize) -> &'a mut [f32] {
+    std::slice::from_raw_parts_mut(p.get().add(offset), d)
+}
+
+/// Tiled attention for one task: query heads `gq_lo..gq_hi` of KV head
+/// `kv`'s GQA group over query rows `q_lo..q_hi`.
+#[allow(clippy::too_many_arguments)]
+fn group_block_attention(
+    q: &[f32],
+    s: usize,
+    d: usize,
+    g: usize,
+    kv: usize,
+    gq_lo: usize,
+    gq_hi: usize,
+    q_lo: usize,
+    q_hi: usize,
+    k_self: &[f32],
+    v_self: &[f32],
+    cache: &KvBuffers,
+    sel: &Selection,
+    ts: &mut TaskScratch,
+    out: SyncPtr<f32>,
+) {
+    let t = cache.t;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mb = q_hi - q_lo;
+    let rows = (gq_hi - gq_lo) * mb;
+
+    let TaskScratch { k_tile, v_tile, scores, m, l } = ts;
+    fit(m, rows).fill(f32::NEG_INFINITY);
+    fit(l, rows).fill(0.0);
+    fit(scores, QBLOCK * KTILE);
+
+    // Zero this task's output slabs (accumulated unnormalized, divided by
+    // the online-softmax denominator at the end).
+    for gq in gq_lo..gq_hi {
+        let h = kv * g + gq;
+        for qi in q_lo..q_hi {
+            unsafe { raw_row(out, (h * s + qi) * d, d) }.fill(0.0);
+        }
+    }
+
+    // ---- selected past ----
+    let hsel = sel.head(kv, t);
+    let n_past = hsel.len();
+    let head_base = kv * cache.capacity * d;
+    let khead = &cache.k[head_base..head_base + t * d];
+    let vhead = &cache.v[head_base..head_base + t * d];
+
+    let mut tile_lo = 0;
+    while tile_lo < n_past {
+        let tile_hi = (tile_lo + KTILE).min(n_past);
+        let tn = tile_hi - tile_lo;
+        // Gather the tile's K/V rows into contiguous scratch; a full
+        // selection reads the (already contiguous) head slab in place.
+        let (kt, vt): (&[f32], &[f32]) = match hsel {
+            HeadSel::All(_) => (&khead[tile_lo * d..tile_hi * d], &vhead[tile_lo * d..tile_hi * d]),
+            HeadSel::Idx(idx) => {
+                let kt = fit(k_tile, KTILE * d);
+                let vt = fit(v_tile, KTILE * d);
+                for (o, &pi) in idx[tile_lo..tile_hi].iter().enumerate() {
+                    let src = pi as usize * d;
+                    kt[o * d..(o + 1) * d].copy_from_slice(&khead[src..src + d]);
+                    vt[o * d..(o + 1) * d].copy_from_slice(&vhead[src..src + d]);
+                }
+                (&kt[..tn * d], &vt[..tn * d])
+            }
+        };
+        for gq in gq_lo..gq_hi {
+            let h = kv * g + gq;
+            let qs = &q[(h * s + q_lo) * d..(h * s + q_hi) * d];
+            let blk = &mut scores[..mb * tn];
+            qk_block(qs, mb, kt, tn, d, blk);
+            for r in 0..mb {
+                let row = &mut blk[r * tn..(r + 1) * tn];
+                for v in row.iter_mut() {
+                    *v *= scale;
+                }
+                let orow = unsafe { raw_row(out, (h * s + q_lo + r) * d, d) };
+                let ri = (gq - gq_lo) * mb + r;
+                online_softmax_update(row, vt, tn, d, &mut m[ri], &mut l[ri], orow);
+            }
+        }
+        tile_lo = tile_hi;
+    }
+
+    // ---- causal self (chunk's own keys) ----
+    // Query `qi` sees self positions `0..=qi`; masked positions are never
+    // scored, so no ±∞ sentinels enter the online softmax.
+    let ks = &k_self[kv * s * d..(kv + 1) * s * d];
+    let vs = &v_self[kv * s * d..(kv + 1) * s * d];
+    let mut tile_lo = 0;
+    while tile_lo < q_hi {
+        let tile_hi = (tile_lo + KTILE).min(q_hi);
+        let kt = &ks[tile_lo * d..tile_hi * d];
+        let vt = &vs[tile_lo * d..tile_hi * d];
+        for gq in gq_lo..gq_hi {
+            let h = kv * g + gq;
+            for qi in q_lo.max(tile_lo)..q_hi {
+                let visible = (qi + 1).min(tile_hi) - tile_lo;
+                let qrow = &q[(h * s + qi) * d..(h * s + qi + 1) * d];
+                let row = &mut scores[..visible];
+                qk_dots(qrow, kt, visible, d, row);
+                for v in row.iter_mut() {
+                    *v *= scale;
+                }
+                let orow = unsafe { raw_row(out, (h * s + qi) * d, d) };
+                let ri = (gq - gq_lo) * mb + (qi - q_lo);
+                online_softmax_update(row, vt, visible, d, &mut m[ri], &mut l[ri], orow);
+            }
+        }
+        tile_lo = tile_hi;
+    }
+
+    // ---- finalize: divide by the online-softmax denominator ----
+    for gq in gq_lo..gq_hi {
+        let h = kv * g + gq;
+        for r in 0..mb {
+            let ri = (gq - gq_lo) * mb + r;
+            let orow = unsafe { raw_row(out, (h * s + q_lo + r) * d, d) };
+            if l[ri] > 0.0 {
+                let inv = 1.0 / l[ri];
+                for v in orow.iter_mut() {
+                    *v *= inv;
+                }
+            } else {
+                // No visible key at all (t == 0 handled by the self part;
+                // defensive for fully-empty rows).
+                orow.fill(0.0);
+            }
+        }
+    }
+}
+
+/// Flash-style online softmax: fold one tile of (already scaled) logits
+/// and its V rows into the running `(max, denominator, unnormalized
+/// output)` state for a single query row.
+fn online_softmax_update(
+    logits: &mut [f32],
+    v_tile: &[f32],
+    n: usize,
+    d: usize,
+    m: &mut f32,
+    l: &mut f32,
+    acc: &mut [f32],
+) {
+    if n == 0 {
+        return;
+    }
+    let mut tile_max = f32::NEG_INFINITY;
+    for &v in logits[..n].iter() {
+        if v > tile_max {
+            tile_max = v;
+        }
+    }
+    let new_m = if *m > tile_max { *m } else { tile_max };
+    if *l > 0.0 && new_m > *m {
+        // Rescale previously accumulated mass to the new max.
+        let corr = (*m - new_m).exp();
+        *l *= corr;
+        for v in acc.iter_mut() {
+            *v *= corr;
+        }
+    }
+    let mut sum = 0.0;
+    for v in logits[..n].iter_mut() {
+        *v = (*v - new_m).exp();
+        sum += *v;
+    }
+    *l += sum;
+    av_accum(&logits[..n], v_tile, n, d, acc);
+    *m = new_m;
+}
+
+/// Single-query decode attention over a selected cache (which must already
+/// include all generated tokens; the current token's K/V is passed
+/// separately, mirroring the prefill path with `s = 1`).
+#[allow(clippy::too_many_arguments)]
+pub fn decode_attention(
+    q: &[f32],
+    n_q_heads: usize,
+    d: usize,
+    k_self: &[f32],
+    v_self: &[f32],
+    cache: &KvBuffers,
+    sel: &Selection,
+    scratch: &mut AttnScratch,
+    out: &mut [f32],
+) {
+    chunk_attention(q, n_q_heads, 1, d, k_self, v_self, cache, sel, scratch, out)
+}
+
+/// The seed kernel, kept verbatim as the parity/bench reference: one key
+/// at a time over randomly-gathered cache rows, per-head index
+/// materialization, a full `O(selected + s)` score row per query,
+/// two-pass softmax — including the seed's per-query-head threading, so
+/// `micro_hotpath`'s tiled-vs-seed speedup compares equal parallelism and
+/// isolates the kernel rewrite. Allocating; never use on the hot path. It
+/// exists so `rust/tests/attn_parity.rs` can pin the tiled kernel against
+/// the original semantics and so the bench can report an honest speedup.
+#[allow(clippy::too_many_arguments)]
+pub fn reference_chunk_attention(
+    q: &[f32],
+    n_q_heads: usize,
+    s: usize,
+    d: usize,
+    k_self: &[f32],
+    v_self: &[f32],
+    cache: &KvBuffers,
+    sel: &Selection,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), n_q_heads * s * d);
+    debug_assert_eq!(out.len(), n_q_heads * s * d);
+    let n_kv = cache.n_kv;
+    let g = n_q_heads / n_kv;
+    let t = cache.t;
+    // The seed's threading heuristic, verbatim.
     let work = n_q_heads * s * (t + s) * d;
     let threads = if work > 1 << 21 {
         crate::util::threadpool::default_workers().min(n_q_heads)
@@ -127,34 +528,26 @@ pub fn chunk_attention(
         1
     };
     if threads <= 1 {
-        let row = scores;
+        let mut scores = Vec::new();
         for h in 0..n_q_heads {
-            head_attention(q, h, g, s, d, k_self, v_self, cache, sel, row, out_slab(out, h, s, d));
+            let slab = &mut out[h * s * d..(h + 1) * s * d];
+            reference_head_attention(q, h, g, s, d, k_self, v_self, cache, sel, &mut scores, slab);
         }
     } else {
-        let out_ptr = SyncPtr(out.as_mut_ptr());
-        let p = &out_ptr;
+        let out_ptr = SyncPtr::new(out.as_mut_ptr());
         crate::util::threadpool::parallel_for(n_q_heads, threads, |h| {
-            let mut row = Vec::new();
+            let mut scores = Vec::new();
             // SAFETY: each head writes exclusively to its own out slab.
-            let slab = unsafe { std::slice::from_raw_parts_mut(p.0.add(h * s * d), s * d) };
-            head_attention(q, h, g, s, d, k_self, v_self, cache, sel, &mut row, slab);
+            let slab =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(h * s * d), s * d) };
+            reference_head_attention(q, h, g, s, d, k_self, v_self, cache, sel, &mut scores, slab);
         });
     }
 }
 
-struct SyncPtr(*mut f32);
-unsafe impl Sync for SyncPtr {}
-unsafe impl Send for SyncPtr {}
-
-#[inline]
-fn out_slab<'a>(out: &'a mut [f32], h: usize, s: usize, d: usize) -> &'a mut [f32] {
-    &mut out[h * s * d..(h + 1) * s * d]
-}
-
-/// Attention for one query head over [selected past | causal self].
+/// Seed attention for one query head over [selected past | causal self].
 #[allow(clippy::too_many_arguments)]
-fn head_attention(
+fn reference_head_attention(
     q: &[f32],
     h: usize,
     g: usize,
@@ -170,7 +563,7 @@ fn head_attention(
     let kv = h / g;
     let t = cache.t;
     let scale = 1.0 / (d as f32).sqrt();
-    // Materialize this head's past indices once.
+    // Materialize this head's past indices once (the seed's per-head cost).
     let idx: Vec<u32> = sel.head_indices(kv, t);
     let n_past = idx.len();
     let total = n_past + s;
@@ -210,24 +603,6 @@ fn head_attention(
             }
         }
     }
-}
-
-/// Single-query decode attention over a selected cache (which must already
-/// include all generated tokens; the current token's K/V is passed
-/// separately, mirroring the prefill path with `s = 1`).
-#[allow(clippy::too_many_arguments)]
-pub fn decode_attention(
-    q: &[f32],
-    n_q_heads: usize,
-    d: usize,
-    k_self: &[f32],
-    v_self: &[f32],
-    cache: &KvBuffers,
-    sel: &Selection,
-    scores: &mut Vec<f32>,
-    out: &mut [f32],
-) {
-    chunk_attention(q, n_q_heads, 1, d, k_self, v_self, cache, sel, scores, out)
 }
 
 #[cfg(test)]
@@ -272,6 +647,22 @@ mod tests {
     }
 
     #[test]
+    fn norm_cache_tracks_appends() {
+        let (_, _, _, cache) = setup(13, 2, 2, 2, 6);
+        for h in 0..cache.n_kv {
+            for i in 0..cache.t {
+                let n = crate::tensor::ops::l2_norm(cache.key(h, i));
+                let want = if n > 0.0 { 1.0 / n } else { 0.0 };
+                let got = cache.k_inv_norm[h * cache.capacity + i];
+                assert!((got - want).abs() < 1e-6, "({h},{i}): {got} vs {want}");
+            }
+        }
+        let kv = cache.k_view();
+        assert!(kv.inv_norms.is_some());
+        assert!((kv.inv_norm(0, 3) - cache.k_inv_norm[3]).abs() < 1e-9);
+    }
+
+    #[test]
     fn dense_attention_weights_sum_to_one() {
         // With all-equal values, output must equal that value regardless of
         // the score distribution (softmax weights sum to 1).
@@ -280,7 +671,7 @@ mod tests {
         let vs = vec![2.5f32; n_kv * s * d];
         cache.v.iter_mut().for_each(|x| *x = 2.5);
         let mut out = vec![0.0; n_q * s * d];
-        let mut scratch = Vec::new();
+        let mut scratch = AttnScratch::new();
         chunk_attention(&q, n_q, s, d, &ks, &vs, &cache, &Selection::All, &mut scratch, &mut out);
         for x in &out {
             assert!((x - 2.5).abs() < 1e-4, "{x}");
@@ -300,7 +691,7 @@ mod tests {
         vs[2 * d] = 100.0; // value spike at self position 2
         let cache = KvBuffers::new(n_kv, d, 1);
         let mut out = vec![0.0; s * d];
-        let mut scratch = Vec::new();
+        let mut scratch = AttnScratch::new();
         chunk_attention(&q, n_q, s, d, &ks, &vs, &cache, &Selection::All, &mut scratch, &mut out);
         assert!(out[0].abs() < 1.0, "q0 saw the future: {}", out[0]);
         assert!(out[2 * d].abs() > 1.0, "q2 should see position 2");
@@ -318,7 +709,7 @@ mod tests {
         }
         let mut with = vec![0.0; n_q * s * d];
         let mut without = vec![0.0; n_q * s * d];
-        let mut scratch = Vec::new();
+        let mut scratch = AttnScratch::new();
         let sel_with = Selection::PerHead(vec![vec![1, 5], vec![1, 5]]);
         let sel_without = Selection::PerHead(vec![vec![1, 2], vec![1, 2]]);
         chunk_attention(&q, n_q, s, d, &ks, &vs, &cache, &sel_with, &mut scratch, &mut with);
@@ -333,7 +724,7 @@ mod tests {
         let (q, ks, vs, cache) = setup(t, s, n_q, n_kv, d);
         let mut a = vec![0.0; n_q * s * d];
         let mut b = vec![0.0; n_q * s * d];
-        let mut scratch = Vec::new();
+        let mut scratch = AttnScratch::new();
         chunk_attention(&q, n_q, s, d, &ks, &vs, &cache, &Selection::All, &mut scratch, &mut a);
         let explicit = Selection::PerHead(vec![(0..t as u32).collect(), (0..t as u32).collect()]);
         chunk_attention(&q, n_q, s, d, &ks, &vs, &cache, &explicit, &mut scratch, &mut b);
@@ -348,9 +739,24 @@ mod tests {
         let (q, ks, vs, cache) = setup(t, 1, n_q, n_kv, d);
         let mut a = vec![0.0; n_q * d];
         let mut b = vec![0.0; n_q * d];
-        let mut scratch = Vec::new();
+        let mut scratch = AttnScratch::new();
         chunk_attention(&q, n_q, 1, d, &ks, &vs, &cache, &Selection::All, &mut scratch, &mut a);
         decode_attention(&q, n_q, d, &ks, &vs, &cache, &Selection::All, &mut scratch, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tiled_matches_reference_smoke() {
+        // The full parity matrix lives in rust/tests/attn_parity.rs; this
+        // in-module smoke check catches gross regressions fast.
+        let (t, s, n_q, n_kv, d) = (40usize, 9usize, 4usize, 2usize, 12usize);
+        let (q, ks, vs, cache) = setup(t, s, n_q, n_kv, d);
+        let sel = Selection::PerHead(vec![vec![0, 3, 7, 21, 39], vec![2, 5, 11, 30]]);
+        let mut a = vec![0.0; n_q * s * d];
+        let mut b = vec![0.0; n_q * s * d];
+        let mut scratch = AttnScratch::new();
+        chunk_attention(&q, n_q, s, d, &ks, &vs, &cache, &sel, &mut scratch, &mut a);
+        reference_chunk_attention(&q, n_q, s, d, &ks, &vs, &cache, &sel, &mut b);
+        assert!(crate::tensor::ops::rel_l2(&a, &b) < 1e-5);
     }
 }

@@ -6,12 +6,12 @@
 //! chunked prefill per Eq. (2) with a pluggable [`SelectionPolicy`] applied
 //! to the KV cache of every layer, plus single-token decode.
 
-use super::attention::{chunk_attention, KvBuffers};
+use super::attention::{chunk_attention, AttnScratch, KvBuffers};
 use super::config::ModelConfig;
 use super::weights::Weights;
-use crate::select::{QChunk, SelectCtx, Selection, SelectionPolicy};
+use crate::select::{fit, QChunk, SelectCtx, Selection, SelectionPolicy};
 use crate::tensor::matmul::matmul;
-use crate::tensor::ops::{rmsnorm, rope, silu};
+use crate::tensor::ops::{rmsnorm, silu, RopeTable};
 
 /// Per-sequence inference state: one KV buffer per layer + token count.
 pub struct SeqState {
@@ -51,25 +51,21 @@ struct FwdScratch {
     ffn_gate: Vec<f32>,
     ffn_up: Vec<f32>,
     ffn_out: Vec<f32>,
-    scores: Vec<f32>,
+    attn: AttnScratch,
 }
 
-fn fit(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
-    if buf.len() < n {
-        buf.resize(n, 0.0);
-    }
-    &mut buf[..n]
-}
-
-/// The host model: weights + scratch.
+/// The host model: weights + scratch + the precomputed RoPE frequency
+/// table (one `theta^(-2i/d)` table per model instead of per token).
 pub struct HostModel {
     pub w: Weights,
+    rope: RopeTable,
     scratch: std::cell::RefCell<FwdScratch>,
 }
 
 impl HostModel {
     pub fn new(w: Weights) -> HostModel {
-        HostModel { w, scratch: Default::default() }
+        let rope = RopeTable::new(w.cfg.d_head, w.cfg.rope_theta);
+        HostModel { w, rope, scratch: Default::default() }
     }
 
     pub fn cfg(&self) -> &ModelConfig {
@@ -131,7 +127,7 @@ impl HostModel {
                     let dst = (h * s + i) * dh;
                     q_heads[dst..dst + dh].copy_from_slice(&q_proj[src..src + dh]);
                     if cfg.use_rope {
-                        rope(&mut q_heads[dst..dst + dh], state.pos + i, cfg.rope_theta);
+                        self.rope.apply(&mut q_heads[dst..dst + dh], state.pos + i);
                     }
                 }
             }
@@ -143,7 +139,7 @@ impl HostModel {
                     let dst = (h * s + i) * dh;
                     k_heads[dst..dst + dh].copy_from_slice(&k_proj[src..src + dh]);
                     if cfg.use_rope {
-                        rope(&mut k_heads[dst..dst + dh], state.pos + i, cfg.rope_theta);
+                        self.rope.apply(&mut k_heads[dst..dst + dh], state.pos + i);
                     }
                     v_heads[dst..dst + dh].copy_from_slice(&v_proj[src..src + dh]);
                 }
@@ -168,7 +164,7 @@ impl HostModel {
                 &v_heads[..nkv * s * dh],
                 cache,
                 &sel,
-                &mut sc.scores,
+                &mut sc.attn,
                 attn_heads,
             );
 

@@ -6,7 +6,7 @@
 //! but blind to what the current queries actually need, which is why the
 //! paper reports it trailing query-aware methods on RULER.
 
-use super::{topk_ascending, KCache, QChunk, SelectCtx, Selection, SelectionPolicy};
+use super::{topk_ascending_into, KCache, QChunk, Scratch, SelectCtx, Selection, SelectionPolicy};
 use crate::tensor::ops::{dot, l2_norm, mean_rows};
 
 /// Key-geometry-only selection.
@@ -27,21 +27,24 @@ impl SelectionPolicy for KeyDiff {
         let mut per_head = Vec::with_capacity(k.n_heads);
         for kv in 0..k.n_heads {
             let khead = k.head(kv);
-            let (scores, mean) = ctx.scratch.bufs_ac(t, d);
+            let cost = &mut ctx.cost;
+            let Scratch { a, c, idx, .. } = &mut ctx.scratch;
+            let (scores, mean) = (super::fit(a, t), super::fit(c, d));
             mean_rows(&khead[..t * d], t, d, mean);
             let mn = l2_norm(&*mean);
+            let inv_mn = if mn > 0.0 { 1.0 / mn } else { 0.0 };
             for ti in 0..t {
                 let key = &khead[ti * d..(ti + 1) * d];
-                let n = l2_norm(key);
-                scores[ti] = if n == 0.0 || mn == 0.0 {
-                    0.0
-                } else {
-                    -dot(key, mean) / (n * mn) // dissimilarity
-                };
+                // Key norms come from the incremental norm cache when the
+                // view carries one (computed once at append time).
+                let kinv = k.inv_norm(kv, ti);
+                scores[ti] = -dot(key, mean) * kinv * inv_mn; // dissimilarity
             }
-            ctx.cost.add_flops((t * 4 * d) as u64);
-            ctx.cost.add_bytes((t * d * 4) as u64);
-            per_head.push(topk_ascending(scores, budget));
+            // One dot per key; the norm pass is cached when available.
+            let norm_flops = if k.inv_norms.is_some() { 0 } else { 2 * d };
+            cost.add_flops((t * (2 * d + norm_flops)) as u64);
+            cost.add_bytes((t * d * 4) as u64);
+            per_head.push(topk_ascending_into(scores, budget, idx));
         }
         Selection::PerHead(per_head)
     }

@@ -9,7 +9,7 @@
 //! mechanism (documented substitution, DESIGN.md §3). Loki also pays
 //! `O(d·d_l·n_Q)` per-layer basis storage, tallied in the cost counters.
 
-use super::{group_size, topk_ascending, KCache, QChunk, SelectCtx, Selection, SelectionPolicy};
+use super::{fit, group_size, topk_ascending_into, KCache, QChunk, Scratch, SelectCtx, Selection, SelectionPolicy};
 use crate::tensor::linalg::principal_components;
 use crate::tensor::ops::{dot, softmax};
 use crate::util::Rng;
@@ -75,42 +75,47 @@ impl SelectionPolicy for Loki {
         let scale = 1.0 / (d as f32).sqrt();
 
         let mut per_head = Vec::with_capacity(n_kv);
-        let mut row = vec![0.0f32; t];
         for kv in 0..n_kv {
             let khead = k.head(kv);
             let basis = self.basis_for(ctx.layer, kv, d, d_l);
-            ctx.cost.add_bytes((d * d_l * 4) as u64); // basis residency
+            let cost = &mut ctx.cost;
+            cost.add_bytes((d * d_l * 4) as u64); // basis residency
 
+            // All buffers from the scratch arena: kproj `[t, d_l]`, the
+            // score aggregate, and a (row, qproj) pair carved from one
+            // slab — zero per-call allocation.
+            let Scratch { a, b, c, idx, .. } = &mut ctx.scratch;
+            let kproj = fit(a, t * d_l);
+            let agg = fit(b, t);
+            let (row, qproj) = fit(c, t + d_l).split_at_mut(t);
             // Project keys once per call: kproj[t, d_l].
-            let (kproj, agg) = ctx.scratch.bufs_ab(t * d_l, t);
             for ti in 0..t {
                 let key = &khead[ti * d..(ti + 1) * d];
-                for (j, b) in basis.iter().enumerate() {
-                    kproj[ti * d_l + j] = dot(key, b);
+                for (j, bv) in basis.iter().enumerate() {
+                    kproj[ti * d_l + j] = dot(key, bv);
                 }
             }
-            ctx.cost.add_flops((t * d_l * 2 * d) as u64);
+            cost.add_flops((t * d_l * 2 * d) as u64);
             agg.iter_mut().for_each(|v| *v = 0.0);
-            let mut qproj = vec![0.0f32; d_l];
             for gq in 0..g {
                 let h = kv * g + gq;
                 for i in 0..q.s {
                     let qrow = q.query(h, i);
-                    for (j, b) in basis.iter().enumerate() {
-                        qproj[j] = dot(qrow, b);
+                    for (j, bv) in basis.iter().enumerate() {
+                        qproj[j] = dot(qrow, bv);
                     }
                     for ti in 0..t {
-                        row[ti] = dot(&qproj, &kproj[ti * d_l..(ti + 1) * d_l]) * scale;
+                        row[ti] = dot(&*qproj, &kproj[ti * d_l..(ti + 1) * d_l]) * scale;
                     }
-                    softmax(&mut row);
+                    softmax(row);
                     for ti in 0..t {
                         agg[ti] += row[ti];
                     }
                 }
-                ctx.cost.add_flops((q.s * (d_l * 2 * d + t * (2 * d_l + 4))) as u64);
-                ctx.cost.add_bytes((q.s * t * 4) as u64);
+                cost.add_flops((q.s * (d_l * 2 * d + t * (2 * d_l + 4))) as u64);
+                cost.add_bytes((q.s * t * 4) as u64);
             }
-            per_head.push(topk_ascending(agg, budget));
+            per_head.push(topk_ascending_into(agg, budget, idx));
         }
         Selection::PerHead(per_head)
     }

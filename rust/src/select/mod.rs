@@ -68,13 +68,48 @@ pub struct KCache<'a> {
     /// Row capacity of each head slab (`>= t`).
     pub capacity: usize,
     pub d: usize,
+    /// Cached per-key inverse L2 norms, layout `[n_heads, capacity]`,
+    /// maintained incrementally by `KvBuffers::append` (computed once per
+    /// key at insert time). `None` — e.g. for ad-hoc views built from raw
+    /// slices — falls back to recomputing norms on demand.
+    pub inv_norms: Option<&'a [f32]>,
 }
 
 impl<'a> KCache<'a> {
     pub fn new(data: &'a [f32], n_heads: usize, t: usize, capacity: usize, d: usize) -> Self {
         debug_assert!(t <= capacity);
         debug_assert_eq!(data.len(), n_heads * capacity * d);
-        KCache { data, n_heads, t, capacity, d }
+        KCache { data, n_heads, t, capacity, d, inv_norms: None }
+    }
+
+    /// View with an incremental norm cache (layout `[n_heads, capacity]`).
+    pub fn with_norms(
+        data: &'a [f32],
+        n_heads: usize,
+        t: usize,
+        capacity: usize,
+        d: usize,
+        inv_norms: &'a [f32],
+    ) -> Self {
+        debug_assert_eq!(inv_norms.len(), n_heads * capacity);
+        KCache { inv_norms: Some(inv_norms), ..KCache::new(data, n_heads, t, capacity, d) }
+    }
+
+    /// `1 / ‖key(h, i)‖` (0 for a zero key): one load when the cache view
+    /// carries incremental norms, an O(d) reduction otherwise.
+    #[inline]
+    pub fn inv_norm(&self, h: usize, i: usize) -> f32 {
+        match self.inv_norms {
+            Some(norms) => norms[h * self.capacity + i],
+            None => {
+                let n = crate::tensor::ops::l2_norm(self.key(h, i));
+                if n > 0.0 {
+                    1.0 / n
+                } else {
+                    0.0
+                }
+            }
+        }
     }
 
     /// Head `h` as a `[capacity, d]` slice (only `..t` rows valid).
@@ -101,8 +136,69 @@ pub enum Selection {
     PerHead(Vec<Vec<u32>>),
 }
 
+/// Borrowed, allocation-free view of one head's selection — what the
+/// attention kernel and eval paths iterate instead of materializing index
+/// vectors per call (`All` stays implicit as `0..t`).
+#[derive(Clone, Copy, Debug)]
+pub enum HeadSel<'a> {
+    /// All `t` past entries.
+    All(usize),
+    /// Explicit ascending, unique indices.
+    Idx(&'a [u32]),
+}
+
+impl<'a> HeadSel<'a> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            HeadSel::All(t) => *t,
+            HeadSel::Idx(v) => v.len(),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cache index of the `j`-th selected entry.
+    #[inline]
+    pub fn get(&self, j: usize) -> usize {
+        match self {
+            HeadSel::All(_) => j,
+            HeadSel::Idx(v) => v[j] as usize,
+        }
+    }
+
+    /// Membership test (O(1) for `All`, binary search otherwise — the
+    /// index lists are ascending by contract).
+    #[inline]
+    pub fn contains(&self, i: u32) -> bool {
+        match self {
+            HeadSel::All(t) => (i as usize) < *t,
+            HeadSel::Idx(v) => v.binary_search(&i).is_ok(),
+        }
+    }
+
+    /// Iterate the selected cache indices in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + 'a {
+        let this = *self;
+        (0..this.len()).map(move |j| this.get(j))
+    }
+}
+
 impl Selection {
-    /// Indices for a head, materializing `All` as `0..t`.
+    /// Borrowed per-head view — no allocation, `All` stays implicit.
+    #[inline]
+    pub fn head(&self, h: usize, t: usize) -> HeadSel<'_> {
+        match self {
+            Selection::All => HeadSel::All(t),
+            Selection::PerHead(v) => HeadSel::Idx(&v[h]),
+        }
+    }
+
+    /// Indices for a head, materializing `All` as `0..t`. Allocates; hot
+    /// paths should use the borrowed [`Selection::head`] view instead.
     pub fn head_indices(&self, h: usize, t: usize) -> Vec<u32> {
         match self {
             Selection::All => (0..t as u32).collect(),
@@ -164,55 +260,47 @@ impl SelectCtx {
 }
 
 /// Reusable scratch buffers.
+///
+/// `a`/`b`/`c` are general float arenas (policies assign roles per phase),
+/// `idx` is the shared top-k / keep-list index arena, and `workers` holds
+/// one score-block arena per fork-join worker for parallel key scans —
+/// all reused across chunks so steady-state selection allocates nothing.
 #[derive(Default)]
 pub struct Scratch {
     pub a: Vec<f32>,
     pub b: Vec<f32>,
     pub c: Vec<f32>,
     pub idx: Vec<usize>,
+    /// Per-worker tile buffers for parallelized key scans (disjoint slots,
+    /// one per worker task).
+    pub workers: Vec<Vec<f32>>,
+}
+
+/// Grow-and-borrow helper for raw scratch vectors (contents undefined).
+#[inline]
+pub(crate) fn fit(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+    &mut buf[..n]
 }
 
 impl Scratch {
     /// Borrow `a` resized to `n` (contents undefined).
     pub fn buf_a(&mut self, n: usize) -> &mut [f32] {
-        if self.a.len() < n {
-            self.a.resize(n, 0.0);
-        }
-        &mut self.a[..n]
+        fit(&mut self.a, n)
     }
     pub fn buf_b(&mut self, n: usize) -> &mut [f32] {
-        if self.b.len() < n {
-            self.b.resize(n, 0.0);
-        }
-        &mut self.b[..n]
+        fit(&mut self.b, n)
     }
     pub fn buf_c(&mut self, n: usize) -> &mut [f32] {
-        if self.c.len() < n {
-            self.c.resize(n, 0.0);
-        }
-        &mut self.c[..n]
+        fit(&mut self.c, n)
     }
 
     /// Split-borrow `a` and `b` simultaneously.
     pub fn bufs_ab(&mut self, na: usize, nb: usize) -> (&mut [f32], &mut [f32]) {
-        if self.a.len() < na {
-            self.a.resize(na, 0.0);
-        }
-        if self.b.len() < nb {
-            self.b.resize(nb, 0.0);
-        }
-        (&mut self.a[..na], &mut self.b[..nb])
-    }
-
-    /// Split-borrow `a` and `c` simultaneously.
-    pub fn bufs_ac(&mut self, na: usize, nc: usize) -> (&mut [f32], &mut [f32]) {
-        if self.a.len() < na {
-            self.a.resize(na, 0.0);
-        }
-        if self.c.len() < nc {
-            self.c.resize(nc, 0.0);
-        }
-        (&mut self.a[..na], &mut self.c[..nc])
+        let Scratch { a, b, .. } = self;
+        (fit(a, na), fit(b, nb))
     }
 }
 
@@ -246,10 +334,17 @@ pub fn group_size(n_q_heads: usize, n_kv_heads: usize) -> usize {
 /// Shared helper: top-`budget` indices of a score vector, returned
 /// ascending (the gather-friendly order that preserves token positions).
 pub fn topk_ascending(scores: &[f32], budget: usize) -> Vec<u32> {
-    crate::tensor::ops::topk_indices_sorted(scores, budget)
-        .into_iter()
-        .map(|i| i as u32)
-        .collect()
+    let mut idx = Vec::new();
+    topk_ascending_into(scores, budget, &mut idx)
+}
+
+/// [`topk_ascending`] with the transient index arena supplied by the
+/// caller (typically [`Scratch::idx`]) so only the returned `u32` list —
+/// the selection itself — is allocated.
+pub fn topk_ascending_into(scores: &[f32], budget: usize, idx: &mut Vec<usize>) -> Vec<u32> {
+    crate::tensor::ops::topk_indices_into(scores, budget, idx);
+    idx.sort_unstable();
+    idx.iter().map(|&i| i as u32).collect()
 }
 
 /// Construct a policy by name with paper-default hyperparameters. Central
@@ -301,6 +396,33 @@ mod tests {
         let all = Selection::All;
         assert_eq!(all.head_indices(0, 3), vec![0, 1, 2]);
         assert_eq!(all.total(2, 3), 6);
+    }
+
+    #[test]
+    fn head_sel_borrowed_view() {
+        let s = Selection::PerHead(vec![vec![0, 2, 7], vec![1]]);
+        let h0 = s.head(0, 9);
+        assert_eq!(h0.len(), 3);
+        assert!(h0.contains(2) && !h0.contains(3));
+        assert_eq!(h0.iter().collect::<Vec<_>>(), vec![0, 2, 7]);
+        assert_eq!(h0.get(2), 7);
+        let sel_all = Selection::All;
+        let all = sel_all.head(0, 4);
+        assert_eq!(all.len(), 4);
+        assert!(all.contains(3) && !all.contains(4));
+        assert_eq!(all.iter().collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(sel_all.head(0, 0).is_empty());
+    }
+
+    #[test]
+    fn inv_norm_fallback_matches_definition() {
+        let data = vec![3.0f32, 4.0, 0.0, 0.0, 1.0, 0.0];
+        let k = KCache::new(&data, 1, 3, 3, 2);
+        assert!((k.inv_norm(0, 0) - 0.2).abs() < 1e-6);
+        assert_eq!(k.inv_norm(0, 1), 0.0);
+        let norms = vec![0.25f32, 0.5, 1.0];
+        let kn = KCache::with_norms(&data, 1, 3, 3, 2, &norms);
+        assert_eq!(kn.inv_norm(0, 0), 0.25);
     }
 
     #[test]

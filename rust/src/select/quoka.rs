@@ -18,12 +18,14 @@
 //! The ablation switches ([`Scoring::Dot`], [`QueryAgg::Mean`]) reproduce
 //! Tables 9 and 10.
 
-use super::{group_size, topk_ascending, KCache, QChunk, SelectCtx, Selection, SelectionPolicy};
-use crate::tensor::ops::{dot, l2_norm, mean_rows, topk_indices};
+use super::{fit, group_size, topk_ascending_into, KCache, QChunk, Scratch, SelectCtx, Selection, SelectionPolicy};
+use crate::tensor::ops::{dot, l2_norm, mean_rows, qk_block, topk_indices_into};
+use crate::util::threadpool::SyncPtr;
 
-struct SyncPtr(*mut f32);
-unsafe impl Sync for SyncPtr {}
-unsafe impl Send for SyncPtr {}
+/// Key rows per scan tile: the `[n_q_eff, SCAN_TILE]` score block stays
+/// cache-resident (16 × 512 × 4 B = 32 KiB) while tiles remain large
+/// enough to amortize the fork-join handoff.
+const SCAN_TILE: usize = 512;
 
 /// Key-relevance scoring function (Table 9 ablation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -72,35 +74,47 @@ impl Quoka {
     }
 
     /// Stage 1: indices of the `n_q` queries of head `h` with the *lowest*
-    /// cosine similarity to the head's mean query.
-    fn subselect_queries(&self, q: &QChunk, h: usize, ctx: &mut SelectCtx) -> Vec<usize> {
+    /// cosine similarity to the head's mean query, left in
+    /// `ctx.scratch.idx` (rank order — most dissimilar first, NOT index
+    /// order: Alg. 1's group pre-aggregation pairs retained queries across
+    /// the KV group's heads by this rank, which keeps the pairing
+    /// invariant to query order within the chunk). Allocation-free: mean,
+    /// similarity and index buffers all come from the scratch arena.
+    fn subselect_into(&self, q: &QChunk, h: usize, ctx: &mut SelectCtx) {
         let (s, d) = (q.s, q.d);
         if s <= self.cfg.n_q {
-            return (0..s).collect();
+            let idx = &mut ctx.scratch.idx;
+            idx.clear();
+            idx.extend(0..s);
+            return;
         }
         let head = q.head(h);
-        let mean = ctx.scratch.buf_c(d);
+        let cost = &mut ctx.cost;
+        let Scratch { a, c, idx, .. } = &mut ctx.scratch;
+        let mean = fit(c, d);
         mean_rows(head, s, d, mean);
         let mean_norm = l2_norm(mean);
-        ctx.cost.add_flops((2 * s * d) as u64); // mean + norms
+        cost.add_flops((2 * s * d) as u64); // mean + norms
         // S_q = -CosSim(M_Q, q_i); rank descending by S_q == ascending CosSim.
-        let neg_sims: Vec<f32> = (0..s)
-            .map(|i| {
-                let qi = &head[i * d..(i + 1) * d];
-                let n = l2_norm(qi);
-                if n == 0.0 || mean_norm == 0.0 {
-                    0.0
-                } else {
-                    -dot(qi, mean) / (n * mean_norm)
-                }
-            })
-            .collect();
-        ctx.cost.add_flops((2 * s * d) as u64);
-        // Rank order (most dissimilar first), NOT index order: Alg. 1's
-        // group pre-aggregation pairs retained queries across the KV
-        // group's heads by this rank, which keeps the pairing invariant to
-        // query order within the chunk.
-        topk_indices(&neg_sims, self.cfg.n_q)
+        let neg_sims = fit(a, s);
+        for i in 0..s {
+            let qi = &head[i * d..(i + 1) * d];
+            let n = l2_norm(qi);
+            neg_sims[i] = if n == 0.0 || mean_norm == 0.0 {
+                0.0
+            } else {
+                -dot(qi, mean) / (n * mean_norm)
+            };
+        }
+        cost.add_flops((2 * s * d) as u64);
+        topk_indices_into(neg_sims, self.cfg.n_q, idx);
+    }
+
+    /// Test-visible wrapper around [`Quoka::subselect_into`].
+    #[cfg(test)]
+    fn subselect_queries(&self, q: &QChunk, h: usize, ctx: &mut SelectCtx) -> Vec<usize> {
+        self.subselect_into(q, h, ctx);
+        ctx.scratch.idx.clone()
     }
 }
 
@@ -127,14 +141,22 @@ impl SelectionPolicy for Quoka {
         for kv in 0..n_kv {
             // ---- Stage 1 + 2a: per Q-head subselection, normalization and
             // pre-aggregation of normalized queries over the KV group.
-            // qbar layout: [n_q_eff, d].
-            let mut qbar = vec![0.0f32; n_q_eff * d];
+            // qbar layout: [n_q_eff, d], held in scratch `b` across the
+            // group loop (subselection itself uses `a`/`c`/`idx`).
+            {
+                let b = &mut ctx.scratch.b;
+                if b.len() < n_q_eff * d {
+                    b.resize(n_q_eff * d, 0.0);
+                }
+                b[..n_q_eff * d].fill(0.0);
+            }
             for gq in 0..g {
                 let h = kv * g + gq;
-                let keep = self.subselect_queries(q, h, ctx);
-                debug_assert_eq!(keep.len(), n_q_eff);
+                self.subselect_into(q, h, ctx); // keep list (rank order) in scratch.idx
                 let head = q.head(h);
-                for (slot, &qi) in keep.iter().enumerate() {
+                let Scratch { b, idx, .. } = &mut ctx.scratch;
+                debug_assert_eq!(idx.len(), n_q_eff);
+                for (slot, &qi) in idx.iter().enumerate() {
                     let row = &head[qi * d..(qi + 1) * d];
                     match self.cfg.scoring {
                         Scoring::Cosine => {
@@ -143,13 +165,13 @@ impl SelectionPolicy for Quoka {
                             // group-mean cosine score (pre-aggregation).
                             let n = l2_norm(row);
                             let inv = if n > 0.0 { 1.0 / (n * g as f32) } else { 0.0 };
-                            for (o, &v) in qbar[slot * d..(slot + 1) * d].iter_mut().zip(row) {
+                            for (o, &v) in b[slot * d..(slot + 1) * d].iter_mut().zip(row) {
                                 *o += v * inv;
                             }
                         }
                         Scoring::Dot => {
                             let inv = 1.0 / g as f32;
-                            for (o, &v) in qbar[slot * d..(slot + 1) * d].iter_mut().zip(row) {
+                            for (o, &v) in b[slot * d..(slot + 1) * d].iter_mut().zip(row) {
                                 *o += v * inv;
                             }
                         }
@@ -160,67 +182,83 @@ impl SelectionPolicy for Quoka {
             ctx.cost.add_bytes((n_q_eff * d * 4) as u64);
 
             // ---- Stage 2b: S = Q̄ Kᵀ over the valid cache rows, with keys
-            // normalized for cosine scoring.
+            // normalized for cosine scoring via the *incremental norm
+            // cache* (computed once at append time — no O(T·d) rescan).
             // ---- Stage 3: aggregate over the query axis into score[t].
+            //
+            // The scan walks the (contiguous) key slab in SCAN_TILE blocks
+            // through the register-blocked `qk_block` micro-kernel; workers
+            // own disjoint tile ranges plus a per-worker score block from
+            // the scratch arena (§Perf: the scan is the selection's only
+            // O(T) term).
             let khead = k.head(kv);
-            let scores = ctx.scratch.buf_a(t);
-            // The key scan parallelizes over disjoint tiles of the score
-            // vector (§Perf: the scan is the selection's only O(T) term).
+            let cost = &mut ctx.cost;
+            let Scratch { a, b, idx, workers, .. } = &mut ctx.scratch;
+            let scores = fit(a, t);
+            let qbar: &[f32] = &b[..n_q_eff * d];
+            let n_tiles = t.div_ceil(SCAN_TILE);
             let threads = if t * n_q_eff * d > 1 << 21 {
-                crate::util::threadpool::default_workers()
+                crate::util::threadpool::default_workers().min(n_tiles).max(1)
             } else {
                 1
             };
-            const TILE: usize = 2048;
-            let n_tiles = t.div_ceil(TILE);
-            let scores_ptr = SyncPtr(scores.as_mut_ptr());
-            let sp = &scores_ptr;
+            if workers.len() < threads {
+                workers.resize_with(threads, Vec::new);
+            }
+            for w in workers[..threads].iter_mut() {
+                if w.len() < n_q_eff * SCAN_TILE {
+                    w.resize(n_q_eff * SCAN_TILE, 0.0);
+                }
+            }
+            let sp = SyncPtr::new(scores.as_mut_ptr());
+            let wp = SyncPtr::new(workers.as_mut_ptr());
             let scoring = self.cfg.scoring;
             let agg = self.cfg.query_agg;
-            let qbar_ref = &qbar;
-            crate::util::threadpool::parallel_for(n_tiles, threads, |tile| {
-                let lo = tile * TILE;
-                let hi = (lo + TILE).min(t);
-                // SAFETY: tiles write disjoint score ranges.
-                let out = unsafe { std::slice::from_raw_parts_mut(sp.0.add(lo), hi - lo) };
-                for (o, ti) in (lo..hi).enumerate() {
-                    let key = &khead[ti * d..(ti + 1) * d];
-                    let kinv = match scoring {
-                        Scoring::Cosine => {
-                            let n = l2_norm(key);
-                            if n > 0.0 {
-                                1.0 / n
-                            } else {
-                                0.0
-                            }
-                        }
-                        Scoring::Dot => 1.0,
-                    };
-                    out[o] = match agg {
-                        QueryAgg::Max => {
-                            let mut best = f32::NEG_INFINITY;
-                            for nq in 0..n_q_eff {
-                                let s = dot(&qbar_ref[nq * d..(nq + 1) * d], key) * kinv;
-                                if s > best {
-                                    best = s;
+            crate::util::threadpool::parallel_for(threads, threads, |w| {
+                // SAFETY: worker `w` owns scratch slot `w` and writes only
+                // the disjoint score ranges of its strided tiles. Striding
+                // (w, w+threads, …) keeps the near-uniform tiles balanced
+                // even when n_tiles is not a multiple of threads.
+                let blk_arena = unsafe { &mut *wp.get().add(w) };
+                for tile in (w..n_tiles).step_by(threads) {
+                    let lo = tile * SCAN_TILE;
+                    let hi = (lo + SCAN_TILE).min(t);
+                    let tn = hi - lo;
+                    let blk = &mut blk_arena[..n_q_eff * tn];
+                    qk_block(qbar, n_q_eff, &khead[lo * d..hi * d], tn, d, blk);
+                    let out = unsafe { std::slice::from_raw_parts_mut(sp.get().add(lo), tn) };
+                    for (o, j) in out.iter_mut().zip(0..tn) {
+                        // kinv >= 0, so scaling commutes with max/mean.
+                        let kinv = match scoring {
+                            Scoring::Cosine => k.inv_norm(kv, lo + j),
+                            Scoring::Dot => 1.0,
+                        };
+                        *o = match agg {
+                            QueryAgg::Max => {
+                                let mut best = f32::NEG_INFINITY;
+                                for nq in 0..n_q_eff {
+                                    let v = blk[nq * tn + j];
+                                    if v > best {
+                                        best = v;
+                                    }
                                 }
+                                best * kinv
                             }
-                            best
-                        }
-                        QueryAgg::Mean => {
-                            let mut acc = 0.0;
-                            for nq in 0..n_q_eff {
-                                acc += dot(&qbar_ref[nq * d..(nq + 1) * d], key) * kinv;
+                            QueryAgg::Mean => {
+                                let mut acc = 0.0;
+                                for nq in 0..n_q_eff {
+                                    acc += blk[nq * tn + j];
+                                }
+                                acc * kinv / n_q_eff as f32
                             }
-                            acc / n_q_eff as f32
-                        }
-                    };
+                        };
+                    }
                 }
             });
-            ctx.cost.add_flops((t * n_q_eff * 2 * d) as u64);
-            ctx.cost.add_bytes((t * d * 4) as u64);
+            cost.add_flops((t * n_q_eff * 2 * d) as u64);
+            cost.add_bytes((t * d * 4) as u64);
 
-            per_head.push(topk_ascending(scores, budget));
+            per_head.push(topk_ascending_into(&scores[..t], budget, idx));
         }
         Selection::PerHead(per_head)
     }
@@ -387,7 +425,7 @@ mod tests {
                 }
             }
         }
-        let want = topk_ascending(&scores, 8);
+        let want = crate::select::topk_ascending(&scores, 8);
         assert_eq!(sel.head_indices(0, t), want);
     }
 

@@ -6,8 +6,8 @@
 //! over queries and the KV group. Designed for single-query decode; under
 //! multi-query prefill the channel ranking blends all queries together.
 
-use super::{group_size, topk_ascending, KCache, QChunk, SelectCtx, Selection, SelectionPolicy};
-use crate::tensor::ops::{softmax, topk_indices};
+use super::{fit, group_size, topk_ascending_into, KCache, QChunk, Scratch, SelectCtx, Selection, SelectionPolicy};
+use crate::tensor::ops::{softmax, topk_indices_into};
 
 /// Channel-subselecting approximate-score policy.
 #[derive(Clone, Copy, Debug)]
@@ -39,23 +39,26 @@ impl SelectionPolicy for SparQ {
         let g = group_size(q.n_heads, n_kv);
 
         let mut per_head = Vec::with_capacity(n_kv);
-        let mut row = vec![0.0f32; t];
         for kv in 0..n_kv {
             let khead = k.head(kv);
-            let agg = ctx.scratch.buf_a(t);
+            let cost = &mut ctx.cost;
+            let Scratch { a, b, c, idx, .. } = &mut ctx.scratch;
+            let agg = fit(a, t);
+            let row = fit(b, t);
+            let chan = fit(c, d);
             agg.iter_mut().for_each(|v| *v = 0.0);
             for gq in 0..g {
                 let h = kv * g + gq;
                 // Channel importance: sum_i |q_i[c]| over the chunk.
-                let mut chan = vec![0.0f32; d];
+                chan.iter_mut().for_each(|v| *v = 0.0);
                 for i in 0..q.s {
                     let qrow = q.query(h, i);
-                    for c in 0..d {
-                        chan[c] += qrow[c].abs();
+                    for ci in 0..d {
+                        chan[ci] += qrow[ci].abs();
                     }
                 }
-                let keep = topk_indices(&chan, r);
-                ctx.cost.add_flops((q.s * d) as u64);
+                topk_indices_into(chan, r, idx);
+                cost.add_flops((q.s * d) as u64);
                 // Approximate logits over the reduced channels. SparQ scales
                 // by sqrt(d * mass_kept/mass_total) — we use sqrt(r) which
                 // preserves ranking (softmax is monotone in scale per row).
@@ -65,20 +68,20 @@ impl SelectionPolicy for SparQ {
                     for ti in 0..t {
                         let key = &khead[ti * d..(ti + 1) * d];
                         let mut s = 0.0;
-                        for &c in &keep {
-                            s += qrow[c] * key[c];
+                        for &ci in idx.iter() {
+                            s += qrow[ci] * key[ci];
                         }
                         row[ti] = s * scale;
                     }
-                    softmax(&mut row);
+                    softmax(row);
                     for ti in 0..t {
                         agg[ti] += row[ti];
                     }
                 }
-                ctx.cost.add_flops((q.s * t * (2 * r + 4)) as u64);
-                ctx.cost.add_bytes((q.s * t * 4) as u64);
+                cost.add_flops((q.s * t * (2 * r + 4)) as u64);
+                cost.add_bytes((q.s * t * 4) as u64);
             }
-            per_head.push(topk_ascending(agg, budget));
+            per_head.push(topk_ascending_into(agg, budget, idx));
         }
         Selection::PerHead(per_head)
     }

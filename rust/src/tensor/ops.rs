@@ -2,6 +2,27 @@
 //!
 //! All functions operate on raw `&[f32]` so the coordinator can run them on
 //! reused scratch buffers with zero allocation in the steady state.
+//!
+//! ## Register-blocked micro-kernels
+//!
+//! The attention and key-scan hot paths are built from a small set of
+//! blocked primitives rather than repeated scalar [`dot`] calls:
+//!
+//! - [`dot4`] — one query row against four key rows, eight accumulator
+//!   lanes per key so the additions stay association-free and LLVM can map
+//!   each accumulator onto one SIMD register. Query loads are amortized
+//!   over the four keys (the scalar loop reloads `q` for every key).
+//! - [`qk_dots`] — one query against a *contiguous* `[n, d]` key tile
+//!   (multi-key GEMV), the unit of work after a selection gather.
+//! - [`qk_block`] — an `m×n` QKᵀ block over contiguous query and key
+//!   tiles, register-blocked 2 queries × 4 keys ([`dot2x4`]); this is what
+//!   the tiled attention kernel and the QUOKA key scan run per tile.
+//! - [`av_accum`] — probability-weighted accumulation of a contiguous V
+//!   tile into an output row (the streaming half of the online softmax).
+//!
+//! Keys are gathered into contiguous tiles *before* these kernels run, so
+//! every inner loop walks sequential memory — the Double-Sparsity-style
+//! layout that unlocks hardware bandwidth on sparse KV subsets.
 
 /// Dot product.
 #[inline]
@@ -25,6 +46,163 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         s += a[j] * b[j];
     }
     s
+}
+
+#[inline]
+fn hsum8(a: [f32; 8]) -> f32 {
+    (a[0] + a[1]) + (a[2] + a[3]) + ((a[4] + a[5]) + (a[6] + a[7]))
+}
+
+/// Dot products of one query row against four key rows (multi-key
+/// micro-kernel). Eight accumulator lanes per key keep the reduction
+/// association-free for autovectorization; the query chunk is loaded once
+/// per four keys instead of once per key.
+#[inline]
+pub fn dot4(q: &[f32], k0: &[f32], k1: &[f32], k2: &[f32], k3: &[f32]) -> [f32; 4] {
+    let n = q.len();
+    debug_assert!(k0.len() >= n && k1.len() >= n && k2.len() >= n && k3.len() >= n);
+    let chunks = n / 8;
+    let mut a0 = [0f32; 8];
+    let mut a1 = [0f32; 8];
+    let mut a2 = [0f32; 8];
+    let mut a3 = [0f32; 8];
+    for c in 0..chunks {
+        let j = c * 8;
+        let qv = &q[j..j + 8];
+        let k0v = &k0[j..j + 8];
+        let k1v = &k1[j..j + 8];
+        let k2v = &k2[j..j + 8];
+        let k3v = &k3[j..j + 8];
+        for l in 0..8 {
+            a0[l] += qv[l] * k0v[l];
+            a1[l] += qv[l] * k1v[l];
+            a2[l] += qv[l] * k2v[l];
+            a3[l] += qv[l] * k3v[l];
+        }
+    }
+    let mut out = [hsum8(a0), hsum8(a1), hsum8(a2), hsum8(a3)];
+    for j in chunks * 8..n {
+        out[0] += q[j] * k0[j];
+        out[1] += q[j] * k1[j];
+        out[2] += q[j] * k2[j];
+        out[3] += q[j] * k3[j];
+    }
+    out
+}
+
+/// 2-query × 4-key register-blocked micro-kernel (multi-query): returns
+/// `[q0·k0, q0·k1, q0·k2, q0·k3, q1·k0, q1·k1, q1·k2, q1·k3]`. Four
+/// accumulator lanes per product keep register pressure at eight vector
+/// accumulators while amortizing every key load over two queries.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn dot2x4(q0: &[f32], q1: &[f32], k0: &[f32], k1: &[f32], k2: &[f32], k3: &[f32]) -> [f32; 8] {
+    let n = q0.len();
+    let chunks = n / 4;
+    let mut acc = [[0f32; 4]; 8];
+    for c in 0..chunks {
+        let j = c * 4;
+        let q0v = &q0[j..j + 4];
+        let q1v = &q1[j..j + 4];
+        let ks = [&k0[j..j + 4], &k1[j..j + 4], &k2[j..j + 4], &k3[j..j + 4]];
+        for (ki, kv) in ks.iter().enumerate() {
+            for l in 0..4 {
+                acc[ki][l] += q0v[l] * kv[l];
+                acc[4 + ki][l] += q1v[l] * kv[l];
+            }
+        }
+    }
+    let mut out = [0f32; 8];
+    for (o, a) in out.iter_mut().zip(acc.iter()) {
+        *o = (a[0] + a[1]) + (a[2] + a[3]);
+    }
+    for j in chunks * 4..n {
+        let ks = [k0, k1, k2, k3];
+        for (ki, kk) in ks.iter().enumerate() {
+            out[ki] += q0[j] * kk[j];
+            out[4 + ki] += q1[j] * kk[j];
+        }
+    }
+    out
+}
+
+/// One query against a contiguous `[n, d]` key tile: `out[j] = q · keys_j`.
+/// Blocked four keys at a time via [`dot4`], scalar tail via [`dot`].
+pub fn qk_dots(q: &[f32], keys: &[f32], n: usize, d: usize, out: &mut [f32]) {
+    debug_assert!(keys.len() >= n * d);
+    debug_assert!(out.len() >= n);
+    let mut j = 0;
+    while j + 4 <= n {
+        let b = j * d;
+        let r = dot4(
+            q,
+            &keys[b..b + d],
+            &keys[b + d..b + 2 * d],
+            &keys[b + 2 * d..b + 3 * d],
+            &keys[b + 3 * d..b + 4 * d],
+        );
+        out[j..j + 4].copy_from_slice(&r);
+        j += 4;
+    }
+    while j < n {
+        out[j] = dot(q, &keys[j * d..(j + 1) * d]);
+        j += 1;
+    }
+}
+
+/// `m×n` QKᵀ block over contiguous `[m, d]` query rows and `[n, d]` key
+/// rows: `out[i*n + j] = qs_i · keys_j`. Register-blocked 2×4 with
+/// [`dot2x4`]; row/column tails fall back to [`qk_dots`] / [`dot`].
+pub fn qk_block(qs: &[f32], m: usize, keys: &[f32], n: usize, d: usize, out: &mut [f32]) {
+    debug_assert!(qs.len() >= m * d);
+    debug_assert!(keys.len() >= n * d);
+    debug_assert!(out.len() >= m * n);
+    let mut i = 0;
+    while i + 2 <= m {
+        let q0 = &qs[i * d..(i + 1) * d];
+        let q1 = &qs[(i + 1) * d..(i + 2) * d];
+        let mut j = 0;
+        while j + 4 <= n {
+            let b = j * d;
+            let r = dot2x4(
+                q0,
+                q1,
+                &keys[b..b + d],
+                &keys[b + d..b + 2 * d],
+                &keys[b + 2 * d..b + 3 * d],
+                &keys[b + 3 * d..b + 4 * d],
+            );
+            out[i * n + j..i * n + j + 4].copy_from_slice(&r[..4]);
+            out[(i + 1) * n + j..(i + 1) * n + j + 4].copy_from_slice(&r[4..]);
+            j += 4;
+        }
+        while j < n {
+            let key = &keys[j * d..(j + 1) * d];
+            out[i * n + j] = dot(q0, key);
+            out[(i + 1) * n + j] = dot(q1, key);
+            j += 1;
+        }
+        i += 2;
+    }
+    if i < m {
+        qk_dots(&qs[i * d..(i + 1) * d], keys, n, d, &mut out[i * n..i * n + n]);
+    }
+}
+
+/// `acc += Σ_j w[j] · vs[j·d..]` — probability-weighted accumulation of a
+/// contiguous `[n, d]` V tile into one output row. Streams the tile
+/// sequentially; zero weights (fully masked or underflowed entries) are
+/// skipped.
+pub fn av_accum(w: &[f32], vs: &[f32], n: usize, d: usize, acc: &mut [f32]) {
+    debug_assert!(w.len() >= n);
+    debug_assert!(vs.len() >= n * d);
+    debug_assert_eq!(acc.len(), d);
+    for j in 0..n {
+        let wj = w[j];
+        if wj != 0.0 {
+            axpy(wj, &vs[j * d..(j + 1) * d], acc);
+        }
+    }
 }
 
 /// `y += alpha * x`.
@@ -100,21 +278,53 @@ pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
     }
 }
 
+/// Precomputed RoPE frequency table for a fixed head dimension and base.
+///
+/// `theta.powf(-2i/d)` costs an `exp`+`log` per pair per token when
+/// recomputed inline; the table hoists it to construction time so the
+/// per-token work is one `sin_cos` + rotate per pair. Build once per
+/// (head-dim, base) — e.g. per model — and reuse for every token.
+#[derive(Clone, Debug)]
+pub struct RopeTable {
+    /// `freqs[i] = theta^(-2i/d)` for pair `i < d/2`.
+    freqs: Vec<f32>,
+}
+
+impl RopeTable {
+    pub fn new(d: usize, theta: f32) -> RopeTable {
+        debug_assert!(d % 2 == 0);
+        let half = d / 2;
+        RopeTable {
+            freqs: (0..half).map(|i| theta.powf(-2.0 * i as f32 / d as f32)).collect(),
+        }
+    }
+
+    /// Head dimension this table was built for.
+    pub fn dim(&self) -> usize {
+        self.freqs.len() * 2
+    }
+
+    /// Rotate pairs `(x[2i], x[2i+1])` by `pos * freqs[i]` in place.
+    #[inline]
+    pub fn apply(&self, x: &mut [f32], pos: usize) {
+        debug_assert_eq!(x.len(), self.freqs.len() * 2);
+        for (i, &freq) in self.freqs.iter().enumerate() {
+            let (sin, cos) = (pos as f32 * freq).sin_cos();
+            let a = x[2 * i];
+            let b = x[2 * i + 1];
+            x[2 * i] = a * cos - b * sin;
+            x[2 * i + 1] = a * sin + b * cos;
+        }
+    }
+}
+
 /// Rotary position embedding applied in place to a head vector of even
 /// dimension `d`, rotating pairs `(x[2i], x[2i+1])` by `pos * theta^(-2i/d)`.
+///
+/// One-shot convenience that rebuilds the frequency table per call; hot
+/// paths should hold a [`RopeTable`] instead.
 pub fn rope(x: &mut [f32], pos: usize, theta: f32) {
-    let d = x.len();
-    debug_assert!(d % 2 == 0);
-    let half = d / 2;
-    for i in 0..half {
-        let freq = theta.powf(-2.0 * i as f32 / d as f32);
-        let angle = pos as f32 * freq;
-        let (sin, cos) = angle.sin_cos();
-        let a = x[2 * i];
-        let b = x[2 * i + 1];
-        x[2 * i] = a * cos - b * sin;
-        x[2 * i + 1] = a * sin + b * cos;
-    }
+    RopeTable::new(x.len(), theta).apply(x, pos);
 }
 
 /// SiLU (x * sigmoid(x)).
@@ -136,14 +346,17 @@ pub fn mean_rows(mat: &[f32], n: usize, d: usize, out: &mut [f32]) {
     }
 }
 
-/// Indices of the `k` largest values (descending by value). Deterministic
-/// tie-break: lower index wins. O(n + k log k) via partial selection.
-pub fn topk_indices(scores: &[f32], k: usize) -> Vec<usize> {
+/// [`topk_indices`] into a caller-owned buffer: `idx` is cleared and left
+/// holding the result, reusing its capacity so steady-state selection
+/// loops perform no per-call allocation. The transient `(0..n)` index fill
+/// lives in the same buffer.
+pub fn topk_indices_into(scores: &[f32], k: usize, idx: &mut Vec<usize>) {
+    idx.clear();
     let k = k.min(scores.len());
     if k == 0 {
-        return vec![];
+        return;
     }
-    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.extend(0..scores.len());
     let cmp = |&a: &usize, &b: &usize| {
         scores[b]
             .partial_cmp(&scores[a])
@@ -155,14 +368,14 @@ pub fn topk_indices(scores: &[f32], k: usize) -> Vec<usize> {
         idx.truncate(k);
     }
     idx.sort_unstable_by(cmp);
-    idx
 }
 
-/// `topk_indices` then sorted ascending — the gather-friendly order used by
-/// the KV cache (preserves positional order of retained tokens).
-pub fn topk_indices_sorted(scores: &[f32], k: usize) -> Vec<usize> {
-    let mut idx = topk_indices(scores, k);
-    idx.sort_unstable();
+/// Indices of the `k` largest values (descending by value). Deterministic
+/// tie-break: lower index wins. O(n + k log k) via partial selection.
+/// Allocates the result; hot paths should use [`topk_indices_into`].
+pub fn topk_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut idx = Vec::new();
+    topk_indices_into(scores, k, &mut idx);
     idx
 }
 
@@ -231,6 +444,74 @@ mod tests {
         let b: Vec<f32> = (0..13).map(|i| (i * 2) as f32).collect();
         let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
         assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn blocked_kernels_match_naive_dots() {
+        // Odd d exercises every tail path (8-lane in dot4, 4-lane in
+        // dot2x4); n not divisible by 4 exercises the key-tail; odd m the
+        // query-tail of qk_block.
+        for &(m, n, d) in &[(1usize, 1usize, 3usize), (2, 4, 8), (3, 7, 13), (5, 9, 16), (4, 12, 31)] {
+            let qs: Vec<f32> = (0..m * d).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.13).collect();
+            let ks: Vec<f32> = (0..n * d).map(|i| ((i * 53 % 23) as f32 - 11.0) * 0.07).collect();
+            let mut blk = vec![0.0f32; m * n];
+            qk_block(&qs, m, &ks, n, d, &mut blk);
+            let mut row = vec![0.0f32; n];
+            for i in 0..m {
+                let q = &qs[i * d..(i + 1) * d];
+                qk_dots(q, &ks, n, d, &mut row);
+                for j in 0..n {
+                    let want = dot(q, &ks[j * d..(j + 1) * d]);
+                    assert!((blk[i * n + j] - want).abs() < 1e-4, "block ({i},{j})");
+                    assert!((row[j] - want).abs() < 1e-4, "dots ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn av_accum_matches_axpy_loop() {
+        let (n, d) = (7usize, 5usize);
+        let w: Vec<f32> = (0..n).map(|i| if i == 3 { 0.0 } else { i as f32 * 0.1 }).collect();
+        let vs: Vec<f32> = (0..n * d).map(|i| (i as f32).sin()).collect();
+        let mut a = vec![0.5f32; d];
+        let mut b = a.clone();
+        av_accum(&w, &vs, n, d, &mut a);
+        for j in 0..n {
+            axpy(w[j], &vs[j * d..(j + 1) * d], &mut b);
+        }
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn topk_into_reuses_capacity() {
+        let scores: Vec<f32> = (0..256).map(|i| ((i * 97) % 251) as f32).collect();
+        let mut idx = Vec::new();
+        topk_indices_into(&scores, 16, &mut idx);
+        assert_eq!(idx, topk_indices(&scores, 16));
+        let cap = idx.capacity();
+        let p = idx.as_ptr();
+        for k in [1usize, 8, 16] {
+            topk_indices_into(&scores, k, &mut idx);
+            assert_eq!(idx.len(), k);
+        }
+        assert_eq!(cap, idx.capacity());
+        assert_eq!(p, idx.as_ptr());
+    }
+
+    #[test]
+    fn rope_table_matches_rope() {
+        let table = RopeTable::new(8, 10000.0);
+        assert_eq!(table.dim(), 8);
+        for pos in [0usize, 1, 17, 900] {
+            let mut a: Vec<f32> = (0..8).map(|i| (i as f32 * 0.7).cos()).collect();
+            let mut b = a.clone();
+            rope(&mut a, pos, 10000.0);
+            table.apply(&mut b, pos);
+            assert_eq!(a, b);
+        }
     }
 
     #[test]
@@ -315,7 +596,6 @@ mod tests {
         let scores = vec![0.1, 5.0, -2.0, 5.0, 3.3, 0.0];
         assert_eq!(topk_indices(&scores, 3), argsort_desc(&scores)[..3].to_vec());
         assert_eq!(topk_indices(&scores, 3), vec![1, 3, 4]);
-        assert_eq!(topk_indices_sorted(&scores, 3), vec![1, 3, 4]);
         assert_eq!(topk_indices(&scores, 0), Vec::<usize>::new());
         assert_eq!(topk_indices(&scores, 99).len(), 6);
     }

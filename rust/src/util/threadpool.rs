@@ -14,6 +14,39 @@ use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Raw mutable pointer wrapper for [`parallel_for`] bodies that write
+/// disjoint regions of a shared buffer.
+///
+/// Safety contract (on the *user*, not this type): every task must touch a
+/// region no other concurrent task touches, and the pointee must outlive
+/// the fork-join call that uses it.
+pub struct SyncPtr<T>(*mut T);
+
+// `T: Send` keeps the guard rail: handing `&mut T` to another worker is
+// a cross-thread move of T, so wrapping a pointer to a non-Send payload
+// must stay a compile error.
+unsafe impl<T: Send> Send for SyncPtr<T> {}
+unsafe impl<T: Send> Sync for SyncPtr<T> {}
+
+impl<T> SyncPtr<T> {
+    pub fn new(p: *mut T) -> SyncPtr<T> {
+        SyncPtr(p)
+    }
+
+    #[inline]
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+impl<T> Clone for SyncPtr<T> {
+    fn clone(&self) -> Self {
+        SyncPtr(self.0)
+    }
+}
+
+impl<T> Copy for SyncPtr<T> {}
+
 /// A fixed pool of worker threads consuming a shared job queue.
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,

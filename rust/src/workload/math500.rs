@@ -102,10 +102,10 @@ pub fn run(
         let mut hit = 0usize;
         let mut total = 0usize;
         for h in 0..nkv {
-            let idx = sel.head_indices(h, t);
+            let hs = sel.head(h, t);
             for want in truth.clone() {
                 total += 1;
-                if idx.binary_search(&(want as u32)).is_ok() {
+                if hs.contains(want as u32) {
                     hit += 1;
                 }
             }

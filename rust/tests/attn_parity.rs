@@ -1,0 +1,238 @@
+//! Parity suite pinning the tiled online-softmax attention kernel against
+//! the seed scalar kernel (`reference_chunk_attention`), plus the
+//! incremental key-norm-cache invariant and the no-steady-state-allocation
+//! property of the scratch arenas.
+
+use quoka::model::attention::{
+    chunk_attention, decode_attention, reference_chunk_attention, AttnScratch, KvBuffers,
+};
+use quoka::select::Selection;
+use quoka::tensor::ops::{l2_norm, rel_l2};
+use quoka::util::Rng;
+
+const TOL: f32 = 1e-5;
+
+struct Setup {
+    q: Vec<f32>,
+    k_self: Vec<f32>,
+    v_self: Vec<f32>,
+    cache: KvBuffers,
+}
+
+/// Build a random setup, filling the cache through irregular appends so
+/// buffer growth (and the norm cache's survival of it) is exercised.
+fn setup(t: usize, s: usize, n_q: usize, n_kv: usize, d: usize, seed: u64) -> Setup {
+    let mut rng = Rng::new(seed);
+    let q = rng.normal_vec(n_q * s * d, 1.0);
+    let k_self = rng.normal_vec(n_kv * s * d, 1.0);
+    let v_self = rng.normal_vec(n_kv * s * d, 1.0);
+    let mut cache = KvBuffers::new(n_kv, d, 2);
+    let mut filled = 0;
+    let mut step = 1;
+    while filled < t {
+        let n = step.min(t - filled);
+        let kk = rng.normal_vec(n_kv * n * d, 1.0);
+        let vv = rng.normal_vec(n_kv * n * d, 1.0);
+        cache.append(&kk, &vv, n);
+        filled += n;
+        step = step * 2 + 1; // irregular growth pattern
+    }
+    Setup { q, k_self, v_self, cache }
+}
+
+/// Random ascending unique per-head subsets of `0..t` (some heads may get
+/// few or zero indices — the kernel must tolerate uneven selections).
+fn random_selection(rng: &mut Rng, n_kv: usize, t: usize, keep_1_in: usize) -> Selection {
+    let mut per_head = Vec::with_capacity(n_kv);
+    for h in 0..n_kv {
+        let mut v: Vec<u32> = Vec::new();
+        for i in 0..t {
+            if rng.below(keep_1_in) == 0 || (h == 0 && i == 0 && t > 0) {
+                v.push(i as u32);
+            }
+        }
+        per_head.push(v);
+    }
+    Selection::PerHead(per_head)
+}
+
+fn assert_parity(su: &Setup, s: usize, n_q: usize, d: usize, sel: &Selection, label: &str) {
+    let mut tiled = vec![0.0f32; n_q * s * d];
+    let mut reference = vec![0.0f32; n_q * s * d];
+    let mut scratch = AttnScratch::new();
+    chunk_attention(
+        &su.q, n_q, s, d, &su.k_self, &su.v_self, &su.cache, sel, &mut scratch, &mut tiled,
+    );
+    reference_chunk_attention(
+        &su.q, n_q, s, d, &su.k_self, &su.v_self, &su.cache, sel, &mut reference,
+    );
+    let err = rel_l2(&tiled, &reference);
+    assert!(err < TOL, "{label}: rel_l2 {err} >= {TOL}");
+}
+
+/// The parity matrix: GQA group sizes 1/2/4/8, odd s/t/d, empty cache,
+/// single-query decode shapes, and chunks larger than one query block.
+fn shapes() -> Vec<(usize, usize, usize, usize, usize)> {
+    vec![
+        // (t, s, n_q, n_kv, d)
+        (0, 5, 4, 2, 16),    // empty cache: causal-self only
+        (6, 3, 2, 1, 4),     // tiny, g=2
+        (37, 7, 6, 3, 10),   // odd t/s, g=2, d=10 (micro-kernel tails)
+        (33, 17, 8, 8, 9),   // g=1, odd everything
+        (64, 1, 8, 2, 32),   // decode-like: s=1
+        (128, 32, 16, 4, 24), // g=4, multiple query blocks
+        (300, 40, 8, 2, 128), // > KTILE past rows per head when dense
+        (40, 9, 12, 3, 8),   // g=4, odd s
+    ]
+}
+
+#[test]
+fn tiled_matches_reference_under_all_selection() {
+    for &(t, s, n_q, n_kv, d) in &shapes() {
+        let su = setup(t, s, n_q, n_kv, d, 0xA11 + t as u64);
+        assert_parity(&su, s, n_q, d, &Selection::All, &format!("All t={t} s={s} d={d}"));
+    }
+}
+
+#[test]
+fn all_equals_explicit_full_selection() {
+    for &(t, s, n_q, n_kv, d) in &shapes() {
+        let su = setup(t, s, n_q, n_kv, d, 0xF0F + t as u64);
+        let explicit =
+            Selection::PerHead((0..n_kv).map(|_| (0..t as u32).collect()).collect());
+        let mut a = vec![0.0f32; n_q * s * d];
+        let mut b = vec![0.0f32; n_q * s * d];
+        let mut scratch = AttnScratch::new();
+        chunk_attention(
+            &su.q, n_q, s, d, &su.k_self, &su.v_self, &su.cache, &Selection::All, &mut scratch,
+            &mut a,
+        );
+        chunk_attention(
+            &su.q, n_q, s, d, &su.k_self, &su.v_self, &su.cache, &explicit, &mut scratch, &mut b,
+        );
+        let err = rel_l2(&a, &b);
+        assert!(err < TOL, "All vs explicit t={t} s={s}: {err}");
+    }
+}
+
+#[test]
+fn tiled_matches_reference_under_sparse_selections() {
+    let mut rng = Rng::new(0xBEEF);
+    for &(t, s, n_q, n_kv, d) in &shapes() {
+        if t == 0 {
+            continue; // covered by the All case
+        }
+        for keep_1_in in [2usize, 5] {
+            let su = setup(t, s, n_q, n_kv, d, 0xC0DE + (t * keep_1_in) as u64);
+            let sel = random_selection(&mut rng, n_kv, t, keep_1_in);
+            assert_parity(&su, s, n_q, d, &sel, &format!("sparse t={t} s={s} 1/{keep_1_in}"));
+        }
+    }
+}
+
+#[test]
+fn tiled_handles_empty_per_head_lists() {
+    // One head keeps nothing from the past — its queries must fall back to
+    // causal self attention only, exactly like the reference.
+    let (t, s, n_q, n_kv, d) = (24usize, 6usize, 4usize, 2usize, 12usize);
+    let su = setup(t, s, n_q, n_kv, d, 7);
+    let sel = Selection::PerHead(vec![vec![], vec![1, 5, 20]]);
+    assert_parity(&su, s, n_q, d, &sel, "empty head list");
+}
+
+#[test]
+fn decode_matches_reference() {
+    let (t, n_q, n_kv, d) = (150usize, 8usize, 4usize, 16usize);
+    let su = setup(t, 1, n_q, n_kv, d, 99);
+    let mut rng = Rng::new(5);
+    let sel = random_selection(&mut rng, n_kv, t, 3);
+    let mut a = vec![0.0f32; n_q * d];
+    let mut b = vec![0.0f32; n_q * d];
+    let mut scratch = AttnScratch::new();
+    decode_attention(
+        &su.q, n_q, d, &su.k_self, &su.v_self, &su.cache, &sel, &mut scratch, &mut a,
+    );
+    reference_chunk_attention(
+        &su.q, n_q, 1, d, &su.k_self, &su.v_self, &su.cache, &sel, &mut b,
+    );
+    assert!(rel_l2(&a, &b) < TOL);
+}
+
+#[test]
+fn norm_cache_invariant_across_growth() {
+    // After every append (including ones that force buffer growth), the
+    // cached inverse norm of every valid row equals 1/‖k‖ recomputed from
+    // the stored key.
+    let (n_kv, d) = (3usize, 7usize);
+    let mut rng = Rng::new(0x11);
+    let mut cache = KvBuffers::new(n_kv, d, 2);
+    for step in [1usize, 2, 5, 3, 17, 1, 40] {
+        let mut kk = rng.normal_vec(n_kv * step * d, 1.0);
+        let vv = rng.normal_vec(n_kv * step * d, 1.0);
+        if step == 3 {
+            // Plant a zero key: its inverse norm must be cached as 0.
+            for x in kk[..d].iter_mut() {
+                *x = 0.0;
+            }
+        }
+        cache.append(&kk, &vv, step);
+        for h in 0..n_kv {
+            for i in 0..cache.t {
+                let n = l2_norm(cache.key(h, i));
+                let want = if n > 0.0 { 1.0 / n } else { 0.0 };
+                let got = cache.k_inv_norm[h * cache.capacity + i];
+                assert!(
+                    (got - want).abs() <= 1e-6 * want.max(1.0),
+                    "row ({h},{i}) after t={}: cached {got}, recomputed {want}",
+                    cache.t
+                );
+            }
+        }
+    }
+    // The policy-facing view carries the cache.
+    let view = cache.k_view();
+    assert!(view.inv_norms.is_some());
+    for h in 0..n_kv {
+        for i in 0..cache.t {
+            assert_eq!(view.inv_norm(h, i), cache.k_inv_norm[h * cache.capacity + i]);
+        }
+    }
+}
+
+#[test]
+fn steady_state_attention_does_not_allocate() {
+    // Scratch arenas must stop growing after warm-up: chunk after chunk on
+    // a growing cache, the tiled kernel reuses the same tile/state buffers
+    // (tile sizes are independent of T, so a deeper cache must not grow
+    // them either).
+    let (s, n_q, n_kv, d) = (32usize, 8usize, 2usize, 16usize);
+    let mut rng = Rng::new(0x5EED);
+    let mut cache = KvBuffers::new(n_kv, d, 16);
+    let mut scratch = AttnScratch::new();
+    let mut out = vec![0.0f32; n_q * s * d];
+    let mut warm = 0usize;
+    for chunk in 0..10 {
+        let q = rng.normal_vec(n_q * s * d, 1.0);
+        let ks = rng.normal_vec(n_kv * s * d, 1.0);
+        let vs = rng.normal_vec(n_kv * s * d, 1.0);
+        let t = cache.t;
+        let sel = if t == 0 {
+            Selection::All
+        } else {
+            random_selection(&mut rng, n_kv, t, 3)
+        };
+        chunk_attention(&q, n_q, s, d, &ks, &vs, &cache, &sel, &mut scratch, &mut out);
+        cache.append(&ks, &vs, s);
+        if chunk == 1 {
+            warm = scratch.allocated_floats();
+            assert!(warm > 0);
+        } else if chunk > 1 {
+            assert_eq!(
+                scratch.allocated_floats(),
+                warm,
+                "scratch grew on chunk {chunk} (t={})",
+                cache.t
+            );
+        }
+    }
+}

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Hot-path perf smoke: runs `cargo bench --bench micro_hotpath` in the
+# reduced configuration (one 16k-token cache, GQA 32q/8kv, d=128, QUOKA
+# budget ≈ 12 % of T, 3 measured iters) and writes BENCH_hotpath.json at
+# the repo root — one entry per measured piece with keys `config`,
+# `wall-ns`, `GFLOP/s` — so the perf trajectory is tracked PR over PR.
+#
+# Usage: scripts/bench_smoke.sh
+#   BENCH_OUT=/path/to.json  override the output location
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export BENCH_SMOKE=1
+export BENCH_OUT="${BENCH_OUT:-$PWD/BENCH_hotpath.json}"
+
+cargo bench --manifest-path rust/Cargo.toml --bench micro_hotpath
+
+echo "bench_smoke: wrote $BENCH_OUT"
