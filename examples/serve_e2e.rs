@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
         pool_blocks: 8192,
         block_tokens: 128,
         seed: 0,
+        ..EngineCfg::default()
     };
     let b2 = backend.clone();
     let handle = serve(

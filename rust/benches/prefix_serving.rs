@@ -1,0 +1,5 @@
+//! `cargo bench --bench prefix_serving` — shared-prefix serving benchmark
+//! over the paged KV pool + radix prefix cache (writes BENCH_prefix.json).
+fn main() {
+    quoka::bench::prefix::prefix_serving();
+}

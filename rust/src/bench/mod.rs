@@ -6,6 +6,7 @@
 
 pub mod tables;
 pub mod latency;
+pub mod prefix;
 
 pub use crate::util::timing::{bench, heatmap, BenchCfg, Stats, Table};
 

@@ -1,0 +1,145 @@
+//! Shared-prefix serving benchmark: the paged pool + radix prefix cache
+//! under the workload they exist for — many requests over one long shared
+//! context (system prompt / document), differing only in a short suffix.
+//!
+//! Eight requests share a 12k-token prefix. A cold engine (paged pool, no
+//! prefix cache) pays the full prefill eight times; a warm engine serves
+//! the prefix pages from the radix cache after the first request, so
+//! requests 2..8 prefill only their suffixes. Reports prefix-hit rate,
+//! TTFT with/without the cache, prefill-token counts and KV bytes saved,
+//! and writes `BENCH_prefix.json` (override with `PREFIX_OUT`) so the
+//! serving trajectory is tracked PR over PR.
+
+use super::banner;
+use crate::coordinator::{Engine, EngineCfg, KvLayout, PolicySpec, SchedCfg};
+use crate::util::Json;
+use crate::util::Rng;
+
+const PREFIX_TOKENS: usize = 12 * 1024;
+const SUFFIX_TOKENS: usize = 96;
+const N_REQUESTS: usize = 8;
+const MAX_NEW: usize = 4;
+const BLOCK_TOKENS: usize = 128;
+
+fn mk_engine(prefix_cache: bool) -> Engine {
+    Engine::new_host(
+        "tiny",
+        EngineCfg {
+            sched: SchedCfg { b_cp: 256, step_tokens: 512, max_running: N_REQUESTS },
+            pool_blocks: 2048,
+            block_tokens: BLOCK_TOKENS,
+            seed: 11,
+            kv: KvLayout::Paged { prefix_cache },
+        },
+    )
+    .expect("tiny host engine")
+}
+
+fn prompt(prefix: &[u32], i: usize) -> Vec<u32> {
+    let mut rng = Rng::new(0x5FF1C + i as u64);
+    let mut p = prefix.to_vec();
+    p.extend((0..SUFFIX_TOKENS).map(|_| rng.below(240) as u32 + 1));
+    p
+}
+
+fn spec() -> PolicySpec {
+    PolicySpec { name: "quoka".into(), budget: 1024 }
+}
+
+/// Run the 8-request shared-prefix workload; returns (mean TTFT seconds,
+/// the engine for metric inspection).
+fn run_batch(mut e: Engine, prefix: &[u32]) -> (f64, Engine) {
+    for i in 0..N_REQUESTS {
+        e.submit(prompt(prefix, i), MAX_NEW, spec()).unwrap();
+    }
+    let results = e.run_to_completion().unwrap();
+    assert_eq!(results.len(), N_REQUESTS);
+    let mean_ttft = results.iter().map(|r| r.ttft_s).sum::<f64>() / results.len() as f64;
+    (mean_ttft, e)
+}
+
+/// The shared-prefix serving benchmark (see module docs).
+pub fn prefix_serving() -> crate::util::timing::Table {
+    banner(
+        "prefix_serving",
+        "serving §prefix-cache",
+        "8 requests sharing a 12k-token prefix: paged pool, radix prefix cache on/off.",
+    );
+    let mut rng = Rng::new(0xD0C);
+    let prefix: Vec<u32> = (0..PREFIX_TOKENS).map(|_| rng.below(240) as u32 + 1).collect();
+
+    // Cold: paged pool, no prefix cache — every request prefills fully.
+    let (ttft_cold, cold) = run_batch(mk_engine(false), &prefix);
+
+    // Warm: one request populates the cache, then the measured batch
+    // reuses the shared prefix pages.
+    let mut warm = mk_engine(true);
+    warm.submit(prompt(&prefix, 0), MAX_NEW, spec()).unwrap();
+    warm.run_to_completion().unwrap();
+    let warmup_prefill = warm.metrics.prefill_tokens;
+    let (ttft_warm, warm) = run_batch(warm, &prefix);
+    let batch_prefill = warm.metrics.prefill_tokens - warmup_prefill;
+
+    let hit_rate = warm.metrics.prefix_hit_rate();
+    let cached_per_req = (PREFIX_TOKENS / BLOCK_TOKENS) * BLOCK_TOKENS;
+    let mut table = crate::util::timing::Table::new(&[
+        "engine",
+        "prefix-hit rate",
+        "mean TTFT ms",
+        "batch prefill tok",
+        "kv bytes saved",
+    ]);
+    table.row(vec![
+        "paged (no cache)".into(),
+        "0.0%".into(),
+        format!("{:.1}", ttft_cold * 1e3),
+        format!("{}", cold.metrics.prefill_tokens),
+        "0".into(),
+    ]);
+    table.row(vec![
+        "paged + prefix cache".into(),
+        format!("{:.1}%", hit_rate * 100.0),
+        format!("{:.1}", ttft_warm * 1e3),
+        format!("{batch_prefill}"),
+        format!("{}", warm.metrics.prefix_bytes_saved),
+    ]);
+    table.print();
+    println!(
+        "expected shape: warm batch prefills ≈ {} suffix tokens/request instead of {}; \
+         TTFT speedup ≈ prompt/suffix ratio\n",
+        SUFFIX_TOKENS,
+        PREFIX_TOKENS + SUFFIX_TOKENS
+    );
+
+    // Acceptance sanity: the warm batch must not have prefilled any cached
+    // prefix token.
+    assert_eq!(
+        batch_prefill as usize,
+        N_REQUESTS * (PREFIX_TOKENS + SUFFIX_TOKENS - cached_per_req),
+        "warm batch prefilled cached-prefix tokens"
+    );
+
+    let out_path =
+        std::env::var("PREFIX_OUT").unwrap_or_else(|_| "BENCH_prefix.json".to_string());
+    let config = format!(
+        "prefix={PREFIX_TOKENS} suffix={SUFFIX_TOKENS} reqs={N_REQUESTS} \
+         block_tokens={BLOCK_TOKENS} policy=quoka budget=1024 preset=tiny"
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::str("prefix_serving")),
+        ("config", Json::str(config)),
+        ("prefix-hit-rate", Json::num(hit_rate)),
+        ("ttft-cold-ms", Json::num(ttft_cold * 1e3)),
+        ("ttft-warm-ms", Json::num(ttft_warm * 1e3)),
+        ("ttft-speedup", Json::num(if ttft_warm > 0.0 { ttft_cold / ttft_warm } else { 0.0 })),
+        ("prefill-tokens-cold", Json::num(cold.metrics.prefill_tokens as f64)),
+        ("prefill-tokens-warm-batch", Json::num(batch_prefill as f64)),
+        ("kv-bytes-saved", Json::num(warm.metrics.prefix_bytes_saved as f64)),
+        ("pool-resident-bytes", Json::num(warm.metrics.pool_resident_bytes as f64)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+    table
+}

@@ -12,6 +12,7 @@ use super::kv_blocks::BlockAllocator;
 use super::metrics::Metrics;
 use super::request::{Phase, PolicySpec, Request, RequestResult, SeqEntry};
 use super::scheduler::{SchedCfg, Scheduler, WorkItem};
+use crate::kvpool::{policy_ns, KvPool, PoolCfg, RadixCache};
 use crate::model::{HostModel, ModelConfig, SeqState, Weights};
 use crate::runtime::exec::{AttnMode, PjrtBackend, PjrtSeq};
 use crate::select::{SelectCtx, SelectionPolicy};
@@ -27,7 +28,30 @@ pub enum Backend {
 
 enum SeqBack {
     Host { state: SeqState, last_hidden: Vec<f32> },
+    /// Host backend over the shared paged pool: no private KV — the block
+    /// table lives on the `SeqEntry`, only the token cursor and the TTFT
+    /// hidden row live here.
+    HostPaged { len: usize, last_hidden: Vec<f32> },
     Pjrt { state: PjrtSeq, last_hidden: Vec<f32> },
+}
+
+/// Where a sequence's physical KV lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvLayout {
+    /// Private per-sequence buffers (the block allocator is accounting
+    /// only). Any selection policy; both backends.
+    Private,
+    /// Shared paged pool (`kvpool::KvPool`): block tables, refcounted
+    /// pages, copy-on-write, and — when `prefix_cache` — radix prefix
+    /// reuse that skips prefill for cached prompt pages. Host backend;
+    /// block-table-aware policies (`dense`, `quoka*`).
+    Paged { prefix_cache: bool },
+}
+
+impl Default for KvLayout {
+    fn default() -> Self {
+        KvLayout::Private
+    }
 }
 
 /// Engine configuration.
@@ -38,11 +62,19 @@ pub struct EngineCfg {
     pub pool_blocks: usize,
     pub block_tokens: usize,
     pub seed: u64,
+    /// Physical KV layout (private buffers vs shared paged pool).
+    pub kv: KvLayout,
 }
 
 impl Default for EngineCfg {
     fn default() -> Self {
-        EngineCfg { sched: SchedCfg::default(), pool_blocks: 4096, block_tokens: 128, seed: 0 }
+        EngineCfg {
+            sched: SchedCfg::default(),
+            pool_blocks: 4096,
+            block_tokens: 128,
+            seed: 0,
+            kv: KvLayout::Private,
+        }
     }
 }
 
@@ -51,6 +83,10 @@ pub struct Engine {
     backend: Backend,
     pub sched: Scheduler,
     pub blocks: BlockAllocator,
+    /// Shared paged KV storage (paged mode only).
+    pub pool: Option<KvPool>,
+    /// Radix prefix cache (paged mode with `prefix_cache` only).
+    pub radix: Option<RadixCache>,
     seqs: HashMap<u64, SeqEntry>,
     backs: HashMap<u64, SeqBack>,
     policies: HashMap<String, Box<dyn SelectionPolicy>>,
@@ -75,10 +111,32 @@ impl Engine {
     }
 
     pub fn with_backend(backend: Backend, cfg: EngineCfg) -> Engine {
+        let pool = match cfg.kv {
+            KvLayout::Private => None,
+            KvLayout::Paged { .. } => {
+                let mc = match &backend {
+                    Backend::Host(m) => m.cfg().clone(),
+                    Backend::Pjrt(b) => b.cfg().clone(),
+                };
+                Some(KvPool::new(PoolCfg {
+                    n_layers: mc.n_layers,
+                    n_kv: mc.n_kv_heads,
+                    d: mc.d_head,
+                    block_tokens: cfg.block_tokens,
+                    total_blocks: cfg.pool_blocks,
+                }))
+            }
+        };
+        let radix = match cfg.kv {
+            KvLayout::Paged { prefix_cache: true } => Some(RadixCache::new(cfg.block_tokens)),
+            _ => None,
+        };
         Engine {
             backend,
             sched: Scheduler::new(cfg.sched),
             blocks: BlockAllocator::new(cfg.pool_blocks, cfg.block_tokens),
+            pool,
+            radix,
             seqs: HashMap::new(),
             backs: HashMap::new(),
             policies: HashMap::new(),
@@ -97,7 +155,10 @@ impl Engine {
     }
 
     /// Submit a request; returns its id. Fails fast for policies the
-    /// backend cannot execute.
+    /// backend cannot execute. In paged+prefix mode the radix cache is
+    /// probed here: matched pages are retained and become the head of the
+    /// sequence's block table, and the prefill cursor starts after them —
+    /// those chunks are never scheduled.
     pub fn submit(&mut self, tokens: Vec<u32>, max_new: usize, policy: PolicySpec) -> Result<u64> {
         anyhow::ensure!(!tokens.is_empty(), "empty prompt");
         if matches!(self.backend, Backend::Pjrt(_)) {
@@ -108,6 +169,18 @@ impl Engine {
                 policy.name
             );
         }
+        if self.pool.is_some() {
+            anyhow::ensure!(
+                matches!(self.backend, Backend::Host(_)),
+                "the paged KV pool requires the host backend"
+            );
+            anyhow::ensure!(
+                policy.name == "dense" || policy.name.starts_with("quoka"),
+                "paged KV serves block-table-aware policies 'dense'/'quoka*' \
+                 (got '{}'); other baselines run with private KV buffers",
+                policy.name
+            );
+        }
         if !self.policies.contains_key(&policy.name) {
             self.policies
                 .insert(policy.name.clone(), crate::select::policy_by_name(&policy.name)?);
@@ -115,7 +188,23 @@ impl Engine {
         let id = self.next_id;
         self.next_id += 1;
         let req = Request { id, tokens, max_new_tokens: max_new.max(1), policy };
-        self.seqs.insert(id, SeqEntry::new(req));
+        let mut entry = SeqEntry::new(req);
+        if let (Some(pool), Some(radix)) = (self.pool.as_mut(), self.radix.as_mut()) {
+            self.metrics.record_prefix_lookup(entry.req.tokens.len());
+            let ns = policy_ns(&entry.req.policy.name, entry.req.policy.budget, self.sched.cfg.b_cp);
+            let matched = radix.lookup(ns, &entry.req.tokens);
+            if !matched.is_empty() {
+                for &b in &matched {
+                    pool.retain(b);
+                }
+                let cached = matched.len() * self.blocks.block_tokens();
+                self.metrics.record_prefix_hit(cached, cached * pool.token_bytes());
+                entry.cached_tokens = cached;
+                entry.phase = Phase::Prefill { next: cached };
+                entry.blocks = matched;
+            }
+        }
+        self.seqs.insert(id, entry);
         self.sched.enqueue(id);
         Ok(id)
     }
@@ -133,14 +222,23 @@ impl Engine {
     /// Execute one engine step. Returns false when fully idle.
     pub fn step(&mut self) -> Result<bool> {
         // Reject requests that can never fit the pool (otherwise FCFS
-        // head-of-line would wedge the queue forever).
+        // head-of-line would wedge the queue forever). The bound is the
+        // blocks the request could ever obtain: total MINUS the pages it
+        // already holds — those stay leased (and un-evictable, refcount
+        // >= 2) for as long as the entry references them, so comparing
+        // against the raw total would let an unfittable prefix-hit
+        // request spin the engine forever.
         while let Some(&head) = self.sched.waiting.front() {
             let entry = &self.seqs[&head];
-            let need =
-                self.blocks.blocks_for(entry.req.tokens.len() + entry.req.max_new_tokens);
-            if need > self.blocks.total_blocks() {
+            let held = entry.blocks.len();
+            let need = entry.residual_blocks(&self.blocks);
+            if need > self.blocks.total_blocks().saturating_sub(held) {
                 self.sched.waiting.pop_front();
                 let mut entry = self.seqs.remove(&head).unwrap();
+                // Hand any prefix-cache pages back before rejecting.
+                if let Some(pool) = self.pool.as_mut() {
+                    pool.release_seq(&mut entry.blocks, &mut self.blocks);
+                }
                 entry.finished_at = Some(Instant::now());
                 let r = entry.result(); // empty generation marks rejection
                 self.results.push(r);
@@ -148,18 +246,39 @@ impl Engine {
                 break;
             }
         }
+        // Paged mode: when the head-of-line can't be admitted from the free
+        // list alone, evict cold prefix-cache pages (LRU leaves with no
+        // live owner) to make room before planning.
+        if let (Some(pool), Some(radix)) = (self.pool.as_mut(), self.radix.as_mut()) {
+            if self.sched.running.len() < self.sched.cfg.max_running {
+                if let Some(&head) = self.sched.waiting.front() {
+                    let need = self.seqs[&head].residual_blocks(&self.blocks);
+                    if need > self.blocks.free_blocks() {
+                        radix.evict_until(need, pool, &mut self.blocks);
+                    }
+                }
+            }
+        }
         let plan = self.sched.plan(&mut self.seqs, &mut self.blocks);
-        // Materialize backend state for newly admitted sequences.
+        // Materialize backend state for newly admitted sequences; in paged
+        // mode, adopt the freshly leased pages (refcount 1, zeroed
+        // metadata) — prefix pages retained at submit keep their counts.
         for id in &plan.admitted {
-            let back = match &self.backend {
-                Backend::Host(m) => SeqBack::Host {
-                    state: SeqState::new(m.cfg()),
-                    last_hidden: Vec::new(),
-                },
-                Backend::Pjrt(b) => SeqBack::Pjrt {
-                    state: PjrtSeq::new(b.manifest()),
-                    last_hidden: Vec::new(),
-                },
+            let entry = &self.seqs[id];
+            let back = if let Some(pool) = self.pool.as_mut() {
+                pool.adopt_new(&entry.blocks);
+                SeqBack::HostPaged { len: entry.cached_tokens, last_hidden: Vec::new() }
+            } else {
+                match &self.backend {
+                    Backend::Host(m) => SeqBack::Host {
+                        state: SeqState::new(m.cfg()),
+                        last_hidden: Vec::new(),
+                    },
+                    Backend::Pjrt(b) => SeqBack::Pjrt {
+                        state: PjrtSeq::new(b.manifest()),
+                        last_hidden: Vec::new(),
+                    },
+                }
             };
             self.backs.insert(*id, back);
         }
@@ -182,8 +301,16 @@ impl Engine {
             }
         }
         self.metrics.record_step(t0.elapsed(), prefill_toks, decode_toks);
+        if let Some(pool) = &self.pool {
+            self.metrics.pool_resident_bytes =
+                pool.resident_bytes(self.blocks.leased_blocks());
+            self.metrics.peak_kv_bytes =
+                self.metrics.peak_kv_bytes.max(self.metrics.pool_resident_bytes);
+        }
 
-        // Retire finished sequences.
+        // Retire finished sequences. In paged mode, blocks go back through
+        // the pool's refcounts: pages the radix cache still references stay
+        // leased (that's the prefix cache's working set).
         let done: Vec<u64> = self
             .seqs
             .iter()
@@ -193,7 +320,11 @@ impl Engine {
         for id in done {
             let mut entry = self.seqs.remove(&id).unwrap();
             self.backs.remove(&id);
-            self.blocks.release(&mut entry.blocks);
+            if let Some(pool) = self.pool.as_mut() {
+                pool.release_seq(&mut entry.blocks, &mut self.blocks);
+            } else {
+                self.blocks.release(&mut entry.blocks);
+            }
             self.sched.retire(id);
             let r = entry.result();
             self.metrics
@@ -210,6 +341,9 @@ impl Engine {
     }
 
     fn run_prefill(&mut self, id: u64, start: usize, len: usize) -> Result<()> {
+        if self.pool.is_some() {
+            return self.run_prefill_paged(id, start, len);
+        }
         let entry = self.seqs.get_mut(&id).context("unknown seq")?;
         let chunk: Vec<u32> = entry.req.tokens[start..start + len].to_vec();
         let spec = entry.req.policy.clone();
@@ -272,7 +406,172 @@ impl Engine {
         Ok(())
     }
 
+    /// Prefill one chunk through the shared paged pool. The chunk's target
+    /// pages were reserved at admission; shared pages in the write range
+    /// (only possible through unusual block-table surgery — prefix pages
+    /// are never in the write range) are copy-on-write'd first. When this
+    /// is the prompt's last chunk, the prompt's full pages are published to
+    /// the radix cache so later requests can reuse them.
+    fn run_prefill_paged(&mut self, id: u64, start: usize, len: usize) -> Result<()> {
+        let entry = self.seqs.get_mut(&id).context("unknown seq")?;
+        let chunk: Vec<u32> = entry.req.tokens[start..start + len].to_vec();
+        let spec = entry.req.policy.clone();
+        let is_last = start + len == entry.req.tokens.len();
+        let prompt_len = entry.req.tokens.len();
+        let mut blocks = std::mem::take(&mut entry.blocks);
+
+        let pool = self.pool.as_mut().expect("paged prefill without a pool");
+        if let Err(e) = pool.make_writable(&mut blocks, start, len, &mut self.blocks) {
+            // Put the (still refcounted, still leased) table back before
+            // propagating, or its pages leak for the engine's lifetime.
+            self.seqs.get_mut(&id).unwrap().blocks = blocks;
+            return Err(e);
+        }
+
+        let back = self.backs.get_mut(&id).context("missing backend state")?;
+        let ta = Instant::now();
+        {
+            let (m, seq_len, last_hidden) = match (&mut self.backend, back) {
+                (Backend::Host(m), SeqBack::HostPaged { len, last_hidden }) => {
+                    (m, len, last_hidden)
+                }
+                _ => unreachable!("paged mode requires the host backend"),
+            };
+            debug_assert_eq!(*seq_len, start, "prefill cursor out of sync with pool cursor");
+            self.ctx.begin_step();
+            let policy = self.policies.get(&spec.name).unwrap();
+            let hidden = m.forward_chunk_paged(
+                pool,
+                &blocks,
+                start,
+                &chunk,
+                policy.as_ref(),
+                spec.budget,
+                &mut self.ctx,
+            );
+            *seq_len = start + len;
+            if is_last {
+                let dm = m.cfg().d_model;
+                *last_hidden = hidden[hidden.len() - dm..].to_vec();
+            }
+        }
+        self.metrics.attention_s += ta.elapsed().as_secs_f64();
+
+        // Publish the prompt's full pages to the prefix cache.
+        if is_last {
+            if let Some(radix) = self.radix.as_mut() {
+                let bt = self.blocks.block_tokens();
+                let n_full = prompt_len / bt;
+                if n_full > 0 {
+                    let toks: Vec<u32> = {
+                        let e = self.seqs.get(&id).unwrap();
+                        e.req.tokens[..n_full * bt].to_vec()
+                    };
+                    let ns = policy_ns(&spec.name, spec.budget, self.sched.cfg.b_cp);
+                    radix.insert(ns, &toks, &blocks[..n_full], pool);
+                }
+            }
+        }
+
+        let entry = self.seqs.get_mut(&id).unwrap();
+        entry.blocks = blocks;
+        if is_last {
+            // Sample the first token straight from the prefill's last
+            // hidden row — this is the TTFT point.
+            let back = self.backs.get_mut(&id).unwrap();
+            let first = match (&mut self.backend, back) {
+                (Backend::Host(m), SeqBack::HostPaged { last_hidden, .. }) => {
+                    let logits = m.logits(last_hidden);
+                    crate::tensor::ops::topk_indices(&logits, 1)[0] as u32
+                }
+                _ => unreachable!(),
+            };
+            let entry = self.seqs.get_mut(&id).unwrap();
+            entry.generated.push(first);
+            entry.first_token_at = Some(Instant::now());
+            if entry.generated.len() >= entry.req.max_new_tokens {
+                entry.phase = Phase::Finished;
+                entry.finished_at = Some(Instant::now());
+            } else {
+                entry.phase = Phase::Decode;
+            }
+        } else {
+            entry.phase = Phase::Prefill { next: start + len };
+        }
+        Ok(())
+    }
+
+    /// One decode step through the shared paged pool.
+    fn run_decode_paged(&mut self, id: u64) -> Result<()> {
+        let entry = self.seqs.get_mut(&id).context("unknown seq")?;
+        let spec = entry.req.policy.clone();
+        let last_tok = *entry.generated.last().context("decode before first token")?;
+        let need = entry.cache_tokens() + 1;
+        let mut blocks = std::mem::take(&mut entry.blocks);
+        // Grow the lease for the new token (admission reserved max_new up
+        // front, so this normally no-ops); if the free list is dry, shed
+        // cold prefix-cache pages before giving up.
+        let mut ok = self.blocks.ensure(&mut blocks, need);
+        if !ok {
+            if let (Some(pool), Some(radix)) = (self.pool.as_mut(), self.radix.as_mut()) {
+                let missing = self.blocks.blocks_for(need).saturating_sub(blocks.len());
+                radix.evict_until(missing, pool, &mut self.blocks);
+            }
+            ok = self.blocks.ensure(&mut blocks, need);
+        }
+        let pool = self.pool.as_mut().expect("paged decode without a pool");
+        pool.adopt_new(&blocks);
+        if !ok {
+            self.seqs.get_mut(&id).unwrap().blocks = blocks;
+            anyhow::bail!("KV pool exhausted mid-decode (seq {id})");
+        }
+
+        let back = self.backs.get_mut(&id).context("missing backend state")?;
+        let ta = Instant::now();
+        let next = {
+            let (m, seq_len) = match (&mut self.backend, back) {
+                (Backend::Host(m), SeqBack::HostPaged { len, .. }) => (m, len),
+                _ => unreachable!("paged mode requires the host backend"),
+            };
+            // The pool cursor, not `need - 1`: `cache_tokens()` already
+            // counts the sampled-but-not-yet-appended token.
+            let pos = *seq_len;
+            debug_assert!(pos + 1 <= need, "decode cursor ahead of reservation");
+            if let Err(e) = pool.make_writable(&mut blocks, pos, 1, &mut self.blocks) {
+                // Restore the table before propagating (see prefill path).
+                self.seqs.get_mut(&id).unwrap().blocks = blocks;
+                return Err(e);
+            }
+            self.ctx.begin_step();
+            let policy = self.policies.get(&spec.name).unwrap();
+            let hidden = m.forward_chunk_paged(
+                pool,
+                &blocks,
+                pos,
+                &[last_tok],
+                policy.as_ref(),
+                spec.budget,
+                &mut self.ctx,
+            );
+            *seq_len = pos + 1;
+            m.greedy_next(&hidden)
+        };
+        self.metrics.attention_s += ta.elapsed().as_secs_f64();
+
+        let entry = self.seqs.get_mut(&id).unwrap();
+        entry.blocks = blocks;
+        entry.generated.push(next);
+        if entry.generated.len() >= entry.req.max_new_tokens {
+            entry.phase = Phase::Finished;
+            entry.finished_at = Some(Instant::now());
+        }
+        Ok(())
+    }
+
     fn run_decode(&mut self, id: u64) -> Result<()> {
+        if self.pool.is_some() {
+            return self.run_decode_paged(id);
+        }
         let entry = self.seqs.get_mut(&id).context("unknown seq")?;
         let spec = entry.req.policy.clone();
         let last_tok = *entry.generated.last().context("decode before first token")?;
@@ -326,6 +625,21 @@ mod tests {
                 pool_blocks: 64,
                 block_tokens: 16,
                 seed: 1,
+                kv: KvLayout::Private,
+            },
+        )
+        .unwrap()
+    }
+
+    fn paged_engine(prefix_cache: bool) -> Engine {
+        Engine::new_host(
+            "tiny",
+            EngineCfg {
+                sched: SchedCfg { b_cp: 16, step_tokens: 48, max_running: 4 },
+                pool_blocks: 64,
+                block_tokens: 16,
+                seed: 1,
+                kv: KvLayout::Paged { prefix_cache },
             },
         )
         .unwrap()
@@ -417,6 +731,7 @@ mod tests {
                 pool_blocks: 4, // 64 tokens of capacity
                 block_tokens: 16,
                 seed: 1,
+                kv: KvLayout::Private,
             },
         )
         .unwrap();
@@ -433,5 +748,114 @@ mod tests {
         assert!(e
             .submit(vec![1], 1, PolicySpec { name: "not-a-policy".into(), budget: 1 })
             .is_err());
+        // Paged mode only serves block-table-aware policies.
+        let mut p = paged_engine(false);
+        assert!(p.submit(vec![1; 8], 1, PolicySpec { name: "sample".into(), budget: 8 }).is_err());
+        assert!(p.submit(vec![1; 8], 1, PolicySpec { name: "quoka".into(), budget: 8 }).is_ok());
+    }
+
+    #[test]
+    fn paged_engine_completes_and_conserves_pages() {
+        let mut e = paged_engine(false);
+        for (i, (name, budget)) in
+            [("quoka", 24usize), ("dense", 0), ("quoka", 12)].iter().enumerate()
+        {
+            e.submit(
+                prompt(30 + i * 13, i as u64),
+                3,
+                PolicySpec { name: name.to_string(), budget: *budget },
+            )
+            .unwrap();
+        }
+        let results = e.run_to_completion().unwrap();
+        assert_eq!(results.len(), 3);
+        assert!(results.iter().all(|r| r.generated.len() == 3));
+        assert_eq!(e.blocks.free_blocks(), 64, "no prefix cache ⇒ every page returned");
+        assert!(e.metrics.peak_kv_bytes > 0, "pool residency must be reported");
+    }
+
+    #[test]
+    fn paged_generation_is_deterministic() {
+        let run = |prefix_cache: bool| {
+            let mut e = paged_engine(prefix_cache);
+            e.submit(prompt(40, 5), 5, PolicySpec { name: "quoka".into(), budget: 16 }).unwrap();
+            e.run_to_completion().unwrap()[0].generated.clone()
+        };
+        assert_eq!(run(false), run(false));
+        // An empty prefix cache must not change the numerics.
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn unfittable_prefix_hit_request_is_rejected_not_wedged() {
+        // A prefix hit shrinks a request's residual need but also pins its
+        // cached pages; rejection must measure against total − held or the
+        // engine spins forever on an unfittable head-of-line request.
+        let mut e = Engine::new_host(
+            "tiny",
+            EngineCfg {
+                sched: SchedCfg { b_cp: 16, step_tokens: 48, max_running: 4 },
+                pool_blocks: 4, // 64-token capacity
+                block_tokens: 16,
+                seed: 1,
+                kv: KvLayout::Paged { prefix_cache: true },
+            },
+        )
+        .unwrap();
+        let spec = || PolicySpec { name: "quoka".into(), budget: 16 };
+        let pfx = prompt(32, 3);
+        e.submit(pfx.clone(), 1, spec()).unwrap();
+        e.run_to_completion().unwrap();
+        assert_eq!(e.radix.as_ref().unwrap().cached_blocks(), 2);
+        // 80-token prompt + 16 decodes needs 6 pages; 2 are cached, but
+        // only total − held = 2 can ever be allocated fresh.
+        let mut big = pfx;
+        big.extend(prompt(48, 9));
+        e.submit(big, 16, spec()).unwrap();
+        let mut steps = 0;
+        while e.step().unwrap() && steps < 50 {
+            steps += 1;
+        }
+        assert!(steps < 50, "engine wedged on unfittable prefix-hit request");
+        let r = e.take_results();
+        assert_eq!(r.len(), 1);
+        assert!(r[0].generated.is_empty(), "rejected, not served");
+        // The rejected request's page references were handed back.
+        assert_eq!(
+            e.blocks.free_blocks() + e.radix.as_ref().unwrap().cached_blocks(),
+            4,
+            "only the tree keeps pages leased"
+        );
+    }
+
+    #[test]
+    fn prefix_cache_reuses_pages_and_skips_prefill() {
+        let mut e = paged_engine(true);
+        let spec = || PolicySpec { name: "quoka".into(), budget: 24 };
+        // 64-token shared prefix (4 pages), differing 16-token suffixes.
+        let mut prompt_a = prompt(64, 7);
+        let mut prompt_b = prompt_a.clone();
+        prompt_a.extend(prompt(16, 100));
+        prompt_b.extend(prompt(16, 200));
+
+        e.submit(prompt_a, 2, spec()).unwrap();
+        let results_a = e.run_to_completion().unwrap();
+        assert_eq!(results_a[0].cached_prefix_tokens, 0);
+        let prefill_after_a = e.metrics.prefill_tokens;
+        assert_eq!(prefill_after_a, 80);
+        let cached = e.radix.as_ref().unwrap().cached_blocks();
+        assert_eq!(cached, 5, "A's full prompt pages are cached");
+        assert_eq!(e.blocks.free_blocks() + cached, 64, "tree pages stay leased");
+
+        e.submit(prompt_b, 2, spec()).unwrap();
+        let results_b = e.run_to_completion().unwrap();
+        assert_eq!(results_b[0].cached_prefix_tokens, 64, "4 shared pages reused");
+        assert_eq!(
+            e.metrics.prefill_tokens - prefill_after_a,
+            16,
+            "zero prefill chunks for the cached prefix"
+        );
+        assert!(e.metrics.prefix_hit_rate() > 0.0);
+        assert!(e.metrics.prefix_bytes_saved > 0);
     }
 }

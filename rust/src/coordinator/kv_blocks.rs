@@ -1,11 +1,16 @@
-//! Paged KV-block allocator (vLLM-style accounting).
+//! Paged KV-block allocator (vLLM-style accounting) — the **lease layer**
+//! of the KV store.
 //!
-//! The engine's physical KV floats live in per-sequence buffers (host or
-//! PJRT); this allocator is the *capacity manager*: token storage is
-//! accounted in fixed-size blocks, admission is denied when the pool is
-//! exhausted, and completed sequences return their blocks. Invariants
-//! (never lease a block twice, exact free accounting) are property-tested
-//! in `rust/tests/coordinator_props.rs`.
+//! Token storage is accounted in fixed-size blocks: admission is denied
+//! when the pool is exhausted, and completed sequences return their
+//! blocks. In the engine's private-buffer mode this is accounting only
+//! (physical KV lives in per-sequence buffers); in paged mode the ids it
+//! hands out are *page ids* of the shared `kvpool::KvPool`, which layers
+//! refcounts, copy-on-write and prefix sharing on top — every page the
+//! pool owns is a block leased here, so `free + leased == total` spans
+//! both modes. Invariants (never lease a block twice, exact free
+//! accounting, zero-sized ops are no-ops) are property-tested in
+//! `rust/tests/coordinator_props.rs` and `rust/tests/kvpool_props.rs`.
 
 /// Fixed-size block allocator over a bounded pool.
 #[derive(Debug)]
@@ -49,8 +54,18 @@ impl BlockAllocator {
         self.free.len() >= n
     }
 
-    /// Lease `n` blocks (all-or-nothing).
+    /// Blocks currently leased out.
+    pub fn leased_blocks(&self) -> usize {
+        self.total - self.free.len()
+    }
+
+    /// Lease `n` blocks (all-or-nothing; `n == 0` is a no-op returning an
+    /// empty lease, so residency-aware admission can "grow" a fully cached
+    /// sequence without touching the pool).
     pub fn alloc(&mut self, n: usize) -> Option<Vec<u32>> {
+        if n == 0 {
+            return Some(Vec::new());
+        }
         if self.free.len() < n {
             return None;
         }
@@ -66,6 +81,8 @@ impl BlockAllocator {
 
     /// Grow a lease so it covers `tokens` total; appends new blocks to
     /// `blocks`. Returns false (and changes nothing) when the pool is dry.
+    /// Ensuring 0 tokens — or re-ensuring an already-covered count — is a
+    /// no-op that always succeeds and never touches the free list.
     pub fn ensure(&mut self, blocks: &mut Vec<u32>, tokens: usize) -> bool {
         let need = self.blocks_for(tokens);
         if blocks.len() >= need {
@@ -80,11 +97,19 @@ impl BlockAllocator {
         }
     }
 
-    /// Return blocks to the pool.
+    /// Return one block to the pool (the paged pool's refcount layer frees
+    /// pages one at a time as their last owner drops them).
+    pub fn release_one(&mut self, b: u32) {
+        assert!(self.leased.remove(&b), "release of un-leased block {b}");
+        self.free.push(b);
+    }
+
+    /// Return blocks to the pool. Releasing an empty lease is a no-op (a
+    /// retired sequence whose blocks were already handed off — e.g. to the
+    /// prefix cache — must not double-account).
     pub fn release(&mut self, blocks: &mut Vec<u32>) {
         for b in blocks.drain(..) {
-            assert!(self.leased.remove(&b), "release of un-leased block {b}");
-            self.free.push(b);
+            self.release_one(b);
         }
     }
 
@@ -135,6 +160,29 @@ mod tests {
         assert!(!a.ensure(&mut lease, 500));
         assert!(lease.is_empty());
         assert_eq!(a.free_blocks(), 2);
+    }
+
+    #[test]
+    fn zero_sized_ops_are_noops() {
+        // The double-accounting edge: ensure(…, 0), alloc(0) and releasing
+        // an empty lease must not move a single block.
+        let mut a = BlockAllocator::new(4, 100);
+        let mut lease = Vec::new();
+        assert!(a.ensure(&mut lease, 0));
+        assert!(lease.is_empty());
+        assert_eq!(a.free_blocks(), 4);
+        assert_eq!(a.alloc(0), Some(vec![]));
+        assert_eq!(a.free_blocks(), 4);
+        a.release(&mut lease);
+        assert_eq!(a.free_blocks(), 4);
+        assert_eq!(a.leased_blocks(), 0);
+        // Re-ensuring an already-covered count is idempotent.
+        assert!(a.ensure(&mut lease, 150));
+        assert_eq!(lease.len(), 2);
+        assert!(a.ensure(&mut lease, 150));
+        assert!(a.ensure(&mut lease, 0));
+        assert_eq!(lease.len(), 2);
+        assert_eq!(a.leased_blocks(), 2);
     }
 
     #[test]

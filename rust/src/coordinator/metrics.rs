@@ -20,6 +20,18 @@ pub struct Metrics {
     pub tpot_count: u64,
     /// Peak KV bytes resident across sequences.
     pub peak_kv_bytes: usize,
+    /// Current physical residency of the shared paged pool (leased pages ×
+    /// page bytes, metadata included); 0 in private-buffer mode.
+    pub pool_resident_bytes: usize,
+    /// Prefix-cache lookups (one per submitted request in paged+prefix
+    /// mode) and the prompt tokens they covered.
+    pub prefix_lookups: u64,
+    pub prefix_lookup_tokens: u64,
+    /// Lookups that matched at least one page, and the tokens they reused.
+    pub prefix_hits: u64,
+    pub prefix_hit_tokens: u64,
+    /// KV bytes whose recompute + storage the prefix cache avoided.
+    pub prefix_bytes_saved: u64,
 }
 
 impl Metrics {
@@ -36,6 +48,26 @@ impl Metrics {
         if had_tpot {
             self.tpot_sum_s += tpot_s;
             self.tpot_count += 1;
+        }
+    }
+
+    pub fn record_prefix_lookup(&mut self, prompt_tokens: usize) {
+        self.prefix_lookups += 1;
+        self.prefix_lookup_tokens += prompt_tokens as u64;
+    }
+
+    pub fn record_prefix_hit(&mut self, hit_tokens: usize, bytes_saved: usize) {
+        self.prefix_hits += 1;
+        self.prefix_hit_tokens += hit_tokens as u64;
+        self.prefix_bytes_saved += bytes_saved as u64;
+    }
+
+    /// Fraction of looked-up prompt tokens served from the prefix cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookup_tokens == 0 {
+            0.0
+        } else {
+            self.prefix_hit_tokens as f64 / self.prefix_lookup_tokens as f64
         }
     }
 
@@ -65,7 +97,7 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "steps={} prefill_tok={} decode_tok={} finished={} \
              mean_ttft={:.1}ms mean_tpot={:.1}ms throughput={:.0} tok/s \
              attention={:.1}% of step time",
@@ -77,7 +109,16 @@ impl Metrics {
             self.mean_tpot_s() * 1e3,
             self.tokens_per_s(),
             if self.step_s > 0.0 { 100.0 * self.attention_s / self.step_s } else { 0.0 },
-        )
+        );
+        if self.prefix_lookups > 0 {
+            s.push_str(&format!(
+                " prefix_hit_rate={:.1}% prefix_tok_reused={} kv_bytes_saved={}",
+                100.0 * self.prefix_hit_rate(),
+                self.prefix_hit_tokens,
+                self.prefix_bytes_saved,
+            ));
+        }
+        s
     }
 }
 

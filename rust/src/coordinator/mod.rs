@@ -12,7 +12,7 @@ pub mod scheduler;
 pub mod metrics;
 pub mod engine;
 
-pub use engine::{Backend, Engine, EngineCfg};
+pub use engine::{Backend, Engine, EngineCfg, KvLayout};
 pub use kv_blocks::BlockAllocator;
 pub use metrics::Metrics;
 pub use request::{PolicySpec, Request, RequestResult};

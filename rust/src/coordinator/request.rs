@@ -37,6 +37,9 @@ pub struct RequestResult {
     /// Mean time per output token (after the first), seconds.
     pub tpot_s: f64,
     pub prompt_tokens: usize,
+    /// Prompt tokens served from the shared prefix cache — their prefill
+    /// chunks were never scheduled (0 without the paged prefix cache).
+    pub cached_prefix_tokens: usize,
     /// Wall time in the engine (admission → completion).
     pub total_s: f64,
 }
@@ -58,8 +61,13 @@ pub struct SeqEntry {
     pub admitted_at: Instant,
     pub first_token_at: Option<Instant>,
     pub finished_at: Option<Instant>,
-    /// KV blocks currently leased from the block allocator.
+    /// KV blocks currently leased from the block allocator. In paged mode
+    /// these are pool page ids; a prefix-cache hit pre-populates the head
+    /// of the table with shared pages before admission.
     pub blocks: Vec<u32>,
+    /// Prompt tokens covered by shared prefix pages (prefill starts after
+    /// them).
+    pub cached_tokens: usize,
 }
 
 impl SeqEntry {
@@ -72,7 +80,19 @@ impl SeqEntry {
             first_token_at: None,
             finished_at: None,
             blocks: Vec::new(),
+            cached_tokens: 0,
         }
+    }
+
+    /// Blocks this sequence still needs to cover its whole prompt + decode
+    /// budget, net of blocks already held (prefix-cache pages included).
+    /// The single source of truth for admission, the engine's reject
+    /// check, and eviction pressure — the three must agree or an
+    /// unfittable head-of-line request wedges the queue.
+    pub fn residual_blocks(&self, blocks: &super::kv_blocks::BlockAllocator) -> usize {
+        blocks
+            .blocks_for(self.req.tokens.len() + self.req.max_new_tokens)
+            .saturating_sub(self.blocks.len())
     }
 
     /// Total tokens this sequence holds in the KV cache right now.
@@ -104,6 +124,7 @@ impl SeqEntry {
             ttft_s: ttft,
             tpot_s: tpot,
             prompt_tokens: self.req.tokens.len(),
+            cached_prefix_tokens: self.cached_tokens,
             total_s: (end - self.admitted_at).as_secs_f64(),
         }
     }

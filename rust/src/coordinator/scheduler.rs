@@ -81,14 +81,18 @@ impl Scheduler {
     ) -> StepPlan {
         let mut plan = StepPlan::default();
 
-        // ---- admission ----
+        // ---- admission (by real residency) ----
+        // A sequence is charged the blocks for its whole prompt + decode
+        // budget MINUS whatever it already holds — prefix-cache hits arrive
+        // with shared pages at the head of their block table, so a mostly
+        // cached request admits almost for free.
         while self.running.len() < self.cfg.max_running {
             let Some(&cand) = self.waiting.front() else { break };
             let entry = seqs.get_mut(&cand).expect("waiting id unknown");
-            let need = blocks.blocks_for(entry.req.tokens.len() + entry.req.max_new_tokens);
+            let need = entry.residual_blocks(blocks);
             match blocks.alloc(need) {
-                Some(lease) => {
-                    entry.blocks = lease;
+                Some(mut lease) => {
+                    entry.blocks.append(&mut lease);
                     self.waiting.pop_front();
                     self.running.push(cand);
                     plan.admitted.push(cand);

@@ -1,0 +1,75 @@
+//! # Shared paged KV pool with radix prefix caching
+//!
+//! The physical KV store behind the engine's paged mode. Where the private
+//! per-sequence [`KvBuffers`](crate::model::attention::KvBuffers) path keeps
+//! one growable slab per `(sequence, layer)`, this subsystem keeps **one
+//! shared slab of fixed-size pages per layer** and gives each sequence a
+//! *block table* — an ordered list of page ids — so identical prompt
+//! prefixes are stored once and shared across requests.
+//!
+//! ## Architecture (engine → scheduler → pool → kernel)
+//!
+//! ```text
+//!   submit(tokens)
+//!      │   RadixCache::lookup — longest cached prefix, in whole pages;
+//!      │   matched pages are retained (+1 ref) and become the head of the
+//!      │   sequence's block table; the prefill cursor starts *after* them,
+//!      │   so their chunks are never scheduled.
+//!      ▼
+//!   Scheduler::plan — admission by real residency: a sequence is charged
+//!      │   blocks_for(prompt + max_new) MINUS the pages it already holds
+//!      │   from the prefix cache. BlockAllocator stays the lease layer:
+//!      │   it hands out page ids and enforces capacity; the pool adds
+//!      │   refcounts and physical storage on top.
+//!      ▼
+//!   KvPool — per-layer page slabs `[page, n_kv, block_tokens, d]`, grown
+//!      │   lazily as pages are first leased. Every append maintains page
+//!      │   metadata incrementally: per-key `1/‖k‖` (the PR-1 norm cache,
+//!      │   now pooled) and a per-(page, head) key sum (≡ unnormalized mean
+//!      │   key). Shared pages are copy-on-write: a write into a page with
+//!      │   refcount > 1 first clones it into a fresh page.
+//!      ▼
+//!   Kernels — `paged_chunk_attention` gathers K/V tiles through the block
+//!          table (per-page head rows are contiguous, so full-selection
+//!          tiles stream page runs); the QUOKA key scan scores the per-page
+//!          mean-key metadata first and only descends into pages whose
+//!          cosine bound survives (CompactAttention / Double-Sparsity
+//!          style), skipping whole pages of the exact scan.
+//! ```
+//!
+//! ## Prefix-cache semantics
+//!
+//! * Keys are **token ids at page granularity** plus a namespace hash of
+//!   `(policy, budget, b_cp)` — with sparse selection the cached hidden
+//!   states (hence KV) depend on the policy *and* on where prefill chunk
+//!   boundaries fell, so prefixes are only reused within the same
+//!   configuration (dense attention is exact under any chunking and
+//!   shares one namespace). Under concurrent load the scheduler can still
+//!   truncate a sparse policy's chunk below `b_cp`, shifting later
+//!   boundaries; reused KV may then differ slightly from a cold
+//!   recompute — an approximation of the same order the sparse policy
+//!   already accepts (exact reuse is pinned by the serial-load e2e test).
+//! * Only *full* pages of the **prompt** are inserted, at prefill
+//!   completion; generated tokens never enter the tree.
+//! * A lookup never matches the entire prompt: at least one token is left
+//!   to prefill so TTFT sampling always has a final hidden row.
+//! * The tree holds its own +1 reference on every cached page. Eviction is
+//!   LRU over *leaf* nodes whose page has no other owner — a page
+//!   referenced by any live sequence is never freed (property-tested in
+//!   `rust/tests/kvpool_props.rs`).
+//!
+//! ## Invariants
+//!
+//! * `free + leased == total` on the lease layer, always (the pool never
+//!   bypasses the allocator).
+//! * `refcount[p] > 0` ⇔ page `p` is leased; a page reaching refcount 0 is
+//!   returned to the allocator immediately.
+//! * Page metadata (`1/‖k‖`, key sums) is exact for every filled row after
+//!   every append, COW copy and page reuse (reused pages have their sums
+//!   zeroed on adoption).
+
+pub mod pool;
+pub mod radix;
+
+pub use pool::{KvPool, PagedKv, PoolCfg};
+pub use radix::{policy_ns, RadixCache, RadixStats};

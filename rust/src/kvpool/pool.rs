@@ -1,0 +1,497 @@
+//! The shared page pool: per-layer K/V slabs, refcounted pages,
+//! copy-on-write, and incrementally maintained per-page metadata.
+//!
+//! Page ids come from the engine's [`BlockAllocator`] — the pool never
+//! allocates ids itself, it only attaches physical storage, refcounts and
+//! metadata to ids the lease layer hands out. Slabs grow lazily (geometric
+//! doubling up to `total_blocks`) so a big admission-capacity pool costs no
+//! memory until pages are actually leased.
+
+use crate::coordinator::kv_blocks::BlockAllocator;
+use crate::select::{KCache, Pages};
+use crate::tensor::ops::l2_norm;
+
+/// Pool geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolCfg {
+    pub n_layers: usize,
+    /// KV heads per layer.
+    pub n_kv: usize,
+    /// Head dim.
+    pub d: usize,
+    /// Tokens per page.
+    pub block_tokens: usize,
+    /// Admission capacity in pages (mirrors `BlockAllocator::total_blocks`).
+    pub total_blocks: usize,
+}
+
+/// One layer's physical storage, laid out per page:
+/// `k`/`v`: `[page, n_kv, block_tokens, d]`,
+/// `inv_norm`: `[page, n_kv, block_tokens]`,
+/// `key_sums`: `[page, n_kv, d]` (sum of filled key rows — cosine against
+/// it equals cosine against the mean key),
+/// `fill`: `[page]` filled slots, so overwriting a slot (COW rewrite)
+/// subtracts the old row from the sums and metadata stays exact.
+struct LayerPages {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    inv_norm: Vec<f32>,
+    key_sums: Vec<f32>,
+    fill: Vec<u16>,
+}
+
+/// The shared paged KV pool.
+pub struct KvPool {
+    pub cfg: PoolCfg,
+    layers: Vec<LayerPages>,
+    /// Owners per page id (0 = free as far as the pool is concerned).
+    refcount: Vec<u32>,
+    /// Pages with physical storage behind them (`<= cfg.total_blocks`).
+    capacity_pages: usize,
+    /// Copy-on-write page clones performed (observability).
+    pub cow_copies: u64,
+}
+
+/// Borrowed view of one sequence × one layer: what the paged attention
+/// kernel walks. Per-page rows of a single head are contiguous, so
+/// full-selection tiles stream page runs without a gather.
+#[derive(Clone, Copy)]
+pub struct PagedKv<'a> {
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub inv_norm: &'a [f32],
+    /// The sequence's block table: logical block `j` lives in page
+    /// `blocks[j]`.
+    pub blocks: &'a [u32],
+    pub block_tokens: usize,
+    pub n_kv: usize,
+    pub d: usize,
+    /// Valid (filled) tokens.
+    pub t: usize,
+}
+
+impl PagedKv<'_> {
+    /// Flat float offset of row `(h, i)` in the `k`/`v` slabs.
+    #[inline]
+    pub fn row_base(&self, h: usize, i: usize) -> usize {
+        let bt = self.block_tokens;
+        let page = self.blocks[i / bt] as usize;
+        ((page * self.n_kv + h) * bt + (i % bt)) * self.d
+    }
+
+    #[inline]
+    pub fn key(&self, h: usize, i: usize) -> &[f32] {
+        let b = self.row_base(h, i);
+        &self.k[b..b + self.d]
+    }
+
+    #[inline]
+    pub fn value(&self, h: usize, i: usize) -> &[f32] {
+        let b = self.row_base(h, i);
+        &self.v[b..b + self.d]
+    }
+}
+
+impl KvPool {
+    pub fn new(cfg: PoolCfg) -> KvPool {
+        assert!(cfg.n_layers > 0 && cfg.n_kv > 0 && cfg.d > 0);
+        assert!(cfg.block_tokens > 0 && cfg.total_blocks > 0);
+        assert!(cfg.block_tokens <= u16::MAX as usize, "fill counters are u16");
+        KvPool {
+            layers: (0..cfg.n_layers)
+                .map(|_| LayerPages {
+                    k: Vec::new(),
+                    v: Vec::new(),
+                    inv_norm: Vec::new(),
+                    key_sums: Vec::new(),
+                    fill: Vec::new(),
+                })
+                .collect(),
+            refcount: vec![0; cfg.total_blocks],
+            capacity_pages: 0,
+            cow_copies: 0,
+            cfg,
+        }
+    }
+
+    /// Floats of K (or V) per page per layer.
+    #[inline]
+    fn page_floats(&self) -> usize {
+        self.cfg.n_kv * self.cfg.block_tokens * self.cfg.d
+    }
+
+    /// Grow the slabs so `page` has storage behind it.
+    fn ensure_page(&mut self, page: usize) {
+        if page < self.capacity_pages {
+            return;
+        }
+        let new_cap = (self.capacity_pages.max(1) * 2)
+            .max(page + 1)
+            .min(self.cfg.total_blocks);
+        let pf = self.page_floats();
+        let nf = self.cfg.n_kv * self.cfg.block_tokens;
+        let sf = self.cfg.n_kv * self.cfg.d;
+        for lp in &mut self.layers {
+            lp.k.resize(new_cap * pf, 0.0);
+            lp.v.resize(new_cap * pf, 0.0);
+            lp.inv_norm.resize(new_cap * nf, 0.0);
+            lp.key_sums.resize(new_cap * sf, 0.0);
+            lp.fill.resize(new_cap, 0);
+        }
+        self.capacity_pages = new_cap;
+    }
+
+    pub fn refcount(&self, b: u32) -> u32 {
+        self.refcount[b as usize]
+    }
+
+    /// Add an owner to an already-owned page (prefix sharing).
+    pub fn retain(&mut self, b: u32) {
+        let rc = &mut self.refcount[b as usize];
+        assert!(*rc > 0, "retain of unowned page {b}");
+        *rc += 1;
+    }
+
+    /// Take ownership of pages freshly leased from the allocator: any id
+    /// with refcount 0 becomes owned (refcount 1) with zeroed metadata
+    /// sums. Ids already owned (e.g. radix-matched prefix pages) are left
+    /// untouched, so this is safe to call on a whole block table.
+    pub fn adopt_new(&mut self, blocks: &[u32]) {
+        for &b in blocks {
+            let bi = b as usize;
+            if self.refcount[bi] != 0 {
+                continue;
+            }
+            self.refcount[bi] = 1;
+            self.ensure_page(bi);
+            let sf = self.cfg.n_kv * self.cfg.d;
+            for lp in &mut self.layers {
+                lp.key_sums[bi * sf..(bi + 1) * sf].fill(0.0);
+                lp.fill[bi] = 0;
+            }
+        }
+    }
+
+    /// Drop one owner of page `b`; the last owner returns it to the lease
+    /// layer.
+    pub fn release_block(&mut self, b: u32, alloc: &mut BlockAllocator) {
+        let bi = b as usize;
+        assert!(self.refcount[bi] > 0, "release of unowned page {b}");
+        self.refcount[bi] -= 1;
+        if self.refcount[bi] == 0 {
+            alloc.release_one(b);
+        }
+    }
+
+    /// Release a whole block table (sequence retirement).
+    pub fn release_seq(&mut self, blocks: &mut Vec<u32>, alloc: &mut BlockAllocator) {
+        for b in blocks.drain(..) {
+            self.release_block(b, alloc);
+        }
+    }
+
+    /// Copy-on-write guard: make the pages covering token positions
+    /// `[first, first + n)` exclusively owned, cloning any shared page
+    /// (all layers + metadata) into a freshly leased one.
+    pub fn make_writable(
+        &mut self,
+        blocks: &mut [u32],
+        first: usize,
+        n: usize,
+        alloc: &mut BlockAllocator,
+    ) -> anyhow::Result<()> {
+        if n == 0 {
+            return Ok(());
+        }
+        let bt = self.cfg.block_tokens;
+        let (b0, b1) = (first / bt, (first + n - 1) / bt);
+        anyhow::ensure!(
+            b1 < blocks.len(),
+            "block table too short for write at tokens {}..{}",
+            first,
+            first + n
+        );
+        for j in b0..=b1 {
+            let old = blocks[j] as usize;
+            if self.refcount[old] <= 1 {
+                continue;
+            }
+            let Some(lease) = alloc.alloc(1) else {
+                anyhow::bail!("KV pool exhausted during copy-on-write");
+            };
+            let new = lease[0] as usize;
+            self.refcount[new] = 1;
+            self.ensure_page(new);
+            self.copy_page(old, new);
+            self.cow_copies += 1;
+            // Drop this table's share of the original (refcount >= 2, so
+            // it stays owned by the other holders).
+            self.refcount[old] -= 1;
+            blocks[j] = new as u32;
+        }
+        Ok(())
+    }
+
+    fn copy_page(&mut self, src: usize, dst: usize) {
+        let pf = self.page_floats();
+        let nf = self.cfg.n_kv * self.cfg.block_tokens;
+        let sf = self.cfg.n_kv * self.cfg.d;
+        for lp in &mut self.layers {
+            lp.k.copy_within(src * pf..(src + 1) * pf, dst * pf);
+            lp.v.copy_within(src * pf..(src + 1) * pf, dst * pf);
+            lp.inv_norm.copy_within(src * nf..(src + 1) * nf, dst * nf);
+            lp.key_sums.copy_within(src * sf..(src + 1) * sf, dst * sf);
+            lp.fill[dst] = lp.fill[src];
+        }
+    }
+
+    /// Write `s` tokens of one layer's per-head K/V (layout `[n_kv, s, d]`)
+    /// at token positions `pos..pos+s`, maintaining the per-key inverse
+    /// norms and per-page key sums incrementally. The caller must have
+    /// ensured capacity ([`BlockAllocator::ensure`] + [`KvPool::adopt_new`])
+    /// and exclusivity ([`KvPool::make_writable`]).
+    pub fn append_chunk(
+        &mut self,
+        blocks: &[u32],
+        layer: usize,
+        pos: usize,
+        k_new: &[f32],
+        v_new: &[f32],
+        s: usize,
+    ) {
+        let PoolCfg { n_kv, d, block_tokens: bt, .. } = self.cfg;
+        debug_assert_eq!(k_new.len(), n_kv * s * d);
+        debug_assert_eq!(v_new.len(), n_kv * s * d);
+        assert!(blocks.len() * bt >= pos + s, "block table too short for append");
+        for j in pos / bt..=(pos + s - 1) / bt {
+            let page = blocks[j] as usize;
+            debug_assert!(self.refcount[page] == 1, "append into shared/unowned page {page}");
+            self.ensure_page(page);
+        }
+        let lp = &mut self.layers[layer];
+        for i in 0..s {
+            let tok = pos + i;
+            let page = blocks[tok / bt] as usize;
+            let slot = tok % bt;
+            // Overwriting a filled slot (COW rewrite) must first retire the
+            // old row from the page's key sum, or the mean-key metadata the
+            // paged QUOKA scan prunes by drifts.
+            let was_filled = slot < lp.fill[page] as usize;
+            for h in 0..n_kv {
+                let src = (h * s + i) * d;
+                let dst = ((page * n_kv + h) * bt + slot) * d;
+                let sb = (page * n_kv + h) * d;
+                if was_filled {
+                    for jj in 0..d {
+                        lp.key_sums[sb + jj] -= lp.k[dst + jj];
+                    }
+                }
+                lp.k[dst..dst + d].copy_from_slice(&k_new[src..src + d]);
+                lp.v[dst..dst + d].copy_from_slice(&v_new[src..src + d]);
+                let norm = l2_norm(&lp.k[dst..dst + d]);
+                lp.inv_norm[(page * n_kv + h) * bt + slot] =
+                    if norm > 0.0 { 1.0 / norm } else { 0.0 };
+                for (o, &x) in lp.key_sums[sb..sb + d].iter_mut().zip(&k_new[src..src + d]) {
+                    *o += x;
+                }
+            }
+            if lp.fill[page] as usize <= slot {
+                lp.fill[page] = (slot + 1) as u16;
+            }
+        }
+    }
+
+    /// Selection-policy view of layer `layer` through a block table: a
+    /// block-table-aware [`KCache`] carrying the pooled norm cache and the
+    /// per-page mean-key metadata.
+    pub fn k_cache<'a>(&'a self, blocks: &'a [u32], t: usize, layer: usize) -> KCache<'a> {
+        let lp = &self.layers[layer];
+        KCache::paged(
+            &lp.k,
+            self.cfg.n_kv,
+            t,
+            self.cfg.d,
+            &lp.inv_norm,
+            Pages {
+                blocks,
+                block_tokens: self.cfg.block_tokens,
+                key_sums: &lp.key_sums,
+            },
+        )
+    }
+
+    /// Attention-kernel view of layer `layer` through a block table.
+    pub fn kv_view<'a>(&'a self, blocks: &'a [u32], t: usize, layer: usize) -> PagedKv<'a> {
+        let lp = &self.layers[layer];
+        PagedKv {
+            k: &lp.k,
+            v: &lp.v,
+            inv_norm: &lp.inv_norm,
+            blocks,
+            block_tokens: self.cfg.block_tokens,
+            n_kv: self.cfg.n_kv,
+            d: self.cfg.d,
+            t,
+        }
+    }
+
+    /// KV + metadata bytes of one cached token across all layers.
+    pub fn token_bytes(&self) -> usize {
+        // K + V rows (2d floats) + one inv-norm float per (layer, head).
+        self.cfg.n_layers * self.cfg.n_kv * (2 * self.cfg.d + 1) * 4
+    }
+
+    /// Bytes of one page across all layers, metadata included.
+    pub fn page_bytes(&self) -> usize {
+        let c = &self.cfg;
+        c.n_layers * c.n_kv * (2 * c.block_tokens * c.d + c.block_tokens + c.d) * 4
+    }
+
+    /// Physical bytes accounted to `leased_pages` pages (K, V, norm cache
+    /// and per-page key sums).
+    pub fn resident_bytes(&self, leased_pages: usize) -> usize {
+        leased_pages * self.page_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cfg() -> PoolCfg {
+        PoolCfg { n_layers: 2, n_kv: 2, d: 4, block_tokens: 4, total_blocks: 16 }
+    }
+
+    fn lease_for(alloc: &mut BlockAllocator, pool: &mut KvPool, tokens: usize) -> Vec<u32> {
+        let mut blocks = Vec::new();
+        assert!(alloc.ensure(&mut blocks, tokens));
+        pool.adopt_new(&blocks);
+        blocks
+    }
+
+    #[test]
+    fn append_and_views_roundtrip() {
+        let c = cfg();
+        let mut alloc = BlockAllocator::new(c.total_blocks, c.block_tokens);
+        let mut pool = KvPool::new(c);
+        let mut rng = Rng::new(3);
+        let blocks = lease_for(&mut alloc, &mut pool, 10);
+        let mut pos = 0;
+        for s in [3usize, 4, 3] {
+            for l in 0..c.n_layers {
+                let k = rng.normal_vec(c.n_kv * s * c.d, 1.0);
+                let v = rng.normal_vec(c.n_kv * s * c.d, 1.0);
+                pool.append_chunk(&blocks, l, pos, &k, &v, s);
+            }
+            pos += s;
+        }
+        let view = pool.kv_view(&blocks, pos, 1);
+        assert_eq!(view.t, 10);
+        // Norm metadata matches a recompute for every filled row.
+        for h in 0..c.n_kv {
+            for i in 0..pos {
+                let n = l2_norm(view.key(h, i));
+                let want = if n > 0.0 { 1.0 / n } else { 0.0 };
+                let got = view.inv_norm[(view.blocks[i / c.block_tokens] as usize * c.n_kv + h)
+                    * c.block_tokens
+                    + i % c.block_tokens];
+                assert!((got - want).abs() < 1e-6);
+            }
+        }
+        // Key sums equal the sum of filled rows per page.
+        let kc = pool.k_cache(&blocks, pos, 1);
+        let pg = kc.pages.unwrap();
+        for (j, &page) in blocks.iter().enumerate() {
+            let lo = j * c.block_tokens;
+            let hi = (lo + c.block_tokens).min(pos);
+            for h in 0..c.n_kv {
+                let mut want = vec![0.0f32; c.d];
+                for i in lo..hi {
+                    for (w, &x) in want.iter_mut().zip(kc.key(h, i)) {
+                        *w += x;
+                    }
+                }
+                let sb = (page as usize * c.n_kv + h) * c.d;
+                for (a, b) in want.iter().zip(&pg.key_sums[sb..sb + c.d]) {
+                    assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cow_clones_shared_page_and_preserves_original() {
+        let c = cfg();
+        let mut alloc = BlockAllocator::new(c.total_blocks, c.block_tokens);
+        let mut pool = KvPool::new(c);
+        let mut rng = Rng::new(9);
+        let mut owner = lease_for(&mut alloc, &mut pool, c.block_tokens);
+        for l in 0..c.n_layers {
+            let k = rng.normal_vec(c.n_kv * c.block_tokens * c.d, 1.0);
+            let v = rng.normal_vec(c.n_kv * c.block_tokens * c.d, 1.0);
+            pool.append_chunk(&owner, l, 0, &k, &v, c.block_tokens);
+        }
+        let orig_row: Vec<f32> = pool.kv_view(&owner, c.block_tokens, 0).key(1, 2).to_vec();
+        // Second table shares the page.
+        let mut sharer = owner.clone();
+        pool.retain(sharer[0]);
+        assert_eq!(pool.refcount(owner[0]), 2);
+        // Writing through the sharer triggers COW.
+        pool.make_writable(&mut sharer, 0, 1, &mut alloc).unwrap();
+        assert_ne!(sharer[0], owner[0]);
+        assert_eq!(pool.refcount(owner[0]), 1);
+        assert_eq!(pool.refcount(sharer[0]), 1);
+        assert_eq!(pool.cow_copies, 1);
+        // Clone carries the data; original is untouched by later writes.
+        assert_eq!(pool.kv_view(&sharer, c.block_tokens, 0).key(1, 2), &orig_row[..]);
+        let k2 = vec![7.0f32; c.n_kv * c.d];
+        let v2 = vec![1.0f32; c.n_kv * c.d];
+        // Overwrite slot 2 via a 1-token append at pos 2 on the sharer.
+        pool.append_chunk(&sharer, 0, 2, &k2, &v2, 1);
+        assert_eq!(pool.kv_view(&owner, c.block_tokens, 0).key(1, 2), &orig_row[..]);
+        // Overwriting must keep the page's key-sum metadata exact: the old
+        // row is retired from the sum before the new one is added.
+        {
+            let kc = pool.k_cache(&sharer, c.block_tokens, 0);
+            for h in 0..c.n_kv {
+                let mut want = vec![0.0f32; c.d];
+                for i in 0..c.block_tokens {
+                    for (w, &x) in want.iter_mut().zip(kc.key(h, i)) {
+                        *w += x;
+                    }
+                }
+                let sb = (sharer[0] as usize * c.n_kv + h) * c.d;
+                for (a, b) in want.iter().zip(&kc.pages.unwrap().key_sums[sb..sb + c.d]) {
+                    assert!((a - b).abs() < 1e-5, "sum drift after overwrite: {a} vs {b}");
+                }
+            }
+        }
+        // Exclusive pages are not cloned again.
+        pool.make_writable(&mut sharer, 0, c.block_tokens, &mut alloc).unwrap();
+        assert_eq!(pool.cow_copies, 1);
+        // Releases return everything.
+        pool.release_seq(&mut owner, &mut alloc);
+        pool.release_seq(&mut sharer, &mut alloc);
+        assert_eq!(alloc.free_blocks(), c.total_blocks);
+    }
+
+    #[test]
+    fn adopt_resets_sums_on_page_reuse() {
+        let c = cfg();
+        let mut alloc = BlockAllocator::new(c.total_blocks, c.block_tokens);
+        let mut pool = KvPool::new(c);
+        let mut blocks = lease_for(&mut alloc, &mut pool, c.block_tokens);
+        let k = vec![1.0f32; c.n_kv * c.block_tokens * c.d];
+        let v = vec![0.0f32; c.n_kv * c.block_tokens * c.d];
+        pool.append_chunk(&blocks, 0, 0, &k, &v, c.block_tokens);
+        let page = blocks[0];
+        pool.release_seq(&mut blocks, &mut alloc);
+        // Re-lease (ids are reused LIFO) and adopt: sums must be zeroed.
+        let blocks2 = lease_for(&mut alloc, &mut pool, c.block_tokens);
+        assert!(blocks2.contains(&page), "expected page reuse");
+        let kc = pool.k_cache(&blocks2, 0, 0);
+        let sb = (page as usize * c.n_kv) * c.d;
+        assert!(kc.pages.unwrap().key_sums[sb..sb + c.d].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,402 @@
+//! Radix prefix cache over token ids, at page granularity.
+//!
+//! Each tree edge spans exactly one page (`block_tokens` token ids); a node
+//! owns the pool page holding that span's KV. Lookups walk whole pages and
+//! return the longest cached prefix's pages; inserts add the full prompt
+//! pages of a finished prefill; eviction is LRU over leaves whose page has
+//! no owner besides the tree itself — a page referenced by a live sequence
+//! is never freed.
+//!
+//! Trees are *namespaced* by a `(policy, budget, b_cp)` hash (see
+//! [`policy_ns`]): under sparse selection the cached hidden states (hence
+//! KV) depend on the selection configuration, so prefixes must not be
+//! shared across it; exact (dense) attention shares one namespace.
+
+use super::pool::KvPool;
+use crate::coordinator::kv_blocks::BlockAllocator;
+use std::collections::HashMap;
+
+/// Namespace hash for prefix sharing (FNV-1a).
+///
+/// Cached KV depends on the selection configuration: sparse policies
+/// change hidden states (hence KV), and their prefill chunk boundaries
+/// (`b_cp`) change which keys each chunk's selection saw — so requests
+/// only share cached KV when policy name, budget and chunk size all
+/// agree. Dense attention is exact under any chunking, so every
+/// dense/full request shares one namespace regardless of budget or
+/// `b_cp`. (Under concurrent load the scheduler may still truncate a
+/// sparse policy's chunk below `b_cp`, shifting later boundaries — reused
+/// KV can then differ slightly from a cold recompute, bounded by the same
+/// approximation the sparse policy already accepts; see ROADMAP.)
+pub fn policy_ns(name: &str, budget: usize, b_cp: usize) -> u64 {
+    let exact = name == "dense" || name == "full";
+    let name = if exact { "dense" } else { name };
+    let (budget, b_cp) = if exact { (0, 0) } else { (budget, b_cp) };
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    for b in budget.to_le_bytes().into_iter().chain(b_cp.to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+const PARENT_ROOT: usize = usize::MAX;
+const PARENT_FREE: usize = usize::MAX - 1;
+
+struct Node {
+    /// Child edges, keyed by their `block_tokens`-long token span.
+    children: HashMap<Vec<u32>, usize>,
+    /// Parent node index; `PARENT_ROOT` for roots, `PARENT_FREE` when the
+    /// slot is on the free list.
+    parent: usize,
+    /// Token span of the edge from `parent` (empty for roots).
+    edge: Vec<u32>,
+    /// Pool page holding this span's KV (unused for roots).
+    block: u32,
+    /// LRU clock value of the last lookup/insert touching this node.
+    last_use: u64,
+}
+
+/// Cache observability counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RadixStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub lookup_tokens: u64,
+    pub hit_tokens: u64,
+    pub inserted_blocks: u64,
+    pub evicted_blocks: u64,
+}
+
+/// The prefix tree.
+pub struct RadixCache {
+    nodes: Vec<Node>,
+    free_nodes: Vec<usize>,
+    /// Namespace hash → root node index.
+    roots: HashMap<u64, usize>,
+    block_tokens: usize,
+    tick: u64,
+    pub stats: RadixStats,
+}
+
+impl RadixCache {
+    pub fn new(block_tokens: usize) -> RadixCache {
+        assert!(block_tokens > 0);
+        RadixCache {
+            nodes: Vec::new(),
+            free_nodes: Vec::new(),
+            roots: HashMap::new(),
+            block_tokens,
+            tick: 0,
+            stats: RadixStats::default(),
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    fn new_node(&mut self, parent: usize, edge: Vec<u32>, block: u32) -> usize {
+        let node = Node { children: HashMap::new(), parent, edge, block, last_use: self.tick };
+        match self.free_nodes.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    fn root(&mut self, ns: u64) -> usize {
+        if let Some(&r) = self.roots.get(&ns) {
+            return r;
+        }
+        let r = self.new_node(PARENT_ROOT, Vec::new(), u32::MAX);
+        self.roots.insert(ns, r);
+        r
+    }
+
+    /// Longest cached prefix of `tokens` in namespace `ns`, as pool page
+    /// ids (one per `block_tokens` tokens). Never matches the entire
+    /// prompt: at least one token is left to prefill. The caller owns
+    /// nothing yet — it must `KvPool::retain` every returned page.
+    pub fn lookup(&mut self, ns: u64, tokens: &[u32]) -> Vec<u32> {
+        self.tick += 1;
+        self.stats.lookups += 1;
+        self.stats.lookup_tokens += tokens.len() as u64;
+        let bt = self.block_tokens;
+        let max_blocks = tokens.len().saturating_sub(1) / bt;
+        let Some(&root) = self.roots.get(&ns) else {
+            return Vec::new();
+        };
+        let mut cur = root;
+        let mut out = Vec::new();
+        for j in 0..max_blocks {
+            let span = &tokens[j * bt..(j + 1) * bt];
+            match self.nodes[cur].children.get(span) {
+                Some(&next) => {
+                    cur = next;
+                    self.nodes[cur].last_use = self.tick;
+                    out.push(self.nodes[cur].block);
+                }
+                None => break,
+            }
+        }
+        if !out.is_empty() {
+            self.stats.hits += 1;
+            self.stats.hit_tokens += (out.len() * bt) as u64;
+        }
+        out
+    }
+
+    /// Insert the full pages of `tokens` (a finished prefill's prompt) with
+    /// their backing pool pages. New nodes retain their page (+1 ref, the
+    /// tree's own); spans already cached keep their existing page and the
+    /// duplicate stays solely owned by its sequence.
+    pub fn insert(&mut self, ns: u64, tokens: &[u32], blocks: &[u32], pool: &mut KvPool) {
+        self.tick += 1;
+        let bt = self.block_tokens;
+        let n = (tokens.len() / bt).min(blocks.len());
+        let mut cur = self.root(ns);
+        for j in 0..n {
+            let span = &tokens[j * bt..(j + 1) * bt];
+            if let Some(&next) = self.nodes[cur].children.get(span) {
+                cur = next;
+                self.nodes[cur].last_use = self.tick;
+            } else {
+                let span = span.to_vec();
+                let node = self.new_node(cur, span.clone(), blocks[j]);
+                self.nodes[cur].children.insert(span, node);
+                pool.retain(blocks[j]);
+                self.stats.inserted_blocks += 1;
+                cur = node;
+            }
+        }
+    }
+
+    /// Number of pages the tree currently holds a reference on.
+    pub fn cached_blocks(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.parent != PARENT_FREE && n.parent != PARENT_ROOT)
+            .count()
+    }
+
+    /// Evict LRU unreferenced leaves until the lease layer has at least
+    /// `min_free` free pages (or nothing more can be evicted). Returns the
+    /// number of pages freed. Pages with any owner besides the tree are
+    /// never touched.
+    ///
+    /// Each pass scans the node slab once and evicts the whole eligible
+    /// batch oldest-first; evicting a leaf can turn its parent into a
+    /// leaf, so passes repeat until the target is met or a scan comes back
+    /// empty — O(nodes · depth) worst case instead of O(nodes · freed).
+    pub fn evict_until(
+        &mut self,
+        min_free: usize,
+        pool: &mut KvPool,
+        alloc: &mut BlockAllocator,
+    ) -> usize {
+        let mut freed = 0;
+        while alloc.free_blocks() < min_free {
+            // Batch entries stay valid as the batch drains: an evictable
+            // leaf's parent has children (so is never in the same batch),
+            // and no refcount or child set changes except by the removals
+            // themselves.
+            let mut batch: Vec<(u64, usize)> = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| {
+                    n.parent != PARENT_FREE
+                        && n.parent != PARENT_ROOT
+                        && n.children.is_empty()
+                        && pool.refcount(n.block) == 1
+                })
+                .map(|(i, n)| (n.last_use, i))
+                .collect();
+            if batch.is_empty() {
+                break;
+            }
+            batch.sort_unstable();
+            for (_, idx) in batch {
+                if alloc.free_blocks() >= min_free {
+                    break;
+                }
+                self.remove_leaf(idx, pool, alloc);
+                freed += 1;
+            }
+        }
+        freed
+    }
+
+    fn remove_leaf(&mut self, idx: usize, pool: &mut KvPool, alloc: &mut BlockAllocator) {
+        debug_assert!(self.nodes[idx].children.is_empty());
+        let parent = self.nodes[idx].parent;
+        let edge = std::mem::take(&mut self.nodes[idx].edge);
+        let removed = self.nodes[parent].children.remove(edge.as_slice());
+        debug_assert_eq!(removed, Some(idx));
+        pool.release_block(self.nodes[idx].block, alloc);
+        self.stats.evicted_blocks += 1;
+        self.nodes[idx].children = HashMap::new();
+        self.nodes[idx].parent = PARENT_FREE;
+        self.free_nodes.push(idx);
+    }
+
+    /// Structural invariant check (test hook): parent/child links are
+    /// consistent, every edge spans one page, and every cached page is
+    /// owned at least by the tree.
+    pub fn validate(&self, pool: &KvPool) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.parent == PARENT_FREE {
+                continue;
+            }
+            if n.parent == PARENT_ROOT {
+                if !n.edge.is_empty() {
+                    return Err(format!("root {i} has a non-empty edge"));
+                }
+            } else {
+                if n.edge.len() != self.block_tokens {
+                    return Err(format!("node {i}: edge length {}", n.edge.len()));
+                }
+                let p = &self.nodes[n.parent];
+                if p.parent == PARENT_FREE {
+                    return Err(format!("node {i}: freed parent"));
+                }
+                if p.children.get(n.edge.as_slice()) != Some(&i) {
+                    return Err(format!("node {i}: parent link broken"));
+                }
+                if pool.refcount(n.block) == 0 {
+                    return Err(format!("node {i}: cached page {} unowned", n.block));
+                }
+            }
+            for (edge, &c) in &n.children {
+                let cn = &self.nodes[c];
+                if cn.parent != i || &cn.edge != edge {
+                    return Err(format!("node {i}: child {c} link broken"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvpool::pool::PoolCfg;
+
+    fn setup() -> (RadixCache, KvPool, BlockAllocator) {
+        let cfg = PoolCfg { n_layers: 1, n_kv: 1, d: 2, block_tokens: 4, total_blocks: 32 };
+        (RadixCache::new(4), KvPool::new(cfg), BlockAllocator::new(32, 4))
+    }
+
+    fn seq_tokens(n: usize, salt: u32) -> Vec<u32> {
+        (0..n).map(|i| i as u32 * 3 + salt).collect()
+    }
+
+    #[test]
+    fn namespace_ignores_irrelevant_config_for_exact_attention() {
+        // Dense KV is identical under any budget/chunking — one namespace.
+        assert_eq!(policy_ns("dense", 0, 128), policy_ns("dense", 512, 256));
+        assert_eq!(policy_ns("dense", 0, 128), policy_ns("full", 7, 64));
+        // Sparse KV depends on budget AND chunk boundaries.
+        assert_ne!(policy_ns("quoka", 64, 16), policy_ns("quoka", 64, 32));
+        assert_ne!(policy_ns("quoka", 64, 16), policy_ns("quoka", 32, 16));
+        assert_ne!(policy_ns("quoka", 64, 16), policy_ns("dense", 64, 16));
+    }
+
+    #[test]
+    fn longest_match_walks_whole_pages() {
+        let (mut r, mut pool, mut alloc) = setup();
+        let ns = policy_ns("quoka", 64, 16);
+        let toks = seq_tokens(12, 0); // 3 pages
+        let mut blocks = alloc.alloc(3).unwrap();
+        pool.adopt_new(&blocks);
+        r.insert(ns, &toks, &blocks, &mut pool);
+        assert_eq!(r.cached_blocks(), 3);
+        for b in &blocks {
+            assert_eq!(pool.refcount(*b), 2); // seq + tree
+        }
+        // Full prompt never matches whole: 12 tokens → at most 2 pages.
+        assert_eq!(r.lookup(ns, &toks), blocks[..2].to_vec());
+        // Longer prompt sharing the prefix matches all 3 pages.
+        let mut longer = toks.clone();
+        longer.extend(seq_tokens(5, 99));
+        assert_eq!(r.lookup(ns, &longer), blocks.clone());
+        // Diverging second page stops the walk after one page.
+        let mut div = toks.clone();
+        div[5] = 1000;
+        assert_eq!(r.lookup(ns, &div), blocks[..1].to_vec());
+        // Other namespaces see nothing.
+        assert!(r.lookup(policy_ns("dense", 0, 16), &longer).is_empty());
+        r.validate(&pool).unwrap();
+        pool.release_seq(&mut blocks, &mut alloc);
+        r.validate(&pool).unwrap();
+    }
+
+    #[test]
+    fn duplicate_insert_keeps_existing_pages() {
+        let (mut r, mut pool, mut alloc) = setup();
+        let ns = policy_ns("quoka", 64, 16);
+        let toks = seq_tokens(8, 1);
+        let mut b1 = alloc.alloc(2).unwrap();
+        pool.adopt_new(&b1);
+        r.insert(ns, &toks, &b1, &mut pool);
+        let mut b2 = alloc.alloc(2).unwrap();
+        pool.adopt_new(&b2);
+        r.insert(ns, &toks, &b2, &mut pool);
+        // The duplicate's pages gained no tree reference.
+        assert_eq!(pool.refcount(b1[0]), 2);
+        assert_eq!(pool.refcount(b2[0]), 1);
+        assert_eq!(r.cached_blocks(), 2);
+        pool.release_seq(&mut b1, &mut alloc);
+        pool.release_seq(&mut b2, &mut alloc);
+        r.validate(&pool).unwrap();
+    }
+
+    #[test]
+    fn eviction_is_lru_leaf_only_and_respects_refs() {
+        let (mut r, mut pool, mut alloc) = setup();
+        let ns = policy_ns("quoka", 64, 16);
+        // Two chains sharing the first page: [A B] and [A C].
+        let ta = seq_tokens(8, 0);
+        let mut tb = ta.clone();
+        tb[6] = 500;
+        let mut ba = alloc.alloc(2).unwrap();
+        pool.adopt_new(&ba);
+        r.insert(ns, &ta, &ba, &mut pool);
+        let mut bb = vec![ba[0], alloc.alloc(1).unwrap()[0]];
+        pool.retain(bb[0]);
+        pool.adopt_new(&bb);
+        r.insert(ns, &tb, &bb, &mut pool);
+        // Touch chain B so chain A's leaf is LRU.
+        let _ = r.lookup(ns, &[tb.clone(), vec![0; 4]].concat());
+        // Drop the sequences' own refs; tree refs remain.
+        pool.release_seq(&mut ba, &mut alloc);
+        pool.release_seq(&mut bb, &mut alloc);
+        r.validate(&pool).unwrap();
+        let free0 = alloc.free_blocks();
+        // Evict one page: must be chain A's *leaf* (LRU), not the shared root page.
+        let freed = r.evict_until(free0 + 1, &mut pool, &mut alloc);
+        assert_eq!(freed, 1);
+        assert_eq!(r.cached_blocks(), 2);
+        assert!(r.lookup(ns, &[tb.clone(), vec![0; 4]].concat()).len() == 2, "chain B intact");
+        r.validate(&pool).unwrap();
+        // A page referenced by a "live sequence" is never freed.
+        let held = r.lookup(ns, &[tb.clone(), vec![0; 4]].concat());
+        for &b in &held {
+            pool.retain(b);
+        }
+        let freed = r.evict_until(alloc.total_blocks(), &mut pool, &mut alloc);
+        assert_eq!(freed, 0, "all remaining pages are externally referenced");
+        r.validate(&pool).unwrap();
+    }
+}

@@ -27,6 +27,7 @@
 pub mod util;
 pub mod tensor;
 pub mod select;
+pub mod kvpool;
 pub mod model;
 pub mod workload;
 pub mod eval;

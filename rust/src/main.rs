@@ -8,8 +8,8 @@
 //! quoka inspect --artifacts artifacts
 //! ```
 
-use quoka::bench::{latency, tables};
-use quoka::coordinator::{Engine, EngineCfg, SchedCfg};
+use quoka::bench::{latency, prefix, tables};
+use quoka::coordinator::{Engine, EngineCfg, KvLayout, SchedCfg};
 use quoka::server::{serve, Client, WireRequest};
 use quoka::util::cli::{usage, Args, OptSpec};
 
@@ -67,6 +67,8 @@ fn serve_specs() -> Vec<OptSpec> {
         OptSpec { name: "pool-blocks", help: "KV pool blocks (x block-tokens capacity)", default: Some("4096"), boolean: false },
         OptSpec { name: "block-tokens", help: "tokens per KV block", default: Some("128"), boolean: false },
         OptSpec { name: "seed", help: "weight seed", default: Some("0"), boolean: false },
+        OptSpec { name: "paged", help: "shared paged KV pool (host backend; dense/quoka*)", default: None, boolean: true },
+        OptSpec { name: "prefix-cache", help: "radix prefix cache over the paged pool (implies --paged)", default: None, boolean: true },
         OptSpec { name: "help", help: "show help", default: None, boolean: true },
     ]
 }
@@ -78,6 +80,12 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         println!("{}", usage("serve", "Start the serving engine.", &specs));
         return Ok(());
     }
+    let prefix_cache = a.bool("prefix-cache");
+    let kv = if a.bool("paged") || prefix_cache {
+        KvLayout::Paged { prefix_cache }
+    } else {
+        KvLayout::Private
+    };
     let cfg = EngineCfg {
         sched: SchedCfg {
             b_cp: a.usize("b-cp")?,
@@ -87,6 +95,7 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         pool_blocks: a.usize("pool-blocks")?,
         block_tokens: a.usize("block-tokens")?,
         seed: a.usize("seed")? as u64,
+        kv,
     };
     let backend = a.str("backend")?;
     let preset = a.str("preset")?;
@@ -157,13 +166,14 @@ fn cmd_bench(argv: Vec<String>) -> anyhow::Result<()> {
         }
         "fig6_decode" => drop(latency::fig6_decode()),
         "micro_hotpath" => drop(latency::micro_hotpath()),
+        "prefix_serving" => drop(prefix::prefix_serving()),
         "all" => {
             for id in [
                 "fig2_geometry", "fig3_deviation", "fig4_niah", "table1_ruler",
                 "table2_ruler_budget", "table3_longbench", "table4_complexity",
                 "table8_math500", "table9_scoring", "table10_aggregation",
                 "table11_bcp", "table12_nq", "fig5_latency", "fig6_decode",
-                "micro_hotpath",
+                "micro_hotpath", "prefix_serving",
             ] {
                 cmd_bench(vec![id.to_string()])?;
             }
@@ -173,7 +183,7 @@ fn cmd_bench(argv: Vec<String>) -> anyhow::Result<()> {
                 "experiments (DESIGN.md §6):\n  fig2_geometry fig3_deviation fig4_niah\n  \
                  table1_ruler table2_ruler_budget table3_longbench table4_complexity\n  \
                  table8_math500 table9_scoring table10_aggregation table11_bcp table12_nq\n  \
-                 fig5_latency fig6_decode micro_hotpath all\n\n\
+                 fig5_latency fig6_decode micro_hotpath prefix_serving all\n\n\
                  QUOKA_BENCH_FULL=1 for paper-scale grids."
             );
         }

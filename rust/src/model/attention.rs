@@ -42,11 +42,20 @@
 //! KeyDiff, …), deleting their per-chunk × per-layer O(T·d)
 //! renormalization scans.
 //!
+//! The same tile pipeline also runs over the **shared paged KV pool**
+//! ([`paged_chunk_attention`]): past tiles are resolved through a
+//! per-sequence block table (`kvpool::PagedKv`), full selections stream
+//! each page's contiguous head-row run in place, and sparse selections
+//! gather rows through the page indirection. Only tile *formation*
+//! differs — scoring, online softmax and the causal-self part are shared
+//! code paths.
+//!
 //! The seed scalar kernel is kept verbatim as
 //! [`reference_chunk_attention`] — the parity oracle for
 //! `rust/tests/attn_parity.rs` and the baseline the `micro_hotpath` bench
 //! measures speedup against.
 
+use crate::kvpool::PagedKv;
 use crate::select::{fit, HeadSel, Selection};
 use crate::tensor::ops::{av_accum, dot, l2_norm, qk_block, qk_dots, softmax};
 use crate::util::threadpool::SyncPtr;
@@ -239,24 +248,46 @@ pub fn chunk_attention(
     let n_kv = cache.n_kv;
     let g = n_q_heads / n_kv;
     let t = cache.t;
+    let out_ptr = SyncPtr::new(out.as_mut_ptr());
+    run_tiled_tasks(n_q_heads, n_kv, s, t, d, scratch, |kv, gq_lo, gq_hi, q_lo, q_hi, ts| {
+        group_block_attention(
+            q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, k_self, v_self, cache, sel, ts, out_ptr,
+        );
+    });
+}
 
+/// Shared task decomposition of the tiled kernels (contiguous and paged):
+/// split `(kv_head, query-block[, group-slice])` tasks across workers and
+/// run `task(kv, gq_lo, gq_hi, q_lo, q_hi, scratch_slot)` for each.
+///
+/// Tasks are fully independent; fan across the machine when the work is
+/// large enough to amortize thread wake-ups. Tasks are strided across
+/// workers (near-uniform cost per task), each worker serially reusing one
+/// scratch slot — so retained scratch is O(workers), not O(tasks). When
+/// `(kv_head, q-block)` tasks alone can't occupy the machine — the decode
+/// path has one query block, capping tasks at `n_kv` — each GQA group is
+/// split across tasks as well (this repeats the tile gather per sub-group,
+/// so it's only enabled when tasks are scarce).
+fn run_tiled_tasks<F>(
+    n_q_heads: usize,
+    n_kv: usize,
+    s: usize,
+    t: usize,
+    d: usize,
+    scratch: &mut AttnScratch,
+    task: F,
+) where
+    F: Fn(usize, usize, usize, usize, usize, &mut TaskScratch) + Sync,
+{
+    let g = n_q_heads / n_kv;
     let n_qblocks = s.div_ceil(QBLOCK);
     let base_tasks = n_kv * n_qblocks;
-
-    // Tasks are fully independent; fan across the machine when the work is
-    // large enough to amortize thread wake-ups. Tasks are strided across
-    // workers (near-uniform cost per task), each worker serially reusing
-    // one scratch slot — so retained scratch is O(workers), not O(tasks).
     let work = n_q_heads * s * (t + s) * d;
     let workers_avail = if work > 1 << 21 {
         crate::util::threadpool::default_workers()
     } else {
         1
     };
-    // When (kv_head, q-block) tasks alone can't occupy the machine — the
-    // decode path has n_qblocks == 1, capping tasks at n_kv — split each
-    // GQA group across tasks as well. This repeats the tile gather per
-    // sub-group, so it's only enabled when tasks are scarce.
     let g_split = if workers_avail > base_tasks {
         workers_avail.div_ceil(base_tasks).min(g).max(1)
     } else {
@@ -269,16 +300,15 @@ pub fn chunk_attention(
         scratch.workers.resize_with(workers, TaskScratch::default);
     }
 
-    let out_ptr = SyncPtr::new(out.as_mut_ptr());
     let worker_ptr = SyncPtr::new(scratch.workers.as_mut_ptr());
     crate::util::threadpool::parallel_for(workers, workers, |w| {
         // SAFETY: worker `w` owns exactly one scratch slot, and its strided
         // task set writes exclusively to its own (head, query-row) slabs.
         let ts = unsafe { &mut *worker_ptr.get().add(w) };
-        let mut task = w;
-        while task < n_tasks {
-            let kv = task / (n_qblocks * g_split);
-            let rem = task % (n_qblocks * g_split);
+        let mut ti = w;
+        while ti < n_tasks {
+            let kv = ti / (n_qblocks * g_split);
+            let rem = ti % (n_qblocks * g_split);
             let qb = rem / g_split;
             let gs = rem % g_split;
             let q_lo = qb * QBLOCK;
@@ -286,12 +316,9 @@ pub fn chunk_attention(
             let gq_lo = gs * heads_per_task;
             let gq_hi = ((gs + 1) * heads_per_task).min(g);
             if gq_lo < gq_hi {
-                group_block_attention(
-                    q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, k_self, v_self, cache, sel, ts,
-                    out_ptr,
-                );
+                task(kv, gq_lo, gq_hi, q_lo, q_hi, ts);
             }
-            task += workers;
+            ti += workers;
         }
     });
 }
@@ -306,10 +333,81 @@ unsafe fn raw_row<'a>(p: SyncPtr<f32>, offset: usize, d: usize) -> &'a mut [f32]
     std::slice::from_raw_parts_mut(p.get().add(offset), d)
 }
 
-/// Tiled attention for one task: query heads `gq_lo..gq_hi` of KV head
-/// `kv`'s GQA group over query rows `q_lo..q_hi`.
+/// Prepare a task's online-softmax state and zero its output slabs
+/// (accumulated unnormalized, divided by the denominator at the end).
 #[allow(clippy::too_many_arguments)]
-fn group_block_attention(
+fn task_init(
+    ts: &mut TaskScratch,
+    s: usize,
+    d: usize,
+    g: usize,
+    kv: usize,
+    gq_lo: usize,
+    gq_hi: usize,
+    q_lo: usize,
+    q_hi: usize,
+    out: SyncPtr<f32>,
+) {
+    let rows = (gq_hi - gq_lo) * (q_hi - q_lo);
+    let TaskScratch { scores, m, l, .. } = ts;
+    fit(m, rows).fill(f32::NEG_INFINITY);
+    fit(l, rows).fill(0.0);
+    fit(scores, QBLOCK * KTILE);
+    for gq in gq_lo..gq_hi {
+        let h = kv * g + gq;
+        for qi in q_lo..q_hi {
+            unsafe { raw_row(out, (h * s + qi) * d, d) }.fill(0.0);
+        }
+    }
+}
+
+/// Score one contiguous K/V tile of the selected past against every query
+/// of the task and fold it into the running online-softmax state.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn score_past_tile(
+    q: &[f32],
+    s: usize,
+    d: usize,
+    g: usize,
+    kv: usize,
+    gq_lo: usize,
+    gq_hi: usize,
+    q_lo: usize,
+    q_hi: usize,
+    kt: &[f32],
+    vt: &[f32],
+    tn: usize,
+    scale: f32,
+    scores: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+    out: SyncPtr<f32>,
+) {
+    let mb = q_hi - q_lo;
+    for gq in gq_lo..gq_hi {
+        let h = kv * g + gq;
+        let qs = &q[(h * s + q_lo) * d..(h * s + q_hi) * d];
+        let blk = &mut scores[..mb * tn];
+        qk_block(qs, mb, kt, tn, d, blk);
+        for r in 0..mb {
+            let row = &mut blk[r * tn..(r + 1) * tn];
+            for v in row.iter_mut() {
+                *v *= scale;
+            }
+            let orow = unsafe { raw_row(out, (h * s + q_lo + r) * d, d) };
+            let ri = (gq - gq_lo) * mb + r;
+            online_softmax_update(row, vt, tn, d, &mut m[ri], &mut l[ri], orow);
+        }
+    }
+}
+
+/// The causal-self tiles (query `qi` sees self positions `0..=qi`; masked
+/// positions are never scored, so no ±∞ sentinels enter the online
+/// softmax) followed by the finalize division — shared by the contiguous
+/// and paged kernels, whose only difference is how past tiles are formed.
+#[allow(clippy::too_many_arguments)]
+fn self_tiles_and_finalize(
     q: &[f32],
     s: usize,
     d: usize,
@@ -321,77 +419,13 @@ fn group_block_attention(
     q_hi: usize,
     k_self: &[f32],
     v_self: &[f32],
-    cache: &KvBuffers,
-    sel: &Selection,
-    ts: &mut TaskScratch,
+    scale: f32,
+    scores: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
     out: SyncPtr<f32>,
 ) {
-    let t = cache.t;
-    let scale = 1.0 / (d as f32).sqrt();
     let mb = q_hi - q_lo;
-    let rows = (gq_hi - gq_lo) * mb;
-
-    let TaskScratch { k_tile, v_tile, scores, m, l } = ts;
-    fit(m, rows).fill(f32::NEG_INFINITY);
-    fit(l, rows).fill(0.0);
-    fit(scores, QBLOCK * KTILE);
-
-    // Zero this task's output slabs (accumulated unnormalized, divided by
-    // the online-softmax denominator at the end).
-    for gq in gq_lo..gq_hi {
-        let h = kv * g + gq;
-        for qi in q_lo..q_hi {
-            unsafe { raw_row(out, (h * s + qi) * d, d) }.fill(0.0);
-        }
-    }
-
-    // ---- selected past ----
-    let hsel = sel.head(kv, t);
-    let n_past = hsel.len();
-    let head_base = kv * cache.capacity * d;
-    let khead = &cache.k[head_base..head_base + t * d];
-    let vhead = &cache.v[head_base..head_base + t * d];
-
-    let mut tile_lo = 0;
-    while tile_lo < n_past {
-        let tile_hi = (tile_lo + KTILE).min(n_past);
-        let tn = tile_hi - tile_lo;
-        // Gather the tile's K/V rows into contiguous scratch; a full
-        // selection reads the (already contiguous) head slab in place.
-        let (kt, vt): (&[f32], &[f32]) = match hsel {
-            HeadSel::All(_) => (&khead[tile_lo * d..tile_hi * d], &vhead[tile_lo * d..tile_hi * d]),
-            HeadSel::Idx(idx) => {
-                let kt = fit(k_tile, KTILE * d);
-                let vt = fit(v_tile, KTILE * d);
-                for (o, &pi) in idx[tile_lo..tile_hi].iter().enumerate() {
-                    let src = pi as usize * d;
-                    kt[o * d..(o + 1) * d].copy_from_slice(&khead[src..src + d]);
-                    vt[o * d..(o + 1) * d].copy_from_slice(&vhead[src..src + d]);
-                }
-                (&kt[..tn * d], &vt[..tn * d])
-            }
-        };
-        for gq in gq_lo..gq_hi {
-            let h = kv * g + gq;
-            let qs = &q[(h * s + q_lo) * d..(h * s + q_hi) * d];
-            let blk = &mut scores[..mb * tn];
-            qk_block(qs, mb, kt, tn, d, blk);
-            for r in 0..mb {
-                let row = &mut blk[r * tn..(r + 1) * tn];
-                for v in row.iter_mut() {
-                    *v *= scale;
-                }
-                let orow = unsafe { raw_row(out, (h * s + q_lo + r) * d, d) };
-                let ri = (gq - gq_lo) * mb + r;
-                online_softmax_update(row, vt, tn, d, &mut m[ri], &mut l[ri], orow);
-            }
-        }
-        tile_lo = tile_hi;
-    }
-
-    // ---- causal self (chunk's own keys) ----
-    // Query `qi` sees self positions `0..=qi`; masked positions are never
-    // scored, so no ±∞ sentinels enter the online softmax.
     let ks = &k_self[kv * s * d..(kv + 1) * s * d];
     let vs = &v_self[kv * s * d..(kv + 1) * s * d];
     let mut tile_lo = 0;
@@ -437,6 +471,158 @@ fn group_block_attention(
     }
 }
 
+/// Tiled attention for one task: query heads `gq_lo..gq_hi` of KV head
+/// `kv`'s GQA group over query rows `q_lo..q_hi`.
+#[allow(clippy::too_many_arguments)]
+fn group_block_attention(
+    q: &[f32],
+    s: usize,
+    d: usize,
+    g: usize,
+    kv: usize,
+    gq_lo: usize,
+    gq_hi: usize,
+    q_lo: usize,
+    q_hi: usize,
+    k_self: &[f32],
+    v_self: &[f32],
+    cache: &KvBuffers,
+    sel: &Selection,
+    ts: &mut TaskScratch,
+    out: SyncPtr<f32>,
+) {
+    let t = cache.t;
+    let scale = 1.0 / (d as f32).sqrt();
+    task_init(ts, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, out);
+    let TaskScratch { k_tile, v_tile, scores, m, l } = ts;
+
+    // ---- selected past ----
+    let hsel = sel.head(kv, t);
+    let n_past = hsel.len();
+    let head_base = kv * cache.capacity * d;
+    let khead = &cache.k[head_base..head_base + t * d];
+    let vhead = &cache.v[head_base..head_base + t * d];
+
+    let mut tile_lo = 0;
+    while tile_lo < n_past {
+        let tile_hi = (tile_lo + KTILE).min(n_past);
+        let tn = tile_hi - tile_lo;
+        // Gather the tile's K/V rows into contiguous scratch; a full
+        // selection reads the (already contiguous) head slab in place.
+        let (kt, vt): (&[f32], &[f32]) = match hsel {
+            HeadSel::All(_) => (&khead[tile_lo * d..tile_hi * d], &vhead[tile_lo * d..tile_hi * d]),
+            HeadSel::Idx(idx) => {
+                let kt = fit(k_tile, KTILE * d);
+                let vt = fit(v_tile, KTILE * d);
+                for (o, &pi) in idx[tile_lo..tile_hi].iter().enumerate() {
+                    let src = pi as usize * d;
+                    kt[o * d..(o + 1) * d].copy_from_slice(&khead[src..src + d]);
+                    vt[o * d..(o + 1) * d].copy_from_slice(&vhead[src..src + d]);
+                }
+                (&kt[..tn * d], &vt[..tn * d])
+            }
+        };
+        score_past_tile(
+            q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, kt, vt, tn, scale, scores, m, l, out,
+        );
+        tile_lo = tile_hi;
+    }
+
+    self_tiles_and_finalize(
+        q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, k_self, v_self, scale, scores, m, l, out,
+    );
+}
+
+/// [`group_block_attention`] over a **paged** cache: tiles are formed
+/// through the block table. Full selections stream each page's
+/// (contiguous) head-row run in place — no gather; sparse selections
+/// gather rows through the page indirection exactly like the contiguous
+/// kernel gathers through the head slab.
+#[allow(clippy::too_many_arguments)]
+fn group_block_attention_paged(
+    q: &[f32],
+    s: usize,
+    d: usize,
+    g: usize,
+    kv: usize,
+    gq_lo: usize,
+    gq_hi: usize,
+    q_lo: usize,
+    q_hi: usize,
+    k_self: &[f32],
+    v_self: &[f32],
+    paged: &PagedKv,
+    sel: &Selection,
+    ts: &mut TaskScratch,
+    out: SyncPtr<f32>,
+) {
+    let t = paged.t;
+    let scale = 1.0 / (d as f32).sqrt();
+    task_init(ts, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, out);
+    let TaskScratch { k_tile, v_tile, scores, m, l } = ts;
+
+    // ---- selected past ----
+    let hsel = sel.head(kv, t);
+    match hsel {
+        HeadSel::All(_) => {
+            let bt = paged.block_tokens;
+            let mut pos = 0;
+            while pos < t {
+                let slot = pos % bt;
+                let page = paged.blocks[pos / bt] as usize;
+                let tn = (bt - slot).min(t - pos).min(KTILE);
+                let base = ((page * paged.n_kv + kv) * bt + slot) * d;
+                let kt = &paged.k[base..base + tn * d];
+                let vt = &paged.v[base..base + tn * d];
+                score_past_tile(
+                    q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, kt, vt, tn, scale, scores, m, l,
+                    out,
+                );
+                pos += tn;
+            }
+        }
+        HeadSel::Idx(idx) => {
+            let n_past = idx.len();
+            let mut tile_lo = 0;
+            while tile_lo < n_past {
+                let tile_hi = (tile_lo + KTILE).min(n_past);
+                let tn = tile_hi - tile_lo;
+                let kt = fit(k_tile, KTILE * d);
+                let vt = fit(v_tile, KTILE * d);
+                for (o, &pi) in idx[tile_lo..tile_hi].iter().enumerate() {
+                    let src = paged.row_base(kv, pi as usize);
+                    kt[o * d..(o + 1) * d].copy_from_slice(&paged.k[src..src + d]);
+                    vt[o * d..(o + 1) * d].copy_from_slice(&paged.v[src..src + d]);
+                }
+                score_past_tile(
+                    q,
+                    s,
+                    d,
+                    g,
+                    kv,
+                    gq_lo,
+                    gq_hi,
+                    q_lo,
+                    q_hi,
+                    &kt[..tn * d],
+                    &vt[..tn * d],
+                    tn,
+                    scale,
+                    scores,
+                    m,
+                    l,
+                    out,
+                );
+                tile_lo = tile_hi;
+            }
+        }
+    }
+
+    self_tiles_and_finalize(
+        q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, k_self, v_self, scale, scores, m, l, out,
+    );
+}
+
 /// Flash-style online softmax: fold one tile of (already scaled) logits
 /// and its V rows into the running `(max, denominator, unnormalized
 /// output)` state for a single query row.
@@ -475,6 +661,40 @@ fn online_softmax_update(
     *l += sum;
     av_accum(&logits[..n], v_tile, n, d, acc);
     *m = new_m;
+}
+
+/// Chunked-prefill attention over the **shared paged KV pool**: identical
+/// task decomposition and online-softmax math to [`chunk_attention`], with
+/// every past-K/V access resolved through the sequence's block table
+/// (`paged.blocks`). Numerics match the contiguous kernel to float
+/// associativity (tile boundaries follow pages instead of [`KTILE`]);
+/// parity against [`reference_chunk_attention`] is pinned in
+/// `rust/tests/attn_parity.rs`.
+#[allow(clippy::too_many_arguments)]
+pub fn paged_chunk_attention(
+    q: &[f32],
+    n_q_heads: usize,
+    s: usize,
+    d: usize,
+    k_self: &[f32],
+    v_self: &[f32],
+    paged: &PagedKv,
+    sel: &Selection,
+    scratch: &mut AttnScratch,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), n_q_heads * s * d);
+    debug_assert_eq!(out.len(), n_q_heads * s * d);
+    debug_assert_eq!(paged.d, d);
+    let n_kv = paged.n_kv;
+    let g = n_q_heads / n_kv;
+    let t = paged.t;
+    let out_ptr = SyncPtr::new(out.as_mut_ptr());
+    run_tiled_tasks(n_q_heads, n_kv, s, t, d, scratch, |kv, gq_lo, gq_hi, q_lo, q_hi, ts| {
+        group_block_attention_paged(
+            q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, k_self, v_self, paged, sel, ts, out_ptr,
+        );
+    });
 }
 
 /// Single-query decode attention over a selected cache (which must already

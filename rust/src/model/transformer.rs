@@ -6,9 +6,10 @@
 //! chunked prefill per Eq. (2) with a pluggable [`SelectionPolicy`] applied
 //! to the KV cache of every layer, plus single-token decode.
 
-use super::attention::{chunk_attention, AttnScratch, KvBuffers};
+use super::attention::{chunk_attention, paged_chunk_attention, AttnScratch, KvBuffers};
 use super::config::ModelConfig;
-use super::weights::Weights;
+use super::weights::{LayerWeights, Weights};
+use crate::kvpool::KvPool;
 use crate::select::{fit, QChunk, SelectCtx, Selection, SelectionPolicy};
 use crate::tensor::matmul::matmul;
 use crate::tensor::ops::{rmsnorm, silu, RopeTable};
@@ -72,6 +73,156 @@ impl HostModel {
         &self.w.cfg
     }
 
+    /// Embedding gather for one chunk.
+    fn embed(&self, tokens: &[u32], s: usize) -> Vec<f32> {
+        let cfg = &self.w.cfg;
+        let dm = cfg.d_model;
+        let mut hidden = vec![0.0f32; s * dm];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize % cfg.vocab;
+            hidden[i * dm..(i + 1) * dm].copy_from_slice(self.w.embedding.row(tok));
+        }
+        hidden
+    }
+
+    /// Pre-attention RMSNorm + QKV projection + `[s, H*dh] → [H, s, dh]`
+    /// head split with RoPE at absolute positions `pos..pos+s`. Leaves the
+    /// chunk's `[H, s, dh]` Q/K/V in `sc.{q,k,v}_heads`.
+    fn layer_attn_inputs(
+        &self,
+        lw: &LayerWeights,
+        hidden: &[f32],
+        s: usize,
+        pos: usize,
+        sc: &mut FwdScratch,
+    ) {
+        let cfg = &self.w.cfg;
+        let (dm, dh) = (cfg.d_model, cfg.d_head);
+        let (nq, nkv) = (cfg.n_q_heads, cfg.n_kv_heads);
+        let (dq, dkv) = (nq * dh, nkv * dh);
+        let normed = fit(&mut sc.normed, s * dm);
+        for i in 0..s {
+            rmsnorm(
+                &hidden[i * dm..(i + 1) * dm],
+                lw.attn_norm.data(),
+                cfg.norm_eps,
+                &mut normed[i * dm..(i + 1) * dm],
+            );
+        }
+        let q_proj = fit(&mut sc.q_proj, s * dq);
+        matmul(normed, lw.wq.data(), s, dm, dq, q_proj);
+        let k_proj = fit(&mut sc.k_proj, s * dkv);
+        matmul(normed, lw.wk.data(), s, dm, dkv, k_proj);
+        let v_proj = fit(&mut sc.v_proj, s * dkv);
+        matmul(normed, lw.wv.data(), s, dm, dkv, v_proj);
+
+        let q_heads = fit(&mut sc.q_heads, nq * s * dh);
+        for h in 0..nq {
+            for i in 0..s {
+                let src = i * dq + h * dh;
+                let dst = (h * s + i) * dh;
+                q_heads[dst..dst + dh].copy_from_slice(&q_proj[src..src + dh]);
+                if cfg.use_rope {
+                    self.rope.apply(&mut q_heads[dst..dst + dh], pos + i);
+                }
+            }
+        }
+        let k_heads = fit(&mut sc.k_heads, nkv * s * dh);
+        let v_heads = fit(&mut sc.v_heads, nkv * s * dh);
+        for h in 0..nkv {
+            for i in 0..s {
+                let src = i * dkv + h * dh;
+                let dst = (h * s + i) * dh;
+                k_heads[dst..dst + dh].copy_from_slice(&k_proj[src..src + dh]);
+                if cfg.use_rope {
+                    self.rope.apply(&mut k_heads[dst..dst + dh], pos + i);
+                }
+                v_heads[dst..dst + dh].copy_from_slice(&v_proj[src..src + dh]);
+            }
+        }
+    }
+
+    /// `[H, s, dh] → [s, H*dh]` merge of `sc.attn_heads`, output
+    /// projection, residual add into `hidden`.
+    fn layer_attn_output(&self, lw: &LayerWeights, s: usize, hidden: &mut [f32], sc: &mut FwdScratch) {
+        let cfg = &self.w.cfg;
+        let (dm, dh) = (cfg.d_model, cfg.d_head);
+        let nq = cfg.n_q_heads;
+        let dq = nq * dh;
+        let attn_merged = fit(&mut sc.attn_merged, s * dq);
+        for h in 0..nq {
+            for i in 0..s {
+                let src = (h * s + i) * dh;
+                let dst = i * dq + h * dh;
+                attn_merged[dst..dst + dh].copy_from_slice(&sc.attn_heads[src..src + dh]);
+            }
+        }
+        let attn_out = fit(&mut sc.attn_out, s * dm);
+        matmul(attn_merged, lw.wo.data(), s, dq, dm, attn_out);
+        for (hv, ov) in hidden.iter_mut().zip(attn_out.iter()) {
+            *hv += ov;
+        }
+    }
+
+    /// FFN block (SwiGLU; optional top-1 MoE) with residual add.
+    fn layer_ffn(&self, lw: &LayerWeights, s: usize, hidden: &mut [f32], sc: &mut FwdScratch) {
+        let cfg = &self.w.cfg;
+        let dm = cfg.d_model;
+        let normed = fit(&mut sc.normed, s * dm);
+        for i in 0..s {
+            rmsnorm(
+                &hidden[i * dm..(i + 1) * dm],
+                lw.ffn_norm.data(),
+                cfg.norm_eps,
+                &mut normed[i * dm..(i + 1) * dm],
+            );
+        }
+        let d_ff = cfg.d_ff;
+        let ffn_out = fit(&mut sc.ffn_out, s * dm);
+        if cfg.n_experts == 0 {
+            let gate = fit(&mut sc.ffn_gate, s * d_ff);
+            matmul(normed, lw.w_gate.data(), s, dm, d_ff, gate);
+            let up = fit(&mut sc.ffn_up, s * d_ff);
+            matmul(normed, lw.w_up.data(), s, dm, d_ff, up);
+            for (gv, uv) in gate.iter_mut().zip(up.iter()) {
+                *gv = silu(*gv) * uv;
+            }
+            matmul(gate, lw.w_down.data(), s, d_ff, dm, ffn_out);
+        } else {
+            // Top-1 routing per token.
+            for i in 0..s {
+                let x = &normed[i * dm..(i + 1) * dm];
+                let mut best = (0usize, f32::NEG_INFINITY);
+                for e in 0..cfg.n_experts {
+                    let mut score = 0.0;
+                    for j in 0..dm {
+                        score += x[j] * lw.router.data()[j * cfg.n_experts + e];
+                    }
+                    if score > best.1 {
+                        best = (e, score);
+                    }
+                }
+                let (wg, wu, wd) = if best.0 == 0 {
+                    (lw.w_gate.data(), lw.w_up.data(), lw.w_down.data())
+                } else {
+                    let ex = &lw.experts[best.0 - 1];
+                    (ex.0.data(), ex.1.data(), ex.2.data())
+                };
+                let gate = fit(&mut sc.ffn_gate, d_ff);
+                matmul(x, wg, 1, dm, d_ff, gate);
+                let up = fit(&mut sc.ffn_up, d_ff);
+                matmul(x, wu, 1, dm, d_ff, up);
+                for (gv, uv) in gate.iter_mut().zip(up.iter()) {
+                    *gv = silu(*gv) * uv;
+                }
+                matmul(gate, wd, 1, d_ff, dm, &mut ffn_out[i * dm..(i + 1) * dm]);
+            }
+        }
+        for (hv, fv) in hidden.iter_mut().zip(ffn_out.iter()) {
+            *hv += fv;
+        }
+    }
+
     /// Process one prefill chunk (or one decode token when `tokens.len()==1`
     /// after prefill). Applies `policy` to every layer's past cache,
     /// appends the chunk's KV, and returns the final hidden states
@@ -85,163 +236,124 @@ impl HostModel {
         ctx: &mut SelectCtx,
     ) -> Vec<f32> {
         let cfg = &self.w.cfg;
-        let (s, dm, dh) = (tokens.len(), cfg.d_model, cfg.d_head);
+        let (s, dh) = (tokens.len(), cfg.d_head);
         let (nq, nkv) = (cfg.n_q_heads, cfg.n_kv_heads);
-        let (dq, dkv) = (nq * dh, nkv * dh);
         assert!(s > 0);
 
-        // Embedding gather.
-        let mut hidden = vec![0.0f32; s * dm];
-        for (i, &tok) in tokens.iter().enumerate() {
-            let tok = tok as usize % cfg.vocab;
-            hidden[i * dm..(i + 1) * dm].copy_from_slice(self.w.embedding.row(tok));
-        }
-
+        let mut hidden = self.embed(tokens, s);
         let mut sc_guard = self.scratch.borrow_mut();
         let sc = &mut *sc_guard; // reborrow: allow disjoint field borrows
         ctx.n_layers = cfg.n_layers;
         for (l, lw) in self.w.layers.iter().enumerate() {
             ctx.layer = l;
-            // ---- attention block ----
-            let normed = fit(&mut sc.normed, s * dm);
-            for i in 0..s {
-                rmsnorm(
-                    &hidden[i * dm..(i + 1) * dm],
-                    lw.attn_norm.data(),
-                    cfg.norm_eps,
-                    &mut normed[i * dm..(i + 1) * dm],
-                );
-            }
-            let q_proj = fit(&mut sc.q_proj, s * dq);
-            matmul(normed, lw.wq.data(), s, dm, dq, q_proj);
-            let k_proj = fit(&mut sc.k_proj, s * dkv);
-            matmul(normed, lw.wk.data(), s, dm, dkv, k_proj);
-            let v_proj = fit(&mut sc.v_proj, s * dkv);
-            matmul(normed, lw.wv.data(), s, dm, dkv, v_proj);
-
-            // [s, H*dh] → [H, s, dh] with RoPE on Q/K.
-            let q_heads = fit(&mut sc.q_heads, nq * s * dh);
-            for h in 0..nq {
-                for i in 0..s {
-                    let src = i * dq + h * dh;
-                    let dst = (h * s + i) * dh;
-                    q_heads[dst..dst + dh].copy_from_slice(&q_proj[src..src + dh]);
-                    if cfg.use_rope {
-                        self.rope.apply(&mut q_heads[dst..dst + dh], state.pos + i);
-                    }
-                }
-            }
-            let k_heads = fit(&mut sc.k_heads, nkv * s * dh);
-            let v_heads = fit(&mut sc.v_heads, nkv * s * dh);
-            for h in 0..nkv {
-                for i in 0..s {
-                    let src = i * dkv + h * dh;
-                    let dst = (h * s + i) * dh;
-                    k_heads[dst..dst + dh].copy_from_slice(&k_proj[src..src + dh]);
-                    if cfg.use_rope {
-                        self.rope.apply(&mut k_heads[dst..dst + dh], state.pos + i);
-                    }
-                    v_heads[dst..dst + dh].copy_from_slice(&v_proj[src..src + dh]);
-                }
-            }
+            self.layer_attn_inputs(lw, &hidden, s, state.pos, sc);
 
             // ---- selection over the past cache + attention ----
             let cache = &state.caches[l];
             let sel = if cache.t == 0 || policy.is_dense() {
                 Selection::All
             } else {
-                let qv = QChunk::new(&q_heads[..nq * s * dh], nq, s, dh);
+                let qv = QChunk::new(&sc.q_heads[..nq * s * dh], nq, s, dh);
                 policy.select(&qv, &cache.k_view(), budget, ctx)
             };
             ctx.cost.bump_calls();
-            let attn_heads = fit(&mut sc.attn_heads, nq * s * dh);
             chunk_attention(
-                &q_heads[..nq * s * dh],
+                &sc.q_heads[..nq * s * dh],
                 nq,
                 s,
                 dh,
-                &k_heads[..nkv * s * dh],
-                &v_heads[..nkv * s * dh],
+                &sc.k_heads[..nkv * s * dh],
+                &sc.v_heads[..nkv * s * dh],
                 cache,
                 &sel,
                 &mut sc.attn,
-                attn_heads,
+                fit(&mut sc.attn_heads, nq * s * dh),
             );
-
-            // [H, s, dh] → [s, H*dh], project out, residual.
-            let attn_merged = fit(&mut sc.attn_merged, s * dq);
-            for h in 0..nq {
-                for i in 0..s {
-                    let src = (h * s + i) * dh;
-                    let dst = i * dq + h * dh;
-                    attn_merged[dst..dst + dh].copy_from_slice(&attn_heads[src..src + dh]);
-                }
-            }
-            let attn_out = fit(&mut sc.attn_out, s * dm);
-            matmul(attn_merged, lw.wo.data(), s, dq, dm, attn_out);
-            for (hv, ov) in hidden.iter_mut().zip(attn_out.iter()) {
-                *hv += ov;
-            }
+            self.layer_attn_output(lw, s, &mut hidden, sc);
 
             // Append the chunk's KV to the cache (full retention).
             state.caches[l].append(&sc.k_heads[..nkv * s * dh], &sc.v_heads[..nkv * s * dh], s);
 
-            // ---- FFN block (SwiGLU; optional top-1 MoE) ----
-            let normed = fit(&mut sc.normed, s * dm);
-            for i in 0..s {
-                rmsnorm(
-                    &hidden[i * dm..(i + 1) * dm],
-                    lw.ffn_norm.data(),
-                    cfg.norm_eps,
-                    &mut normed[i * dm..(i + 1) * dm],
-                );
-            }
-            let d_ff = cfg.d_ff;
-            let ffn_out = fit(&mut sc.ffn_out, s * dm);
-            if cfg.n_experts == 0 {
-                let gate = fit(&mut sc.ffn_gate, s * d_ff);
-                matmul(normed, lw.w_gate.data(), s, dm, d_ff, gate);
-                let up = fit(&mut sc.ffn_up, s * d_ff);
-                matmul(normed, lw.w_up.data(), s, dm, d_ff, up);
-                for (gv, uv) in gate.iter_mut().zip(up.iter()) {
-                    *gv = silu(*gv) * uv;
-                }
-                matmul(gate, lw.w_down.data(), s, d_ff, dm, ffn_out);
-            } else {
-                // Top-1 routing per token.
-                for i in 0..s {
-                    let x = &normed[i * dm..(i + 1) * dm];
-                    let mut best = (0usize, f32::NEG_INFINITY);
-                    for e in 0..cfg.n_experts {
-                        let mut score = 0.0;
-                        for j in 0..dm {
-                            score += x[j] * lw.router.data()[j * cfg.n_experts + e];
-                        }
-                        if score > best.1 {
-                            best = (e, score);
-                        }
-                    }
-                    let (wg, wu, wd) = if best.0 == 0 {
-                        (lw.w_gate.data(), lw.w_up.data(), lw.w_down.data())
-                    } else {
-                        let ex = &lw.experts[best.0 - 1];
-                        (ex.0.data(), ex.1.data(), ex.2.data())
-                    };
-                    let gate = fit(&mut sc.ffn_gate, d_ff);
-                    matmul(x, wg, 1, dm, d_ff, gate);
-                    let up = fit(&mut sc.ffn_up, d_ff);
-                    matmul(x, wu, 1, dm, d_ff, up);
-                    for (gv, uv) in gate.iter_mut().zip(up.iter()) {
-                        *gv = silu(*gv) * uv;
-                    }
-                    matmul(gate, wd, 1, d_ff, dm, &mut ffn_out[i * dm..(i + 1) * dm]);
-                }
-            }
-            for (hv, fv) in hidden.iter_mut().zip(ffn_out.iter()) {
-                *hv += fv;
-            }
+            self.layer_ffn(lw, s, &mut hidden, sc);
         }
         state.pos += s;
+        hidden
+    }
+
+    /// [`HostModel::forward_chunk`] over the **shared paged KV pool**: the
+    /// sequence's KV lives in `pool` pages addressed by its block table
+    /// `blocks`, with `pos` tokens already resident — radix-cached prefix
+    /// pages included, which is how a prefix hit skips prefill compute
+    /// entirely. Appends the chunk's KV into the pages covering
+    /// `pos..pos+s` (the caller must have ensured capacity via the lease
+    /// layer and exclusivity via `KvPool::make_writable`) and returns the
+    /// final hidden states `[s, d_model]`. The caller advances its token
+    /// cursor by `s` afterwards.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_chunk_paged(
+        &self,
+        pool: &mut KvPool,
+        blocks: &[u32],
+        pos: usize,
+        tokens: &[u32],
+        policy: &dyn SelectionPolicy,
+        budget: usize,
+        ctx: &mut SelectCtx,
+    ) -> Vec<f32> {
+        let cfg = &self.w.cfg;
+        let (s, dh) = (tokens.len(), cfg.d_head);
+        let (nq, nkv) = (cfg.n_q_heads, cfg.n_kv_heads);
+        assert!(s > 0);
+        assert!(
+            blocks.len() * pool.cfg.block_tokens >= pos + s,
+            "block table too short for chunk"
+        );
+
+        let mut hidden = self.embed(tokens, s);
+        let mut sc_guard = self.scratch.borrow_mut();
+        let sc = &mut *sc_guard;
+        ctx.n_layers = cfg.n_layers;
+        for (l, lw) in self.w.layers.iter().enumerate() {
+            ctx.layer = l;
+            self.layer_attn_inputs(lw, &hidden, s, pos, sc);
+
+            // ---- selection (block-table-aware KCache) + paged attention ----
+            let sel = if pos == 0 || policy.is_dense() {
+                Selection::All
+            } else {
+                let qv = QChunk::new(&sc.q_heads[..nq * s * dh], nq, s, dh);
+                let kc = pool.k_cache(blocks, pos, l);
+                policy.select(&qv, &kc, budget, ctx)
+            };
+            ctx.cost.bump_calls();
+            {
+                let paged = pool.kv_view(blocks, pos, l);
+                paged_chunk_attention(
+                    &sc.q_heads[..nq * s * dh],
+                    nq,
+                    s,
+                    dh,
+                    &sc.k_heads[..nkv * s * dh],
+                    &sc.v_heads[..nkv * s * dh],
+                    &paged,
+                    &sel,
+                    &mut sc.attn,
+                    fit(&mut sc.attn_heads, nq * s * dh),
+                );
+            }
+            self.layer_attn_output(lw, s, &mut hidden, sc);
+
+            pool.append_chunk(
+                blocks,
+                l,
+                pos,
+                &sc.k_heads[..nkv * s * dh],
+                &sc.v_heads[..nkv * s * dh],
+                s,
+            );
+
+            self.layer_ffn(lw, s, &mut hidden, sc);
+        }
         hidden
     }
 
@@ -370,6 +482,53 @@ mod tests {
             let mut ctx = SelectCtx::new(0);
             let h = m.forward_chunk(&mut st, &[5, 6, 7], &Quoka::default(), 8, &mut ctx);
             assert!(h.iter().all(|x| x.is_finite()), "{preset}");
+        }
+    }
+
+    #[test]
+    fn paged_forward_matches_contiguous() {
+        // The paged pipeline (pool pages + block-table attention) must
+        // reproduce the private-buffer pipeline on the same tokens, for
+        // dense and for QUOKA at a budget whose descend set covers every
+        // page (so the block-metadata scan computes identical scores).
+        use crate::coordinator::kv_blocks::BlockAllocator;
+        use crate::kvpool::{KvPool, PoolCfg};
+        let m = model("tiny");
+        let cfg = m.cfg().clone();
+        let tokens: Vec<u32> = (0..24).map(|i| (i * 17 % 251) as u32).collect();
+        let bt = 8usize;
+        let quoka = Quoka::default();
+        let cases: [(&dyn crate::select::SelectionPolicy, usize); 2] =
+            [(&Dense, usize::MAX), (&quoka, 12)];
+        for (policy, budget) in cases {
+            let mut ctx = SelectCtx::new(0);
+            let mut st = SeqState::new(&cfg);
+            let mut h_c = Vec::new();
+            for chunk in tokens.chunks(8) {
+                h_c = m.forward_chunk(&mut st, chunk, policy, budget, &mut ctx);
+            }
+            let mut alloc = BlockAllocator::new(16, bt);
+            let mut pool = KvPool::new(PoolCfg {
+                n_layers: cfg.n_layers,
+                n_kv: cfg.n_kv_heads,
+                d: cfg.d_head,
+                block_tokens: bt,
+                total_blocks: 16,
+            });
+            let mut blocks = Vec::new();
+            assert!(alloc.ensure(&mut blocks, tokens.len()));
+            pool.adopt_new(&blocks);
+            let mut pos = 0;
+            let mut h_p = Vec::new();
+            for chunk in tokens.chunks(8) {
+                h_p = m.forward_chunk_paged(&mut pool, &blocks, pos, chunk, policy, budget, &mut ctx);
+                pos += chunk.len();
+            }
+            assert!(
+                crate::tensor::ops::rel_l2(&h_c, &h_p) < 1e-4,
+                "paged/contiguous divergence {} (budget {budget})",
+                crate::tensor::ops::rel_l2(&h_c, &h_p)
+            );
         }
     }
 

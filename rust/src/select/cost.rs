@@ -11,6 +11,7 @@ pub struct CostCounter {
     flops: u64,
     bytes: u64,
     calls: u64,
+    skipped_keys: u64,
 }
 
 impl CostCounter {
@@ -21,6 +22,11 @@ impl CostCounter {
     #[inline]
     pub fn add_bytes(&mut self, b: u64) {
         self.bytes += b;
+    }
+    /// Keys a block-granular scan never touched (metadata pruned them).
+    #[inline]
+    pub fn add_skipped_keys(&mut self, k: u64) {
+        self.skipped_keys += k;
     }
     pub fn bump_calls(&mut self) {
         self.calls += 1;
@@ -33,6 +39,10 @@ impl CostCounter {
     }
     pub fn calls(&self) -> u64 {
         self.calls
+    }
+    /// Keys skipped by metadata-first scans (paged QUOKA).
+    pub fn skipped_keys(&self) -> u64 {
+        self.skipped_keys
     }
     pub fn reset(&mut self) {
         *self = CostCounter::default();

@@ -57,29 +57,52 @@ impl<'a> QChunk<'a> {
     }
 }
 
-/// Key-cache view for one layer, layout `[n_heads, capacity, d]` with the
-/// first `t` rows of each head valid.
+/// Block-table indirection for a [`KCache`] over the shared paged KV pool
+/// (`kvpool::KvPool`): logical token `i` lives in page `blocks[i /
+/// block_tokens]`, and every page carries a per-head key-sum row
+/// (≡ unnormalized mean key) that block-granular policies score *before*
+/// touching individual keys.
+#[derive(Clone, Copy)]
+pub struct Pages<'a> {
+    /// Logical block → pool page id.
+    pub blocks: &'a [u32],
+    /// Tokens per page.
+    pub block_tokens: usize,
+    /// Per-page key sums, layout `[page, n_heads, d]` over the pool slab.
+    pub key_sums: &'a [f32],
+}
+
+/// Key-cache view for one layer.
+///
+/// Contiguous form (`pages == None`): layout `[n_heads, capacity, d]` with
+/// the first `t` rows of each head valid. Paged form (`pages == Some`):
+/// `data` is the pool's whole layer slab `[page, n_heads, block_tokens,
+/// d]` and rows are resolved through the block table; `head()` has no
+/// contiguous slab in this form and must not be called (the engine only
+/// routes block-table-aware policies at paged caches).
 #[derive(Clone, Copy)]
 pub struct KCache<'a> {
     pub data: &'a [f32],
     pub n_heads: usize,
     /// Valid (filled) length.
     pub t: usize,
-    /// Row capacity of each head slab (`>= t`).
+    /// Row capacity of each head slab (`>= t`; `block_tokens` when paged).
     pub capacity: usize,
     pub d: usize,
-    /// Cached per-key inverse L2 norms, layout `[n_heads, capacity]`,
-    /// maintained incrementally by `KvBuffers::append` (computed once per
-    /// key at insert time). `None` — e.g. for ad-hoc views built from raw
-    /// slices — falls back to recomputing norms on demand.
+    /// Cached per-key inverse L2 norms, layout `[n_heads, capacity]`
+    /// (contiguous) or `[page, n_heads, block_tokens]` (paged), maintained
+    /// incrementally at append time. `None` — e.g. for ad-hoc views built
+    /// from raw slices — falls back to recomputing norms on demand.
     pub inv_norms: Option<&'a [f32]>,
+    /// Block-table indirection; `None` for contiguous caches.
+    pub pages: Option<Pages<'a>>,
 }
 
 impl<'a> KCache<'a> {
     pub fn new(data: &'a [f32], n_heads: usize, t: usize, capacity: usize, d: usize) -> Self {
         debug_assert!(t <= capacity);
         debug_assert_eq!(data.len(), n_heads * capacity * d);
-        KCache { data, n_heads, t, capacity, d, inv_norms: None }
+        KCache { data, n_heads, t, capacity, d, inv_norms: None, pages: None }
     }
 
     /// View with an incremental norm cache (layout `[n_heads, capacity]`).
@@ -95,10 +118,36 @@ impl<'a> KCache<'a> {
         KCache { inv_norms: Some(inv_norms), ..KCache::new(data, n_heads, t, capacity, d) }
     }
 
+    /// Block-table-aware view over a pool layer slab (always carries the
+    /// pooled norm cache and per-page key sums).
+    pub fn paged(
+        data: &'a [f32],
+        n_heads: usize,
+        t: usize,
+        d: usize,
+        inv_norms: &'a [f32],
+        pages: Pages<'a>,
+    ) -> Self {
+        debug_assert!(pages.blocks.len() * pages.block_tokens >= t);
+        KCache {
+            data,
+            n_heads,
+            t,
+            capacity: pages.block_tokens,
+            d,
+            inv_norms: Some(inv_norms),
+            pages: Some(pages),
+        }
+    }
+
     /// `1 / ‖key(h, i)‖` (0 for a zero key): one load when the cache view
     /// carries incremental norms, an O(d) reduction otherwise.
     #[inline]
     pub fn inv_norm(&self, h: usize, i: usize) -> f32 {
+        if let (Some(p), Some(norms)) = (self.pages, self.inv_norms) {
+            let bt = p.block_tokens;
+            return norms[(p.blocks[i / bt] as usize * self.n_heads + h) * bt + i % bt];
+        }
         match self.inv_norms {
             Some(norms) => norms[h * self.capacity + i],
             None => {
@@ -113,8 +162,14 @@ impl<'a> KCache<'a> {
     }
 
     /// Head `h` as a `[capacity, d]` slice (only `..t` rows valid).
+    /// Contiguous caches only — paged caches have no per-head slab.
     #[inline]
     pub fn head(&self, h: usize) -> &'a [f32] {
+        assert!(
+            self.pages.is_none(),
+            "KCache::head: paged cache has no contiguous head slab \
+             (route block-table-aware policies instead)"
+        );
         let n = self.capacity * self.d;
         &self.data[h * n..(h + 1) * n]
     }
@@ -122,7 +177,13 @@ impl<'a> KCache<'a> {
     /// Key row `(h, i)`.
     #[inline]
     pub fn key(&self, h: usize, i: usize) -> &'a [f32] {
-        let base = h * self.capacity * self.d + i * self.d;
+        let base = match self.pages {
+            None => h * self.capacity * self.d + i * self.d,
+            Some(p) => {
+                let bt = p.block_tokens;
+                ((p.blocks[i / bt] as usize * self.n_heads + h) * bt + i % bt) * self.d
+            }
+        };
         &self.data[base..base + self.d]
     }
 }

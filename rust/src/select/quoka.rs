@@ -18,7 +18,10 @@
 //! The ablation switches ([`Scoring::Dot`], [`QueryAgg::Mean`]) reproduce
 //! Tables 9 and 10.
 
-use super::{fit, group_size, topk_ascending_into, KCache, QChunk, Scratch, SelectCtx, Selection, SelectionPolicy};
+use super::{
+    fit, group_size, topk_ascending_into, KCache, Pages, QChunk, Scratch, SelectCtx, Selection,
+    SelectionPolicy,
+};
 use crate::tensor::ops::{dot, l2_norm, mean_rows, qk_block, topk_indices_into};
 use crate::util::threadpool::SyncPtr;
 
@@ -116,6 +119,131 @@ impl Quoka {
         self.subselect_into(q, h, ctx);
         ctx.scratch.idx.clone()
     }
+
+    /// Stages 2b + 3 over a **paged** cache: block-metadata-first scan.
+    ///
+    /// 1. Score every page by its mean-key cosine against the
+    ///    pre-aggregated queries (`cos(q̄_row, Σk) == cos(q̄_row, mean k)`
+    ///    — cosine is scale-free, so the incrementally maintained key sum
+    ///    stands in for the mean with no fill count). `Scoring::Dot` uses
+    ///    the true mean (sum / filled rows).
+    /// 2. Descend into the top `⌈2·budget/block_tokens⌉ + 1` pages — at
+    ///    least `budget` candidate keys with 2× overscan headroom — and run
+    ///    the exact per-key scan only on their (page-contiguous) head rows.
+    /// 3. Top-`budget` over the exact scores; skipped pages keep `-∞` and
+    ///    can never be selected because the descended set always holds
+    ///    `>= budget` scored keys.
+    ///
+    /// This is the Double-Sparsity / CompactAttention move: O(T/block)
+    /// metadata reads gate the O(T·d) key scan, so whole pages of
+    /// irrelevant context are never touched. Expects `ctx.scratch.b` to
+    /// hold the `[n_q_eff, d]` pre-aggregated queries from stage 2a.
+    fn scan_paged(
+        &self,
+        k: &KCache,
+        pg: Pages,
+        kv: usize,
+        n_q_eff: usize,
+        budget: usize,
+        ctx: &mut SelectCtx,
+    ) -> Vec<u32> {
+        let (t, d, n_kv) = (k.t, k.d, k.n_heads);
+        let bt = pg.block_tokens;
+        let n_blocks = t.div_ceil(bt);
+        let cost = &mut ctx.cost;
+        let Scratch { a, b, c, idx, workers, .. } = &mut ctx.scratch;
+        let qbar: &[f32] = &b[..n_q_eff * d];
+
+        // ---- metadata pass: one score per page ----
+        let bscores = fit(c, n_blocks);
+        for j in 0..n_blocks {
+            let filled = (t - j * bt).min(bt);
+            let page = pg.blocks[j] as usize;
+            let sums = &pg.key_sums[(page * n_kv + kv) * d..(page * n_kv + kv + 1) * d];
+            let scale = match self.cfg.scoring {
+                Scoring::Cosine => {
+                    let n = l2_norm(sums);
+                    if n > 0.0 {
+                        1.0 / n
+                    } else {
+                        0.0
+                    }
+                }
+                Scoring::Dot => 1.0 / filled as f32,
+            };
+            let mut best = f32::NEG_INFINITY;
+            for nq in 0..n_q_eff {
+                let v = dot(&qbar[nq * d..(nq + 1) * d], sums);
+                if v > best {
+                    best = v;
+                }
+            }
+            bscores[j] = best * scale;
+        }
+        cost.add_flops((n_blocks * n_q_eff * 2 * d) as u64);
+        cost.add_bytes((n_blocks * d * 4) as u64);
+
+        // ---- descend set ----
+        let n_desc = ((2 * budget).div_ceil(bt) + 1).min(n_blocks);
+        let descend = topk_ascending_into(&bscores[..n_blocks], n_desc, idx);
+
+        // ---- exact scan within surviving pages ----
+        let scores = fit(a, t);
+        scores.fill(f32::NEG_INFINITY);
+        if workers.is_empty() {
+            workers.push(Vec::new());
+        }
+        let blk_arena = &mut workers[0];
+        if blk_arena.len() < n_q_eff * bt {
+            blk_arena.resize(n_q_eff * bt, 0.0);
+        }
+        let mut scanned = 0usize;
+        for &jb in &descend {
+            let j = jb as usize;
+            let lo = j * bt;
+            let tn = (t - lo).min(bt);
+            let page = pg.blocks[j] as usize;
+            // Per-page head rows are contiguous: tile the micro-kernel
+            // straight over the page, no gather.
+            let base = (page * n_kv + kv) * bt * d;
+            let krows = &k.data[base..base + tn * d];
+            let blk = &mut blk_arena[..n_q_eff * tn];
+            qk_block(qbar, n_q_eff, krows, tn, d, blk);
+            for jj in 0..tn {
+                // kinv >= 0, so scaling commutes with max/mean.
+                let kinv = match self.cfg.scoring {
+                    Scoring::Cosine => k.inv_norm(kv, lo + jj),
+                    Scoring::Dot => 1.0,
+                };
+                scores[lo + jj] = match self.cfg.query_agg {
+                    QueryAgg::Max => {
+                        let mut best = f32::NEG_INFINITY;
+                        for nq in 0..n_q_eff {
+                            let v = blk[nq * tn + jj];
+                            if v > best {
+                                best = v;
+                            }
+                        }
+                        best * kinv
+                    }
+                    QueryAgg::Mean => {
+                        let mut acc = 0.0;
+                        for nq in 0..n_q_eff {
+                            acc += blk[nq * tn + jj];
+                        }
+                        acc * kinv / n_q_eff as f32
+                    }
+                };
+            }
+            scanned += tn;
+        }
+        debug_assert!(scanned >= budget.min(t), "descend set must cover the budget");
+        cost.add_flops((scanned * n_q_eff * 2 * d) as u64);
+        cost.add_bytes((scanned * d * 4) as u64);
+        cost.add_skipped_keys((t - scanned) as u64);
+
+        topk_ascending_into(&scores[..t], budget, idx)
+    }
 }
 
 impl SelectionPolicy for Quoka {
@@ -180,6 +308,14 @@ impl SelectionPolicy for Quoka {
             }
             ctx.cost.add_flops((g * n_q_eff * 2 * d) as u64);
             ctx.cost.add_bytes((n_q_eff * d * 4) as u64);
+
+            // ---- Stage 2b/3, block-table-aware path: over a paged cache
+            // the scan goes metadata-first — score each page's mean key,
+            // descend only into surviving pages (see `scan_paged`).
+            if let Some(pg) = k.pages {
+                per_head.push(self.scan_paged(k, pg, kv, n_q_eff, budget, ctx));
+                continue;
+            }
 
             // ---- Stage 2b: S = Q̄ Kᵀ over the valid cache rows, with keys
             // normalized for cosine scoring via the *incremental norm
@@ -427,6 +563,112 @@ mod tests {
         }
         let want = crate::select::topk_ascending(&scores, 8);
         assert_eq!(sel.head_indices(0, t), want);
+    }
+
+    /// Identity-mapped paged view over contiguous `[t, d]` single-head
+    /// data: with `blocks[j] == j` the pool layout `[page, 1, bt, d]`
+    /// coincides with the contiguous layout, so the same buffer serves
+    /// both views and any divergence is the scan's, not the data's.
+    fn paged_fixture(kd: &[f32], t: usize, d: usize, bt: usize) -> (Vec<f32>, Vec<f32>, Vec<u32>) {
+        assert_eq!(t % bt, 0);
+        let n_blocks = t / bt;
+        let mut norms = vec![0.0f32; t];
+        for (i, n) in norms.iter_mut().enumerate() {
+            let l = crate::tensor::ops::l2_norm(&kd[i * d..(i + 1) * d]);
+            *n = if l > 0.0 { 1.0 / l } else { 0.0 };
+        }
+        let mut sums = vec![0.0f32; n_blocks * d];
+        for i in 0..t {
+            for j in 0..d {
+                sums[(i / bt) * d + j] += kd[i * d + j];
+            }
+        }
+        (norms, sums, (0..n_blocks as u32).collect())
+    }
+
+    #[test]
+    fn paged_scan_equals_contiguous_when_descending_everywhere() {
+        // With the descend set covering every page, the block-table-aware
+        // scan computes the exact same per-key scores as the contiguous
+        // tiled scan — selections must agree bitwise.
+        let mut rng = Rng::new(11);
+        let (d, s, t, bt) = (8usize, 16usize, 96usize, 16usize);
+        let qd = rng.normal_vec(s * d, 1.0);
+        let kd = rng.normal_vec(t * d, 1.0);
+        let (norms, sums, blocks) = paged_fixture(&kd, t, d, bt);
+        let q = QChunk::new(&qd, 1, s, d);
+        let contig = KCache::with_norms(&kd, 1, t, t, d, &norms);
+        let paged = KCache::paged(
+            &kd,
+            1,
+            t,
+            d,
+            &norms,
+            Pages { blocks: &blocks, block_tokens: bt, key_sums: &sums },
+        );
+        // budget 40 → descend ⌈80/16⌉+1 = 6 = all pages.
+        for quoka in [
+            Quoka::default(),
+            Quoka::new(QuokaConfig { scoring: Scoring::Dot, ..QuokaConfig::default() }),
+            Quoka::new(QuokaConfig { query_agg: QueryAgg::Mean, ..QuokaConfig::default() }),
+        ] {
+            let a = quoka.select(&q, &contig, 40, &mut SelectCtx::new(0));
+            let b = quoka.select(&q, &paged, 40, &mut SelectCtx::new(0));
+            assert_eq!(
+                a.head_indices(0, t),
+                b.head_indices(0, t),
+                "{}",
+                quoka.name()
+            );
+        }
+    }
+
+    #[test]
+    fn paged_scan_skips_blocks_and_still_finds_needle_page() {
+        // One page full of needle-aligned keys among many anti-aligned
+        // pages: the metadata pass must rank it into the descend set, the
+        // exact scan must select its keys, and whole pages must be skipped.
+        let (d, s, t, bt) = (8usize, 4usize, 256usize, 16usize);
+        let needle_block = 5usize;
+        let mut rng = Rng::new(12);
+        let mut qd = vec![0.0f32; s * d];
+        for i in 0..s {
+            qd[i * d + 1] = 1.0;
+            for j in 0..d {
+                qd[i * d + j] += rng.normal() * 0.01;
+            }
+        }
+        let mut kd = vec![0.0f32; t * d];
+        for i in 0..t {
+            kd[i * d] = -1.0;
+            for j in 0..d {
+                kd[i * d + j] += rng.normal() * 0.01;
+            }
+        }
+        for i in needle_block * bt..(needle_block + 1) * bt {
+            kd[i * d] = 0.0;
+            kd[i * d + 1] = 1.0;
+        }
+        let (norms, sums, blocks) = paged_fixture(&kd, t, d, bt);
+        let q = QChunk::new(&qd, 1, s, d);
+        let paged = KCache::paged(
+            &kd,
+            1,
+            t,
+            d,
+            &norms,
+            Pages { blocks: &blocks, block_tokens: bt, key_sums: &sums },
+        );
+        let mut ctx = SelectCtx::new(0);
+        let sel = Quoka::default().select(&q, &paged, bt, &mut ctx);
+        let idx = sel.head_indices(0, t);
+        assert_eq!(idx.len(), bt);
+        assert!(
+            idx.iter().all(|&i| (i as usize) / bt == needle_block),
+            "selection must come from the needle page, got {idx:?}"
+        );
+        // budget 16 → descend 3 of 16 pages: 13 pages (208 keys) skipped.
+        assert_eq!(ctx.cost.skipped_keys(), (t - 3 * bt) as u64);
     }
 
     #[test]

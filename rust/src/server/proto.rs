@@ -55,6 +55,7 @@ pub fn result_line(r: &RequestResult, text: &str) -> String {
         ("ttft_ms", Json::num(r.ttft_s * 1e3)),
         ("tpot_ms", Json::num(r.tpot_s * 1e3)),
         ("prompt_tokens", Json::num(r.prompt_tokens as f64)),
+        ("cached_prefix_tokens", Json::num(r.cached_prefix_tokens as f64)),
         ("generated", Json::num(r.generated.len() as f64)),
     ])
     .to_string()
@@ -72,6 +73,9 @@ pub struct WireResponse {
     pub ttft_ms: f64,
     pub tpot_ms: f64,
     pub prompt_tokens: usize,
+    /// Prompt tokens served from the shared prefix cache (0 when the
+    /// server runs without it; absent fields parse as 0 for old servers).
+    pub cached_prefix_tokens: usize,
     pub generated: usize,
 }
 
@@ -87,6 +91,10 @@ impl WireResponse {
             ttft_ms: j.req("ttft_ms")?.as_f64().unwrap_or(0.0),
             tpot_ms: j.req("tpot_ms")?.as_f64().unwrap_or(0.0),
             prompt_tokens: j.req("prompt_tokens")?.as_usize().unwrap_or(0),
+            cached_prefix_tokens: j
+                .get("cached_prefix_tokens")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
             generated: j.req("generated")?.as_usize().unwrap_or(0),
         })
     }
@@ -118,12 +126,17 @@ mod tests {
             ttft_s: 0.012,
             tpot_s: 0.003,
             prompt_tokens: 100,
+            cached_prefix_tokens: 64,
             total_s: 0.02,
         };
         let line = result_line(&rr, "out");
         let resp = WireResponse::parse(&line).unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.generated, 2);
+        assert_eq!(resp.cached_prefix_tokens, 64);
+        // Back-compat: responses without the field parse as 0.
+        let legacy = r#"{"id": 1, "text": "x", "ttft_ms": 1.0, "tpot_ms": 1.0, "prompt_tokens": 5, "generated": 1}"#;
+        assert_eq!(WireResponse::parse(legacy).unwrap().cached_prefix_tokens, 0);
         assert!(WireResponse::parse(&error_line("boom")).is_err());
         assert!(WireRequest::parse("{nope").is_err());
     }

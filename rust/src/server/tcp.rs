@@ -230,6 +230,7 @@ mod tests {
                         pool_blocks: 256,
                         block_tokens: 16,
                         seed: 2,
+                        ..EngineCfg::default()
                     },
                 )
             },

@@ -3,8 +3,11 @@
 //! incremental key-norm-cache invariant and the no-steady-state-allocation
 //! property of the scratch arenas.
 
+use quoka::coordinator::BlockAllocator;
+use quoka::kvpool::{KvPool, PoolCfg};
 use quoka::model::attention::{
-    chunk_attention, decode_attention, reference_chunk_attention, AttnScratch, KvBuffers,
+    chunk_attention, decode_attention, paged_chunk_attention, reference_chunk_attention,
+    AttnScratch, KvBuffers,
 };
 use quoka::select::Selection;
 use quoka::tensor::ops::{l2_norm, rel_l2};
@@ -156,6 +159,113 @@ fn decode_matches_reference() {
         &su.q, n_q, 1, d, &su.k_self, &su.v_self, &su.cache, &sel, &mut b,
     );
     assert!(rel_l2(&a, &b) < TOL);
+}
+
+/// Mirror a contiguous cache's rows into a one-layer pool through a
+/// (shuffled-id) block table, chunked irregularly so page-boundary
+/// straddling appends are exercised.
+fn pool_mirror(cache: &KvBuffers, bt: usize) -> (KvPool, Vec<u32>, BlockAllocator) {
+    let (n_kv, d, t) = (cache.n_kv, cache.d, cache.t);
+    let total = (t.div_ceil(bt) + 3).max(4);
+    let mut alloc = BlockAllocator::new(total, bt);
+    let mut pool = KvPool::new(PoolCfg {
+        n_layers: 1,
+        n_kv,
+        d,
+        block_tokens: bt,
+        total_blocks: total,
+    });
+    let mut blocks = Vec::new();
+    assert!(alloc.ensure(&mut blocks, t.max(1)));
+    pool.adopt_new(&blocks);
+    let mut pos = 0;
+    let mut step = 1usize;
+    while pos < t {
+        let s = step.min(t - pos);
+        // Repack rows [pos, pos+s) of every head into [n_kv, s, d].
+        let mut kk = vec![0.0f32; n_kv * s * d];
+        let mut vv = vec![0.0f32; n_kv * s * d];
+        for h in 0..n_kv {
+            for i in 0..s {
+                let dst = (h * s + i) * d;
+                kk[dst..dst + d].copy_from_slice(cache.key(h, pos + i));
+                vv[dst..dst + d].copy_from_slice(cache.value(h, pos + i));
+            }
+        }
+        pool.append_chunk(&blocks, 0, pos, &kk, &vv, s);
+        pos += s;
+        step = step * 2 + 1;
+    }
+    (pool, blocks, alloc)
+}
+
+#[test]
+fn paged_matches_reference_under_all_selection() {
+    for &(t, s, n_q, n_kv, d) in &shapes() {
+        for bt in [4usize, 16, 128] {
+            let su = setup(t, s, n_q, n_kv, d, 0x9A6ED + (t + bt) as u64);
+            let (pool, blocks, _alloc) = pool_mirror(&su.cache, bt);
+            let paged = pool.kv_view(&blocks, t, 0);
+            let mut got = vec![0.0f32; n_q * s * d];
+            let mut want = vec![0.0f32; n_q * s * d];
+            let mut scratch = AttnScratch::new();
+            paged_chunk_attention(
+                &su.q, n_q, s, d, &su.k_self, &su.v_self, &paged, &Selection::All, &mut scratch,
+                &mut got,
+            );
+            reference_chunk_attention(
+                &su.q, n_q, s, d, &su.k_self, &su.v_self, &su.cache, &Selection::All, &mut want,
+            );
+            let err = rel_l2(&got, &want);
+            assert!(err < TOL, "paged All t={t} s={s} d={d} bt={bt}: rel_l2 {err}");
+        }
+    }
+}
+
+#[test]
+fn paged_matches_reference_under_sparse_selections() {
+    let mut rng = Rng::new(0xFACE);
+    for &(t, s, n_q, n_kv, d) in &shapes() {
+        if t == 0 {
+            continue;
+        }
+        for (bt, keep_1_in) in [(8usize, 2usize), (32, 5)] {
+            let su = setup(t, s, n_q, n_kv, d, 0xD0E + (t * bt) as u64);
+            let (pool, blocks, _alloc) = pool_mirror(&su.cache, bt);
+            let paged = pool.kv_view(&blocks, t, 0);
+            let sel = random_selection(&mut rng, n_kv, t, keep_1_in);
+            let mut got = vec![0.0f32; n_q * s * d];
+            let mut want = vec![0.0f32; n_q * s * d];
+            let mut scratch = AttnScratch::new();
+            paged_chunk_attention(
+                &su.q, n_q, s, d, &su.k_self, &su.v_self, &paged, &sel, &mut scratch, &mut got,
+            );
+            reference_chunk_attention(
+                &su.q, n_q, s, d, &su.k_self, &su.v_self, &su.cache, &sel, &mut want,
+            );
+            let err = rel_l2(&got, &want);
+            assert!(err < TOL, "paged sparse t={t} s={s} bt={bt} 1/{keep_1_in}: rel_l2 {err}");
+        }
+    }
+}
+
+#[test]
+fn pool_norm_metadata_matches_contiguous_norm_cache() {
+    // The PR-1 norm cache, moved into the pool: pooled per-key inverse
+    // norms must equal the contiguous cache's for every row.
+    let (t, s, n_q, n_kv, d) = (53usize, 4usize, 4usize, 2usize, 10usize);
+    let su = setup(t, s, n_q, n_kv, d, 0x4E0);
+    let (pool, blocks, _alloc) = pool_mirror(&su.cache, 8);
+    let kc = pool.k_cache(&blocks, t, 0);
+    let contig = su.cache.k_view();
+    for h in 0..n_kv {
+        for i in 0..t {
+            assert!(
+                (kc.inv_norm(h, i) - contig.inv_norm(h, i)).abs() < 1e-6,
+                "row ({h},{i})"
+            );
+        }
+    }
 }
 
 #[test]

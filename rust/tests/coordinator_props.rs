@@ -198,6 +198,7 @@ fn engine_conserves_blocks_and_tokens_across_random_mixes() {
                     pool_blocks: 128,
                     block_tokens: 16,
                     seed: 3,
+                    ..EngineCfg::default()
                 },
             )
             .map_err(|e| e.to_string())?;

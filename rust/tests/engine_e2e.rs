@@ -1,7 +1,7 @@
 //! End-to-end engine + server integration tests, including the PJRT
 //! backend when artifacts are present, plus failure injection.
 
-use quoka::coordinator::{Engine, EngineCfg, PolicySpec, SchedCfg};
+use quoka::coordinator::{Engine, EngineCfg, KvLayout, PolicySpec, SchedCfg};
 use quoka::server::{serve, Client, WireRequest};
 
 fn host_cfg() -> EngineCfg {
@@ -10,7 +10,12 @@ fn host_cfg() -> EngineCfg {
         pool_blocks: 512,
         block_tokens: 16,
         seed: 4,
+        ..EngineCfg::default()
     }
+}
+
+fn paged_cfg() -> EngineCfg {
+    EngineCfg { kv: KvLayout::Paged { prefix_cache: true }, ..host_cfg() }
 }
 
 #[test]
@@ -79,6 +84,60 @@ fn oversized_prompt_is_rejected_not_wedged() {
 }
 
 #[test]
+fn prefix_cache_skips_cached_prefill_and_preserves_generation() {
+    // The paged-pool acceptance property: a second request sharing an
+    // N-token prefix performs ZERO prefill chunks for those N tokens, and
+    // reusing cached pages changes nothing about what gets generated.
+    let prefix: Vec<u32> = (0..96).map(|i| (i * 13 % 240) as u32).collect(); // 6 pages
+    let suffix_a: Vec<u32> = (0..32).map(|i| (i * 7 % 240) as u32 + 1).collect();
+    let suffix_b: Vec<u32> = (0..32).map(|i| (i * 11 % 240) as u32 + 3).collect();
+    let prompt_a: Vec<u32> = prefix.iter().chain(&suffix_a).copied().collect();
+    let prompt_b: Vec<u32> = prefix.iter().chain(&suffix_b).copied().collect();
+    let spec = || PolicySpec { name: "quoka".into(), budget: 48 };
+
+    // Warm engine: A populates the cache, then B reuses the shared prefix.
+    let mut warm = Engine::new_host("tiny", paged_cfg()).unwrap();
+    warm.submit(prompt_a, 4, spec()).unwrap();
+    warm.run_to_completion().unwrap();
+    let prefill_after_a = warm.metrics.prefill_tokens;
+    assert_eq!(prefill_after_a, 128);
+    warm.submit(prompt_b.clone(), 4, spec()).unwrap();
+    let rb = warm.run_to_completion().unwrap().remove(0);
+    assert_eq!(rb.cached_prefix_tokens, 96, "whole shared prefix served from cache");
+    assert_eq!(
+        warm.metrics.prefill_tokens - prefill_after_a,
+        (prompt_b.len() - 96) as u64,
+        "zero prefill chunks scheduled for the cached prefix"
+    );
+
+    // Fresh engine: same request B with a cold cache must generate the
+    // exact same tokens — cached pages hold bit-identical KV (same tokens,
+    // same chunk boundaries, same policy namespace).
+    let mut cold = Engine::new_host("tiny", paged_cfg()).unwrap();
+    cold.submit(prompt_b, 4, spec()).unwrap();
+    let rb_cold = cold.run_to_completion().unwrap().remove(0);
+    assert_eq!(rb_cold.cached_prefix_tokens, 0);
+    assert_eq!(rb.generated, rb_cold.generated, "prefix reuse must not change generation");
+    assert!(rb.ttft_s > 0.0 && rb_cold.ttft_s > 0.0);
+}
+
+#[test]
+fn prefix_cache_is_policy_namespaced() {
+    // Same tokens under a different budget must NOT reuse cached KV: with
+    // sparse selection the cached hidden states depend on the policy.
+    let prompt: Vec<u32> = (0..80).map(|i| (i * 3 % 200) as u32).collect();
+    let mut e = Engine::new_host("tiny", paged_cfg()).unwrap();
+    e.submit(prompt.clone(), 2, PolicySpec { name: "quoka".into(), budget: 32 }).unwrap();
+    e.run_to_completion().unwrap();
+    e.submit(prompt.clone(), 2, PolicySpec { name: "quoka".into(), budget: 16 }).unwrap();
+    let r = e.run_to_completion().unwrap().remove(0);
+    assert_eq!(r.cached_prefix_tokens, 0, "different budget ⇒ different namespace");
+    e.submit(prompt, 2, PolicySpec { name: "quoka".into(), budget: 32 }).unwrap();
+    let r2 = e.run_to_completion().unwrap().remove(0);
+    assert!(r2.cached_prefix_tokens > 0, "same namespace hits");
+}
+
+#[test]
 fn tcp_server_failure_injection() {
     let handle = serve(|| Engine::new_host("tiny", host_cfg()), "127.0.0.1:0").unwrap();
     let addr = handle.addr;
@@ -132,6 +191,7 @@ fn pjrt_engine_end_to_end_when_artifacts_exist() {
             pool_blocks: 512,
             block_tokens: 128,
             seed: 4,
+            ..EngineCfg::default()
         },
     )
     .unwrap();

@@ -1,0 +1,227 @@
+//! Property tests over the shared paged KV pool and its radix prefix
+//! cache: lease-layer conservation under refcounted sharing, longest-match
+//! lookup semantics, insert/evict invariants (never free a referenced
+//! page), and copy-on-write isolation.
+
+use quoka::coordinator::BlockAllocator;
+use quoka::kvpool::{policy_ns, KvPool, PoolCfg, RadixCache};
+use quoka::util::prop::{check, ensure, ensure_eq};
+use quoka::util::Rng;
+
+const BT: usize = 4;
+const TOTAL: usize = 64;
+
+fn setup() -> (RadixCache, KvPool, BlockAllocator) {
+    let cfg = PoolCfg { n_layers: 2, n_kv: 1, d: 2, block_tokens: BT, total_blocks: TOTAL };
+    (RadixCache::new(BT), KvPool::new(cfg), BlockAllocator::new(TOTAL, BT))
+}
+
+/// Random token sequence built over a small alphabet so generated prompts
+/// share prefixes often.
+fn gen_tokens(rng: &mut Rng, max_pages: usize) -> Vec<u32> {
+    let pages = 1 + rng.below(max_pages.max(1));
+    (0..pages * BT + rng.below(BT)).map(|_| rng.below(3) as u32).collect()
+}
+
+/// Conservation: `free + leased == total` on the lease layer no matter how
+/// sequences share, publish and release pages.
+fn check_conservation(
+    pool: &KvPool,
+    alloc: &BlockAllocator,
+    live: &[Vec<u32>],
+    radix: &RadixCache,
+) -> Result<(), String> {
+    ensure_eq(
+        alloc.free_blocks() + alloc.leased_blocks(),
+        alloc.total_blocks(),
+        "lease-layer conservation",
+    )?;
+    // Every page any sequence or the tree references is leased + owned.
+    for table in live {
+        for &b in table {
+            ensure(pool.refcount(b) > 0, format!("live table page {b} unowned"))?;
+        }
+    }
+    radix.validate(pool).map_err(|e| format!("radix invariant: {e}"))?;
+    Ok(())
+}
+
+#[test]
+fn radix_lookup_returns_longest_cached_prefix() {
+    check(
+        "radix-longest-match",
+        12,
+        |rng: &mut Rng, size| {
+            let n = 1 + rng.below(size.max(1));
+            let seqs: Vec<Vec<u32>> = (0..n).map(|_| gen_tokens(rng, 6)).collect();
+            (seqs, rng.next_u64())
+        },
+        |(seqs, seed)| {
+            let (mut radix, mut pool, mut alloc) = setup();
+            let ns = policy_ns("quoka", 64, 16);
+            let mut rng = Rng::new(*seed);
+            // Mirror of what the tree should contain: set of cached spans.
+            let mut inserted: Vec<Vec<u32>> = Vec::new();
+            let mut live: Vec<Vec<u32>> = Vec::new();
+            for toks in seqs {
+                // A "request": match, retain, lease the rest, run, publish.
+                let matched = radix.lookup(ns, toks);
+                let max_blocks = (toks.len().saturating_sub(1)) / BT;
+                ensure(matched.len() <= max_blocks, "never matches the whole prompt")?;
+                // Longest-match oracle: the match length must equal the
+                // longest inserted prefix of `toks` (capped).
+                let oracle = inserted
+                    .iter()
+                    .map(|ins| {
+                        let mut n = 0;
+                        while (n + 1) * BT <= ins.len().min(toks.len())
+                            && ins[..(n + 1) * BT] == toks[..(n + 1) * BT]
+                        {
+                            n += 1;
+                        }
+                        n
+                    })
+                    .max()
+                    .unwrap_or(0)
+                    .min(max_blocks);
+                ensure_eq(matched.len(), oracle, "longest-match length")?;
+                for &b in &matched {
+                    pool.retain(b);
+                }
+                let mut table = matched;
+                if !alloc.ensure(&mut table, toks.len()) {
+                    // Pool dry: give the pages back and skip this request.
+                    pool.release_seq(&mut table, &mut alloc);
+                    continue;
+                }
+                pool.adopt_new(&table);
+                let n_full = toks.len() / BT;
+                radix.insert(ns, &toks[..n_full * BT], &table[..n_full], &mut pool);
+                inserted.push(toks[..n_full * BT].to_vec());
+                if rng.below(2) == 0 {
+                    // Retire immediately.
+                    let mut t = table;
+                    pool.release_seq(&mut t, &mut alloc);
+                } else {
+                    live.push(table);
+                }
+                check_conservation(&pool, &alloc, &live, &radix)?;
+            }
+            // Drain survivors; tree references must keep pages leased.
+            for mut table in live.drain(..) {
+                pool.release_seq(&mut table, &mut alloc);
+            }
+            check_conservation(&pool, &alloc, &live, &radix)?;
+            ensure_eq(
+                alloc.leased_blocks(),
+                radix.cached_blocks(),
+                "after retiring every sequence, only tree pages stay leased",
+            )
+        },
+    );
+}
+
+#[test]
+fn eviction_never_frees_a_referenced_page_and_conserves() {
+    check(
+        "radix-evict-safety",
+        10,
+        |rng: &mut Rng, size| {
+            let n = 2 + rng.below(size.max(1));
+            let seqs: Vec<Vec<u32>> = (0..n).map(|_| gen_tokens(rng, 5)).collect();
+            (seqs, rng.next_u64())
+        },
+        |(seqs, seed)| {
+            let (mut radix, mut pool, mut alloc) = setup();
+            let ns = policy_ns("quoka", 32, 16);
+            let mut rng = Rng::new(*seed);
+            let mut live: Vec<Vec<u32>> = Vec::new();
+            for toks in seqs {
+                let matched = radix.lookup(ns, toks);
+                for &b in &matched {
+                    pool.retain(b);
+                }
+                let mut table = matched;
+                if !alloc.ensure(&mut table, toks.len()) {
+                    pool.release_seq(&mut table, &mut alloc);
+                    continue;
+                }
+                pool.adopt_new(&table);
+                let n_full = toks.len() / BT;
+                radix.insert(ns, &toks[..n_full * BT], &table[..n_full], &mut pool);
+                if rng.below(3) > 0 {
+                    live.push(table);
+                } else {
+                    let mut t = table;
+                    pool.release_seq(&mut t, &mut alloc);
+                }
+                // Random eviction pressure.
+                let want_free = rng.below(TOTAL + 1);
+                radix.evict_until(want_free, &mut pool, &mut alloc);
+                // Live tables must be fully intact (their pages owned).
+                check_conservation(&pool, &alloc, &live, &radix)?;
+            }
+            // Full-pressure eviction with everything released: the tree
+            // must be able to shed every leaf chain it exclusively owns.
+            for mut table in live.drain(..) {
+                pool.release_seq(&mut table, &mut alloc);
+            }
+            radix.evict_until(TOTAL, &mut pool, &mut alloc);
+            check_conservation(&pool, &alloc, &live, &radix)?;
+            ensure_eq(alloc.free_blocks(), TOTAL, "all pages evictable once unreferenced")?;
+            ensure_eq(radix.cached_blocks(), 0, "tree fully drained")
+        },
+    );
+}
+
+#[test]
+fn cow_isolates_writers_and_conserves_pages() {
+    check(
+        "pool-cow-isolation",
+        10,
+        |rng: &mut Rng, size| {
+            let pages = 1 + rng.below(size.max(1)).min(6);
+            let writes = 1 + rng.below(4);
+            (pages, writes, rng.next_u64())
+        },
+        |&(pages, writes, seed)| {
+            let (_, mut pool, mut alloc) = setup();
+            let mut rng = Rng::new(seed);
+            let t = pages * BT;
+            let mut owner = Vec::new();
+            ensure(alloc.ensure(&mut owner, t), "lease owner table")?;
+            pool.adopt_new(&owner);
+            let d = 2;
+            for l in 0..2 {
+                let kk = rng.normal_vec(t * d, 1.0);
+                let vv = rng.normal_vec(t * d, 1.0);
+                pool.append_chunk(&owner, l, 0, &kk, &vv, t);
+            }
+            let snapshot: Vec<Vec<f32>> =
+                (0..t).map(|i| pool.kv_view(&owner, t, 0).key(0, i).to_vec()).collect();
+            // Sharer references every page (radix-style sharing).
+            let mut sharer = owner.clone();
+            for &b in &sharer {
+                pool.retain(b);
+            }
+            for _ in 0..writes {
+                let pos = rng.below(t);
+                pool.make_writable(&mut sharer, pos, 1, &mut alloc)
+                    .map_err(|e| e.to_string())?;
+                let kk = rng.normal_vec(d, 1.0);
+                let vv = rng.normal_vec(d, 1.0);
+                pool.append_chunk(&sharer, 0, pos, &kk, &vv, 1);
+            }
+            // The owner's view is bit-identical to the pre-share snapshot.
+            for (i, row) in snapshot.iter().enumerate() {
+                ensure(
+                    pool.kv_view(&owner, t, 0).key(0, i) == &row[..],
+                    format!("owner row {i} mutated through sharer writes"),
+                )?;
+            }
+            pool.release_seq(&mut owner, &mut alloc);
+            pool.release_seq(&mut sharer, &mut alloc);
+            ensure_eq(alloc.free_blocks(), TOTAL, "all pages returned after COW traffic")
+        },
+    );
+}

@@ -1,18 +1,26 @@
 #!/usr/bin/env bash
-# Hot-path perf smoke: runs `cargo bench --bench micro_hotpath` in the
-# reduced configuration (one 16k-token cache, GQA 32q/8kv, d=128, QUOKA
-# budget ≈ 12 % of T, 3 measured iters) and writes BENCH_hotpath.json at
-# the repo root — one entry per measured piece with keys `config`,
-# `wall-ns`, `GFLOP/s` — so the perf trajectory is tracked PR over PR.
+# Perf smoke benches, run PR over PR:
+#
+# 1. Hot path: `cargo bench --bench micro_hotpath` in the reduced
+#    configuration (one 16k-token cache, GQA 32q/8kv, d=128, QUOKA budget
+#    ≈ 12 % of T, 3 measured iters) → BENCH_hotpath.json at the repo root
+#    (one entry per measured piece: `config`, `wall-ns`, `GFLOP/s`).
+# 2. Shared-prefix serving: `cargo bench --bench prefix_serving` — 8
+#    requests sharing a 12k-token prefix over the paged KV pool, radix
+#    prefix cache on/off → BENCH_prefix.json (prefix-hit rate, TTFT
+#    with/without the cache, prefill tokens, KV bytes saved).
 #
 # Usage: scripts/bench_smoke.sh
-#   BENCH_OUT=/path/to.json  override the output location
+#   BENCH_OUT=/path/to.json   override the hot-path output location
+#   PREFIX_OUT=/path/to.json  override the prefix-serving output location
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export BENCH_SMOKE=1
 export BENCH_OUT="${BENCH_OUT:-$PWD/BENCH_hotpath.json}"
+export PREFIX_OUT="${PREFIX_OUT:-$PWD/BENCH_prefix.json}"
 
 cargo bench --manifest-path rust/Cargo.toml --bench micro_hotpath
+cargo bench --manifest-path rust/Cargo.toml --bench prefix_serving
 
-echo "bench_smoke: wrote $BENCH_OUT"
+echo "bench_smoke: wrote $BENCH_OUT and $PREFIX_OUT"
