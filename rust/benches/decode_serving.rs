@@ -1,0 +1,5 @@
+//! `cargo bench --bench decode_serving` — batched-vs-serial decode
+//! throughput at 8 concurrent sequences (writes BENCH_decode.json).
+fn main() {
+    quoka::bench::decode::decode_serving();
+}

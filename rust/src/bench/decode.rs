@@ -1,0 +1,169 @@
+//! Decode-serving benchmark: the GEMM-batched decode path against the
+//! serial per-sequence loop it replaced.
+//!
+//! Eight sequences prefill a shared-length prompt, then decode 64 steps
+//! each. The *serial* arm drives them one at a time (`B = 1` batches —
+//! exactly the pre-batching engine behaviour: every weight matrix streams
+//! through the caches once per sequence per token, plus a logits GEMV per
+//! token). The *batched* arm runs all eight through one
+//! `forward_decode_batch` per step, so weights stream once per step and
+//! the logits head is a single `[B, d_model] × [d_model, vocab]` GEMM with
+//! fused argmax. Both arms produce bit-identical tokens (asserted); the
+//! difference is pure memory-bandwidth amortization. Writes
+//! `BENCH_decode.json` (override with `DECODE_OUT`) so the decode
+//! trajectory is tracked PR over PR.
+
+use super::banner;
+use crate::model::{DecodeKv, DecodeSeq, HostModel, ModelConfig, SeqState, Weights};
+use crate::select::{policy_by_name, SelectCtx};
+use crate::util::Json;
+
+const N_SEQS: usize = 8;
+const DECODE_STEPS: usize = 64;
+const BUDGET: usize = 128;
+const POLICY: &str = "quoka";
+
+fn prompt(len: usize, vocab: usize, salt: u64) -> Vec<u32> {
+    (0..len).map(|i| ((i as u64 * 131 + salt * 977) % (vocab as u64 - 1) + 1) as u32).collect()
+}
+
+/// Prefill `N_SEQS` private sequences and return their states plus each
+/// sequence's first decode input token.
+fn prefilled(
+    model: &HostModel,
+    prompt_len: usize,
+    ctx: &mut SelectCtx,
+) -> (Vec<SeqState>, Vec<u32>) {
+    let cfg = model.cfg();
+    let policy = policy_by_name(POLICY).unwrap();
+    let mut states = Vec::with_capacity(N_SEQS);
+    let mut last = Vec::with_capacity(N_SEQS);
+    for i in 0..N_SEQS {
+        let toks = prompt(prompt_len, cfg.vocab, i as u64);
+        let mut st = SeqState::new(cfg);
+        let mut h = Vec::new();
+        for chunk in toks.chunks(256) {
+            h = model.forward_chunk(&mut st, chunk, policy.as_ref(), BUDGET, ctx);
+        }
+        last.push(model.greedy_next(&h));
+        states.push(st);
+    }
+    (states, last)
+}
+
+/// The decode-throughput benchmark (see module docs). Returns the
+/// serial-vs-batched speedup.
+pub fn decode_serving() -> f64 {
+    banner(
+        "decode_serving",
+        "§Serving decode phase",
+        "8 concurrent sequences × 64 decode steps: serial (B=1) vs one fused batch per step.",
+    );
+    let prompt_len = if super::full_mode() { 4096 } else { 512 };
+    let cfg = ModelConfig::serve_small();
+    let model = HostModel::new(Weights::generate(&cfg, 7));
+    let policy = policy_by_name(POLICY).unwrap();
+
+    // ---- serial arm: one B=1 forward per sequence per step ----
+    let mut ctx = SelectCtx::new(0);
+    let (mut states, mut last) = prefilled(&model, prompt_len, &mut ctx);
+    let t0 = std::time::Instant::now();
+    let mut serial_tokens: Vec<Vec<u32>> = vec![Vec::new(); N_SEQS];
+    for _ in 0..DECODE_STEPS {
+        for (i, st) in states.iter_mut().enumerate() {
+            ctx.begin_step();
+            let mut one = [DecodeSeq {
+                kv: DecodeKv::Private(st),
+                token: last[i],
+                policy: policy.as_ref(),
+                budget: BUDGET,
+            }];
+            let next = model.forward_decode_batch(&mut one, None, &mut ctx);
+            last[i] = next[0];
+            serial_tokens[i].push(next[0]);
+        }
+    }
+    let serial_s = t0.elapsed().as_secs_f64();
+
+    // ---- batched arm: one fused forward for all sequences per step ----
+    let mut ctx = SelectCtx::new(0);
+    let (mut states, mut last) = prefilled(&model, prompt_len, &mut ctx);
+    let t0 = std::time::Instant::now();
+    let mut batched_tokens: Vec<Vec<u32>> = vec![Vec::new(); N_SEQS];
+    for _ in 0..DECODE_STEPS {
+        ctx.begin_step();
+        let mut batch: Vec<DecodeSeq> = states
+            .iter_mut()
+            .zip(&last)
+            .map(|(st, &tok)| DecodeSeq {
+                kv: DecodeKv::Private(st),
+                token: tok,
+                policy: policy.as_ref(),
+                budget: BUDGET,
+            })
+            .collect();
+        let next = model.forward_decode_batch(&mut batch, None, &mut ctx);
+        drop(batch);
+        for (i, &tok) in next.iter().enumerate() {
+            last[i] = tok;
+            batched_tokens[i].push(tok);
+        }
+    }
+    let batched_s = t0.elapsed().as_secs_f64();
+
+    assert_eq!(
+        serial_tokens, batched_tokens,
+        "batched decode must generate exactly the serial tokens"
+    );
+
+    let total_tokens = (N_SEQS * DECODE_STEPS) as f64;
+    let serial_tps = total_tokens / serial_s;
+    let batched_tps = total_tokens / batched_s;
+    let speedup = serial_s / batched_s;
+
+    let mut table = crate::util::timing::Table::new(&[
+        "decode path",
+        "wall s",
+        "tokens/s",
+        "speedup",
+    ]);
+    table.row(vec![
+        "serial (B=1 loop)".into(),
+        format!("{serial_s:.3}"),
+        format!("{serial_tps:.1}"),
+        "1.00".into(),
+    ]);
+    table.row(vec![
+        "batched (1 fused fwd/step)".into(),
+        format!("{batched_s:.3}"),
+        format!("{batched_tps:.1}"),
+        format!("{speedup:.2}"),
+    ]);
+    table.print();
+    println!(
+        "expected shape: >= 2x at {N_SEQS} sequences — weights stream once per step \
+         instead of once per sequence, logits collapse to one GEMM\n"
+    );
+
+    let out_path =
+        std::env::var("DECODE_OUT").unwrap_or_else(|_| "BENCH_decode.json".to_string());
+    let config = format!(
+        "seqs={N_SEQS} decode_steps={DECODE_STEPS} prompt={prompt_len} policy={POLICY} \
+         budget={BUDGET} preset={}",
+        cfg.name
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::str("decode_serving")),
+        ("config", Json::str(config)),
+        ("serial-tok-s", Json::num(serial_tps)),
+        ("batched-tok-s", Json::num(batched_tps)),
+        ("speedup", Json::num(speedup)),
+        ("serial-wall-s", Json::num(serial_s)),
+        ("batched-wall-s", Json::num(batched_s)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+    speedup
+}

@@ -7,6 +7,7 @@
 pub mod tables;
 pub mod latency;
 pub mod prefix;
+pub mod decode;
 
 pub use crate::util::timing::{bench, heatmap, BenchCfg, Stats, Table};
 

@@ -25,7 +25,12 @@ fn mk_engine(prefix_cache: bool) -> Engine {
     Engine::new_host(
         "tiny",
         EngineCfg {
-            sched: SchedCfg { b_cp: 256, step_tokens: 512, max_running: N_REQUESTS },
+            sched: SchedCfg {
+                b_cp: 256,
+                step_tokens: 512,
+                max_running: N_REQUESTS,
+                ..SchedCfg::default()
+            },
             pool_blocks: 2048,
             block_tokens: BLOCK_TOKENS,
             seed: 11,

@@ -13,7 +13,7 @@ use super::metrics::Metrics;
 use super::request::{Phase, PolicySpec, Request, RequestResult, SeqEntry};
 use super::scheduler::{SchedCfg, Scheduler, WorkItem};
 use crate::kvpool::{policy_ns, KvPool, PoolCfg, RadixCache};
-use crate::model::{HostModel, ModelConfig, SeqState, Weights};
+use crate::model::{DecodeKv, DecodeSeq, HostModel, ModelConfig, SeqState, Weights};
 use crate::runtime::exec::{AttnMode, PjrtBackend, PjrtSeq};
 use crate::select::{SelectCtx, SelectionPolicy};
 use anyhow::{Context, Result};
@@ -110,7 +110,13 @@ impl Engine {
         Ok(Self::with_backend(Backend::Pjrt(Box::new(be)), cfg))
     }
 
-    pub fn with_backend(backend: Backend, cfg: EngineCfg) -> Engine {
+    pub fn with_backend(backend: Backend, mut cfg: EngineCfg) -> Engine {
+        // Prefix-cache mode publishes KV pages: pin chunk boundaries to
+        // the prompt (never truncated by step-budget pressure) so cached
+        // KV is bit-identical to a cold serial recompute under any load.
+        if matches!(cfg.kv, KvLayout::Paged { prefix_cache: true }) {
+            cfg.sched.deterministic_chunks = true;
+        }
         let pool = match cfg.kv {
             KvLayout::Private => None,
             KvLayout::Paged { .. } => {
@@ -287,20 +293,33 @@ impl Engine {
         }
 
         let t0 = Instant::now();
-        let (mut prefill_toks, mut decode_toks) = (0usize, 0usize);
-        for item in &plan.items {
-            match *item {
-                WorkItem::PrefillChunk { id, start, len } => {
-                    self.run_prefill(id, start, len)?;
-                    prefill_toks += len;
-                }
-                WorkItem::Decode { id } => {
-                    self.run_decode(id)?;
-                    decode_toks += 1;
-                }
+        let mut prefill_toks = 0usize;
+        // All decode items of the step run as ONE batched forward pass:
+        // weights stream once per step regardless of decode concurrency.
+        let decode_ids: Vec<u64> = plan
+            .items
+            .iter()
+            .filter_map(|it| match it {
+                WorkItem::Decode { id } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        let mut fused_decode = None;
+        if !decode_ids.is_empty() {
+            let td = Instant::now();
+            let fused = self.run_decode_batch(&decode_ids)?;
+            if fused {
+                fused_decode = Some(td.elapsed());
             }
         }
-        self.metrics.record_step(t0.elapsed(), prefill_toks, decode_toks);
+        for item in &plan.items {
+            if let WorkItem::PrefillChunk { id, start, len } = *item {
+                self.run_prefill(id, start, len)?;
+                prefill_toks += len;
+            }
+        }
+        self.metrics
+            .record_step(t0.elapsed(), prefill_toks, decode_ids.len(), fused_decode);
         if let Some(pool) = &self.pool {
             self.metrics.pool_resident_bytes =
                 pool.resident_bytes(self.blocks.leased_blocks());
@@ -383,8 +402,8 @@ impl Engine {
             let back = self.backs.get_mut(&id).unwrap();
             let first = match (&mut self.backend, back) {
                 (Backend::Host(m), SeqBack::Host { last_hidden, .. }) => {
-                    let logits = m.logits(last_hidden);
-                    crate::tensor::ops::topk_indices(&logits, 1)[0] as u32
+                    // Fused GEMV+argmax: no per-token vocab materialization.
+                    m.greedy_next(last_hidden)
                 }
                 (Backend::Pjrt(b), SeqBack::Pjrt { last_hidden, .. }) => {
                     let logits = b.logits(last_hidden)?;
@@ -481,8 +500,7 @@ impl Engine {
             let back = self.backs.get_mut(&id).unwrap();
             let first = match (&mut self.backend, back) {
                 (Backend::Host(m), SeqBack::HostPaged { last_hidden, .. }) => {
-                    let logits = m.logits(last_hidden);
-                    crate::tensor::ops::topk_indices(&logits, 1)[0] as u32
+                    m.greedy_next(last_hidden)
                 }
                 _ => unreachable!(),
             };
@@ -501,77 +519,141 @@ impl Engine {
         Ok(())
     }
 
-    /// One decode step through the shared paged pool.
-    fn run_decode_paged(&mut self, id: u64) -> Result<()> {
-        let entry = self.seqs.get_mut(&id).context("unknown seq")?;
-        let spec = entry.req.policy.clone();
-        let last_tok = *entry.generated.last().context("decode before first token")?;
-        let need = entry.cache_tokens() + 1;
-        let mut blocks = std::mem::take(&mut entry.blocks);
-        // Grow the lease for the new token (admission reserved max_new up
-        // front, so this normally no-ops); if the free list is dry, shed
-        // cold prefix-cache pages before giving up.
-        let mut ok = self.blocks.ensure(&mut blocks, need);
-        if !ok {
-            if let (Some(pool), Some(radix)) = (self.pool.as_mut(), self.radix.as_mut()) {
-                let missing = self.blocks.blocks_for(need).saturating_sub(blocks.len());
-                radix.evict_until(missing, pool, &mut self.blocks);
-            }
-            ok = self.blocks.ensure(&mut blocks, need);
+    /// Execute every decode item of the step as **one** batched forward:
+    /// per-sequence KV leases are grown (and, in paged mode, COW-guarded)
+    /// in a pre-pass, then the whole batch runs through
+    /// [`HostModel::forward_decode_batch`] — a single pass per layer over
+    /// all `B` rows plus one fused logits GEMM+argmax. This is the only
+    /// decode implementation; B = 1 is just a batch of one. The PJRT
+    /// backend replays its compiled single-token artifact per sequence
+    /// (compiled HLO has a fixed batch shape), but goes through the same
+    /// entry point and accounting. Returns whether the fused host batch
+    /// ran (false for the PJRT serial fallback, so the metrics histogram
+    /// only reports real batching).
+    fn run_decode_batch(&mut self, ids: &[u64]) -> Result<bool> {
+        if ids.is_empty() {
+            return Ok(false);
         }
-        let pool = self.pool.as_mut().expect("paged decode without a pool");
-        pool.adopt_new(&blocks);
-        if !ok {
-            self.seqs.get_mut(&id).unwrap().blocks = blocks;
-            anyhow::bail!("KV pool exhausted mid-decode (seq {id})");
+        if matches!(self.backend, Backend::Pjrt(_)) {
+            for &id in ids {
+                self.run_decode_pjrt(id)?;
+            }
+            return Ok(false);
+        }
+        let paged = self.pool.is_some();
+
+        // ---- pre-pass: grow each sequence's lease for its new token ----
+        for &id in ids {
+            let entry = self.seqs.get_mut(&id).context("unknown seq")?;
+            let need = entry.cache_tokens() + 1;
+            let mut lease = std::mem::take(&mut entry.blocks);
+            // Admission reserved max_new up front, so this normally
+            // no-ops; in paged mode a dry free list sheds cold
+            // prefix-cache pages before giving up.
+            let mut ok = self.blocks.ensure(&mut lease, need);
+            if !ok {
+                if let (Some(pool), Some(radix)) = (self.pool.as_mut(), self.radix.as_mut()) {
+                    let missing = self.blocks.blocks_for(need).saturating_sub(lease.len());
+                    radix.evict_until(missing, pool, &mut self.blocks);
+                }
+                ok = self.blocks.ensure(&mut lease, need);
+            }
+            if let Some(pool) = self.pool.as_mut() {
+                pool.adopt_new(&lease);
+            }
+            self.seqs.get_mut(&id).unwrap().blocks = lease;
+            anyhow::ensure!(ok, "KV pool exhausted mid-decode (seq {id})");
+            if paged {
+                // The pool cursor, not `need - 1`: `cache_tokens()` already
+                // counts the sampled-but-not-yet-appended token.
+                let pos = match self.backs.get(&id) {
+                    Some(SeqBack::HostPaged { len, .. }) => *len,
+                    _ => unreachable!("paged mode requires HostPaged state"),
+                };
+                debug_assert!(pos + 1 <= need, "decode cursor ahead of reservation");
+                let mut blocks = std::mem::take(&mut self.seqs.get_mut(&id).unwrap().blocks);
+                let res = self.pool.as_mut().unwrap().make_writable(
+                    &mut blocks,
+                    pos,
+                    1,
+                    &mut self.blocks,
+                );
+                // Restore the (still leased) table before any propagation,
+                // or its pages leak for the engine's lifetime.
+                self.seqs.get_mut(&id).unwrap().blocks = blocks;
+                res?;
+            }
         }
 
-        let back = self.backs.get_mut(&id).context("missing backend state")?;
-        let ta = Instant::now();
-        let next = {
-            let (m, seq_len) = match (&mut self.backend, back) {
-                (Backend::Host(m), SeqBack::HostPaged { len, .. }) => (m, len),
-                _ => unreachable!("paged mode requires the host backend"),
+        // ---- assemble the batch ----
+        let specs: Vec<PolicySpec> =
+            ids.iter().map(|id| self.seqs[id].req.policy.clone()).collect();
+        let mut last_toks: Vec<u32> = Vec::with_capacity(ids.len());
+        for id in ids {
+            last_toks
+                .push(*self.seqs[id].generated.last().context("decode before first token")?);
+        }
+        // SeqBack slots come out of the map so the batch can hold B
+        // simultaneous mutable borrows of their SeqStates.
+        let mut taken: Vec<SeqBack> = ids
+            .iter()
+            .map(|id| self.backs.remove(id).expect("missing backend state"))
+            .collect();
+        let mut batch: Vec<DecodeSeq<'_>> = Vec::with_capacity(ids.len());
+        for (i, back) in taken.iter_mut().enumerate() {
+            let id = ids[i];
+            let last_tok = last_toks[i];
+            let kv = if paged {
+                let pos = match back {
+                    SeqBack::HostPaged { len, .. } => *len,
+                    _ => unreachable!("paged mode requires HostPaged state"),
+                };
+                DecodeKv::Paged { blocks: &self.seqs[&id].blocks, pos }
+            } else {
+                match back {
+                    SeqBack::Host { state, .. } => DecodeKv::Private(state),
+                    _ => unreachable!("private host decode requires Host state"),
+                }
             };
-            // The pool cursor, not `need - 1`: `cache_tokens()` already
-            // counts the sampled-but-not-yet-appended token.
-            let pos = *seq_len;
-            debug_assert!(pos + 1 <= need, "decode cursor ahead of reservation");
-            if let Err(e) = pool.make_writable(&mut blocks, pos, 1, &mut self.blocks) {
-                // Restore the table before propagating (see prefill path).
-                self.seqs.get_mut(&id).unwrap().blocks = blocks;
-                return Err(e);
-            }
-            self.ctx.begin_step();
-            let policy = self.policies.get(&spec.name).unwrap();
-            let hidden = m.forward_chunk_paged(
-                pool,
-                &blocks,
-                pos,
-                &[last_tok],
-                policy.as_ref(),
-                spec.budget,
-                &mut self.ctx,
-            );
-            *seq_len = pos + 1;
-            m.greedy_next(&hidden)
+            batch.push(DecodeSeq {
+                kv,
+                token: last_tok,
+                policy: self.policies.get(&specs[i].name).unwrap().as_ref(),
+                budget: specs[i].budget,
+            });
+        }
+
+        // ---- one fused forward for the whole batch ----
+        let ta = Instant::now();
+        self.ctx.begin_step();
+        let model = match &self.backend {
+            Backend::Host(m) => m,
+            Backend::Pjrt(_) => unreachable!("handled above"),
         };
+        let next = model.forward_decode_batch(&mut batch, self.pool.as_mut(), &mut self.ctx);
+        drop(batch);
         self.metrics.attention_s += ta.elapsed().as_secs_f64();
 
-        let entry = self.seqs.get_mut(&id).unwrap();
-        entry.blocks = blocks;
-        entry.generated.push(next);
-        if entry.generated.len() >= entry.req.max_new_tokens {
-            entry.phase = Phase::Finished;
-            entry.finished_at = Some(Instant::now());
+        // ---- post: reinsert state, advance cursors, record tokens ----
+        for (i, mut back) in taken.into_iter().enumerate() {
+            let id = ids[i];
+            if let SeqBack::HostPaged { len, .. } = &mut back {
+                *len += 1;
+            }
+            self.backs.insert(id, back);
+            let entry = self.seqs.get_mut(&id).unwrap();
+            entry.generated.push(next[i]);
+            if entry.generated.len() >= entry.req.max_new_tokens {
+                entry.phase = Phase::Finished;
+                entry.finished_at = Some(Instant::now());
+            }
         }
-        Ok(())
+        Ok(true)
     }
 
-    fn run_decode(&mut self, id: u64) -> Result<()> {
-        if self.pool.is_some() {
-            return self.run_decode_paged(id);
-        }
+    /// One PJRT decode step (compiled artifacts have a fixed single-token
+    /// batch shape; the host backend is the batched path).
+    fn run_decode_pjrt(&mut self, id: u64) -> Result<()> {
         let entry = self.seqs.get_mut(&id).context("unknown seq")?;
         let spec = entry.req.policy.clone();
         let last_tok = *entry.generated.last().context("decode before first token")?;
@@ -587,19 +669,12 @@ impl Engine {
         let back = self.backs.get_mut(&id).context("missing backend state")?;
         let ta = Instant::now();
         let next = match (&mut self.backend, back) {
-            (Backend::Host(m), SeqBack::Host { state, .. }) => {
-                self.ctx.begin_step();
-                let policy = self.policies.get(&spec.name).unwrap();
-                let hidden =
-                    m.forward_chunk(state, &[last_tok], policy.as_ref(), spec.budget, &mut self.ctx);
-                m.greedy_next(&hidden)
-            }
             (Backend::Pjrt(b), SeqBack::Pjrt { state, .. }) => {
                 let mode = if spec.name == "dense" { AttnMode::Dense } else { AttnMode::Quoka };
                 let (next, _) = b.decode_step(state, last_tok, mode)?;
                 next
             }
-            _ => unreachable!(),
+            _ => unreachable!("run_decode_pjrt requires the pjrt backend"),
         };
         self.metrics.attention_s += ta.elapsed().as_secs_f64();
 
@@ -621,7 +696,7 @@ mod tests {
         Engine::new_host(
             "tiny",
             EngineCfg {
-                sched: SchedCfg { b_cp: 16, step_tokens: 48, max_running: 4 },
+                sched: SchedCfg { b_cp: 16, step_tokens: 48, max_running: 4, ..SchedCfg::default() },
                 pool_blocks: 64,
                 block_tokens: 16,
                 seed: 1,
@@ -635,7 +710,7 @@ mod tests {
         Engine::new_host(
             "tiny",
             EngineCfg {
-                sched: SchedCfg { b_cp: 16, step_tokens: 48, max_running: 4 },
+                sched: SchedCfg { b_cp: 16, step_tokens: 48, max_running: 4, ..SchedCfg::default() },
                 pool_blocks: 64,
                 block_tokens: 16,
                 seed: 1,
@@ -727,7 +802,7 @@ mod tests {
         let mut e = Engine::new_host(
             "tiny",
             EngineCfg {
-                sched: SchedCfg { b_cp: 16, step_tokens: 64, max_running: 8 },
+                sched: SchedCfg { b_cp: 16, step_tokens: 64, max_running: 8, ..SchedCfg::default() },
                 pool_blocks: 4, // 64 tokens of capacity
                 block_tokens: 16,
                 seed: 1,
@@ -794,7 +869,7 @@ mod tests {
         let mut e = Engine::new_host(
             "tiny",
             EngineCfg {
-                sched: SchedCfg { b_cp: 16, step_tokens: 48, max_running: 4 },
+                sched: SchedCfg { b_cp: 16, step_tokens: 48, max_running: 4, ..SchedCfg::default() },
                 pool_blocks: 4, // 64-token capacity
                 block_tokens: 16,
                 seed: 1,

@@ -14,6 +14,18 @@ pub struct Metrics {
     pub attention_s: f64,
     /// Wall time of whole engine steps, seconds.
     pub step_s: f64,
+    /// Wall time of the engine's decode phase, seconds — the whole
+    /// batched path per step (lease growth / eviction / COW pre-pass,
+    /// batch assembly, the fused forward, and per-sequence bookkeeping),
+    /// not just the kernel. The denominator of
+    /// [`Metrics::decode_tokens_per_s`]; `BENCH_decode.json` times the
+    /// forward alone, so its tokens/sec reads slightly higher.
+    pub decode_s: f64,
+    /// Decode batch-size histogram: `decode_batch_hist[b]` counts engine
+    /// steps whose decode phase ran `b` sequences through one fused
+    /// forward (index 0 unused; grown on demand). The batching win shows
+    /// up here as mass above index 1.
+    pub decode_batch_hist: Vec<u64>,
     /// Sum of per-request TTFT / TPOT for averaging.
     pub ttft_sum_s: f64,
     pub tpot_sum_s: f64,
@@ -35,11 +47,31 @@ pub struct Metrics {
 }
 
 impl Metrics {
-    pub fn record_step(&mut self, dur: Duration, prefill: usize, decode: usize) {
+    /// Record one engine step: total wall time, token counts, and — when
+    /// the decode phase ran as one fused forward — its batch size and
+    /// duration. `fused_decode` is `None` for backends that fall back to a
+    /// serial per-sequence decode loop (PJRT), so the histogram only ever
+    /// reports real batching.
+    pub fn record_step(
+        &mut self,
+        dur: Duration,
+        prefill: usize,
+        decode: usize,
+        fused_decode: Option<Duration>,
+    ) {
         self.steps += 1;
         self.step_s += dur.as_secs_f64();
         self.prefill_tokens += prefill as u64;
         self.decode_tokens += decode as u64;
+        if decode > 0 {
+            if let Some(decode_dur) = fused_decode {
+                self.decode_s += decode_dur.as_secs_f64();
+                if self.decode_batch_hist.len() <= decode {
+                    self.decode_batch_hist.resize(decode + 1, 0);
+                }
+                self.decode_batch_hist[decode] += 1;
+            }
+        }
     }
 
     pub fn record_finish(&mut self, ttft_s: f64, tpot_s: f64, had_tpot: bool) {
@@ -96,6 +128,28 @@ impl Metrics {
         }
     }
 
+    /// Decode throughput: generated tokens per second of decode-phase
+    /// time (see [`Metrics::decode_s`] for what the span covers).
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        if self.decode_s == 0.0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / self.decode_s
+        }
+    }
+
+    /// Compact `size:count` rendering of the decode batch histogram
+    /// (zero-count sizes omitted), e.g. `1:3 8:40`.
+    pub fn decode_batch_hist_compact(&self) -> String {
+        self.decode_batch_hist
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(b, c)| format!("{b}:{c}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
     pub fn summary(&self) -> String {
         let mut s = format!(
             "steps={} prefill_tok={} decode_tok={} finished={} \
@@ -110,6 +164,13 @@ impl Metrics {
             self.tokens_per_s(),
             if self.step_s > 0.0 { 100.0 * self.attention_s / self.step_s } else { 0.0 },
         );
+        if self.decode_s > 0.0 {
+            s.push_str(&format!(
+                " decode_tok/s={:.0} decode_batch_hist=[{}]",
+                self.decode_tokens_per_s(),
+                self.decode_batch_hist_compact(),
+            ));
+        }
         if self.prefix_lookups > 0 {
             s.push_str(&format!(
                 " prefix_hit_rate={:.1}% prefix_tok_reused={} kv_bytes_saved={}",
@@ -129,8 +190,8 @@ mod tests {
     #[test]
     fn aggregates() {
         let mut m = Metrics::default();
-        m.record_step(Duration::from_millis(100), 128, 2);
-        m.record_step(Duration::from_millis(100), 0, 4);
+        m.record_step(Duration::from_millis(100), 128, 2, Some(Duration::from_millis(10)));
+        m.record_step(Duration::from_millis(100), 0, 4, Some(Duration::from_millis(10)));
         m.record_finish(0.5, 0.01, true);
         m.record_finish(0.3, 0.0, false);
         assert_eq!(m.prefill_tokens, 128);
@@ -139,5 +200,31 @@ mod tests {
         assert!((m.mean_tpot_s() - 0.01).abs() < 1e-9);
         assert!((m.tokens_per_s() - 670.0).abs() < 1.0);
         assert!(m.summary().contains("finished=2"));
+    }
+
+    #[test]
+    fn decode_batch_histogram_and_throughput() {
+        let mut m = Metrics::default();
+        m.record_step(Duration::from_millis(20), 64, 0, None);
+        m.record_step(Duration::from_millis(20), 0, 1, Some(Duration::from_millis(5)));
+        m.record_step(Duration::from_millis(20), 0, 8, Some(Duration::from_millis(15)));
+        m.record_step(Duration::from_millis(20), 16, 8, Some(Duration::from_millis(15)));
+        assert_eq!(m.decode_tokens, 17);
+        assert_eq!(m.decode_batch_hist[1], 1);
+        assert_eq!(m.decode_batch_hist[8], 2);
+        assert_eq!(m.decode_batch_hist_compact(), "1:1 8:2");
+        assert!((m.decode_s - 0.035).abs() < 1e-9);
+        assert!((m.decode_tokens_per_s() - 17.0 / 0.035).abs() < 1e-6);
+        let s = m.summary();
+        assert!(s.contains("decode_tok/s="), "{s}");
+        assert!(s.contains("decode_batch_hist=[1:1 8:2]"), "{s}");
+
+        // A serial decode fallback (PJRT) still counts tokens but must not
+        // claim a fused batch in the histogram or the summary.
+        let mut p = Metrics::default();
+        p.record_step(Duration::from_millis(20), 0, 8, None);
+        assert_eq!(p.decode_tokens, 8);
+        assert!(p.decode_batch_hist.is_empty());
+        assert!(!p.summary().contains("decode_batch_hist"), "{}", p.summary());
     }
 }

@@ -21,11 +21,19 @@ pub struct SchedCfg {
     pub step_tokens: usize,
     /// Max concurrently running sequences.
     pub max_running: usize,
+    /// Never schedule a prefill chunk truncated below `b_cp` by step-budget
+    /// pressure — defer it to a later step instead (a prompt's final short
+    /// tail still runs). Chunk boundaries then depend only on the prompt,
+    /// not on concurrent load, so the KV a sparse policy publishes to the
+    /// prefix cache is bit-identical to a cold serial recompute. The
+    /// engine enables this in paged + prefix-cache mode, where sequences
+    /// publish pages.
+    pub deterministic_chunks: bool,
 }
 
 impl Default for SchedCfg {
     fn default() -> Self {
-        SchedCfg { b_cp: 128, step_tokens: 256, max_running: 8 }
+        SchedCfg { b_cp: 128, step_tokens: 256, max_running: 8, deterministic_chunks: false }
     }
 }
 
@@ -123,7 +131,31 @@ impl Scheduler {
                 if remaining == 0 {
                     continue;
                 }
-                let len = remaining.min(self.cfg.b_cp).min(budget);
+                let want = remaining.min(self.cfg.b_cp);
+                let len = if self.cfg.deterministic_chunks {
+                    // Deterministic boundaries: the chunk width is a pure
+                    // function of the scheduler config — never of how
+                    // loaded this particular step happened to be. A chunk
+                    // the current budget cannot hold at full width is
+                    // deferred to a later step, not truncated
+                    // (cache-published KV must match a cold serial
+                    // recompute bit for bit). The width caps at
+                    // `step_tokens - (max_running - 1)`: decodes (at most
+                    // one per running sequence, minus the slot this
+                    // prefiller occupies) are scheduled first, so a full
+                    // step ALWAYS has room for the first prefill
+                    // candidate at this width — deferral can delay a
+                    // chunk, never starve it.
+                    let headroom =
+                        self.cfg.step_tokens.saturating_sub(self.cfg.max_running - 1).max(1);
+                    let det_len = want.min(headroom);
+                    if budget < det_len {
+                        continue;
+                    }
+                    det_len
+                } else {
+                    want.min(budget)
+                };
                 plan.items.push(WorkItem::PrefillChunk { id, start: next, len });
                 budget -= len;
             }
@@ -172,7 +204,12 @@ mod tests {
     fn decode_scheduled_before_prefill() {
         let mut seqs = HashMap::new();
         let mut blocks = BlockAllocator::new(64, 128);
-        let mut s = Scheduler::new(SchedCfg { b_cp: 128, step_tokens: 160, max_running: 4 });
+        let mut s = Scheduler::new(SchedCfg {
+            b_cp: 128,
+            step_tokens: 160,
+            max_running: 4,
+            ..SchedCfg::default()
+        });
         mk(&mut seqs, 1, 512, 4);
         mk(&mut seqs, 2, 512, 4);
         s.enqueue(1);
@@ -190,7 +227,7 @@ mod tests {
     fn step_token_budget_respected() {
         let mut seqs = HashMap::new();
         let mut blocks = BlockAllocator::new(64, 128);
-        let cfg = SchedCfg { b_cp: 128, step_tokens: 200, max_running: 8 };
+        let cfg = SchedCfg { b_cp: 128, step_tokens: 200, max_running: 8, ..SchedCfg::default() };
         let mut s = Scheduler::new(cfg);
         for id in 1..=4 {
             mk(&mut seqs, id, 1000, 4);
@@ -221,6 +258,76 @@ mod tests {
         seqs.get_mut(&1).unwrap().phase = Phase::Prefill { next: 128 };
         let p2 = s.plan(&mut seqs, &mut blocks);
         assert_eq!(p2.items[0], WorkItem::PrefillChunk { id: 1, start: 128, len: 2 });
+    }
+
+    #[test]
+    fn deterministic_chunks_defer_instead_of_truncate() {
+        // Budget 40, b_cp 16, two full-width prefills fit (32), the third
+        // would be truncated to 8 — with deterministic_chunks it must wait
+        // for a later step instead.
+        let mut seqs = HashMap::new();
+        let mut blocks = BlockAllocator::new(64, 16);
+        let cfg = SchedCfg { b_cp: 16, step_tokens: 40, max_running: 4, deterministic_chunks: true };
+        let mut s = Scheduler::new(cfg);
+        for id in 1..=3 {
+            mk(&mut seqs, id, 64, 2);
+            s.enqueue(id);
+        }
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(
+            plan.items,
+            vec![
+                WorkItem::PrefillChunk { id: 1, start: 0, len: 16 },
+                WorkItem::PrefillChunk { id: 2, start: 0, len: 16 },
+            ],
+            "third chunk must be deferred, not truncated to 8"
+        );
+        assert_eq!(plan.scheduled_tokens, 32);
+
+        // A prompt's final short tail is not a truncation: it still runs
+        // even when it is under b_cp.
+        seqs.get_mut(&1).unwrap().phase = Phase::Prefill { next: 60 };
+        seqs.get_mut(&2).unwrap().phase = Phase::Finished;
+        seqs.get_mut(&3).unwrap().phase = Phase::Finished;
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(plan.items, vec![WorkItem::PrefillChunk { id: 1, start: 60, len: 4 }]);
+
+        // b_cp >= step_tokens: the deterministic width caps at
+        // step_tokens - (max_running - 1) = 29, so even a worst-case
+        // decode-loaded step can hold one full-width chunk — identical
+        // boundaries idle or loaded, and no prefill starvation.
+        let mut s2 = Scheduler::new(SchedCfg {
+            b_cp: 64,
+            step_tokens: 32,
+            max_running: 4,
+            deterministic_chunks: true,
+        });
+        let mut seqs2 = HashMap::new();
+        mk(&mut seqs2, 9, 128, 2);
+        mk(&mut seqs2, 10, 128, 2);
+        s2.enqueue(9);
+        s2.enqueue(10);
+        let plan = s2.plan(&mut seqs2, &mut blocks);
+        assert_eq!(
+            plan.items,
+            vec![WorkItem::PrefillChunk { id: 9, start: 0, len: 29 }],
+            "29-wide chunk fits; the second sequence's chunk defers (3 budget left)"
+        );
+        // With a decode eating into the budget, the SAME width is
+        // scheduled (never the load-dependent remainder) — boundaries are
+        // a pure function of the config.
+        seqs2.get_mut(&9).unwrap().phase = Phase::Decode;
+        seqs2.get_mut(&9).unwrap().generated.push(1);
+        seqs2.get_mut(&10).unwrap().phase = Phase::Prefill { next: 29 };
+        let plan = s2.plan(&mut seqs2, &mut blocks);
+        assert_eq!(
+            plan.items,
+            vec![
+                WorkItem::Decode { id: 9 },
+                WorkItem::PrefillChunk { id: 10, start: 29, len: 29 },
+            ],
+            "decode-loaded step must still fit one full deterministic chunk"
+        );
     }
 
     #[test]

@@ -40,6 +40,42 @@ struct LayerPages {
     fill: Vec<u16>,
 }
 
+impl LayerPages {
+    /// Write one `(head, slot)` K/V row of a page and maintain its
+    /// metadata: retire the old row from the page key sum when
+    /// overwriting a filled slot (COW rewrite), refresh the inverse norm,
+    /// and accumulate the new row into the key sum. The single write path
+    /// shared by chunked and batched-decode appends — metadata rules live
+    /// here exactly once.
+    fn write_row(
+        &mut self,
+        cfg: &PoolCfg,
+        page: usize,
+        slot: usize,
+        h: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+        was_filled: bool,
+    ) {
+        let (n_kv, d, bt) = (cfg.n_kv, cfg.d, cfg.block_tokens);
+        let dst = ((page * n_kv + h) * bt + slot) * d;
+        let sb = (page * n_kv + h) * d;
+        if was_filled {
+            for jj in 0..d {
+                self.key_sums[sb + jj] -= self.k[dst + jj];
+            }
+        }
+        self.k[dst..dst + d].copy_from_slice(k_row);
+        self.v[dst..dst + d].copy_from_slice(v_row);
+        let norm = l2_norm(k_row);
+        self.inv_norm[(page * n_kv + h) * bt + slot] =
+            if norm > 0.0 { 1.0 / norm } else { 0.0 };
+        for (o, &x) in self.key_sums[sb..sb + d].iter_mut().zip(k_row) {
+            *o += x;
+        }
+    }
+}
+
 /// The shared paged KV pool.
 pub struct KvPool {
     pub cfg: PoolCfg,
@@ -268,36 +304,75 @@ impl KvPool {
             debug_assert!(self.refcount[page] == 1, "append into shared/unowned page {page}");
             self.ensure_page(page);
         }
+        let cfg = self.cfg;
         let lp = &mut self.layers[layer];
         for i in 0..s {
             let tok = pos + i;
             let page = blocks[tok / bt] as usize;
             let slot = tok % bt;
-            // Overwriting a filled slot (COW rewrite) must first retire the
-            // old row from the page's key sum, or the mean-key metadata the
-            // paged QUOKA scan prunes by drifts.
             let was_filled = slot < lp.fill[page] as usize;
             for h in 0..n_kv {
                 let src = (h * s + i) * d;
-                let dst = ((page * n_kv + h) * bt + slot) * d;
-                let sb = (page * n_kv + h) * d;
-                if was_filled {
-                    for jj in 0..d {
-                        lp.key_sums[sb + jj] -= lp.k[dst + jj];
-                    }
-                }
-                lp.k[dst..dst + d].copy_from_slice(&k_new[src..src + d]);
-                lp.v[dst..dst + d].copy_from_slice(&v_new[src..src + d]);
-                let norm = l2_norm(&lp.k[dst..dst + d]);
-                lp.inv_norm[(page * n_kv + h) * bt + slot] =
-                    if norm > 0.0 { 1.0 / norm } else { 0.0 };
-                for (o, &x) in lp.key_sums[sb..sb + d].iter_mut().zip(&k_new[src..src + d]) {
-                    *o += x;
-                }
+                lp.write_row(
+                    &cfg,
+                    page,
+                    slot,
+                    h,
+                    &k_new[src..src + d],
+                    &v_new[src..src + d],
+                    was_filled,
+                );
             }
             if lp.fill[page] as usize <= slot {
                 lp.fill[page] = (slot + 1) as u16;
             }
+        }
+    }
+
+    /// Write one token's per-head K/V at position `pos`, reading head rows
+    /// out of a **batch-layout** slab `[n_kv, batch, d]` (head `h` of
+    /// sequence `seq` at row `h * batch + seq`) — the layout the batched
+    /// decode forward produces — without staging a contiguous copy.
+    /// Metadata maintenance (inverse norms, per-page key sums, fill
+    /// counters) is identical to [`KvPool::append_chunk`]; so are the
+    /// capacity/exclusivity preconditions.
+    #[allow(clippy::too_many_arguments)]
+    pub fn append_token_strided(
+        &mut self,
+        blocks: &[u32],
+        layer: usize,
+        pos: usize,
+        k_batch: &[f32],
+        v_batch: &[f32],
+        seq: usize,
+        batch: usize,
+    ) {
+        let PoolCfg { n_kv, d, block_tokens: bt, .. } = self.cfg;
+        debug_assert_eq!(k_batch.len(), n_kv * batch * d);
+        debug_assert_eq!(v_batch.len(), n_kv * batch * d);
+        debug_assert!(seq < batch);
+        assert!(blocks.len() * bt >= pos + 1, "block table too short for append");
+        let page = blocks[pos / bt] as usize;
+        debug_assert!(self.refcount[page] == 1, "append into shared/unowned page {page}");
+        self.ensure_page(page);
+        let slot = pos % bt;
+        let cfg = self.cfg;
+        let lp = &mut self.layers[layer];
+        let was_filled = slot < lp.fill[page] as usize;
+        for h in 0..n_kv {
+            let src = (h * batch + seq) * d;
+            lp.write_row(
+                &cfg,
+                page,
+                slot,
+                h,
+                &k_batch[src..src + d],
+                &v_batch[src..src + d],
+                was_filled,
+            );
+        }
+        if lp.fill[page] as usize <= slot {
+            lp.fill[page] = (slot + 1) as u16;
         }
     }
 
@@ -474,6 +549,52 @@ mod tests {
         pool.release_seq(&mut owner, &mut alloc);
         pool.release_seq(&mut sharer, &mut alloc);
         assert_eq!(alloc.free_blocks(), c.total_blocks);
+    }
+
+    #[test]
+    fn append_token_strided_matches_append_chunk() {
+        let c = cfg();
+        let mut rng = Rng::new(31);
+        let (bsz, seq) = (3usize, 2usize);
+        let kb = rng.normal_vec(c.n_kv * bsz * c.d, 1.0);
+        let vb = rng.normal_vec(c.n_kv * bsz * c.d, 1.0);
+        // Strided write at pos 1 of a partially filled page...
+        let mut alloc_a = BlockAllocator::new(c.total_blocks, c.block_tokens);
+        let mut pool_a = KvPool::new(c);
+        let blocks_a = lease_for(&mut alloc_a, &mut pool_a, 4);
+        let k0 = rng.normal_vec(c.n_kv * c.d, 1.0);
+        let v0 = rng.normal_vec(c.n_kv * c.d, 1.0);
+        pool_a.append_chunk(&blocks_a, 0, 0, &k0, &v0, 1);
+        pool_a.append_token_strided(&blocks_a, 0, 1, &kb, &vb, seq, bsz);
+        // ...must equal a contiguous append of the gathered rows.
+        let pick = |slab: &[f32]| -> Vec<f32> {
+            (0..c.n_kv)
+                .flat_map(|h| slab[(h * bsz + seq) * c.d..(h * bsz + seq + 1) * c.d].to_vec())
+                .collect()
+        };
+        let mut alloc_b = BlockAllocator::new(c.total_blocks, c.block_tokens);
+        let mut pool_b = KvPool::new(c);
+        let blocks_b = lease_for(&mut alloc_b, &mut pool_b, 4);
+        pool_b.append_chunk(&blocks_b, 0, 0, &k0, &v0, 1);
+        pool_b.append_chunk(&blocks_b, 0, 1, &pick(&kb), &pick(&vb), 1);
+        let va = pool_a.kv_view(&blocks_a, 2, 0);
+        let vb_ = pool_b.kv_view(&blocks_b, 2, 0);
+        for h in 0..c.n_kv {
+            for i in 0..2 {
+                assert_eq!(va.key(h, i), vb_.key(h, i));
+                assert_eq!(va.value(h, i), vb_.value(h, i));
+            }
+        }
+        let (ka, kb_) = (pool_a.k_cache(&blocks_a, 2, 0), pool_b.k_cache(&blocks_b, 2, 0));
+        for h in 0..c.n_kv {
+            let sb = (blocks_a[0] as usize * c.n_kv + h) * c.d;
+            let sb2 = (blocks_b[0] as usize * c.n_kv + h) * c.d;
+            assert_eq!(
+                &ka.pages.unwrap().key_sums[sb..sb + c.d],
+                &kb_.pages.unwrap().key_sums[sb2..sb2 + c.d]
+            );
+            assert_eq!(ka.inv_norm(h, 1), kb_.inv_norm(h, 1));
+        }
     }
 
     #[test]

@@ -91,6 +91,7 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             b_cp: a.usize("b-cp")?,
             step_tokens: a.usize("step-tokens")?,
             max_running: a.usize("max-running")?,
+            ..SchedCfg::default()
         },
         pool_blocks: a.usize("pool-blocks")?,
         block_tokens: a.usize("block-tokens")?,

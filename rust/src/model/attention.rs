@@ -102,31 +102,37 @@ impl KvBuffers {
         }
     }
 
+    /// Grow the per-head slabs (geometric doubling) so `need` rows fit.
+    fn ensure_capacity(&mut self, need: usize) {
+        if need <= self.capacity {
+            return;
+        }
+        let new_cap = (self.capacity * 2).max(need);
+        let mut k2 = vec![0.0; self.n_kv * new_cap * self.d];
+        let mut v2 = vec![0.0; self.n_kv * new_cap * self.d];
+        let mut n2 = vec![0.0; self.n_kv * new_cap];
+        for h in 0..self.n_kv {
+            let src = h * self.capacity * self.d;
+            let dst = h * new_cap * self.d;
+            let n = self.t * self.d;
+            k2[dst..dst + n].copy_from_slice(&self.k[src..src + n]);
+            v2[dst..dst + n].copy_from_slice(&self.v[src..src + n]);
+            let nsrc = h * self.capacity;
+            let ndst = h * new_cap;
+            n2[ndst..ndst + self.t].copy_from_slice(&self.k_inv_norm[nsrc..nsrc + self.t]);
+        }
+        self.k = k2;
+        self.v = v2;
+        self.k_inv_norm = n2;
+        self.capacity = new_cap;
+    }
+
     /// Append `s` tokens of per-head K/V (layout `[n_kv, s, d]`), growing
     /// geometrically when needed. Inverse key norms for the new rows are
     /// computed here, once, and cached alongside the keys.
     pub fn append(&mut self, k_new: &[f32], v_new: &[f32], s: usize) {
         debug_assert_eq!(k_new.len(), self.n_kv * s * self.d);
-        if self.t + s > self.capacity {
-            let new_cap = (self.capacity * 2).max(self.t + s);
-            let mut k2 = vec![0.0; self.n_kv * new_cap * self.d];
-            let mut v2 = vec![0.0; self.n_kv * new_cap * self.d];
-            let mut n2 = vec![0.0; self.n_kv * new_cap];
-            for h in 0..self.n_kv {
-                let src = h * self.capacity * self.d;
-                let dst = h * new_cap * self.d;
-                let n = self.t * self.d;
-                k2[dst..dst + n].copy_from_slice(&self.k[src..src + n]);
-                v2[dst..dst + n].copy_from_slice(&self.v[src..src + n]);
-                let nsrc = h * self.capacity;
-                let ndst = h * new_cap;
-                n2[ndst..ndst + self.t].copy_from_slice(&self.k_inv_norm[nsrc..nsrc + self.t]);
-            }
-            self.k = k2;
-            self.v = v2;
-            self.k_inv_norm = n2;
-            self.capacity = new_cap;
-        }
+        self.ensure_capacity(self.t + s);
         for h in 0..self.n_kv {
             let dst = h * self.capacity * self.d + self.t * self.d;
             let src = h * s * self.d;
@@ -141,6 +147,28 @@ impl KvBuffers {
             }
         }
         self.t += s;
+    }
+
+    /// Append one token's per-head K/V taken from a **batch-layout** slab
+    /// `[n_kv, batch, d]` (head `h` of sequence `seq` at row `h * batch +
+    /// seq`) — the layout the batched decode forward produces — without
+    /// staging through a contiguous `[n_kv, 1, d]` copy first. Norm-cache
+    /// maintenance is identical to [`KvBuffers::append`].
+    pub fn append_token_strided(&mut self, k_batch: &[f32], v_batch: &[f32], seq: usize, batch: usize) {
+        debug_assert_eq!(k_batch.len(), self.n_kv * batch * self.d);
+        debug_assert_eq!(v_batch.len(), self.n_kv * batch * self.d);
+        debug_assert!(seq < batch);
+        self.ensure_capacity(self.t + 1);
+        for h in 0..self.n_kv {
+            let src = (h * batch + seq) * self.d;
+            let dst = h * self.capacity * self.d + self.t * self.d;
+            self.k[dst..dst + self.d].copy_from_slice(&k_batch[src..src + self.d]);
+            self.v[dst..dst + self.d].copy_from_slice(&v_batch[src..src + self.d]);
+            let norm = l2_norm(&k_batch[src..src + self.d]);
+            self.k_inv_norm[h * self.capacity + self.t] =
+                if norm > 0.0 { 1.0 / norm } else { 0.0 };
+        }
+        self.t += 1;
     }
 
     /// Key row `(h, i)`.
@@ -249,16 +277,19 @@ pub fn chunk_attention(
     let g = n_q_heads / n_kv;
     let t = cache.t;
     let out_ptr = SyncPtr::new(out.as_mut_ptr());
-    run_tiled_tasks(n_q_heads, n_kv, s, t, d, scratch, |kv, gq_lo, gq_hi, q_lo, q_hi, ts| {
+    run_tiled_tasks(n_q_heads, n_kv, s, QBLOCK, t, d, scratch, |kv, gq_lo, gq_hi, q_lo, q_hi, ts| {
         group_block_attention(
             q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, k_self, v_self, cache, sel, ts, out_ptr,
         );
     });
 }
 
-/// Shared task decomposition of the tiled kernels (contiguous and paged):
-/// split `(kv_head, query-block[, group-slice])` tasks across workers and
-/// run `task(kv, gq_lo, gq_hi, q_lo, q_hi, scratch_slot)` for each.
+/// Shared task decomposition of the tiled kernels (contiguous, paged and
+/// batched-decode): split `(kv_head, query-block[, group-slice])` tasks
+/// across workers and run `task(kv, gq_lo, gq_hi, q_lo, q_hi,
+/// scratch_slot)` for each, with `qblock` query rows per task (the chunk
+/// kernels use [`QBLOCK`]; batched decode uses 1, because each "row" is an
+/// independent sequence with its own cache and selection).
 ///
 /// Tasks are fully independent; fan across the machine when the work is
 /// large enough to amortize thread wake-ups. Tasks are strided across
@@ -268,10 +299,12 @@ pub fn chunk_attention(
 /// path has one query block, capping tasks at `n_kv` — each GQA group is
 /// split across tasks as well (this repeats the tile gather per sub-group,
 /// so it's only enabled when tasks are scarce).
+#[allow(clippy::too_many_arguments)]
 fn run_tiled_tasks<F>(
     n_q_heads: usize,
     n_kv: usize,
     s: usize,
+    qblock: usize,
     t: usize,
     d: usize,
     scratch: &mut AttnScratch,
@@ -280,7 +313,7 @@ fn run_tiled_tasks<F>(
     F: Fn(usize, usize, usize, usize, usize, &mut TaskScratch) + Sync,
 {
     let g = n_q_heads / n_kv;
-    let n_qblocks = s.div_ceil(QBLOCK);
+    let n_qblocks = s.div_ceil(qblock);
     let base_tasks = n_kv * n_qblocks;
     let work = n_q_heads * s * (t + s) * d;
     let workers_avail = if work > 1 << 21 {
@@ -311,8 +344,8 @@ fn run_tiled_tasks<F>(
             let rem = ti % (n_qblocks * g_split);
             let qb = rem / g_split;
             let gs = rem % g_split;
-            let q_lo = qb * QBLOCK;
-            let q_hi = ((qb + 1) * QBLOCK).min(s);
+            let q_lo = qb * qblock;
+            let q_hi = ((qb + 1) * qblock).min(s);
             let gq_lo = gs * heads_per_task;
             let gq_hi = ((gs + 1) * heads_per_task).min(g);
             if gq_lo < gq_hi {
@@ -496,8 +529,42 @@ fn group_block_attention(
     task_init(ts, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, out);
     let TaskScratch { k_tile, v_tile, scores, m, l } = ts;
 
-    // ---- selected past ----
     let hsel = sel.head(kv, t);
+    past_tiles_contig(
+        q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, cache, hsel, k_tile, v_tile, scores, m, l, out,
+    );
+
+    self_tiles_and_finalize(
+        q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, k_self, v_self, scale, scores, m, l, out,
+    );
+}
+
+/// The selected-past tile loop over a **contiguous** cache: gather each
+/// tile's K/V rows into contiguous scratch (a full selection streams the
+/// head slab in place) and fold it into the online-softmax state. Shared
+/// by [`chunk_attention`] tasks and the batched decode kernel.
+#[allow(clippy::too_many_arguments)]
+fn past_tiles_contig(
+    q: &[f32],
+    s: usize,
+    d: usize,
+    g: usize,
+    kv: usize,
+    gq_lo: usize,
+    gq_hi: usize,
+    q_lo: usize,
+    q_hi: usize,
+    cache: &KvBuffers,
+    hsel: HeadSel,
+    k_tile: &mut Vec<f32>,
+    v_tile: &mut Vec<f32>,
+    scores: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+    out: SyncPtr<f32>,
+) {
+    let t = cache.t;
+    let scale = 1.0 / (d as f32).sqrt();
     let n_past = hsel.len();
     let head_base = kv * cache.capacity * d;
     let khead = &cache.k[head_base..head_base + t * d];
@@ -527,10 +594,6 @@ fn group_block_attention(
         );
         tile_lo = tile_hi;
     }
-
-    self_tiles_and_finalize(
-        q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, k_self, v_self, scale, scores, m, l, out,
-    );
 }
 
 /// [`group_block_attention`] over a **paged** cache: tiles are formed
@@ -561,8 +624,43 @@ fn group_block_attention_paged(
     task_init(ts, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, out);
     let TaskScratch { k_tile, v_tile, scores, m, l } = ts;
 
-    // ---- selected past ----
     let hsel = sel.head(kv, t);
+    past_tiles_paged(
+        q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, paged, hsel, k_tile, v_tile, scores, m, l, out,
+    );
+
+    self_tiles_and_finalize(
+        q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, k_self, v_self, scale, scores, m, l, out,
+    );
+}
+
+/// The selected-past tile loop over a **paged** cache: full selections
+/// stream each page's (contiguous) head-row run in place — no gather;
+/// sparse selections gather rows through the page indirection exactly like
+/// the contiguous kernel gathers through the head slab. Shared by
+/// [`paged_chunk_attention`] tasks and the batched decode kernel.
+#[allow(clippy::too_many_arguments)]
+fn past_tiles_paged(
+    q: &[f32],
+    s: usize,
+    d: usize,
+    g: usize,
+    kv: usize,
+    gq_lo: usize,
+    gq_hi: usize,
+    q_lo: usize,
+    q_hi: usize,
+    paged: &PagedKv,
+    hsel: HeadSel,
+    k_tile: &mut Vec<f32>,
+    v_tile: &mut Vec<f32>,
+    scores: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+    out: SyncPtr<f32>,
+) {
+    let t = paged.t;
+    let scale = 1.0 / (d as f32).sqrt();
     match hsel {
         HeadSel::All(_) => {
             let bt = paged.block_tokens;
@@ -617,10 +715,6 @@ fn group_block_attention_paged(
             }
         }
     }
-
-    self_tiles_and_finalize(
-        q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, k_self, v_self, scale, scores, m, l, out,
-    );
 }
 
 /// Flash-style online softmax: fold one tile of (already scaled) logits
@@ -690,11 +784,149 @@ pub fn paged_chunk_attention(
     let g = n_q_heads / n_kv;
     let t = paged.t;
     let out_ptr = SyncPtr::new(out.as_mut_ptr());
-    run_tiled_tasks(n_q_heads, n_kv, s, t, d, scratch, |kv, gq_lo, gq_hi, q_lo, q_hi, ts| {
+    run_tiled_tasks(n_q_heads, n_kv, s, QBLOCK, t, d, scratch, |kv, gq_lo, gq_hi, q_lo, q_hi, ts| {
         group_block_attention_paged(
             q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, k_self, v_self, paged, sel, ts, out_ptr,
         );
     });
+}
+
+/// Per-sequence KV reference for the batched decode kernel: each sequence
+/// in a decode batch attends to its own cache, which may live in private
+/// contiguous buffers or in the shared paged pool — one batch can mix
+/// both.
+pub enum SeqKv<'a> {
+    /// Private per-sequence buffers ([`KvBuffers`]).
+    Contig(&'a KvBuffers),
+    /// Shared-pool block-table view.
+    Paged(PagedKv<'a>),
+}
+
+impl SeqKv<'_> {
+    /// Valid (filled) past tokens of this sequence's cache.
+    #[inline]
+    pub fn t(&self) -> usize {
+        match self {
+            SeqKv::Contig(c) => c.t,
+            SeqKv::Paged(p) => p.t,
+        }
+    }
+
+    #[inline]
+    fn n_kv(&self) -> usize {
+        match self {
+            SeqKv::Contig(c) => c.n_kv,
+            SeqKv::Paged(p) => p.n_kv,
+        }
+    }
+}
+
+/// Batched decode attention: one query token per sequence, `bsz` sequences
+/// side by side in the `[n_q_heads, bsz, d]` batch layout the batched
+/// forward pass produces (sequence `b`, head `h` at row `h * bsz + b`;
+/// `k_self`/`v_self` likewise `[n_kv, bsz, d]`).
+///
+/// Each sequence attends to its own *selected* past (`seqs[b]`) plus its
+/// own current-token key/value only — there is no cross-sequence
+/// attention, so the work decomposes into independent `(sequence,
+/// kv_head[, group-slice])` tasks, each running the PR-1 tile pipeline
+/// ([`past_tiles_contig`] / [`past_tiles_paged`] + online softmax) out of
+/// the shared [`AttnScratch`] worker arenas. Per-sequence numerics are
+/// identical to [`chunk_attention`] with `s = 1` regardless of `bsz` (same
+/// tile boundaries, same accumulation order), which is what pins the
+/// batched-vs-serial exact-token parity tests.
+#[allow(clippy::too_many_arguments)]
+pub fn batched_decode_attention(
+    q: &[f32],
+    n_q_heads: usize,
+    bsz: usize,
+    d: usize,
+    k_self: &[f32],
+    v_self: &[f32],
+    seqs: &[(SeqKv, &Selection)],
+    scratch: &mut AttnScratch,
+    out: &mut [f32],
+) {
+    assert_eq!(seqs.len(), bsz);
+    assert!(bsz > 0);
+    debug_assert_eq!(q.len(), n_q_heads * bsz * d);
+    debug_assert_eq!(out.len(), n_q_heads * bsz * d);
+    let n_kv = seqs[0].0.n_kv();
+    debug_assert!(seqs.iter().all(|(kv, _)| kv.n_kv() == n_kv));
+    let g = n_q_heads / n_kv;
+    let t_max = seqs.iter().map(|(kv, _)| kv.t()).max().unwrap_or(0);
+    let out_ptr = SyncPtr::new(out.as_mut_ptr());
+    // qblock = 1: every task is one sequence × one kv head (× group
+    // slice), so parallelism scales with the batch instead of capping at
+    // n_kv the way one-sequence decode does.
+    run_tiled_tasks(n_q_heads, n_kv, bsz, 1, t_max, d, scratch, |kv, gq_lo, gq_hi, b_lo, b_hi, ts| {
+        for b in b_lo..b_hi {
+            let (seq_kv, sel) = &seqs[b];
+            let t = seq_kv.t();
+            task_init(ts, bsz, d, g, kv, gq_lo, gq_hi, b, b + 1, out_ptr);
+            let TaskScratch { k_tile, v_tile, scores, m, l } = &mut *ts;
+            let hsel = sel.head(kv, t);
+            match seq_kv {
+                SeqKv::Contig(cache) => past_tiles_contig(
+                    q, bsz, d, g, kv, gq_lo, gq_hi, b, b + 1, cache, hsel, k_tile, v_tile,
+                    scores, m, l, out_ptr,
+                ),
+                SeqKv::Paged(paged) => past_tiles_paged(
+                    q, bsz, d, g, kv, gq_lo, gq_hi, b, b + 1, paged, hsel, k_tile, v_tile,
+                    scores, m, l, out_ptr,
+                ),
+            }
+            self_single_and_finalize(
+                q, bsz, d, g, kv, gq_lo, gq_hi, b, k_self, v_self, scores, m, l, out_ptr,
+            );
+        }
+    });
+}
+
+/// The decode batch's causal-self part: sequence `b` sees exactly one self
+/// key — its own current token — never its batch neighbors' (rows of the
+/// `[n_kv, bsz, d]` self slabs belonging to other sequences are other
+/// sequences' tokens, not earlier chunk positions). Folds that single key
+/// into the online softmax and performs the finalize division, mirroring
+/// [`self_tiles_and_finalize`] at `s = 1`.
+#[allow(clippy::too_many_arguments)]
+fn self_single_and_finalize(
+    q: &[f32],
+    bsz: usize,
+    d: usize,
+    g: usize,
+    kv: usize,
+    gq_lo: usize,
+    gq_hi: usize,
+    b: usize,
+    k_self: &[f32],
+    v_self: &[f32],
+    scores: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+    out: SyncPtr<f32>,
+) {
+    let scale = 1.0 / (d as f32).sqrt();
+    let ks = &k_self[(kv * bsz + b) * d..(kv * bsz + b + 1) * d];
+    let vs = &v_self[(kv * bsz + b) * d..(kv * bsz + b + 1) * d];
+    for gq in gq_lo..gq_hi {
+        let h = kv * g + gq;
+        let qrow = &q[(h * bsz + b) * d..(h * bsz + b + 1) * d];
+        let row = &mut scores[..1];
+        qk_dots(qrow, ks, 1, d, row);
+        row[0] *= scale;
+        let orow = unsafe { raw_row(out, (h * bsz + b) * d, d) };
+        let ri = gq - gq_lo; // one query row per head in a decode task
+        online_softmax_update(row, vs, 1, d, &mut m[ri], &mut l[ri], orow);
+        if l[ri] > 0.0 {
+            let inv = 1.0 / l[ri];
+            for v in orow.iter_mut() {
+                *v *= inv;
+            }
+        } else {
+            orow.fill(0.0);
+        }
+    }
 }
 
 /// Single-query decode attention over a selected cache (which must already
@@ -963,6 +1195,72 @@ mod tests {
         chunk_attention(&q, n_q, 1, d, &ks, &vs, &cache, &Selection::All, &mut scratch, &mut a);
         decode_attention(&q, n_q, d, &ks, &vs, &cache, &Selection::All, &mut scratch, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn batched_decode_matches_serial_s1_smoke() {
+        // Full matrix in rust/tests/decode_batch.rs; here: a 3-sequence
+        // batch (different cache depths + selections) must reproduce three
+        // independent chunk_attention(s=1) calls bit-exactly.
+        let (n_q, n_kv, d) = (4usize, 2usize, 8usize);
+        let depths = [5usize, 12, 9];
+        let bsz = depths.len();
+        let mut rng = Rng::new(123);
+        let caches: Vec<KvBuffers> = depths
+            .iter()
+            .map(|&t| {
+                let mut c = KvBuffers::new(n_kv, d, 4);
+                let kk = rng.normal_vec(n_kv * t * d, 1.0);
+                let vv = rng.normal_vec(n_kv * t * d, 1.0);
+                c.append(&kk, &vv, t);
+                c
+            })
+            .collect();
+        let sels = [
+            Selection::All,
+            Selection::PerHead(vec![vec![0, 3, 7, 11], vec![2, 5, 10]]),
+            Selection::PerHead(vec![vec![1, 8], vec![0, 4, 6]]),
+        ];
+        // Batch layout [h, b, d]; serial layout [h, 1, d] per sequence.
+        let qb = rng.normal_vec(n_q * bsz * d, 1.0);
+        let ksb = rng.normal_vec(n_kv * bsz * d, 1.0);
+        let vsb = rng.normal_vec(n_kv * bsz * d, 1.0);
+        let mut scratch = AttnScratch::new();
+        let mut got = vec![0.0; n_q * bsz * d];
+        let seqs: Vec<(SeqKv, &Selection)> =
+            caches.iter().zip(&sels).map(|(c, s)| (SeqKv::Contig(c), s)).collect();
+        batched_decode_attention(&qb, n_q, bsz, d, &ksb, &vsb, &seqs, &mut scratch, &mut got);
+        for b in 0..bsz {
+            let pick = |slab: &[f32], nh: usize| -> Vec<f32> {
+                (0..nh).flat_map(|h| slab[(h * bsz + b) * d..(h * bsz + b + 1) * d].to_vec()).collect()
+            };
+            let (q1, ks1, vs1) = (pick(&qb, n_q), pick(&ksb, n_kv), pick(&vsb, n_kv));
+            let mut want = vec![0.0; n_q * d];
+            chunk_attention(&q1, n_q, 1, d, &ks1, &vs1, &caches[b], &sels[b], &mut scratch, &mut want);
+            assert_eq!(pick(&got, n_q), want, "sequence {b}");
+        }
+    }
+
+    #[test]
+    fn append_token_strided_matches_append() {
+        let (n_kv, d, bsz, seq) = (2usize, 4usize, 3usize, 1usize);
+        let mut rng = Rng::new(17);
+        let kb = rng.normal_vec(n_kv * bsz * d, 1.0);
+        let vb = rng.normal_vec(n_kv * bsz * d, 1.0);
+        let mut a = KvBuffers::new(n_kv, d, 1);
+        a.append_token_strided(&kb, &vb, seq, bsz);
+        // Contiguous oracle: gather sequence `seq`'s rows and append.
+        let pick = |slab: &[f32]| -> Vec<f32> {
+            (0..n_kv).flat_map(|h| slab[(h * bsz + seq) * d..(h * bsz + seq + 1) * d].to_vec()).collect()
+        };
+        let mut b = KvBuffers::new(n_kv, d, 1);
+        b.append(&pick(&kb), &pick(&vb), 1);
+        assert_eq!(a.t, 1);
+        for h in 0..n_kv {
+            assert_eq!(a.key(h, 0), b.key(h, 0));
+            assert_eq!(a.value(h, 0), b.value(h, 0));
+            assert_eq!(a.k_inv_norm[h * a.capacity], b.k_inv_norm[h * b.capacity]);
+        }
     }
 
     #[test]

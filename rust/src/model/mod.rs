@@ -11,5 +11,5 @@ pub mod transformer;
 
 pub use attention::KvBuffers;
 pub use config::{sim_roster, ModelConfig};
-pub use transformer::{HostModel, SeqState};
+pub use transformer::{DecodeKv, DecodeSeq, HostModel, SeqState};
 pub use weights::Weights;

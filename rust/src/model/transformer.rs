@@ -6,12 +6,15 @@
 //! chunked prefill per Eq. (2) with a pluggable [`SelectionPolicy`] applied
 //! to the KV cache of every layer, plus single-token decode.
 
-use super::attention::{chunk_attention, paged_chunk_attention, AttnScratch, KvBuffers};
+use super::attention::{
+    batched_decode_attention, chunk_attention, paged_chunk_attention, AttnScratch, KvBuffers,
+    SeqKv,
+};
 use super::config::ModelConfig;
 use super::weights::{LayerWeights, Weights};
 use crate::kvpool::KvPool;
 use crate::select::{fit, QChunk, SelectCtx, Selection, SelectionPolicy};
-use crate::tensor::matmul::matmul;
+use crate::tensor::matmul::{matmul, matmul_bt_argmax};
 use crate::tensor::ops::{rmsnorm, silu, RopeTable};
 
 /// Per-sequence inference state: one KV buffer per layer + token count.
@@ -53,6 +56,66 @@ struct FwdScratch {
     ffn_up: Vec<f32>,
     ffn_out: Vec<f32>,
     attn: AttnScratch,
+    /// One sequence's `[n_q, d_head]` query rows gathered out of the
+    /// decode batch for its per-sequence selection call.
+    q_seq: Vec<f32>,
+    /// Final-norm row for the scratch-routed logits head.
+    norm_row: Vec<f32>,
+}
+
+/// Absolute RoPE position of each row in a forward batch: a prefill chunk
+/// is `Base(pos)` (row `i` sits at `pos + i`); a decode batch is `PerRow`
+/// (row `i` is sequence `i`, at its own cursor).
+enum RowPos<'a> {
+    Base(usize),
+    PerRow(&'a [usize]),
+}
+
+impl RowPos<'_> {
+    #[inline]
+    fn at(&self, i: usize) -> usize {
+        match self {
+            RowPos::Base(p) => p + i,
+            RowPos::PerRow(v) => v[i],
+        }
+    }
+}
+
+/// One sequence's slot in a batched decode step (see
+/// [`HostModel::forward_decode_batch`]).
+pub struct DecodeSeq<'a> {
+    /// Where this sequence's KV lives.
+    pub kv: DecodeKv<'a>,
+    /// The previously sampled token — this step's input.
+    pub token: u32,
+    pub policy: &'a dyn SelectionPolicy,
+    /// Selection budget `B_SA`.
+    pub budget: usize,
+}
+
+/// Physical KV location of one decode-batch sequence. One batch may mix
+/// both variants (private sequences and pool-backed sequences decode
+/// together).
+pub enum DecodeKv<'a> {
+    /// Private contiguous per-sequence state; its cursor and caches are
+    /// advanced in place.
+    Private(&'a mut SeqState),
+    /// Shared-pool block table with `pos` tokens resident. The caller must
+    /// have ensured page capacity and write exclusivity for position `pos`
+    /// (lease layer + `KvPool::make_writable`) and advances its cursor by
+    /// one afterwards.
+    Paged { blocks: &'a [u32], pos: usize },
+}
+
+impl DecodeKv<'_> {
+    /// Tokens already resident in this sequence's cache.
+    #[inline]
+    fn pos(&self) -> usize {
+        match self {
+            DecodeKv::Private(st) => st.pos,
+            DecodeKv::Paged { pos, .. } => *pos,
+        }
+    }
 }
 
 /// The host model: weights + scratch + the precomputed RoPE frequency
@@ -86,14 +149,15 @@ impl HostModel {
     }
 
     /// Pre-attention RMSNorm + QKV projection + `[s, H*dh] → [H, s, dh]`
-    /// head split with RoPE at absolute positions `pos..pos+s`. Leaves the
-    /// chunk's `[H, s, dh]` Q/K/V in `sc.{q,k,v}_heads`.
+    /// head split with RoPE at per-row absolute positions (a chunk's
+    /// `pos..pos+s`, or one cursor per sequence for a decode batch).
+    /// Leaves the batch's `[H, s, dh]` Q/K/V in `sc.{q,k,v}_heads`.
     fn layer_attn_inputs(
         &self,
         lw: &LayerWeights,
         hidden: &[f32],
         s: usize,
-        pos: usize,
+        pos: RowPos,
         sc: &mut FwdScratch,
     ) {
         let cfg = &self.w.cfg;
@@ -123,7 +187,7 @@ impl HostModel {
                 let dst = (h * s + i) * dh;
                 q_heads[dst..dst + dh].copy_from_slice(&q_proj[src..src + dh]);
                 if cfg.use_rope {
-                    self.rope.apply(&mut q_heads[dst..dst + dh], pos + i);
+                    self.rope.apply(&mut q_heads[dst..dst + dh], pos.at(i));
                 }
             }
         }
@@ -135,7 +199,7 @@ impl HostModel {
                 let dst = (h * s + i) * dh;
                 k_heads[dst..dst + dh].copy_from_slice(&k_proj[src..src + dh]);
                 if cfg.use_rope {
-                    self.rope.apply(&mut k_heads[dst..dst + dh], pos + i);
+                    self.rope.apply(&mut k_heads[dst..dst + dh], pos.at(i));
                 }
                 v_heads[dst..dst + dh].copy_from_slice(&v_proj[src..src + dh]);
             }
@@ -246,7 +310,7 @@ impl HostModel {
         ctx.n_layers = cfg.n_layers;
         for (l, lw) in self.w.layers.iter().enumerate() {
             ctx.layer = l;
-            self.layer_attn_inputs(lw, &hidden, s, state.pos, sc);
+            self.layer_attn_inputs(lw, &hidden, s, RowPos::Base(state.pos), sc);
 
             // ---- selection over the past cache + attention ----
             let cache = &state.caches[l];
@@ -315,7 +379,7 @@ impl HostModel {
         ctx.n_layers = cfg.n_layers;
         for (l, lw) in self.w.layers.iter().enumerate() {
             ctx.layer = l;
-            self.layer_attn_inputs(lw, &hidden, s, pos, sc);
+            self.layer_attn_inputs(lw, &hidden, s, RowPos::Base(pos), sc);
 
             // ---- selection (block-table-aware KCache) + paged attention ----
             let sel = if pos == 0 || policy.is_dense() {
@@ -357,23 +421,203 @@ impl HostModel {
         hidden
     }
 
-    /// Logits for one hidden row (tied embedding head after final norm).
-    pub fn logits(&self, hidden_row: &[f32]) -> Vec<f32> {
+    /// One decode step for a whole batch of sequences — the engine's
+    /// serving hot path. Every weight matrix streams through the caches
+    /// **once per step** instead of once per sequence: the per-layer
+    /// projections and the FFN run as `[B, d] × [d, ·]` GEMMs over all `B`
+    /// rows, attention fans out over `(sequence × kv-head)` tasks (each
+    /// sequence attends only to its own KV — private buffers or pool block
+    /// tables, freely mixed), and the logits head is a single
+    /// `[B, d_model] × [d_model, vocab]` GEMM with a fused row-argmax that
+    /// never materializes the logits. Returns the greedy next token per
+    /// sequence, in batch order.
+    ///
+    /// Per-sequence numerics are identical to driving [`forward_chunk`]
+    /// (s = 1) / [`forward_chunk_paged`] sequence by sequence, so greedy
+    /// generations are exactly independent of the batch composition
+    /// (pinned in `rust/tests/decode_batch.rs`). Stateful policy context
+    /// is per sequence: each slot's cross-layer shared indices are swapped
+    /// into `ctx` around its selection call. `pool` must be `Some` iff the
+    /// batch contains `DecodeKv::Paged` sequences.
+    ///
+    /// [`forward_chunk`]: HostModel::forward_chunk
+    /// [`forward_chunk_paged`]: HostModel::forward_chunk_paged
+    pub fn forward_decode_batch(
+        &self,
+        seqs: &mut [DecodeSeq],
+        mut pool: Option<&mut KvPool>,
+        ctx: &mut SelectCtx,
+    ) -> Vec<u32> {
+        let cfg = &self.w.cfg;
+        let b = seqs.len();
+        assert!(b > 0);
+        let (dm, dh) = (cfg.d_model, cfg.d_head);
+        let (nq, nkv) = (cfg.n_q_heads, cfg.n_kv_heads);
+
+        let tokens: Vec<u32> = seqs.iter().map(|s| s.token).collect();
+        let positions: Vec<usize> = seqs.iter().map(|s| s.kv.pos()).collect();
+        let mut hidden = self.embed(&tokens, b);
+        let mut sc_guard = self.scratch.borrow_mut();
+        let sc = &mut *sc_guard; // reborrow: allow disjoint field borrows
+        // Per-sequence cross-layer policy state (e.g. LessIsMore's shared
+        // indices): one slot per sequence, swapped into ctx around its
+        // select call so batch-mates never observe each other's state.
+        let mut seq_shared: Vec<Option<Vec<Vec<u32>>>> = (0..b).map(|_| None).collect();
+        ctx.n_layers = cfg.n_layers;
+        for (l, lw) in self.w.layers.iter().enumerate() {
+            ctx.layer = l;
+            self.layer_attn_inputs(lw, &hidden, b, RowPos::PerRow(&positions), sc);
+
+            // ---- per-sequence selection over each private/paged past ----
+            let mut sels: Vec<Selection> = Vec::with_capacity(b);
+            for (bi, seq) in seqs.iter().enumerate() {
+                let t = positions[bi];
+                let sel = if t == 0 || seq.policy.is_dense() {
+                    Selection::All
+                } else {
+                    // Gather this sequence's [n_q, dh] query rows out of
+                    // the [n_q, B, dh] batch for the selection call.
+                    let FwdScratch { q_seq, q_heads, .. } = &mut *sc;
+                    let q_seq = fit(q_seq, nq * dh);
+                    for h in 0..nq {
+                        let src = (h * b + bi) * dh;
+                        q_seq[h * dh..(h + 1) * dh].copy_from_slice(&q_heads[src..src + dh]);
+                    }
+                    let qv = QChunk::new(&q_seq[..nq * dh], nq, 1, dh);
+                    std::mem::swap(&mut ctx.shared_indices, &mut seq_shared[bi]);
+                    let sel = match &seq.kv {
+                        DecodeKv::Private(st) => {
+                            seq.policy.select(&qv, &st.caches[l].k_view(), seq.budget, ctx)
+                        }
+                        DecodeKv::Paged { blocks, pos } => {
+                            let p = pool.as_deref().expect("paged decode without a pool");
+                            seq.policy.select(&qv, &p.k_cache(blocks, *pos, l), seq.budget, ctx)
+                        }
+                    };
+                    std::mem::swap(&mut ctx.shared_indices, &mut seq_shared[bi]);
+                    sel
+                };
+                ctx.cost.bump_calls();
+                sels.push(sel);
+            }
+
+            // ---- one batched attention fan-out over (seq × kv-head) ----
+            {
+                let pool_ref = pool.as_deref();
+                let seq_attn: Vec<(SeqKv, &Selection)> = seqs
+                    .iter()
+                    .zip(&sels)
+                    .map(|(seq, sel)| {
+                        let kv = match &seq.kv {
+                            DecodeKv::Private(st) => SeqKv::Contig(&st.caches[l]),
+                            DecodeKv::Paged { blocks, pos } => SeqKv::Paged(
+                                pool_ref
+                                    .expect("paged decode without a pool")
+                                    .kv_view(blocks, *pos, l),
+                            ),
+                        };
+                        (kv, sel)
+                    })
+                    .collect();
+                batched_decode_attention(
+                    &sc.q_heads[..nq * b * dh],
+                    nq,
+                    b,
+                    dh,
+                    &sc.k_heads[..nkv * b * dh],
+                    &sc.v_heads[..nkv * b * dh],
+                    &seq_attn,
+                    &mut sc.attn,
+                    fit(&mut sc.attn_heads, nq * b * dh),
+                );
+            }
+            self.layer_attn_output(lw, b, &mut hidden, sc);
+
+            // ---- append each sequence's token KV straight from the batch
+            // layout (no contiguous staging copy) ----
+            for (bi, seq) in seqs.iter_mut().enumerate() {
+                match &mut seq.kv {
+                    DecodeKv::Private(st) => st.caches[l].append_token_strided(
+                        &sc.k_heads[..nkv * b * dh],
+                        &sc.v_heads[..nkv * b * dh],
+                        bi,
+                        b,
+                    ),
+                    DecodeKv::Paged { blocks, pos } => {
+                        pool.as_deref_mut().expect("paged decode without a pool").append_token_strided(
+                            blocks,
+                            l,
+                            *pos,
+                            &sc.k_heads[..nkv * b * dh],
+                            &sc.v_heads[..nkv * b * dh],
+                            bi,
+                            b,
+                        )
+                    }
+                }
+            }
+
+            self.layer_ffn(lw, b, &mut hidden, sc);
+        }
+        for seq in seqs.iter_mut() {
+            if let DecodeKv::Private(st) = &mut seq.kv {
+                st.pos += 1;
+            }
+        }
+
+        // ---- fused logits head: final-norm all rows, one [B, dm] ×
+        // embeddingᵀ GEMM reduced straight to per-row argmax ----
+        let normed = fit(&mut sc.normed, b * dm);
+        for i in 0..b {
+            rmsnorm(
+                &hidden[i * dm..(i + 1) * dm],
+                self.w.final_norm.data(),
+                cfg.norm_eps,
+                &mut normed[i * dm..(i + 1) * dm],
+            );
+        }
+        let mut next = vec![0u32; b];
+        matmul_bt_argmax(normed, self.w.embedding.data(), b, dm, cfg.vocab, &mut next);
+        next
+    }
+
+    /// Logits for one hidden row (tied embedding head after final norm)
+    /// into a caller-owned buffer — no per-token allocation.
+    pub fn logits_into(&self, hidden_row: &[f32], out: &mut Vec<f32>) {
         let cfg = &self.w.cfg;
         let dm = cfg.d_model;
-        let mut normed = vec![0.0; dm];
-        rmsnorm(hidden_row, self.w.final_norm.data(), cfg.norm_eps, &mut normed);
-        let mut out = vec![0.0; cfg.vocab];
-        crate::tensor::matmul::matmul_bt(&normed, self.w.embedding.data(), 1, dm, cfg.vocab, &mut out);
+        debug_assert_eq!(hidden_row.len(), dm);
+        let mut sc = self.scratch.borrow_mut();
+        let normed = fit(&mut sc.norm_row, dm);
+        rmsnorm(hidden_row, self.w.final_norm.data(), cfg.norm_eps, normed);
+        if out.len() != cfg.vocab {
+            out.resize(cfg.vocab, 0.0);
+        }
+        crate::tensor::matmul::matmul_bt(normed, self.w.embedding.data(), 1, dm, cfg.vocab, out);
+    }
+
+    /// Logits for one hidden row. Allocates; steady-state paths use
+    /// [`HostModel::logits_into`] or [`HostModel::greedy_next`] (which
+    /// never materializes the vocab row at all).
+    pub fn logits(&self, hidden_row: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.logits_into(hidden_row, &mut out);
         out
     }
 
-    /// Greedy next token from the last row of `hidden`.
+    /// Greedy next token from the last row of `hidden`: final norm into
+    /// reusable scratch, then the fused GEMV+argmax — the full-vocab
+    /// logits row is never materialized.
     pub fn greedy_next(&self, hidden: &[f32]) -> u32 {
-        let dm = self.w.cfg.d_model;
+        let cfg = &self.w.cfg;
+        let dm = cfg.d_model;
         let last = &hidden[hidden.len() - dm..];
-        let logits = self.logits(last);
-        crate::tensor::ops::topk_indices(&logits, 1)[0] as u32
+        let mut sc = self.scratch.borrow_mut();
+        let normed = fit(&mut sc.norm_row, dm);
+        rmsnorm(last, self.w.final_norm.data(), cfg.norm_eps, normed);
+        let mut next = [0u32; 1];
+        matmul_bt_argmax(normed, self.w.embedding.data(), 1, dm, cfg.vocab, &mut next);
+        next[0]
     }
 }
 
@@ -483,6 +727,67 @@ mod tests {
             let h = m.forward_chunk(&mut st, &[5, 6, 7], &Quoka::default(), 8, &mut ctx);
             assert!(h.iter().all(|x| x.is_finite()), "{preset}");
         }
+    }
+
+    #[test]
+    fn decode_batch_of_one_matches_chunk_decode() {
+        // The engine's B=1 decode must be exactly the old serial path:
+        // forward_decode_batch([seq]) == forward_chunk(s=1) + greedy_next,
+        // including identical cache contents afterward.
+        let m = model("tiny");
+        let quoka = Quoka::default();
+        let mut ctx = SelectCtx::new(0);
+        let toks: Vec<u32> = (0..40).map(|i| (i * 29 % 251) as u32).collect();
+        let mut st_a = SeqState::new(m.cfg());
+        let mut st_b = SeqState::new(m.cfg());
+        let (mut ha, mut hb) = (Vec::new(), Vec::new());
+        for chunk in toks.chunks(16) {
+            ha = m.forward_chunk(&mut st_a, chunk, &quoka, 24, &mut ctx);
+            hb = m.forward_chunk(&mut st_b, chunk, &quoka, 24, &mut ctx);
+        }
+        let mut tok_a = m.greedy_next(&ha);
+        let mut tok_b = m.greedy_next(&hb);
+        assert_eq!(tok_a, tok_b);
+        for _ in 0..4 {
+            ctx.begin_step();
+            let h = m.forward_chunk(&mut st_a, &[tok_a], &quoka, 24, &mut ctx);
+            tok_a = m.greedy_next(&h);
+            ctx.begin_step();
+            let mut one = [DecodeSeq {
+                kv: DecodeKv::Private(&mut st_b),
+                token: tok_b,
+                policy: &quoka,
+                budget: 24,
+            }];
+            tok_b = m.forward_decode_batch(&mut one, None, &mut ctx)[0];
+            assert_eq!(tok_a, tok_b);
+        }
+        assert_eq!(st_a.pos, st_b.pos);
+        for (ca, cb) in st_a.caches.iter().zip(&st_b.caches) {
+            assert_eq!(ca.t, cb.t);
+            for h in 0..ca.n_kv {
+                for i in 0..ca.t {
+                    assert_eq!(ca.key(h, i), cb.key(h, i), "key ({h},{i})");
+                    assert_eq!(ca.value(h, i), cb.value(h, i), "value ({h},{i})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn logits_into_and_greedy_agree_with_logits() {
+        let m = model("tiny");
+        let mut st = SeqState::new(m.cfg());
+        let mut ctx = SelectCtx::new(0);
+        let h = m.forward_chunk(&mut st, &[3, 1, 4, 1, 5], &Dense, usize::MAX, &mut ctx);
+        let dm = m.cfg().d_model;
+        let last = &h[h.len() - dm..];
+        let alloc = m.logits(last);
+        let mut reused = vec![7.0f32; 2 * m.cfg().vocab]; // wrong-size buffer is resized
+        m.logits_into(last, &mut reused);
+        assert_eq!(alloc, reused);
+        let want = crate::tensor::ops::topk_indices(&alloc, 1)[0] as u32;
+        assert_eq!(m.greedy_next(&h), want);
     }
 
     #[test]

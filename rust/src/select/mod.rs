@@ -295,6 +295,9 @@ pub struct SelectCtx {
     pub n_layers: usize,
     /// Indices shared across layers within the current engine step
     /// (LessIsMore writes at its selection layers, reads elsewhere).
+    /// **Per sequence**: the batched decode forward swaps each sequence's
+    /// slot in around its select call, so sequences decoding in one batch
+    /// never observe each other's cross-layer state.
     pub shared_indices: Option<Vec<Vec<u32>>>,
     /// Scratch buffers reused across calls to avoid steady-state allocation.
     pub scratch: Scratch,

@@ -672,6 +672,38 @@ mod tests {
     }
 
     #[test]
+    fn decode_shaped_paged_scan_prunes_pages_and_matches_contiguous() {
+        // The decode hot path calls select with a single query (s = 1).
+        // The paged scan must still go metadata-first — score page mean
+        // keys, descend only into survivors — and, when the descend set
+        // covers every page, agree exactly with the contiguous scan.
+        let mut rng = Rng::new(44);
+        let (d, t, bt) = (8usize, 128usize, 16usize);
+        let qd = rng.normal_vec(d, 1.0);
+        let kd = rng.normal_vec(t * d, 1.0);
+        let (norms, sums, blocks) = paged_fixture(&kd, t, d, bt);
+        let q = QChunk::new(&qd, 1, 1, d);
+        let contig = KCache::with_norms(&kd, 1, t, t, d, &norms);
+        let paged = KCache::paged(
+            &kd,
+            1,
+            t,
+            d,
+            &norms,
+            Pages { blocks: &blocks, block_tokens: bt, key_sums: &sums },
+        );
+        // budget 60 → descend ⌈120/16⌉+1 = 9 > 8 pages: full coverage.
+        let a = Quoka::default().select(&q, &contig, 60, &mut SelectCtx::new(0));
+        let b = Quoka::default().select(&q, &paged, 60, &mut SelectCtx::new(0));
+        assert_eq!(a.head_indices(0, t), b.head_indices(0, t));
+        // budget 8 → descend 2 of 8 pages: 6 pages (96 keys) never read.
+        let mut ctx = SelectCtx::new(0);
+        let sel = Quoka::default().select(&q, &paged, 8, &mut ctx);
+        assert_eq!(sel.head_indices(0, t).len(), 8);
+        assert_eq!(ctx.cost.skipped_keys(), (t - 2 * bt) as u64);
+    }
+
+    #[test]
     fn cosine_beats_dot_under_key_norm_attack() {
         // Plant a needle with a *small-norm* key while an irrelevant key has
         // a huge norm: dot scoring chases the big norm, cosine does not.

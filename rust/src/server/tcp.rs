@@ -226,7 +226,12 @@ mod tests {
                 Engine::new_host(
                     "tiny",
                     EngineCfg {
-                        sched: SchedCfg { b_cp: 16, step_tokens: 64, max_running: 4 },
+                        sched: SchedCfg {
+                            b_cp: 16,
+                            step_tokens: 64,
+                            max_running: 4,
+                            ..SchedCfg::default()
+                        },
                         pool_blocks: 256,
                         block_tokens: 16,
                         seed: 2,

@@ -82,9 +82,49 @@ pub fn par_matmul_bt(
     });
 }
 
-struct SyncPtr(*mut f32);
-unsafe impl Sync for SyncPtr {}
-unsafe impl Send for SyncPtr {}
+struct SyncPtr<T>(*mut T);
+unsafe impl<T> Sync for SyncPtr<T> {}
+unsafe impl<T> Send for SyncPtr<T> {}
+
+/// Fused `argmax_j (A · Bᵀ)[i, j]` per row: for each of the `m` rows of
+/// `A[m,k]`, the index of the largest dot product against the `n` rows of
+/// `B[n,k]` — the greedy-decoding logits reduction without ever
+/// materializing the `[m, n]` logits. Each dot is computed exactly as
+/// [`matmul_bt`] computes it and ties break to the lower index, so the
+/// result is bit-identical to `topk_indices(&matmul_bt_row, 1)[0]`.
+/// Rows are split across threads when the reduction is large enough to
+/// amortize the fork-join.
+pub fn matmul_bt_argmax(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [u32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m);
+    debug_assert!(n > 0 && n <= u32::MAX as usize);
+    let row_argmax = |arow: &[f32]| -> u32 {
+        let mut best = f32::NEG_INFINITY;
+        let mut best_j = 0u32;
+        for j in 0..n {
+            let v = dot(arow, &b[j * k..(j + 1) * k]);
+            if v > best {
+                best = v;
+                best_j = j as u32;
+            }
+        }
+        best_j
+    };
+    let threads = crate::util::threadpool::default_workers().min(m);
+    if threads <= 1 || m * n * k < 1 << 20 {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = row_argmax(&a[i * k..(i + 1) * k]);
+        }
+        return;
+    }
+    let o_ptr = SyncPtr(out.as_mut_ptr());
+    let o_ref = &o_ptr;
+    parallel_for(m, threads, |i| {
+        // SAFETY: each i writes exclusively to its own output slot.
+        unsafe { *o_ref.0.add(i) = row_argmax(&a[i * k..(i + 1) * k]) };
+    });
+}
 
 #[cfg(test)]
 mod tests {
@@ -139,6 +179,29 @@ mod tests {
         for (x, y) in c.iter().zip(&want) {
             assert!((x - y).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn fused_argmax_matches_materialized_logits() {
+        let mut rng = Rng::new(21);
+        for &(m, k, n) in &[(1usize, 8usize, 17usize), (3, 16, 64), (8, 32, 300)] {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(n * k, 1.0);
+            let mut c = vec![0.0; m * n];
+            matmul_bt(&a, &b, m, k, n, &mut c);
+            let mut got = vec![0u32; m];
+            matmul_bt_argmax(&a, &b, m, k, n, &mut got);
+            for i in 0..m {
+                let want = crate::tensor::ops::topk_indices(&c[i * n..(i + 1) * n], 1)[0] as u32;
+                assert_eq!(got[i], want, "row {i} of ({m},{k},{n})");
+            }
+        }
+        // Deterministic tie-break: lower index wins.
+        let a = vec![1.0f32; 4];
+        let b = vec![1.0f32; 3 * 4]; // all rows identical
+        let mut got = vec![9u32; 1];
+        matmul_bt_argmax(&a, &b, 1, 4, 3, &mut got);
+        assert_eq!(got[0], 0);
     }
 
     #[test]

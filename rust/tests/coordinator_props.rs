@@ -82,7 +82,7 @@ fn scheduler_never_exceeds_step_budget() {
             let mut rng = Rng::new(seed);
             let (mut seqs, ids) = mk_seqs(&mut rng, n);
             let mut blocks = BlockAllocator::new(64, 128);
-            let cfg = SchedCfg { b_cp: 128, step_tokens: 200, max_running: 6 };
+            let cfg = SchedCfg { b_cp: 128, step_tokens: 200, max_running: 6, ..SchedCfg::default() };
             let mut s = Scheduler::new(cfg);
             for id in ids {
                 s.enqueue(id);
@@ -194,7 +194,7 @@ fn engine_conserves_blocks_and_tokens_across_random_mixes() {
             let mut e = Engine::new_host(
                 "tiny",
                 EngineCfg {
-                    sched: SchedCfg { b_cp: 16, step_tokens: 64, max_running: 3 },
+                    sched: SchedCfg { b_cp: 16, step_tokens: 64, max_running: 3, ..SchedCfg::default() },
                     pool_blocks: 128,
                     block_tokens: 16,
                     seed: 3,

@@ -1,0 +1,314 @@
+//! Batched-vs-serial decode parity.
+//!
+//! The engine's decode phase runs every decoding sequence through ONE
+//! `forward_decode_batch` per step. These tests pin the invariant that
+//! makes that safe: per-sequence numerics are independent of the batch
+//! composition, so greedy generations are **exactly** (token-id equal)
+//! what a serial B=1 loop produces — across policies (dense, quoka), GQA
+//! shapes, batch sizes B ∈ {1, 3, 8}, and private/paged KV layouts, mixed
+//! in one batch. Engine-level: a concurrently loaded engine (decode
+//! batches > 1, interleaved with prefill chunks) generates exactly what
+//! isolated single-request engines (decode batches of 1) generate.
+
+use quoka::coordinator::kv_blocks::BlockAllocator;
+use quoka::coordinator::{Engine, EngineCfg, KvLayout, PolicySpec, SchedCfg};
+use quoka::kvpool::{KvPool, PoolCfg};
+use quoka::model::{DecodeKv, DecodeSeq, HostModel, ModelConfig, SeqState, Weights};
+use quoka::select::{policy_by_name, SelectCtx};
+
+fn prompt(n: usize, salt: u64) -> Vec<u32> {
+    (0..n).map(|i| ((i as u64 * 37 + salt * 101) % 251) as u32 + 1).collect()
+}
+
+/// Drive `n_steps` of greedy decode serially (B=1 forwards, one sequence
+/// at a time — the pre-batching engine loop) over private states.
+fn decode_serial(
+    model: &HostModel,
+    states: &mut [SeqState],
+    first: &[u32],
+    policy_names: &[&str],
+    budget: usize,
+    n_steps: usize,
+) -> Vec<Vec<u32>> {
+    let mut ctx = SelectCtx::new(0);
+    let mut last = first.to_vec();
+    let mut out = vec![Vec::new(); states.len()];
+    for _ in 0..n_steps {
+        for (i, st) in states.iter_mut().enumerate() {
+            let policy = policy_by_name(policy_names[i]).unwrap();
+            ctx.begin_step();
+            let mut one = [DecodeSeq {
+                kv: DecodeKv::Private(st),
+                token: last[i],
+                policy: policy.as_ref(),
+                budget,
+            }];
+            let next = model.forward_decode_batch(&mut one, None, &mut ctx);
+            last[i] = next[0];
+            out[i].push(next[0]);
+        }
+    }
+    out
+}
+
+/// Same decode, one fused batch per step.
+fn decode_batched(
+    model: &HostModel,
+    states: &mut [SeqState],
+    first: &[u32],
+    policy_names: &[&str],
+    budget: usize,
+    n_steps: usize,
+) -> Vec<Vec<u32>> {
+    let mut ctx = SelectCtx::new(0);
+    let policies: Vec<_> = policy_names.iter().map(|n| policy_by_name(n).unwrap()).collect();
+    let mut last = first.to_vec();
+    let mut out = vec![Vec::new(); states.len()];
+    for _ in 0..n_steps {
+        ctx.begin_step();
+        let mut batch: Vec<DecodeSeq> = states
+            .iter_mut()
+            .enumerate()
+            .map(|(i, st)| DecodeSeq {
+                kv: DecodeKv::Private(st),
+                token: last[i],
+                policy: policies[i].as_ref(),
+                budget,
+            })
+            .collect();
+        let next = model.forward_decode_batch(&mut batch, None, &mut ctx);
+        drop(batch);
+        for (i, &tok) in next.iter().enumerate() {
+            last[i] = tok;
+            out[i].push(tok);
+        }
+    }
+    out
+}
+
+/// Prefill `n` private sequences with distinct prompts; returns states and
+/// each sequence's first sampled token.
+fn prefilled(model: &HostModel, n: usize, policy_names: &[&str], budget: usize) -> (Vec<SeqState>, Vec<u32>) {
+    let mut ctx = SelectCtx::new(0);
+    let mut states = Vec::new();
+    let mut first = Vec::new();
+    for i in 0..n {
+        let toks = prompt(40 + i * 9, i as u64);
+        let policy = policy_by_name(policy_names[i]).unwrap();
+        let mut st = SeqState::new(model.cfg());
+        let mut h = Vec::new();
+        for chunk in toks.chunks(16) {
+            h = model.forward_chunk(&mut st, chunk, policy.as_ref(), budget, &mut ctx);
+        }
+        first.push(model.greedy_next(&h));
+        states.push(st);
+    }
+    (states, first)
+}
+
+#[test]
+fn batched_equals_serial_across_policies_shapes_and_batch_sizes() {
+    // GQA shapes: tiny (4q/2kv, g=2) and a wide-GQA 8q/2kv variant.
+    let tiny = ModelConfig::tiny();
+    let wide = ModelConfig {
+        name: "wide-gqa".into(),
+        n_q_heads: 8,
+        n_kv_heads: 2,
+        ..ModelConfig::tiny()
+    };
+    for cfg in [tiny, wide] {
+        let model = HostModel::new(Weights::generate(&cfg, 11));
+        for &b in &[1usize, 3, 8] {
+            // Mixed policies across the batch: dense and quoka slots.
+            let names: Vec<&str> =
+                (0..b).map(|i| if i % 2 == 0 { "quoka" } else { "dense" }).collect();
+            let budget = 24;
+            let (mut st_a, first) = prefilled(&model, b, &names, budget);
+            let (mut st_b, first_b) = prefilled(&model, b, &names, budget);
+            assert_eq!(first, first_b, "prefill must be deterministic");
+            let serial = decode_serial(&model, &mut st_a, &first, &names, budget, 6);
+            let batched = decode_batched(&model, &mut st_b, &first, &names, budget, 6);
+            assert_eq!(serial, batched, "cfg={} B={b}", cfg.name);
+            // The caches must also agree exactly after the run.
+            for (a, c) in st_a.iter().zip(&st_b) {
+                assert_eq!(a.pos, c.pos);
+                for (ca, cb) in a.caches.iter().zip(&c.caches) {
+                    assert_eq!(ca.t, cb.t);
+                    for h in 0..ca.n_kv {
+                        for i in 0..ca.t {
+                            assert_eq!(ca.key(h, i), cb.key(h, i));
+                            assert_eq!(ca.value(h, i), cb.value(h, i));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A mixed-layout fixture: even slots are private sequences, odd slots
+/// live in a shared paged pool, all prefilled and with a first token
+/// sampled.
+struct Mixed {
+    pool: KvPool,
+    private: Vec<Option<SeqState>>,
+    /// `(block table, resident tokens)` for paged slots.
+    paged: Vec<Option<(Vec<u32>, usize)>>,
+    first: Vec<u32>,
+}
+
+fn mixed_fixture(model: &HostModel, b: usize, bt: usize, budget: usize, reserve: usize) -> Mixed {
+    let cfg = model.cfg();
+    let policy = policy_by_name("quoka").unwrap();
+    let mut ctx = SelectCtx::new(0);
+    let mut alloc = BlockAllocator::new(64, bt);
+    let mut pool = KvPool::new(PoolCfg {
+        n_layers: cfg.n_layers,
+        n_kv: cfg.n_kv_heads,
+        d: cfg.d_head,
+        block_tokens: bt,
+        total_blocks: 64,
+    });
+    let mut private: Vec<Option<SeqState>> = Vec::new();
+    let mut paged: Vec<Option<(Vec<u32>, usize)>> = Vec::new();
+    let mut first = Vec::new();
+    for i in 0..b {
+        let toks = prompt(40 + i * 9, i as u64);
+        if i % 2 == 0 {
+            let mut st = SeqState::new(cfg);
+            let mut h = Vec::new();
+            for chunk in toks.chunks(16) {
+                h = model.forward_chunk(&mut st, chunk, policy.as_ref(), budget, &mut ctx);
+            }
+            first.push(model.greedy_next(&h));
+            private.push(Some(st));
+            paged.push(None);
+        } else {
+            let mut blocks = Vec::new();
+            assert!(alloc.ensure(&mut blocks, toks.len() + reserve + 1));
+            pool.adopt_new(&blocks);
+            let mut pos = 0;
+            let mut h = Vec::new();
+            for chunk in toks.chunks(16) {
+                h = model.forward_chunk_paged(
+                    &mut pool, &blocks, pos, chunk, policy.as_ref(), budget, &mut ctx,
+                );
+                pos += chunk.len();
+            }
+            first.push(model.greedy_next(&h));
+            private.push(None);
+            paged.push(Some((blocks, pos)));
+        }
+    }
+    Mixed { pool, private, paged, first }
+}
+
+/// Decode a [`Mixed`] fixture for `n_steps`, `group` sequences per fused
+/// forward (`group = 1` is the serial loop, `group = b` one full batch).
+fn decode_mixed(model: &HostModel, mx: &mut Mixed, budget: usize, n_steps: usize, group: usize) -> Vec<Vec<u32>> {
+    let b = mx.first.len();
+    let policy = policy_by_name("quoka").unwrap();
+    let mut ctx = SelectCtx::new(0);
+    let mut last = mx.first.clone();
+    let mut out = vec![Vec::new(); b];
+    for _ in 0..n_steps {
+        let mut lo = 0;
+        while lo < b {
+            let hi = (lo + group).min(b);
+            ctx.begin_step();
+            let mut batch: Vec<DecodeSeq> = Vec::with_capacity(hi - lo);
+            let (pvt, pgd) = (&mut mx.private[lo..hi], &mx.paged[lo..hi]);
+            for (j, slot) in pvt.iter_mut().enumerate() {
+                let kv = if let Some(st) = slot.as_mut() {
+                    DecodeKv::Private(st)
+                } else {
+                    let (blocks, pos) = pgd[j].as_ref().unwrap();
+                    DecodeKv::Paged { blocks, pos: *pos }
+                };
+                batch.push(DecodeSeq { kv, token: last[lo + j], policy: policy.as_ref(), budget });
+            }
+            let next = model.forward_decode_batch(&mut batch, Some(&mut mx.pool), &mut ctx);
+            drop(batch);
+            for (j, &tok) in next.iter().enumerate() {
+                last[lo + j] = tok;
+                out[lo + j].push(tok);
+                if let Some((_, pos)) = mx.paged[lo + j].as_mut() {
+                    *pos += 1;
+                }
+            }
+            lo = hi;
+        }
+    }
+    out
+}
+
+#[test]
+fn mixed_private_and_paged_batch_matches_serial() {
+    // Even slots private, odd slots pool-backed: one batch mixes both
+    // layouts and must reproduce the serial (B=1, same layouts) tokens
+    // exactly, at every grouping of the same sequences.
+    let cfg = ModelConfig::tiny();
+    let model = HostModel::new(Weights::generate(&cfg, 13));
+    let (b, bt, budget, n_steps) = (4usize, 8usize, 20usize, 5usize);
+    let mut serial_fx = mixed_fixture(&model, b, bt, budget, n_steps);
+    let mut batch_fx = mixed_fixture(&model, b, bt, budget, n_steps);
+    let mut pair_fx = mixed_fixture(&model, b, bt, budget, n_steps);
+    assert_eq!(serial_fx.first, batch_fx.first, "fixture must be deterministic");
+    let serial = decode_mixed(&model, &mut serial_fx, budget, n_steps, 1);
+    let batched = decode_mixed(&model, &mut batch_fx, budget, n_steps, b);
+    let paired = decode_mixed(&model, &mut pair_fx, budget, n_steps, 2);
+    assert_eq!(serial, batched, "full mixed batch diverged from serial");
+    assert_eq!(serial, paired, "pairwise mixed batches diverged from serial");
+}
+
+fn engine_cfg(kv: KvLayout) -> EngineCfg {
+    EngineCfg {
+        sched: SchedCfg { b_cp: 16, step_tokens: 64, max_running: 4, ..SchedCfg::default() },
+        pool_blocks: 128,
+        block_tokens: 16,
+        seed: 5,
+        kv,
+    }
+}
+
+#[test]
+fn engine_batched_decode_matches_isolated_requests() {
+    // Interleaved serving (several sequences decoding in one step, plus
+    // prefill chunks of later arrivals sharing the step) must generate
+    // exactly what each request generates alone in a fresh engine, where
+    // every decode batch has size 1 — the pre-batch engine's behaviour.
+    for kv in [KvLayout::Private, KvLayout::Paged { prefix_cache: false }] {
+        let reqs: Vec<(Vec<u32>, usize, PolicySpec)> = vec![
+            (prompt(40, 1), 6, PolicySpec { name: "quoka".into(), budget: 24 }),
+            (prompt(53, 2), 5, PolicySpec { name: "dense".into(), budget: 0 }),
+            (prompt(33, 3), 6, PolicySpec { name: "quoka".into(), budget: 16 }),
+        ];
+        // Isolated oracle runs.
+        let mut want = Vec::new();
+        for (toks, max_new, spec) in &reqs {
+            let mut e = Engine::new_host("tiny", engine_cfg(kv)).unwrap();
+            e.submit(toks.clone(), *max_new, spec.clone()).unwrap();
+            want.push(e.run_to_completion().unwrap()[0].generated.clone());
+        }
+        // Concurrent run: all submitted up front, decodes batch together.
+        let mut e = Engine::new_host("tiny", engine_cfg(kv)).unwrap();
+        let mut ids = Vec::new();
+        for (toks, max_new, spec) in &reqs {
+            ids.push(e.submit(toks.clone(), *max_new, spec.clone()).unwrap());
+        }
+        let mut results = e.run_to_completion().unwrap();
+        results.sort_by_key(|r| r.id);
+        for ((r, id), w) in results.iter().zip(&ids).zip(&want) {
+            assert_eq!(r.id, *id);
+            assert_eq!(&r.generated, w, "kv={kv:?} id={id}");
+        }
+        // The batching actually happened: some step decoded > 1 sequence.
+        assert!(
+            e.metrics.decode_batch_hist.len() > 2
+                && e.metrics.decode_batch_hist[2..].iter().any(|&c| c > 0),
+            "expected a decode batch of size >= 2, hist={:?}",
+            e.metrics.decode_batch_hist
+        );
+        assert!(e.metrics.decode_s > 0.0);
+    }
+}

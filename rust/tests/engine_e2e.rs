@@ -6,7 +6,7 @@ use quoka::server::{serve, Client, WireRequest};
 
 fn host_cfg() -> EngineCfg {
     EngineCfg {
-        sched: SchedCfg { b_cp: 16, step_tokens: 64, max_running: 4 },
+        sched: SchedCfg { b_cp: 16, step_tokens: 64, max_running: 4, ..SchedCfg::default() },
         pool_blocks: 512,
         block_tokens: 16,
         seed: 4,
@@ -122,6 +122,66 @@ fn prefix_cache_skips_cached_prefill_and_preserves_generation() {
 }
 
 #[test]
+fn deterministic_chunks_make_warm_kv_exact_under_concurrent_load() {
+    // ROADMAP open item: under concurrent load, step-budget truncation
+    // used to shift a sparse publisher's chunk boundaries, so prefix-cached
+    // KV could differ from a cold serial recompute. With deterministic
+    // chunk boundaries (on automatically in paged+prefix mode), a
+    // publisher's chunks are never truncated below b_cp, and warm-vs-cold
+    // generations are bit-exact even when the publisher prefilled while
+    // competing with decodes and other prefills.
+    let mk = || {
+        Engine::new_host(
+            "tiny",
+            EngineCfg {
+                // Tight step budget: 2 concurrent 16-wide prefills + decodes
+                // would overflow 24 tokens and force truncation without the
+                // deterministic-chunks guard.
+                sched: SchedCfg {
+                    b_cp: 16,
+                    step_tokens: 24,
+                    max_running: 4,
+                    ..SchedCfg::default()
+                },
+                pool_blocks: 128,
+                block_tokens: 16,
+                seed: 4,
+                kv: KvLayout::Paged { prefix_cache: true },
+            },
+        )
+        .unwrap()
+    };
+    let spec = || PolicySpec { name: "quoka".into(), budget: 24 };
+    let publisher: Vec<u32> = (0..64).map(|i| (i * 13 % 240) as u32 + 1).collect();
+    let mut warm_prompt = publisher.clone();
+    warm_prompt.extend((0..17).map(|i| (i * 7 % 240) as u32 + 2));
+
+    // Serial oracle: publisher alone (no load ⇒ no truncation ever), then
+    // the warm request.
+    let mut serial = mk();
+    serial.submit(publisher.clone(), 1, spec()).unwrap();
+    serial.run_to_completion().unwrap();
+    serial.submit(warm_prompt.clone(), 4, spec()).unwrap();
+    let r_serial = serial.run_to_completion().unwrap().remove(0);
+    assert_eq!(r_serial.cached_prefix_tokens, 64, "oracle warm request must hit the cache");
+
+    // Loaded engine: a decoding sequence plus a competing prefill run in
+    // the same steps as the publisher's prefill.
+    let mut loaded = mk();
+    let filler: Vec<u32> = (0..48).map(|i| (i * 11 % 240) as u32 + 1).collect();
+    loaded.submit(filler, 12, spec()).unwrap(); // decodes while others prefill
+    loaded.submit(publisher, 1, spec()).unwrap(); // the page publisher
+    loaded.run_to_completion().unwrap();
+    loaded.submit(warm_prompt, 4, spec()).unwrap();
+    let r_loaded = loaded.run_to_completion().unwrap().remove(0);
+    assert_eq!(r_loaded.cached_prefix_tokens, 64, "loaded warm request must hit the cache");
+    assert_eq!(
+        r_loaded.generated, r_serial.generated,
+        "KV published under load must be bit-identical to serial publishing"
+    );
+}
+
+#[test]
 fn prefix_cache_is_policy_namespaced() {
     // Same tokens under a different budget must NOT reuse cached KV: with
     // sparse selection the cached hidden states depend on the policy.
@@ -187,7 +247,7 @@ fn pjrt_engine_end_to_end_when_artifacts_exist() {
     let mut e = Engine::new_pjrt(
         "artifacts",
         EngineCfg {
-            sched: SchedCfg { b_cp: 128, step_tokens: 256, max_running: 2 },
+            sched: SchedCfg { b_cp: 128, step_tokens: 256, max_running: 2, ..SchedCfg::default() },
             pool_blocks: 512,
             block_tokens: 128,
             seed: 4,

@@ -9,18 +9,25 @@
 #    requests sharing a 12k-token prefix over the paged KV pool, radix
 #    prefix cache on/off → BENCH_prefix.json (prefix-hit rate, TTFT
 #    with/without the cache, prefill tokens, KV bytes saved).
+# 3. Decode serving: `cargo bench --bench decode_serving` — 8 concurrent
+#    sequences × 64 decode steps, serial (B=1 loop) vs one GEMM-batched
+#    forward per step → BENCH_decode.json (tokens/sec each + speedup;
+#    identical generations asserted).
 #
 # Usage: scripts/bench_smoke.sh
 #   BENCH_OUT=/path/to.json   override the hot-path output location
 #   PREFIX_OUT=/path/to.json  override the prefix-serving output location
+#   DECODE_OUT=/path/to.json  override the decode-serving output location
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export BENCH_SMOKE=1
 export BENCH_OUT="${BENCH_OUT:-$PWD/BENCH_hotpath.json}"
 export PREFIX_OUT="${PREFIX_OUT:-$PWD/BENCH_prefix.json}"
+export DECODE_OUT="${DECODE_OUT:-$PWD/BENCH_decode.json}"
 
 cargo bench --manifest-path rust/Cargo.toml --bench micro_hotpath
 cargo bench --manifest-path rust/Cargo.toml --bench prefix_serving
+cargo bench --manifest-path rust/Cargo.toml --bench decode_serving
 
-echo "bench_smoke: wrote $BENCH_OUT and $PREFIX_OUT"
+echo "bench_smoke: wrote $BENCH_OUT, $PREFIX_OUT and $DECODE_OUT"
