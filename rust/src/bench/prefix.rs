@@ -5,10 +5,14 @@
 //! Eight requests share a 12k-token prefix. A cold engine (paged pool, no
 //! prefix cache) pays the full prefill eight times; a warm engine serves
 //! the prefix pages from the radix cache after the first request, so
-//! requests 2..8 prefill only their suffixes. Reports prefix-hit rate,
-//! TTFT with/without the cache, prefill-token counts and KV bytes saved,
-//! and writes `BENCH_prefix.json` (override with `PREFIX_OUT`) so the
-//! serving trajectory is tracked PR over PR.
+//! requests 2..8 prefill only their suffixes; the *in-flight* arm takes
+//! the whole burst on a cold cache — the first request leads and the
+//! other seven park behind its mid-prefill page publishes, so the shared
+//! prefix is prefilled exactly once across the batch (asserted). Reports
+//! prefix-hit rate, TTFT for all three arms, prefill-token counts and KV
+//! bytes saved, and writes `BENCH_prefix.json` (override with
+//! `PREFIX_OUT`) so the serving trajectory is tracked PR over PR and
+//! gated in CI by `scripts/check_bench.py`.
 
 use super::banner;
 use crate::coordinator::{Engine, EngineCfg, KvLayout, PolicySpec, SchedCfg};
@@ -63,12 +67,27 @@ fn run_batch(mut e: Engine, prefix: &[u32]) -> (f64, Engine) {
     (mean_ttft, e)
 }
 
+/// In-flight arm: the whole burst hits a COLD cache at once — the first
+/// request leads, the rest park behind its mid-prefill publishes, adopt
+/// the shared pages as they land, and prefill only their own suffixes.
+fn run_inflight(mut e: Engine, prefix: &[u32]) -> (f64, Engine) {
+    e.submit(prompt(prefix, 0), MAX_NEW, spec()).unwrap();
+    e.step().unwrap(); // the leader is mid-prefill when the burst arrives
+    for i in 1..N_REQUESTS {
+        e.submit(prompt(prefix, i), MAX_NEW, spec()).unwrap();
+    }
+    let results = e.run_to_completion().unwrap();
+    assert_eq!(results.len(), N_REQUESTS);
+    let mean_ttft = results.iter().map(|r| r.ttft_s).sum::<f64>() / results.len() as f64;
+    (mean_ttft, e)
+}
+
 /// The shared-prefix serving benchmark (see module docs).
 pub fn prefix_serving() -> crate::util::timing::Table {
     banner(
         "prefix_serving",
         "serving §prefix-cache",
-        "8 requests sharing a 12k-token prefix: paged pool, radix prefix cache on/off.",
+        "8 requests sharing a 12k-token prefix: paged pool; radix cache off / warm / in-flight.",
     );
     let mut rng = Rng::new(0xD0C);
     let prefix: Vec<u32> = (0..PREFIX_TOKENS).map(|_| rng.below(240) as u32 + 1).collect();
@@ -84,6 +103,21 @@ pub fn prefix_serving() -> crate::util::timing::Table {
     let warmup_prefill = warm.metrics.prefill_tokens;
     let (ttft_warm, warm) = run_batch(warm, &prefix);
     let batch_prefill = warm.metrics.prefill_tokens - warmup_prefill;
+
+    // In-flight: a cold cache takes the whole burst at once; the seven
+    // followers park behind the leader's mid-prefill publishes.
+    let (ttft_inflight, inflight) = run_inflight(mk_engine(true), &prefix);
+    let inflight_prefill = inflight.metrics.prefill_tokens;
+    assert_eq!(
+        inflight.metrics.inflight_followers as usize,
+        N_REQUESTS - 1,
+        "every request behind the leader must park, not recompute"
+    );
+    assert_eq!(
+        inflight_prefill as usize,
+        PREFIX_TOKENS + N_REQUESTS * SUFFIX_TOKENS,
+        "in-flight burst must prefill the shared prefix exactly once"
+    );
 
     let hit_rate = warm.metrics.prefix_hit_rate();
     let cached_per_req = (PREFIX_TOKENS / BLOCK_TOKENS) * BLOCK_TOKENS;
@@ -108,12 +142,21 @@ pub fn prefix_serving() -> crate::util::timing::Table {
         format!("{batch_prefill}"),
         format!("{}", warm.metrics.prefix_bytes_saved),
     ]);
+    table.row(vec![
+        "paged + in-flight burst".into(),
+        format!("{:.1}%", inflight.metrics.prefix_hit_rate() * 100.0),
+        format!("{:.1}", ttft_inflight * 1e3),
+        format!("{inflight_prefill}"),
+        format!("{}", inflight.metrics.prefix_bytes_saved),
+    ]);
     table.print();
     println!(
         "expected shape: warm batch prefills ≈ {} suffix tokens/request instead of {}; \
-         TTFT speedup ≈ prompt/suffix ratio\n",
+         TTFT speedup ≈ prompt/suffix ratio; the in-flight burst prefills the prefix \
+         ONCE for all {} requests\n",
         SUFFIX_TOKENS,
-        PREFIX_TOKENS + SUFFIX_TOKENS
+        PREFIX_TOKENS + SUFFIX_TOKENS,
+        N_REQUESTS
     );
 
     // Acceptance sanity: the warm batch must not have prefilled any cached
@@ -137,8 +180,18 @@ pub fn prefix_serving() -> crate::util::timing::Table {
         ("ttft-cold-ms", Json::num(ttft_cold * 1e3)),
         ("ttft-warm-ms", Json::num(ttft_warm * 1e3)),
         ("ttft-speedup", Json::num(if ttft_warm > 0.0 { ttft_cold / ttft_warm } else { 0.0 })),
+        ("ttft-inflight-ms", Json::num(ttft_inflight * 1e3)),
+        (
+            "inflight-speedup",
+            Json::num(if ttft_inflight > 0.0 { ttft_cold / ttft_inflight } else { 0.0 }),
+        ),
         ("prefill-tokens-cold", Json::num(cold.metrics.prefill_tokens as f64)),
         ("prefill-tokens-warm-batch", Json::num(batch_prefill as f64)),
+        ("prefill-tokens-inflight", Json::num(inflight_prefill as f64)),
+        (
+            "inflight-adopted-tokens",
+            Json::num(inflight.metrics.inflight_adopted_tokens as f64),
+        ),
         ("kv-bytes-saved", Json::num(warm.metrics.prefix_bytes_saved as f64)),
         ("pool-resident-bytes", Json::num(warm.metrics.pool_resident_bytes as f64)),
     ]);

@@ -26,6 +26,19 @@ pub enum Backend {
     Pjrt(Box<PjrtBackend>),
 }
 
+/// Length of the longest common prefix of two token sequences.
+fn common_prefix_len(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
 enum SeqBack {
     Host { state: SeqState, last_hidden: Vec<f32> },
     /// Host backend over the shared paged pool: no private KV — the block
@@ -116,6 +129,19 @@ impl Engine {
         // KV is bit-identical to a cold serial recompute under any load.
         if matches!(cfg.kv, KvLayout::Paged { prefix_cache: true }) {
             cfg.sched.deterministic_chunks = true;
+            // Cache cursors advance in lcm(chunk width, page size) units
+            // (see `Engine::grid_pages`); when neither divides the other
+            // that quantum balloons and silently discards short matches.
+            let w = cfg.sched.det_chunk_width();
+            if w % cfg.block_tokens != 0 && cfg.block_tokens % w != 0 {
+                eprintln!(
+                    "quoka: prefix-cache reuse quantized to lcm({w}-token chunks, \
+                     {}-token pages) = {} tokens; align b_cp/step_tokens/block_tokens \
+                     for finer-grained reuse",
+                    cfg.block_tokens,
+                    w / gcd(w, cfg.block_tokens) * cfg.block_tokens,
+                );
+            }
         }
         let pool = match cfg.kv {
             KvLayout::Private => None,
@@ -160,11 +186,37 @@ impl Engine {
         }
     }
 
+    /// Prefix-cache cursor quantum, in pages: the smallest page count
+    /// whose token length is a multiple of BOTH the page size and the
+    /// deterministic chunk width. Every cache-resume cursor (submit-time
+    /// match, in-flight adoption, wake) is kept a multiple of this, so a
+    /// resumed prefill always restarts ON the deterministic chunk grid —
+    /// off-grid boundaries would make a sparse policy's recomputed (and
+    /// republished!) KV differ from a cold run — and always at a page
+    /// boundary, so it writes only its own fresh reserved pages (no
+    /// copy-on-write, no allocation beyond the admission reservation).
+    ///
+    /// When the chunk width and page size divide evenly (either way) the
+    /// quantum is at most one chunk; otherwise it balloons to their lcm
+    /// and short matches quantize away — `with_backend` warns about such
+    /// geometries at engine construction.
+    fn grid_pages(&self) -> usize {
+        let bt = self.blocks.block_tokens();
+        let w = self.sched.cfg.det_chunk_width();
+        // lcm(w, bt) / bt
+        (w / gcd(w, bt)).max(1)
+    }
+
     /// Submit a request; returns its id. Fails fast for policies the
     /// backend cannot execute. In paged+prefix mode the radix cache is
     /// probed here: matched pages are retained and become the head of the
     /// sequence's block table, and the prefill cursor starts after them —
-    /// those chunks are never scheduled.
+    /// those chunks are never scheduled. If a sequence in the same
+    /// namespace is *still prefilling* a longer shared prefix, the new
+    /// request additionally subscribes to it ([`Phase::WaitingOnPrefix`]):
+    /// it consumes no step budget while the producer publishes the shared
+    /// pages, adopts each page as it lands, and only ever prefills what
+    /// the producer will not cover.
     pub fn submit(&mut self, tokens: Vec<u32>, max_new: usize, policy: PolicySpec) -> Result<u64> {
         anyhow::ensure!(!tokens.is_empty(), "empty prompt");
         if matches!(self.backend, Backend::Pjrt(_)) {
@@ -195,10 +247,17 @@ impl Engine {
         self.next_id += 1;
         let req = Request { id, tokens, max_new_tokens: max_new.max(1), policy };
         let mut entry = SeqEntry::new(req);
+        let grid = self.grid_pages();
         if let (Some(pool), Some(radix)) = (self.pool.as_mut(), self.radix.as_mut()) {
             self.metrics.record_prefix_lookup(entry.req.tokens.len());
-            let ns = policy_ns(&entry.req.policy.name, entry.req.policy.budget, self.sched.cfg.b_cp);
-            let matched = radix.lookup(ns, &entry.req.tokens);
+            let ns =
+                policy_ns(&entry.req.policy.name, entry.req.policy.budget, self.sched.cfg.b_cp);
+            let mut matched = radix.lookup(ns, &entry.req.tokens);
+            // Keep the match a multiple of the cursor quantum (see
+            // [`Engine::grid_pages`]): resuming off the deterministic
+            // chunk grid would recompute — and republish — KV with
+            // boundaries no cold run has.
+            matched.truncate(matched.len() - matched.len() % grid);
             if !matched.is_empty() {
                 for &b in &matched {
                     pool.retain(b);
@@ -209,6 +268,56 @@ impl Engine {
                 entry.phase = Phase::Prefill { next: cached };
                 entry.blocks = matched;
             }
+            entry.published_pages = entry.blocks.len();
+
+            // In-flight subscription: when a sequence in the same
+            // namespace is still prefilling a longer shared prefix than
+            // the cache holds, park behind it instead of recomputing
+            // tokens it is about to publish. The wait target is the
+            // shared prefix in whole pages, capped by the producer's own
+            // full pages and by the never-match-the-whole-prompt rule.
+            let bt = self.blocks.block_tokens();
+            let cap = (entry.req.tokens.len() - 1) / bt;
+            let matched_pages = entry.blocks.len();
+            let mut best: Option<(usize, u64)> = None; // (target, producer)
+            // Oldest-first scan with an early exit at the cap: deepest
+            // shared prefix wins, oldest producer breaks ties, and a burst
+            // of identical prompts costs one prefix comparison per submit
+            // (the first candidate — the original leader — hits the cap).
+            let mut cands: Vec<u64> = self
+                .seqs
+                .iter()
+                .filter(|(_, le)| {
+                    matches!(le.phase, Phase::Prefill { .. } | Phase::WaitingOnPrefix { .. })
+                })
+                .map(|(&lid, _)| lid)
+                .collect();
+            cands.sort_unstable();
+            for lid in cands {
+                let le = &self.seqs[&lid];
+                let lns =
+                    policy_ns(&le.req.policy.name, le.req.policy.budget, self.sched.cfg.b_cp);
+                if lns != ns {
+                    continue;
+                }
+                let shared = common_prefix_len(&entry.req.tokens, &le.req.tokens);
+                // Quantized like the match above: the wait ends on a
+                // cursor the resumed prefill can continue from exactly.
+                let mut target = (shared / bt).min(le.req.tokens.len() / bt).min(cap);
+                target -= target % grid;
+                if target > matched_pages && best.map(|(t, _)| target > t).unwrap_or(true) {
+                    best = Some((target, lid));
+                    if target + grid > cap {
+                        break; // nothing deeper exists at this quantum
+                    }
+                }
+            }
+            if let Some((target, lid)) = best {
+                entry.waiting_on = Some(lid);
+                entry.wait_pages = target;
+                entry.phase = Phase::WaitingOnPrefix { next: entry.cached_tokens };
+                self.metrics.inflight_followers += 1;
+            }
         }
         self.seqs.insert(id, entry);
         self.sched.enqueue(id);
@@ -218,6 +327,150 @@ impl Engine {
     /// Number of unfinished requests.
     pub fn pending(&self) -> usize {
         self.seqs.len()
+    }
+
+    /// Cancel a queued or running request (client abort). Its pages are
+    /// released and it reports an empty generation through
+    /// [`Engine::take_results`]. A paged publisher cancelled mid-prefill
+    /// also withdraws the pages it published in flight that no other
+    /// sequence adopted (adopted and shared pages survive — the radix
+    /// tail-unpublish is refcount-guarded), and any follower parked behind
+    /// it falls back to normal prefill at its next step, keeping
+    /// everything it adopted so far. Returns false for unknown ids.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        let Some(entry) = self.seqs.remove(&id) else {
+            return false;
+        };
+        self.sched.waiting.retain(|&w| w != id);
+        self.sched.retire(id);
+        self.backs.remove(&id);
+        self.discard(entry);
+        true
+    }
+
+    /// Shared teardown for a request that ends unserved (queue rejection
+    /// or cancel): every page goes back through the pool's refcounts;
+    /// pages the request published in flight beyond its adopted prefix
+    /// are withdrawn if no other sequence adopted them (a completed
+    /// prefill's pages stay — they are whole, exact, and useful); and an
+    /// empty-generation result is reported.
+    fn discard(&mut self, mut entry: SeqEntry) {
+        let mid_prefill =
+            matches!(entry.phase, Phase::Prefill { .. } | Phase::WaitingOnPrefix { .. });
+        if let Some(pool) = self.pool.as_mut() {
+            pool.release_seq(&mut entry.blocks, &mut self.blocks);
+            let keep = entry.cached_tokens / self.blocks.block_tokens();
+            if mid_prefill && entry.published_pages > keep {
+                if let Some(radix) = self.radix.as_mut() {
+                    let ns = policy_ns(
+                        &entry.req.policy.name,
+                        entry.req.policy.budget,
+                        self.sched.cfg.b_cp,
+                    );
+                    radix.unpublish_tail(ns, &entry.req.tokens, keep, pool, &mut self.blocks);
+                }
+            }
+        } else {
+            self.blocks.release(&mut entry.blocks);
+        }
+        // The empty generation IS the unserved sentinel (the only signal
+        // `RequestResult` carries): a decode-phase cancel must not hand
+        // back a truncated generation that reads as a completed request.
+        entry.generated.clear();
+        entry.finished_at = Some(Instant::now());
+        self.results.push(entry.result());
+    }
+
+    /// Poll every parked follower against the radix cache: adopt pages its
+    /// producer published since the last poll (handing back the follower's
+    /// own fresh reservation page for each slot in exchange for the shared
+    /// one), and wake it into `Prefill` once the shared region is covered
+    /// or its producer stopped producing (retired, cancelled, rejected).
+    /// Whatever the cache does not cover by wake time is recomputed
+    /// normally — the abort fallback; adopted pages are always kept.
+    fn advance_followers(&mut self) {
+        if self.radix.is_none() {
+            return;
+        }
+        let mut ids: Vec<u64> = self
+            .seqs
+            .iter()
+            .filter(|(_, e)| matches!(e.phase, Phase::WaitingOnPrefix { .. }))
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable();
+        let bt = self.blocks.block_tokens();
+        let b_cp = self.sched.cfg.b_cp;
+        let grid = self.grid_pages();
+        for id in ids {
+            let (ns, producing, producer_watermark) = {
+                let e = &self.seqs[&id];
+                let producer = e.waiting_on.and_then(|lid| self.seqs.get(&lid));
+                let producing = producer
+                    .map(|l| {
+                        matches!(l.phase, Phase::Prefill { .. } | Phase::WaitingOnPrefix { .. })
+                    })
+                    .unwrap_or(false);
+                let watermark = producer.map(|l| l.published_pages).unwrap_or(usize::MAX);
+                (policy_ns(&e.req.policy.name, e.req.policy.budget, b_cp), producing, watermark)
+            };
+            let radix = self.radix.as_ref().unwrap();
+            let pool = self.pool.as_mut().unwrap();
+            let entry = self.seqs.get_mut(&id).unwrap();
+            let cur_pages = entry.cached_tokens / bt;
+            // Skip the tree walk while a live producer's publish watermark
+            // has nothing new for this cursor (within the wait window the
+            // producer's pages ARE the shared pages, so its watermark is
+            // exact); a vanished producer gets one final full poll below.
+            let mut fresh = if producing && producer_watermark <= cur_pages {
+                Vec::new()
+            } else {
+                radix.extend_match(ns, &entry.req.tokens, cur_pages)
+            };
+            // Adopt in cursor-quantum units only (see
+            // [`Engine::grid_pages`]): the cursor must sit on the
+            // deterministic chunk grid at every possible wake point, so a
+            // producer abort never strands it mid-chunk.
+            fresh.truncate(fresh.len() - fresh.len() % grid);
+            let adopted = fresh.len();
+            for (off, &b) in fresh.iter().enumerate() {
+                let j = cur_pages + off;
+                pool.retain(b);
+                if j < entry.blocks.len() {
+                    // Admitted follower: swap its untouched reservation
+                    // page for the shared one and hand the former back.
+                    let old = entry.blocks[j];
+                    entry.blocks[j] = b;
+                    pool.release_block(old, &mut self.blocks);
+                } else {
+                    // Still queued: the table is just the adopted head.
+                    entry.blocks.push(b);
+                }
+            }
+            if adopted > 0 {
+                let first = entry.cached_tokens == 0;
+                entry.cached_tokens += adopted * bt;
+                entry.published_pages = entry.published_pages.max(cur_pages + adopted);
+                let bytes = adopted * bt * pool.token_bytes();
+                self.metrics.record_inflight_adopt(adopted * bt, bytes, first);
+                if let Some(SeqBack::HostPaged { len, .. }) = self.backs.get_mut(&id) {
+                    *len = entry.cached_tokens;
+                }
+            }
+            let cursor = entry.cached_tokens;
+            if cursor / bt >= entry.wait_pages || !producing {
+                // Wake. The cursor is on the deterministic chunk grid by
+                // construction (match, adoption and the wait target are
+                // all quantized to [`Engine::grid_pages`]), so the resumed
+                // prefill continues with exactly a cold run's chunk
+                // boundaries and writes only its own reserved pages.
+                debug_assert_eq!(cursor % (grid * bt), 0, "wake cursor off the chunk grid");
+                entry.waiting_on = None;
+                entry.phase = Phase::Prefill { next: cursor };
+            } else {
+                entry.phase = Phase::WaitingOnPrefix { next: cursor };
+            }
+        }
     }
 
     /// Drain finished results.
@@ -240,18 +493,19 @@ impl Engine {
             let need = entry.residual_blocks(&self.blocks);
             if need > self.blocks.total_blocks().saturating_sub(held) {
                 self.sched.waiting.pop_front();
-                let mut entry = self.seqs.remove(&head).unwrap();
-                // Hand any prefix-cache pages back before rejecting.
-                if let Some(pool) = self.pool.as_mut() {
-                    pool.release_seq(&mut entry.blocks, &mut self.blocks);
-                }
-                entry.finished_at = Some(Instant::now());
-                let r = entry.result(); // empty generation marks rejection
-                self.results.push(r);
+                let entry = self.seqs.remove(&head).unwrap();
+                // Pages (and the empty-generation rejection result) go
+                // through the shared unserved-teardown path.
+                self.discard(entry);
             } else {
                 break;
             }
         }
+        // Extend and wake parked followers BEFORE planning: a producer
+        // that retired, aborted or was rejected since the last step must
+        // not leave its followers parked, and pages adopted here shrink
+        // the pool pressure the admission/evict checks below see.
+        self.advance_followers();
         // Paged mode: when the head-of-line can't be admitted from the free
         // list alone, evict cold prefix-cache pages (LRU leaves with no
         // live owner) to make room before planning.
@@ -289,7 +543,13 @@ impl Engine {
             self.backs.insert(*id, back);
         }
         if plan.items.is_empty() {
-            return Ok(!self.seqs.is_empty() && !self.sched.waiting.is_empty());
+            // Parked followers are forward progress in disguise: their
+            // producer chain bottoms out at a queued or schedulable
+            // prefill, so keep stepping (the wake pass above unparks them
+            // the moment their producer stops producing).
+            let parked =
+                self.seqs.values().any(|e| matches!(e.phase, Phase::WaitingOnPrefix { .. }));
+            return Ok(!self.seqs.is_empty() && (!self.sched.waiting.is_empty() || parked));
         }
 
         let t0 = Instant::now();
@@ -318,6 +578,9 @@ impl Engine {
                 prefill_toks += len;
             }
         }
+        // Pages published by this step's chunks are adoptable immediately:
+        // poll the followers again so a wake never costs an extra step.
+        self.advance_followers();
         self.metrics
             .record_step(t0.elapsed(), prefill_toks, decode_ids.len(), fused_decode);
         if let Some(pool) = &self.pool {
@@ -428,15 +691,15 @@ impl Engine {
     /// Prefill one chunk through the shared paged pool. The chunk's target
     /// pages were reserved at admission; shared pages in the write range
     /// (only possible through unusual block-table surgery — prefix pages
-    /// are never in the write range) are copy-on-write'd first. When this
-    /// is the prompt's last chunk, the prompt's full pages are published to
-    /// the radix cache so later requests can reuse them.
+    /// are never in the write range) are copy-on-write'd first. Every
+    /// prompt page the chunk completes is published to the radix cache
+    /// immediately — mid-prefill, not at completion — so concurrent
+    /// requests sharing the prefix adopt pages while they are hot.
     fn run_prefill_paged(&mut self, id: u64, start: usize, len: usize) -> Result<()> {
         let entry = self.seqs.get_mut(&id).context("unknown seq")?;
         let chunk: Vec<u32> = entry.req.tokens[start..start + len].to_vec();
         let spec = entry.req.policy.clone();
         let is_last = start + len == entry.req.tokens.len();
-        let prompt_len = entry.req.tokens.len();
         let mut blocks = std::mem::take(&mut entry.blocks);
 
         let pool = self.pool.as_mut().expect("paged prefill without a pool");
@@ -476,19 +739,26 @@ impl Engine {
         }
         self.metrics.attention_s += ta.elapsed().as_secs_f64();
 
-        // Publish the prompt's full pages to the prefix cache.
-        if is_last {
-            if let Some(radix) = self.radix.as_mut() {
-                let bt = self.blocks.block_tokens();
-                let n_full = prompt_len / bt;
-                if n_full > 0 {
-                    let toks: Vec<u32> = {
-                        let e = self.seqs.get(&id).unwrap();
-                        e.req.tokens[..n_full * bt].to_vec()
-                    };
-                    let ns = policy_ns(&spec.name, spec.budget, self.sched.cfg.b_cp);
-                    radix.insert(ns, &toks, &blocks[..n_full], pool);
-                }
+        // Publish every prompt page this chunk completed — in flight, not
+        // at prefill completion — so a concurrent request sharing the
+        // prefix adopts pages while this sequence is still prefilling.
+        // Only whole pages are ever inserted; a page straddling the chunk
+        // boundary waits for the chunk that writes its last slot.
+        if let Some(radix) = self.radix.as_mut() {
+            let bt = self.blocks.block_tokens();
+            let already = self.seqs.get(&id).map(|e| e.published_pages).unwrap_or(0);
+            let n_full = (start + len) / bt; // start + len <= prompt_len
+            if n_full > already {
+                let toks = &self.seqs.get(&id).unwrap().req.tokens[..n_full * bt];
+                let ns = policy_ns(&spec.name, spec.budget, self.sched.cfg.b_cp);
+                let inserted = radix.stats.inserted_blocks;
+                let w = radix.publish_upto(ns, toks, &blocks[..n_full], n_full * bt, pool);
+                // Count pages this prefill actually inserted — a span
+                // already cached by an earlier request's pages is a no-op
+                // in the tree and must not inflate the metric.
+                self.metrics.inflight_published_pages +=
+                    radix.stats.inserted_blocks - inserted;
+                self.seqs.get_mut(&id).unwrap().published_pages = w;
             }
         }
 
@@ -901,6 +1171,129 @@ mod tests {
             4,
             "only the tree keeps pages leased"
         );
+    }
+
+    #[test]
+    fn follower_parks_and_adopts_pages_published_in_flight() {
+        // A second identical prompt submitted mid-prefill must not
+        // recompute pages the first is publishing: it parks, adopts, and
+        // prefills only the never-cacheable final page.
+        let mut e = paged_engine(true);
+        let spec = || PolicySpec { name: "quoka".into(), budget: 24 };
+        let toks = prompt(64, 3); // 4 pages at bt=16
+        let a = e.submit(toks.clone(), 3, spec()).unwrap();
+        e.step().unwrap(); // A prefills [0,16): page 0 published in flight
+        assert_eq!(e.metrics.inflight_published_pages, 1);
+        let b = e.submit(toks.clone(), 3, spec()).unwrap();
+        assert_eq!(e.metrics.inflight_followers, 1, "B parks behind A");
+        let mut results = e.run_to_completion().unwrap();
+        results.sort_by_key(|r| r.id);
+        assert_eq!(results.len(), 2);
+        // B's prefix: 1 page matched at submit + 2 adopted while parked
+        // (the 4th page is capped — at least one token always prefills).
+        let rb = results.iter().find(|r| r.id == b).unwrap();
+        assert_eq!(rb.cached_prefix_tokens, 48);
+        assert_eq!(e.metrics.inflight_adopted_tokens, 32);
+        assert_eq!(
+            e.metrics.prefill_tokens, 80,
+            "prefix chunks run exactly once: 64 (A) + 16 (B's final page)"
+        );
+        // Shared pages + a deterministic tail ⇒ identical generations.
+        let ra = results.iter().find(|r| r.id == a).unwrap();
+        assert_eq!(ra.generated, rb.generated);
+        assert_eq!(ra.generated.len(), 3);
+    }
+
+    #[test]
+    fn cache_resume_stays_on_the_deterministic_chunk_grid() {
+        // b_cp spans 2 pages, so a cached chain with an odd page count
+        // must be matched only in whole-chunk units: resuming mid-chunk
+        // would recompute — and republish — KV with boundaries no cold
+        // run has (sparse KV depends on chunk boundaries).
+        let mk = || {
+            Engine::new_host(
+                "tiny",
+                EngineCfg {
+                    sched: SchedCfg {
+                        b_cp: 32,
+                        step_tokens: 96,
+                        max_running: 4,
+                        ..SchedCfg::default()
+                    },
+                    pool_blocks: 64,
+                    block_tokens: 16,
+                    seed: 1,
+                    kv: KvLayout::Paged { prefix_cache: true },
+                },
+            )
+            .unwrap()
+        };
+        let spec = || PolicySpec { name: "quoka".into(), budget: 24 };
+        let long = prompt(80, 7); // 5 pages — odd at a 2-page chunk grid
+        let mut e = mk();
+        e.submit(long.clone(), 1, spec()).unwrap();
+        e.run_to_completion().unwrap();
+        assert_eq!(e.radix.as_ref().unwrap().cached_blocks(), 5);
+        // A prompt extending the first 50 tokens could match 3 pages, but
+        // only 2 of them lie on the 32-token chunk grid.
+        let warm_prompt: Vec<u32> = long[..50].to_vec();
+        e.submit(warm_prompt.clone(), 2, spec()).unwrap();
+        let r = e.run_to_completion().unwrap().remove(0);
+        assert_eq!(r.cached_prefix_tokens, 32, "match truncated to the chunk grid");
+        // Exactness: the warm resume equals a cold run of the same prompt.
+        let mut cold = mk();
+        cold.submit(warm_prompt, 2, spec()).unwrap();
+        let want = cold.run_to_completion().unwrap().remove(0);
+        assert_eq!(want.cached_prefix_tokens, 0);
+        assert_eq!(r.generated, want.generated, "grid-aligned resume is bit-exact");
+    }
+
+    #[test]
+    fn cancel_mid_prefill_unpublishes_unadopted_tail() {
+        let mut e = paged_engine(true);
+        let spec = || PolicySpec { name: "quoka".into(), budget: 24 };
+        let id = e.submit(prompt(64, 5), 2, spec()).unwrap();
+        e.step().unwrap();
+        e.step().unwrap(); // two chunks prefilled, two pages published
+        assert_eq!(e.radix.as_ref().unwrap().cached_blocks(), 2);
+        assert!(e.cancel(id), "known id cancels");
+        assert!(!e.cancel(id), "already gone");
+        assert_eq!(
+            e.radix.as_ref().unwrap().cached_blocks(),
+            0,
+            "aborted publisher's unadopted pages are withdrawn"
+        );
+        assert_eq!(e.blocks.free_blocks(), 64, "every page returned");
+        assert_eq!(e.pending(), 0);
+        let r = e.take_results();
+        assert_eq!(r.len(), 1);
+        assert!(r[0].generated.is_empty(), "cancelled, not served");
+    }
+
+    #[test]
+    fn cancel_after_prefill_keeps_published_pages() {
+        // Cancelling a decoding sequence is not an abort of its prefill:
+        // the published prompt pages are whole and exact — they stay.
+        let mut e = paged_engine(true);
+        let spec = || PolicySpec { name: "quoka".into(), budget: 24 };
+        let toks = prompt(32, 6);
+        let id = e.submit(toks.clone(), 8, spec()).unwrap();
+        for _ in 0..4 {
+            e.step().unwrap(); // prefill completes, decode begins
+        }
+        assert!(e.cancel(id));
+        let rc = e.take_results();
+        assert_eq!(rc.len(), 1);
+        assert!(
+            rc[0].generated.is_empty(),
+            "a decode-phase cancel reports the unserved sentinel, not a truncated generation"
+        );
+        assert_eq!(e.radix.as_ref().unwrap().cached_blocks(), 2);
+        // A later identical request reuses them.
+        e.submit(toks, 2, spec()).unwrap();
+        let r = e.run_to_completion().unwrap();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].cached_prefix_tokens, 16, "one page reused (cap leaves one)");
     }
 
     #[test]

@@ -44,6 +44,18 @@ pub struct Metrics {
     pub prefix_hit_tokens: u64,
     /// KV bytes whose recompute + storage the prefix cache avoided.
     pub prefix_bytes_saved: u64,
+    /// Prompt pages the in-flight publish hook actually *inserted* into
+    /// the radix cache (every paged+prefix prefill publishes as it goes;
+    /// spans already cached by an earlier request are no-ops and are not
+    /// counted).
+    pub inflight_published_pages: u64,
+    /// Requests that parked as followers of an in-flight prefill instead
+    /// of recomputing a prefix another sequence was already producing.
+    pub inflight_followers: u64,
+    /// Prompt tokens followers adopted from pages published while the
+    /// producing prefill was still running (work shared "while hot"; a
+    /// subset of `prefix_hit_tokens`).
+    pub inflight_adopted_tokens: u64,
 }
 
 impl Metrics {
@@ -92,6 +104,19 @@ impl Metrics {
         self.prefix_hits += 1;
         self.prefix_hit_tokens += hit_tokens as u64;
         self.prefix_bytes_saved += bytes_saved as u64;
+    }
+
+    /// Record a follower adopting freshly published in-flight pages.
+    /// Counts toward the prefix-hit token/byte totals; the request itself
+    /// is counted as a hit only once (`first_for_request` — it may already
+    /// have been counted at submit if the lookup matched pages then).
+    pub fn record_inflight_adopt(&mut self, tokens: usize, bytes: usize, first_for_request: bool) {
+        self.inflight_adopted_tokens += tokens as u64;
+        self.prefix_hit_tokens += tokens as u64;
+        self.prefix_bytes_saved += bytes as u64;
+        if first_for_request {
+            self.prefix_hits += 1;
+        }
     }
 
     /// Fraction of looked-up prompt tokens served from the prefix cache.
@@ -179,6 +204,14 @@ impl Metrics {
                 self.prefix_bytes_saved,
             ));
         }
+        if self.inflight_followers > 0 || self.inflight_published_pages > 0 {
+            s.push_str(&format!(
+                " inflight_followers={} inflight_adopted_tok={} inflight_published_pages={}",
+                self.inflight_followers,
+                self.inflight_adopted_tokens,
+                self.inflight_published_pages,
+            ));
+        }
         s
     }
 }
@@ -226,5 +259,27 @@ mod tests {
         assert_eq!(p.decode_tokens, 8);
         assert!(p.decode_batch_hist.is_empty());
         assert!(!p.summary().contains("decode_batch_hist"), "{}", p.summary());
+    }
+
+    #[test]
+    fn inflight_adoption_counts_toward_prefix_totals() {
+        let mut m = Metrics::default();
+        m.record_prefix_lookup(200);
+        // Nothing cached at submit; the request parks and later adopts 128
+        // tokens while the producer is still prefilling.
+        m.inflight_followers += 1;
+        m.record_inflight_adopt(96, 960, true);
+        m.record_inflight_adopt(32, 320, false);
+        assert_eq!(m.prefix_hits, 1, "one request, one hit");
+        assert_eq!(m.prefix_hit_tokens, 128);
+        assert_eq!(m.inflight_adopted_tokens, 128);
+        assert_eq!(m.prefix_bytes_saved, 1280);
+        assert!((m.prefix_hit_rate() - 128.0 / 200.0).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("inflight_followers=1"), "{s}");
+        assert!(s.contains("inflight_adopted_tok=128"), "{s}");
+        // No in-flight activity ⇒ no in-flight section in the summary.
+        let q = Metrics::default();
+        assert!(!q.summary().contains("inflight"), "{}", q.summary());
     }
 }

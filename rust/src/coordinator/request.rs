@@ -49,6 +49,13 @@ pub struct RequestResult {
 pub enum Phase {
     /// `next` = offset of the next un-prefilled prompt token.
     Prefill { next: usize },
+    /// Parked follower of an in-flight prefill publishing the same prefix:
+    /// the scheduler gives it no step budget; the engine keeps extending
+    /// `next` as the producing sequence publishes pages, and wakes it into
+    /// `Prefill { next }` when the shared region is covered or the
+    /// producer stops producing (retired, cancelled, rejected) — whatever
+    /// the cache does not cover by then is recomputed normally.
+    WaitingOnPrefix { next: usize },
     Decode,
     Finished,
 }
@@ -66,8 +73,20 @@ pub struct SeqEntry {
     /// of the table with shared pages before admission.
     pub blocks: Vec<u32>,
     /// Prompt tokens covered by shared prefix pages (prefill starts after
-    /// them).
+    /// them). Grows while parked in [`Phase::WaitingOnPrefix`] as the
+    /// producing sequence publishes more pages.
     pub cached_tokens: usize,
+    /// In-flight subscription: the sequence id whose prefill this follower
+    /// is waiting on, if any.
+    pub waiting_on: Option<u64>,
+    /// Page count at which the in-flight wait ends (the shared prefix in
+    /// whole pages, capped so at least one token is always left to
+    /// prefill).
+    pub wait_pages: usize,
+    /// Pages of this sequence's own prompt already in the radix cache
+    /// (publish watermark; starts at the submit-time match and advances as
+    /// completed pages are published mid-prefill).
+    pub published_pages: usize,
 }
 
 impl SeqEntry {
@@ -81,6 +100,9 @@ impl SeqEntry {
             finished_at: None,
             blocks: Vec::new(),
             cached_tokens: 0,
+            waiting_on: None,
+            wait_pages: 0,
+            published_pages: 0,
         }
     }
 
@@ -98,7 +120,7 @@ impl SeqEntry {
     /// Total tokens this sequence holds in the KV cache right now.
     pub fn cache_tokens(&self) -> usize {
         let prefilled = match self.phase {
-            Phase::Prefill { next } => next,
+            Phase::Prefill { next } | Phase::WaitingOnPrefix { next } => next,
             _ => self.req.tokens.len(),
         };
         prefilled + self.generated.len()
@@ -147,6 +169,16 @@ mod tests {
         e.phase = Phase::Decode;
         e.generated.push(9);
         assert_eq!(e.cache_tokens(), 301);
+    }
+
+    #[test]
+    fn parked_follower_counts_only_adopted_tokens() {
+        // A WaitingOnPrefix sequence has prefilled nothing itself; its KV
+        // residency is exactly the pages it adopted so far.
+        let mut e = SeqEntry::new(req());
+        e.phase = Phase::WaitingOnPrefix { next: 64 };
+        e.cached_tokens = 64;
+        assert_eq!(e.cache_tokens(), 64);
     }
 
     #[test]

@@ -31,6 +31,19 @@ pub struct SchedCfg {
     pub deterministic_chunks: bool,
 }
 
+impl SchedCfg {
+    /// The load-independent prefill chunk width used when
+    /// `deterministic_chunks` is on: `b_cp` capped so that even a
+    /// worst-case decode-loaded step (one decode per other running
+    /// sequence) always fits one full-width chunk. Every deterministic
+    /// chunk starts at a multiple of this width — the "chunk grid" that
+    /// cache-published KV is computed on; resume cursors must land on it
+    /// (see `Engine::advance_followers` and the warm-submit path).
+    pub fn det_chunk_width(&self) -> usize {
+        self.b_cp.min(self.step_tokens.saturating_sub(self.max_running - 1).max(1)).max(1)
+    }
+}
+
 impl Default for SchedCfg {
     fn default() -> Self {
         SchedCfg { b_cp: 128, step_tokens: 256, max_running: 8, deterministic_chunks: false }
@@ -52,6 +65,10 @@ pub struct StepPlan {
     pub items: Vec<WorkItem>,
     pub admitted: Vec<u64>,
     pub scheduled_tokens: usize,
+    /// Running sequences parked in [`Phase::WaitingOnPrefix`]: they hold
+    /// their KV reservation but consume zero step budget — their prefix is
+    /// being produced by another sequence's in-flight prefill.
+    pub parked: usize,
 }
 
 /// FCFS scheduler state.
@@ -122,6 +139,14 @@ impl Scheduler {
         }
 
         // ---- prefill chunks with the remaining budget ----
+        // Followers of an in-flight prefill are parked, not scheduled:
+        // their next tokens are being produced by another sequence, so a
+        // chunk here would be pure duplicate work.
+        plan.parked = self
+            .running
+            .iter()
+            .filter(|id| matches!(seqs[id].phase, Phase::WaitingOnPrefix { .. }))
+            .count();
         for &id in &self.running {
             if budget == 0 {
                 break;
@@ -139,16 +164,12 @@ impl Scheduler {
                     // the current budget cannot hold at full width is
                     // deferred to a later step, not truncated
                     // (cache-published KV must match a cold serial
-                    // recompute bit for bit). The width caps at
-                    // `step_tokens - (max_running - 1)`: decodes (at most
-                    // one per running sequence, minus the slot this
-                    // prefiller occupies) are scheduled first, so a full
-                    // step ALWAYS has room for the first prefill
-                    // candidate at this width — deferral can delay a
-                    // chunk, never starve it.
-                    let headroom =
-                        self.cfg.step_tokens.saturating_sub(self.cfg.max_running - 1).max(1);
-                    let det_len = want.min(headroom);
+                    // recompute bit for bit). See
+                    // [`SchedCfg::det_chunk_width`]: the width reserves
+                    // worst-case decode headroom, so a full step ALWAYS
+                    // has room for the first prefill candidate — deferral
+                    // can delay a chunk, never starve it.
+                    let det_len = want.min(self.cfg.det_chunk_width());
                     if budget < det_len {
                         continue;
                     }
@@ -328,6 +349,38 @@ mod tests {
             ],
             "decode-loaded step must still fit one full deterministic chunk"
         );
+    }
+
+    #[test]
+    fn waiting_on_prefix_is_admitted_but_never_scheduled() {
+        // A parked follower holds its reservation (admission) but gets no
+        // work items — its prefix tokens are in flight on another
+        // sequence — and the freed budget flows to real prefills.
+        let mut seqs = HashMap::new();
+        let mut blocks = BlockAllocator::new(64, 16);
+        let cfg = SchedCfg { b_cp: 16, step_tokens: 32, max_running: 4, ..SchedCfg::default() };
+        let mut s = Scheduler::new(cfg);
+        mk(&mut seqs, 1, 64, 2); // the producer
+        mk(&mut seqs, 2, 64, 2); // the follower
+        seqs.get_mut(&2).unwrap().phase = Phase::WaitingOnPrefix { next: 0 };
+        s.enqueue(1);
+        s.enqueue(2);
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(plan.admitted, vec![1, 2], "parked follower still reserves KV");
+        assert_eq!(plan.parked, 1);
+        assert!(
+            plan.items.iter().all(|it| !matches!(it, WorkItem::PrefillChunk { id: 2, .. })),
+            "no chunk may be scheduled for a parked follower: {:?}",
+            plan.items
+        );
+        // Woken into Prefill at its adopted cursor, it schedules normally.
+        seqs.get_mut(&2).unwrap().phase = Phase::Prefill { next: 48 };
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(plan.parked, 0);
+        assert!(plan
+            .items
+            .iter()
+            .any(|it| matches!(it, WorkItem::PrefillChunk { id: 2, start: 48, .. })));
     }
 
     #[test]

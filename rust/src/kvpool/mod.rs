@@ -49,8 +49,16 @@
 //!   boundaries; reused KV may then differ slightly from a cold
 //!   recompute — an approximation of the same order the sparse policy
 //!   already accepts (exact reuse is pinned by the serial-load e2e test).
-//! * Only *full* pages of the **prompt** are inserted, at prefill
-//!   completion; generated tokens never enter the tree.
+//! * Only *full* pages of the **prompt** are inserted — **in flight**, as
+//!   each prefill chunk completes them ([`RadixCache::publish_upto`]), so
+//!   concurrent requests sharing a prefix park behind the producing
+//!   sequence and adopt its pages instead of recomputing them (the
+//!   engine's `Phase::WaitingOnPrefix`). A partially filled page is never
+//!   published; generated tokens never enter the tree. An aborted
+//!   publisher's unadopted tail is withdrawn
+//!   ([`RadixCache::unpublish_tail`]); anything a follower adopted
+//!   survives the abort, and the follower recomputes only what the tree
+//!   no longer covers.
 //! * A lookup never matches the entire prompt: at least one token is left
 //!   to prefill so TTFT sampling always has a final hidden row.
 //! * The tree holds its own +1 reference on every cached page. Eviction is

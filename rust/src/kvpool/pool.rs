@@ -181,6 +181,16 @@ impl KvPool {
         self.refcount[b as usize]
     }
 
+    /// True when every layer of page `b` has all `block_tokens` slots
+    /// written — the publishability condition for the radix cache's
+    /// in-flight inserts (a partially filled page must never be shared:
+    /// its empty slots would read as garbage KV to an adopter).
+    pub fn page_filled(&self, b: u32) -> bool {
+        let bi = b as usize;
+        bi < self.capacity_pages
+            && self.layers.iter().all(|lp| lp.fill[bi] as usize == self.cfg.block_tokens)
+    }
+
     /// Add an owner to an already-owned page (prefix sharing).
     pub fn retain(&mut self, b: u32) {
         let rc = &mut self.refcount[b as usize];
@@ -595,6 +605,26 @@ mod tests {
             );
             assert_eq!(ka.inv_norm(h, 1), kb_.inv_norm(h, 1));
         }
+    }
+
+    #[test]
+    fn page_filled_requires_every_layer_full() {
+        let c = cfg();
+        let mut alloc = BlockAllocator::new(c.total_blocks, c.block_tokens);
+        let mut pool = KvPool::new(c);
+        let blocks = lease_for(&mut alloc, &mut pool, c.block_tokens);
+        assert!(!pool.page_filled(blocks[0]), "fresh page is empty");
+        assert!(!pool.page_filled(7), "never-ensured page is not filled");
+        let k = vec![1.0f32; c.n_kv * c.block_tokens * c.d];
+        let v = vec![0.0f32; c.n_kv * c.block_tokens * c.d];
+        pool.append_chunk(&blocks, 0, 0, &k, &v, c.block_tokens);
+        assert!(!pool.page_filled(blocks[0]), "layer 1 still unwritten");
+        pool.append_chunk(&blocks, 1, 0, &k, &v, c.block_tokens - 1);
+        assert!(!pool.page_filled(blocks[0]), "last slot of layer 1 missing");
+        let k1 = vec![1.0f32; c.n_kv * c.d];
+        let v1 = vec![0.0f32; c.n_kv * c.d];
+        pool.append_chunk(&blocks, 1, c.block_tokens - 1, &k1, &v1, 1);
+        assert!(pool.page_filled(blocks[0]));
     }
 
     #[test]

@@ -2,10 +2,15 @@
 //!
 //! Each tree edge spans exactly one page (`block_tokens` token ids); a node
 //! owns the pool page holding that span's KV. Lookups walk whole pages and
-//! return the longest cached prefix's pages; inserts add the full prompt
-//! pages of a finished prefill; eviction is LRU over leaves whose page has
-//! no owner besides the tree itself — a page referenced by a live sequence
-//! is never freed.
+//! return the longest cached prefix's pages; inserts add prompt pages as
+//! they fill — [`RadixCache::publish_upto`] is the in-flight publish hook
+//! (a page is publishable the moment its last token's KV is written, never
+//! earlier), so concurrent requests sharing a prefix adopt pages while the
+//! producing prefill is still running ([`RadixCache::extend_match`]).
+//! Eviction is LRU over leaves whose page has no owner besides the tree
+//! itself — a page referenced by a live sequence is never freed — and an
+//! aborted in-flight publisher's unadopted tail can be withdrawn with
+//! [`RadixCache::unpublish_tail`].
 //!
 //! Trees are *namespaced* by a `(policy, budget, b_cp)` hash (see
 //! [`policy_ns`]): under sparse selection the cached hidden states (hence
@@ -69,7 +74,12 @@ pub struct RadixStats {
     pub lookup_tokens: u64,
     pub hit_tokens: u64,
     pub inserted_blocks: u64,
+    /// Pages removed by LRU pressure ([`RadixCache::evict_until`]).
     pub evicted_blocks: u64,
+    /// Pages removed by abort withdrawal ([`RadixCache::unpublish_tail`])
+    /// — kept separate from evictions so cancel-heavy traffic does not
+    /// read as memory pressure.
+    pub withdrawn_blocks: u64,
 }
 
 /// The prefix tree.
@@ -181,6 +191,117 @@ impl RadixCache {
         }
     }
 
+    /// In-flight publish hook: insert every *completed* page of a prompt
+    /// that is still prefilling. `filled_tokens` is how far the prompt's
+    /// KV has been written; only whole pages below it are published — a
+    /// partially filled page is never inserted (each published page's fill
+    /// is checked against the pool in debug builds). Re-publishing already
+    /// cached spans is a no-op (existing nodes keep their pages), so the
+    /// caller only needs a monotone watermark, not exact bookkeeping.
+    /// Returns the new watermark: pages of `tokens` now in the tree.
+    pub fn publish_upto(
+        &mut self,
+        ns: u64,
+        tokens: &[u32],
+        blocks: &[u32],
+        filled_tokens: usize,
+        pool: &mut KvPool,
+    ) -> usize {
+        let bt = self.block_tokens;
+        let n = (filled_tokens / bt).min(tokens.len() / bt).min(blocks.len());
+        if cfg!(debug_assertions) {
+            for &b in &blocks[..n] {
+                assert!(pool.page_filled(b), "publishing partially filled page {b} (fill < {bt})");
+            }
+        }
+        self.insert(ns, &tokens[..n * bt], &blocks[..n], pool);
+        n
+    }
+
+    /// Pages cached for `tokens` beyond the first `from_pages`, in walk
+    /// order — the follower-adoption poll: cheap, side-effect free (no LRU
+    /// clock or stats update; adopters take their own page references,
+    /// which protect the pages from eviction better than recency would).
+    /// Returns an empty vector when even the first `from_pages` pages are
+    /// no longer cached (the chain was unpublished or evicted).
+    pub fn extend_match(&self, ns: u64, tokens: &[u32], from_pages: usize) -> Vec<u32> {
+        let bt = self.block_tokens;
+        let max_blocks = tokens.len().saturating_sub(1) / bt;
+        let Some(&root) = self.roots.get(&ns) else {
+            return Vec::new();
+        };
+        let mut cur = root;
+        let mut out = Vec::new();
+        for j in 0..max_blocks {
+            let span = &tokens[j * bt..(j + 1) * bt];
+            match self.nodes[cur].children.get(span) {
+                Some(&next) => {
+                    cur = next;
+                    if j >= from_pages {
+                        out.push(self.nodes[cur].block);
+                    }
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Withdraw the unadopted tail of a published chain (leader abort):
+    /// walk the chain for `tokens`, then remove nodes deepest-first down
+    /// to `keep_pages`, stopping at the first node that has children
+    /// (another prompt's chain hangs off it) or whose page any live
+    /// sequence still references — adopted pages always outlive the
+    /// aborted publisher. Returns the pages freed. The caller must have
+    /// released the aborting sequence's own page references first, so
+    /// "refcount 1" means "tree only".
+    pub fn unpublish_tail(
+        &mut self,
+        ns: u64,
+        tokens: &[u32],
+        keep_pages: usize,
+        pool: &mut KvPool,
+        alloc: &mut BlockAllocator,
+    ) -> usize {
+        let bt = self.block_tokens;
+        let Some(&root) = self.roots.get(&ns) else {
+            return 0;
+        };
+        let mut chain = Vec::new();
+        let mut cur = root;
+        for j in 0..tokens.len() / bt {
+            let span = &tokens[j * bt..(j + 1) * bt];
+            match self.nodes[cur].children.get(span) {
+                Some(&next) => {
+                    cur = next;
+                    chain.push(next);
+                }
+                None => break,
+            }
+        }
+        let mut freed = 0;
+        while chain.len() > keep_pages {
+            let idx = chain.pop().unwrap();
+            if !self.nodes[idx].children.is_empty() || pool.refcount(self.nodes[idx].block) != 1 {
+                break;
+            }
+            self.remove_leaf(idx, pool, alloc);
+            self.stats.withdrawn_blocks += 1;
+            freed += 1;
+        }
+        freed
+    }
+
+    /// Pool page ids of every cached node (test hook for publish
+    /// invariants, e.g. "every cached page is fully filled").
+    pub fn cached_pages(&self) -> Vec<u32> {
+        self.nodes
+            .iter()
+            .filter(|n| n.parent != PARENT_FREE && n.parent != PARENT_ROOT)
+            .map(|n| n.block)
+            .collect()
+    }
+
     /// Number of pages the tree currently holds a reference on.
     pub fn cached_blocks(&self) -> usize {
         self.nodes
@@ -231,6 +352,7 @@ impl RadixCache {
                     break;
                 }
                 self.remove_leaf(idx, pool, alloc);
+                self.stats.evicted_blocks += 1;
                 freed += 1;
             }
         }
@@ -244,7 +366,6 @@ impl RadixCache {
         let removed = self.nodes[parent].children.remove(edge.as_slice());
         debug_assert_eq!(removed, Some(idx));
         pool.release_block(self.nodes[idx].block, alloc);
-        self.stats.evicted_blocks += 1;
         self.nodes[idx].children = HashMap::new();
         self.nodes[idx].parent = PARENT_FREE;
         self.free_nodes.push(idx);
@@ -300,6 +421,94 @@ mod tests {
 
     fn seq_tokens(n: usize, salt: u32) -> Vec<u32> {
         (0..n).map(|i| i as u32 * 3 + salt).collect()
+    }
+
+    /// Write KV rows for token positions `pos..pos+len` so those pages
+    /// count as filled (publish_upto asserts fill in debug builds).
+    fn fill(pool: &mut KvPool, blocks: &[u32], pos: usize, len: usize) {
+        let (n_kv, d) = (pool.cfg.n_kv, pool.cfg.d);
+        for l in 0..pool.cfg.n_layers {
+            let k = vec![1.0f32; n_kv * len * d];
+            let v = vec![0.5f32; n_kv * len * d];
+            pool.append_chunk(blocks, l, pos, &k, &v, len);
+        }
+    }
+
+    #[test]
+    fn publish_upto_never_publishes_a_partial_page() {
+        let (mut r, mut pool, mut alloc) = setup();
+        let ns = policy_ns("quoka", 64, 16);
+        let toks = seq_tokens(12, 0); // 3 pages
+        let blocks = alloc.alloc(3).unwrap();
+        pool.adopt_new(&blocks);
+        fill(&mut pool, &blocks, 0, 10); // 2.5 pages written
+        let w = r.publish_upto(ns, &toks, &blocks, 10, &mut pool);
+        assert_eq!(w, 2, "only the two completed pages are published");
+        assert_eq!(r.cached_blocks(), 2);
+        assert_eq!(pool.refcount(blocks[2]), 1, "partial page gained no tree ref");
+        // Completing the page and republishing extends the chain; the
+        // already-cached spans are untouched (idempotent watermark).
+        fill(&mut pool, &blocks, 10, 2);
+        let w = r.publish_upto(ns, &toks, &blocks, 12, &mut pool);
+        assert_eq!(w, 3);
+        assert_eq!(r.cached_blocks(), 3);
+        assert_eq!(pool.refcount(blocks[0]), 2, "seq + tree, not re-retained");
+        r.validate(&pool).unwrap();
+    }
+
+    #[test]
+    fn extend_match_is_a_silent_suffix_walk() {
+        let (mut r, mut pool, mut alloc) = setup();
+        let ns = policy_ns("quoka", 64, 16);
+        let toks = seq_tokens(16, 1); // 4 pages
+        let blocks = alloc.alloc(4).unwrap();
+        pool.adopt_new(&blocks);
+        fill(&mut pool, &blocks, 0, 8);
+        r.publish_upto(ns, &toks, &blocks, 8, &mut pool);
+        let lookups = r.stats.lookups;
+        // Cursor at 1 page: only page 2 of the published prefix is new.
+        assert_eq!(r.extend_match(ns, &toks, 1), vec![blocks[1]]);
+        assert_eq!(r.extend_match(ns, &toks, 2), Vec::<u32>::new());
+        fill(&mut pool, &blocks, 8, 8);
+        r.publish_upto(ns, &toks, &blocks, 16, &mut pool);
+        // The whole-prompt cap still applies: 16 tokens → at most 3 pages.
+        assert_eq!(r.extend_match(ns, &toks, 1), blocks[1..3].to_vec());
+        assert_eq!(r.stats.lookups, lookups, "extend_match must not count as a lookup");
+        assert!(r.extend_match(policy_ns("dense", 0, 16), &toks, 0).is_empty());
+    }
+
+    #[test]
+    fn unpublish_tail_spares_adopted_and_shared_pages() {
+        let (mut r, mut pool, mut alloc) = setup();
+        let ns = policy_ns("quoka", 64, 16);
+        let toks = seq_tokens(16, 2); // 4 pages, last never published
+        let mut blocks = alloc.alloc(4).unwrap();
+        pool.adopt_new(&blocks);
+        fill(&mut pool, &blocks, 0, 12);
+        r.publish_upto(ns, &toks, &blocks, 12, &mut pool);
+        // A follower adopted the first page only.
+        pool.retain(blocks[0]);
+        let mut follower = vec![blocks[0]];
+        // Leader aborts: releases its own refs, then withdraws its tail.
+        let leader_pages = std::mem::take(&mut blocks);
+        for b in &leader_pages {
+            pool.release_block(*b, &mut alloc);
+        }
+        let freed = r.unpublish_tail(ns, &toks, 0, &mut pool, &mut alloc);
+        assert_eq!(freed, 2, "pages 1..3 withdrawn; the adopted page survives");
+        assert_eq!(r.stats.withdrawn_blocks, 2);
+        assert_eq!(r.stats.evicted_blocks, 0, "withdrawals are not evictions");
+        assert_eq!(r.cached_blocks(), 1);
+        assert_eq!(pool.refcount(follower[0]), 2, "follower + tree");
+        r.validate(&pool).unwrap();
+        // The surviving page still answers lookups for the follower.
+        assert_eq!(r.lookup(ns, &toks), vec![follower[0]]);
+        pool.release_seq(&mut follower, &mut alloc);
+        // keep_pages floor: nothing below it is withdrawn even when free.
+        assert_eq!(r.unpublish_tail(ns, &toks, 1, &mut pool, &mut alloc), 0);
+        assert_eq!(r.unpublish_tail(ns, &toks, 0, &mut pool, &mut alloc), 1);
+        assert_eq!(alloc.free_blocks(), 32);
+        r.validate(&pool).unwrap();
     }
 
     #[test]

@@ -182,6 +182,111 @@ fn deterministic_chunks_make_warm_kv_exact_under_concurrent_load() {
 }
 
 #[test]
+fn inflight_follower_matches_isolated_runs_with_fewer_chunks() {
+    // Two identical prompts submitted one chunk apart: the follower parks
+    // behind the leader's in-flight page publishes, adopts the shared
+    // pages as they land, and prefills only the final (never-cacheable)
+    // page — yet both requests generate exactly what an isolated engine
+    // produces for that prompt.
+    let prompt: Vec<u32> = (0..128).map(|i| (i * 17 % 240) as u32 + 1).collect(); // 8 pages
+    let spec = || PolicySpec { name: "quoka".into(), budget: 32 };
+
+    let mut iso = Engine::new_host("tiny", paged_cfg()).unwrap();
+    iso.submit(prompt.clone(), 4, spec()).unwrap();
+    let r_iso = iso.run_to_completion().unwrap().remove(0);
+    let iso_prefill = iso.metrics.prefill_tokens;
+    assert_eq!(iso_prefill, 128, "a cold run prefills the whole prompt");
+
+    let mut e = Engine::new_host("tiny", paged_cfg()).unwrap();
+    let a = e.submit(prompt.clone(), 4, spec()).unwrap();
+    e.step().unwrap(); // leader one chunk into its prefill...
+    let b = e.submit(prompt.clone(), 4, spec()).unwrap(); // ...follower arrives
+    assert_eq!(e.metrics.inflight_followers, 1, "identical prompt parks behind the leader");
+    let results = e.run_to_completion().unwrap();
+    let ra = results.iter().find(|r| r.id == a).unwrap();
+    let rb = results.iter().find(|r| r.id == b).unwrap();
+    assert_eq!(ra.generated, r_iso.generated, "the leader is unchanged by its follower");
+    assert_eq!(rb.generated, r_iso.generated, "adopted in-flight pages are bit-identical");
+    assert_eq!(rb.cached_prefix_tokens, 112, "7 of 8 pages served without prefill");
+    let follower_prefill = e.metrics.prefill_tokens - iso_prefill;
+    assert!(
+        follower_prefill < iso_prefill,
+        "the follower must schedule strictly fewer prefill chunks than a cold run"
+    );
+    assert_eq!(follower_prefill, 16, "exactly the final page is recomputed");
+}
+
+// The burst acceptance geometry: debug builds (plain `cargo test`) run a
+// scaled-down prefix so the tier-1 suite stays fast; the release CI pass
+// (`cargo test --release --test engine_e2e`) runs the paper-shaped
+// 12k-token prefix. The assertions are identical.
+const BURST_PREFIX_TOKENS: usize = if cfg!(debug_assertions) { 1536 } else { 12288 };
+const BURST_SUFFIX_TOKENS: usize = 96;
+
+#[test]
+fn burst_of_8_schedules_shared_prefix_chunks_exactly_once() {
+    // Eight requests sharing a long prefix, submitted while the first is
+    // still prefilling: the prefix's chunks must be scheduled exactly once
+    // across the whole batch, and every request must generate exactly what
+    // an isolated cold engine produces.
+    let cfg = EngineCfg {
+        sched: SchedCfg { b_cp: 256, step_tokens: 512, max_running: 8, ..SchedCfg::default() },
+        pool_blocks: 1024,
+        block_tokens: 128,
+        seed: 9,
+        kv: KvLayout::Paged { prefix_cache: true },
+    };
+    let spec = || PolicySpec { name: "quoka".into(), budget: 128 };
+    let prefix: Vec<u32> =
+        (0..BURST_PREFIX_TOKENS).map(|i| (i * 37 % 239) as u32 + 1).collect();
+    let prompt = |i: usize| {
+        let mut p = prefix.clone();
+        p.extend((0..BURST_SUFFIX_TOKENS).map(|j| ((j * 7 + i * 31) % 239) as u32 + 1));
+        p
+    };
+
+    let mut e = Engine::new_host("tiny", cfg.clone()).unwrap();
+    let first = e.submit(prompt(0), 2, spec()).unwrap();
+    e.step().unwrap(); // the first request is mid-prefill...
+    let mut ids = vec![first];
+    for i in 1..8 {
+        ids.push(e.submit(prompt(i), 2, spec()).unwrap()); // ...when the rest arrive
+    }
+    assert_eq!(e.metrics.inflight_followers, 7, "all seven park behind the first");
+    let mut results = e.run_to_completion().unwrap();
+    assert_eq!(results.len(), 8);
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.iter().map(|r| r.id).collect::<Vec<_>>(), ids, "every request served");
+
+    // The acceptance property: prefix chunks ran exactly once across the
+    // batch — total prefill is one shared prefix plus eight suffixes.
+    assert_eq!(
+        e.metrics.prefill_tokens as usize,
+        BURST_PREFIX_TOKENS + 8 * BURST_SUFFIX_TOKENS,
+        "shared prefix must be prefilled exactly once across the burst"
+    );
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.generated.len(), 2, "request {i} completed");
+        if i > 0 {
+            assert_eq!(
+                r.cached_prefix_tokens, BURST_PREFIX_TOKENS,
+                "follower {i} served its whole shared prefix from cache"
+            );
+        }
+    }
+    assert!(e.metrics.inflight_adopted_tokens > 0);
+
+    // Warm-vs-cold generation equality, spot-checked against isolated
+    // cold engines for the leader and one follower.
+    for &i in &[0usize, 5] {
+        let mut iso = Engine::new_host("tiny", cfg.clone()).unwrap();
+        iso.submit(prompt(i), 2, spec()).unwrap();
+        let want = iso.run_to_completion().unwrap().remove(0).generated;
+        assert_eq!(results[i].generated, want, "request {i} must match its isolated run");
+    }
+}
+
+#[test]
 fn prefix_cache_is_policy_namespaced() {
     // Same tokens under a different budget must NOT reuse cached KV: with
     // sparse selection the cached hidden states depend on the policy.

@@ -1,9 +1,12 @@
 //! Property tests over the shared paged KV pool and its radix prefix
 //! cache: lease-layer conservation under refcounted sharing, longest-match
 //! lookup semantics, insert/evict invariants (never free a referenced
-//! page), and copy-on-write isolation.
+//! page), copy-on-write isolation, and the in-flight publish/subscribe
+//! protocol (never publish a partial page, follower adoption never
+//! outlives a leader abort, refcount conservation under concurrent
+//! publish/adopt/abort/evict).
 
-use quoka::coordinator::BlockAllocator;
+use quoka::coordinator::{BlockAllocator, Engine, EngineCfg, KvLayout, PolicySpec, SchedCfg};
 use quoka::kvpool::{policy_ns, KvPool, PoolCfg, RadixCache};
 use quoka::util::prop::{check, ensure, ensure_eq};
 use quoka::util::Rng;
@@ -170,6 +173,275 @@ fn eviction_never_frees_a_referenced_page_and_conserves() {
             check_conservation(&pool, &alloc, &live, &radix)?;
             ensure_eq(alloc.free_blocks(), TOTAL, "all pages evictable once unreferenced")?;
             ensure_eq(radix.cached_blocks(), 0, "tree fully drained")
+        },
+    );
+}
+
+/// Append KV rows for token positions `pos..pos+len` of every layer so
+/// the covered pages fill up (the in-flight publish hook checks fill).
+fn append_tokens(pool: &mut KvPool, table: &[u32], pos: usize, len: usize, rng: &mut Rng) {
+    let (n_kv, d, n_layers) = (pool.cfg.n_kv, pool.cfg.d, pool.cfg.n_layers);
+    for l in 0..n_layers {
+        let k = rng.normal_vec(n_kv * len * d, 1.0);
+        let v = rng.normal_vec(n_kv * len * d, 1.0);
+        pool.append_chunk(table, l, pos, &k, &v, len);
+    }
+}
+
+#[test]
+fn inflight_publish_never_caches_a_partial_page() {
+    check(
+        "inflight-publish-full-pages",
+        12,
+        |rng: &mut Rng, size| {
+            let n = 1 + rng.below(size.max(1)).min(4);
+            let seqs: Vec<Vec<u32>> = (0..n).map(|_| gen_tokens(rng, 5)).collect();
+            (seqs, rng.next_u64())
+        },
+        |(seqs, seed)| {
+            let (mut radix, mut pool, mut alloc) = setup();
+            let ns = policy_ns("quoka", 64, 16);
+            let mut rng = Rng::new(*seed);
+            let mut live: Vec<Vec<u32>> = Vec::new();
+            for toks in seqs {
+                let matched = radix.lookup(ns, toks);
+                for &b in &matched {
+                    pool.retain(b);
+                }
+                let mut filled = matched.len() * BT;
+                let mut table = matched;
+                if !alloc.ensure(&mut table, toks.len()) {
+                    pool.release_seq(&mut table, &mut alloc);
+                    continue;
+                }
+                pool.adopt_new(&table);
+                // Chunked prefill with load-random widths, publishing after
+                // every chunk exactly as the engine's in-flight hook does.
+                let mut watermark = filled / BT;
+                while filled < toks.len() {
+                    let w = (1 + rng.below(BT + 2)).min(toks.len() - filled);
+                    append_tokens(&mut pool, &table, filled, w, &mut rng);
+                    filled += w;
+                    watermark = radix.publish_upto(ns, toks, &table, filled, &mut pool);
+                    ensure_eq(watermark, filled / BT, "watermark = completed pages")?;
+                    // The core property: the tree never holds a page whose
+                    // last slot has not been written in every layer.
+                    for b in radix.cached_pages() {
+                        ensure(pool.page_filled(b), format!("partial page {b} published"))?;
+                    }
+                    radix.validate(&pool).map_err(|e| format!("radix invariant: {e}"))?;
+                }
+                ensure_eq(watermark, toks.len() / BT, "every full prompt page published")?;
+                live.push(table);
+                check_conservation(&pool, &alloc, &live, &radix)?;
+            }
+            for mut table in live.drain(..) {
+                pool.release_seq(&mut table, &mut alloc);
+            }
+            check_conservation(&pool, &alloc, &live, &radix)
+        },
+    );
+}
+
+#[test]
+fn follower_adoption_never_outlives_leader_abort() {
+    check(
+        "inflight-leader-abort-fallback",
+        8,
+        |rng: &mut Rng, _| {
+            let pages = 3 + rng.below(4); // leader prompt length in pages
+            let cancel_after = rng.below(pages + 3); // steps before the abort
+            (pages, cancel_after, rng.next_u64())
+        },
+        |&(pages, cancel_after, seed)| {
+            let mk = || {
+                Engine::new_host(
+                    "tiny",
+                    EngineCfg {
+                        sched: SchedCfg {
+                            b_cp: 16,
+                            step_tokens: 48,
+                            max_running: 4,
+                            ..SchedCfg::default()
+                        },
+                        pool_blocks: 64,
+                        block_tokens: 16,
+                        seed: 3,
+                        kv: KvLayout::Paged { prefix_cache: true },
+                    },
+                )
+                .unwrap()
+            };
+            let spec = || PolicySpec { name: "quoka".into(), budget: 24 };
+            let prompt: Vec<u32> =
+                (0..pages * 16).map(|i| ((i as u64 * 29 + seed) % 240) as u32 + 1).collect();
+
+            // Oracle: the same prompt served alone, cold.
+            let mut iso = mk();
+            iso.submit(prompt.clone(), 3, spec()).unwrap();
+            let want = iso.run_to_completion().map_err(|e| e.to_string())?.remove(0).generated;
+
+            // Leader starts; an identical follower parks behind it; the
+            // leader is cancelled at a random point (possibly before the
+            // follower adopted anything, possibly after the leader already
+            // finished). The follower must always complete by itself with
+            // the oracle's exact generation.
+            let mut e = mk();
+            let leader = e.submit(prompt.clone(), 3, spec()).unwrap();
+            e.step().map_err(|er| er.to_string())?;
+            let follower = e.submit(prompt.clone(), 3, spec()).unwrap();
+            for _ in 0..cancel_after {
+                e.step().map_err(|er| er.to_string())?;
+            }
+            e.cancel(leader);
+            let mut steps = 0;
+            while e.step().map_err(|er| er.to_string())? && steps < 500 {
+                steps += 1;
+            }
+            ensure(steps < 500, "engine wedged after leader abort")?;
+            let results = e.take_results();
+            let rf = results
+                .iter()
+                .find(|r| r.id == follower)
+                .ok_or("follower never finished".to_string())?;
+            ensure_eq(&rf.generated, &want, "follower generation after abort")?;
+            // Nothing leaks: every page is either free or owned by the
+            // tree alone once all sequences are gone.
+            ensure_eq(
+                e.blocks.free_blocks() + e.radix.as_ref().unwrap().cached_blocks(),
+                64,
+                "post-abort page conservation",
+            )
+        },
+    );
+}
+
+/// Exact refcount oracle: every page's owner count must equal its
+/// live-table occurrences (publishers + followers) plus one per tree node
+/// holding it, and the lease layer must agree on the owned-page total.
+fn inflight_oracle(
+    pool: &KvPool,
+    alloc: &BlockAllocator,
+    radix: &RadixCache,
+    pubs: &[(Vec<u32>, Vec<u32>, usize)],
+    fols: &[(Vec<u32>, Vec<u32>)],
+) -> Result<(), String> {
+    let mut want: std::collections::HashMap<u32, u32> = Default::default();
+    for (_, t, _) in pubs {
+        for &b in t {
+            *want.entry(b).or_default() += 1;
+        }
+    }
+    for (_, t) in fols {
+        for &b in t {
+            *want.entry(b).or_default() += 1;
+        }
+    }
+    for b in radix.cached_pages() {
+        *want.entry(b).or_default() += 1;
+    }
+    for (&b, &w) in &want {
+        ensure_eq(pool.refcount(b), w, &format!("refcount of page {b}"))?;
+    }
+    ensure_eq(alloc.leased_blocks(), want.len(), "leased = owned pages")?;
+    radix.validate(pool).map_err(|e| format!("radix invariant: {e}"))
+}
+
+#[test]
+fn refcount_conservation_under_concurrent_publish_adopt_evict() {
+    check(
+        "inflight-refcount-conservation",
+        10,
+        |rng: &mut Rng, size| {
+            let rounds = 4 + rng.below(4 * size.max(1));
+            (rounds, rng.next_u64())
+        },
+        |&(rounds, seed)| {
+            let (mut radix, mut pool, mut alloc) = setup();
+            let ns = policy_ns("quoka", 64, 16);
+            let mut rng = Rng::new(seed);
+            // In-flight publishers: (tokens, table, filled tokens).
+            let mut publishers: Vec<(Vec<u32>, Vec<u32>, usize)> = Vec::new();
+            // Followers: tables of adopted (retained) pages + their source
+            // tokens, so adoption can be extended later.
+            let mut followers: Vec<(Vec<u32>, Vec<u32>)> = Vec::new();
+
+            for _ in 0..rounds {
+                match rng.below(6) {
+                    // Submit a publisher (prefix-matching an earlier one).
+                    0 => {
+                        let toks = gen_tokens(&mut rng, 4);
+                        let matched = radix.lookup(ns, &toks);
+                        for &b in &matched {
+                            pool.retain(b);
+                        }
+                        let filled = matched.len() * BT;
+                        let mut table = matched;
+                        if !alloc.ensure(&mut table, toks.len()) {
+                            pool.release_seq(&mut table, &mut alloc);
+                        } else {
+                            pool.adopt_new(&table);
+                            publishers.push((toks, table, filled));
+                        }
+                    }
+                    // Advance a publisher one chunk and publish in flight.
+                    1 | 2 => {
+                        if !publishers.is_empty() {
+                            let i = rng.below(publishers.len());
+                            let (toks, table, filled) = &mut publishers[i];
+                            if *filled < toks.len() {
+                                let w = (1 + rng.below(BT + 2)).min(toks.len() - *filled);
+                                append_tokens(&mut pool, table, *filled, w, &mut rng);
+                                *filled += w;
+                                radix.publish_upto(ns, toks, table, *filled, &mut pool);
+                            }
+                        }
+                    }
+                    // A follower adopts whatever is published right now.
+                    3 => {
+                        if !publishers.is_empty() {
+                            let i = rng.below(publishers.len());
+                            let toks = publishers[i].0.clone();
+                            let adopted = radix.extend_match(ns, &toks, 0);
+                            for &b in &adopted {
+                                pool.retain(b);
+                            }
+                            followers.push((toks, adopted));
+                        }
+                    }
+                    // Abort a publisher: release, then withdraw its tail.
+                    4 => {
+                        if !publishers.is_empty() {
+                            let i = rng.below(publishers.len());
+                            let (toks, mut table, _) = publishers.swap_remove(i);
+                            pool.release_seq(&mut table, &mut alloc);
+                            radix.unpublish_tail(ns, &toks, 0, &mut pool, &mut alloc);
+                        }
+                    }
+                    // Retire a follower, or shed cold pages under pressure.
+                    _ => {
+                        if !followers.is_empty() && rng.below(2) == 0 {
+                            let i = rng.below(followers.len());
+                            let (_, mut table) = followers.swap_remove(i);
+                            pool.release_seq(&mut table, &mut alloc);
+                        } else {
+                            radix.evict_until(rng.below(TOTAL + 1), &mut pool, &mut alloc);
+                        }
+                    }
+                }
+                inflight_oracle(&pool, &alloc, &radix, &publishers, &followers)?;
+            }
+            // Drain everything: only tree pages may stay leased, and a
+            // full-pressure eviction returns the pool to empty.
+            for (_, mut t, _) in publishers.drain(..) {
+                pool.release_seq(&mut t, &mut alloc);
+            }
+            for (_, mut t) in followers.drain(..) {
+                pool.release_seq(&mut t, &mut alloc);
+            }
+            inflight_oracle(&pool, &alloc, &radix, &[], &[])?;
+            radix.evict_until(TOTAL, &mut pool, &mut alloc);
+            ensure_eq(alloc.free_blocks(), TOTAL, "all pages evictable once unreferenced")
         },
     );
 }

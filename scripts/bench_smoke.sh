@@ -1,23 +1,34 @@
 #!/usr/bin/env bash
-# Perf smoke benches, run PR over PR:
+# Perf smoke benches, run PR over PR (locally and by the CI `bench` job):
 #
 # 1. Hot path: `cargo bench --bench micro_hotpath` in the reduced
 #    configuration (one 16k-token cache, GQA 32q/8kv, d=128, QUOKA budget
 #    ≈ 12 % of T, 3 measured iters) → BENCH_hotpath.json at the repo root
 #    (one entry per measured piece: `config`, `wall-ns`, `GFLOP/s`).
 # 2. Shared-prefix serving: `cargo bench --bench prefix_serving` — 8
-#    requests sharing a 12k-token prefix over the paged KV pool, radix
-#    prefix cache on/off → BENCH_prefix.json (prefix-hit rate, TTFT
-#    with/without the cache, prefill tokens, KV bytes saved).
+#    requests sharing a 12k-token prefix over the paged KV pool; three
+#    arms: cache off, warm cache, and the in-flight burst (followers park
+#    behind the leader's mid-prefill page publishes; the prefix prefills
+#    exactly once across the batch) → BENCH_prefix.json.
 # 3. Decode serving: `cargo bench --bench decode_serving` — 8 concurrent
 #    sequences × 64 decode steps, serial (B=1 loop) vs one GEMM-batched
 #    forward per step → BENCH_decode.json (tokens/sec each + speedup;
 #    identical generations asserted).
 #
+# CI bench gate: the `bench` job in .github/workflows/ci.yml runs this
+# script on a CI-sized config, uploads the three JSONs as the
+# `bench-results` artifact, and then runs `scripts/check_bench.py`, which
+# FAILS the job when tiled-vs-seed speedup, warm-vs-cold or
+# in-flight-vs-cold prefix TTFT ratio, or batched-vs-serial decode
+# throughput fall below absolute floors or regress beyond tolerance
+# against the committed baselines in bench/baselines/ (bootstrap stubs
+# until the first CI artifacts are committed — see bench/baselines/README.md).
+#
 # Usage: scripts/bench_smoke.sh
 #   BENCH_OUT=/path/to.json   override the hot-path output location
 #   PREFIX_OUT=/path/to.json  override the prefix-serving output location
 #   DECODE_OUT=/path/to.json  override the decode-serving output location
+#   BENCH_CHECK=1             run the regression gate after the benches
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -31,3 +42,7 @@ cargo bench --manifest-path rust/Cargo.toml --bench prefix_serving
 cargo bench --manifest-path rust/Cargo.toml --bench decode_serving
 
 echo "bench_smoke: wrote $BENCH_OUT, $PREFIX_OUT and $DECODE_OUT"
+
+if [[ "${BENCH_CHECK:-0}" == "1" ]]; then
+  python3 scripts/check_bench.py
+fi

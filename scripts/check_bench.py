@@ -1,0 +1,160 @@
+#!/usr/bin/env python3
+"""Bench regression gate for CI.
+
+Reads the three bench artifacts written by scripts/bench_smoke.sh
+
+  BENCH_hotpath.json  — tiled-vs-seed chunk-attention kernel speedup
+  BENCH_prefix.json   — warm-vs-cold and in-flight-vs-cold prefix TTFT
+  BENCH_decode.json   — batched-vs-serial decode throughput
+
+and fails (exit 1) when a headline metric
+
+  * falls below its absolute floor (a hard sanity bound: the optimization
+    must still be an optimization), or
+  * regresses by more than --tolerance relative to the committed baseline
+    in bench/baselines/ (same file names).
+
+Baseline entries that are missing, null, or measured under a different
+`config` string are skipped with a warning — that is the bootstrap path:
+the first CI run on real hardware uploads its artifacts, which get
+committed to bench/baselines/ to arm the relative gate.
+
+Environment overrides (floors): CHECK_BENCH_MIN_HOTPATH,
+CHECK_BENCH_MIN_PREFIX_WARM, CHECK_BENCH_MIN_PREFIX_INFLIGHT,
+CHECK_BENCH_MIN_DECODE; relative tolerance: CHECK_BENCH_TOL (fraction,
+default 0.35 — CI runners are noisy).
+
+Usage: scripts/check_bench.py [--bench-dir DIR] [--baseline-dir DIR]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def env_float(name, default):
+    try:
+        return float(os.environ.get(name, default))
+    except ValueError:
+        return default
+
+
+FLOORS = {
+    "hotpath-tiled-speedup": env_float("CHECK_BENCH_MIN_HOTPATH", 1.2),
+    "prefix-warm-ttft-speedup": env_float("CHECK_BENCH_MIN_PREFIX_WARM", 1.5),
+    "prefix-inflight-ttft-speedup": env_float("CHECK_BENCH_MIN_PREFIX_INFLIGHT", 1.2),
+    "decode-batched-speedup": env_float("CHECK_BENCH_MIN_DECODE", 1.2),
+}
+
+
+def load(path):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def hotpath_speedup(doc):
+    """Worst-case tiled-vs-seed speedup across measured shapes.
+
+    Entries look like {"config": "attn_tiled T=16384 ...", "wall-ns": ...};
+    the seed kernel entry for the same shape is "attn_seed T=16384 ...".
+    """
+    if not doc or "entries" not in doc:
+        return None, None
+    tiled, seed = {}, {}
+    for e in doc["entries"]:
+        cfg = e.get("config", "")
+        kind, _, shape = cfg.partition(" ")
+        if kind == "attn_tiled":
+            tiled[shape] = e.get("wall-ns")
+        elif kind == "attn_seed":
+            seed[shape] = e.get("wall-ns")
+    ratios = [
+        seed[s] / tiled[s]
+        for s in tiled
+        if s in seed and tiled[s] and seed[s] is not None
+    ]
+    return (min(ratios) if ratios else None), doc.get("mode")
+
+
+def metric(doc, key):
+    if not doc:
+        return None
+    v = doc.get(key)
+    return float(v) if isinstance(v, (int, float)) else None
+
+
+def gather(bench_dir):
+    """Headline metrics of one artifact directory: name -> (value, config)."""
+    out = {}
+    hp = load(os.path.join(bench_dir, "BENCH_hotpath.json"))
+    sp, mode = hotpath_speedup(hp)
+    out["hotpath-tiled-speedup"] = (sp, mode)
+    px = load(os.path.join(bench_dir, "BENCH_prefix.json"))
+    pcfg = px.get("config") if px else None
+    out["prefix-warm-ttft-speedup"] = (metric(px, "ttft-speedup"), pcfg)
+    out["prefix-inflight-ttft-speedup"] = (metric(px, "inflight-speedup"), pcfg)
+    dc = load(os.path.join(bench_dir, "BENCH_decode.json"))
+    out["decode-batched-speedup"] = (metric(dc, "speedup"), dc.get("config") if dc else None)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench-dir", default=".", help="where the fresh BENCH_*.json live")
+    ap.add_argument(
+        "--baseline-dir", default="bench/baselines", help="committed baseline BENCH_*.json"
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=env_float("CHECK_BENCH_TOL", 0.35),
+        help="allowed relative regression vs baseline (fraction)",
+    )
+    args = ap.parse_args()
+
+    fresh = gather(args.bench_dir)
+    base = gather(args.baseline_dir)
+    failures, rows = [], []
+    for name, (value, cfg) in fresh.items():
+        floor = FLOORS[name]
+        bvalue, bcfg = base.get(name, (None, None))
+        if value is None:
+            failures.append(f"{name}: missing from fresh bench output")
+            rows.append((name, "MISSING", floor, bvalue, "FAIL"))
+            continue
+        status, why = "ok", []
+        if value < floor:
+            status = "FAIL"
+            why.append(f"below absolute floor {floor:.2f}")
+        if bvalue is None:
+            why.append("no baseline (bootstrap: commit this run's artifacts)")
+        elif bcfg != cfg:
+            why.append("baseline config differs; relative gate skipped")
+        elif value < (1.0 - args.tolerance) * bvalue:
+            status = "FAIL"
+            why.append(
+                f"regressed vs baseline {bvalue:.2f} beyond tolerance {args.tolerance:.0%}"
+            )
+        if status == "FAIL":
+            failures.append(f"{name}: {value:.3f} — " + "; ".join(why))
+        rows.append((name, f"{value:.3f}", floor, bvalue, status + (": " + "; ".join(why) if why else "")))
+
+    w = max(len(r[0]) for r in rows)
+    print(f"{'metric':<{w}}  {'value':>8}  {'floor':>6}  {'baseline':>8}  status")
+    for name, value, floor, bvalue, status in rows:
+        b = f"{bvalue:.3f}" if isinstance(bvalue, float) else "—"
+        print(f"{name:<{w}}  {value:>8}  {floor:>6.2f}  {b:>8}  {status}")
+    if failures:
+        print("\nbench regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nbench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
