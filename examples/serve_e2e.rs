@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
             let policy = policy.to_string();
             handles.push(std::thread::spawn(move || -> anyhow::Result<_> {
                 let mut c = Client::connect(addr)?;
-                c.request(&WireRequest { prompt, max_new, policy, budget })
+                c.request(&WireRequest { prompt, max_new, policy, budget, spec: None })
             }));
         }
         let mut ttfts = Vec::new();

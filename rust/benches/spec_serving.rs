@@ -1,0 +1,8 @@
+//! Speculative-decode serving bench target: prompt-lookup drafting +
+//! batched multi-token verification vs the plain one-token decode loop.
+//! Writes `BENCH_spec.json` (see `scripts/bench_smoke.sh` and the CI
+//! gate in `scripts/check_bench.py`).
+
+fn main() {
+    quoka::bench::spec::spec_serving();
+}

@@ -8,6 +8,7 @@ pub mod tables;
 pub mod latency;
 pub mod prefix;
 pub mod decode;
+pub mod spec;
 
 pub use crate::util::timing::{bench, heatmap, BenchCfg, Stats, Table};
 

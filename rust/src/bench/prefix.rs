@@ -39,6 +39,7 @@ fn mk_engine(prefix_cache: bool) -> Engine {
             block_tokens: BLOCK_TOKENS,
             seed: 11,
             kv: KvLayout::Paged { prefix_cache },
+            ..EngineCfg::default()
         },
     )
     .expect("tiny host engine")

@@ -16,6 +16,7 @@ use crate::kvpool::{policy_ns, KvPool, PoolCfg, RadixCache};
 use crate::model::{DecodeKv, DecodeSeq, HostModel, ModelConfig, SeqState, Weights};
 use crate::runtime::exec::{AttnMode, PjrtBackend, PjrtSeq};
 use crate::select::{SelectCtx, SelectionPolicy};
+use crate::spec::{drafter_for, DraftSource, SpecCfg};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::time::Instant;
@@ -77,6 +78,10 @@ pub struct EngineCfg {
     pub seed: u64,
     /// Physical KV layout (private buffers vs shared paged pool).
     pub kv: KvLayout,
+    /// Engine-wide default speculative-decode configuration, applied to
+    /// requests submitted without an explicit override
+    /// ([`Engine::submit_spec`]). Off by default.
+    pub spec: SpecCfg,
 }
 
 impl Default for EngineCfg {
@@ -87,6 +92,7 @@ impl Default for EngineCfg {
             block_tokens: 128,
             seed: 0,
             kv: KvLayout::Private,
+            spec: SpecCfg::off(),
         }
     }
 }
@@ -103,6 +109,11 @@ pub struct Engine {
     seqs: HashMap<u64, SeqEntry>,
     backs: HashMap<u64, SeqBack>,
     policies: HashMap<String, Box<dyn SelectionPolicy>>,
+    /// Per-sequence draft sources for speculating requests (created at
+    /// submit, dropped at retire/cancel/reject).
+    drafters: HashMap<u64, Box<dyn DraftSource>>,
+    /// Engine-wide default spec config for plain [`Engine::submit`] calls.
+    default_spec: SpecCfg,
     ctx: SelectCtx,
     pub metrics: Metrics,
     results: Vec<RequestResult>,
@@ -124,6 +135,19 @@ impl Engine {
     }
 
     pub fn with_backend(backend: Backend, mut cfg: EngineCfg) -> Engine {
+        // A PJRT engine with an enabled engine-wide spec default would
+        // reject every plain submit() (compiled artifacts have a fixed
+        // single-token decode shape) — catch the misconfiguration at
+        // construction instead of failing one request at a time.
+        // Per-request overrides are still rejected explicitly in
+        // submit_spec.
+        if matches!(backend, Backend::Pjrt(_)) && cfg.spec.enabled() {
+            eprintln!(
+                "quoka: speculative decode requires the host backend; disabling the \
+                 engine-wide default (--spec-gamma) for this pjrt engine"
+            );
+            cfg.spec = SpecCfg::off();
+        }
         // Prefix-cache mode publishes KV pages: pin chunk boundaries to
         // the prompt (never truncated by step-budget pressure) so cached
         // KV is bit-identical to a cold serial recompute under any load.
@@ -172,11 +196,20 @@ impl Engine {
             seqs: HashMap::new(),
             backs: HashMap::new(),
             policies: HashMap::new(),
+            drafters: HashMap::new(),
+            default_spec: cfg.spec,
             ctx: SelectCtx::new(cfg.seed ^ 0xE1),
             metrics: Metrics::default(),
             results: Vec::new(),
             next_id: 1,
         }
+    }
+
+    /// The engine-wide default speculative-decode configuration (what a
+    /// plain [`Engine::submit`] applies); wire-level overrides resolve
+    /// against it.
+    pub fn default_spec(&self) -> SpecCfg {
+        self.default_spec
     }
 
     pub fn model_cfg(&self) -> ModelConfig {
@@ -218,7 +251,30 @@ impl Engine {
     /// pages, adopts each page as it lands, and only ever prefills what
     /// the producer will not cover.
     pub fn submit(&mut self, tokens: Vec<u32>, max_new: usize, policy: PolicySpec) -> Result<u64> {
+        let spec = self.default_spec;
+        self.submit_spec(tokens, max_new, policy, spec)
+    }
+
+    /// [`Engine::submit`] with an explicit per-request speculative-decode
+    /// configuration (overriding the engine default): when enabled, the
+    /// request's decode steps draft up to `spec.gamma` tokens and verify
+    /// them in one multi-token forward. Host backend only — the PJRT
+    /// artifacts have a fixed single-token decode shape.
+    pub fn submit_spec(
+        &mut self,
+        tokens: Vec<u32>,
+        max_new: usize,
+        policy: PolicySpec,
+        spec: SpecCfg,
+    ) -> Result<u64> {
         anyhow::ensure!(!tokens.is_empty(), "empty prompt");
+        if spec.enabled() {
+            anyhow::ensure!(
+                matches!(self.backend, Backend::Host(_)),
+                "speculative decode requires the host backend (pjrt artifacts \
+                 have a fixed single-token decode shape)"
+            );
+        }
         if matches!(self.backend, Backend::Pjrt(_)) {
             anyhow::ensure!(
                 policy.name == "dense" || policy.name == "quoka",
@@ -245,7 +301,10 @@ impl Engine {
         }
         let id = self.next_id;
         self.next_id += 1;
-        let req = Request { id, tokens, max_new_tokens: max_new.max(1), policy };
+        if let Some(d) = drafter_for(&spec) {
+            self.drafters.insert(id, d);
+        }
+        let req = Request { id, tokens, max_new_tokens: max_new.max(1), policy, spec };
         let mut entry = SeqEntry::new(req);
         let grid = self.grid_pages();
         if let (Some(pool), Some(radix)) = (self.pool.as_mut(), self.radix.as_mut()) {
@@ -355,6 +414,7 @@ impl Engine {
     /// prefill's pages stay — they are whole, exact, and useful); and an
     /// empty-generation result is reported.
     fn discard(&mut self, mut entry: SeqEntry) {
+        self.drafters.remove(&entry.req.id);
         let mid_prefill =
             matches!(entry.phase, Phase::Prefill { .. } | Phase::WaitingOnPrefix { .. });
         if let Some(pool) = self.pool.as_mut() {
@@ -414,7 +474,7 @@ impl Engine {
                 let watermark = producer.map(|l| l.published_pages).unwrap_or(usize::MAX);
                 (policy_ns(&e.req.policy.name, e.req.policy.budget, b_cp), producing, watermark)
             };
-            let radix = self.radix.as_ref().unwrap();
+            let radix = self.radix.as_mut().unwrap();
             let pool = self.pool.as_mut().unwrap();
             let entry = self.seqs.get_mut(&id).unwrap();
             let cur_pages = entry.cached_tokens / bt;
@@ -422,10 +482,12 @@ impl Engine {
             // has nothing new for this cursor (within the wait window the
             // producer's pages ARE the shared pages, so its watermark is
             // exact); a vanished producer gets one final full poll below.
+            // When the walk does run, it resumes at the follower's
+            // remembered node — O(newly published pages) per poll.
             let mut fresh = if producing && producer_watermark <= cur_pages {
                 Vec::new()
             } else {
-                radix.extend_match(ns, &entry.req.tokens, cur_pages)
+                radix.extend_match_at(ns, &entry.req.tokens, cur_pages, &mut entry.radix_cursor)
             };
             // Adopt in cursor-quantum units only (see
             // [`Engine::grid_pages`]): the cursor must sit on the
@@ -556,14 +618,34 @@ impl Engine {
         let mut prefill_toks = 0usize;
         // All decode items of the step run as ONE batched forward pass:
         // weights stream once per step regardless of decode concurrency.
-        let decode_ids: Vec<u64> = plan
-            .items
-            .iter()
-            .filter_map(|it| match it {
-                WorkItem::Decode { id } => Some(*id),
-                _ => None,
-            })
-            .collect();
+        // Speculating sequences draft FIRST: a sequence whose drafter
+        // abstains this step joins the fused batch like any plain decode
+        // (drafting is advisory — an empty draft must never cost a
+        // sequence its batching), while sequences with a live draft run
+        // their own multi-token verify forward, amortizing the weight
+        // stream across the gamma + 1 draft positions instead of across
+        // the batch.
+        let mut decode_ids: Vec<u64> = Vec::new();
+        let mut verify_jobs: Vec<(u64, Vec<u32>)> = Vec::new();
+        for item in &plan.items {
+            match *item {
+                WorkItem::Decode { id } => decode_ids.push(id),
+                WorkItem::Verify { id, gamma } => {
+                    let td = Instant::now();
+                    let draft = self.draft_for(id, gamma);
+                    // Drafting is decode-phase work even when it abstains.
+                    let spent = td.elapsed().as_secs_f64();
+                    self.metrics.decode_s += spent;
+                    self.metrics.spec_s += spent;
+                    if draft.is_empty() {
+                        decode_ids.push(id);
+                    } else {
+                        verify_jobs.push((id, draft));
+                    }
+                }
+                WorkItem::PrefillChunk { .. } => {}
+            }
+        }
         let mut fused_decode = None;
         if !decode_ids.is_empty() {
             let td = Instant::now();
@@ -571,6 +653,9 @@ impl Engine {
             if fused {
                 fused_decode = Some(td.elapsed());
             }
+        }
+        for (id, draft) in verify_jobs {
+            self.run_verify(id, draft)?;
         }
         for item in &plan.items {
             if let WorkItem::PrefillChunk { id, start, len } = *item {
@@ -602,6 +687,7 @@ impl Engine {
         for id in done {
             let mut entry = self.seqs.remove(&id).unwrap();
             self.backs.remove(&id);
+            self.drafters.remove(&id);
             if let Some(pool) = self.pool.as_mut() {
                 pool.release_seq(&mut entry.blocks, &mut self.blocks);
             } else {
@@ -746,19 +832,28 @@ impl Engine {
         // boundary waits for the chunk that writes its last slot.
         if let Some(radix) = self.radix.as_mut() {
             let bt = self.blocks.block_tokens();
-            let already = self.seqs.get(&id).map(|e| e.published_pages).unwrap_or(0);
+            let entry = self.seqs.get_mut(&id).unwrap();
             let n_full = (start + len) / bt; // start + len <= prompt_len
-            if n_full > already {
-                let toks = &self.seqs.get(&id).unwrap().req.tokens[..n_full * bt];
+            if n_full > entry.published_pages {
                 let ns = policy_ns(&spec.name, spec.budget, self.sched.cfg.b_cp);
                 let inserted = radix.stats.inserted_blocks;
-                let w = radix.publish_upto(ns, toks, &blocks[..n_full], n_full * bt, pool);
+                // Remembered-cursor publish: the walk resumes at the
+                // sequence's last published node, so each chunk's publish
+                // hashes only its newly completed pages.
+                let w = radix.publish_upto_at(
+                    ns,
+                    &entry.req.tokens[..n_full * bt],
+                    &blocks[..n_full],
+                    n_full * bt,
+                    pool,
+                    &mut entry.radix_cursor,
+                );
                 // Count pages this prefill actually inserted — a span
                 // already cached by an earlier request's pages is a no-op
                 // in the tree and must not inflate the metric.
                 self.metrics.inflight_published_pages +=
                     radix.stats.inserted_blocks - inserted;
-                self.seqs.get_mut(&id).unwrap().published_pages = w;
+                entry.published_pages = w;
             }
         }
 
@@ -800,6 +895,63 @@ impl Engine {
     /// entry point and accounting. Returns whether the fused host batch
     /// ran (false for the PJRT serial fallback, so the metrics histogram
     /// only reports real batching).
+    /// Decode-path write guard, shared by the batched decode pre-pass
+    /// (`write_len` = 1) and the speculative verify pre-pass (`write_len`
+    /// = draft + 1): grow the sequence's block lease to
+    /// `cache_tokens() + extra_tokens` — admission reserved max_new up
+    /// front, so this normally no-ops; in paged mode a dry free list
+    /// sheds cold prefix-cache pages first — and make the `write_len`
+    /// tokens at the sequence's cursor exclusively owned (COW-cloning any
+    /// page shared through the radix cache *before* KV lands in it).
+    /// Returns the write cursor: tokens currently resident in the cache.
+    fn ensure_decode_writable(
+        &mut self,
+        id: u64,
+        extra_tokens: usize,
+        write_len: usize,
+    ) -> Result<usize> {
+        let entry = self.seqs.get_mut(&id).context("unknown seq")?;
+        let need = entry.cache_tokens() + extra_tokens;
+        let mut lease = std::mem::take(&mut entry.blocks);
+        let mut ok = self.blocks.ensure(&mut lease, need);
+        if !ok {
+            if let (Some(pool), Some(radix)) = (self.pool.as_mut(), self.radix.as_mut()) {
+                let missing = self.blocks.blocks_for(need).saturating_sub(lease.len());
+                radix.evict_until(missing, pool, &mut self.blocks);
+            }
+            ok = self.blocks.ensure(&mut lease, need);
+        }
+        if let Some(pool) = self.pool.as_mut() {
+            pool.adopt_new(&lease);
+        }
+        self.seqs.get_mut(&id).unwrap().blocks = lease;
+        anyhow::ensure!(ok, "KV pool exhausted mid-decode (seq {id})");
+        // The backend cursor, not `need - write_len`: `cache_tokens()`
+        // already counts the sampled-but-not-yet-appended token.
+        let pos = match self.backs.get(&id) {
+            Some(SeqBack::HostPaged { len, .. }) => *len,
+            Some(SeqBack::Host { state, .. }) => state.pos,
+            Some(SeqBack::Pjrt { .. }) | None => {
+                anyhow::bail!("missing host backend state for decode write (seq {id})")
+            }
+        };
+        debug_assert!(pos + write_len <= need, "decode cursor ahead of reservation");
+        if self.pool.is_some() {
+            let mut blocks = std::mem::take(&mut self.seqs.get_mut(&id).unwrap().blocks);
+            let res = self.pool.as_mut().unwrap().make_writable(
+                &mut blocks,
+                pos,
+                write_len,
+                &mut self.blocks,
+            );
+            // Restore the (still leased) table before any propagation,
+            // or its pages leak for the engine's lifetime.
+            self.seqs.get_mut(&id).unwrap().blocks = blocks;
+            res?;
+        }
+        Ok(pos)
+    }
+
     fn run_decode_batch(&mut self, ids: &[u64]) -> Result<bool> {
         if ids.is_empty() {
             return Ok(false);
@@ -814,45 +966,7 @@ impl Engine {
 
         // ---- pre-pass: grow each sequence's lease for its new token ----
         for &id in ids {
-            let entry = self.seqs.get_mut(&id).context("unknown seq")?;
-            let need = entry.cache_tokens() + 1;
-            let mut lease = std::mem::take(&mut entry.blocks);
-            // Admission reserved max_new up front, so this normally
-            // no-ops; in paged mode a dry free list sheds cold
-            // prefix-cache pages before giving up.
-            let mut ok = self.blocks.ensure(&mut lease, need);
-            if !ok {
-                if let (Some(pool), Some(radix)) = (self.pool.as_mut(), self.radix.as_mut()) {
-                    let missing = self.blocks.blocks_for(need).saturating_sub(lease.len());
-                    radix.evict_until(missing, pool, &mut self.blocks);
-                }
-                ok = self.blocks.ensure(&mut lease, need);
-            }
-            if let Some(pool) = self.pool.as_mut() {
-                pool.adopt_new(&lease);
-            }
-            self.seqs.get_mut(&id).unwrap().blocks = lease;
-            anyhow::ensure!(ok, "KV pool exhausted mid-decode (seq {id})");
-            if paged {
-                // The pool cursor, not `need - 1`: `cache_tokens()` already
-                // counts the sampled-but-not-yet-appended token.
-                let pos = match self.backs.get(&id) {
-                    Some(SeqBack::HostPaged { len, .. }) => *len,
-                    _ => unreachable!("paged mode requires HostPaged state"),
-                };
-                debug_assert!(pos + 1 <= need, "decode cursor ahead of reservation");
-                let mut blocks = std::mem::take(&mut self.seqs.get_mut(&id).unwrap().blocks);
-                let res = self.pool.as_mut().unwrap().make_writable(
-                    &mut blocks,
-                    pos,
-                    1,
-                    &mut self.blocks,
-                );
-                // Restore the (still leased) table before any propagation,
-                // or its pages leak for the engine's lifetime.
-                self.seqs.get_mut(&id).unwrap().blocks = blocks;
-                res?;
-            }
+            self.ensure_decode_writable(id, 1, 1)?;
         }
 
         // ---- assemble the batch ----
@@ -921,6 +1035,114 @@ impl Engine {
         Ok(true)
     }
 
+    /// Draft for one speculating sequence (a [`WorkItem::Verify`] of this
+    /// step), clamped so a verify can never emit past max_new. An empty
+    /// result means the drafter abstained — the caller folds the sequence
+    /// into the step's fused decode batch instead.
+    fn draft_for(&mut self, id: u64, gamma: usize) -> Vec<u32> {
+        let entry = &self.seqs[&id];
+        let remaining = entry.req.max_new_tokens.saturating_sub(entry.generated.len());
+        // emitted = accepted + 1 <= gamma + 1 <= remaining.
+        let gamma = gamma.min(remaining.saturating_sub(1));
+        let mut draft = match self.drafters.get_mut(&id) {
+            Some(d) if gamma > 0 => d.draft(&entry.req.tokens, &entry.generated, gamma),
+            _ => Vec::new(),
+        };
+        // The gamma cap is load-bearing (step-budget accounting and the
+        // max_new clamp both assume it), so enforce it on the trait
+        // boundary rather than trusting every DraftSource.
+        draft.truncate(gamma);
+        draft
+    }
+
+    /// One speculative decode step for sequence `id` with a non-empty
+    /// `draft` (see [`Engine::draft_for`]): verify the pending token plus
+    /// the whole draft in **one** multi-token forward
+    /// ([`HostModel::forward_verify`]), keep the agreeing draft prefix
+    /// plus the model's own correction token, and roll the rejected KV
+    /// tail back out of the cache. Greedy acceptance against per-position
+    /// exact targets makes the emitted tokens bit-identical to
+    /// non-speculative decode — a verify step only changes how many of
+    /// those tokens one weight stream produces.
+    fn run_verify(&mut self, id: u64, draft: Vec<u32>) -> Result<()> {
+        debug_assert!(!draft.is_empty(), "abstaining sequences join the decode batch");
+        let t0 = Instant::now();
+        let s = draft.len() + 1;
+
+        // ---- pre-pass: lease growth + COW exclusivity over the whole
+        // gamma + 1 write range (the shared decode-path guard) ----
+        let pos0 = self.ensure_decode_writable(id, draft.len(), s)?;
+
+        // ---- one fused forward over [pending, draft...] ----
+        let entry = self.seqs.get(&id).unwrap();
+        let last = *entry.generated.last().context("verify before first token")?;
+        let spec_pol = entry.req.policy.clone();
+        let mut tokens = Vec::with_capacity(s);
+        tokens.push(last);
+        tokens.extend_from_slice(&draft);
+        let mut back = self.backs.remove(&id).expect("missing backend state");
+        let ta = Instant::now();
+        self.ctx.begin_step();
+        let targets = {
+            let model = match &self.backend {
+                Backend::Host(m) => m,
+                Backend::Pjrt(_) => unreachable!("verify requires the host backend"),
+            };
+            let mut kvref = match &mut back {
+                SeqBack::Host { state, .. } => DecodeKv::Private(state),
+                SeqBack::HostPaged { .. } => {
+                    DecodeKv::Paged { blocks: &self.seqs[&id].blocks, pos: pos0 }
+                }
+                SeqBack::Pjrt { .. } => unreachable!("verify requires the host backend"),
+            };
+            let policy = self.policies.get(&spec_pol.name).unwrap();
+            model.forward_verify(
+                &mut kvref,
+                &tokens,
+                policy.as_ref(),
+                spec_pol.budget,
+                self.pool.as_mut(),
+                &mut self.ctx,
+            )
+        };
+        self.metrics.attention_s += ta.elapsed().as_secs_f64();
+
+        // ---- greedy acceptance + rollback of the rejected KV tail ----
+        // targets[i] is the model's token after tokens[..=i]; draft[i] is
+        // tokens[i + 1] — accept while they agree, then targets[accepted]
+        // is the model's own next token (the "free" correction).
+        let accepted = targets.iter().zip(&draft).take_while(|(t, d)| *t == *d).count();
+        let pos_keep = pos0 + 1 + accepted;
+        match &mut back {
+            SeqBack::Host { state, .. } => state.truncate(pos_keep),
+            SeqBack::HostPaged { len, .. } => {
+                self.pool.as_mut().unwrap().truncate_seq(
+                    &self.seqs[&id].blocks,
+                    pos_keep,
+                    pos0 + s,
+                );
+                *len = pos_keep;
+            }
+            SeqBack::Pjrt { .. } => unreachable!(),
+        }
+        self.backs.insert(id, back);
+
+        let entry = self.seqs.get_mut(&id).unwrap();
+        entry.generated.extend_from_slice(&draft[..accepted]);
+        entry.generated.push(targets[accepted]);
+        entry.spec_drafted += draft.len();
+        entry.spec_accepted += accepted;
+        if entry.generated.len() >= entry.req.max_new_tokens {
+            entry.phase = Phase::Finished;
+            entry.finished_at = Some(Instant::now());
+        }
+        if let Some(d) = self.drafters.get_mut(&id) {
+            d.observe(draft.len(), accepted);
+        }
+        self.metrics.record_verify(t0.elapsed(), draft.len(), accepted, accepted + 1);
+        Ok(())
+    }
+
     /// One PJRT decode step (compiled artifacts have a fixed single-token
     /// batch shape; the host backend is the batched path).
     fn run_decode_pjrt(&mut self, id: u64) -> Result<()> {
@@ -971,6 +1193,7 @@ mod tests {
                 block_tokens: 16,
                 seed: 1,
                 kv: KvLayout::Private,
+                spec: SpecCfg::off(),
             },
         )
         .unwrap()
@@ -985,6 +1208,7 @@ mod tests {
                 block_tokens: 16,
                 seed: 1,
                 kv: KvLayout::Paged { prefix_cache },
+                spec: SpecCfg::off(),
             },
         )
         .unwrap()
@@ -1077,6 +1301,7 @@ mod tests {
                 block_tokens: 16,
                 seed: 1,
                 kv: KvLayout::Private,
+                spec: SpecCfg::off(),
             },
         )
         .unwrap();
@@ -1144,6 +1369,7 @@ mod tests {
                 block_tokens: 16,
                 seed: 1,
                 kv: KvLayout::Paged { prefix_cache: true },
+                spec: SpecCfg::off(),
             },
         )
         .unwrap();
@@ -1177,31 +1403,63 @@ mod tests {
     fn follower_parks_and_adopts_pages_published_in_flight() {
         // A second identical prompt submitted mid-prefill must not
         // recompute pages the first is publishing: it parks, adopts, and
-        // prefills only the never-cacheable final page.
+        // prefills only the never-cacheable final page. (The lone
+        // prefiller takes 3 deterministic 16-token chunks per 48-token
+        // step, so one step publishes 3 pages.)
         let mut e = paged_engine(true);
         let spec = || PolicySpec { name: "quoka".into(), budget: 24 };
-        let toks = prompt(64, 3); // 4 pages at bt=16
+        let toks = prompt(96, 3); // 6 pages at bt=16
         let a = e.submit(toks.clone(), 3, spec()).unwrap();
-        e.step().unwrap(); // A prefills [0,16): page 0 published in flight
-        assert_eq!(e.metrics.inflight_published_pages, 1);
+        e.step().unwrap(); // A prefills [0,48): pages 0-2 published in flight
+        assert_eq!(e.metrics.inflight_published_pages, 3);
         let b = e.submit(toks.clone(), 3, spec()).unwrap();
         assert_eq!(e.metrics.inflight_followers, 1, "B parks behind A");
         let mut results = e.run_to_completion().unwrap();
         results.sort_by_key(|r| r.id);
         assert_eq!(results.len(), 2);
-        // B's prefix: 1 page matched at submit + 2 adopted while parked
-        // (the 4th page is capped — at least one token always prefills).
+        // B's prefix: 3 pages matched at submit + 2 adopted while parked
+        // (the 6th page is capped — at least one token always prefills).
         let rb = results.iter().find(|r| r.id == b).unwrap();
-        assert_eq!(rb.cached_prefix_tokens, 48);
+        assert_eq!(rb.cached_prefix_tokens, 80);
         assert_eq!(e.metrics.inflight_adopted_tokens, 32);
         assert_eq!(
-            e.metrics.prefill_tokens, 80,
-            "prefix chunks run exactly once: 64 (A) + 16 (B's final page)"
+            e.metrics.prefill_tokens, 112,
+            "prefix chunks run exactly once: 96 (A) + 16 (B's final page)"
         );
         // Shared pages + a deterministic tail ⇒ identical generations.
         let ra = results.iter().find(|r| r.id == a).unwrap();
         assert_eq!(ra.generated, rb.generated);
         assert_eq!(ra.generated.len(), 3);
+    }
+
+    #[test]
+    fn lone_prefiller_takes_multiple_chunks_per_step() {
+        // ROADMAP open item: while nothing else wants the step budget, a
+        // single prefilling sequence takes several deterministic-width
+        // chunks per step — fewer steps to first token, identical chunk
+        // boundaries (pinned by the bit-equality assertions of the cache
+        // tests, which all run through this path).
+        let mut e = paged_engine(true); // deterministic mode forced on
+        let spec = || PolicySpec { name: "quoka".into(), budget: 24 };
+        e.submit(prompt(96, 5), 1, spec()).unwrap();
+        let mut steps = 0;
+        while e.step().unwrap() {
+            steps += 1;
+        }
+        // 96 prompt tokens at 48-token steps (3 × 16-wide chunks): two
+        // prefill steps, the second of which also samples the only token.
+        assert_eq!(steps + 1, 2, "96-token prompt must prefill in 2 steps, not 6");
+        assert_eq!(e.metrics.prefill_tokens, 96);
+
+        // Private non-deterministic engines keep the one-chunk-per-step
+        // schedule (no pinned grid to preserve): 6 × 16-token chunks.
+        let mut p = engine();
+        p.submit(prompt(96, 5), 1, PolicySpec { name: "quoka".into(), budget: 24 }).unwrap();
+        let mut steps = 0;
+        while p.step().unwrap() {
+            steps += 1;
+        }
+        assert_eq!(steps + 1, 6, "non-deterministic schedule: one b_cp chunk per step");
     }
 
     #[test]
@@ -1224,6 +1482,7 @@ mod tests {
                     block_tokens: 16,
                     seed: 1,
                     kv: KvLayout::Paged { prefix_cache: true },
+                    spec: SpecCfg::off(),
                 },
             )
             .unwrap()
@@ -1252,10 +1511,10 @@ mod tests {
     fn cancel_mid_prefill_unpublishes_unadopted_tail() {
         let mut e = paged_engine(true);
         let spec = || PolicySpec { name: "quoka".into(), budget: 24 };
-        let id = e.submit(prompt(64, 5), 2, spec()).unwrap();
+        let id = e.submit(prompt(128, 5), 2, spec()).unwrap();
         e.step().unwrap();
-        e.step().unwrap(); // two chunks prefilled, two pages published
-        assert_eq!(e.radix.as_ref().unwrap().cached_blocks(), 2);
+        e.step().unwrap(); // 96 of 128 tokens prefilled, 6 pages published
+        assert_eq!(e.radix.as_ref().unwrap().cached_blocks(), 6);
         assert!(e.cancel(id), "known id cancels");
         assert!(!e.cancel(id), "already gone");
         assert_eq!(

@@ -56,6 +56,23 @@ pub struct Metrics {
     /// producing prefill was still running (work shared "while hot"; a
     /// subset of `prefix_hit_tokens`).
     pub inflight_adopted_tokens: u64,
+    /// Speculative decode: verify steps executed (each one multi-token
+    /// forward over a drafted chunk).
+    pub spec_steps: u64,
+    /// Draft tokens proposed / accepted across all verify steps. The
+    /// acceptance rate ([`Metrics::spec_acceptance`]) is their ratio.
+    pub spec_drafted_tokens: u64,
+    pub spec_accepted_tokens: u64,
+    /// Tokens emitted by verify steps (accepted drafts + one correction
+    /// token each; a subset of `decode_tokens`).
+    pub spec_emitted_tokens: u64,
+    /// Wall time of speculative work: drafting (including steps whose
+    /// drafter abstained — those sequences then ride the fused decode
+    /// batch) plus each verify step's multi-token forward and rollback,
+    /// seconds. Counted into `decode_s` as well — speculation IS the
+    /// decode phase for a speculating sequence — and kept separately so
+    /// speculative throughput is reportable on its own.
+    pub spec_s: f64,
 }
 
 impl Metrics {
@@ -83,6 +100,42 @@ impl Metrics {
                 }
                 self.decode_batch_hist[decode] += 1;
             }
+        }
+    }
+
+    /// Record one speculative verify step: `drafted` tokens proposed,
+    /// `accepted` survived greedy verification, `emitted` tokens entered
+    /// the generation (accepted + the model's correction token), taking
+    /// `dur` of wall time end to end (draft + forward + rollback). Token
+    /// totals flow into the regular decode counters — speculation changes
+    /// how decode tokens are produced, not what they are.
+    pub fn record_verify(&mut self, dur: Duration, drafted: usize, accepted: usize, emitted: usize) {
+        self.spec_steps += 1;
+        self.spec_drafted_tokens += drafted as u64;
+        self.spec_accepted_tokens += accepted as u64;
+        self.spec_emitted_tokens += emitted as u64;
+        let secs = dur.as_secs_f64();
+        self.spec_s += secs;
+        self.decode_s += secs;
+        self.decode_tokens += emitted as u64;
+    }
+
+    /// Fraction of drafted tokens that greedy verification accepted.
+    pub fn spec_acceptance(&self) -> f64 {
+        if self.spec_drafted_tokens == 0 {
+            0.0
+        } else {
+            self.spec_accepted_tokens as f64 / self.spec_drafted_tokens as f64
+        }
+    }
+
+    /// Speculative decode throughput: tokens emitted by verify steps per
+    /// second of verify wall time.
+    pub fn spec_tokens_per_s(&self) -> f64 {
+        if self.spec_s == 0.0 {
+            0.0
+        } else {
+            self.spec_emitted_tokens as f64 / self.spec_s
         }
     }
 
@@ -196,6 +249,17 @@ impl Metrics {
                 self.decode_batch_hist_compact(),
             ));
         }
+        if self.spec_steps > 0 {
+            s.push_str(&format!(
+                " spec_steps={} spec_accept_rate={:.1}% spec_drafted={} spec_accepted={} \
+                 spec_tok/s={:.0}",
+                self.spec_steps,
+                100.0 * self.spec_acceptance(),
+                self.spec_drafted_tokens,
+                self.spec_accepted_tokens,
+                self.spec_tokens_per_s(),
+            ));
+        }
         if self.prefix_lookups > 0 {
             s.push_str(&format!(
                 " prefix_hit_rate={:.1}% prefix_tok_reused={} kv_bytes_saved={}",
@@ -259,6 +323,31 @@ mod tests {
         assert_eq!(p.decode_tokens, 8);
         assert!(p.decode_batch_hist.is_empty());
         assert!(!p.summary().contains("decode_batch_hist"), "{}", p.summary());
+    }
+
+    #[test]
+    fn verify_steps_feed_spec_and_decode_counters() {
+        let mut m = Metrics::default();
+        // gamma 4: three drafted, two accepted, three emitted (2 + the
+        // correction token).
+        m.record_verify(Duration::from_millis(10), 3, 2, 3);
+        // A fully accepted gamma-2 step.
+        m.record_verify(Duration::from_millis(5), 2, 2, 3);
+        assert_eq!(m.spec_steps, 2);
+        assert_eq!(m.spec_drafted_tokens, 5);
+        assert_eq!(m.spec_accepted_tokens, 4);
+        assert_eq!(m.spec_emitted_tokens, 6);
+        assert_eq!(m.decode_tokens, 6, "verify emissions are decode tokens");
+        assert!((m.spec_acceptance() - 4.0 / 5.0).abs() < 1e-12);
+        assert!((m.spec_s - 0.015).abs() < 1e-12);
+        assert!((m.decode_s - 0.015).abs() < 1e-12, "verify time is decode time");
+        assert!((m.spec_tokens_per_s() - 6.0 / 0.015).abs() < 1e-6);
+        let s = m.summary();
+        assert!(s.contains("spec_accept_rate=80.0%"), "{s}");
+        assert!(s.contains("spec_drafted=5"), "{s}");
+        // No speculation ⇒ no spec section.
+        let q = Metrics::default();
+        assert!(!q.summary().contains("spec_"), "{}", q.summary());
     }
 
     #[test]

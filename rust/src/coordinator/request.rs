@@ -1,5 +1,7 @@
 //! Request lifecycle types.
 
+use crate::kvpool::RadixCursor;
+use crate::spec::SpecCfg;
 use std::time::Instant;
 
 /// How a request's attention is sparsified.
@@ -25,6 +27,12 @@ pub struct Request {
     pub tokens: Vec<u32>,
     pub max_new_tokens: usize,
     pub policy: PolicySpec,
+    /// Speculative-decode configuration (off by default): when enabled,
+    /// decode steps draft up to `spec.gamma` tokens and verify them in
+    /// one multi-token forward ([`WorkItem::Verify`]).
+    ///
+    /// [`WorkItem::Verify`]: super::scheduler::WorkItem::Verify
+    pub spec: SpecCfg,
 }
 
 /// Terminal result for one request.
@@ -40,6 +48,10 @@ pub struct RequestResult {
     /// Prompt tokens served from the shared prefix cache — their prefill
     /// chunks were never scheduled (0 without the paged prefix cache).
     pub cached_prefix_tokens: usize,
+    /// Speculative decode: draft tokens proposed / accepted for this
+    /// request (both 0 when speculation was off).
+    pub spec_drafted_tokens: usize,
+    pub spec_accepted_tokens: usize,
     /// Wall time in the engine (admission → completion).
     pub total_s: f64,
 }
@@ -87,6 +99,16 @@ pub struct SeqEntry {
     /// (publish watermark; starts at the submit-time match and advances as
     /// completed pages are published mid-prefill).
     pub published_pages: usize,
+    /// Remembered radix-tree position for this sequence's prompt chain:
+    /// in-flight publishes and follower adoption polls resume the walk
+    /// here instead of re-walking from the root (O(new pages) per call).
+    /// Node indices are stable while the sequence holds references on its
+    /// chain's pages — eviction and abort withdrawal never touch a page
+    /// with a live owner.
+    pub radix_cursor: Option<RadixCursor>,
+    /// Speculative decode accounting: draft tokens proposed / accepted.
+    pub spec_drafted: usize,
+    pub spec_accepted: usize,
 }
 
 impl SeqEntry {
@@ -103,6 +125,9 @@ impl SeqEntry {
             waiting_on: None,
             wait_pages: 0,
             published_pages: 0,
+            radix_cursor: None,
+            spec_drafted: 0,
+            spec_accepted: 0,
         }
     }
 
@@ -147,6 +172,8 @@ impl SeqEntry {
             tpot_s: tpot,
             prompt_tokens: self.req.tokens.len(),
             cached_prefix_tokens: self.cached_tokens,
+            spec_drafted_tokens: self.spec_drafted,
+            spec_accepted_tokens: self.spec_accepted,
             total_s: (end - self.admitted_at).as_secs_f64(),
         }
     }
@@ -157,7 +184,13 @@ mod tests {
     use super::*;
 
     fn req() -> Request {
-        Request { id: 1, tokens: vec![1; 300], max_new_tokens: 4, policy: PolicySpec::default() }
+        Request {
+            id: 1,
+            tokens: vec![1; 300],
+            max_new_tokens: 4,
+            policy: PolicySpec::default(),
+            spec: SpecCfg::off(),
+        }
     }
 
     #[test]

@@ -57,6 +57,12 @@ pub enum WorkItem {
     PrefillChunk { id: u64, start: usize, len: usize },
     /// One decode step for sequence `id`.
     Decode { id: u64 },
+    /// One speculative decode step for sequence `id`: draft up to `gamma`
+    /// tokens and verify them (plus the pending token) in one multi-token
+    /// forward. Charged `gamma + 1` tokens of step budget — the width of
+    /// the verified chunk; the engine falls back to a plain decode when
+    /// the drafter proposes nothing.
+    Verify { id: u64, gamma: usize },
 }
 
 /// The per-step plan.
@@ -127,14 +133,62 @@ impl Scheduler {
         }
 
         // ---- decodes first (latency-critical) ----
+        // A speculating sequence gets a Verify item charged gamma + 1
+        // tokens (the verified chunk width: pending token + gamma drafts),
+        // capped so a step can never emit past max_new. When the residual
+        // budget can't hold the full chunk the sequence degrades to a
+        // plain one-token decode rather than waiting — decode latency
+        // outranks speculation depth.
+        //
+        // Speculation must not starve prefill: the deterministic-width
+        // guarantee ("deferral can delay a chunk, never starve it")
+        // assumes each decoder costs ONE token per step, so while any
+        // sequence still has prefill work, verify charges additionally
+        // reserve one full chunk of headroom — a step full of speculating
+        // decoders degrades (some of) them to plain decodes instead of
+        // deferring the prefill chunk forever. Without prefill work the
+        // whole budget is speculation's to spend.
+        let prefill_pending = self.running.iter().any(|id| {
+            matches!(seqs[id].phase, Phase::Prefill { next } if next < seqs[id].req.tokens.len())
+        });
+        // One full chunk of headroom in both modes: deterministic chunks
+        // must fit at full width or defer, and non-deterministic chunks
+        // shrink to whatever is left — reserving less (say one token)
+        // would let sustained speculation collapse a concurrent prefill
+        // to one token per step, a b_cp-fold TTFT regression.
+        // `det_chunk_width()` is the right quantum for both: b_cp capped
+        // so worst-case one-token-per-decoder load still fits a chunk.
+        let headroom = if prefill_pending { self.cfg.det_chunk_width() } else { 0 };
+        // Every decoder not yet visited still needs its guaranteed one
+        // token, so a verify may only spend what's left after reserving
+        // both the chunk headroom and those tokens — otherwise an early
+        // verify lets later plain decodes erode the reservation.
+        let mut decoders_left = self
+            .running
+            .iter()
+            .filter(|id| matches!(seqs[id].phase, Phase::Decode))
+            .count();
         let mut budget = self.cfg.step_tokens;
         for &id in &self.running {
             if budget == 0 {
                 break;
             }
-            if matches!(seqs[&id].phase, Phase::Decode) {
-                plan.items.push(WorkItem::Decode { id });
-                budget -= 1;
+            let entry = &seqs[&id];
+            if matches!(entry.phase, Phase::Decode) {
+                decoders_left -= 1;
+                let remaining = entry.req.max_new_tokens.saturating_sub(entry.generated.len());
+                let gamma = if entry.req.spec.enabled() {
+                    entry.req.spec.gamma.min(remaining.saturating_sub(1))
+                } else {
+                    0
+                };
+                if gamma > 0 && budget >= 1 + gamma + headroom + decoders_left {
+                    plan.items.push(WorkItem::Verify { id, gamma });
+                    budget -= 1 + gamma;
+                } else {
+                    plan.items.push(WorkItem::Decode { id });
+                    budget -= 1;
+                }
             }
         }
 
@@ -182,6 +236,53 @@ impl Scheduler {
             }
         }
 
+        // ---- lone-prefiller multi-chunk (deterministic mode only) ----
+        // When exactly one sequence has prefill work left, nothing else
+        // wants the residual budget: give the lone prefiller additional
+        // full deterministic-width chunks this step (its in-flight page
+        // publishes land sooner, cutting burst TTFT for parked followers).
+        // Chunk *boundaries* stay on the deterministic grid — only the
+        // number of chunks per step changes — so published KV remains
+        // bit-identical to a serial cold run. Non-deterministic mode is
+        // left alone: without pinned boundaries, extra chunks would just
+        // re-slice the same work the next step would do anyway.
+        if self.cfg.deterministic_chunks {
+            let mut lone: Option<(u64, usize)> = None; // (id, next unscheduled)
+            for &id in &self.running {
+                if let Phase::Prefill { next } = seqs[&id].phase {
+                    let scheduled: usize = plan
+                        .items
+                        .iter()
+                        .filter_map(|it| match it {
+                            WorkItem::PrefillChunk { id: cid, len, .. } if *cid == id => {
+                                Some(*len)
+                            }
+                            _ => None,
+                        })
+                        .sum();
+                    if next + scheduled < seqs[&id].req.tokens.len() {
+                        if lone.replace((id, next + scheduled)).is_some() {
+                            lone = None; // two sequences still want budget
+                            break;
+                        }
+                    }
+                }
+            }
+            if let Some((id, mut cursor)) = lone {
+                let total = seqs[&id].req.tokens.len();
+                let det = self.cfg.det_chunk_width();
+                while budget > 0 && cursor < total {
+                    let len = (total - cursor).min(self.cfg.b_cp).min(det);
+                    if budget < len {
+                        break; // never truncate a deterministic chunk
+                    }
+                    plan.items.push(WorkItem::PrefillChunk { id, start: cursor, len });
+                    cursor += len;
+                    budget -= len;
+                }
+            }
+        }
+
         plan.scheduled_tokens = self.cfg.step_tokens - budget;
         plan
     }
@@ -201,6 +302,7 @@ mod tests {
                 tokens: vec![1; prompt],
                 max_new_tokens: max_new,
                 policy: PolicySpec::default(),
+                spec: crate::spec::SpecCfg::off(),
             }),
         );
     }
@@ -381,6 +483,223 @@ mod tests {
             .items
             .iter()
             .any(|it| matches!(it, WorkItem::PrefillChunk { id: 2, start: 48, .. })));
+    }
+
+    fn mk_spec(
+        seqs: &mut HashMap<u64, SeqEntry>,
+        id: u64,
+        max_new: usize,
+        generated: usize,
+        gamma: usize,
+    ) {
+        let mut e = SeqEntry::new(Request {
+            id,
+            tokens: vec![1; 32],
+            max_new_tokens: max_new,
+            policy: PolicySpec::default(),
+            spec: crate::spec::SpecCfg::prompt_lookup(gamma),
+        });
+        e.phase = Phase::Decode;
+        e.generated = vec![9; generated];
+        seqs.insert(id, e);
+    }
+
+    #[test]
+    fn verify_items_charge_the_chunk_width_and_degrade_under_pressure() {
+        let mut seqs = HashMap::new();
+        let mut blocks = BlockAllocator::new(64, 16);
+        let cfg = SchedCfg { b_cp: 16, step_tokens: 12, max_running: 8, ..SchedCfg::default() };
+        let mut s = Scheduler::new(cfg);
+        // Three speculating decoders at gamma 4 (charge 5 each) + a plain
+        // one: budget 12 holds two full verifies, then the third degrades
+        // to a plain decode, and the non-speculating one is untouched.
+        for id in 1..=3 {
+            mk_spec(&mut seqs, id, 64, 1, 4);
+            s.enqueue(id);
+        }
+        mk(&mut seqs, 4, 32, 8);
+        seqs.get_mut(&4).unwrap().phase = Phase::Decode;
+        s.enqueue(4);
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(
+            plan.items,
+            vec![
+                WorkItem::Verify { id: 1, gamma: 4 },
+                WorkItem::Verify { id: 2, gamma: 4 },
+                WorkItem::Decode { id: 3 },
+                WorkItem::Decode { id: 4 },
+            ],
+            "verify charges gamma + 1; the residual budget degrades to plain decode"
+        );
+        assert_eq!(plan.scheduled_tokens, 12);
+    }
+
+    #[test]
+    fn speculation_never_starves_a_prefilling_sequence() {
+        // Two speculating decoders at gamma 8 would eat the whole 24-token
+        // budget every step, deferring the deterministic 16-wide chunk
+        // forever; with prefill work pending, verify charges must leave
+        // one full chunk of headroom — the decoders degrade to plain
+        // decodes and the chunk is scheduled.
+        let mut seqs = HashMap::new();
+        let mut blocks = BlockAllocator::new(64, 16);
+        let cfg = SchedCfg { b_cp: 16, step_tokens: 24, max_running: 4, deterministic_chunks: true };
+        let mut s = Scheduler::new(cfg);
+        mk_spec(&mut seqs, 1, 64, 1, 8);
+        mk_spec(&mut seqs, 2, 64, 1, 8);
+        mk(&mut seqs, 3, 64, 2);
+        for id in 1..=3 {
+            s.enqueue(id);
+        }
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(
+            plan.items,
+            vec![
+                WorkItem::Decode { id: 1 },
+                WorkItem::Decode { id: 2 },
+                WorkItem::PrefillChunk { id: 3, start: 0, len: 16 },
+            ],
+            "verify charges must respect the prefill chunk's headroom"
+        );
+        // Once the prefiller is done, the full budget belongs to
+        // speculation again.
+        seqs.get_mut(&3).unwrap().phase = Phase::Finished;
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(
+            plan.items,
+            vec![WorkItem::Verify { id: 1, gamma: 8 }, WorkItem::Verify { id: 2, gamma: 8 }],
+        );
+
+        // Mixed erosion: a speculating decoder AHEAD of seven plain
+        // decoders must also reserve their guaranteed tokens — otherwise
+        // its verify passes the headroom check and the plain decodes
+        // behind it erode the budget below the chunk width anyway.
+        let mut seqs = HashMap::new();
+        let cfg = SchedCfg { b_cp: 16, step_tokens: 24, max_running: 9, deterministic_chunks: true };
+        let mut s = Scheduler::new(cfg);
+        mk_spec(&mut seqs, 1, 64, 1, 4);
+        for id in 2..=8 {
+            mk(&mut seqs, id, 32, 4);
+            seqs.get_mut(&id).unwrap().phase = Phase::Decode;
+            seqs.get_mut(&id).unwrap().generated.push(1);
+        }
+        mk(&mut seqs, 9, 64, 2);
+        for id in 1..=9 {
+            s.enqueue(id);
+        }
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(plan.items[0], WorkItem::Decode { id: 1 }, "verify must degrade");
+        assert!(
+            plan.items.contains(&WorkItem::PrefillChunk { id: 9, start: 0, len: 16 }),
+            "the deterministic chunk must fit after all decoders: {:?}",
+            plan.items
+        );
+    }
+
+    #[test]
+    fn verify_gamma_is_capped_by_remaining_tokens() {
+        let mut seqs = HashMap::new();
+        let mut blocks = BlockAllocator::new(64, 16);
+        let mut s = Scheduler::new(SchedCfg::default());
+        // 3 of max_new 5 generated: only 2 remain, so at most 1 draft
+        // token is worth verifying (accepted + correction <= remaining).
+        mk_spec(&mut seqs, 1, 5, 3, 8);
+        s.enqueue(1);
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(plan.items, vec![WorkItem::Verify { id: 1, gamma: 1 }]);
+        // One remaining token: a verify step cannot help — plain decode.
+        let mut seqs2 = HashMap::new();
+        mk_spec(&mut seqs2, 2, 5, 4, 8);
+        let mut s2 = Scheduler::new(SchedCfg::default());
+        s2.enqueue(2);
+        let plan = s2.plan(&mut seqs2, &mut blocks);
+        assert_eq!(plan.items, vec![WorkItem::Decode { id: 2 }]);
+    }
+
+    #[test]
+    fn lone_prefiller_takes_extra_deterministic_chunks() {
+        let mut blocks = BlockAllocator::new(64, 16);
+        let cfg = SchedCfg { b_cp: 16, step_tokens: 64, max_running: 4, deterministic_chunks: true };
+        // Alone: the whole budget becomes full-width chunks on the grid.
+        let mut seqs = HashMap::new();
+        let mut s = Scheduler::new(cfg);
+        mk(&mut seqs, 1, 80, 2);
+        s.enqueue(1);
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(
+            plan.items,
+            vec![
+                WorkItem::PrefillChunk { id: 1, start: 0, len: 16 },
+                WorkItem::PrefillChunk { id: 1, start: 16, len: 16 },
+                WorkItem::PrefillChunk { id: 1, start: 32, len: 16 },
+                WorkItem::PrefillChunk { id: 1, start: 48, len: 16 },
+            ],
+            "a lone prefiller fills the step with deterministic-width chunks"
+        );
+        assert_eq!(plan.scheduled_tokens, 64);
+
+        // The prompt tail still runs short, and the sweep stops there.
+        let mut seqs = HashMap::new();
+        let mut s = Scheduler::new(cfg);
+        mk(&mut seqs, 2, 40, 2);
+        s.enqueue(2);
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(
+            plan.items,
+            vec![
+                WorkItem::PrefillChunk { id: 2, start: 0, len: 16 },
+                WorkItem::PrefillChunk { id: 2, start: 16, len: 16 },
+                WorkItem::PrefillChunk { id: 2, start: 32, len: 8 },
+            ],
+        );
+
+        // Two prefillers: nobody is alone — one chunk each, rest deferred
+        // (boundaries may never depend on who shares the step).
+        let mut seqs = HashMap::new();
+        let mut s = Scheduler::new(cfg);
+        mk(&mut seqs, 3, 80, 2);
+        mk(&mut seqs, 4, 80, 2);
+        s.enqueue(3);
+        s.enqueue(4);
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(
+            plan.items,
+            vec![
+                WorkItem::PrefillChunk { id: 3, start: 0, len: 16 },
+                WorkItem::PrefillChunk { id: 4, start: 0, len: 16 },
+            ],
+        );
+
+        // A decoding neighbour doesn't count as a prefiller, but its
+        // token narrows the budget available for extra chunks.
+        let mut seqs = HashMap::new();
+        let mut s = Scheduler::new(cfg);
+        mk(&mut seqs, 5, 80, 4);
+        mk(&mut seqs, 6, 80, 4);
+        s.enqueue(5);
+        s.enqueue(6);
+        let _ = s.plan(&mut seqs, &mut blocks);
+        seqs.get_mut(&5).unwrap().phase = Phase::Decode;
+        seqs.get_mut(&5).unwrap().generated.push(1);
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(
+            plan.items,
+            vec![
+                WorkItem::Decode { id: 5 },
+                WorkItem::PrefillChunk { id: 6, start: 0, len: 16 },
+                WorkItem::PrefillChunk { id: 6, start: 16, len: 16 },
+                WorkItem::PrefillChunk { id: 6, start: 32, len: 16 },
+            ],
+            "63 residual budget holds three full-width chunks, never a truncated fourth"
+        );
+
+        // Non-deterministic mode: no pinned grid, no multi-chunk sweep.
+        let mut seqs = HashMap::new();
+        let mut s = Scheduler::new(SchedCfg { deterministic_chunks: false, ..cfg });
+        mk(&mut seqs, 7, 80, 2);
+        s.enqueue(7);
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(plan.items, vec![WorkItem::PrefillChunk { id: 7, start: 0, len: 16 }]);
     }
 
     #[test]

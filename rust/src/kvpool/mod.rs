@@ -80,4 +80,4 @@ pub mod pool;
 pub mod radix;
 
 pub use pool::{KvPool, PagedKv, PoolCfg};
-pub use radix::{policy_ns, RadixCache, RadixStats};
+pub use radix::{policy_ns, RadixCache, RadixCursor, RadixStats};

@@ -181,6 +181,17 @@ impl KvPool {
         self.refcount[b as usize]
     }
 
+    /// Filled slots of page `b` in `layer` (0 for never-ensured pages) —
+    /// metadata observability for tests and debugging.
+    pub fn page_fill(&self, layer: usize, b: u32) -> usize {
+        let bi = b as usize;
+        if bi < self.capacity_pages {
+            self.layers[layer].fill[bi] as usize
+        } else {
+            0
+        }
+    }
+
     /// True when every layer of page `b` has all `block_tokens` slots
     /// written — the publishability condition for the radix cache's
     /// in-flight inserts (a partially filled page must never be shared:
@@ -383,6 +394,57 @@ impl KvPool {
         }
         if lp.fill[page] as usize <= slot {
             lp.fill[page] = (slot + 1) as u16;
+        }
+    }
+
+    /// Roll a sequence's cache back from `old_t` to `new_t` resident
+    /// tokens (speculative-decode rollback of rejected draft tokens),
+    /// keeping every page's metadata exactly as if tokens `new_t..old_t`
+    /// were never appended: fill counters drop to the kept slot count,
+    /// dropped slots' inverse norms are zeroed, and per-(page, head) key
+    /// sums are rebuilt by re-accumulating the surviving rows in append
+    /// order — bit-identical to the incremental sums an append-only
+    /// history would have produced (f32 addition is order-sensitive, so a
+    /// subtract-the-rejected-rows shortcut would drift).
+    ///
+    /// COW-aware by precondition: every touched page must be exclusively
+    /// owned (`refcount == 1`). Rollback only ever covers positions the
+    /// same step's verify forward just wrote, and those pages were
+    /// `make_writable`-guarded before the write — a page shared through
+    /// the radix cache is cloned *before* any draft KV lands in it, so
+    /// rollback can never mutate shared KV.
+    pub fn truncate_seq(&mut self, blocks: &[u32], new_t: usize, old_t: usize) {
+        if new_t >= old_t {
+            return;
+        }
+        let PoolCfg { n_kv, d, block_tokens: bt, .. } = self.cfg;
+        assert!(blocks.len() * bt >= old_t, "block table too short for truncate");
+        for j in new_t / bt..=(old_t - 1) / bt {
+            let page = blocks[j] as usize;
+            assert!(
+                self.refcount[page] == 1,
+                "speculative rollback into shared/unowned page {page}"
+            );
+            let keep = new_t.saturating_sub(j * bt).min(bt);
+            for lp in &mut self.layers {
+                let filled = lp.fill[page] as usize;
+                if filled <= keep {
+                    continue; // page never held rejected rows in this layer
+                }
+                for h in 0..n_kv {
+                    let nb = (page * n_kv + h) * bt;
+                    lp.inv_norm[nb + keep..nb + filled].fill(0.0);
+                    let sb = (page * n_kv + h) * d;
+                    lp.key_sums[sb..sb + d].fill(0.0);
+                    for slot in 0..keep {
+                        let kb = ((page * n_kv + h) * bt + slot) * d;
+                        for jj in 0..d {
+                            lp.key_sums[sb + jj] += lp.k[kb + jj];
+                        }
+                    }
+                }
+                lp.fill[page] = keep as u16;
+            }
         }
     }
 
@@ -625,6 +687,95 @@ mod tests {
         let v1 = vec![0.0f32; c.n_kv * c.d];
         pool.append_chunk(&blocks, 1, c.block_tokens - 1, &k1, &v1, 1);
         assert!(pool.page_filled(blocks[0]));
+    }
+
+    #[test]
+    fn truncate_seq_rewinds_fill_sums_and_norms() {
+        let c = cfg();
+        let mut alloc = BlockAllocator::new(c.total_blocks, c.block_tokens);
+        let mut pool = KvPool::new(c);
+        let mut rng = Rng::new(41);
+        let blocks = lease_for(&mut alloc, &mut pool, 3 * c.block_tokens);
+        // 6 base tokens (1.5 pages), then a 5-token "draft" spanning into
+        // page 2, rolled back to 6 + 2 accepted.
+        let (base, draft, keep) = (6usize, 5usize, 2usize);
+        let mk = |rng: &mut Rng, n: usize| {
+            (rng.normal_vec(c.n_kv * n * c.d, 1.0), rng.normal_vec(c.n_kv * n * c.d, 1.0))
+        };
+        let mut drafts = Vec::new();
+        for l in 0..c.n_layers {
+            let (k, v) = mk(&mut rng, base);
+            pool.append_chunk(&blocks, l, 0, &k, &v, base);
+            drafts.push(mk(&mut rng, draft));
+        }
+        // Oracle state: what fill/sums look like with base + keep only.
+        let mut oracle = KvPool::new(c);
+        let mut alloc_o = BlockAllocator::new(c.total_blocks, c.block_tokens);
+        let blocks_o = lease_for(&mut alloc_o, &mut oracle, 3 * c.block_tokens);
+        let mut rng_o = Rng::new(41);
+        for l in 0..c.n_layers {
+            let (k, v) = mk(&mut rng_o, base);
+            oracle.append_chunk(&blocks_o, l, 0, &k, &v, base);
+            let (dk, dv) = mk(&mut rng_o, draft);
+            let head = |s: &[f32]| -> Vec<f32> {
+                (0..c.n_kv)
+                    .flat_map(|h| s[h * draft * c.d..(h * draft + keep) * c.d].to_vec())
+                    .collect()
+            };
+            oracle.append_chunk(&blocks_o, l, base, &head(&dk), &head(&dv), keep);
+        }
+        for (l, (dk, dv)) in drafts.iter().enumerate() {
+            pool.append_chunk(&blocks, l, base, dk, dv, draft);
+        }
+        assert_eq!(pool.page_fill(0, blocks[2]), 3, "draft reached page 2");
+        pool.truncate_seq(&blocks, base + keep, base + draft);
+        for l in 0..c.n_layers {
+            for (j, (&b, &bo)) in blocks.iter().zip(&blocks_o).enumerate() {
+                assert_eq!(
+                    pool.page_fill(l, b),
+                    oracle.page_fill(l, bo),
+                    "fill of page {j} layer {l}"
+                );
+                let (ka, ko) = (pool.k_cache(&blocks, 0, l), oracle.k_cache(&blocks_o, 0, l));
+                for h in 0..c.n_kv {
+                    let sa = (b as usize * c.n_kv + h) * c.d;
+                    let so = (bo as usize * c.n_kv + h) * c.d;
+                    assert_eq!(
+                        &ka.pages.unwrap().key_sums[sa..sa + c.d],
+                        &ko.pages.unwrap().key_sums[so..so + c.d],
+                        "key sums of page {j} layer {l} head {h} (must be bit-identical \
+                         to never having appended the rejected tail)"
+                    );
+                    let na = (b as usize * c.n_kv + h) * c.block_tokens;
+                    let no = (bo as usize * c.n_kv + h) * c.block_tokens;
+                    assert_eq!(
+                        &ka.inv_norms.unwrap()[na..na + c.block_tokens],
+                        &ko.inv_norms.unwrap()[no..no + c.block_tokens],
+                        "inv norms of page {j} layer {l} head {h}"
+                    );
+                }
+            }
+        }
+        // Re-appending after rollback behaves like a first write.
+        let (k2, v2) = mk(&mut rng, 1);
+        pool.append_chunk(&blocks, 0, base + keep, &k2, &v2, 1);
+        assert_eq!(pool.page_fill(0, blocks[(base + keep) / c.block_tokens]), {
+            (base + keep) % c.block_tokens + 1
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "shared/unowned")]
+    fn truncate_seq_refuses_shared_pages() {
+        let c = cfg();
+        let mut alloc = BlockAllocator::new(c.total_blocks, c.block_tokens);
+        let mut pool = KvPool::new(c);
+        let blocks = lease_for(&mut alloc, &mut pool, c.block_tokens);
+        let k = vec![1.0f32; c.n_kv * 2 * c.d];
+        let v = vec![0.5f32; c.n_kv * 2 * c.d];
+        pool.append_chunk(&blocks, 0, 0, &k, &v, 2);
+        pool.retain(blocks[0]); // shared via the radix cache, say
+        pool.truncate_seq(&blocks, 1, 2); // must panic, never mutate
     }
 
     #[test]

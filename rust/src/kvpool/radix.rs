@@ -64,6 +64,31 @@ struct Node {
     block: u32,
     /// LRU clock value of the last lookup/insert touching this node.
     last_use: u64,
+    /// Slot generation, bumped whenever the slot is freed — remembered
+    /// [`RadixCursor`]s validate against it before trusting the index.
+    gen: u64,
+}
+
+/// A remembered position in one prompt's radix chain: `node` is the tree
+/// node whose depth (in whole pages) is `pages`. Callers that publish or
+/// poll the same chain repeatedly hand the cursor back so each call walks
+/// only the *new* pages instead of re-walking from the root — O(new)
+/// instead of O(published) span hashes per call.
+///
+/// Validity: node indices are stable while the chain's pages stay
+/// referenced (eviction and abort withdrawal never free a page with a
+/// live owner), which covers a publisher's own chain and a follower's
+/// adopted prefix. The one exception is a chain tail whose node holds
+/// *another* request's page (duplicate publishes keep the existing node):
+/// that page can be evicted once its owner retires, freeing the node
+/// under the cursor. Cursors therefore carry the node's generation
+/// counter — a stale or reused slot fails validation and the walk falls
+/// back to the root, trading one O(published) re-walk for correctness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RadixCursor {
+    node: usize,
+    gen: u64,
+    pages: usize,
 }
 
 /// Cache observability counters.
@@ -111,10 +136,13 @@ impl RadixCache {
     }
 
     fn new_node(&mut self, parent: usize, edge: Vec<u32>, block: u32) -> usize {
-        let node = Node { children: HashMap::new(), parent, edge, block, last_use: self.tick };
+        let node =
+            Node { children: HashMap::new(), parent, edge, block, last_use: self.tick, gen: 0 };
         match self.free_nodes.pop() {
             Some(i) => {
+                let gen = self.nodes[i].gen; // survives the slot overwrite
                 self.nodes[i] = node;
+                self.nodes[i].gen = gen;
                 i
             }
             None => {
@@ -199,6 +227,10 @@ impl RadixCache {
     /// cached spans is a no-op (existing nodes keep their pages), so the
     /// caller only needs a monotone watermark, not exact bookkeeping.
     /// Returns the new watermark: pages of `tokens` now in the tree.
+    ///
+    /// Thin wrapper over [`RadixCache::publish_upto_at`] with no
+    /// remembered cursor (one full root walk per call) — there is exactly
+    /// one copy of the walk/insert/retain logic.
     pub fn publish_upto(
         &mut self,
         ns: u64,
@@ -207,6 +239,62 @@ impl RadixCache {
         filled_tokens: usize,
         pool: &mut KvPool,
     ) -> usize {
+        self.publish_upto_at(ns, tokens, blocks, filled_tokens, pool, &mut None)
+    }
+
+    /// Resolve a remembered cursor to `(node, depth)`, falling back to a
+    /// fresh root walk when the cursor is absent, stale (its slot was
+    /// freed or reused — generation mismatch), or deeper than the caller's
+    /// confirmed coverage. Returns `None` when the namespace has no tree
+    /// yet and `create_root` is false.
+    fn resolve_cursor(
+        &mut self,
+        ns: u64,
+        tokens: &[u32],
+        cursor: &Option<RadixCursor>,
+        max_depth: usize,
+        create_root: bool,
+    ) -> Option<(usize, usize)> {
+        if let Some(c) = cursor {
+            let live = c.node < self.nodes.len()
+                && self.nodes[c.node].gen == c.gen
+                && self.nodes[c.node].parent != PARENT_FREE;
+            if live && c.pages <= max_depth {
+                debug_assert!(
+                    c.pages == 0
+                        || (c.pages * self.block_tokens <= tokens.len()
+                            && self.nodes[c.node].edge
+                                == tokens[(c.pages - 1) * self.block_tokens
+                                    ..c.pages * self.block_tokens]),
+                    "live radix cursor off its chain"
+                );
+                return Some((c.node, c.pages));
+            }
+        }
+        if create_root {
+            Some((self.root(ns), 0))
+        } else {
+            self.roots.get(&ns).map(|&r| (r, 0))
+        }
+    }
+
+    /// [`RadixCache::publish_upto`] with a remembered cursor: the walk
+    /// resumes at `cursor` (or the namespace root when absent/stale) and
+    /// only descends/creates nodes for pages past the cursor's depth, so
+    /// a publisher inserting pages chunk by chunk pays O(new pages) per
+    /// publish instead of re-hashing its whole published span. The cursor
+    /// is advanced to the new watermark; semantics are otherwise identical
+    /// (whole pages only, idempotent over already-cached spans).
+    pub fn publish_upto_at(
+        &mut self,
+        ns: u64,
+        tokens: &[u32],
+        blocks: &[u32],
+        filled_tokens: usize,
+        pool: &mut KvPool,
+        cursor: &mut Option<RadixCursor>,
+    ) -> usize {
+        self.tick += 1;
         let bt = self.block_tokens;
         let n = (filled_tokens / bt).min(tokens.len() / bt).min(blocks.len());
         if cfg!(debug_assertions) {
@@ -214,8 +302,79 @@ impl RadixCache {
                 assert!(pool.page_filled(b), "publishing partially filled page {b} (fill < {bt})");
             }
         }
-        self.insert(ns, &tokens[..n * bt], &blocks[..n], pool);
+        let (mut cur, start) =
+            self.resolve_cursor(ns, tokens, cursor, n, true).expect("root creation is infallible");
+        for j in start..n {
+            let span = &tokens[j * bt..(j + 1) * bt];
+            if let Some(&next) = self.nodes[cur].children.get(span) {
+                cur = next;
+                self.nodes[cur].last_use = self.tick;
+            } else {
+                let span = span.to_vec();
+                let node = self.new_node(cur, span.clone(), blocks[j]);
+                self.nodes[cur].children.insert(span, node);
+                pool.retain(blocks[j]);
+                self.stats.inserted_blocks += 1;
+                cur = node;
+            }
+        }
+        *cursor =
+            Some(RadixCursor { node: cur, gen: self.nodes[cur].gen, pages: n.max(start) });
         n
+    }
+
+    /// [`RadixCache::extend_match`] with a remembered cursor: the
+    /// follower-adoption poll resumes its silent walk at `cursor` instead
+    /// of the root (O(new pages) per poll). As in `extend_match`, returns
+    /// the pages cached beyond `from_pages`, or nothing when the chain no
+    /// longer reaches `from_pages`. The cursor is advanced only to
+    /// `from_pages` — the depth the caller has *confirmed holdings* for
+    /// (an adopter may take fewer pages than matched, and cursor safety
+    /// leans on the owner referencing every page at or above the cursor);
+    /// the caller bumps it implicitly by passing a larger `from_pages`
+    /// next poll.
+    pub fn extend_match_at(
+        &mut self,
+        ns: u64,
+        tokens: &[u32],
+        from_pages: usize,
+        cursor: &mut Option<RadixCursor>,
+    ) -> Vec<u32> {
+        let bt = self.block_tokens;
+        let max_blocks = tokens.len().saturating_sub(1) / bt;
+        let Some((mut cur, start)) = self.resolve_cursor(ns, tokens, cursor, from_pages, false)
+        else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        let mut depth = start;
+        let mut at_from = if start == from_pages { Some(cur) } else { None };
+        for j in start..max_blocks {
+            let span = &tokens[j * bt..(j + 1) * bt];
+            match self.nodes[cur].children.get(span) {
+                Some(&next) => {
+                    cur = next;
+                    depth = j + 1;
+                    if depth == from_pages {
+                        at_from = Some(cur);
+                    }
+                    if j >= from_pages {
+                        out.push(self.nodes[cur].block);
+                    }
+                }
+                None => break,
+            }
+        }
+        if depth < from_pages {
+            // The chain no longer reaches the caller's coverage
+            // (unpublished or evicted underneath it): nothing to adopt.
+            return Vec::new();
+        }
+        if let Some(node) = at_from {
+            *cursor =
+                Some(RadixCursor { node, gen: self.nodes[node].gen, pages: from_pages });
+        }
+        out
     }
 
     /// Pages cached for `tokens` beyond the first `from_pages`, in walk
@@ -224,27 +383,11 @@ impl RadixCache {
     /// which protect the pages from eviction better than recency would).
     /// Returns an empty vector when even the first `from_pages` pages are
     /// no longer cached (the chain was unpublished or evicted).
-    pub fn extend_match(&self, ns: u64, tokens: &[u32], from_pages: usize) -> Vec<u32> {
-        let bt = self.block_tokens;
-        let max_blocks = tokens.len().saturating_sub(1) / bt;
-        let Some(&root) = self.roots.get(&ns) else {
-            return Vec::new();
-        };
-        let mut cur = root;
-        let mut out = Vec::new();
-        for j in 0..max_blocks {
-            let span = &tokens[j * bt..(j + 1) * bt];
-            match self.nodes[cur].children.get(span) {
-                Some(&next) => {
-                    cur = next;
-                    if j >= from_pages {
-                        out.push(self.nodes[cur].block);
-                    }
-                }
-                None => break,
-            }
-        }
-        out
+    ///
+    /// Thin wrapper over [`RadixCache::extend_match_at`] with no
+    /// remembered cursor (one full root walk per call).
+    pub fn extend_match(&mut self, ns: u64, tokens: &[u32], from_pages: usize) -> Vec<u32> {
+        self.extend_match_at(ns, tokens, from_pages, &mut None)
     }
 
     /// Withdraw the unadopted tail of a published chain (leader abort):
@@ -368,6 +511,7 @@ impl RadixCache {
         pool.release_block(self.nodes[idx].block, alloc);
         self.nodes[idx].children = HashMap::new();
         self.nodes[idx].parent = PARENT_FREE;
+        self.nodes[idx].gen += 1; // invalidate remembered cursors
         self.free_nodes.push(idx);
     }
 
@@ -509,6 +653,77 @@ mod tests {
         assert_eq!(r.unpublish_tail(ns, &toks, 0, &mut pool, &mut alloc), 1);
         assert_eq!(alloc.free_blocks(), 32);
         r.validate(&pool).unwrap();
+    }
+
+    #[test]
+    fn cursor_publish_walks_only_new_pages_and_matches_root_walks() {
+        let (mut r, mut pool, mut alloc) = setup();
+        let ns = policy_ns("quoka", 64, 16);
+        let toks = seq_tokens(16, 3); // 4 pages
+        let blocks = alloc.alloc(4).unwrap();
+        pool.adopt_new(&blocks);
+        fill(&mut pool, &blocks, 0, 8);
+        // Two cursor publishes must equal one big from-root publish.
+        let mut cur = None;
+        assert_eq!(r.publish_upto_at(ns, &toks, &blocks, 8, &mut pool, &mut cur), 2);
+        let c1 = cur.expect("cursor set");
+        fill(&mut pool, &blocks, 8, 8);
+        assert_eq!(r.publish_upto_at(ns, &toks, &blocks, 16, &mut pool, &mut cur), 4);
+        assert_ne!(cur.unwrap(), c1, "cursor advances with the watermark");
+        assert_eq!(r.cached_blocks(), 4);
+        for &b in &blocks {
+            assert_eq!(pool.refcount(b), 2, "seq + tree, no double retain via cursor");
+        }
+        // Republish through the same cursor: idempotent, no new inserts.
+        let inserted = r.stats.inserted_blocks;
+        assert_eq!(r.publish_upto_at(ns, &toks, &blocks, 16, &mut pool, &mut cur), 4);
+        assert_eq!(r.stats.inserted_blocks, inserted);
+        r.validate(&pool).unwrap();
+
+        // The cursor-aware follower poll equals the root-walk poll, and
+        // its remembered position advances with confirmed coverage.
+        let mut fc = None;
+        assert_eq!(r.extend_match_at(ns, &toks, 1, &mut fc), r.extend_match(ns, &toks, 1));
+        assert!(fc.is_some());
+        assert_eq!(r.extend_match_at(ns, &toks, 2, &mut fc), r.extend_match(ns, &toks, 2));
+        // Whole-prompt cap carries over: 16 tokens → 3 matchable pages.
+        assert_eq!(r.extend_match_at(ns, &toks, 3, &mut fc), Vec::<u32>::new());
+        // An unknown namespace stays empty through the cursor API too.
+        let mut none = None;
+        assert!(r.extend_match_at(policy_ns("dense", 0, 16), &toks, 0, &mut none).is_empty());
+    }
+
+    #[test]
+    fn stale_cursor_falls_back_to_a_root_walk() {
+        let (mut r, mut pool, mut alloc) = setup();
+        let ns = policy_ns("quoka", 64, 16);
+        let toks = seq_tokens(12, 4); // 3 pages
+        let mut blocks = alloc.alloc(3).unwrap();
+        pool.adopt_new(&blocks);
+        fill(&mut pool, &blocks, 0, 12);
+        let mut cur = None;
+        r.publish_upto_at(ns, &toks, &blocks, 12, &mut pool, &mut cur);
+        // The publisher retires; its chain is evicted under the cursor.
+        pool.release_seq(&mut blocks, &mut alloc);
+        r.evict_until(alloc.total_blocks(), &mut pool, &mut alloc);
+        assert_eq!(r.cached_blocks(), 0);
+        // A new request republishes the same prompt while handing the
+        // stale cursor back: generation validation must reject it and the
+        // walk restarts at the root — fresh nodes, correct refcounts.
+        let blocks2 = alloc.alloc(3).unwrap();
+        pool.adopt_new(&blocks2);
+        fill(&mut pool, &blocks2, 0, 12);
+        assert_eq!(r.publish_upto_at(ns, &toks, &blocks2, 12, &mut pool, &mut cur), 3);
+        assert_eq!(r.cached_blocks(), 3);
+        assert_eq!(r.lookup(ns, &[toks.clone(), vec![0; 4]].concat()), blocks2);
+        r.validate(&pool).unwrap();
+        // Likewise for the follower poll: a stale cursor is equivalent to
+        // no cursor, not a crash or a wrong chain.
+        let mut stale = cur; // now valid again (points at the new chain)
+        r.evict_until(alloc.total_blocks(), &mut pool, &mut alloc);
+        assert_eq!(r.cached_blocks(), 3, "live pages are never evicted");
+        let adopted = r.extend_match_at(ns, &toks, 0, &mut stale);
+        assert_eq!(adopted, blocks2[..2].to_vec());
     }
 
     #[test]

@@ -28,6 +28,7 @@ pub mod util;
 pub mod tensor;
 pub mod select;
 pub mod kvpool;
+pub mod spec;
 pub mod model;
 pub mod workload;
 pub mod eval;

@@ -8,7 +8,7 @@
 //! quoka inspect --artifacts artifacts
 //! ```
 
-use quoka::bench::{latency, prefix, tables};
+use quoka::bench::{latency, prefix, spec, tables};
 use quoka::coordinator::{Engine, EngineCfg, KvLayout, SchedCfg};
 use quoka::server::{serve, Client, WireRequest};
 use quoka::util::cli::{usage, Args, OptSpec};
@@ -69,6 +69,8 @@ fn serve_specs() -> Vec<OptSpec> {
         OptSpec { name: "seed", help: "weight seed", default: Some("0"), boolean: false },
         OptSpec { name: "paged", help: "shared paged KV pool (host backend; dense/quoka*)", default: None, boolean: true },
         OptSpec { name: "prefix-cache", help: "radix prefix cache over the paged pool (implies --paged)", default: None, boolean: true },
+        OptSpec { name: "spec-gamma", help: "speculative decode: max draft tokens per step (0 = off)", default: Some("0"), boolean: false },
+        OptSpec { name: "spec-policy", help: "speculative draft policy (off | pld)", default: Some("pld"), boolean: false },
         OptSpec { name: "help", help: "show help", default: None, boolean: true },
     ]
 }
@@ -97,6 +99,9 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         block_tokens: a.usize("block-tokens")?,
         seed: a.usize("seed")? as u64,
         kv,
+        // Engine-wide default; per-request `spec_gamma` / `spec_policy`
+        // wire fields override it.
+        spec: quoka::spec::SpecCfg::parse(&a.str("spec-policy")?, a.usize("spec-gamma")?)?,
     };
     let backend = a.str("backend")?;
     let preset = a.str("preset")?;
@@ -124,6 +129,8 @@ fn cmd_request(argv: Vec<String>) -> anyhow::Result<()> {
         OptSpec { name: "max-new", help: "tokens to generate", default: Some("16"), boolean: false },
         OptSpec { name: "policy", help: "selection policy", default: Some("quoka"), boolean: false },
         OptSpec { name: "budget", help: "selection budget B_SA", default: Some("1024"), boolean: false },
+        OptSpec { name: "spec-gamma", help: "speculative decode: max draft tokens per step (0 = off)", default: None, boolean: false },
+        OptSpec { name: "spec-policy", help: "speculative draft policy (off | pld); server resolves gamma when omitted", default: None, boolean: false },
         OptSpec { name: "help", help: "show help", default: None, boolean: true },
     ];
     let a = Args::parse(argv, &specs)?;
@@ -133,15 +140,37 @@ fn cmd_request(argv: Vec<String>) -> anyhow::Result<()> {
     }
     let addr: std::net::SocketAddr = a.str("addr")?.parse()?;
     let mut c = Client::connect(addr)?;
+    // Either flag passed explicitly is an override (so `--spec-policy off`
+    // alone disables speculation); neither leaves the server default.
+    let spec = if a.get("spec-gamma").is_some() || a.get("spec-policy").is_some() {
+        Some(quoka::server::WireSpec {
+            policy: a.get("spec-policy").unwrap_or("pld").to_string(),
+            gamma: match a.get("spec-gamma") {
+                Some(_) => Some(a.usize("spec-gamma")?),
+                None => None,
+            },
+        })
+    } else {
+        None
+    };
     let resp = c.request(&WireRequest {
         prompt: a.str("prompt")?,
         max_new: a.usize("max-new")?,
         policy: a.str("policy")?,
         budget: a.usize("budget")?,
+        spec,
     })?;
     println!(
-        "id={} ttft={:.1}ms tpot={:.2}ms prompt_tokens={} generated={}\ntext: {:?}",
-        resp.id, resp.ttft_ms, resp.tpot_ms, resp.prompt_tokens, resp.generated, resp.text
+        "id={} ttft={:.1}ms tpot={:.2}ms prompt_tokens={} generated={} \
+         spec_drafted={} spec_accepted={}\ntext: {:?}",
+        resp.id,
+        resp.ttft_ms,
+        resp.tpot_ms,
+        resp.prompt_tokens,
+        resp.generated,
+        resp.spec_drafted_tokens,
+        resp.spec_accepted_tokens,
+        resp.text
     );
     Ok(())
 }
@@ -168,13 +197,14 @@ fn cmd_bench(argv: Vec<String>) -> anyhow::Result<()> {
         "fig6_decode" => drop(latency::fig6_decode()),
         "micro_hotpath" => drop(latency::micro_hotpath()),
         "prefix_serving" => drop(prefix::prefix_serving()),
+        "spec_serving" => drop(spec::spec_serving()),
         "all" => {
             for id in [
                 "fig2_geometry", "fig3_deviation", "fig4_niah", "table1_ruler",
                 "table2_ruler_budget", "table3_longbench", "table4_complexity",
                 "table8_math500", "table9_scoring", "table10_aggregation",
                 "table11_bcp", "table12_nq", "fig5_latency", "fig6_decode",
-                "micro_hotpath", "prefix_serving",
+                "micro_hotpath", "prefix_serving", "spec_serving",
             ] {
                 cmd_bench(vec![id.to_string()])?;
             }
@@ -184,7 +214,7 @@ fn cmd_bench(argv: Vec<String>) -> anyhow::Result<()> {
                 "experiments (DESIGN.md §6):\n  fig2_geometry fig3_deviation fig4_niah\n  \
                  table1_ruler table2_ruler_budget table3_longbench table4_complexity\n  \
                  table8_math500 table9_scoring table10_aggregation table11_bcp table12_nq\n  \
-                 fig5_latency fig6_decode micro_hotpath prefix_serving all\n\n\
+                 fig5_latency fig6_decode micro_hotpath prefix_serving spec_serving all\n\n\
                  QUOKA_BENCH_FULL=1 for paper-scale grids."
             );
         }

@@ -171,6 +171,21 @@ impl KvBuffers {
         self.t += 1;
     }
 
+    /// Roll the cache back to `new_t` valid rows (speculative-decode
+    /// rollback of rejected draft tokens). Storage and capacity are
+    /// untouched — truncated rows are dead until the next `append`
+    /// overwrites them — but the norm-cache entries of the dropped rows
+    /// are zeroed so the cache is bit-identical to one that never
+    /// appended them.
+    pub fn truncate(&mut self, new_t: usize) {
+        assert!(new_t <= self.t, "truncate({new_t}) beyond t={}", self.t);
+        for h in 0..self.n_kv {
+            let base = h * self.capacity;
+            self.k_inv_norm[base + new_t..base + self.t].fill(0.0);
+        }
+        self.t = new_t;
+    }
+
     /// Key row `(h, i)`.
     #[inline]
     pub fn key(&self, h: usize, i: usize) -> &[f32] {
@@ -1096,6 +1111,51 @@ mod tests {
         assert_eq!(cache.t, 8);
         assert_eq!(cache.key(1, 0), &first_key[..]);
         assert_eq!(cache.key(0, 4), &k2[d..2 * d]);
+    }
+
+    #[test]
+    fn truncate_rolls_back_to_a_never_appended_state() {
+        let mut rng = Rng::new(23);
+        let (n_kv, d) = (2usize, 4usize);
+        let (base, draft, keep) = (5usize, 4usize, 2usize);
+        let kb = rng.normal_vec(n_kv * base * d, 1.0);
+        let vb = rng.normal_vec(n_kv * base * d, 1.0);
+        let kd = rng.normal_vec(n_kv * draft * d, 1.0);
+        let vd = rng.normal_vec(n_kv * draft * d, 1.0);
+        let mut spec = KvBuffers::new(n_kv, d, 2);
+        spec.append(&kb, &vb, base);
+        spec.append(&kd, &vd, draft);
+        spec.truncate(base + keep);
+        // Oracle: only ever appended base + the accepted prefix.
+        let head = |s: &[f32]| -> Vec<f32> {
+            (0..n_kv).flat_map(|h| s[h * draft * d..(h * draft + keep) * d].to_vec()).collect()
+        };
+        let mut want = KvBuffers::new(n_kv, d, 2);
+        want.append(&kb, &vb, base);
+        want.append(&head(&kd), &head(&vd), keep);
+        assert_eq!(spec.t, want.t);
+        for h in 0..n_kv {
+            for i in 0..spec.t {
+                assert_eq!(spec.key(h, i), want.key(h, i), "key ({h},{i})");
+                assert_eq!(spec.value(h, i), want.value(h, i), "value ({h},{i})");
+                assert_eq!(
+                    spec.k_inv_norm[h * spec.capacity + i],
+                    want.k_inv_norm[h * want.capacity + i],
+                    "norm ({h},{i})"
+                );
+            }
+            // Truncated rows' norm-cache entries are zeroed (dead rows).
+            for i in spec.t..base + draft {
+                assert_eq!(spec.k_inv_norm[h * spec.capacity + i], 0.0, "stale norm ({h},{i})");
+            }
+        }
+        // Appending after a rollback overwrites the dead rows cleanly.
+        let k1 = rng.normal_vec(n_kv * d, 1.0);
+        let v1 = rng.normal_vec(n_kv * d, 1.0);
+        spec.append(&k1, &v1, 1);
+        want.append(&k1, &v1, 1);
+        assert_eq!(spec.t, want.t);
+        assert_eq!(spec.key(1, spec.t - 1), want.key(1, want.t - 1));
     }
 
     #[test]

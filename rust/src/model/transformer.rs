@@ -37,6 +37,15 @@ impl SeqState {
     pub fn kv_bytes(&self) -> usize {
         self.caches.iter().map(|c| c.resident_bytes()).sum()
     }
+
+    /// Roll every layer's cache back to `new_pos` tokens (speculative
+    /// rollback of rejected draft tokens).
+    pub fn truncate(&mut self, new_pos: usize) {
+        for c in &mut self.caches {
+            c.truncate(new_pos);
+        }
+        self.pos = new_pos;
+    }
 }
 
 /// Reusable forward-pass scratch (zero steady-state allocation).
@@ -61,6 +70,11 @@ struct FwdScratch {
     q_seq: Vec<f32>,
     /// Final-norm row for the scratch-routed logits head.
     norm_row: Vec<f32>,
+    /// Verify-path per-position gathers: one position's `[n_kv, d]` self
+    /// K/V rows and its `[n_q, d]` attention output.
+    k_pos: Vec<f32>,
+    v_pos: Vec<f32>,
+    attn_pos: Vec<f32>,
 }
 
 /// Absolute RoPE position of each row in a forward batch: a prefill chunk
@@ -581,6 +595,192 @@ impl HostModel {
         next
     }
 
+    /// Score a speculative draft: run `tokens` — the pending decode token
+    /// followed by the drafted continuation — as one tiny causal chunk and
+    /// return the model's **greedy target at every position** (the token
+    /// it would emit after seeing `tokens[..=i]`), computed by one fused
+    /// `[s, d_model] × [d_model, vocab]` GEMM with per-row argmax.
+    ///
+    /// The projections, FFN and logits head run as `[s, ·]` GEMMs over all
+    /// positions at once — the weight stream is paid **once per verify
+    /// step** instead of once per token, which is the entire speedup of
+    /// speculative decoding on this backend. Attention and selection run
+    /// **per position, in serial order** over the growing cache: position
+    /// `i` selects with its own single query over exactly the
+    /// `pos + i`-token cache a serial decode would have seen (earlier
+    /// draft positions' KV included — appended one position at a time
+    /// through the same strided-append path the batched decode uses), and
+    /// attends through the same `s = 1` tile pipeline. Every position's
+    /// hidden state — hence every greedy target — is therefore
+    /// bit-identical to a non-speculative decode of the same tokens,
+    /// under every selection policy and both KV layouts. That exactness
+    /// is what makes greedy acceptance lossless rather than approximate;
+    /// it is pinned engine-wide in `rust/tests/spec_decode.rs`.
+    ///
+    /// All `s` tokens' KV is appended (the caller must have ensured
+    /// capacity and — for paged sequences — COW exclusivity over
+    /// positions `pos..pos + s`); the caller rolls back the rejected tail
+    /// via [`SeqState::truncate`] / `KvPool::truncate_seq` after
+    /// acceptance. Cross-layer policy state is kept per position, exactly
+    /// as the batched decode keeps it per sequence.
+    pub fn forward_verify(
+        &self,
+        kv: &mut DecodeKv,
+        tokens: &[u32],
+        policy: &dyn SelectionPolicy,
+        budget: usize,
+        mut pool: Option<&mut KvPool>,
+        ctx: &mut SelectCtx,
+    ) -> Vec<u32> {
+        let cfg = &self.w.cfg;
+        let s = tokens.len();
+        assert!(s > 0);
+        let (dm, dh) = (cfg.d_model, cfg.d_head);
+        let (nq, nkv) = (cfg.n_q_heads, cfg.n_kv_heads);
+        let pos0 = kv.pos();
+
+        let mut hidden = self.embed(tokens, s);
+        let mut sc_guard = self.scratch.borrow_mut();
+        let sc = &mut *sc_guard; // reborrow: allow disjoint field borrows
+        // Per-position cross-layer policy state (mirrors the batched
+        // decode's per-sequence slots): each draft position is its own
+        // virtual decode step for stateful policies.
+        let mut pos_shared: Vec<Option<Vec<Vec<u32>>>> = (0..s).map(|_| None).collect();
+        ctx.n_layers = cfg.n_layers;
+        for (l, lw) in self.w.layers.iter().enumerate() {
+            ctx.layer = l;
+            self.layer_attn_inputs(lw, &hidden, s, RowPos::Base(pos0), sc);
+
+            // ---- serial per-position select → attend → append ----
+            for i in 0..s {
+                let t = pos0 + i;
+                {
+                    let FwdScratch { q_seq, k_pos, v_pos, q_heads, k_heads, v_heads, .. } =
+                        &mut *sc;
+                    let q_seq = fit(q_seq, nq * dh);
+                    for h in 0..nq {
+                        let src = (h * s + i) * dh;
+                        q_seq[h * dh..(h + 1) * dh].copy_from_slice(&q_heads[src..src + dh]);
+                    }
+                    let k_pos = fit(k_pos, nkv * dh);
+                    let v_pos = fit(v_pos, nkv * dh);
+                    for h in 0..nkv {
+                        let src = (h * s + i) * dh;
+                        k_pos[h * dh..(h + 1) * dh].copy_from_slice(&k_heads[src..src + dh]);
+                        v_pos[h * dh..(h + 1) * dh].copy_from_slice(&v_heads[src..src + dh]);
+                    }
+                }
+                let sel = if t == 0 || policy.is_dense() {
+                    Selection::All
+                } else {
+                    let qv = QChunk::new(&sc.q_seq[..nq * dh], nq, 1, dh);
+                    std::mem::swap(&mut ctx.shared_indices, &mut pos_shared[i]);
+                    let sel = match kv {
+                        DecodeKv::Private(st) => {
+                            policy.select(&qv, &st.caches[l].k_view(), budget, ctx)
+                        }
+                        DecodeKv::Paged { blocks, .. } => {
+                            let p = pool.as_deref().expect("paged verify without a pool");
+                            policy.select(&qv, &p.k_cache(blocks, t, l), budget, ctx)
+                        }
+                    };
+                    std::mem::swap(&mut ctx.shared_indices, &mut pos_shared[i]);
+                    sel
+                };
+                ctx.cost.bump_calls();
+
+                {
+                    let FwdScratch { q_seq, k_pos, v_pos, attn_pos, attn, attn_heads, .. } =
+                        &mut *sc;
+                    let out = fit(attn_pos, nq * dh);
+                    match kv {
+                        DecodeKv::Private(st) => chunk_attention(
+                            &q_seq[..nq * dh],
+                            nq,
+                            1,
+                            dh,
+                            &k_pos[..nkv * dh],
+                            &v_pos[..nkv * dh],
+                            &st.caches[l],
+                            &sel,
+                            attn,
+                            out,
+                        ),
+                        DecodeKv::Paged { blocks, .. } => {
+                            let p = pool.as_deref().expect("paged verify without a pool");
+                            let paged = p.kv_view(blocks, t, l);
+                            paged_chunk_attention(
+                                &q_seq[..nq * dh],
+                                nq,
+                                1,
+                                dh,
+                                &k_pos[..nkv * dh],
+                                &v_pos[..nkv * dh],
+                                &paged,
+                                &sel,
+                                attn,
+                                out,
+                            );
+                        }
+                    }
+                    // Scatter this position's [n_q, d] rows back into the
+                    // chunk-layout [n_q, s, d] attention output.
+                    let attn_heads = fit(attn_heads, nq * s * dh);
+                    for h in 0..nq {
+                        let dst = (h * s + i) * dh;
+                        attn_heads[dst..dst + dh].copy_from_slice(&out[h * dh..(h + 1) * dh]);
+                    }
+                }
+
+                // Append position i's KV before position i + 1 selects —
+                // the serial decode order, so later positions see (and
+                // policies may prune) earlier draft keys exactly as a
+                // non-speculative run would.
+                match kv {
+                    DecodeKv::Private(st) => st.caches[l].append_token_strided(
+                        &sc.k_heads[..nkv * s * dh],
+                        &sc.v_heads[..nkv * s * dh],
+                        i,
+                        s,
+                    ),
+                    DecodeKv::Paged { blocks, .. } => pool
+                        .as_deref_mut()
+                        .expect("paged verify without a pool")
+                        .append_token_strided(
+                            blocks,
+                            l,
+                            t,
+                            &sc.k_heads[..nkv * s * dh],
+                            &sc.v_heads[..nkv * s * dh],
+                            i,
+                            s,
+                        ),
+                }
+            }
+
+            self.layer_attn_output(lw, s, &mut hidden, sc);
+            self.layer_ffn(lw, s, &mut hidden, sc);
+        }
+        if let DecodeKv::Private(st) = kv {
+            st.pos += s;
+        }
+
+        // ---- fused per-position logits: one [s, dm] × embeddingᵀ GEMM
+        // reduced straight to a greedy target per row ----
+        let normed = fit(&mut sc.normed, s * dm);
+        for i in 0..s {
+            rmsnorm(
+                &hidden[i * dm..(i + 1) * dm],
+                self.w.final_norm.data(),
+                cfg.norm_eps,
+                &mut normed[i * dm..(i + 1) * dm],
+            );
+        }
+        let mut next = vec![0u32; s];
+        matmul_bt_argmax(normed, self.w.embedding.data(), s, dm, cfg.vocab, &mut next);
+        next
+    }
+
     /// Logits for one hidden row (tied embedding head after final norm)
     /// into a caller-owned buffer — no per-token allocation.
     pub fn logits_into(&self, hidden_row: &[f32], out: &mut Vec<f32>) {
@@ -772,6 +972,91 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn forward_verify_targets_and_cache_match_serial_decode() {
+        // One fused verify forward over [pending, d1..d4] must produce, at
+        // every position, exactly the greedy target a serial decode of the
+        // same tokens produces — and leave a bit-identical cache. Run with
+        // a sparse policy at a tight budget: per-position selection is the
+        // part that would diverge if verification used one joint chunk
+        // selection.
+        let m = model("tiny");
+        let quoka = Quoka::default();
+        let toks: Vec<u32> = (0..48).map(|i| (i * 23 % 251) as u32).collect();
+        let budget = 16usize;
+
+        // Serial oracle: decode 5 tokens one at a time.
+        let mut ctx = SelectCtx::new(0);
+        let mut st_a = SeqState::new(m.cfg());
+        let mut h = Vec::new();
+        for c in toks.chunks(16) {
+            h = m.forward_chunk(&mut st_a, c, &quoka, budget, &mut ctx);
+        }
+        let first = m.greedy_next(&h);
+        let mut inputs = vec![first];
+        let mut want = Vec::new();
+        for i in 0..5 {
+            ctx.begin_step();
+            let h = m.forward_chunk(&mut st_a, &[inputs[i]], &quoka, budget, &mut ctx);
+            let t = m.greedy_next(&h);
+            want.push(t);
+            inputs.push(t);
+        }
+
+        // Fused verify over the same 5 inputs (an oracle-perfect draft).
+        let mut ctx = SelectCtx::new(0);
+        let mut st_b = SeqState::new(m.cfg());
+        let mut h = Vec::new();
+        for c in toks.chunks(16) {
+            h = m.forward_chunk(&mut st_b, c, &quoka, budget, &mut ctx);
+        }
+        assert_eq!(m.greedy_next(&h), first);
+        ctx.begin_step();
+        let mut kv = DecodeKv::Private(&mut st_b);
+        let targets = m.forward_verify(&mut kv, &inputs[..5], &quoka, budget, None, &mut ctx);
+        assert_eq!(targets, want, "per-position verify targets must equal serial decode");
+
+        // Cache bit-equality at the same depth.
+        assert_eq!(st_a.pos, st_b.pos);
+        for (ca, cb) in st_a.caches.iter().zip(&st_b.caches) {
+            assert_eq!(ca.t, cb.t);
+            for hh in 0..ca.n_kv {
+                for i in 0..ca.t {
+                    assert_eq!(ca.key(hh, i), cb.key(hh, i), "key ({hh},{i})");
+                    assert_eq!(ca.value(hh, i), cb.value(hh, i), "value ({hh},{i})");
+                }
+            }
+        }
+
+        // Rollback path: a wrong draft is rejected and truncated away;
+        // continuing serially afterwards still reproduces the oracle.
+        let mut ctx = SelectCtx::new(0);
+        let mut st_c = SeqState::new(m.cfg());
+        let mut h = Vec::new();
+        for c in toks.chunks(16) {
+            h = m.forward_chunk(&mut st_c, c, &quoka, budget, &mut ctx);
+        }
+        let _ = m.greedy_next(&h);
+        // Draft diverges at index 1: only want[0] is accepted, and the
+        // correction token is the model's own want[1].
+        let bad = [inputs[0], want[0], want[1] ^ 1, 7, 9];
+        ctx.begin_step();
+        let mut kv = DecodeKv::Private(&mut st_c);
+        let targets = m.forward_verify(&mut kv, &bad, &quoka, budget, None, &mut ctx);
+        assert_eq!(targets[0], want[0]);
+        assert_eq!(targets[1], want[1], "prefix positions are exact regardless of the tail");
+        let accepted = targets
+            .iter()
+            .zip(&bad[1..])
+            .take_while(|(t, d)| *t == *d)
+            .count();
+        assert_eq!(accepted, 1);
+        st_c.truncate(toks.len() + 1 + accepted);
+        ctx.begin_step();
+        let h = m.forward_chunk(&mut st_c, &[targets[accepted]], &quoka, budget, &mut ctx);
+        assert_eq!(m.greedy_next(&h), want[2], "post-rollback decode continues the oracle");
     }
 
     #[test]

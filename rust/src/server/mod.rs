@@ -3,5 +3,5 @@
 pub mod proto;
 pub mod tcp;
 
-pub use proto::{WireRequest, WireResponse};
+pub use proto::{WireRequest, WireResponse, WireSpec};
 pub use tcp::{serve, Client, ServerHandle};

@@ -8,6 +8,19 @@
 use crate::coordinator::request::RequestResult;
 use crate::util::json::Json;
 
+/// Per-request speculative-decode override carried on the wire
+/// (`spec_policy` / `spec_gamma` fields). Absent entirely ⇒ the server's
+/// engine-wide default applies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireSpec {
+    /// Draft policy name (`off` | `pld`).
+    pub policy: String,
+    /// Max draft tokens per decode step (0 = off). `None` — a policy-only
+    /// opt-in — inherits the server default's gamma (falling back to
+    /// `spec::DEFAULT_GAMMA` when the server default is off).
+    pub gamma: Option<usize>,
+}
+
 /// Parsed client request.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WireRequest {
@@ -15,11 +28,20 @@ pub struct WireRequest {
     pub max_new: usize,
     pub policy: String,
     pub budget: usize,
+    /// Optional speculative-decode override; `None` requests (and old
+    /// clients that never send the fields) inherit the server default.
+    pub spec: Option<WireSpec>,
 }
 
 impl WireRequest {
     pub fn parse(line: &str) -> anyhow::Result<WireRequest> {
         let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
+        let spec_gamma = j.get("spec_gamma").and_then(|v| v.as_usize());
+        let spec_policy = j.get("spec_policy").and_then(|v| v.as_str());
+        let spec = match (spec_policy, spec_gamma) {
+            (None, None) => None,
+            (p, g) => Some(WireSpec { policy: p.unwrap_or("pld").to_string(), gamma: g }),
+        };
         Ok(WireRequest {
             prompt: j
                 .req("prompt")?
@@ -33,17 +55,24 @@ impl WireRequest {
                 .unwrap_or("quoka")
                 .to_string(),
             budget: j.get("budget").and_then(|v| v.as_usize()).unwrap_or(1024),
+            spec,
         })
     }
 
     pub fn to_line(&self) -> String {
-        Json::obj(vec![
+        let mut fields = vec![
             ("prompt", Json::str(self.prompt.clone())),
             ("max_new", Json::num(self.max_new as f64)),
             ("policy", Json::str(self.policy.clone())),
             ("budget", Json::num(self.budget as f64)),
-        ])
-        .to_string()
+        ];
+        if let Some(s) = &self.spec {
+            fields.push(("spec_policy", Json::str(s.policy.clone())));
+            if let Some(g) = s.gamma {
+                fields.push(("spec_gamma", Json::num(g as f64)));
+            }
+        }
+        Json::obj(fields).to_string()
     }
 }
 
@@ -56,6 +85,8 @@ pub fn result_line(r: &RequestResult, text: &str) -> String {
         ("tpot_ms", Json::num(r.tpot_s * 1e3)),
         ("prompt_tokens", Json::num(r.prompt_tokens as f64)),
         ("cached_prefix_tokens", Json::num(r.cached_prefix_tokens as f64)),
+        ("spec_drafted_tokens", Json::num(r.spec_drafted_tokens as f64)),
+        ("spec_accepted_tokens", Json::num(r.spec_accepted_tokens as f64)),
         ("generated", Json::num(r.generated.len() as f64)),
     ])
     .to_string()
@@ -76,6 +107,10 @@ pub struct WireResponse {
     /// Prompt tokens served from the shared prefix cache (0 when the
     /// server runs without it; absent fields parse as 0 for old servers).
     pub cached_prefix_tokens: usize,
+    /// Speculative decode accounting (0/0 when speculation was off;
+    /// absent fields parse as 0 for old servers).
+    pub spec_drafted_tokens: usize,
+    pub spec_accepted_tokens: usize,
     pub generated: usize,
 }
 
@@ -95,6 +130,14 @@ impl WireResponse {
                 .get("cached_prefix_tokens")
                 .and_then(|v| v.as_usize())
                 .unwrap_or(0),
+            spec_drafted_tokens: j
+                .get("spec_drafted_tokens")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+            spec_accepted_tokens: j
+                .get("spec_accepted_tokens")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
             generated: j.req("generated")?.as_usize().unwrap_or(0),
         })
     }
@@ -106,9 +149,23 @@ mod tests {
 
     #[test]
     fn request_roundtrip() {
-        let r = WireRequest { prompt: "hi\nthere".into(), max_new: 8, policy: "quoka".into(), budget: 512 };
+        let r = WireRequest {
+            prompt: "hi\nthere".into(),
+            max_new: 8,
+            policy: "quoka".into(),
+            budget: 512,
+            spec: None,
+        };
         let back = WireRequest::parse(&r.to_line()).unwrap();
         assert_eq!(r, back);
+        for gamma in [Some(6), None] {
+            let s = WireRequest {
+                spec: Some(WireSpec { policy: "pld".into(), gamma }),
+                ..r.clone()
+            };
+            let back = WireRequest::parse(&s.to_line()).unwrap();
+            assert_eq!(s, back);
+        }
     }
 
     #[test]
@@ -116,6 +173,16 @@ mod tests {
         let r = WireRequest::parse(r#"{"prompt": "x"}"#).unwrap();
         assert_eq!(r.max_new, 16);
         assert_eq!(r.policy, "quoka");
+        assert_eq!(r.spec, None, "absent spec fields inherit the server default");
+        // spec_gamma alone implies the default drafter.
+        let g = WireRequest::parse(r#"{"prompt": "x", "spec_gamma": 4}"#).unwrap();
+        assert_eq!(g.spec, Some(WireSpec { policy: "pld".into(), gamma: Some(4) }));
+        // spec_policy "off" alone is an explicit disable.
+        let off = WireRequest::parse(r#"{"prompt": "x", "spec_policy": "off"}"#).unwrap();
+        assert_eq!(off.spec, Some(WireSpec { policy: "off".into(), gamma: None }));
+        // spec_policy alone opts in with a server-resolved gamma.
+        let p = WireRequest::parse(r#"{"prompt": "x", "spec_policy": "pld"}"#).unwrap();
+        assert_eq!(p.spec, Some(WireSpec { policy: "pld".into(), gamma: None }));
     }
 
     #[test]
@@ -127,6 +194,8 @@ mod tests {
             tpot_s: 0.003,
             prompt_tokens: 100,
             cached_prefix_tokens: 64,
+            spec_drafted_tokens: 10,
+            spec_accepted_tokens: 7,
             total_s: 0.02,
         };
         let line = result_line(&rr, "out");
@@ -134,9 +203,13 @@ mod tests {
         assert_eq!(resp.id, 7);
         assert_eq!(resp.generated, 2);
         assert_eq!(resp.cached_prefix_tokens, 64);
-        // Back-compat: responses without the field parse as 0.
+        assert_eq!(resp.spec_drafted_tokens, 10);
+        assert_eq!(resp.spec_accepted_tokens, 7);
+        // Back-compat: responses without the fields parse as 0.
         let legacy = r#"{"id": 1, "text": "x", "ttft_ms": 1.0, "tpot_ms": 1.0, "prompt_tokens": 5, "generated": 1}"#;
-        assert_eq!(WireResponse::parse(legacy).unwrap().cached_prefix_tokens, 0);
+        let legacy = WireResponse::parse(legacy).unwrap();
+        assert_eq!(legacy.cached_prefix_tokens, 0);
+        assert_eq!(legacy.spec_drafted_tokens, 0);
         assert!(WireResponse::parse(&error_line("boom")).is_err());
         assert!(WireRequest::parse("{nope").is_err());
     }

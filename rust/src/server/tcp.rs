@@ -8,6 +8,7 @@
 
 use super::proto::{error_line, result_line, WireRequest, WireResponse};
 use crate::coordinator::{Engine, PolicySpec};
+use crate::spec::SpecCfg;
 use crate::workload::corpus::ByteTokenizer;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -103,7 +104,27 @@ where
                         ToEngine::Submit { wire, resp } => {
                             let tokens = tok.encode(&wire.prompt);
                             let spec = PolicySpec { name: wire.policy.clone(), budget: wire.budget };
-                            match engine.submit(tokens, wire.max_new, spec) {
+                            // Per-request speculative override; absent
+                            // fields leave the engine-wide default, and a
+                            // policy-only opt-in inherits the default's
+                            // gamma (DEFAULT_GAMMA when the default is
+                            // off — an explicit opt-in must not resolve
+                            // to gamma 0 and silently disable itself).
+                            let submitted = match &wire.spec {
+                                Some(ws) => {
+                                    let default = engine.default_spec();
+                                    let gamma = ws.gamma.unwrap_or(if default.enabled() {
+                                        default.gamma
+                                    } else {
+                                        crate::spec::DEFAULT_GAMMA
+                                    });
+                                    SpecCfg::parse(&ws.policy, gamma).and_then(|sc| {
+                                        engine.submit_spec(tokens, wire.max_new, spec, sc)
+                                    })
+                                }
+                                None => engine.submit(tokens, wire.max_new, spec),
+                            };
+                            match submitted {
                                 Ok(id) => {
                                     waiters.insert(id, resp);
                                 }
@@ -251,11 +272,34 @@ mod tests {
                 max_new: 4,
                 policy: "quoka".into(),
                 budget: 32,
+                spec: None,
             })
             .unwrap();
         assert_eq!(resp.generated, 4);
         assert!(resp.ttft_ms > 0.0);
         assert_eq!(resp.prompt_tokens, 0 /* not echoed in text */ + 20);
+
+        // Speculative decode over the wire: same prompt, spec enabled —
+        // byte-identical text (losslessness crosses the protocol), with
+        // the drafted/accepted accounting echoed back.
+        {
+            let mut cs = Client::connect(addr).unwrap();
+            let spec_resp = cs
+                .request(&WireRequest {
+                    prompt: "the quick brown fox".into(),
+                    max_new: 4,
+                    policy: "quoka".into(),
+                    budget: 32,
+                    spec: Some(crate::server::WireSpec { policy: "pld".into(), gamma: Some(4) }),
+                })
+                .unwrap();
+            assert_eq!(spec_resp.generated, 4);
+            assert_eq!(spec_resp.text, resp.text, "speculation must not change the text");
+            assert!(
+                spec_resp.spec_accepted_tokens <= spec_resp.spec_drafted_tokens,
+                "acceptance accounting is consistent"
+            );
+        }
 
         // Concurrent clients.
         let handles: Vec<_> = (0..3)
@@ -267,6 +311,7 @@ mod tests {
                         max_new: 2,
                         policy: "dense".into(),
                         budget: 0,
+                        spec: None,
                     })
                     .unwrap()
                 })
@@ -284,6 +329,7 @@ mod tests {
             max_new: 1,
             policy: "bogus".into(),
             budget: 1,
+            spec: None,
         });
         assert!(err.is_err());
 

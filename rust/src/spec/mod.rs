@@ -1,0 +1,174 @@
+//! # Speculative decode subsystem
+//!
+//! Decode advances one token per engine step even after the fused batched
+//! path (PR 3): every step streams the full weight set through the caches
+//! to emit a single token per sequence. Speculative decoding breaks that
+//! bound by *drafting* `gamma` cheap candidate tokens and *verifying* them
+//! all in one multi-token forward — the same weight stream scores
+//! `gamma + 1` positions, and greedy acceptance keeps every drafted token
+//! up to the first disagreement plus the model's own correction token.
+//!
+//! The subsystem is three orthogonal pieces:
+//!
+//! * **Drafting** — a [`DraftSource`] proposes continuation tokens. The
+//!   built-in drafter is training-free *prompt lookup*
+//!   ([`PromptLookup`]): suffix-match the last few generated tokens
+//!   against the prompt + generation history and propose the continuation
+//!   of the most recent match. Zero model cost, hardware-agnostic, and
+//!   strongest exactly on the long-context workloads this repo targets
+//!   (NIAH / RULER / LongBench answers are dominated by verbatim copying
+//!   from the prompt).
+//! * **Verification** — `HostModel::forward_verify` runs the draft as a
+//!   tiny causal chunk through the existing tile pipeline with a fused
+//!   per-position row-argmax, producing the model's greedy target at
+//!   every draft position in one forward. Selection runs **per position**
+//!   with that position's query over exactly the cache a serial decode
+//!   would have seen, so accepted tokens are *bit-identical* to
+//!   non-speculative greedy decode under every selection policy and KV
+//!   layout — speculation is lossless, never approximate.
+//! * **Rollback** — rejected draft tokens are unwound from the KV store
+//!   (`KvBuffers::truncate` / `KvPool::truncate_seq`), keeping the
+//!   incremental norm cache, per-(layer, page) fill counters and per-page
+//!   key-sum metadata exactly as if the rejected tokens were never
+//!   appended. Rollback only ever touches exclusively-owned pages — a
+//!   page shared through the radix prefix cache is copy-on-write-guarded
+//!   *before* the verify forward writes into it, so shared KV is never
+//!   mutated.
+//!
+//! The engine schedules one [`WorkItem::Verify`] per speculating decode
+//! sequence (charging `gamma + 1` tokens of step budget — the width of
+//! the verified chunk), and [`Metrics`] reports drafted/accepted token
+//! counts, the acceptance rate and speculative decode tokens/sec.
+//!
+//! [`WorkItem::Verify`]: crate::coordinator::scheduler::WorkItem::Verify
+//! [`Metrics`]: crate::coordinator::Metrics
+
+pub mod prompt_lookup;
+
+pub use prompt_lookup::PromptLookup;
+
+/// Which drafter a speculating request uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DraftPolicy {
+    /// No drafting: every decode step emits exactly one token.
+    Off,
+    /// Training-free n-gram prompt lookup over the prompt + generation
+    /// history (see [`PromptLookup`]).
+    PromptLookup,
+}
+
+/// Draft depth used when a client opts into speculation by policy alone
+/// (e.g. a wire request carrying `spec_policy: "pld"` with no
+/// `spec_gamma`, against a server whose own default is off).
+pub const DEFAULT_GAMMA: usize = 4;
+
+/// Per-request speculative-decode configuration. Rides the CLI
+/// (`--spec-gamma` / `--spec-policy`) and the wire protocol
+/// (`spec_gamma` / `spec_policy` request fields).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpecCfg {
+    /// Maximum draft tokens verified per decode step. 0 disables
+    /// speculation regardless of `policy`.
+    pub gamma: usize,
+    pub policy: DraftPolicy,
+}
+
+impl Default for SpecCfg {
+    fn default() -> Self {
+        SpecCfg::off()
+    }
+}
+
+impl SpecCfg {
+    /// Speculation disabled: plain one-token decode steps.
+    pub fn off() -> SpecCfg {
+        SpecCfg { gamma: 0, policy: DraftPolicy::Off }
+    }
+
+    /// Prompt-lookup drafting with up to `gamma` draft tokens per step.
+    pub fn prompt_lookup(gamma: usize) -> SpecCfg {
+        SpecCfg { gamma, policy: DraftPolicy::PromptLookup }
+    }
+
+    /// True when decode steps should draft + verify.
+    pub fn enabled(&self) -> bool {
+        self.gamma > 0 && self.policy != DraftPolicy::Off
+    }
+
+    /// Parse a CLI / wire `(policy, gamma)` pair. `"off"` (or gamma 0)
+    /// disables speculation; `"pld"` / `"prompt-lookup"` /
+    /// `"prompt_lookup"` selects the prompt-lookup drafter.
+    pub fn parse(policy: &str, gamma: usize) -> anyhow::Result<SpecCfg> {
+        let cfg = match policy {
+            "off" | "none" => SpecCfg::off(),
+            "pld" | "prompt-lookup" | "prompt_lookup" => SpecCfg::prompt_lookup(gamma),
+            other => anyhow::bail!(
+                "unknown speculative-decode policy '{other}' (known: off, pld)"
+            ),
+        };
+        Ok(cfg)
+    }
+
+    /// Stable policy name for the wire protocol / summaries.
+    pub fn policy_name(&self) -> &'static str {
+        match self.policy {
+            DraftPolicy::Off => "off",
+            DraftPolicy::PromptLookup => "pld",
+        }
+    }
+}
+
+/// A source of draft tokens for one sequence.
+///
+/// Drafters are per-sequence (the engine keeps one per speculating
+/// request) so stateful implementations — adaptive gamma, learned n-gram
+/// tables — have a place to live; [`PromptLookup`] itself is stateless
+/// apart from acceptance feedback.
+pub trait DraftSource: Send {
+    /// Stable identifier for metrics / debugging.
+    fn name(&self) -> &'static str;
+
+    /// Propose up to `gamma` tokens continuing `prompt ++ generated`
+    /// (`generated` is never empty during decode — its last element is
+    /// the token the next forward will consume). An empty draft makes the
+    /// engine fall back to a plain one-token decode step for this
+    /// sequence — drafting is advisory, never required.
+    fn draft(&mut self, prompt: &[u32], generated: &[u32], gamma: usize) -> Vec<u32>;
+
+    /// Acceptance feedback after a verify step: `drafted` tokens were
+    /// proposed, `accepted` survived greedy verification. Default: ignore.
+    fn observe(&mut self, drafted: usize, accepted: usize) {
+        let _ = (drafted, accepted);
+    }
+}
+
+/// Construct the drafter for a spec config; `None` when speculation is
+/// disabled.
+pub fn drafter_for(cfg: &SpecCfg) -> Option<Box<dyn DraftSource>> {
+    if !cfg.enabled() {
+        return None;
+    }
+    match cfg.policy {
+        DraftPolicy::Off => None,
+        DraftPolicy::PromptLookup => Some(Box::new(PromptLookup::default())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_parse_and_enable() {
+        assert!(!SpecCfg::off().enabled());
+        assert!(!SpecCfg::prompt_lookup(0).enabled());
+        assert!(SpecCfg::prompt_lookup(4).enabled());
+        assert_eq!(SpecCfg::parse("off", 8).unwrap(), SpecCfg::off());
+        let p = SpecCfg::parse("pld", 6).unwrap();
+        assert_eq!(p, SpecCfg::prompt_lookup(6));
+        assert_eq!(p.policy_name(), "pld");
+        assert!(SpecCfg::parse("oracle", 4).is_err());
+        assert!(drafter_for(&SpecCfg::off()).is_none());
+        assert_eq!(drafter_for(&p).unwrap().name(), "prompt-lookup");
+    }
+}

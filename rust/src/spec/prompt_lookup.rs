@@ -1,0 +1,243 @@
+//! Prompt-lookup drafting: training-free n-gram speculation.
+//!
+//! The drafter suffix-matches the last `n` context tokens (for `n` from
+//! `max_ngram` down to `min_ngram`) against the earlier context — prompt
+//! *and* generation history — and proposes the tokens that followed the
+//! most recent match. On copy-dominated workloads (NIAH / RULER answer
+//! spans, quoting, structured repetition) the model's greedy continuation
+//! often *is* a verbatim span of the prompt, so a pure string-matching
+//! drafter reaches useful acceptance rates at zero model cost (Saxena,
+//! 2023 — "prompt lookup decoding"; also arXiv:2304.04487's n-gram
+//! drafting). The drafter never sees logits and never runs the model: it
+//! is pure token arithmetic, hardware-agnostic by construction.
+//!
+//! Matching is a backward linear scan — O(context · max_ngram) worst case
+//! per draft, which is noise next to one transformer forward (a 16k-token
+//! scan is ~48k u32 compares; one decode forward is tens of millions of
+//! FLOPs). A rolling-hash index would make it O(1) amortized; not worth
+//! the state until contexts grow far beyond the bench geometries.
+
+use super::DraftSource;
+
+/// Consecutive fully-rejected drafts before the drafter backs off.
+const BACKOFF_AFTER: u32 = 3;
+/// Steps the drafter abstains per backoff episode (abstaining sequences
+/// ride the step's fused decode batch, so a backoff costs nothing).
+const BACKOFF_STEPS: u32 = 8;
+
+/// The prompt-lookup drafter. `max_ngram`-first matching: longer suffix
+/// matches are more specific, so they win over shorter ones; within one
+/// length, the **most recent** occurrence wins (recent context dominates
+/// long-range repetition in generation dynamics).
+///
+/// Acceptance feedback drives a cheap backoff: after [`BACKOFF_AFTER`]
+/// consecutive drafts with zero accepted tokens, the drafter abstains for
+/// [`BACKOFF_STEPS`] steps before probing again. A sequence whose context
+/// merely *looks* repetitive (n-grams match but the model diverges) then
+/// spends most steps in the fused decode batch instead of paying a
+/// private verify forward per token — speculation degrades toward the
+/// plain batched path on incompressible generations instead of falling
+/// off a cliff.
+#[derive(Clone, Debug)]
+pub struct PromptLookup {
+    /// Longest suffix length to try first.
+    pub max_ngram: usize,
+    /// Shortest suffix length worth matching (1 = plain bigram chains).
+    pub min_ngram: usize,
+    /// Consecutive zero-acceptance drafts observed.
+    reject_streak: u32,
+    /// Remaining steps of the current backoff episode.
+    cooldown: u32,
+}
+
+impl Default for PromptLookup {
+    fn default() -> Self {
+        // max 3 / min 1 maximizes drafted-tokens-per-step on the repo's
+        // synthetic workloads (swept offline): short-suffix fallback keeps
+        // the drafter active inside loops and alternations, and wrong
+        // short-match drafts cost only rejected verify positions, which
+        // ride a weight stream the step pays for anyway.
+        PromptLookup::new(3, 1)
+    }
+}
+
+impl PromptLookup {
+    pub fn new(max_ngram: usize, min_ngram: usize) -> PromptLookup {
+        assert!(min_ngram >= 1 && max_ngram >= min_ngram);
+        PromptLookup { max_ngram, min_ngram, reject_streak: 0, cooldown: 0 }
+    }
+
+    /// Core lookup over one flat context slice: the continuation of the
+    /// most recent earlier occurrence of the longest matching suffix.
+    /// Callers guarantee `gamma >= 1`, and any earlier occurrence has at
+    /// least one token after it (the matched span ends at `len - n - 1 +
+    /// n < len`), so a match always yields a non-empty draft.
+    fn lookup(&self, ctx: &[u32], gamma: usize) -> Vec<u32> {
+        debug_assert!(gamma >= 1);
+        let len = ctx.len();
+        for n in (self.min_ngram..=self.max_ngram).rev() {
+            if len <= n {
+                continue;
+            }
+            let pat = &ctx[len - n..];
+            // Most recent earlier occurrence: scan candidate start
+            // positions backward. The suffix occurrence at `len - n`
+            // itself is excluded (its continuation is what we are trying
+            // to predict).
+            for start in (0..len - n).rev() {
+                if &ctx[start..start + n] == pat {
+                    return ctx[start + n..(start + n + gamma).min(len)].to_vec();
+                }
+            }
+        }
+        Vec::new()
+    }
+}
+
+impl DraftSource for PromptLookup {
+    fn name(&self) -> &'static str {
+        "prompt-lookup"
+    }
+
+    fn draft(&mut self, prompt: &[u32], generated: &[u32], gamma: usize) -> Vec<u32> {
+        if gamma == 0 || generated.is_empty() {
+            return Vec::new();
+        }
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            return Vec::new();
+        }
+        // One concat covers cross-boundary patterns (answer spans quoting
+        // the prompt); the Vec is dwarfed by the verify forward it feeds.
+        let mut ctx = Vec::with_capacity(prompt.len() + generated.len() + gamma);
+        ctx.extend_from_slice(prompt);
+        ctx.extend_from_slice(generated);
+        // Chained lookup: a match near the context end yields a short
+        // continuation (it runs off the edge), but appending it re-arms
+        // the suffix — inside a repetition loop the chain fills the whole
+        // gamma window instead of stalling at the period boundary.
+        let mut out = Vec::new();
+        while out.len() < gamma {
+            let got = self.lookup(&ctx, gamma - out.len());
+            if got.is_empty() {
+                break;
+            }
+            ctx.extend_from_slice(&got);
+            out.extend_from_slice(&got);
+        }
+        out
+    }
+
+    fn observe(&mut self, drafted: usize, accepted: usize) {
+        if drafted == 0 {
+            return;
+        }
+        if accepted == 0 {
+            self.reject_streak += 1;
+            if self.reject_streak >= BACKOFF_AFTER {
+                self.cooldown = BACKOFF_STEPS;
+                self.reject_streak = 0;
+            }
+        } else {
+            self.reject_streak = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn draft(ctx: &[u32], gamma: usize) -> Vec<u32> {
+        PromptLookup::default().draft(&[], &ctx.to_vec(), gamma)
+    }
+
+    #[test]
+    fn copies_the_continuation_of_the_latest_match() {
+        // ... 7 8 9 | 1 2 3 4 5 | ... | 1 2 3  →  draft 4 5
+        let ctx = [7, 8, 9, 1, 2, 3, 4, 5, 9, 9, 1, 2, 3];
+        assert_eq!(draft(&ctx, 2), vec![4, 5]);
+        // Gamma past the context end: the chained lookup re-matches the
+        // extended suffix and keeps copying.
+        assert_eq!(draft(&ctx, 8), vec![4, 5, 9, 9, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn most_recent_occurrence_wins() {
+        // Suffix [1, 2] occurs twice with different continuations; the
+        // later one (→ 8) must win over the earlier (→ 4).
+        let ctx = [1, 2, 4, 0, 1, 2, 8, 6, 1, 2];
+        assert_eq!(draft(&ctx, 1), vec![8]);
+    }
+
+    #[test]
+    fn longer_ngram_beats_shorter() {
+        // [5, 1, 2] (n=3) matches with continuation 7; the more recent
+        // bigram [1, 2] → 9 must lose to the longer, more specific match.
+        let ctx = [5, 1, 2, 7, 0, 1, 2, 9, 3, 5, 1, 2];
+        assert_eq!(draft(&ctx, 1), vec![7]);
+    }
+
+    #[test]
+    fn spans_the_prompt_generation_boundary() {
+        let mut d = PromptLookup::default();
+        // Pattern tail in prompt, head of continuation crosses into it.
+        let prompt = vec![4, 5, 6, 7, 8];
+        let generated = vec![4, 5, 6];
+        assert_eq!(d.draft(&prompt, &generated, 4), vec![7, 8, 4, 5]);
+    }
+
+    #[test]
+    fn no_match_or_degenerate_inputs_mean_no_draft() {
+        let mut d = PromptLookup::default();
+        assert!(d.draft(&[], &[], 4).is_empty());
+        assert!(d.draft(&[1, 2, 3], &[9], 0).is_empty());
+        // All-distinct context: nothing to look up.
+        assert!(draft(&[1, 2, 3, 4, 5], 4).is_empty());
+    }
+
+    #[test]
+    fn repetition_loop_is_fully_drafted() {
+        // A period-2 generation loop: the drafter should propose the whole
+        // gamma window correctly.
+        let ctx = [3, 9, 3, 9, 3, 9, 3, 9];
+        assert_eq!(draft(&ctx, 4), vec![3, 9, 3, 9]);
+        // Constant runs likewise.
+        let ctx = [5, 5, 5, 5, 5];
+        assert_eq!(draft(&ctx, 3), vec![5, 5, 5]);
+    }
+
+    #[test]
+    fn sustained_rejection_backs_off_then_recovers() {
+        let mut d = PromptLookup::default();
+        let ctx = vec![3, 9, 3, 9, 3, 9]; // always matchable
+        for _ in 0..BACKOFF_AFTER {
+            let n = d.draft(&[], &ctx, 4).len();
+            assert!(n > 0, "drafting continues while the streak builds");
+            d.observe(n, 0); // the model rejects every draft
+        }
+        for step in 0..BACKOFF_STEPS {
+            assert!(d.draft(&[], &ctx, 4).is_empty(), "cooldown step {step} must abstain");
+        }
+        // The cooldown expires and drafting probes again; one accepted
+        // token clears the streak.
+        let n = d.draft(&[], &ctx, 4).len();
+        assert!(n > 0, "drafting resumes after the cooldown");
+        d.observe(n, 1);
+        let n = d.draft(&[], &ctx, 4).len();
+        assert!(n > 0);
+        // Abstained steps (drafted == 0) never advance the streak.
+        d.observe(0, 0);
+        assert!(!d.draft(&[], &ctx, 4).is_empty());
+    }
+
+    #[test]
+    fn min_ngram_floor_disables_short_matches() {
+        let mut strict = PromptLookup::new(3, 3);
+        // Only a bigram repeats: below the floor, no draft.
+        assert!(strict.draft(&[], &[1, 2, 8, 1, 2], 4).is_empty());
+        let mut loose = PromptLookup::new(3, 2);
+        // 3 tokens from the match, 1 more from the chained re-lookup.
+        assert_eq!(loose.draft(&[], &[1, 2, 8, 1, 2], 4), vec![8, 1, 2, 8]);
+    }
+}

@@ -62,6 +62,7 @@ fn mk_seqs(rng: &mut Rng, n: usize) -> (HashMap<u64, SeqEntry>, Vec<u64>) {
                 tokens: vec![1; prompt],
                 max_new_tokens: 1 + rng.below(8),
                 policy: PolicySpec::default(),
+                spec: quoka::spec::SpecCfg::off(),
             }),
         );
     }
@@ -95,6 +96,7 @@ fn scheduler_never_exceeds_step_budget() {
                     .iter()
                     .map(|i| match i {
                         WorkItem::Decode { .. } => 1,
+                        WorkItem::Verify { gamma, .. } => 1 + gamma,
                         WorkItem::PrefillChunk { len, .. } => *len,
                     })
                     .sum();
@@ -127,6 +129,9 @@ fn scheduler_never_exceeds_step_budget() {
                             if e.generated.len() >= e.req.max_new_tokens {
                                 e.phase = Phase::Finished;
                             }
+                        }
+                        WorkItem::Verify { .. } => {
+                            unreachable!("no speculating sequences in this property")
                         }
                     }
                 }

@@ -268,6 +268,7 @@ fn engine_cfg(kv: KvLayout) -> EngineCfg {
         block_tokens: 16,
         seed: 5,
         kv,
+        ..EngineCfg::default()
     }
 }
 

@@ -147,6 +147,7 @@ fn deterministic_chunks_make_warm_kv_exact_under_concurrent_load() {
                 block_tokens: 16,
                 seed: 4,
                 kv: KvLayout::Paged { prefix_cache: true },
+                ..EngineCfg::default()
             },
         )
         .unwrap()
@@ -235,6 +236,7 @@ fn burst_of_8_schedules_shared_prefix_chunks_exactly_once() {
         block_tokens: 128,
         seed: 9,
         kv: KvLayout::Paged { prefix_cache: true },
+        ..EngineCfg::default()
     };
     let spec = || PolicySpec { name: "quoka".into(), budget: 128 };
     let prefix: Vec<u32> =
@@ -324,6 +326,7 @@ fn tcp_server_failure_injection() {
             max_new: 1,
             policy: "warpdrive".into(),
             budget: 8,
+            spec: None,
         });
         assert!(err.is_err());
     }
@@ -336,6 +339,7 @@ fn tcp_server_failure_injection() {
                 max_new: 3,
                 policy: "quoka".into(),
                 budget: 16,
+                spec: None,
             })
             .unwrap();
         assert_eq!(ok.generated, 3);

@@ -268,6 +268,7 @@ fn follower_adoption_never_outlives_leader_abort() {
                         block_tokens: 16,
                         seed: 3,
                         kv: KvLayout::Paged { prefix_cache: true },
+                        ..EngineCfg::default()
                     },
                 )
                 .unwrap()
@@ -442,6 +443,146 @@ fn refcount_conservation_under_concurrent_publish_adopt_evict() {
             inflight_oracle(&pool, &alloc, &radix, &[], &[])?;
             radix.evict_until(TOTAL, &mut pool, &mut alloc);
             ensure_eq(alloc.free_blocks(), TOTAL, "all pages evictable once unreferenced")
+        },
+    );
+}
+
+/// One page's complete metadata image: per-layer fill counters, key sums
+/// and inverse-norm rows (the state [`KvPool::truncate_seq`] must restore
+/// bit-for-bit).
+fn page_meta(pool: &KvPool, table: &[u32], b: u32) -> Vec<f32> {
+    let (n_kv, d, n_layers) = (pool.cfg.n_kv, pool.cfg.d, pool.cfg.n_layers);
+    let mut out = Vec::new();
+    for l in 0..n_layers {
+        out.push(pool.page_fill(l, b) as f32);
+        let kc = pool.k_cache(table, 0, l);
+        let pg = kc.pages.unwrap();
+        for h in 0..n_kv {
+            let sb = (b as usize * n_kv + h) * d;
+            out.extend_from_slice(&pg.key_sums[sb..sb + d]);
+            let nb = (b as usize * n_kv + h) * BT;
+            out.extend_from_slice(&kc.inv_norms.unwrap()[nb..nb + BT]);
+        }
+    }
+    out
+}
+
+#[test]
+fn spec_rollback_restores_pool_metadata_bitexact() {
+    // Speculative-decode rollback: appending draft tokens and then
+    // truncating the rejected tail away must leave refcounts, per-(layer,
+    // page) fill counters, per-page key sums AND the inverse-norm cache
+    // bit-identical to a pool that only ever appended the accepted prefix
+    // — including when the draft wrote through a COW clone of a shared
+    // page (the shared original must come through untouched).
+    check(
+        "spec-rollback-metadata",
+        10,
+        |rng: &mut Rng, size| {
+            let base = 1 + rng.below((3 * BT).min(4 * size.max(1)) + 2);
+            let draft = 1 + rng.below(2 * BT + 3);
+            let keep = rng.below(draft + 1); // accepted prefix length
+            (base, draft, keep, rng.next_u64())
+        },
+        |&(base, draft, keep, seed)| {
+            let ns = policy_ns("quoka", 64, 16);
+            // Pre-generate every KV row so the speculating pool and the
+            // accepted-prefix-only oracle see identical data streams.
+            let mut rng = Rng::new(seed);
+            let cfgp = PoolCfg { n_layers: 2, n_kv: 1, d: 2, block_tokens: BT, total_blocks: TOTAL };
+            let (n_kv, d, n_layers) = (cfgp.n_kv, cfgp.d, cfgp.n_layers);
+            let mut gen_rows = |n: usize| -> Vec<(Vec<f32>, Vec<f32>)> {
+                (0..n_layers)
+                    .map(|_| {
+                        (rng.normal_vec(n_kv * n * d, 1.0), rng.normal_vec(n_kv * n * d, 1.0))
+                    })
+                    .collect()
+            };
+            let base_rows = gen_rows(base);
+            let draft_rows = gen_rows(draft);
+
+            // Both pools run the same script; `spec` additionally appends
+            // the rejected tail and rolls it back.
+            let run = |speculate: bool| -> Result<
+                (RadixCache, KvPool, BlockAllocator, Vec<u32>, u32, Vec<f32>),
+                String,
+            > {
+                let (mut radix, mut pool, mut alloc) = setup();
+                let mut table = Vec::new();
+                ensure(alloc.ensure(&mut table, base + draft), "lease")?;
+                pool.adopt_new(&table);
+                for (l, (k, v)) in base_rows.iter().enumerate() {
+                    pool.append_chunk(&table, l, 0, k, v, base);
+                }
+                let full = base / BT;
+                radix.insert(ns, &vec![7u32; full * BT], &table[..full], &mut pool);
+                // A sharer pins the page at the write boundary, forcing
+                // make_writable to COW it — the rollback then runs over a
+                // clone while the shared original must stay untouched.
+                let boundary = table[base / BT];
+                pool.retain(boundary);
+                let before = page_meta(&pool, &table, boundary);
+                pool.make_writable(&mut table, base, draft, &mut alloc)
+                    .map_err(|e| e.to_string())?;
+                ensure(table[base / BT] != boundary, "boundary page must have been cloned")?;
+                if speculate {
+                    for (l, (k, v)) in draft_rows.iter().enumerate() {
+                        pool.append_chunk(&table, l, base, k, v, draft);
+                    }
+                    pool.truncate_seq(&table, base + keep, base + draft);
+                } else if keep > 0 {
+                    for (l, (k, v)) in draft_rows.iter().enumerate() {
+                        let head = |s: &[f32]| -> Vec<f32> {
+                            (0..n_kv)
+                                .flat_map(|h| s[h * draft * d..(h * draft + keep) * d].to_vec())
+                                .collect()
+                        };
+                        pool.append_chunk(&table, l, base, &head(k), &head(v), keep);
+                    }
+                }
+                Ok((radix, pool, alloc, table, boundary, before))
+            };
+
+            let (radix_a, pool_a, _alloc_a, table_a, shared_a, before_a) = run(true)?;
+            let (_radix_o, pool_o, _alloc_o, table_o, _, _) = run(false)?;
+
+            // Pages are allocated in identical order in both pools, so
+            // tables correspond index-for-index; every page's metadata
+            // must be bit-identical to "never appended the rejected tail".
+            ensure_eq(table_a.len(), table_o.len(), "table shapes")?;
+            let t_kept = base + keep;
+            for (j, (&ba, &bo)) in table_a.iter().zip(&table_o).enumerate() {
+                ensure_eq(
+                    pool_a.refcount(ba),
+                    pool_o.refcount(bo),
+                    &format!("refcount of page {j}"),
+                )?;
+                ensure(
+                    page_meta(&pool_a, &table_a, ba) == page_meta(&pool_o, &table_o, bo),
+                    format!("metadata drift on page {j} after rollback"),
+                )?;
+                // Live KV rows agree too (the accepted prefix is real data).
+                let lo = j * BT;
+                for l in 0..n_layers {
+                    let va = pool_a.kv_view(&table_a, t_kept, l);
+                    let vo = pool_o.kv_view(&table_o, t_kept, l);
+                    for h in 0..n_kv {
+                        for i in lo..t_kept.min(lo + BT) {
+                            ensure(
+                                va.key(h, i) == vo.key(h, i) && va.value(h, i) == vo.value(h, i),
+                                format!("KV row drift at token {i} layer {l}"),
+                            )?;
+                        }
+                    }
+                }
+            }
+            // The COW-shared original is bit-identical to its pre-draft
+            // snapshot: rollback never mutates a shared page.
+            ensure(
+                page_meta(&pool_a, &table_a, shared_a) == before_a,
+                "shared original page mutated by speculative traffic",
+            )?;
+            radix_a.validate(&pool_a).map_err(|e| format!("radix invariant: {e}"))
         },
     );
 }

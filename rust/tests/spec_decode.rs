@@ -1,0 +1,231 @@
+//! Speculative decode subsystem tests.
+//!
+//! The headline property is **losslessness**: greedy generations are
+//! bit-identical with speculation on vs off — across selection policies
+//! (dense and sparse), KV layouts (private buffers, paged pool, paged +
+//! prefix cache) and decode concurrency (B ∈ {1, 3, 8}). Verification
+//! scores each draft position with per-position selection over exactly
+//! the cache a serial decode would have seen, so acceptance never changes
+//! *what* is generated — only how many weight streams it costs.
+
+use quoka::coordinator::{Engine, EngineCfg, KvLayout, PolicySpec, SchedCfg};
+use quoka::spec::SpecCfg;
+
+fn cfg(kv: KvLayout) -> EngineCfg {
+    EngineCfg {
+        // Deterministic chunk widths in every layout: verify steps charge
+        // more step budget than plain decodes, so without pinned
+        // boundaries the spec-on arm would shift a *concurrent* sparse
+        // prefill's chunking — a scheduling artifact the repo already
+        // guards against, orthogonal to speculation's own exactness.
+        sched: SchedCfg {
+            b_cp: 16,
+            step_tokens: 96,
+            max_running: 8,
+            deterministic_chunks: true,
+        },
+        pool_blocks: 256,
+        block_tokens: 16,
+        seed: 5,
+        kv,
+        ..EngineCfg::default()
+    }
+}
+
+/// Copy-heavy prompt: a short repeating block (salted per sequence) —
+/// the regime where prompt lookup actually drafts.
+fn loop_prompt(n: usize, period: usize, salt: u64) -> Vec<u32> {
+    (0..n).map(|i| (((i % period) as u64 * 31 + salt * 7) % 239 + 1) as u32).collect()
+}
+
+/// Incompressible prompt: no n-gram repeats to speak of — the drafter
+/// mostly abstains and speculation must gracefully degrade.
+fn random_prompt(n: usize, salt: u64) -> Vec<u32> {
+    (0..n).map(|i| ((i as u64 * 97 + salt * 131) % 239 + 1) as u32).collect()
+}
+
+/// A prompt containing every token of the tiny vocab: whatever the model
+/// generates, its last token occurs in the prompt, so the 1-gram fallback
+/// is GUARANTEED to draft from the very first decode step — deterministic
+/// coverage of the verify/rollback path in every configuration.
+fn universal_prompt() -> Vec<u32> {
+    (0..257).collect()
+}
+
+fn policies() -> Vec<PolicySpec> {
+    vec![
+        PolicySpec { name: "dense".into(), budget: 0 },
+        PolicySpec { name: "quoka".into(), budget: 24 },
+    ]
+}
+
+#[test]
+fn spec_is_lossless_across_policies_layouts_and_batch_sizes() {
+    let layouts = [
+        KvLayout::Private,
+        KvLayout::Paged { prefix_cache: false },
+        KvLayout::Paged { prefix_cache: true },
+    ];
+    for kv in layouts {
+        for policy in policies() {
+            for batch in [1usize, 3, 8] {
+                // Request 0 carries the universal prompt (guaranteed to
+                // draft); the rest mix compressible and incompressible
+                // prompts so the accept path AND the abstain path run in
+                // every configuration.
+                let reqs: Vec<Vec<u32>> = (0..batch)
+                    .map(|i| {
+                        if i == 0 {
+                            universal_prompt()
+                        } else if i % 2 == 0 {
+                            loop_prompt(48 + 16 * (i % 3), 8, i as u64)
+                        } else {
+                            random_prompt(48 + 16 * (i % 3), i as u64)
+                        }
+                    })
+                    .collect();
+
+                let run = |spec: SpecCfg| -> (Vec<Vec<u32>>, u64, u64, u64) {
+                    let mut e = Engine::new_host("tiny", cfg(kv)).unwrap();
+                    for toks in &reqs {
+                        e.submit_spec(toks.clone(), 10, policy.clone(), spec).unwrap();
+                    }
+                    let mut results = e.run_to_completion().unwrap();
+                    results.sort_by_key(|r| r.id);
+                    assert_eq!(results.len(), batch);
+                    let gens = results.iter().map(|r| r.generated.clone()).collect();
+                    let m = &e.metrics;
+                    (gens, m.spec_drafted_tokens, m.spec_accepted_tokens, m.spec_steps)
+                };
+
+                let (want, d0, _, s0) = run(SpecCfg::off());
+                assert_eq!(d0, 0, "spec-off engine must not draft");
+                assert_eq!(s0, 0, "spec-off engine must not schedule verify steps");
+                let (got, drafted, accepted, steps) = run(SpecCfg::prompt_lookup(4));
+                assert_eq!(
+                    got, want,
+                    "speculation changed the generation ({kv:?}, {}, B={batch})",
+                    policy.name
+                );
+                assert!(
+                    steps > 0 && drafted > 0,
+                    "the universal prompt guarantees a draft in every config \
+                     ({kv:?}, {}, B={batch})",
+                    policy.name
+                );
+                assert!(accepted <= drafted);
+            }
+        }
+    }
+}
+
+#[test]
+fn spec_respects_max_new_and_reports_acceptance() {
+    // gamma far beyond the remaining budget: emission is clamped so the
+    // generation length is exactly max_new, and per-request accounting
+    // reaches the result + the engine summary.
+    let mut e = Engine::new_host("tiny", cfg(KvLayout::Private)).unwrap();
+    let toks = loop_prompt(64, 4, 3);
+    e.submit_spec(
+        toks.clone(),
+        3,
+        PolicySpec { name: "quoka".into(), budget: 24 },
+        SpecCfg::prompt_lookup(8),
+    )
+    .unwrap();
+    let r = e.run_to_completion().unwrap().remove(0);
+    assert_eq!(r.generated.len(), 3, "speculation must never emit past max_new");
+    assert!(r.spec_accepted_tokens <= r.spec_drafted_tokens);
+
+    // Oracle equality for the same request.
+    let mut off = Engine::new_host("tiny", cfg(KvLayout::Private)).unwrap();
+    off.submit(toks, 3, PolicySpec { name: "quoka".into(), budget: 24 }).unwrap();
+    assert_eq!(r.generated, off.run_to_completion().unwrap().remove(0).generated);
+
+    if e.metrics.spec_drafted_tokens > 0 {
+        let s = e.metrics.summary();
+        assert!(s.contains("spec_accept_rate="), "summary must surface acceptance: {s}");
+    }
+}
+
+#[test]
+fn spec_with_prefix_cache_shares_pages_and_stays_exact() {
+    // A speculating request over radix-shared prefix pages: rollback must
+    // never touch the shared pages (COW guards them before the verify
+    // write), and the generation equals an isolated non-speculative run.
+    let kv = KvLayout::Paged { prefix_cache: true };
+    let spec_pol = || PolicySpec { name: "quoka".into(), budget: 24 };
+    let prompt = loop_prompt(80, 8, 9); // 5 pages at bt = 16
+
+    let mut iso = Engine::new_host("tiny", cfg(kv)).unwrap();
+    iso.submit(prompt.clone(), 8, spec_pol()).unwrap();
+    let want = iso.run_to_completion().unwrap().remove(0).generated;
+
+    let mut e = Engine::new_host("tiny", cfg(kv)).unwrap();
+    e.submit(prompt.clone(), 8, spec_pol()).unwrap(); // publisher (spec off)
+    e.run_to_completion().unwrap();
+    let cached = e.radix.as_ref().unwrap().cached_blocks();
+    assert!(cached >= 4, "publisher must populate the cache (got {cached})");
+    // Warm speculating request reuses the shared prefix pages.
+    e.submit_spec(prompt.clone(), 8, spec_pol(), SpecCfg::prompt_lookup(6)).unwrap();
+    let r = e.run_to_completion().unwrap().remove(0);
+    assert!(r.cached_prefix_tokens > 0, "warm request must hit the prefix cache");
+    assert_eq!(r.generated, want, "speculation + prefix reuse must stay bit-exact");
+    // The shared pages survived rollback traffic intact.
+    e.radix
+        .as_ref()
+        .unwrap()
+        .validate(e.pool.as_ref().unwrap())
+        .expect("radix invariants after speculative decode");
+    // A third, non-speculating warm request still generates the oracle.
+    e.submit(prompt, 8, spec_pol()).unwrap();
+    assert_eq!(e.run_to_completion().unwrap().remove(0).generated, want);
+}
+
+#[test]
+fn spec_off_engine_default_and_per_request_override() {
+    // Engine-wide default spec applies to plain submit(); a per-request
+    // off-override opts back out.
+    let mut cfg_on = cfg(KvLayout::Private);
+    cfg_on.spec = SpecCfg::prompt_lookup(4);
+    let mut e = Engine::new_host("tiny", cfg_on).unwrap();
+    let toks = universal_prompt(); // guaranteed to draft
+    e.submit(toks.clone(), 8, PolicySpec { name: "dense".into(), budget: 0 }).unwrap();
+    e.submit_spec(toks, 8, PolicySpec { name: "dense".into(), budget: 0 }, SpecCfg::off())
+        .unwrap();
+    let mut results = e.run_to_completion().unwrap();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results[0].generated, results[1].generated, "default-on vs off must agree");
+    assert!(results[0].spec_drafted_tokens > 0, "the engine default must draft");
+    assert_eq!(results[1].spec_drafted_tokens, 0, "per-request off must not draft");
+}
+
+#[test]
+fn mixed_speculating_and_plain_sequences_share_a_step() {
+    // One engine step can hold batched plain decodes AND verify steps;
+    // every sequence still matches its isolated run.
+    let kv = KvLayout::Paged { prefix_cache: false };
+    let reqs: Vec<(Vec<u32>, SpecCfg)> = vec![
+        (loop_prompt(48, 8, 1), SpecCfg::prompt_lookup(4)),
+        (random_prompt(56, 2), SpecCfg::off()),
+        (loop_prompt(64, 4, 3), SpecCfg::prompt_lookup(6)),
+        (random_prompt(40, 4), SpecCfg::off()),
+    ];
+    let pol = || PolicySpec { name: "quoka".into(), budget: 24 };
+    let mut want = Vec::new();
+    for (toks, _) in &reqs {
+        let mut e = Engine::new_host("tiny", cfg(kv)).unwrap();
+        e.submit(toks.clone(), 7, pol()).unwrap();
+        want.push(e.run_to_completion().unwrap().remove(0).generated);
+    }
+    let mut e = Engine::new_host("tiny", cfg(kv)).unwrap();
+    for (toks, spec) in &reqs {
+        e.submit_spec(toks.clone(), 7, pol(), *spec).unwrap();
+    }
+    let mut results = e.run_to_completion().unwrap();
+    results.sort_by_key(|r| r.id);
+    for (r, want) in results.iter().zip(&want) {
+        assert_eq!(&r.generated, want, "request {} diverged in the mixed step", r.id);
+    }
+    assert_eq!(e.blocks.free_blocks(), 256, "every page returned after spec traffic");
+}

@@ -14,13 +14,18 @@
 #    sequences × 64 decode steps, serial (B=1 loop) vs one GEMM-batched
 #    forward per step → BENCH_decode.json (tokens/sec each + speedup;
 #    identical generations asserted).
+# 4. Speculative decode: `cargo bench --bench spec_serving` — copy-heavy
+#    single-sequence decode, prompt-lookup drafting + one multi-token
+#    verify per step vs one token per step → BENCH_spec.json (speedup +
+#    acceptance rate; identical generations asserted).
 #
 # CI bench gate: the `bench` job in .github/workflows/ci.yml runs this
-# script on a CI-sized config, uploads the three JSONs as the
+# script on a CI-sized config, uploads the four JSONs as the
 # `bench-results` artifact, and then runs `scripts/check_bench.py`, which
 # FAILS the job when tiled-vs-seed speedup, warm-vs-cold or
-# in-flight-vs-cold prefix TTFT ratio, or batched-vs-serial decode
-# throughput fall below absolute floors or regress beyond tolerance
+# in-flight-vs-cold prefix TTFT ratio, batched-vs-serial decode
+# throughput, or speculative-vs-plain decode throughput fall below
+# absolute floors or regress beyond tolerance
 # against the committed baselines in bench/baselines/ (bootstrap stubs
 # until the first CI artifacts are committed — see bench/baselines/README.md).
 #
@@ -28,6 +33,7 @@
 #   BENCH_OUT=/path/to.json   override the hot-path output location
 #   PREFIX_OUT=/path/to.json  override the prefix-serving output location
 #   DECODE_OUT=/path/to.json  override the decode-serving output location
+#   SPEC_OUT=/path/to.json    override the speculative-decode output location
 #   BENCH_CHECK=1             run the regression gate after the benches
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -36,12 +42,14 @@ export BENCH_SMOKE=1
 export BENCH_OUT="${BENCH_OUT:-$PWD/BENCH_hotpath.json}"
 export PREFIX_OUT="${PREFIX_OUT:-$PWD/BENCH_prefix.json}"
 export DECODE_OUT="${DECODE_OUT:-$PWD/BENCH_decode.json}"
+export SPEC_OUT="${SPEC_OUT:-$PWD/BENCH_spec.json}"
 
 cargo bench --manifest-path rust/Cargo.toml --bench micro_hotpath
 cargo bench --manifest-path rust/Cargo.toml --bench prefix_serving
 cargo bench --manifest-path rust/Cargo.toml --bench decode_serving
+cargo bench --manifest-path rust/Cargo.toml --bench spec_serving
 
-echo "bench_smoke: wrote $BENCH_OUT, $PREFIX_OUT and $DECODE_OUT"
+echo "bench_smoke: wrote $BENCH_OUT, $PREFIX_OUT, $DECODE_OUT and $SPEC_OUT"
 
 if [[ "${BENCH_CHECK:-0}" == "1" ]]; then
   python3 scripts/check_bench.py

@@ -1,11 +1,12 @@
 #!/usr/bin/env python3
 """Bench regression gate for CI.
 
-Reads the three bench artifacts written by scripts/bench_smoke.sh
+Reads the four bench artifacts written by scripts/bench_smoke.sh
 
   BENCH_hotpath.json  — tiled-vs-seed chunk-attention kernel speedup
   BENCH_prefix.json   — warm-vs-cold and in-flight-vs-cold prefix TTFT
   BENCH_decode.json   — batched-vs-serial decode throughput
+  BENCH_spec.json     — speculative-vs-plain decode throughput
 
 and fails (exit 1) when a headline metric
 
@@ -21,8 +22,8 @@ committed to bench/baselines/ to arm the relative gate.
 
 Environment overrides (floors): CHECK_BENCH_MIN_HOTPATH,
 CHECK_BENCH_MIN_PREFIX_WARM, CHECK_BENCH_MIN_PREFIX_INFLIGHT,
-CHECK_BENCH_MIN_DECODE; relative tolerance: CHECK_BENCH_TOL (fraction,
-default 0.35 — CI runners are noisy).
+CHECK_BENCH_MIN_DECODE, CHECK_BENCH_MIN_SPEC; relative tolerance:
+CHECK_BENCH_TOL (fraction, default 0.35 — CI runners are noisy).
 
 Usage: scripts/check_bench.py [--bench-dir DIR] [--baseline-dir DIR]
 """
@@ -45,6 +46,7 @@ FLOORS = {
     "prefix-warm-ttft-speedup": env_float("CHECK_BENCH_MIN_PREFIX_WARM", 1.5),
     "prefix-inflight-ttft-speedup": env_float("CHECK_BENCH_MIN_PREFIX_INFLIGHT", 1.2),
     "decode-batched-speedup": env_float("CHECK_BENCH_MIN_DECODE", 1.2),
+    "spec-decode-speedup": env_float("CHECK_BENCH_MIN_SPEC", 1.5),
 }
 
 
@@ -98,6 +100,8 @@ def gather(bench_dir):
     out["prefix-inflight-ttft-speedup"] = (metric(px, "inflight-speedup"), pcfg)
     dc = load(os.path.join(bench_dir, "BENCH_decode.json"))
     out["decode-batched-speedup"] = (metric(dc, "speedup"), dc.get("config") if dc else None)
+    sp = load(os.path.join(bench_dir, "BENCH_spec.json"))
+    out["spec-decode-speedup"] = (metric(sp, "speedup"), sp.get("config") if sp else None)
     return out
 
 
