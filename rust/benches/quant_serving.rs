@@ -1,0 +1,3 @@
+fn main() {
+    quoka::bench::quant::quant_serving();
+}

@@ -9,6 +9,7 @@ pub mod latency;
 pub mod prefix;
 pub mod decode;
 pub mod spec;
+pub mod quant;
 
 pub use crate::util::timing::{bench, heatmap, BenchCfg, Stats, Table};
 

@@ -56,6 +56,7 @@ fn mk_engine(spec: SpecCfg) -> Engine {
             seed: SEED,
             kv: KvLayout::Private,
             spec,
+            ..EngineCfg::default()
         },
     )
     .expect("serve-small host engine")

@@ -12,7 +12,7 @@ use super::kv_blocks::BlockAllocator;
 use super::metrics::Metrics;
 use super::request::{Phase, PolicySpec, Request, RequestResult, SeqEntry};
 use super::scheduler::{SchedCfg, Scheduler, WorkItem};
-use crate::kvpool::{policy_ns, KvPool, PoolCfg, RadixCache};
+use crate::kvpool::{policy_ns, KvDtype, KvPool, PoolCfg, RadixCache};
 use crate::model::{DecodeKv, DecodeSeq, HostModel, ModelConfig, SeqState, Weights};
 use crate::runtime::exec::{AttnMode, PjrtBackend, PjrtSeq};
 use crate::select::{SelectCtx, SelectionPolicy};
@@ -82,6 +82,11 @@ pub struct EngineCfg {
     /// requests submitted without an explicit override
     /// ([`Engine::submit_spec`]). Off by default.
     pub spec: SpecCfg,
+    /// KV cache element type (`--kv-dtype`): fp32 slabs (exact, the parity
+    /// oracle) or int8 rows with per-row fp32 scales (4x smaller cache,
+    /// dequantized inside the attention tiles). Applies to both layouts;
+    /// host backend only — a pjrt engine downgrades to f32 with a warning.
+    pub kv_dtype: KvDtype,
 }
 
 impl Default for EngineCfg {
@@ -93,6 +98,7 @@ impl Default for EngineCfg {
             seed: 0,
             kv: KvLayout::Private,
             spec: SpecCfg::off(),
+            kv_dtype: KvDtype::env_default(),
         }
     }
 }
@@ -114,6 +120,8 @@ pub struct Engine {
     drafters: HashMap<u64, Box<dyn DraftSource>>,
     /// Engine-wide default spec config for plain [`Engine::submit`] calls.
     default_spec: SpecCfg,
+    /// KV element type every sequence's cache (private or pooled) uses.
+    kv_dtype: KvDtype,
     ctx: SelectCtx,
     pub metrics: Metrics,
     results: Vec<RequestResult>,
@@ -148,6 +156,17 @@ impl Engine {
             );
             cfg.spec = SpecCfg::off();
         }
+        // Same construction-time downgrade for quantized KV: the compiled
+        // PJRT artifacts stream their own fp32 cache, so an int8 request
+        // could never be served — fall back to the exact representation
+        // instead of failing every submit.
+        if matches!(backend, Backend::Pjrt(_)) && cfg.kv_dtype == KvDtype::Int8 {
+            eprintln!(
+                "quoka: int8 KV requires the host backend; falling back to \
+                 --kv-dtype f32 for this pjrt engine"
+            );
+            cfg.kv_dtype = KvDtype::F32;
+        }
         // Prefix-cache mode publishes KV pages: pin chunk boundaries to
         // the prompt (never truncated by step-budget pressure) so cached
         // KV is bit-identical to a cold serial recompute under any load.
@@ -174,13 +193,16 @@ impl Engine {
                     Backend::Host(m) => m.cfg().clone(),
                     Backend::Pjrt(b) => b.cfg().clone(),
                 };
-                Some(KvPool::new(PoolCfg {
-                    n_layers: mc.n_layers,
-                    n_kv: mc.n_kv_heads,
-                    d: mc.d_head,
-                    block_tokens: cfg.block_tokens,
-                    total_blocks: cfg.pool_blocks,
-                }))
+                Some(KvPool::new_with_dtype(
+                    PoolCfg {
+                        n_layers: mc.n_layers,
+                        n_kv: mc.n_kv_heads,
+                        d: mc.d_head,
+                        block_tokens: cfg.block_tokens,
+                        total_blocks: cfg.pool_blocks,
+                    },
+                    cfg.kv_dtype,
+                ))
             }
         };
         let radix = match cfg.kv {
@@ -198,6 +220,7 @@ impl Engine {
             policies: HashMap::new(),
             drafters: HashMap::new(),
             default_spec: cfg.spec,
+            kv_dtype: cfg.kv_dtype,
             ctx: SelectCtx::new(cfg.seed ^ 0xE1),
             metrics: Metrics::default(),
             results: Vec::new(),
@@ -210,6 +233,12 @@ impl Engine {
     /// against it.
     pub fn default_spec(&self) -> SpecCfg {
         self.default_spec
+    }
+
+    /// The KV element type this engine's caches store (post any
+    /// construction-time backend downgrade).
+    pub fn kv_dtype(&self) -> KvDtype {
+        self.kv_dtype
     }
 
     pub fn model_cfg(&self) -> ModelConfig {
@@ -292,6 +321,17 @@ impl Engine {
                 policy.name == "dense" || policy.name.starts_with("quoka"),
                 "paged KV serves block-table-aware policies 'dense'/'quoka*' \
                  (got '{}'); other baselines run with private KV buffers",
+                policy.name
+            );
+        }
+        if self.kv_dtype == KvDtype::Int8 {
+            // Quantized caches expose int8 codes + scales, never fp32 key
+            // rows; only policies that go through the quantization-aware
+            // scan (or skip scanning entirely) can run over them.
+            anyhow::ensure!(
+                policy.name == "dense" || policy.name.starts_with("quoka"),
+                "int8 KV serves 'dense'/'quoka*' (got '{}'); other baselines \
+                 read fp32 key rows — rerun with --kv-dtype f32",
                 policy.name
             );
         }
@@ -593,7 +633,7 @@ impl Engine {
             } else {
                 match &self.backend {
                     Backend::Host(m) => SeqBack::Host {
-                        state: SeqState::new(m.cfg()),
+                        state: SeqState::new_with_dtype(m.cfg(), self.kv_dtype),
                         last_hidden: Vec::new(),
                     },
                     Backend::Pjrt(b) => SeqBack::Pjrt {
@@ -1184,7 +1224,15 @@ impl Engine {
 mod tests {
     use super::*;
 
+    // The helpers inherit the env-selected KV dtype (QUOKA_KV_DTYPE), so
+    // the CI int8 matrix leg runs the whole engine suite over quantized
+    // caches; tests that compare against a raw fp32 model or use policies
+    // that read fp32 key rows pin `KvDtype::F32` explicitly.
     fn engine() -> Engine {
+        engine_dt(KvDtype::env_default())
+    }
+
+    fn engine_dt(kv_dtype: KvDtype) -> Engine {
         Engine::new_host(
             "tiny",
             EngineCfg {
@@ -1194,12 +1242,17 @@ mod tests {
                 seed: 1,
                 kv: KvLayout::Private,
                 spec: SpecCfg::off(),
+                kv_dtype,
             },
         )
         .unwrap()
     }
 
     fn paged_engine(prefix_cache: bool) -> Engine {
+        paged_engine_dt(prefix_cache, KvDtype::env_default())
+    }
+
+    fn paged_engine_dt(prefix_cache: bool, kv_dtype: KvDtype) -> Engine {
         Engine::new_host(
             "tiny",
             EngineCfg {
@@ -1209,6 +1262,7 @@ mod tests {
                 seed: 1,
                 kv: KvLayout::Paged { prefix_cache },
                 spec: SpecCfg::off(),
+                kv_dtype,
             },
         )
         .unwrap()
@@ -1235,7 +1289,8 @@ mod tests {
 
     #[test]
     fn batch_of_requests_with_mixed_policies() {
-        let mut e = engine();
+        // 'sample'/'keydiff' read fp32 key rows: fp32-only policies.
+        let mut e = engine_dt(KvDtype::F32);
         for (i, name) in ["dense", "quoka", "sample", "keydiff"].iter().enumerate() {
             e.submit(
                 prompt(30 + i * 7, i as u64),
@@ -1263,8 +1318,9 @@ mod tests {
 
     #[test]
     fn dense_engine_matches_raw_model() {
-        // The engine's chunked output must equal driving HostModel by hand.
-        let mut e = engine();
+        // The engine's chunked output must equal driving HostModel by hand
+        // (a raw fp32 SeqState — so pin the engine to fp32 KV too).
+        let mut e = engine_dt(KvDtype::F32);
         let toks = prompt(40, 9);
         e.submit(toks.clone(), 3, PolicySpec { name: "dense".into(), budget: 0 }).unwrap();
         let got = e.run_to_completion().unwrap()[0].generated.clone();
@@ -1302,6 +1358,7 @@ mod tests {
                 seed: 1,
                 kv: KvLayout::Private,
                 spec: SpecCfg::off(),
+                kv_dtype: KvDtype::env_default(),
             },
         )
         .unwrap();
@@ -1370,6 +1427,7 @@ mod tests {
                 seed: 1,
                 kv: KvLayout::Paged { prefix_cache: true },
                 spec: SpecCfg::off(),
+                kv_dtype: KvDtype::env_default(),
             },
         )
         .unwrap();
@@ -1483,6 +1541,7 @@ mod tests {
                     seed: 1,
                     kv: KvLayout::Paged { prefix_cache: true },
                     spec: SpecCfg::off(),
+                    kv_dtype: KvDtype::env_default(),
                 },
             )
             .unwrap()
@@ -1584,5 +1643,35 @@ mod tests {
         );
         assert!(e.metrics.prefix_hit_rate() > 0.0);
         assert!(e.metrics.prefix_bytes_saved > 0);
+    }
+
+    #[test]
+    fn int8_engine_serves_both_layouts_and_shrinks_the_pool() {
+        // Private layout: an int8 engine serves the full request, and —
+        // since per-row quantization is deterministic — so does a rerun,
+        // bit-identically.
+        let run = |dt: KvDtype| {
+            let mut e = engine_dt(dt);
+            e.submit(prompt(40, 3), 4, PolicySpec { name: "quoka".into(), budget: 16 }).unwrap();
+            e.run_to_completion().unwrap()[0].generated.clone()
+        };
+        assert_eq!(run(KvDtype::Int8).len(), 4);
+        assert_eq!(run(KvDtype::Int8), run(KvDtype::Int8), "int8 decode is deterministic");
+
+        // Policies that read fp32 key rows are rejected at submit, not at
+        // kernel time deep inside a forward pass.
+        let mut e = engine_dt(KvDtype::Int8);
+        assert!(e.submit(vec![1; 8], 1, PolicySpec { name: "sample".into(), budget: 8 }).is_err());
+
+        // Paged layout: same prompt under both dtypes; the quantized
+        // pool's residency must report the dtype-true (smaller) bytes.
+        let bytes = |dt: KvDtype| {
+            let mut e = paged_engine_dt(false, dt);
+            e.submit(prompt(64, 9), 3, PolicySpec { name: "quoka".into(), budget: 24 }).unwrap();
+            e.run_to_completion().unwrap();
+            e.metrics.peak_kv_bytes
+        };
+        let (f32b, i8b) = (bytes(KvDtype::F32), bytes(KvDtype::Int8));
+        assert!(i8b > 0 && i8b * 2 < f32b, "int8 pool bytes {i8b} not well under fp32 {f32b}");
     }
 }

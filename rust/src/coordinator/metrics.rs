@@ -260,6 +260,15 @@ impl Metrics {
                 self.spec_tokens_per_s(),
             ));
         }
+        if self.peak_kv_bytes > 0 || self.pool_resident_bytes > 0 {
+            // Byte figures come from the cache's actual element width
+            // (`KvDtype::bytes`), so an int8 pool reports its true ~4x
+            // savings here rather than fp32-assumed sizes.
+            s.push_str(&format!(
+                " kv_bytes_resident={} kv_bytes_peak={}",
+                self.pool_resident_bytes, self.peak_kv_bytes,
+            ));
+        }
         if self.prefix_lookups > 0 {
             s.push_str(&format!(
                 " prefix_hit_rate={:.1}% prefix_tok_reused={} kv_bytes_saved={}",
@@ -297,6 +306,14 @@ mod tests {
         assert!((m.mean_tpot_s() - 0.01).abs() < 1e-9);
         assert!((m.tokens_per_s() - 670.0).abs() < 1.0);
         assert!(m.summary().contains("finished=2"));
+        // No KV residency recorded ⇒ no residency section; once recorded,
+        // both the live and peak figures appear.
+        assert!(!m.summary().contains("kv_bytes_resident"), "{}", m.summary());
+        m.pool_resident_bytes = 4096;
+        m.peak_kv_bytes = 8192;
+        let s = m.summary();
+        assert!(s.contains("kv_bytes_resident=4096"), "{s}");
+        assert!(s.contains("kv_bytes_peak=8192"), "{s}");
     }
 
     #[test]

@@ -79,5 +79,5 @@
 pub mod pool;
 pub mod radix;
 
-pub use pool::{KvPool, PagedKv, PoolCfg};
+pub use pool::{KvDtype, KvPool, PagedKv, PoolCfg};
 pub use radix::{policy_ns, RadixCache, RadixCursor, RadixStats};

@@ -9,7 +9,7 @@
 
 use crate::coordinator::kv_blocks::BlockAllocator;
 use crate::select::{KCache, Pages};
-use crate::tensor::ops::l2_norm;
+use crate::tensor::ops::{l2_norm, quantize_row_q8};
 
 /// Pool geometry.
 #[derive(Clone, Copy, Debug)]
@@ -25,16 +25,87 @@ pub struct PoolCfg {
     pub total_blocks: usize,
 }
 
+/// Element type of the bulk K/V rows held by [`KvPool`] and the contiguous
+/// per-sequence caches. Page metadata — inverse norms, per-page key sums
+/// and (under int8) the per-row dequant scales — is always fp32 and exact;
+/// only the K/V row payload changes representation.
+///
+/// Int8 rows are quantized at append time with a symmetric per-row scale
+/// (`quantize_row_q8`) and dequantized *inside* the attention / scan tile
+/// kernels; an fp32 copy of the cache is never materialized. Quantization
+/// is deterministic per row, so copy-on-write clones and speculative
+/// rollback keep their bit-exactness guarantees.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KvDtype {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl KvDtype {
+    /// Bytes per cached K/V element.
+    #[inline]
+    pub fn bytes(self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::Int8 => 1,
+        }
+    }
+
+    /// Parse a `--kv-dtype` value.
+    pub fn parse(s: &str) -> anyhow::Result<KvDtype> {
+        match s {
+            "f32" => Ok(KvDtype::F32),
+            "int8" => Ok(KvDtype::Int8),
+            other => anyhow::bail!("unknown kv dtype {other:?} (expected f32 | int8)"),
+        }
+    }
+
+    /// Engine-default dtype: `QUOKA_KV_DTYPE=int8` flips the default so the
+    /// CI matrix can run the whole suite on quantized pages without
+    /// threading a flag through every constructor; anything else means f32.
+    pub fn env_default() -> KvDtype {
+        match std::env::var("QUOKA_KV_DTYPE").ok().as_deref() {
+            Some("int8") => KvDtype::Int8,
+            _ => KvDtype::F32,
+        }
+    }
+}
+
+impl std::fmt::Display for KvDtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            KvDtype::F32 => "f32",
+            KvDtype::Int8 => "int8",
+        })
+    }
+}
+
 /// One layer's physical storage, laid out per page:
-/// `k`/`v`: `[page, n_kv, block_tokens, d]`,
+/// `k`/`v` (f32 pages) or `kq`/`vq` (int8 pages): `[page, n_kv, block_tokens, d]`,
 /// `inv_norm`: `[page, n_kv, block_tokens]`,
+/// `k_scale`/`v_scale` (int8 pages only): `[page, n_kv, block_tokens]`
+/// per-row dequant scales riding the same metadata layout as `inv_norm`,
 /// `key_sums`: `[page, n_kv, d]` (sum of filled key rows — cosine against
 /// it equals cosine against the mean key),
 /// `fill`: `[page]` filled slots, so overwriting a slot (COW rewrite)
 /// subtracts the old row from the sums and metadata stays exact.
+///
+/// Exactly one of the f32 / int8 row representations is populated per
+/// pool (by [`KvDtype`]); the other's slabs stay empty. Under int8 the
+/// key sums accumulate the *dequantized stored* rows, not the raw input
+/// rows, so the metadata pass of the QUOKA scan scores exactly what the
+/// exact scan sees, and [`KvPool::truncate_seq`]'s rebuild-from-stored-rows
+/// stays bit-identical to an append-only history. Inverse norms are always
+/// computed from the original fp32 input row (written once at append),
+/// keeping them exact in both representations.
 struct LayerPages {
     k: Vec<f32>,
     v: Vec<f32>,
+    kq: Vec<i8>,
+    vq: Vec<i8>,
+    k_scale: Vec<f32>,
+    v_scale: Vec<f32>,
     inv_norm: Vec<f32>,
     key_sums: Vec<f32>,
     fill: Vec<u16>,
@@ -45,11 +116,13 @@ impl LayerPages {
     /// metadata: retire the old row from the page key sum when
     /// overwriting a filled slot (COW rewrite), refresh the inverse norm,
     /// and accumulate the new row into the key sum. The single write path
-    /// shared by chunked and batched-decode appends — metadata rules live
-    /// here exactly once.
+    /// shared by chunked and batched-decode appends — metadata and
+    /// quantization rules live here exactly once.
+    #[allow(clippy::too_many_arguments)]
     fn write_row(
         &mut self,
         cfg: &PoolCfg,
+        dtype: KvDtype,
         page: usize,
         slot: usize,
         h: usize,
@@ -59,26 +132,49 @@ impl LayerPages {
     ) {
         let (n_kv, d, bt) = (cfg.n_kv, cfg.d, cfg.block_tokens);
         let dst = ((page * n_kv + h) * bt + slot) * d;
+        let nb = (page * n_kv + h) * bt + slot;
         let sb = (page * n_kv + h) * d;
-        if was_filled {
-            for jj in 0..d {
-                self.key_sums[sb + jj] -= self.k[dst + jj];
+        match dtype {
+            KvDtype::F32 => {
+                if was_filled {
+                    for jj in 0..d {
+                        self.key_sums[sb + jj] -= self.k[dst + jj];
+                    }
+                }
+                self.k[dst..dst + d].copy_from_slice(k_row);
+                self.v[dst..dst + d].copy_from_slice(v_row);
+                for (o, &x) in self.key_sums[sb..sb + d].iter_mut().zip(k_row) {
+                    *o += x;
+                }
+            }
+            KvDtype::Int8 => {
+                if was_filled {
+                    let s_old = self.k_scale[nb];
+                    for jj in 0..d {
+                        self.key_sums[sb + jj] -= self.kq[dst + jj] as f32 * s_old;
+                    }
+                }
+                let ks = quantize_row_q8(k_row, &mut self.kq[dst..dst + d]);
+                let vs = quantize_row_q8(v_row, &mut self.vq[dst..dst + d]);
+                self.k_scale[nb] = ks;
+                self.v_scale[nb] = vs;
+                // Sum the dequantized *stored* row so metadata scoring and
+                // rollback rebuilds see the same keys the kernels see.
+                for jj in 0..d {
+                    self.key_sums[sb + jj] += self.kq[dst + jj] as f32 * ks;
+                }
             }
         }
-        self.k[dst..dst + d].copy_from_slice(k_row);
-        self.v[dst..dst + d].copy_from_slice(v_row);
         let norm = l2_norm(k_row);
-        self.inv_norm[(page * n_kv + h) * bt + slot] =
-            if norm > 0.0 { 1.0 / norm } else { 0.0 };
-        for (o, &x) in self.key_sums[sb..sb + d].iter_mut().zip(k_row) {
-            *o += x;
-        }
+        self.inv_norm[nb] = if norm > 0.0 { 1.0 / norm } else { 0.0 };
     }
 }
 
 /// The shared paged KV pool.
 pub struct KvPool {
     pub cfg: PoolCfg,
+    /// Element type of the bulk K/V rows (metadata stays fp32).
+    dtype: KvDtype,
     layers: Vec<LayerPages>,
     /// Owners per page id (0 = free as far as the pool is concerned).
     refcount: Vec<u32>,
@@ -91,11 +187,21 @@ pub struct KvPool {
 /// Borrowed view of one sequence × one layer: what the paged attention
 /// kernel walks. Per-page rows of a single head are contiguous, so
 /// full-selection tiles stream page runs without a gather.
+///
+/// Exactly one row representation is live, per [`PagedKv::dtype`]: the f32
+/// `k`/`v` slabs, or the int8 `kq`/`vq` slabs with per-row `k_scale`/
+/// `v_scale` (indexed like `inv_norm`). The dormant representation's
+/// slices are empty.
 #[derive(Clone, Copy)]
 pub struct PagedKv<'a> {
     pub k: &'a [f32],
     pub v: &'a [f32],
+    pub kq: &'a [i8],
+    pub vq: &'a [i8],
+    pub k_scale: &'a [f32],
+    pub v_scale: &'a [f32],
     pub inv_norm: &'a [f32],
+    pub dtype: KvDtype,
     /// The sequence's block table: logical block `j` lives in page
     /// `blocks[j]`.
     pub blocks: &'a [u32],
@@ -107,7 +213,8 @@ pub struct PagedKv<'a> {
 }
 
 impl PagedKv<'_> {
-    /// Flat float offset of row `(h, i)` in the `k`/`v` slabs.
+    /// Flat element offset of row `(h, i)` in the K/V slabs (f32 or int8 —
+    /// both share the `[page, n_kv, block_tokens, d]` layout).
     #[inline]
     pub fn row_base(&self, h: usize, i: usize) -> usize {
         let bt = self.block_tokens;
@@ -115,14 +222,25 @@ impl PagedKv<'_> {
         ((page * self.n_kv + h) * bt + (i % bt)) * self.d
     }
 
+    /// Flat offset of row `(h, i)` in the per-row metadata slabs
+    /// (`inv_norm`, `k_scale`, `v_scale`).
+    #[inline]
+    pub fn meta_base(&self, h: usize, i: usize) -> usize {
+        let bt = self.block_tokens;
+        let page = self.blocks[i / bt] as usize;
+        (page * self.n_kv + h) * bt + (i % bt)
+    }
+
     #[inline]
     pub fn key(&self, h: usize, i: usize) -> &[f32] {
+        debug_assert_eq!(self.dtype, KvDtype::F32, "f32 key row of an int8 paged cache");
         let b = self.row_base(h, i);
         &self.k[b..b + self.d]
     }
 
     #[inline]
     pub fn value(&self, h: usize, i: usize) -> &[f32] {
+        debug_assert_eq!(self.dtype, KvDtype::F32, "f32 value row of an int8 paged cache");
         let b = self.row_base(h, i);
         &self.v[b..b + self.d]
     }
@@ -130,6 +248,10 @@ impl PagedKv<'_> {
 
 impl KvPool {
     pub fn new(cfg: PoolCfg) -> KvPool {
+        KvPool::new_with_dtype(cfg, KvDtype::F32)
+    }
+
+    pub fn new_with_dtype(cfg: PoolCfg, dtype: KvDtype) -> KvPool {
         assert!(cfg.n_layers > 0 && cfg.n_kv > 0 && cfg.d > 0);
         assert!(cfg.block_tokens > 0 && cfg.total_blocks > 0);
         assert!(cfg.block_tokens <= u16::MAX as usize, "fill counters are u16");
@@ -138,6 +260,10 @@ impl KvPool {
                 .map(|_| LayerPages {
                     k: Vec::new(),
                     v: Vec::new(),
+                    kq: Vec::new(),
+                    vq: Vec::new(),
+                    k_scale: Vec::new(),
+                    v_scale: Vec::new(),
                     inv_norm: Vec::new(),
                     key_sums: Vec::new(),
                     fill: Vec::new(),
@@ -146,8 +272,15 @@ impl KvPool {
             refcount: vec![0; cfg.total_blocks],
             capacity_pages: 0,
             cow_copies: 0,
+            dtype,
             cfg,
         }
+    }
+
+    /// Element type of the bulk K/V rows.
+    #[inline]
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
     }
 
     /// Floats of K (or V) per page per layer.
@@ -167,9 +300,22 @@ impl KvPool {
         let pf = self.page_floats();
         let nf = self.cfg.n_kv * self.cfg.block_tokens;
         let sf = self.cfg.n_kv * self.cfg.d;
+        let dtype = self.dtype;
         for lp in &mut self.layers {
-            lp.k.resize(new_cap * pf, 0.0);
-            lp.v.resize(new_cap * pf, 0.0);
+            // Only the live representation's row slabs get storage; the
+            // dormant one stays empty so int8 pools never pay fp32 bytes.
+            match dtype {
+                KvDtype::F32 => {
+                    lp.k.resize(new_cap * pf, 0.0);
+                    lp.v.resize(new_cap * pf, 0.0);
+                }
+                KvDtype::Int8 => {
+                    lp.kq.resize(new_cap * pf, 0);
+                    lp.vq.resize(new_cap * pf, 0);
+                    lp.k_scale.resize(new_cap * nf, 0.0);
+                    lp.v_scale.resize(new_cap * nf, 0.0);
+                }
+            }
             lp.inv_norm.resize(new_cap * nf, 0.0);
             lp.key_sums.resize(new_cap * sf, 0.0);
             lp.fill.resize(new_cap, 0);
@@ -293,9 +439,20 @@ impl KvPool {
         let pf = self.page_floats();
         let nf = self.cfg.n_kv * self.cfg.block_tokens;
         let sf = self.cfg.n_kv * self.cfg.d;
+        let dtype = self.dtype;
         for lp in &mut self.layers {
-            lp.k.copy_within(src * pf..(src + 1) * pf, dst * pf);
-            lp.v.copy_within(src * pf..(src + 1) * pf, dst * pf);
+            match dtype {
+                KvDtype::F32 => {
+                    lp.k.copy_within(src * pf..(src + 1) * pf, dst * pf);
+                    lp.v.copy_within(src * pf..(src + 1) * pf, dst * pf);
+                }
+                KvDtype::Int8 => {
+                    lp.kq.copy_within(src * pf..(src + 1) * pf, dst * pf);
+                    lp.vq.copy_within(src * pf..(src + 1) * pf, dst * pf);
+                    lp.k_scale.copy_within(src * nf..(src + 1) * nf, dst * nf);
+                    lp.v_scale.copy_within(src * nf..(src + 1) * nf, dst * nf);
+                }
+            }
             lp.inv_norm.copy_within(src * nf..(src + 1) * nf, dst * nf);
             lp.key_sums.copy_within(src * sf..(src + 1) * sf, dst * sf);
             lp.fill[dst] = lp.fill[src];
@@ -326,6 +483,7 @@ impl KvPool {
             self.ensure_page(page);
         }
         let cfg = self.cfg;
+        let dtype = self.dtype;
         let lp = &mut self.layers[layer];
         for i in 0..s {
             let tok = pos + i;
@@ -336,6 +494,7 @@ impl KvPool {
                 let src = (h * s + i) * d;
                 lp.write_row(
                     &cfg,
+                    dtype,
                     page,
                     slot,
                     h,
@@ -378,12 +537,14 @@ impl KvPool {
         self.ensure_page(page);
         let slot = pos % bt;
         let cfg = self.cfg;
+        let dtype = self.dtype;
         let lp = &mut self.layers[layer];
         let was_filled = slot < lp.fill[page] as usize;
         for h in 0..n_kv {
             let src = (h * batch + seq) * d;
             lp.write_row(
                 &cfg,
+                dtype,
                 page,
                 slot,
                 h,
@@ -426,6 +587,7 @@ impl KvPool {
                 "speculative rollback into shared/unowned page {page}"
             );
             let keep = new_t.saturating_sub(j * bt).min(bt);
+            let dtype = self.dtype;
             for lp in &mut self.layers {
                 let filled = lp.fill[page] as usize;
                 if filled <= keep {
@@ -434,12 +596,32 @@ impl KvPool {
                 for h in 0..n_kv {
                     let nb = (page * n_kv + h) * bt;
                     lp.inv_norm[nb + keep..nb + filled].fill(0.0);
+                    if dtype == KvDtype::Int8 {
+                        // Dropped rows' scales go back to the never-written
+                        // state, like the inverse norms (the codes, like
+                        // dropped f32 rows, are dead until overwritten).
+                        lp.k_scale[nb + keep..nb + filled].fill(0.0);
+                        lp.v_scale[nb + keep..nb + filled].fill(0.0);
+                    }
                     let sb = (page * n_kv + h) * d;
                     lp.key_sums[sb..sb + d].fill(0.0);
+                    // Re-accumulate surviving rows in append order — under
+                    // int8, the dequantized stored rows, exactly what the
+                    // incremental append path summed.
                     for slot in 0..keep {
                         let kb = ((page * n_kv + h) * bt + slot) * d;
-                        for jj in 0..d {
-                            lp.key_sums[sb + jj] += lp.k[kb + jj];
+                        match dtype {
+                            KvDtype::F32 => {
+                                for jj in 0..d {
+                                    lp.key_sums[sb + jj] += lp.k[kb + jj];
+                                }
+                            }
+                            KvDtype::Int8 => {
+                                let s = lp.k_scale[nb + slot];
+                                for jj in 0..d {
+                                    lp.key_sums[sb + jj] += lp.kq[kb + jj] as f32 * s;
+                                }
+                            }
                         }
                     }
                 }
@@ -453,7 +635,7 @@ impl KvPool {
     /// per-page mean-key metadata.
     pub fn k_cache<'a>(&'a self, blocks: &'a [u32], t: usize, layer: usize) -> KCache<'a> {
         let lp = &self.layers[layer];
-        KCache::paged(
+        let kc = KCache::paged(
             &lp.k,
             self.cfg.n_kv,
             t,
@@ -464,7 +646,11 @@ impl KvPool {
                 block_tokens: self.cfg.block_tokens,
                 key_sums: &lp.key_sums,
             },
-        )
+        );
+        match self.dtype {
+            KvDtype::F32 => kc,
+            KvDtype::Int8 => kc.with_quant(&lp.kq, &lp.k_scale),
+        }
     }
 
     /// Attention-kernel view of layer `layer` through a block table.
@@ -473,7 +659,12 @@ impl KvPool {
         PagedKv {
             k: &lp.k,
             v: &lp.v,
+            kq: &lp.kq,
+            vq: &lp.vq,
+            k_scale: &lp.k_scale,
+            v_scale: &lp.v_scale,
             inv_norm: &lp.inv_norm,
+            dtype: self.dtype,
             blocks,
             block_tokens: self.cfg.block_tokens,
             n_kv: self.cfg.n_kv,
@@ -482,16 +673,32 @@ impl KvPool {
         }
     }
 
-    /// KV + metadata bytes of one cached token across all layers.
+    /// KV + metadata bytes of one cached token across all layers, derived
+    /// from the pool's actual element width (int8 rows ride 1-byte
+    /// elements plus two fp32 dequant scales per (layer, head) token).
     pub fn token_bytes(&self) -> usize {
-        // K + V rows (2d floats) + one inv-norm float per (layer, head).
-        self.cfg.n_layers * self.cfg.n_kv * (2 * self.cfg.d + 1) * 4
+        // K + V rows (2d elements) + one inv-norm float per (layer, head),
+        // + per-row K/V scales when quantized.
+        let row = 2 * self.cfg.d * self.dtype.bytes();
+        let meta = match self.dtype {
+            KvDtype::F32 => 4,
+            KvDtype::Int8 => 3 * 4, // inv_norm + k_scale + v_scale
+        };
+        self.cfg.n_layers * self.cfg.n_kv * (row + meta)
     }
 
     /// Bytes of one page across all layers, metadata included.
     pub fn page_bytes(&self) -> usize {
         let c = &self.cfg;
-        c.n_layers * c.n_kv * (2 * c.block_tokens * c.d + c.block_tokens + c.d) * 4
+        // Per (layer, head): K + V rows, per-slot metadata floats
+        // (inv_norm, plus the two scale slabs when quantized) and the
+        // per-page key-sum vector.
+        let rows = 2 * c.block_tokens * c.d * self.dtype.bytes();
+        let slot_meta = match self.dtype {
+            KvDtype::F32 => c.block_tokens * 4,
+            KvDtype::Int8 => 3 * c.block_tokens * 4,
+        };
+        c.n_layers * c.n_kv * (rows + slot_meta + c.d * 4)
     }
 
     /// Physical bytes accounted to `leased_pages` pages (K, V, norm cache
@@ -776,6 +983,52 @@ mod tests {
         pool.append_chunk(&blocks, 0, 0, &k, &v, 2);
         pool.retain(blocks[0]); // shared via the radix cache, say
         pool.truncate_seq(&blocks, 1, 2); // must panic, never mutate
+    }
+
+    #[test]
+    fn int8_pool_append_views_and_bytes() {
+        let c = cfg();
+        let mut alloc = BlockAllocator::new(c.total_blocks, c.block_tokens);
+        let mut pool = KvPool::new_with_dtype(c, KvDtype::Int8);
+        assert_eq!(pool.dtype(), KvDtype::Int8);
+        let mut rng = Rng::new(5);
+        let blocks = lease_for(&mut alloc, &mut pool, 6);
+        let mut pos = 0;
+        for s in [3usize, 3] {
+            for l in 0..c.n_layers {
+                let k = rng.normal_vec(c.n_kv * s * c.d, 1.0);
+                let v = rng.normal_vec(c.n_kv * s * c.d, 1.0);
+                pool.append_chunk(&blocks, l, pos, &k, &v, s);
+            }
+            pos += s;
+        }
+        let view = pool.kv_view(&blocks, pos, 0);
+        assert_eq!(view.dtype, KvDtype::Int8);
+        assert!(view.k.is_empty() && view.v.is_empty(), "no fp32 copy of the cache");
+        // Key sums equal the sum of dequantized *stored* rows, bit-exactly.
+        let kc = pool.k_cache(&blocks, pos, 0);
+        let pg = kc.pages.unwrap();
+        let q = kc.quant.unwrap();
+        for (j, &page) in blocks.iter().enumerate() {
+            let lo = j * c.block_tokens;
+            let hi = (lo + c.block_tokens).min(pos);
+            for h in 0..c.n_kv {
+                let mut want = vec![0.0f32; c.d];
+                for i in lo..hi {
+                    let b = view.row_base(h, i);
+                    let s = q.scales[view.meta_base(h, i)];
+                    for (w, &cd) in want.iter_mut().zip(&q.codes[b..b + c.d]) {
+                        *w += cd as f32 * s;
+                    }
+                }
+                let sb = (page as usize * c.n_kv + h) * c.d;
+                assert_eq!(&want[..], &pg.key_sums[sb..sb + c.d]);
+            }
+        }
+        // int8 pages report true (smaller) byte footprints.
+        let f32_pool = KvPool::new(c);
+        assert!(pool.token_bytes() < f32_pool.token_bytes());
+        assert!(pool.page_bytes() < f32_pool.page_bytes());
     }
 
     #[test]

@@ -71,6 +71,7 @@ fn serve_specs() -> Vec<OptSpec> {
         OptSpec { name: "prefix-cache", help: "radix prefix cache over the paged pool (implies --paged)", default: None, boolean: true },
         OptSpec { name: "spec-gamma", help: "speculative decode: max draft tokens per step (0 = off)", default: Some("0"), boolean: false },
         OptSpec { name: "spec-policy", help: "speculative draft policy (off | pld)", default: Some("pld"), boolean: false },
+        OptSpec { name: "kv-dtype", help: "KV cache element type: f32 | int8 (int8 = 4x smaller cache, dequantized in-tile; host backend, dense/quoka* policies)", default: Some("f32"), boolean: false },
         OptSpec { name: "help", help: "show help", default: None, boolean: true },
     ]
 }
@@ -102,6 +103,7 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         // Engine-wide default; per-request `spec_gamma` / `spec_policy`
         // wire fields override it.
         spec: quoka::spec::SpecCfg::parse(&a.str("spec-policy")?, a.usize("spec-gamma")?)?,
+        kv_dtype: quoka::kvpool::KvDtype::parse(&a.str("kv-dtype")?)?,
     };
     let backend = a.str("backend")?;
     let preset = a.str("preset")?;

@@ -54,11 +54,38 @@
 //! [`reference_chunk_attention`] — the parity oracle for
 //! `rust/tests/attn_parity.rs` and the baseline the `micro_hotpath` bench
 //! measures speedup against.
+//!
+//! ## Quantized (int8) KV caches
+//!
+//! Under [`KvDtype::Int8`] the cache stores **per-row symmetrically
+//! quantized** K/V codes (`[n_kv, capacity, d]` i8) plus one f32 dequant
+//! scale per row (`[n_kv, capacity]`, the same layout as the norm cache);
+//! the f32 `k`/`v` slabs stay empty — an fp32 copy of the cache is never
+//! materialized. The tile pipeline is unchanged except that past tiles
+//! carry `(i8 codes, f32 scales)` and route through the `_q8` kernels
+//! ([`qk_block_q8`] / [`av_accum_q8`]), which fold the scale into the
+//! integer dot product in registers (`q · (c·s) = s · (q·c)`). The
+//! chunk's own (self) K/V arrives as fresh fp32 activations and is scored
+//! exactly; only the *past* is quantized. The key-norm cache keeps exact
+//! fp32 norms of the original rows, so cosine-scoring selection policies
+//! are unaffected by quantization of the stored keys. fp32 caches are
+//! bit-identical to before — int8-vs-fp32 error bounds are pinned in
+//! `rust/tests/attn_parity.rs`.
 
-use crate::kvpool::PagedKv;
+use crate::kvpool::{KvDtype, PagedKv};
 use crate::select::{fit, HeadSel, Selection};
-use crate::tensor::ops::{av_accum, dot, l2_norm, qk_block, qk_dots, softmax};
+use crate::tensor::ops::{
+    av_accum, av_accum_q8, dot, l2_norm, qk_block, qk_block_q8, qk_dots, quantize_row_q8, softmax,
+};
 use crate::util::threadpool::SyncPtr;
+
+/// [`fit`] for the quantized tile arenas.
+fn fit_i8(buf: &mut Vec<i8>, n: usize) -> &mut [i8] {
+    if buf.len() < n {
+        buf.resize(n, 0);
+    }
+    &mut buf[..n]
+}
 
 /// Key rows per gathered tile. 128 rows × d=128 × 4 B = 64 KiB per K/V
 /// tile — sized so one K tile + one V tile + the score block stay L2
@@ -72,14 +99,30 @@ const KTILE: usize = 128;
 const QBLOCK: usize = 16;
 
 /// Growable per-layer KV storage, layout `[n_kv, capacity, d]` per tensor.
+///
+/// Under [`KvDtype::F32`] the rows live in the `k`/`v` f32 slabs and the
+/// quantized slabs stay empty; under [`KvDtype::Int8`] the rows live as
+/// per-row-quantized codes in `k_q`/`v_q` with dequant scales in
+/// `k_scale`/`v_scale` (layout `[n_kv, capacity]`, like the norm cache)
+/// and the f32 slabs stay empty.
 #[derive(Clone, Debug)]
 pub struct KvBuffers {
     pub k: Vec<f32>,
     pub v: Vec<f32>,
+    /// Int8 key codes, `[n_kv, capacity, d]` (empty under f32).
+    pub k_q: Vec<i8>,
+    /// Int8 value codes, `[n_kv, capacity, d]` (empty under f32).
+    pub v_q: Vec<i8>,
+    /// Per-row key dequant scales, `[n_kv, capacity]` (empty under f32).
+    pub k_scale: Vec<f32>,
+    /// Per-row value dequant scales, `[n_kv, capacity]` (empty under f32).
+    pub v_scale: Vec<f32>,
     /// Incremental key-norm cache: `1/‖k(h, i)‖` (0 for zero keys), layout
     /// `[n_kv, capacity]`. Filled at `append` time, so cosine-scoring
-    /// policies never rescan the cache to renormalize.
+    /// policies never rescan the cache to renormalize. Always computed
+    /// from the exact fp32 input row, even under int8 storage.
     pub k_inv_norm: Vec<f32>,
+    pub dtype: KvDtype,
     pub n_kv: usize,
     pub d: usize,
     /// Valid rows per head.
@@ -90,11 +133,29 @@ pub struct KvBuffers {
 
 impl KvBuffers {
     pub fn new(n_kv: usize, d: usize, initial_capacity: usize) -> KvBuffers {
+        KvBuffers::new_with_dtype(n_kv, d, initial_capacity, KvDtype::F32)
+    }
+
+    pub fn new_with_dtype(
+        n_kv: usize,
+        d: usize,
+        initial_capacity: usize,
+        dtype: KvDtype,
+    ) -> KvBuffers {
         let cap = initial_capacity.max(1);
+        let (f32_len, q_len, s_len) = match dtype {
+            KvDtype::F32 => (n_kv * cap * d, 0, 0),
+            KvDtype::Int8 => (0, n_kv * cap * d, n_kv * cap),
+        };
         KvBuffers {
-            k: vec![0.0; n_kv * cap * d],
-            v: vec![0.0; n_kv * cap * d],
+            k: vec![0.0; f32_len],
+            v: vec![0.0; f32_len],
+            k_q: vec![0; q_len],
+            v_q: vec![0; q_len],
+            k_scale: vec![0.0; s_len],
+            v_scale: vec![0.0; s_len],
             k_inv_norm: vec![0.0; n_kv * cap],
+            dtype,
             n_kv,
             d,
             t: 0,
@@ -108,22 +169,44 @@ impl KvBuffers {
             return;
         }
         let new_cap = (self.capacity * 2).max(need);
-        let mut k2 = vec![0.0; self.n_kv * new_cap * self.d];
-        let mut v2 = vec![0.0; self.n_kv * new_cap * self.d];
-        let mut n2 = vec![0.0; self.n_kv * new_cap];
-        for h in 0..self.n_kv {
-            let src = h * self.capacity * self.d;
-            let dst = h * new_cap * self.d;
-            let n = self.t * self.d;
-            k2[dst..dst + n].copy_from_slice(&self.k[src..src + n]);
-            v2[dst..dst + n].copy_from_slice(&self.v[src..src + n]);
-            let nsrc = h * self.capacity;
-            let ndst = h * new_cap;
-            n2[ndst..ndst + self.t].copy_from_slice(&self.k_inv_norm[nsrc..nsrc + self.t]);
+        let grow_meta = |old: &[f32], n_kv: usize, cap: usize, t: usize| -> Vec<f32> {
+            let mut out = vec![0.0; n_kv * new_cap];
+            for h in 0..n_kv {
+                out[h * new_cap..h * new_cap + t].copy_from_slice(&old[h * cap..h * cap + t]);
+            }
+            out
+        };
+        match self.dtype {
+            KvDtype::F32 => {
+                let mut k2 = vec![0.0; self.n_kv * new_cap * self.d];
+                let mut v2 = vec![0.0; self.n_kv * new_cap * self.d];
+                for h in 0..self.n_kv {
+                    let src = h * self.capacity * self.d;
+                    let dst = h * new_cap * self.d;
+                    let n = self.t * self.d;
+                    k2[dst..dst + n].copy_from_slice(&self.k[src..src + n]);
+                    v2[dst..dst + n].copy_from_slice(&self.v[src..src + n]);
+                }
+                self.k = k2;
+                self.v = v2;
+            }
+            KvDtype::Int8 => {
+                let mut kq2 = vec![0i8; self.n_kv * new_cap * self.d];
+                let mut vq2 = vec![0i8; self.n_kv * new_cap * self.d];
+                for h in 0..self.n_kv {
+                    let src = h * self.capacity * self.d;
+                    let dst = h * new_cap * self.d;
+                    let n = self.t * self.d;
+                    kq2[dst..dst + n].copy_from_slice(&self.k_q[src..src + n]);
+                    vq2[dst..dst + n].copy_from_slice(&self.v_q[src..src + n]);
+                }
+                self.k_q = kq2;
+                self.v_q = vq2;
+                self.k_scale = grow_meta(&self.k_scale, self.n_kv, self.capacity, self.t);
+                self.v_scale = grow_meta(&self.v_scale, self.n_kv, self.capacity, self.t);
+            }
         }
-        self.k = k2;
-        self.v = v2;
-        self.k_inv_norm = n2;
+        self.k_inv_norm = grow_meta(&self.k_inv_norm, self.n_kv, self.capacity, self.t);
         self.capacity = new_cap;
     }
 
@@ -134,11 +217,30 @@ impl KvBuffers {
         debug_assert_eq!(k_new.len(), self.n_kv * s * self.d);
         self.ensure_capacity(self.t + s);
         for h in 0..self.n_kv {
-            let dst = h * self.capacity * self.d + self.t * self.d;
-            let src = h * s * self.d;
-            let n = s * self.d;
-            self.k[dst..dst + n].copy_from_slice(&k_new[src..src + n]);
-            self.v[dst..dst + n].copy_from_slice(&v_new[src..src + n]);
+            match self.dtype {
+                KvDtype::F32 => {
+                    let dst = h * self.capacity * self.d + self.t * self.d;
+                    let src = h * s * self.d;
+                    let n = s * self.d;
+                    self.k[dst..dst + n].copy_from_slice(&k_new[src..src + n]);
+                    self.v[dst..dst + n].copy_from_slice(&v_new[src..src + n]);
+                }
+                KvDtype::Int8 => {
+                    for i in 0..s {
+                        let src = (h * s + i) * self.d;
+                        let dst = h * self.capacity * self.d + (self.t + i) * self.d;
+                        let nb = h * self.capacity + self.t + i;
+                        self.k_scale[nb] = quantize_row_q8(
+                            &k_new[src..src + self.d],
+                            &mut self.k_q[dst..dst + self.d],
+                        );
+                        self.v_scale[nb] = quantize_row_q8(
+                            &v_new[src..src + self.d],
+                            &mut self.v_q[dst..dst + self.d],
+                        );
+                    }
+                }
+            }
             for i in 0..s {
                 let row = &k_new[(h * s + i) * self.d..(h * s + i + 1) * self.d];
                 let norm = l2_norm(row);
@@ -162,8 +264,23 @@ impl KvBuffers {
         for h in 0..self.n_kv {
             let src = (h * batch + seq) * self.d;
             let dst = h * self.capacity * self.d + self.t * self.d;
-            self.k[dst..dst + self.d].copy_from_slice(&k_batch[src..src + self.d]);
-            self.v[dst..dst + self.d].copy_from_slice(&v_batch[src..src + self.d]);
+            match self.dtype {
+                KvDtype::F32 => {
+                    self.k[dst..dst + self.d].copy_from_slice(&k_batch[src..src + self.d]);
+                    self.v[dst..dst + self.d].copy_from_slice(&v_batch[src..src + self.d]);
+                }
+                KvDtype::Int8 => {
+                    let nb = h * self.capacity + self.t;
+                    self.k_scale[nb] = quantize_row_q8(
+                        &k_batch[src..src + self.d],
+                        &mut self.k_q[dst..dst + self.d],
+                    );
+                    self.v_scale[nb] = quantize_row_q8(
+                        &v_batch[src..src + self.d],
+                        &mut self.v_q[dst..dst + self.d],
+                    );
+                }
+            }
             let norm = l2_norm(&k_batch[src..src + self.d]);
             self.k_inv_norm[h * self.capacity + self.t] =
                 if norm > 0.0 { 1.0 / norm } else { 0.0 };
@@ -174,47 +291,67 @@ impl KvBuffers {
     /// Roll the cache back to `new_t` valid rows (speculative-decode
     /// rollback of rejected draft tokens). Storage and capacity are
     /// untouched — truncated rows are dead until the next `append`
-    /// overwrites them — but the norm-cache entries of the dropped rows
-    /// are zeroed so the cache is bit-identical to one that never
-    /// appended them.
+    /// overwrites them — but the per-row metadata of the dropped rows
+    /// (norm cache, and dequant scales under int8) is zeroed so the cache
+    /// metadata is bit-identical to one that never appended them.
     pub fn truncate(&mut self, new_t: usize) {
         assert!(new_t <= self.t, "truncate({new_t}) beyond t={}", self.t);
         for h in 0..self.n_kv {
             let base = h * self.capacity;
             self.k_inv_norm[base + new_t..base + self.t].fill(0.0);
+            if self.dtype == KvDtype::Int8 {
+                self.k_scale[base + new_t..base + self.t].fill(0.0);
+                self.v_scale[base + new_t..base + self.t].fill(0.0);
+            }
         }
         self.t = new_t;
     }
 
-    /// Key row `(h, i)`.
+    /// Key row `(h, i)` — fp32 caches only (a quantized cache has no f32
+    /// key rows; consume `k_q`/`k_scale` instead).
     #[inline]
     pub fn key(&self, h: usize, i: usize) -> &[f32] {
+        debug_assert!(self.dtype == KvDtype::F32, "KvBuffers::key on an int8 cache");
         let base = h * self.capacity * self.d + i * self.d;
         &self.k[base..base + self.d]
     }
 
     #[inline]
     pub fn value(&self, h: usize, i: usize) -> &[f32] {
+        debug_assert!(self.dtype == KvDtype::F32, "KvBuffers::value on an int8 cache");
         let base = h * self.capacity * self.d + i * self.d;
         &self.v[base..base + self.d]
     }
 
     /// View as a selection-policy cache (carries the incremental norm
-    /// cache, so cosine policies skip their renormalization pass).
+    /// cache, so cosine policies skip their renormalization pass; an int8
+    /// cache additionally carries its key codes + scales and an empty f32
+    /// slab).
     pub fn k_view(&self) -> crate::select::KCache<'_> {
-        crate::select::KCache::with_norms(
+        let kc = crate::select::KCache::with_norms(
             &self.k,
             self.n_kv,
             self.t,
             self.capacity,
             self.d,
             &self.k_inv_norm,
-        )
+        );
+        match self.dtype {
+            KvDtype::F32 => kc,
+            KvDtype::Int8 => kc.with_quant(&self.k_q, &self.k_scale),
+        }
     }
 
-    /// Bytes currently resident (K, V and the key-norm cache).
+    /// Bytes currently resident (K, V and the per-row metadata), derived
+    /// from the actual element width of the cache dtype.
     pub fn resident_bytes(&self) -> usize {
-        (2 * self.n_kv * self.capacity * self.d + self.n_kv * self.capacity) * 4
+        let rows = self.n_kv * self.capacity;
+        let kv_bytes = 2 * rows * self.d * self.dtype.bytes();
+        let meta_rows = match self.dtype {
+            KvDtype::F32 => rows,      // inv_norm
+            KvDtype::Int8 => 3 * rows, // inv_norm + k_scale + v_scale
+        };
+        kv_bytes + meta_rows * 4
     }
 }
 
@@ -234,6 +371,16 @@ struct TaskScratch {
     k_tile: Vec<f32>,
     /// Gathered contiguous V rows for the current tile, `[KTILE, d]`.
     v_tile: Vec<f32>,
+    /// Gathered int8 K codes for the current tile, `[KTILE, d]` (int8
+    /// caches only — the fp32 tiles stay empty on that path and vice
+    /// versa).
+    k_tile_q: Vec<i8>,
+    /// Gathered int8 V codes for the current tile, `[KTILE, d]`.
+    v_tile_q: Vec<i8>,
+    /// Gathered per-row K dequant scales for the current tile, `[KTILE]`.
+    k_scale_tile: Vec<f32>,
+    /// Gathered per-row V dequant scales for the current tile, `[KTILE]`.
+    v_scale_tile: Vec<f32>,
     /// Score block `[QBLOCK, KTILE]` — tile-local, replaces the seed
     /// kernel's O(selected + s) per-query score row.
     scores: Vec<f32>,
@@ -248,15 +395,19 @@ impl AttnScratch {
         AttnScratch::default()
     }
 
-    /// Total floats currently held across all worker arenas — test hook
-    /// for the "no steady-state allocation" invariant (stable across
-    /// repeated calls of the same shape).
+    /// Total float-equivalents currently held across all worker arenas
+    /// (i8 arenas count 4 codes per float) — test hook for the "no
+    /// steady-state allocation" invariant (stable across repeated calls
+    /// of the same shape).
     pub fn allocated_floats(&self) -> usize {
         self.workers
             .iter()
             .map(|t| {
                 t.k_tile.capacity()
                     + t.v_tile.capacity()
+                    + t.k_scale_tile.capacity()
+                    + t.v_scale_tile.capacity()
+                    + (t.k_tile_q.capacity() + t.v_tile_q.capacity()).div_ceil(4)
                     + t.scores.capacity()
                     + t.m.capacity()
                     + t.l.capacity()
@@ -450,6 +601,51 @@ fn score_past_tile(
     }
 }
 
+/// [`score_past_tile`] over an int8 tile: scores come from
+/// [`qk_block_q8`] (scale folded into the integer dot product) and the V
+/// accumulation streams the i8 value codes through
+/// [`online_softmax_update_q8`].
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn score_past_tile_q8(
+    q: &[f32],
+    s: usize,
+    d: usize,
+    g: usize,
+    kv: usize,
+    gq_lo: usize,
+    gq_hi: usize,
+    q_lo: usize,
+    q_hi: usize,
+    kt: &[i8],
+    k_scales: &[f32],
+    vt: &[i8],
+    v_scales: &[f32],
+    tn: usize,
+    scale: f32,
+    scores: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+    out: SyncPtr<f32>,
+) {
+    let mb = q_hi - q_lo;
+    for gq in gq_lo..gq_hi {
+        let h = kv * g + gq;
+        let qs = &q[(h * s + q_lo) * d..(h * s + q_hi) * d];
+        let blk = &mut scores[..mb * tn];
+        qk_block_q8(qs, mb, kt, k_scales, tn, d, blk);
+        for r in 0..mb {
+            let row = &mut blk[r * tn..(r + 1) * tn];
+            for v in row.iter_mut() {
+                *v *= scale;
+            }
+            let orow = unsafe { raw_row(out, (h * s + q_lo + r) * d, d) };
+            let ri = (gq - gq_lo) * mb + r;
+            online_softmax_update_q8(row, vt, v_scales, tn, d, &mut m[ri], &mut l[ri], orow);
+        }
+    }
+}
+
 /// The causal-self tiles (query `qi` sees self positions `0..=qi`; masked
 /// positions are never scored, so no ±∞ sentinels enter the online
 /// softmax) followed by the finalize division — shared by the contiguous
@@ -542,13 +738,11 @@ fn group_block_attention(
     let t = cache.t;
     let scale = 1.0 / (d as f32).sqrt();
     task_init(ts, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, out);
-    let TaskScratch { k_tile, v_tile, scores, m, l } = ts;
 
     let hsel = sel.head(kv, t);
-    past_tiles_contig(
-        q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, cache, hsel, k_tile, v_tile, scores, m, l, out,
-    );
+    past_tiles_contig(q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, cache, hsel, ts, out);
 
+    let TaskScratch { scores, m, l, .. } = ts;
     self_tiles_and_finalize(
         q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, k_self, v_self, scale, scores, m, l, out,
     );
@@ -557,7 +751,8 @@ fn group_block_attention(
 /// The selected-past tile loop over a **contiguous** cache: gather each
 /// tile's K/V rows into contiguous scratch (a full selection streams the
 /// head slab in place) and fold it into the online-softmax state. Shared
-/// by [`chunk_attention`] tasks and the batched decode kernel.
+/// by [`chunk_attention`] tasks and the batched decode kernel. Int8
+/// caches route to the quantized twin ([`past_tiles_contig_q8`]).
 #[allow(clippy::too_many_arguments)]
 fn past_tiles_contig(
     q: &[f32],
@@ -571,19 +766,19 @@ fn past_tiles_contig(
     q_hi: usize,
     cache: &KvBuffers,
     hsel: HeadSel,
-    k_tile: &mut Vec<f32>,
-    v_tile: &mut Vec<f32>,
-    scores: &mut [f32],
-    m: &mut [f32],
-    l: &mut [f32],
+    ts: &mut TaskScratch,
     out: SyncPtr<f32>,
 ) {
+    if cache.dtype == KvDtype::Int8 {
+        return past_tiles_contig_q8(q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, cache, hsel, ts, out);
+    }
     let t = cache.t;
     let scale = 1.0 / (d as f32).sqrt();
     let n_past = hsel.len();
     let head_base = kv * cache.capacity * d;
     let khead = &cache.k[head_base..head_base + t * d];
     let vhead = &cache.v[head_base..head_base + t * d];
+    let TaskScratch { k_tile, v_tile, scores, m, l, .. } = ts;
 
     let mut tile_lo = 0;
     while tile_lo < n_past {
@@ -606,6 +801,71 @@ fn past_tiles_contig(
         };
         score_past_tile(
             q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, kt, vt, tn, scale, scores, m, l, out,
+        );
+        tile_lo = tile_hi;
+    }
+}
+
+/// [`past_tiles_contig`] over int8 storage: tiles are `(i8 codes, f32
+/// per-row scales)` pairs consumed directly by the `_q8` kernels — no
+/// fp32 copy of the cache rows is ever formed, sparse gathers move 1-byte
+/// codes plus one scale per row.
+#[allow(clippy::too_many_arguments)]
+fn past_tiles_contig_q8(
+    q: &[f32],
+    s: usize,
+    d: usize,
+    g: usize,
+    kv: usize,
+    gq_lo: usize,
+    gq_hi: usize,
+    q_lo: usize,
+    q_hi: usize,
+    cache: &KvBuffers,
+    hsel: HeadSel,
+    ts: &mut TaskScratch,
+    out: SyncPtr<f32>,
+) {
+    let t = cache.t;
+    let scale = 1.0 / (d as f32).sqrt();
+    let n_past = hsel.len();
+    let head_base = kv * cache.capacity * d;
+    let khead = &cache.k_q[head_base..head_base + t * d];
+    let vhead = &cache.v_q[head_base..head_base + t * d];
+    let meta_base = kv * cache.capacity;
+    let kscales = &cache.k_scale[meta_base..meta_base + t];
+    let vscales = &cache.v_scale[meta_base..meta_base + t];
+    let TaskScratch { k_tile_q, v_tile_q, k_scale_tile, v_scale_tile, scores, m, l, .. } = ts;
+
+    let mut tile_lo = 0;
+    while tile_lo < n_past {
+        let tile_hi = (tile_lo + KTILE).min(n_past);
+        let tn = tile_hi - tile_lo;
+        let (kt, ksc, vt, vsc): (&[i8], &[f32], &[i8], &[f32]) = match hsel {
+            HeadSel::All(_) => (
+                &khead[tile_lo * d..tile_hi * d],
+                &kscales[tile_lo..tile_hi],
+                &vhead[tile_lo * d..tile_hi * d],
+                &vscales[tile_lo..tile_hi],
+            ),
+            HeadSel::Idx(idx) => {
+                let kt = fit_i8(k_tile_q, KTILE * d);
+                let vt = fit_i8(v_tile_q, KTILE * d);
+                let ksc = fit(k_scale_tile, KTILE);
+                let vsc = fit(v_scale_tile, KTILE);
+                for (o, &pi) in idx[tile_lo..tile_hi].iter().enumerate() {
+                    let src = pi as usize * d;
+                    kt[o * d..(o + 1) * d].copy_from_slice(&khead[src..src + d]);
+                    vt[o * d..(o + 1) * d].copy_from_slice(&vhead[src..src + d]);
+                    ksc[o] = kscales[pi as usize];
+                    vsc[o] = vscales[pi as usize];
+                }
+                (&kt[..tn * d], &ksc[..tn], &vt[..tn * d], &vsc[..tn])
+            }
+        };
+        score_past_tile_q8(
+            q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, kt, ksc, vt, vsc, tn, scale, scores, m, l,
+            out,
         );
         tile_lo = tile_hi;
     }
@@ -637,13 +897,11 @@ fn group_block_attention_paged(
     let t = paged.t;
     let scale = 1.0 / (d as f32).sqrt();
     task_init(ts, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, out);
-    let TaskScratch { k_tile, v_tile, scores, m, l } = ts;
 
     let hsel = sel.head(kv, t);
-    past_tiles_paged(
-        q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, paged, hsel, k_tile, v_tile, scores, m, l, out,
-    );
+    past_tiles_paged(q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, paged, hsel, ts, out);
 
+    let TaskScratch { scores, m, l, .. } = ts;
     self_tiles_and_finalize(
         q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, k_self, v_self, scale, scores, m, l, out,
     );
@@ -653,7 +911,8 @@ fn group_block_attention_paged(
 /// stream each page's (contiguous) head-row run in place — no gather;
 /// sparse selections gather rows through the page indirection exactly like
 /// the contiguous kernel gathers through the head slab. Shared by
-/// [`paged_chunk_attention`] tasks and the batched decode kernel.
+/// [`paged_chunk_attention`] tasks and the batched decode kernel. Int8
+/// pools route to the quantized twin ([`past_tiles_paged_q8`]).
 #[allow(clippy::too_many_arguments)]
 fn past_tiles_paged(
     q: &[f32],
@@ -667,15 +926,15 @@ fn past_tiles_paged(
     q_hi: usize,
     paged: &PagedKv,
     hsel: HeadSel,
-    k_tile: &mut Vec<f32>,
-    v_tile: &mut Vec<f32>,
-    scores: &mut [f32],
-    m: &mut [f32],
-    l: &mut [f32],
+    ts: &mut TaskScratch,
     out: SyncPtr<f32>,
 ) {
+    if paged.dtype == KvDtype::Int8 {
+        return past_tiles_paged_q8(q, s, d, g, kv, gq_lo, gq_hi, q_lo, q_hi, paged, hsel, ts, out);
+    }
     let t = paged.t;
     let scale = 1.0 / (d as f32).sqrt();
+    let TaskScratch { k_tile, v_tile, scores, m, l, .. } = ts;
     match hsel {
         HeadSel::All(_) => {
             let bt = paged.block_tokens;
@@ -732,6 +991,108 @@ fn past_tiles_paged(
     }
 }
 
+/// [`past_tiles_paged`] over an int8 pool: full selections stream each
+/// page's code run plus the matching per-row scale run in place; sparse
+/// selections gather codes through the page indirection and scales
+/// through the page-metadata slot.
+#[allow(clippy::too_many_arguments)]
+fn past_tiles_paged_q8(
+    q: &[f32],
+    s: usize,
+    d: usize,
+    g: usize,
+    kv: usize,
+    gq_lo: usize,
+    gq_hi: usize,
+    q_lo: usize,
+    q_hi: usize,
+    paged: &PagedKv,
+    hsel: HeadSel,
+    ts: &mut TaskScratch,
+    out: SyncPtr<f32>,
+) {
+    let t = paged.t;
+    let scale = 1.0 / (d as f32).sqrt();
+    let TaskScratch { k_tile_q, v_tile_q, k_scale_tile, v_scale_tile, scores, m, l, .. } = ts;
+    match hsel {
+        HeadSel::All(_) => {
+            let bt = paged.block_tokens;
+            let mut pos = 0;
+            while pos < t {
+                let slot = pos % bt;
+                let page = paged.blocks[pos / bt] as usize;
+                let tn = (bt - slot).min(t - pos).min(KTILE);
+                let meta = (page * paged.n_kv + kv) * bt + slot;
+                let base = meta * d;
+                score_past_tile_q8(
+                    q,
+                    s,
+                    d,
+                    g,
+                    kv,
+                    gq_lo,
+                    gq_hi,
+                    q_lo,
+                    q_hi,
+                    &paged.kq[base..base + tn * d],
+                    &paged.k_scale[meta..meta + tn],
+                    &paged.vq[base..base + tn * d],
+                    &paged.v_scale[meta..meta + tn],
+                    tn,
+                    scale,
+                    scores,
+                    m,
+                    l,
+                    out,
+                );
+                pos += tn;
+            }
+        }
+        HeadSel::Idx(idx) => {
+            let n_past = idx.len();
+            let mut tile_lo = 0;
+            while tile_lo < n_past {
+                let tile_hi = (tile_lo + KTILE).min(n_past);
+                let tn = tile_hi - tile_lo;
+                let kt = fit_i8(k_tile_q, KTILE * d);
+                let vt = fit_i8(v_tile_q, KTILE * d);
+                let ksc = fit(k_scale_tile, KTILE);
+                let vsc = fit(v_scale_tile, KTILE);
+                for (o, &pi) in idx[tile_lo..tile_hi].iter().enumerate() {
+                    let src = paged.row_base(kv, pi as usize);
+                    let meta = paged.meta_base(kv, pi as usize);
+                    kt[o * d..(o + 1) * d].copy_from_slice(&paged.kq[src..src + d]);
+                    vt[o * d..(o + 1) * d].copy_from_slice(&paged.vq[src..src + d]);
+                    ksc[o] = paged.k_scale[meta];
+                    vsc[o] = paged.v_scale[meta];
+                }
+                score_past_tile_q8(
+                    q,
+                    s,
+                    d,
+                    g,
+                    kv,
+                    gq_lo,
+                    gq_hi,
+                    q_lo,
+                    q_hi,
+                    &kt[..tn * d],
+                    &ksc[..tn],
+                    &vt[..tn * d],
+                    &vsc[..tn],
+                    tn,
+                    scale,
+                    scores,
+                    m,
+                    l,
+                    out,
+                );
+                tile_lo = tile_hi;
+            }
+        }
+    }
+}
+
 /// Flash-style online softmax: fold one tile of (already scaled) logits
 /// and its V rows into the running `(max, denominator, unnormalized
 /// output)` state for a single query row.
@@ -769,6 +1130,48 @@ fn online_softmax_update(
     }
     *l += sum;
     av_accum(&logits[..n], v_tile, n, d, acc);
+    *m = new_m;
+}
+
+/// [`online_softmax_update`] over an int8 V tile: identical max /
+/// rescale / exponentiation, with the accumulation consuming the value
+/// codes + per-row scales directly ([`av_accum_q8`]).
+#[allow(clippy::too_many_arguments)]
+fn online_softmax_update_q8(
+    logits: &mut [f32],
+    v_codes: &[i8],
+    v_scales: &[f32],
+    n: usize,
+    d: usize,
+    m: &mut f32,
+    l: &mut f32,
+    acc: &mut [f32],
+) {
+    if n == 0 {
+        return;
+    }
+    let mut tile_max = f32::NEG_INFINITY;
+    for &v in logits[..n].iter() {
+        if v > tile_max {
+            tile_max = v;
+        }
+    }
+    let new_m = if *m > tile_max { *m } else { tile_max };
+    if *l > 0.0 && new_m > *m {
+        // Rescale previously accumulated mass to the new max.
+        let corr = (*m - new_m).exp();
+        *l *= corr;
+        for v in acc.iter_mut() {
+            *v *= corr;
+        }
+    }
+    let mut sum = 0.0;
+    for v in logits[..n].iter_mut() {
+        *v = (*v - new_m).exp();
+        sum += *v;
+    }
+    *l += sum;
+    av_accum_q8(&logits[..n], v_codes, v_scales, n, d, acc);
     *m = new_m;
 }
 
@@ -879,18 +1282,16 @@ pub fn batched_decode_attention(
             let (seq_kv, sel) = &seqs[b];
             let t = seq_kv.t();
             task_init(ts, bsz, d, g, kv, gq_lo, gq_hi, b, b + 1, out_ptr);
-            let TaskScratch { k_tile, v_tile, scores, m, l } = &mut *ts;
             let hsel = sel.head(kv, t);
             match seq_kv {
                 SeqKv::Contig(cache) => past_tiles_contig(
-                    q, bsz, d, g, kv, gq_lo, gq_hi, b, b + 1, cache, hsel, k_tile, v_tile,
-                    scores, m, l, out_ptr,
+                    q, bsz, d, g, kv, gq_lo, gq_hi, b, b + 1, cache, hsel, ts, out_ptr,
                 ),
                 SeqKv::Paged(paged) => past_tiles_paged(
-                    q, bsz, d, g, kv, gq_lo, gq_hi, b, b + 1, paged, hsel, k_tile, v_tile,
-                    scores, m, l, out_ptr,
+                    q, bsz, d, g, kv, gq_lo, gq_hi, b, b + 1, paged, hsel, ts, out_ptr,
                 ),
             }
+            let TaskScratch { scores, m, l, .. } = &mut *ts;
             self_single_and_finalize(
                 q, bsz, d, g, kv, gq_lo, gq_hi, b, k_self, v_self, scores, m, l, out_ptr,
             );
@@ -1336,5 +1737,82 @@ mod tests {
         chunk_attention(&q, n_q, s, d, &ks, &vs, &cache, &sel, &mut scratch, &mut a);
         reference_chunk_attention(&q, n_q, s, d, &ks, &vs, &cache, &sel, &mut b);
         assert!(crate::tensor::ops::rel_l2(&a, &b) < 1e-5);
+    }
+
+    #[test]
+    fn int8_cache_tracks_f32_attention_within_quant_tolerance() {
+        // Full matrix (paged, GQA, odd shapes) in rust/tests/attn_parity.rs.
+        let (t, s, n_q, n_kv, d) = (40usize, 5usize, 4usize, 2usize, 16usize);
+        let mut rng = Rng::new(91);
+        let q = rng.normal_vec(n_q * s * d, 1.0);
+        let ks = rng.normal_vec(n_kv * s * d, 1.0);
+        let vs = rng.normal_vec(n_kv * s * d, 1.0);
+        let mut f32c = KvBuffers::new(n_kv, d, 4);
+        let mut q8c = KvBuffers::new_with_dtype(n_kv, d, 4, KvDtype::Int8);
+        let mut filled = 0;
+        while filled < t {
+            let step = (t - filled).min(7);
+            let kk = rng.normal_vec(n_kv * step * d, 1.0);
+            let vv = rng.normal_vec(n_kv * step * d, 1.0);
+            f32c.append(&kk, &vv, step);
+            q8c.append(&kk, &vv, step);
+            filled += step;
+        }
+        assert!(q8c.resident_bytes() < f32c.resident_bytes());
+        let sels = [
+            Selection::All,
+            Selection::PerHead(vec![vec![0, 3, 7, 21, 39], vec![2, 5, 11, 30]]),
+        ];
+        let mut scratch = AttnScratch::new();
+        for sel in &sels {
+            let mut a = vec![0.0; n_q * s * d];
+            let mut b = vec![0.0; n_q * s * d];
+            chunk_attention(&q, n_q, s, d, &ks, &vs, &f32c, sel, &mut scratch, &mut a);
+            chunk_attention(&q, n_q, s, d, &ks, &vs, &q8c, sel, &mut scratch, &mut b);
+            let e = crate::tensor::ops::rel_l2(&b, &a);
+            assert!(e < 1e-2, "int8 drifted from f32: rel_l2 {e}");
+            assert!(e > 0.0, "int8 path suspiciously bit-exact (not routed through q8?)");
+        }
+    }
+
+    #[test]
+    fn int8_truncate_matches_never_appended_metadata() {
+        let mut rng = Rng::new(29);
+        let (n_kv, d) = (2usize, 8usize);
+        let (base, draft, keep) = (5usize, 3usize, 1usize);
+        let kb = rng.normal_vec(n_kv * base * d, 1.0);
+        let vb = rng.normal_vec(n_kv * base * d, 1.0);
+        let kd = rng.normal_vec(n_kv * draft * d, 1.0);
+        let vd = rng.normal_vec(n_kv * draft * d, 1.0);
+        let mut spec = KvBuffers::new_with_dtype(n_kv, d, 2, KvDtype::Int8);
+        spec.append(&kb, &vb, base);
+        spec.append(&kd, &vd, draft);
+        spec.truncate(base + keep);
+        let head = |s: &[f32]| -> Vec<f32> {
+            (0..n_kv).flat_map(|h| s[h * draft * d..(h * draft + keep) * d].to_vec()).collect()
+        };
+        let mut want = KvBuffers::new_with_dtype(n_kv, d, 2, KvDtype::Int8);
+        want.append(&kb, &vb, base);
+        want.append(&head(&kd), &head(&vd), keep);
+        assert_eq!(spec.t, want.t);
+        for h in 0..n_kv {
+            for i in 0..spec.t {
+                let (sb, wb) = (h * spec.capacity, h * want.capacity);
+                assert_eq!(
+                    &spec.k_q[(sb + i) * d..(sb + i + 1) * d],
+                    &want.k_q[(wb + i) * d..(wb + i + 1) * d],
+                    "codes ({h},{i})"
+                );
+                assert_eq!(spec.k_scale[sb + i].to_bits(), want.k_scale[wb + i].to_bits());
+                assert_eq!(spec.v_scale[sb + i].to_bits(), want.v_scale[wb + i].to_bits());
+                assert_eq!(spec.k_inv_norm[sb + i].to_bits(), want.k_inv_norm[wb + i].to_bits());
+            }
+            // Dropped rows' scales and norms are zeroed (dead rows).
+            for i in spec.t..base + draft {
+                let sb = h * spec.capacity;
+                assert_eq!(spec.k_scale[sb + i], 0.0, "stale k scale ({h},{i})");
+                assert_eq!(spec.v_scale[sb + i], 0.0, "stale v scale ({h},{i})");
+            }
+        }
     }
 }

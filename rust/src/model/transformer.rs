@@ -12,7 +12,7 @@ use super::attention::{
 };
 use super::config::ModelConfig;
 use super::weights::{LayerWeights, Weights};
-use crate::kvpool::KvPool;
+use crate::kvpool::{KvDtype, KvPool};
 use crate::select::{fit, QChunk, SelectCtx, Selection, SelectionPolicy};
 use crate::tensor::matmul::{matmul, matmul_bt_argmax};
 use crate::tensor::ops::{rmsnorm, silu, RopeTable};
@@ -26,9 +26,15 @@ pub struct SeqState {
 
 impl SeqState {
     pub fn new(cfg: &ModelConfig) -> SeqState {
+        SeqState::new_with_dtype(cfg, KvDtype::F32)
+    }
+
+    /// [`SeqState::new`] with an explicit KV element type (the engine
+    /// passes its `--kv-dtype` here; int8 states store quantized pages).
+    pub fn new_with_dtype(cfg: &ModelConfig, dtype: KvDtype) -> SeqState {
         SeqState {
             caches: (0..cfg.n_layers)
-                .map(|_| KvBuffers::new(cfg.n_kv_heads, cfg.d_head, 256))
+                .map(|_| KvBuffers::new_with_dtype(cfg.n_kv_heads, cfg.d_head, 256, dtype))
                 .collect(),
             pos: 0,
         }

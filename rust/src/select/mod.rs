@@ -72,6 +72,18 @@ pub struct Pages<'a> {
     pub key_sums: &'a [f32],
 }
 
+/// Quantized key rows riding a [`KCache`]: int8 codes in the same layout
+/// as the cache's f32 `data` slab, with per-row fp32 dequant scales laid
+/// out like the inverse norms (`[n_heads, capacity]` contiguous,
+/// `[page, n_heads, block_tokens]` paged). When present, the cache's f32
+/// `data` slab is empty — scans must consume the codes directly
+/// (`qk_block_q8` and friends) instead of calling [`KCache::key`].
+#[derive(Clone, Copy)]
+pub struct QuantKeys<'a> {
+    pub codes: &'a [i8],
+    pub scales: &'a [f32],
+}
+
 /// Key-cache view for one layer.
 ///
 /// Contiguous form (`pages == None`): layout `[n_heads, capacity, d]` with
@@ -80,6 +92,11 @@ pub struct Pages<'a> {
 /// d]` and rows are resolved through the block table; `head()` has no
 /// contiguous slab in this form and must not be called (the engine only
 /// routes block-table-aware policies at paged caches).
+///
+/// Quantized form (`quant == Some`): the key payload is int8 with per-row
+/// scales and `data` is empty; only policies with quantization-aware scans
+/// (dense, QUOKA) are routed at such caches — the engine gates the rest at
+/// submit time.
 #[derive(Clone, Copy)]
 pub struct KCache<'a> {
     pub data: &'a [f32],
@@ -93,16 +110,24 @@ pub struct KCache<'a> {
     /// (contiguous) or `[page, n_heads, block_tokens]` (paged), maintained
     /// incrementally at append time. `None` — e.g. for ad-hoc views built
     /// from raw slices — falls back to recomputing norms on demand.
+    ///
+    /// Always computed from the *original* fp32 key row, so norm-based
+    /// scoring stays exact even when the stored rows are quantized.
     pub inv_norms: Option<&'a [f32]>,
     /// Block-table indirection; `None` for contiguous caches.
     pub pages: Option<Pages<'a>>,
+    /// Int8 key codes + per-row scales; `None` for f32 caches.
+    pub quant: Option<QuantKeys<'a>>,
 }
 
 impl<'a> KCache<'a> {
     pub fn new(data: &'a [f32], n_heads: usize, t: usize, capacity: usize, d: usize) -> Self {
         debug_assert!(t <= capacity);
-        debug_assert_eq!(data.len(), n_heads * capacity * d);
-        KCache { data, n_heads, t, capacity, d, inv_norms: None, pages: None }
+        debug_assert!(
+            data.len() == n_heads * capacity * d || data.is_empty(),
+            "KCache data slab must match the geometry (or be empty for a quantized cache)"
+        );
+        KCache { data, n_heads, t, capacity, d, inv_norms: None, pages: None, quant: None }
     }
 
     /// View with an incremental norm cache (layout `[n_heads, capacity]`).
@@ -137,7 +162,15 @@ impl<'a> KCache<'a> {
             d,
             inv_norms: Some(inv_norms),
             pages: Some(pages),
+            quant: None,
         }
+    }
+
+    /// Attach int8 key codes + per-row dequant scales (layouts mirroring
+    /// `data` / `inv_norms`). The f32 `data` slab of a quantized cache is
+    /// empty by construction — no fp32 copy of the cache exists.
+    pub fn with_quant(self, codes: &'a [i8], scales: &'a [f32]) -> Self {
+        KCache { quant: Some(QuantKeys { codes, scales }), ..self }
     }
 
     /// `1 / ‖key(h, i)‖` (0 for a zero key): one load when the cache view
@@ -170,13 +203,20 @@ impl<'a> KCache<'a> {
             "KCache::head: paged cache has no contiguous head slab \
              (route block-table-aware policies instead)"
         );
+        assert!(
+            self.quant.is_none(),
+            "KCache::head: quantized cache has no f32 key slab \
+             (use the int8 codes + scales via `quant`)"
+        );
         let n = self.capacity * self.d;
         &self.data[h * n..(h + 1) * n]
     }
 
-    /// Key row `(h, i)`.
+    /// Key row `(h, i)`. F32 caches only — a quantized cache's f32 slab is
+    /// empty (the engine routes only quantization-aware policies there).
     #[inline]
     pub fn key(&self, h: usize, i: usize) -> &'a [f32] {
+        debug_assert!(self.quant.is_none(), "KCache::key: f32 key row of a quantized cache");
         let base = match self.pages {
             None => h * self.capacity * self.d + i * self.d,
             Some(p) => {

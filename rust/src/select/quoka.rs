@@ -22,7 +22,7 @@ use super::{
     fit, group_size, topk_ascending_into, KCache, Pages, QChunk, Scratch, SelectCtx, Selection,
     SelectionPolicy,
 };
-use crate::tensor::ops::{dot, l2_norm, mean_rows, qk_block, topk_indices_into};
+use crate::tensor::ops::{dot, l2_norm, mean_rows, qk_block, qk_block_q8, topk_indices_into};
 use crate::util::threadpool::SyncPtr;
 
 /// Key rows per scan tile: the `[n_q_eff, SCAN_TILE]` score block stays
@@ -204,11 +204,28 @@ impl Quoka {
             let tn = (t - lo).min(bt);
             let page = pg.blocks[j] as usize;
             // Per-page head rows are contiguous: tile the micro-kernel
-            // straight over the page, no gather.
+            // straight over the page, no gather. Quantized pages are scored
+            // through the int8 kernel — codes dequantize in registers, the
+            // page streams at one byte per element.
             let base = (page * n_kv + kv) * bt * d;
-            let krows = &k.data[base..base + tn * d];
             let blk = &mut blk_arena[..n_q_eff * tn];
-            qk_block(qbar, n_q_eff, krows, tn, d, blk);
+            match k.quant {
+                None => {
+                    qk_block(qbar, n_q_eff, &k.data[base..base + tn * d], tn, d, blk);
+                }
+                Some(qk) => {
+                    let mb = (page * n_kv + kv) * bt;
+                    qk_block_q8(
+                        qbar,
+                        n_q_eff,
+                        &qk.codes[base..base + tn * d],
+                        &qk.scales[mb..mb + tn],
+                        tn,
+                        d,
+                        blk,
+                    );
+                }
+            }
             for jj in 0..tn {
                 // kinv >= 0, so scaling commutes with max/mean.
                 let kinv = match self.cfg.scoring {
@@ -238,8 +255,9 @@ impl Quoka {
             scanned += tn;
         }
         debug_assert!(scanned >= budget.min(t), "descend set must cover the budget");
+        let key_bytes = if k.quant.is_some() { d + 4 } else { d * 4 };
         cost.add_flops((scanned * n_q_eff * 2 * d) as u64);
-        cost.add_bytes((scanned * d * 4) as u64);
+        cost.add_bytes((scanned * key_bytes) as u64);
         cost.add_skipped_keys((t - scanned) as u64);
 
         topk_ascending_into(&scores[..t], budget, idx)
@@ -327,7 +345,19 @@ impl SelectionPolicy for Quoka {
             // own disjoint tile ranges plus a per-worker score block from
             // the scratch arena (§Perf: the scan is the selection's only
             // O(T) term).
-            let khead = k.head(kv);
+            let capacity = k.capacity;
+            let (khead, kq) = match k.quant {
+                None => (k.head(kv), None),
+                // Quantized cache: scan the int8 code slab of this head with
+                // its per-row scales — there is no f32 slab to walk.
+                Some(qk) => (
+                    &[][..],
+                    Some((
+                        &qk.codes[kv * capacity * d..(kv + 1) * capacity * d],
+                        &qk.scales[kv * capacity..(kv + 1) * capacity],
+                    )),
+                ),
+            };
             let cost = &mut ctx.cost;
             let Scratch { a, b, idx, workers, .. } = &mut ctx.scratch;
             let scores = fit(a, t);
@@ -361,7 +391,18 @@ impl SelectionPolicy for Quoka {
                     let hi = (lo + SCAN_TILE).min(t);
                     let tn = hi - lo;
                     let blk = &mut blk_arena[..n_q_eff * tn];
-                    qk_block(qbar, n_q_eff, &khead[lo * d..hi * d], tn, d, blk);
+                    match kq {
+                        None => qk_block(qbar, n_q_eff, &khead[lo * d..hi * d], tn, d, blk),
+                        Some((codes, scales)) => qk_block_q8(
+                            qbar,
+                            n_q_eff,
+                            &codes[lo * d..hi * d],
+                            &scales[lo..hi],
+                            tn,
+                            d,
+                            blk,
+                        ),
+                    }
                     let out = unsafe { std::slice::from_raw_parts_mut(sp.get().add(lo), tn) };
                     for (o, j) in out.iter_mut().zip(0..tn) {
                         // kinv >= 0, so scaling commutes with max/mean.
@@ -391,8 +432,9 @@ impl SelectionPolicy for Quoka {
                     }
                 }
             });
+            let key_bytes = if k.quant.is_some() { d + 4 } else { d * 4 };
             cost.add_flops((t * n_q_eff * 2 * d) as u64);
-            cost.add_bytes((t * d * 4) as u64);
+            cost.add_bytes((t * key_bytes) as u64);
 
             per_head.push(topk_ascending_into(&scores[..t], budget, idx));
         }

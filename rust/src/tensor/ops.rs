@@ -23,11 +23,232 @@
 //! Keys are gathered into contiguous tiles *before* these kernels run, so
 //! every inner loop walks sequential memory — the Double-Sparsity-style
 //! layout that unlocks hardware bandwidth on sparse KV subsets.
+//!
+//! ## Explicit SIMD + int8 KV kernels
+//!
+//! The f32 micro-kernels ([`dot`], [`dot4`]) and their int8 counterparts
+//! ([`qk_dots_q8`], [`qk_block_q8`], [`av_accum_q8`]) carry explicit AVX2
+//! paths (`target_feature` intrinsics behind a runtime
+//! `is_x86_feature_detected!` check, cached once) with the scalar
+//! register-blocked loops as the portable fallback. The AVX2 f32 paths
+//! reproduce the scalar lane structure exactly — same 8 independent
+//! mul-then-add lanes (no FMA), same horizontal-sum tree — so dispatch
+//! never changes results: fp32 numerics are bit-identical with and
+//! without AVX2.
+//!
+//! Int8 KV rows are quantized per row ([`quantize_row_q8`]): symmetric
+//! `scale = amax / 127`, codes `round(x / scale)`. The q8 kernels
+//! dequantize *in registers* — `q · (c · s) = s · (q · c)` — so the cache
+//! streams at 1 byte/element and no fp32 copy of a tile is ever
+//! materialized.
+
+/// Runtime AVX2 capability, probed once.
+#[inline]
+fn avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static HAS: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *HAS.get_or_init(|| std::is_x86_feature_detected!("avx2"))
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// AVX2 implementations. Every function mirrors its scalar sibling's lane
+/// structure bit-exactly for f32 inputs: one vector register per scalar
+/// 8-lane accumulator block, plain mul-then-add (no FMA — FMA's single
+/// rounding would diverge from the scalar two-rounding result), and the
+/// identical horizontal-sum tree via [`hsum8`].
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    #[inline]
+    unsafe fn store8(v: __m256) -> [f32; 8] {
+        let mut out = [0f32; 8];
+        _mm256_storeu_ps(out.as_mut_ptr(), v);
+        out
+    }
+
+    /// Sign-extend 8 i8 codes to an 8-lane f32 vector (exact conversion).
+    #[inline]
+    unsafe fn load8_i8(p: *const i8) -> __m256 {
+        let raw = _mm_loadl_epi64(p as *const __m128i);
+        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(raw))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let j = i * 8;
+            let av = _mm256_loadu_ps(a.as_ptr().add(j));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+        }
+        let mut s = super::hsum8(store8(acc));
+        for j in chunks * 8..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot4(q: &[f32], k0: &[f32], k1: &[f32], k2: &[f32], k3: &[f32]) -> [f32; 4] {
+        let n = q.len();
+        let chunks = n / 8;
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let j = c * 8;
+            let qv = _mm256_loadu_ps(q.as_ptr().add(j));
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(qv, _mm256_loadu_ps(k0.as_ptr().add(j))));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(qv, _mm256_loadu_ps(k1.as_ptr().add(j))));
+            a2 = _mm256_add_ps(a2, _mm256_mul_ps(qv, _mm256_loadu_ps(k2.as_ptr().add(j))));
+            a3 = _mm256_add_ps(a3, _mm256_mul_ps(qv, _mm256_loadu_ps(k3.as_ptr().add(j))));
+        }
+        let mut out = [
+            super::hsum8(store8(a0)),
+            super::hsum8(store8(a1)),
+            super::hsum8(store8(a2)),
+            super::hsum8(store8(a3)),
+        ];
+        for j in chunks * 8..n {
+            out[0] += q[j] * k0[j];
+            out[1] += q[j] * k1[j];
+            out[2] += q[j] * k2[j];
+            out[3] += q[j] * k3[j];
+        }
+        out
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn dot2x4(
+        q0: &[f32],
+        q1: &[f32],
+        k0: &[f32],
+        k1: &[f32],
+        k2: &[f32],
+        k3: &[f32],
+    ) -> [f32; 8] {
+        let n = q0.len();
+        let chunks = n / 4;
+        let mut acc = [_mm_setzero_ps(); 8];
+        for c in 0..chunks {
+            let j = c * 4;
+            let q0v = _mm_loadu_ps(q0.as_ptr().add(j));
+            let q1v = _mm_loadu_ps(q1.as_ptr().add(j));
+            let ks = [
+                k0.as_ptr().add(j),
+                k1.as_ptr().add(j),
+                k2.as_ptr().add(j),
+                k3.as_ptr().add(j),
+            ];
+            for (ki, &kp) in ks.iter().enumerate() {
+                let kv = _mm_loadu_ps(kp);
+                acc[ki] = _mm_add_ps(acc[ki], _mm_mul_ps(q0v, kv));
+                acc[4 + ki] = _mm_add_ps(acc[4 + ki], _mm_mul_ps(q1v, kv));
+            }
+        }
+        let mut out = [0f32; 8];
+        for (o, a) in out.iter_mut().zip(acc.iter()) {
+            let mut t = [0f32; 4];
+            _mm_storeu_ps(t.as_mut_ptr(), *a);
+            *o = (t[0] + t[1]) + (t[2] + t[3]);
+        }
+        for j in chunks * 4..n {
+            let ks = [k0, k1, k2, k3];
+            for (ki, kk) in ks.iter().enumerate() {
+                out[ki] += q0[j] * kk[j];
+                out[4 + ki] += q1[j] * kk[j];
+            }
+        }
+        out
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_q8(q: &[f32], c: &[i8]) -> f32 {
+        let n = q.len();
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let j = i * 8;
+            let qv = _mm256_loadu_ps(q.as_ptr().add(j));
+            let cv = load8_i8(c.as_ptr().add(j));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(qv, cv));
+        }
+        let mut s = super::hsum8(store8(acc));
+        for j in chunks * 8..n {
+            s += q[j] * c[j] as f32;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot4_q8(q: &[f32], c0: &[i8], c1: &[i8], c2: &[i8], c3: &[i8]) -> [f32; 4] {
+        let n = q.len();
+        let chunks = n / 8;
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let j = c * 8;
+            let qv = _mm256_loadu_ps(q.as_ptr().add(j));
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(qv, load8_i8(c0.as_ptr().add(j))));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(qv, load8_i8(c1.as_ptr().add(j))));
+            a2 = _mm256_add_ps(a2, _mm256_mul_ps(qv, load8_i8(c2.as_ptr().add(j))));
+            a3 = _mm256_add_ps(a3, _mm256_mul_ps(qv, load8_i8(c3.as_ptr().add(j))));
+        }
+        let mut out = [
+            super::hsum8(store8(a0)),
+            super::hsum8(store8(a1)),
+            super::hsum8(store8(a2)),
+            super::hsum8(store8(a3)),
+        ];
+        for j in chunks * 8..n {
+            out[0] += q[j] * c0[j] as f32;
+            out[1] += q[j] * c1[j] as f32;
+            out[2] += q[j] * c2[j] as f32;
+            out[3] += q[j] * c3[j] as f32;
+        }
+        out
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_q8(alpha: f32, x: &[i8], y: &mut [f32]) {
+        let n = y.len();
+        let chunks = n / 8;
+        let av = _mm256_set1_ps(alpha);
+        for i in 0..chunks {
+            let j = i * 8;
+            let xv = load8_i8(x.as_ptr().add(j));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(j));
+            _mm256_storeu_ps(y.as_mut_ptr().add(j), _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+        }
+        for j in chunks * 8..n {
+            y[j] += alpha * x[j] as f32;
+        }
+    }
+}
 
 /// Dot product.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2() {
+        // SAFETY: AVX2 presence checked; bit-identical to the scalar loop.
+        return unsafe { x86::dot(a, b) };
+    }
     // 8 independent accumulators: strict-FP addition order otherwise
     // blocks autovectorization; 8 lanes map onto one AVX2 register (two
     // on AVX-512) and LLVM unrolls further on its own.
@@ -61,6 +282,11 @@ fn hsum8(a: [f32; 8]) -> f32 {
 pub fn dot4(q: &[f32], k0: &[f32], k1: &[f32], k2: &[f32], k3: &[f32]) -> [f32; 4] {
     let n = q.len();
     debug_assert!(k0.len() >= n && k1.len() >= n && k2.len() >= n && k3.len() >= n);
+    #[cfg(target_arch = "x86_64")]
+    if avx2() {
+        // SAFETY: AVX2 presence checked; bit-identical to the scalar loop.
+        return unsafe { x86::dot4(q, k0, k1, k2, k3) };
+    }
     let chunks = n / 8;
     let mut a0 = [0f32; 8];
     let mut a1 = [0f32; 8];
@@ -98,6 +324,11 @@ pub fn dot4(q: &[f32], k0: &[f32], k1: &[f32], k2: &[f32], k3: &[f32]) -> [f32; 
 #[allow(clippy::too_many_arguments)]
 fn dot2x4(q0: &[f32], q1: &[f32], k0: &[f32], k1: &[f32], k2: &[f32], k3: &[f32]) -> [f32; 8] {
     let n = q0.len();
+    #[cfg(target_arch = "x86_64")]
+    if avx2() {
+        // SAFETY: AVX2 presence checked; bit-identical to the scalar loop.
+        return unsafe { x86::dot2x4(q0, q1, k0, k1, k2, k3) };
+    }
     let chunks = n / 4;
     let mut acc = [[0f32; 4]; 8];
     for c in 0..chunks {
@@ -211,6 +442,190 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
     for (yi, xi) in y.iter_mut().zip(x) {
         *yi += alpha * xi;
+    }
+}
+
+/// Quantize one f32 row to symmetric int8: `scale = amax / 127`,
+/// `codes[i] = round(src[i] / scale)` clamped to `[-127, 127]`. A zero row
+/// yields scale 0 and all-zero codes. Returns the scale; dequantization is
+/// `codes[i] as f32 * scale` ([`dequant_row_q8`]). Deterministic and
+/// order-independent per row, so re-quantizing the same row always yields
+/// the same codes — the property the pool's bit-exact rollback relies on.
+pub fn quantize_row_q8(src: &[f32], codes: &mut [i8]) -> f32 {
+    debug_assert_eq!(src.len(), codes.len());
+    let mut amax = 0f32;
+    for &v in src {
+        amax = amax.max(v.abs());
+    }
+    if amax == 0.0 {
+        codes.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / amax;
+    for (c, &v) in codes.iter_mut().zip(src) {
+        *c = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    amax / 127.0
+}
+
+/// Dequantize one int8 row: `out[i] = codes[i] as f32 * scale`.
+#[inline]
+pub fn dequant_row_q8(codes: &[i8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = c as f32 * scale;
+    }
+}
+
+/// `q · codes` with the int8 codes sign-extended to f32 in registers; the
+/// caller applies the row's dequant scale to the result
+/// (`q · (c·s) = s · (q · c)`). Same 8-lane accumulator structure as
+/// [`dot`], so the scalar and AVX2 paths agree bit-exactly.
+#[inline]
+pub fn dot_q8(q: &[f32], c: &[i8]) -> f32 {
+    debug_assert_eq!(q.len(), c.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2() {
+        // SAFETY: AVX2 presence checked; bit-identical to the scalar loop.
+        return unsafe { x86::dot_q8(q, c) };
+    }
+    let n = q.len();
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    for i in 0..chunks {
+        let j = i * 8;
+        let (qv, cv) = (&q[j..j + 8], &c[j..j + 8]);
+        for l in 0..8 {
+            acc[l] += qv[l] * cv[l] as f32;
+        }
+    }
+    let mut s = hsum8(acc);
+    for j in chunks * 8..n {
+        s += q[j] * c[j] as f32;
+    }
+    s
+}
+
+/// Int8 sibling of [`dot4`]: one query row against four int8 key rows,
+/// widened to f32 lane-by-lane in registers.
+#[inline]
+fn dot4_q8(q: &[f32], c0: &[i8], c1: &[i8], c2: &[i8], c3: &[i8]) -> [f32; 4] {
+    let n = q.len();
+    debug_assert!(c0.len() >= n && c1.len() >= n && c2.len() >= n && c3.len() >= n);
+    #[cfg(target_arch = "x86_64")]
+    if avx2() {
+        // SAFETY: AVX2 presence checked; bit-identical to the scalar loop.
+        return unsafe { x86::dot4_q8(q, c0, c1, c2, c3) };
+    }
+    let chunks = n / 8;
+    let mut a0 = [0f32; 8];
+    let mut a1 = [0f32; 8];
+    let mut a2 = [0f32; 8];
+    let mut a3 = [0f32; 8];
+    for c in 0..chunks {
+        let j = c * 8;
+        let qv = &q[j..j + 8];
+        let c0v = &c0[j..j + 8];
+        let c1v = &c1[j..j + 8];
+        let c2v = &c2[j..j + 8];
+        let c3v = &c3[j..j + 8];
+        for l in 0..8 {
+            a0[l] += qv[l] * c0v[l] as f32;
+            a1[l] += qv[l] * c1v[l] as f32;
+            a2[l] += qv[l] * c2v[l] as f32;
+            a3[l] += qv[l] * c3v[l] as f32;
+        }
+    }
+    let mut out = [hsum8(a0), hsum8(a1), hsum8(a2), hsum8(a3)];
+    for j in chunks * 8..n {
+        out[0] += q[j] * c0[j] as f32;
+        out[1] += q[j] * c1[j] as f32;
+        out[2] += q[j] * c2[j] as f32;
+        out[3] += q[j] * c3[j] as f32;
+    }
+    out
+}
+
+/// One query against a contiguous int8 `[n, d]` key tile with per-row
+/// dequant scales: `out[j] = scales[j] · (q · codes_j)`. The dequant
+/// happens in registers — no fp32 copy of the tile is ever materialized,
+/// so the tile streams at one byte per element.
+pub fn qk_dots_q8(q: &[f32], codes: &[i8], scales: &[f32], n: usize, d: usize, out: &mut [f32]) {
+    debug_assert!(codes.len() >= n * d);
+    debug_assert!(scales.len() >= n);
+    debug_assert!(out.len() >= n);
+    let mut j = 0;
+    while j + 4 <= n {
+        let b = j * d;
+        let r = dot4_q8(
+            q,
+            &codes[b..b + d],
+            &codes[b + d..b + 2 * d],
+            &codes[b + 2 * d..b + 3 * d],
+            &codes[b + 3 * d..b + 4 * d],
+        );
+        for l in 0..4 {
+            out[j + l] = r[l] * scales[j + l];
+        }
+        j += 4;
+    }
+    while j < n {
+        out[j] = dot_q8(q, &codes[j * d..(j + 1) * d]) * scales[j];
+        j += 1;
+    }
+}
+
+/// `m×n` QKᵀ block over contiguous f32 query rows and an int8 `[n, d]`
+/// key tile with per-row dequant scales. Row-at-a-time over
+/// [`qk_dots_q8`]: the widening i8→f32 conversion of the key tile
+/// dominates the kernel, so the extra query-amortization of the f32 2×4
+/// blocking buys nothing here — and the bandwidth-bound int8 consumer
+/// (decode) runs `m = 1` anyway.
+pub fn qk_block_q8(
+    qs: &[f32],
+    m: usize,
+    codes: &[i8],
+    scales: &[f32],
+    n: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(qs.len() >= m * d);
+    debug_assert!(out.len() >= m * n);
+    for i in 0..m {
+        qk_dots_q8(&qs[i * d..(i + 1) * d], codes, scales, n, d, &mut out[i * n..i * n + n]);
+    }
+}
+
+/// `acc += Σ_j (w[j] · scales[j]) · codes[j·d..]` — probability-weighted
+/// accumulation of an int8 `[n, d]` V tile into one output row, folding
+/// each row's dequant scale into its softmax weight. Zero weights (masked
+/// or underflowed) and zero scales (zero rows) are skipped.
+pub fn av_accum_q8(w: &[f32], codes: &[i8], scales: &[f32], n: usize, d: usize, acc: &mut [f32]) {
+    debug_assert!(w.len() >= n);
+    debug_assert!(codes.len() >= n * d);
+    debug_assert!(scales.len() >= n);
+    debug_assert_eq!(acc.len(), d);
+    for j in 0..n {
+        let wj = w[j] * scales[j];
+        if wj != 0.0 {
+            axpy_q8(wj, &codes[j * d..(j + 1) * d], acc);
+        }
+    }
+}
+
+/// `y += alpha * (x as f32)` over an int8 row. Element-wise independent,
+/// so the scalar and AVX2 paths agree bit-exactly.
+#[inline]
+pub fn axpy_q8(alpha: f32, x: &[i8], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2() {
+        // SAFETY: AVX2 presence checked; bit-identical to the scalar loop.
+        return unsafe { x86::axpy_q8(alpha, x, y) };
+    }
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * *xi as f32;
     }
 }
 
@@ -465,6 +880,168 @@ mod tests {
                     assert!((blk[i * n + j] - want).abs() < 1e-4, "block ({i},{j})");
                     assert!((row[j] - want).abs() < 1e-4, "dots ({i},{j})");
                 }
+            }
+        }
+    }
+
+    /// Scalar 8-lane reference replicas of the dispatched kernels. The
+    /// public kernels may route through AVX2; these never do. Bit-equality
+    /// between the two proves dispatch does not change fp32 numerics.
+    fn scalar_dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = [0f32; 8];
+        for i in 0..chunks {
+            let j = i * 8;
+            for l in 0..8 {
+                acc[l] += a[j + l] * b[j + l];
+            }
+        }
+        let mut s = hsum8(acc);
+        for j in chunks * 8..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    fn scalar_dot_q8(q: &[f32], c: &[i8]) -> f32 {
+        let n = q.len();
+        let chunks = n / 8;
+        let mut acc = [0f32; 8];
+        for i in 0..chunks {
+            let j = i * 8;
+            for l in 0..8 {
+                acc[l] += q[j + l] * c[j + l] as f32;
+            }
+        }
+        let mut s = hsum8(acc);
+        for j in chunks * 8..n {
+            s += q[j] * c[j] as f32;
+        }
+        s
+    }
+
+    fn scalar_dot2x4_entry(q: &[f32], k: &[f32]) -> f32 {
+        // dot2x4's per-product structure: 4 lanes, tree (a0+a1)+(a2+a3).
+        let n = q.len();
+        let chunks = n / 4;
+        let mut acc = [0f32; 4];
+        for i in 0..chunks {
+            let j = i * 4;
+            for l in 0..4 {
+                acc[l] += q[j + l] * k[j + l];
+            }
+        }
+        let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+        for j in chunks * 4..n {
+            s += q[j] * k[j];
+        }
+        s
+    }
+
+    fn test_rows(m: usize, n: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+        let qs: Vec<f32> = (0..m * d).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.13).collect();
+        let ks: Vec<f32> = (0..n * d).map(|i| ((i * 53 % 23) as f32 - 11.0) * 0.07).collect();
+        (qs, ks)
+    }
+
+    #[test]
+    fn simd_dispatch_is_bit_identical_to_scalar_lanes() {
+        for &(m, n, d) in &[(1usize, 1usize, 3usize), (2, 4, 8), (3, 7, 13), (5, 9, 16), (4, 12, 31)] {
+            let (qs, ks) = test_rows(m, n, d);
+            let mut codes = vec![0i8; n * d];
+            let mut scales = vec![0f32; n];
+            for j in 0..n {
+                scales[j] = quantize_row_q8(&ks[j * d..(j + 1) * d], &mut codes[j * d..(j + 1) * d]);
+            }
+            // dot / dot4 (via qk_dots) against the 8-lane scalar replica.
+            let mut row = vec![0f32; n];
+            let mut row_q = vec![0f32; n];
+            let mut blk = vec![0f32; m * n];
+            let mut blk_q = vec![0f32; m * n];
+            qk_block(&qs, m, &ks, n, d, &mut blk);
+            qk_block_q8(&qs, m, &codes, &scales, n, d, &mut blk_q);
+            for i in 0..m {
+                let q = &qs[i * d..(i + 1) * d];
+                qk_dots(q, &ks, n, d, &mut row);
+                qk_dots_q8(q, &codes, &scales, n, d, &mut row_q);
+                for j in 0..n {
+                    let k = &ks[j * d..(j + 1) * d];
+                    let c = &codes[j * d..(j + 1) * d];
+                    assert_eq!(dot(q, k), scalar_dot(q, k), "dot ({i},{j})");
+                    assert_eq!(row[j], scalar_dot(q, k), "qk_dots ({i},{j})");
+                    assert_eq!(dot_q8(q, c), scalar_dot_q8(q, c), "dot_q8 ({i},{j})");
+                    assert_eq!(row_q[j], scalar_dot_q8(q, c) * scales[j], "qk_dots_q8 ({i},{j})");
+                    assert_eq!(blk_q[i * n + j], row_q[j], "qk_block_q8 ({i},{j})");
+                    // qk_block interior entries flow through dot2x4 (4-lane
+                    // structure); tails through dot/qk_dots (8-lane).
+                    let paired = i + 1 < m || m % 2 == 0;
+                    let want = if paired && j < n / 4 * 4 {
+                        scalar_dot2x4_entry(q, k)
+                    } else {
+                        scalar_dot(q, k)
+                    };
+                    assert_eq!(blk[i * n + j], want, "qk_block ({i},{j})");
+                }
+            }
+            // axpy_q8: element-wise, bit-identical to the scalar loop.
+            let mut acc = vec![0.5f32; d];
+            let mut acc_ref = acc.clone();
+            axpy_q8(0.37, &codes[..d], &mut acc);
+            for (y, &x) in acc_ref.iter_mut().zip(&codes[..d]) {
+                *y += 0.37 * x as f32;
+            }
+            assert_eq!(acc, acc_ref, "axpy_q8 ({m},{n},{d})");
+        }
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_is_half_step_bounded() {
+        let src: Vec<f32> = (0..64).map(|i| ((i * 73 % 41) as f32 - 20.0) * 0.31).collect();
+        let mut codes = vec![0i8; 64];
+        let scale = quantize_row_q8(&src, &mut codes);
+        let amax = src.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        assert!((scale - amax / 127.0).abs() < 1e-7);
+        let mut back = vec![0f32; 64];
+        dequant_row_q8(&codes, scale, &mut back);
+        for (x, y) in src.iter().zip(&back) {
+            // round-to-nearest: error ≤ half a quantization step
+            assert!((x - y).abs() <= scale * 0.5 + 1e-6, "{x} vs {y}");
+        }
+        // extremes hit ±127 exactly; zero rows quantize to scale 0
+        let idx = src.iter().position(|&v| v.abs() == amax).unwrap();
+        assert_eq!(codes[idx].unsigned_abs(), 127);
+        let mut zc = vec![1i8; 8];
+        assert_eq!(quantize_row_q8(&[0.0; 8], &mut zc), 0.0);
+        assert!(zc.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn q8_kernels_match_dequantized_reference() {
+        for &(m, n, d) in &[(1usize, 1usize, 3usize), (2, 4, 8), (3, 7, 13), (5, 9, 16), (4, 12, 31)] {
+            let (qs, ks) = test_rows(m, n, d);
+            let mut codes = vec![0i8; n * d];
+            let mut scales = vec![0f32; n];
+            let mut deq = vec![0f32; n * d];
+            for j in 0..n {
+                scales[j] = quantize_row_q8(&ks[j * d..(j + 1) * d], &mut codes[j * d..(j + 1) * d]);
+                dequant_row_q8(&codes[j * d..(j + 1) * d], scales[j], &mut deq[j * d..(j + 1) * d]);
+            }
+            let mut got = vec![0f32; m * n];
+            let mut want = vec![0f32; m * n];
+            qk_block_q8(&qs, m, &codes, &scales, n, d, &mut got);
+            qk_block(&qs, m, &deq, n, d, &mut want);
+            for (g, w) in got.iter().zip(&want) {
+                // same products up to fp32 associativity: s·(q·c) vs q·(c·s)
+                assert!((g - w).abs() < 1e-3, "qk ({m},{n},{d}): {g} vs {w}");
+            }
+            let w: Vec<f32> = (0..n).map(|j| if j == 1 { 0.0 } else { j as f32 * 0.09 }).collect();
+            let mut a = vec![0.25f32; d];
+            let mut b = a.clone();
+            av_accum_q8(&w, &codes, &scales, n, d, &mut a);
+            av_accum(&w, &deq, n, d, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-3, "av ({m},{n},{d}): {x} vs {y}");
             }
         }
     }

@@ -4,7 +4,7 @@
 //! property of the scratch arenas.
 
 use quoka::coordinator::BlockAllocator;
-use quoka::kvpool::{KvPool, PoolCfg};
+use quoka::kvpool::{KvDtype, KvPool, PoolCfg};
 use quoka::model::attention::{
     chunk_attention, decode_attention, paged_chunk_attention, reference_chunk_attention,
     AttnScratch, KvBuffers,
@@ -165,16 +165,24 @@ fn decode_matches_reference() {
 /// (shuffled-id) block table, chunked irregularly so page-boundary
 /// straddling appends are exercised.
 fn pool_mirror(cache: &KvBuffers, bt: usize) -> (KvPool, Vec<u32>, BlockAllocator) {
+    pool_mirror_dt(cache, bt, KvDtype::F32)
+}
+
+/// [`pool_mirror`] with an explicit pool element type; rows are always
+/// read from the fp32 `cache`, so an int8 pool quantizes at append
+/// exactly like production prefill does.
+fn pool_mirror_dt(
+    cache: &KvBuffers,
+    bt: usize,
+    dtype: KvDtype,
+) -> (KvPool, Vec<u32>, BlockAllocator) {
     let (n_kv, d, t) = (cache.n_kv, cache.d, cache.t);
     let total = (t.div_ceil(bt) + 3).max(4);
     let mut alloc = BlockAllocator::new(total, bt);
-    let mut pool = KvPool::new(PoolCfg {
-        n_layers: 1,
-        n_kv,
-        d,
-        block_tokens: bt,
-        total_blocks: total,
-    });
+    let mut pool = KvPool::new_with_dtype(
+        PoolCfg { n_layers: 1, n_kv, d, block_tokens: bt, total_blocks: total },
+        dtype,
+    );
     let mut blocks = Vec::new();
     assert!(alloc.ensure(&mut blocks, t.max(1)));
     pool.adopt_new(&blocks);
@@ -305,6 +313,112 @@ fn norm_cache_invariant_across_growth() {
     for h in 0..n_kv {
         for i in 0..cache.t {
             assert_eq!(view.inv_norm(h, i), cache.k_inv_norm[h * cache.capacity + i]);
+        }
+    }
+}
+
+// ------------------------------------------------------- int8 KV parity
+//
+// fp32 stays the parity oracle: the quantized cache must land within a
+// pinned rel-l2 of the exact kernel, and (for non-empty pasts) must be
+// measurably different — a zero error would mean the int8 tile path was
+// silently bypassed in favour of fp32 rows.
+
+const TOL_Q8: f32 = 1e-2;
+
+/// An int8 cache holding the same rows as the fp32 `cache`, appended
+/// through the same irregular chunk pattern so growth requantizes nothing
+/// (codes are per-row and deterministic).
+fn quantized_twin(cache: &KvBuffers) -> KvBuffers {
+    let (n_kv, d, t) = (cache.n_kv, cache.d, cache.t);
+    let mut q8 = KvBuffers::new_with_dtype(n_kv, d, 2, KvDtype::Int8);
+    let mut pos = 0;
+    let mut step = 1usize;
+    while pos < t {
+        let s = step.min(t - pos);
+        let mut kk = vec![0.0f32; n_kv * s * d];
+        let mut vv = vec![0.0f32; n_kv * s * d];
+        for h in 0..n_kv {
+            for i in 0..s {
+                let dst = (h * s + i) * d;
+                kk[dst..dst + d].copy_from_slice(cache.key(h, pos + i));
+                vv[dst..dst + d].copy_from_slice(cache.value(h, pos + i));
+            }
+        }
+        q8.append(&kk, &vv, s);
+        pos += s;
+        step = step * 2 + 1;
+    }
+    q8
+}
+
+#[test]
+fn int8_contig_close_to_fp32_reference() {
+    for &(t, s, n_q, n_kv, d) in &shapes() {
+        let su = setup(t, s, n_q, n_kv, d, 0x1A8 + t as u64);
+        let q8 = quantized_twin(&su.cache);
+        let mut got = vec![0.0f32; n_q * s * d];
+        let mut want = vec![0.0f32; n_q * s * d];
+        let mut scratch = AttnScratch::new();
+        chunk_attention(
+            &su.q, n_q, s, d, &su.k_self, &su.v_self, &q8, &Selection::All, &mut scratch,
+            &mut got,
+        );
+        reference_chunk_attention(
+            &su.q, n_q, s, d, &su.k_self, &su.v_self, &su.cache, &Selection::All, &mut want,
+        );
+        let err = rel_l2(&got, &want);
+        assert!(err < TOL_Q8, "int8 contig t={t} s={s} d={d}: rel_l2 {err} >= {TOL_Q8}");
+        if t > 0 {
+            assert!(err > 0.0, "int8 contig t={t} s={s} d={d}: exact match — quant path bypassed?");
+        }
+    }
+}
+
+#[test]
+fn int8_paged_close_to_fp32_reference() {
+    let mut rng = Rng::new(0x8BED);
+    for &(t, s, n_q, n_kv, d) in &shapes() {
+        for bt in [4usize, 16] {
+            let su = setup(t, s, n_q, n_kv, d, 0x8A6 + (t + bt) as u64);
+            let (pool, blocks, _alloc) = pool_mirror_dt(&su.cache, bt, KvDtype::Int8);
+            let paged = pool.kv_view(&blocks, t, 0);
+            // Alternate dense and sparse selections across the matrix.
+            let sel = if t == 0 || bt == 4 {
+                Selection::All
+            } else {
+                random_selection(&mut rng, n_kv, t, 2)
+            };
+            let mut got = vec![0.0f32; n_q * s * d];
+            let mut want = vec![0.0f32; n_q * s * d];
+            let mut scratch = AttnScratch::new();
+            paged_chunk_attention(
+                &su.q, n_q, s, d, &su.k_self, &su.v_self, &paged, &sel, &mut scratch, &mut got,
+            );
+            reference_chunk_attention(
+                &su.q, n_q, s, d, &su.k_self, &su.v_self, &su.cache, &sel, &mut want,
+            );
+            let err = rel_l2(&got, &want);
+            assert!(err < TOL_Q8, "int8 paged t={t} s={s} d={d} bt={bt}: rel_l2 {err}");
+        }
+    }
+}
+
+#[test]
+fn int8_pool_metadata_stays_exact() {
+    // Quantization must not leak into the selection metadata: pooled
+    // inverse norms come from the original fp32 rows, bit-equal to the
+    // fp32 pool's, and the int8 KCache view exposes the quantized codes.
+    let (t, s, n_q, n_kv, d) = (53usize, 4usize, 4usize, 2usize, 10usize);
+    let su = setup(t, s, n_q, n_kv, d, 0x4E0);
+    let (pool_f, blocks_f, _a) = pool_mirror_dt(&su.cache, 8, KvDtype::F32);
+    let (pool_q, blocks_q, _b) = pool_mirror_dt(&su.cache, 8, KvDtype::Int8);
+    let kf = pool_f.k_cache(&blocks_f, t, 0);
+    let kq = pool_q.k_cache(&blocks_q, t, 0);
+    assert!(kq.quant.is_some() && kf.quant.is_none());
+    for h in 0..n_kv {
+        for i in 0..t {
+            assert_eq!(kf.inv_norm(h, i), kq.inv_norm(h, i), "row ({h},{i})");
         }
     }
 }

@@ -7,7 +7,7 @@
 //! publish/adopt/abort/evict).
 
 use quoka::coordinator::{BlockAllocator, Engine, EngineCfg, KvLayout, PolicySpec, SchedCfg};
-use quoka::kvpool::{policy_ns, KvPool, PoolCfg, RadixCache};
+use quoka::kvpool::{policy_ns, KvDtype, KvPool, PoolCfg, RadixCache};
 use quoka::util::prop::{check, ensure, ensure_eq};
 use quoka::util::Rng;
 
@@ -583,6 +583,238 @@ fn spec_rollback_restores_pool_metadata_bitexact() {
                 "shared original page mutated by speculative traffic",
             )?;
             radix_a.validate(&pool_a).map_err(|e| format!("radix invariant: {e}"))
+        },
+    );
+}
+
+// --------------------------------------------------- int8 page properties
+
+fn setup_q8() -> (RadixCache, KvPool, BlockAllocator) {
+    let cfg = PoolCfg { n_layers: 2, n_kv: 1, d: 2, block_tokens: BT, total_blocks: TOTAL };
+    (
+        RadixCache::new(BT),
+        KvPool::new_with_dtype(cfg, KvDtype::Int8),
+        BlockAllocator::new(TOTAL, BT),
+    )
+}
+
+/// [`page_meta`] plus the per-row dequant scales of an int8 page — the
+/// full truncate-restorable metadata image (dropped rows' scales zero
+/// like their inverse norms; their dead codes are excluded on purpose).
+fn page_meta_q8(pool: &KvPool, table: &[u32], b: u32) -> Vec<f32> {
+    let (n_kv, n_layers) = (pool.cfg.n_kv, pool.cfg.n_layers);
+    let mut out = page_meta(pool, table, b);
+    for l in 0..n_layers {
+        let view = pool.kv_view(table, 0, l);
+        for h in 0..n_kv {
+            let nb = (b as usize * n_kv + h) * BT;
+            out.extend_from_slice(&view.k_scale[nb..nb + BT]);
+            out.extend_from_slice(&view.v_scale[nb..nb + BT]);
+        }
+    }
+    out
+}
+
+/// One int8 page's complete K/V code image across layers.
+fn page_codes(pool: &KvPool, table: &[u32], b: u32) -> Vec<i8> {
+    let (n_kv, d, n_layers) = (pool.cfg.n_kv, pool.cfg.d, pool.cfg.n_layers);
+    let mut out = Vec::new();
+    for l in 0..n_layers {
+        let view = pool.kv_view(table, 0, l);
+        let pb = b as usize * n_kv * BT * d;
+        out.extend_from_slice(&view.kq[pb..pb + n_kv * BT * d]);
+        out.extend_from_slice(&view.vq[pb..pb + n_kv * BT * d]);
+    }
+    out
+}
+
+#[test]
+fn int8_spec_rollback_restores_scales_and_metadata_bitexact() {
+    // The quantized mirror of `spec_rollback_restores_pool_metadata_bitexact`:
+    // rolling a rejected draft tail off an int8 pool must restore fill
+    // counters, dequantized key sums, inverse norms AND per-row dequant
+    // scales bit-identically to a pool that only ever appended the
+    // accepted prefix — with the COW-shared original page untouched down
+    // to its code bytes.
+    check(
+        "int8-spec-rollback-metadata",
+        8,
+        |rng: &mut Rng, size| {
+            let base = 1 + rng.below((3 * BT).min(4 * size.max(1)) + 2);
+            let draft = 1 + rng.below(2 * BT + 3);
+            let keep = rng.below(draft + 1);
+            (base, draft, keep, rng.next_u64())
+        },
+        |&(base, draft, keep, seed)| {
+            let ns = policy_ns("quoka", 64, 16);
+            let mut rng = Rng::new(seed);
+            let cfgp = PoolCfg { n_layers: 2, n_kv: 1, d: 2, block_tokens: BT, total_blocks: TOTAL };
+            let (n_kv, d, n_layers) = (cfgp.n_kv, cfgp.d, cfgp.n_layers);
+            let mut gen_rows = |n: usize| -> Vec<(Vec<f32>, Vec<f32>)> {
+                (0..n_layers)
+                    .map(|_| {
+                        (rng.normal_vec(n_kv * n * d, 1.0), rng.normal_vec(n_kv * n * d, 1.0))
+                    })
+                    .collect()
+            };
+            let base_rows = gen_rows(base);
+            let draft_rows = gen_rows(draft);
+
+            type Ran = (KvPool, Vec<u32>, u32, Vec<f32>, Vec<i8>);
+            let run = |speculate: bool| -> Result<Ran, String> {
+                let (mut radix, mut pool, mut alloc) = setup_q8();
+                let mut table = Vec::new();
+                ensure(alloc.ensure(&mut table, base + draft), "lease")?;
+                pool.adopt_new(&table);
+                for (l, (k, v)) in base_rows.iter().enumerate() {
+                    pool.append_chunk(&table, l, 0, k, v, base);
+                }
+                let full = base / BT;
+                radix.insert(ns, &vec![7u32; full * BT], &table[..full], &mut pool);
+                let boundary = table[base / BT];
+                pool.retain(boundary);
+                let before_meta = page_meta_q8(&pool, &table, boundary);
+                let before_codes = page_codes(&pool, &table, boundary);
+                pool.make_writable(&mut table, base, draft, &mut alloc)
+                    .map_err(|e| e.to_string())?;
+                ensure(table[base / BT] != boundary, "boundary page must have been cloned")?;
+                if speculate {
+                    for (l, (k, v)) in draft_rows.iter().enumerate() {
+                        pool.append_chunk(&table, l, base, k, v, draft);
+                    }
+                    pool.truncate_seq(&table, base + keep, base + draft);
+                } else if keep > 0 {
+                    for (l, (k, v)) in draft_rows.iter().enumerate() {
+                        let head = |s: &[f32]| -> Vec<f32> {
+                            (0..n_kv)
+                                .flat_map(|h| s[h * draft * d..(h * draft + keep) * d].to_vec())
+                                .collect()
+                        };
+                        pool.append_chunk(&table, l, base, &head(k), &head(v), keep);
+                    }
+                }
+                radix.validate(&pool).map_err(|e| format!("radix invariant: {e}"))?;
+                Ok((pool, table, boundary, before_meta, before_codes))
+            };
+
+            let (pool_a, table_a, shared_a, before_meta, before_codes) = run(true)?;
+            let (pool_o, table_o, _, _, _) = run(false)?;
+
+            ensure_eq(table_a.len(), table_o.len(), "table shapes")?;
+            let t_kept = base + keep;
+            for (j, (&ba, &bo)) in table_a.iter().zip(&table_o).enumerate() {
+                ensure_eq(
+                    pool_a.refcount(ba),
+                    pool_o.refcount(bo),
+                    &format!("refcount of page {j}"),
+                )?;
+                ensure(
+                    page_meta_q8(&pool_a, &table_a, ba) == page_meta_q8(&pool_o, &table_o, bo),
+                    format!("scale/metadata drift on page {j} after rollback"),
+                )?;
+                // Live rows' codes and scales agree byte-for-byte (per-row
+                // quantization is deterministic, so the accepted prefix
+                // encodes identically in both pools).
+                let lo = j * BT;
+                for l in 0..n_layers {
+                    let va = pool_a.kv_view(&table_a, t_kept, l);
+                    let vo = pool_o.kv_view(&table_o, t_kept, l);
+                    for h in 0..n_kv {
+                        for i in lo..t_kept.min(lo + BT) {
+                            let (ra, ro) = (va.row_base(h, i), vo.row_base(h, i));
+                            let (ma, mo) = (va.meta_base(h, i), vo.meta_base(h, i));
+                            ensure(
+                                va.kq[ra..ra + d] == vo.kq[ro..ro + d]
+                                    && va.vq[ra..ra + d] == vo.vq[ro..ro + d],
+                                format!("code drift at token {i} layer {l}"),
+                            )?;
+                            ensure(
+                                va.k_scale[ma] == vo.k_scale[mo]
+                                    && va.v_scale[ma] == vo.v_scale[mo],
+                                format!("scale drift at token {i} layer {l}"),
+                            )?;
+                        }
+                    }
+                }
+            }
+            ensure(
+                page_meta_q8(&pool_a, &table_a, shared_a) == before_meta,
+                "shared original page metadata mutated by speculative traffic",
+            )?;
+            ensure(
+                page_codes(&pool_a, &table_a, shared_a) == before_codes,
+                "shared original page codes mutated by speculative traffic",
+            )
+        },
+    );
+}
+
+#[test]
+fn int8_cow_clone_preserves_codes_and_scales() {
+    // COW isolation on a quantized pool: a sharer's overwrites must not
+    // perturb the owner's codes or scales (no requantization of rows the
+    // owner still reads), and the clone itself starts as a byte-exact
+    // copy of the original page.
+    check(
+        "int8-cow-preserves-quant",
+        8,
+        |rng: &mut Rng, size| {
+            let pages = 1 + rng.below(size.max(1)).min(6);
+            let writes = 1 + rng.below(4);
+            (pages, writes, rng.next_u64())
+        },
+        |&(pages, writes, seed)| {
+            let (_, mut pool, mut alloc) = setup_q8();
+            let mut rng = Rng::new(seed);
+            let t = pages * BT;
+            let d = pool.cfg.d;
+            let mut owner = Vec::new();
+            ensure(alloc.ensure(&mut owner, t), "lease owner table")?;
+            pool.adopt_new(&owner);
+            for l in 0..pool.cfg.n_layers {
+                let kk = rng.normal_vec(t * d, 1.0);
+                let vv = rng.normal_vec(t * d, 1.0);
+                pool.append_chunk(&owner, l, 0, &kk, &vv, t);
+            }
+            let snap_meta: Vec<Vec<f32>> =
+                owner.iter().map(|&b| page_meta_q8(&pool, &owner, b)).collect();
+            let snap_codes: Vec<Vec<i8>> =
+                owner.iter().map(|&b| page_codes(&pool, &owner, b)).collect();
+            let mut sharer = owner.clone();
+            for &b in &sharer {
+                pool.retain(b);
+            }
+            let mut diverged = vec![false; owner.len()];
+            for _ in 0..writes {
+                let pos = rng.below(t);
+                pool.make_writable(&mut sharer, pos, 1, &mut alloc)
+                    .map_err(|e| e.to_string())?;
+                // A fresh clone is byte-exact before the write lands
+                // (later writes to the same page skip this — the clone has
+                // legitimately drifted by then).
+                let j = pos / BT;
+                if sharer[j] != owner[j] && !diverged[j] {
+                    diverged[j] = true;
+                    ensure(
+                        page_codes(&pool, &sharer, sharer[j]) == snap_codes[j]
+                            && page_meta_q8(&pool, &sharer, sharer[j]) == snap_meta[j],
+                        format!("COW clone of page {j} is not byte-exact"),
+                    )?;
+                }
+                let kk = rng.normal_vec(d, 1.0);
+                let vv = rng.normal_vec(d, 1.0);
+                pool.append_chunk(&sharer, 0, pos, &kk, &vv, 1);
+            }
+            for (j, &b) in owner.iter().enumerate() {
+                ensure(
+                    page_codes(&pool, &owner, b) == snap_codes[j]
+                        && page_meta_q8(&pool, &owner, b) == snap_meta[j],
+                    format!("owner page {j} quant state mutated through sharer writes"),
+                )?;
+            }
+            pool.release_seq(&mut owner, &mut alloc);
+            pool.release_seq(&mut sharer, &mut alloc);
+            ensure_eq(alloc.free_blocks(), TOTAL, "all pages returned after COW traffic")
         },
     );
 }

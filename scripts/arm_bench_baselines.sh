@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Arm the CI bench-regression gate: copy a green main run's bench-results
+# artifact over the bootstrap stubs in bench/baselines/.
+#
+# Usage: scripts/arm_bench_baselines.sh /path/to/unzipped/bench-results
+#
+# The directory must contain ALL gated artifacts (a partial copy would
+# silently leave some metrics on the floor-only bootstrap path, which
+# reads as "armed" in CI logs when it isn't). After running, review the
+# diff and commit; commit the same run's `cargo-lock` artifact as
+# rust/Cargo.lock alongside it.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+src="${1:?usage: scripts/arm_bench_baselines.sh /path/to/bench-results}"
+files=(BENCH_hotpath.json BENCH_prefix.json BENCH_decode.json BENCH_spec.json BENCH_quant.json)
+
+for f in "${files[@]}"; do
+  [[ -s "$src/$f" ]] || { echo "error: $src/$f missing or empty — need the full artifact set" >&2; exit 1; }
+  python3 -c "import json,sys; json.load(open(sys.argv[1]))" "$src/$f" \
+    || { echo "error: $src/$f is not valid JSON" >&2; exit 1; }
+done
+
+for f in "${files[@]}"; do
+  cp "$src/$f" "bench/baselines/$f"
+  echo "armed bench/baselines/$f"
+done
+
+echo "done — review 'git diff bench/baselines' and commit"

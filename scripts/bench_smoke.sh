@@ -18,14 +18,18 @@
 #    single-sequence decode, prompt-lookup drafting + one multi-token
 #    verify per step vs one token per step → BENCH_spec.json (speedup +
 #    acceptance rate; identical generations asserted).
+# 5. Quantized KV: `cargo bench --bench quant_serving` — 8 sequences × 64
+#    fused decode steps with fp32 vs int8 private KV, plus the QUOKA
+#    paged key scan at pool geometry → BENCH_quant.json (decode tokens/sec
+#    each + speedup, scan seconds each + speedup).
 #
 # CI bench gate: the `bench` job in .github/workflows/ci.yml runs this
-# script on a CI-sized config, uploads the four JSONs as the
+# script on a CI-sized config, uploads the five JSONs as the
 # `bench-results` artifact, and then runs `scripts/check_bench.py`, which
 # FAILS the job when tiled-vs-seed speedup, warm-vs-cold or
 # in-flight-vs-cold prefix TTFT ratio, batched-vs-serial decode
-# throughput, or speculative-vs-plain decode throughput fall below
-# absolute floors or regress beyond tolerance
+# throughput, speculative-vs-plain decode throughput, or int8-vs-fp32
+# decode throughput fall below absolute floors or regress beyond tolerance
 # against the committed baselines in bench/baselines/ (bootstrap stubs
 # until the first CI artifacts are committed — see bench/baselines/README.md).
 #
@@ -34,6 +38,7 @@
 #   PREFIX_OUT=/path/to.json  override the prefix-serving output location
 #   DECODE_OUT=/path/to.json  override the decode-serving output location
 #   SPEC_OUT=/path/to.json    override the speculative-decode output location
+#   QUANT_OUT=/path/to.json   override the quantized-KV output location
 #   BENCH_CHECK=1             run the regression gate after the benches
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -43,13 +48,15 @@ export BENCH_OUT="${BENCH_OUT:-$PWD/BENCH_hotpath.json}"
 export PREFIX_OUT="${PREFIX_OUT:-$PWD/BENCH_prefix.json}"
 export DECODE_OUT="${DECODE_OUT:-$PWD/BENCH_decode.json}"
 export SPEC_OUT="${SPEC_OUT:-$PWD/BENCH_spec.json}"
+export QUANT_OUT="${QUANT_OUT:-$PWD/BENCH_quant.json}"
 
 cargo bench --manifest-path rust/Cargo.toml --bench micro_hotpath
 cargo bench --manifest-path rust/Cargo.toml --bench prefix_serving
 cargo bench --manifest-path rust/Cargo.toml --bench decode_serving
 cargo bench --manifest-path rust/Cargo.toml --bench spec_serving
+cargo bench --manifest-path rust/Cargo.toml --bench quant_serving
 
-echo "bench_smoke: wrote $BENCH_OUT, $PREFIX_OUT, $DECODE_OUT and $SPEC_OUT"
+echo "bench_smoke: wrote $BENCH_OUT, $PREFIX_OUT, $DECODE_OUT, $SPEC_OUT and $QUANT_OUT"
 
 if [[ "${BENCH_CHECK:-0}" == "1" ]]; then
   python3 scripts/check_bench.py

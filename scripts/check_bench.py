@@ -1,12 +1,13 @@
 #!/usr/bin/env python3
 """Bench regression gate for CI.
 
-Reads the four bench artifacts written by scripts/bench_smoke.sh
+Reads the five bench artifacts written by scripts/bench_smoke.sh
 
   BENCH_hotpath.json  — tiled-vs-seed chunk-attention kernel speedup
   BENCH_prefix.json   — warm-vs-cold and in-flight-vs-cold prefix TTFT
   BENCH_decode.json   — batched-vs-serial decode throughput
   BENCH_spec.json     — speculative-vs-plain decode throughput
+  BENCH_quant.json    — int8-vs-fp32 KV decode throughput
 
 and fails (exit 1) when a headline metric
 
@@ -22,8 +23,9 @@ committed to bench/baselines/ to arm the relative gate.
 
 Environment overrides (floors): CHECK_BENCH_MIN_HOTPATH,
 CHECK_BENCH_MIN_PREFIX_WARM, CHECK_BENCH_MIN_PREFIX_INFLIGHT,
-CHECK_BENCH_MIN_DECODE, CHECK_BENCH_MIN_SPEC; relative tolerance:
-CHECK_BENCH_TOL (fraction, default 0.35 — CI runners are noisy).
+CHECK_BENCH_MIN_DECODE, CHECK_BENCH_MIN_SPEC, CHECK_BENCH_MIN_QUANT;
+relative tolerance: CHECK_BENCH_TOL (fraction, default 0.35 — CI runners
+are noisy).
 
 Usage: scripts/check_bench.py [--bench-dir DIR] [--baseline-dir DIR]
 """
@@ -47,6 +49,7 @@ FLOORS = {
     "prefix-inflight-ttft-speedup": env_float("CHECK_BENCH_MIN_PREFIX_INFLIGHT", 1.2),
     "decode-batched-speedup": env_float("CHECK_BENCH_MIN_DECODE", 1.2),
     "spec-decode-speedup": env_float("CHECK_BENCH_MIN_SPEC", 1.5),
+    "quant-decode-speedup": env_float("CHECK_BENCH_MIN_QUANT", 1.5),
 }
 
 
@@ -102,6 +105,8 @@ def gather(bench_dir):
     out["decode-batched-speedup"] = (metric(dc, "speedup"), dc.get("config") if dc else None)
     sp = load(os.path.join(bench_dir, "BENCH_spec.json"))
     out["spec-decode-speedup"] = (metric(sp, "speedup"), sp.get("config") if sp else None)
+    qt = load(os.path.join(bench_dir, "BENCH_quant.json"))
+    out["quant-decode-speedup"] = (metric(qt, "speedup"), qt.get("config") if qt else None)
     return out
 
 
