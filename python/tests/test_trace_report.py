@@ -1,0 +1,108 @@
+"""Smoke tests for scripts/trace_report.py (stdlib-only — no jax).
+
+Builds synthetic traces matching the engine's JSONL schema and checks the
+validator accepts well-formed span sequences, rejects broken ones, and
+that the report renders without crashing.
+"""
+
+import importlib.util
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+SCRIPT = REPO / "scripts" / "trace_report.py"
+
+spec = importlib.util.spec_from_file_location("trace_report", SCRIPT)
+trace_report = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(trace_report)
+
+
+def ev(t_us, rid, name, **payload):
+    return {"t_us": t_us, "id": rid, "ev": name, **payload}
+
+
+def good_trace():
+    return [
+        ev(0, 1, "submit", prompt=128),
+        ev(5, 1, "admit"),
+        ev(6, 1, "chunk_start", start=0, len=64),
+        ev(40, 1, "chunk_end", tokens=64),
+        ev(41, 0, "step_end", prefill_tokens=64, decode_seqs=0, verify_seqs=0),
+        ev(42, 2, "submit", prompt=128),
+        ev(43, 2, "prefix_hit", pages=2),
+        ev(44, 2, "park_on_prefix", on=1),
+        ev(50, 1, "chunk_start", start=64, len=64),
+        ev(90, 1, "first_token"),
+        ev(91, 2, "adopt_pages", pages=3),
+        ev(92, 2, "wake"),
+        ev(95, 0, "phase_sample", scan=10, attn=20, append=5, gemm=30),
+        ev(96, 0, "step_end", prefill_tokens=64, decode_seqs=1, verify_seqs=0),
+        ev(120, 1, "finish"),
+        ev(130, 2, "chunk_start", start=128, len=16),
+        ev(150, 2, "first_token"),
+        ev(180, 2, "finish"),
+    ]
+
+
+def write(tmp_path, events, name="trace.jsonl"):
+    path = tmp_path / name
+    path.write_text("".join(json.dumps(e) + "\n" for e in events))
+    return path
+
+
+def test_validate_accepts_well_formed(tmp_path):
+    path = write(tmp_path, good_trace())
+    assert trace_report.validate(trace_report.load(path)) == []
+    assert trace_report.main([str(path), "--validate"]) == 0
+
+
+def test_validate_catches_missing_terminal(tmp_path):
+    events = [e for e in good_trace() if not (e["id"] == 2 and e["ev"] == "finish")]
+    problems = trace_report.validate(trace_report.load(write(tmp_path, events)))
+    assert any("without terminal" in p for p in problems)
+    assert trace_report.main([str(write(tmp_path, events)), "--validate"]) == 1
+
+
+def test_validate_catches_first_token_after_finish():
+    events = good_trace()
+    # Swap request 1's first_token and finish spans in ring order.
+    i = next(k for k, e in enumerate(events) if e["ev"] == "first_token")
+    j = next(k for k, e in enumerate(events) if e["ev"] == "finish")
+    events[i], events[j] = events[j], events[i]
+    events[i]["t_us"], events[j]["t_us"] = events[j]["t_us"], events[i]["t_us"]
+    problems = trace_report.validate(events)
+    assert any("first_token after finish" in p for p in problems)
+
+
+def test_validate_catches_wake_without_adopt():
+    events = [e for e in good_trace() if e["ev"] != "adopt_pages"]
+    problems = trace_report.validate(events)
+    assert any("adopt_pages" in p for p in problems)
+
+
+def test_validate_catches_timestamp_regression():
+    events = good_trace()
+    events[3]["t_us"] = 1  # earlier than its predecessor
+    problems = trace_report.validate(events)
+    assert any("regressed" in p for p in problems)
+
+
+def test_report_renders(tmp_path, capsys):
+    path = write(tmp_path, good_trace())
+    assert trace_report.main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "per-request waterfall" in out
+    assert "step occupancy (2 steps)" in out
+    assert "phase time (1 samples)" in out
+    # TTFT reconstructed from the trace: request 1 submit@0 -> first_token@90.
+    assert "0.09" in out
+
+
+def test_waterfall_numbers():
+    rows = trace_report.waterfall(good_trace())
+    by_id = {r["id"]: r for r in rows}
+    assert by_id[1]["ttft_ms"] == "0.09"
+    assert by_id[1]["terminal"] == "finish"
+    assert by_id[2]["parked"] == "yes"
+    assert by_id[2]["prefix_pages"] == 2

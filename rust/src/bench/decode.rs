@@ -15,6 +15,7 @@
 
 use super::banner;
 use crate::model::{DecodeKv, DecodeSeq, HostModel, ModelConfig, SeqState, Weights};
+use crate::obs::LatencyHist;
 use crate::select::{policy_by_name, SelectCtx};
 use crate::util::Json;
 
@@ -69,7 +70,11 @@ pub fn decode_serving() -> f64 {
     let (mut states, mut last) = prefilled(&model, prompt_len, &mut ctx);
     let t0 = std::time::Instant::now();
     let mut serial_tokens: Vec<Vec<u32>> = vec![Vec::new(); N_SEQS];
+    // In the serial schedule a sequence waits a full round (all N_SEQS
+    // B=1 forwards) between its tokens — that round IS its ITL.
+    let mut serial_itl = LatencyHist::new();
     for _ in 0..DECODE_STEPS {
+        let tr = std::time::Instant::now();
         for (i, st) in states.iter_mut().enumerate() {
             ctx.begin_step();
             let mut one = [DecodeSeq {
@@ -82,6 +87,7 @@ pub fn decode_serving() -> f64 {
             last[i] = next[0];
             serial_tokens[i].push(next[0]);
         }
+        serial_itl.record(tr.elapsed());
     }
     let serial_s = t0.elapsed().as_secs_f64();
 
@@ -90,7 +96,11 @@ pub fn decode_serving() -> f64 {
     let (mut states, mut last) = prefilled(&model, prompt_len, &mut ctx);
     let t0 = std::time::Instant::now();
     let mut batched_tokens: Vec<Vec<u32>> = vec![Vec::new(); N_SEQS];
+    // One fused forward per step emits a token for every sequence, so the
+    // step duration is each sequence's ITL.
+    let mut batched_itl = LatencyHist::new();
     for _ in 0..DECODE_STEPS {
+        let tr = std::time::Instant::now();
         ctx.begin_step();
         let mut batch: Vec<DecodeSeq> = states
             .iter_mut()
@@ -108,6 +118,7 @@ pub fn decode_serving() -> f64 {
             last[i] = tok;
             batched_tokens[i].push(tok);
         }
+        batched_itl.record(tr.elapsed());
     }
     let batched_s = t0.elapsed().as_secs_f64();
 
@@ -160,6 +171,12 @@ pub fn decode_serving() -> f64 {
         ("speedup", Json::num(speedup)),
         ("serial-wall-s", Json::num(serial_s)),
         ("batched-wall-s", Json::num(batched_s)),
+        // ITL distribution tails (schema-additive; check_bench.py ignores
+        // unknown keys).
+        ("serial-itl-p50-ms", Json::num(serial_itl.quantile_ms(0.50).unwrap_or(0.0))),
+        ("serial-itl-p99-ms", Json::num(serial_itl.quantile_ms(0.99).unwrap_or(0.0))),
+        ("batched-itl-p50-ms", Json::num(batched_itl.quantile_ms(0.50).unwrap_or(0.0))),
+        ("batched-itl-p99-ms", Json::num(batched_itl.quantile_ms(0.99).unwrap_or(0.0))),
     ]);
     match std::fs::write(&out_path, doc.to_string()) {
         Ok(()) => println!("wrote {out_path}"),

@@ -195,6 +195,29 @@ pub fn prefix_serving() -> crate::util::timing::Table {
         ),
         ("kv-bytes-saved", Json::num(warm.metrics.prefix_bytes_saved as f64)),
         ("pool-resident-bytes", Json::num(warm.metrics.pool_resident_bytes as f64)),
+        // Distribution tails from the engines' latency histograms
+        // (schema-additive; check_bench.py ignores unknown keys). The warm
+        // engine's histogram includes its one warmup request.
+        ("ttft-cold-p50-ms", Json::num(cold.metrics.ttft_hist.quantile_ms(0.50).unwrap_or(0.0))),
+        ("ttft-cold-p99-ms", Json::num(cold.metrics.ttft_hist.quantile_ms(0.99).unwrap_or(0.0))),
+        ("ttft-warm-p50-ms", Json::num(warm.metrics.ttft_hist.quantile_ms(0.50).unwrap_or(0.0))),
+        ("ttft-warm-p99-ms", Json::num(warm.metrics.ttft_hist.quantile_ms(0.99).unwrap_or(0.0))),
+        (
+            "ttft-inflight-p50-ms",
+            Json::num(inflight.metrics.ttft_hist.quantile_ms(0.50).unwrap_or(0.0)),
+        ),
+        (
+            "ttft-inflight-p99-ms",
+            Json::num(inflight.metrics.ttft_hist.quantile_ms(0.99).unwrap_or(0.0)),
+        ),
+        (
+            "itl-inflight-p50-ms",
+            Json::num(inflight.metrics.itl_hist.quantile_ms(0.50).unwrap_or(0.0)),
+        ),
+        (
+            "itl-inflight-p99-ms",
+            Json::num(inflight.metrics.itl_hist.quantile_ms(0.99).unwrap_or(0.0)),
+        ),
     ]);
     match std::fs::write(&out_path, doc.to_string()) {
         Ok(()) => println!("wrote {out_path}"),

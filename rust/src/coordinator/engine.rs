@@ -14,6 +14,7 @@ use super::request::{Phase, PolicySpec, Request, RequestResult, SeqEntry};
 use super::scheduler::{SchedCfg, Scheduler, WorkItem};
 use crate::kvpool::{policy_ns, KvDtype, KvPool, PoolCfg, RadixCache};
 use crate::model::{DecodeKv, DecodeSeq, HostModel, ModelConfig, SeqState, Weights};
+use crate::obs::{self, TraceEventKind, Tracer};
 use crate::runtime::exec::{AttnMode, PjrtBackend, PjrtSeq};
 use crate::select::{SelectCtx, SelectionPolicy};
 use crate::spec::{drafter_for, DraftSource, SpecCfg};
@@ -124,6 +125,9 @@ pub struct Engine {
     kv_dtype: KvDtype,
     ctx: SelectCtx,
     pub metrics: Metrics,
+    /// Lifecycle event ring ([`crate::obs::tracer`]). Disabled (and
+    /// unallocated) by default; [`Engine::enable_tracing`] turns it on.
+    pub tracer: Tracer,
     results: Vec<RequestResult>,
     next_id: u64,
 }
@@ -223,9 +227,23 @@ impl Engine {
             kv_dtype: cfg.kv_dtype,
             ctx: SelectCtx::new(cfg.seed ^ 0xE1),
             metrics: Metrics::default(),
+            tracer: Tracer::disabled(),
             results: Vec::new(),
             next_id: 1,
         }
+    }
+
+    /// Turn on lifecycle tracing with a ring of `capacity` events
+    /// (oldest overwritten beyond that; see [`Tracer::overwritten`]).
+    /// The ring is allocated here, once — recording never allocates.
+    pub fn enable_tracing(&mut self, capacity: usize) {
+        self.tracer = Tracer::new(capacity);
+    }
+
+    /// Flush the trace ring to `path` as JSONL (oldest event first);
+    /// returns the number of events written. The ring is left intact.
+    pub fn write_trace(&self, path: &std::path::Path) -> std::io::Result<usize> {
+        self.tracer.write_jsonl(path)
     }
 
     /// The engine-wide default speculative-decode configuration (what a
@@ -346,6 +364,8 @@ impl Engine {
         }
         let req = Request { id, tokens, max_new_tokens: max_new.max(1), policy, spec };
         let mut entry = SeqEntry::new(req);
+        self.tracer
+            .record(id, TraceEventKind::Submit { prompt: entry.req.tokens.len() as u32 });
         let grid = self.grid_pages();
         if let (Some(pool), Some(radix)) = (self.pool.as_mut(), self.radix.as_mut()) {
             self.metrics.record_prefix_lookup(entry.req.tokens.len());
@@ -366,6 +386,8 @@ impl Engine {
                 entry.cached_tokens = cached;
                 entry.phase = Phase::Prefill { next: cached };
                 entry.blocks = matched;
+                self.tracer
+                    .record(id, TraceEventKind::PrefixHit { pages: entry.blocks.len() as u32 });
             }
             entry.published_pages = entry.blocks.len();
 
@@ -416,6 +438,7 @@ impl Engine {
                 entry.wait_pages = target;
                 entry.phase = Phase::WaitingOnPrefix { next: entry.cached_tokens };
                 self.metrics.inflight_followers += 1;
+                self.tracer.record(id, TraceEventKind::ParkOnPrefix { on: lid });
             }
         }
         self.seqs.insert(id, entry);
@@ -443,6 +466,7 @@ impl Engine {
         self.sched.waiting.retain(|&w| w != id);
         self.sched.retire(id);
         self.backs.remove(&id);
+        self.tracer.record(id, TraceEventKind::Cancel);
         self.discard(entry);
         true
     }
@@ -555,6 +579,7 @@ impl Engine {
                 entry.published_pages = entry.published_pages.max(cur_pages + adopted);
                 let bytes = adopted * bt * pool.token_bytes();
                 self.metrics.record_inflight_adopt(adopted * bt, bytes, first);
+                self.tracer.record(id, TraceEventKind::AdoptPages { pages: adopted as u32 });
                 if let Some(SeqBack::HostPaged { len, .. }) = self.backs.get_mut(&id) {
                     *len = entry.cached_tokens;
                 }
@@ -569,6 +594,7 @@ impl Engine {
                 debug_assert_eq!(cursor % (grid * bt), 0, "wake cursor off the chunk grid");
                 entry.waiting_on = None;
                 entry.phase = Phase::Prefill { next: cursor };
+                self.tracer.record(id, TraceEventKind::Wake);
             } else {
                 entry.phase = Phase::WaitingOnPrefix { next: cursor };
             }
@@ -598,6 +624,7 @@ impl Engine {
                 let entry = self.seqs.remove(&head).unwrap();
                 // Pages (and the empty-generation rejection result) go
                 // through the shared unserved-teardown path.
+                self.tracer.record(head, TraceEventKind::Reject);
                 self.discard(entry);
             } else {
                 break;
@@ -616,19 +643,24 @@ impl Engine {
                 if let Some(&head) = self.sched.waiting.front() {
                     let need = self.seqs[&head].residual_blocks(&self.blocks);
                     if need > self.blocks.free_blocks() {
-                        radix.evict_until(need, pool, &mut self.blocks);
+                        radix.evict_until_traced(need, pool, &mut self.blocks, &mut self.tracer);
                     }
                 }
             }
         }
-        let plan = self.sched.plan(&mut self.seqs, &mut self.blocks);
+        let plan = self.sched.plan_traced(&mut self.seqs, &mut self.blocks, &mut self.tracer);
         // Materialize backend state for newly admitted sequences; in paged
         // mode, adopt the freshly leased pages (refcount 1, zeroed
         // metadata) — prefix pages retained at submit keep their counts.
         for id in &plan.admitted {
             let entry = &self.seqs[id];
+            self.metrics.queue_wait_hist.record(entry.admitted_at.elapsed());
             let back = if let Some(pool) = self.pool.as_mut() {
                 pool.adopt_new(&entry.blocks);
+                // Admission is a pool-growth point: freshly leased pages
+                // must move the peak even if the step aborts early.
+                self.metrics
+                    .note_kv_resident(pool.resident_bytes(self.blocks.leased_blocks()));
                 SeqBack::HostPaged { len: entry.cached_tokens, last_hidden: Vec::new() }
             } else {
                 match &self.backend {
@@ -686,6 +718,7 @@ impl Engine {
                 WorkItem::PrefillChunk { .. } => {}
             }
         }
+        let n_verify = verify_jobs.len();
         let mut fused_decode = None;
         if !decode_ids.is_empty() {
             let td = Instant::now();
@@ -693,26 +726,55 @@ impl Engine {
             if fused {
                 fused_decode = Some(td.elapsed());
             }
+            self.tracer
+                .record(0, TraceEventKind::DecodeStep { batch: decode_ids.len() as u32 });
         }
         for (id, draft) in verify_jobs {
             self.run_verify(id, draft)?;
         }
         for item in &plan.items {
             if let WorkItem::PrefillChunk { id, start, len } = *item {
+                self.tracer.record(
+                    id,
+                    TraceEventKind::ChunkStart { start: start as u32, len: len as u32 },
+                );
+                let tc = Instant::now();
                 self.run_prefill(id, start, len)?;
+                self.metrics.chunk_hist.record(tc.elapsed());
+                self.tracer.record(id, TraceEventKind::ChunkEnd { tokens: len as u32 });
                 prefill_toks += len;
             }
         }
         // Pages published by this step's chunks are adoptable immediately:
         // poll the followers again so a wake never costs an extra step.
         self.advance_followers();
+        // Drain the forward path's per-phase timers (thread-local to this
+        // engine thread — the kernels block the caller) into the metrics
+        // table and, when tracing, an engine-scope sample event.
+        let phase_ns = obs::phase::take();
+        if phase_ns.iter().any(|&v| v > 0) {
+            self.metrics.add_phase_ns(phase_ns);
+            if self.tracer.is_enabled() {
+                let mut us = [0u32; obs::N_PHASES];
+                for (o, &v) in us.iter_mut().zip(phase_ns.iter()) {
+                    *o = (v / 1_000).min(u32::MAX as u64) as u32;
+                }
+                self.tracer.record(0, TraceEventKind::PhaseSample { us });
+            }
+        }
+        self.tracer.record(
+            0,
+            TraceEventKind::StepEnd {
+                prefill_tokens: prefill_toks as u32,
+                decode_seqs: decode_ids.len() as u32,
+                verify_seqs: n_verify as u32,
+            },
+        );
         self.metrics
             .record_step(t0.elapsed(), prefill_toks, decode_ids.len(), fused_decode);
         if let Some(pool) = &self.pool {
-            self.metrics.pool_resident_bytes =
-                pool.resident_bytes(self.blocks.leased_blocks());
-            self.metrics.peak_kv_bytes =
-                self.metrics.peak_kv_bytes.max(self.metrics.pool_resident_bytes);
+            self.metrics
+                .note_kv_resident(pool.resident_bytes(self.blocks.leased_blocks()));
         }
 
         // Retire finished sequences. In paged mode, blocks go back through
@@ -735,6 +797,12 @@ impl Engine {
             }
             self.sched.retire(id);
             let r = entry.result();
+            if entry.first_token_at.is_some() {
+                // Same quantity `RequestResult::ttft_s` reports: the
+                // trace-report cross-check holds to the histogram too.
+                self.metrics.ttft_hist.record_secs(r.ttft_s);
+            }
+            self.tracer.record(id, TraceEventKind::Finish);
             self.metrics
                 .record_finish(r.ttft_s, r.tpot_s, entry.generated.len() > 1);
             self.results.push(r);
@@ -801,7 +869,10 @@ impl Engine {
                 _ => unreachable!(),
             };
             entry.generated.push(first);
-            entry.first_token_at = Some(Instant::now());
+            let now = Instant::now();
+            entry.first_token_at = Some(now);
+            entry.last_token_at = Some(now);
+            self.tracer.record(id, TraceEventKind::FirstToken);
             if entry.generated.len() >= entry.req.max_new_tokens {
                 entry.phase = Phase::Finished;
                 entry.finished_at = Some(Instant::now());
@@ -911,7 +982,10 @@ impl Engine {
             };
             let entry = self.seqs.get_mut(&id).unwrap();
             entry.generated.push(first);
-            entry.first_token_at = Some(Instant::now());
+            let now = Instant::now();
+            entry.first_token_at = Some(now);
+            entry.last_token_at = Some(now);
+            self.tracer.record(id, TraceEventKind::FirstToken);
             if entry.generated.len() >= entry.req.max_new_tokens {
                 entry.phase = Phase::Finished;
                 entry.finished_at = Some(Instant::now());
@@ -957,12 +1031,15 @@ impl Engine {
         if !ok {
             if let (Some(pool), Some(radix)) = (self.pool.as_mut(), self.radix.as_mut()) {
                 let missing = self.blocks.blocks_for(need).saturating_sub(lease.len());
-                radix.evict_until(missing, pool, &mut self.blocks);
+                radix.evict_until_traced(missing, pool, &mut self.blocks, &mut self.tracer);
             }
             ok = self.blocks.ensure(&mut lease, need);
         }
         if let Some(pool) = self.pool.as_mut() {
             pool.adopt_new(&lease);
+            // Decode-path lease growth moves the pool peak too, not just
+            // the end-of-step snapshot.
+            self.metrics.note_kv_resident(pool.resident_bytes(self.blocks.leased_blocks()));
         }
         self.seqs.get_mut(&id).unwrap().blocks = lease;
         anyhow::ensure!(ok, "KV pool exhausted mid-decode (seq {id})");
@@ -1059,6 +1136,7 @@ impl Engine {
         self.metrics.attention_s += ta.elapsed().as_secs_f64();
 
         // ---- post: reinsert state, advance cursors, record tokens ----
+        let now = Instant::now();
         for (i, mut back) in taken.into_iter().enumerate() {
             let id = ids[i];
             if let SeqBack::HostPaged { len, .. } = &mut back {
@@ -1067,9 +1145,12 @@ impl Engine {
             self.backs.insert(id, back);
             let entry = self.seqs.get_mut(&id).unwrap();
             entry.generated.push(next[i]);
+            if let Some(prev) = entry.last_token_at.replace(now) {
+                self.metrics.itl_hist.record(now - prev);
+            }
             if entry.generated.len() >= entry.req.max_new_tokens {
                 entry.phase = Phase::Finished;
-                entry.finished_at = Some(Instant::now());
+                entry.finished_at = Some(now);
             }
         }
         Ok(true)
@@ -1167,19 +1248,35 @@ impl Engine {
         }
         self.backs.insert(id, back);
 
+        let emitted = accepted + 1;
+        let now = Instant::now();
         let entry = self.seqs.get_mut(&id).unwrap();
         entry.generated.extend_from_slice(&draft[..accepted]);
         entry.generated.push(targets[accepted]);
         entry.spec_drafted += draft.len();
         entry.spec_accepted += accepted;
+        // One verify emits `emitted` tokens at one instant: amortize the
+        // span since the previous emission over them so the ITL histogram
+        // reflects per-token pacing, not per-forward pacing.
+        if let Some(prev) = entry.last_token_at.replace(now) {
+            let per = (now - prev) / emitted as u32;
+            for _ in 0..emitted {
+                self.metrics.itl_hist.record(per);
+            }
+        }
         if entry.generated.len() >= entry.req.max_new_tokens {
             entry.phase = Phase::Finished;
-            entry.finished_at = Some(Instant::now());
+            entry.finished_at = Some(now);
         }
         if let Some(d) = self.drafters.get_mut(&id) {
             d.observe(draft.len(), accepted);
         }
-        self.metrics.record_verify(t0.elapsed(), draft.len(), accepted, accepted + 1);
+        self.tracer.record(
+            id,
+            TraceEventKind::VerifyStep { gamma: draft.len() as u32, accepted: accepted as u32 },
+        );
+        self.metrics.verify_hist.record(t0.elapsed());
+        self.metrics.record_verify(t0.elapsed(), draft.len(), accepted, emitted);
         Ok(())
     }
 
@@ -1212,9 +1309,13 @@ impl Engine {
 
         let entry = self.seqs.get_mut(&id).unwrap();
         entry.generated.push(next);
+        let now = Instant::now();
+        if let Some(prev) = entry.last_token_at.replace(now) {
+            self.metrics.itl_hist.record(now - prev);
+        }
         if entry.generated.len() >= entry.req.max_new_tokens {
             entry.phase = Phase::Finished;
-            entry.finished_at = Some(Instant::now());
+            entry.finished_at = Some(now);
         }
         Ok(())
     }

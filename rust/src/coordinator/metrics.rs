@@ -2,6 +2,10 @@
 
 use std::time::Duration;
 
+use crate::obs::phase::{N_PHASES, PHASE_NAMES};
+use crate::obs::LatencyHist;
+use crate::util::json::Json;
+
 /// Running aggregate of engine activity.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -73,6 +77,24 @@ pub struct Metrics {
     /// decode phase for a speculating sequence — and kept separately so
     /// speculative throughput is reportable on its own.
     pub spec_s: f64,
+    /// Per-request time-to-first-token distribution (one sample per
+    /// finished request).
+    pub ttft_hist: LatencyHist,
+    /// Inter-token latency distribution: one sample per generated token
+    /// after the first, measured between consecutive emissions (a
+    /// multi-token verify emission contributes its per-token share).
+    pub itl_hist: LatencyHist,
+    /// Submit→admission wait (one sample per admitted request).
+    pub queue_wait_hist: LatencyHist,
+    /// Prefill chunk wall-time distribution (one sample per chunk).
+    pub chunk_hist: LatencyHist,
+    /// Verify-step wall-time distribution (one sample per verify step).
+    pub verify_hist: LatencyHist,
+    /// Forward wall time split by phase (`obs::phase::PHASE_NAMES`
+    /// order: scan/attn/append/gemm), nanoseconds. Fed by the scoped
+    /// timers in `HostModel::forward_*` and the attention kernels,
+    /// drained once per engine step.
+    pub phase_ns: [u64; N_PHASES],
 }
 
 impl Metrics {
@@ -130,13 +152,11 @@ impl Metrics {
     }
 
     /// Speculative decode throughput: tokens emitted by verify steps per
-    /// second of verify wall time.
-    pub fn spec_tokens_per_s(&self) -> f64 {
-        if self.spec_s == 0.0 {
-            0.0
-        } else {
-            self.spec_emitted_tokens as f64 / self.spec_s
-        }
+    /// second of verify wall time. `None` when no verify wall time has
+    /// been recorded — a rate over a zero denominator is not a rate
+    /// (the summary prints `n/a`).
+    pub fn spec_tokens_per_s(&self) -> Option<f64> {
+        (self.spec_s > 0.0).then(|| self.spec_emitted_tokens as f64 / self.spec_s)
     }
 
     pub fn record_finish(&mut self, ttft_s: f64, tpot_s: f64, had_tpot: bool) {
@@ -208,11 +228,27 @@ impl Metrics {
 
     /// Decode throughput: generated tokens per second of decode-phase
     /// time (see [`Metrics::decode_s`] for what the span covers).
-    pub fn decode_tokens_per_s(&self) -> f64 {
-        if self.decode_s == 0.0 {
-            0.0
-        } else {
-            self.decode_tokens as f64 / self.decode_s
+    /// `None` when no decode-phase time has been recorded (e.g. the
+    /// serial PJRT fallback counts tokens but no fused-decode span) —
+    /// the summary prints `n/a` instead of a made-up zero.
+    pub fn decode_tokens_per_s(&self) -> Option<f64> {
+        (self.decode_s > 0.0).then(|| self.decode_tokens as f64 / self.decode_s)
+    }
+
+    /// Update the live pool residency and raise the peak watermark.
+    /// Called at every pool *growth* point (lease growth, follower
+    /// adoption, admission) as well as per step, so a peak reached and
+    /// released mid-step is still captured.
+    pub fn note_kv_resident(&mut self, bytes: usize) {
+        self.pool_resident_bytes = bytes;
+        self.peak_kv_bytes = self.peak_kv_bytes.max(bytes);
+    }
+
+    /// Fold one drained phase-timer sample (ns, `PHASE_NAMES` order)
+    /// into the running totals.
+    pub fn add_phase_ns(&mut self, sample: [u64; N_PHASES]) {
+        for (acc, v) in self.phase_ns.iter_mut().zip(sample.iter()) {
+            *acc += v;
         }
     }
 
@@ -242,22 +278,30 @@ impl Metrics {
             self.tokens_per_s(),
             if self.step_s > 0.0 { 100.0 * self.attention_s / self.step_s } else { 0.0 },
         );
-        if self.decode_s > 0.0 {
-            s.push_str(&format!(
-                " decode_tok/s={:.0} decode_batch_hist=[{}]",
-                self.decode_tokens_per_s(),
-                self.decode_batch_hist_compact(),
-            ));
+        if self.decode_tokens > 0 {
+            match self.decode_tokens_per_s() {
+                Some(v) => s.push_str(&format!(" decode_tok/s={v:.0}")),
+                None => s.push_str(" decode_tok/s=n/a"),
+            }
+            if !self.decode_batch_hist.is_empty() {
+                s.push_str(&format!(
+                    " decode_batch_hist=[{}]",
+                    self.decode_batch_hist_compact()
+                ));
+            }
         }
         if self.spec_steps > 0 {
+            let spec_rate = match self.spec_tokens_per_s() {
+                Some(v) => format!("{v:.0}"),
+                None => "n/a".to_string(),
+            };
             s.push_str(&format!(
                 " spec_steps={} spec_accept_rate={:.1}% spec_drafted={} spec_accepted={} \
-                 spec_tok/s={:.0}",
+                 spec_tok/s={spec_rate}",
                 self.spec_steps,
                 100.0 * self.spec_acceptance(),
                 self.spec_drafted_tokens,
                 self.spec_accepted_tokens,
-                self.spec_tokens_per_s(),
             ));
         }
         if self.peak_kv_bytes > 0 || self.pool_resident_bytes > 0 {
@@ -285,7 +329,217 @@ impl Metrics {
                 self.inflight_published_pages,
             ));
         }
+        if let Some((p50, p90, p99)) = self.ttft_hist.p50_p90_p99_ms() {
+            s.push_str(&format!(" ttft_p50/p90/p99={p50:.1}/{p90:.1}/{p99:.1}ms"));
+        }
+        if let Some((p50, p90, p99)) = self.itl_hist.p50_p90_p99_ms() {
+            s.push_str(&format!(" itl_p50/p90/p99={p50:.2}/{p90:.2}/{p99:.2}ms"));
+        }
+        if let Some((p50, p90, p99)) = self.queue_wait_hist.p50_p90_p99_ms() {
+            s.push_str(&format!(" queue_p50/p90/p99={p50:.1}/{p90:.1}/{p99:.1}ms"));
+        }
+        let phase_total: u64 = self.phase_ns.iter().sum();
+        if phase_total > 0 {
+            s.push_str(" phase[");
+            for (i, (name, ns)) in PHASE_NAMES.iter().zip(self.phase_ns.iter()).enumerate() {
+                if i > 0 {
+                    s.push(' ');
+                }
+                s.push_str(&format!(
+                    "{name}={:.1}%",
+                    100.0 * *ns as f64 / phase_total as f64
+                ));
+            }
+            s.push(']');
+        }
         s
+    }
+
+    /// Machine-readable snapshot: every counter, derived rate, latency
+    /// histogram, and the phase breakdown, as one JSON object. The shape
+    /// is the `stats` wire command's response body.
+    pub fn snapshot_json(&self) -> Json {
+        fn hist(h: &LatencyHist) -> Json {
+            fn q(h: &LatencyHist, q: f64) -> Json {
+                h.quantile_ms(q).map(Json::num).unwrap_or(Json::Null)
+            }
+            Json::obj(vec![
+                ("count", Json::num(h.count() as f64)),
+                (
+                    "mean_ms",
+                    h.mean_us().map(|v| Json::num(v / 1e3)).unwrap_or(Json::Null),
+                ),
+                ("p50_ms", q(h, 0.50)),
+                ("p90_ms", q(h, 0.90)),
+                ("p99_ms", q(h, 0.99)),
+                (
+                    "max_ms",
+                    h.max_us()
+                        .map(|v| Json::num(v as f64 / 1e3))
+                        .unwrap_or(Json::Null),
+                ),
+            ])
+        }
+        let phases = Json::obj(
+            PHASE_NAMES
+                .iter()
+                .zip(self.phase_ns.iter())
+                .map(|(name, ns)| (*name, Json::num(*ns as f64 / 1e3)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("steps", Json::num(self.steps as f64)),
+            ("prefill_tokens", Json::num(self.prefill_tokens as f64)),
+            ("decode_tokens", Json::num(self.decode_tokens as f64)),
+            ("requests_finished", Json::num(self.requests_finished as f64)),
+            ("step_s", Json::num(self.step_s)),
+            ("attention_s", Json::num(self.attention_s)),
+            ("decode_s", Json::num(self.decode_s)),
+            ("tokens_per_s", Json::num(self.tokens_per_s())),
+            (
+                "decode_tokens_per_s",
+                self.decode_tokens_per_s().map(Json::num).unwrap_or(Json::Null),
+            ),
+            (
+                "spec_tokens_per_s",
+                self.spec_tokens_per_s().map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("mean_ttft_ms", Json::num(self.mean_ttft_s() * 1e3)),
+            ("mean_tpot_ms", Json::num(self.mean_tpot_s() * 1e3)),
+            ("kv_bytes_resident", Json::num(self.pool_resident_bytes as f64)),
+            ("kv_bytes_peak", Json::num(self.peak_kv_bytes as f64)),
+            ("prefix_lookups", Json::num(self.prefix_lookups as f64)),
+            ("prefix_hits", Json::num(self.prefix_hits as f64)),
+            ("prefix_hit_tokens", Json::num(self.prefix_hit_tokens as f64)),
+            ("prefix_hit_rate", Json::num(self.prefix_hit_rate())),
+            ("prefix_bytes_saved", Json::num(self.prefix_bytes_saved as f64)),
+            (
+                "inflight_followers",
+                Json::num(self.inflight_followers as f64),
+            ),
+            (
+                "inflight_adopted_tokens",
+                Json::num(self.inflight_adopted_tokens as f64),
+            ),
+            (
+                "inflight_published_pages",
+                Json::num(self.inflight_published_pages as f64),
+            ),
+            ("spec_steps", Json::num(self.spec_steps as f64)),
+            (
+                "spec_drafted_tokens",
+                Json::num(self.spec_drafted_tokens as f64),
+            ),
+            (
+                "spec_accepted_tokens",
+                Json::num(self.spec_accepted_tokens as f64),
+            ),
+            ("spec_acceptance", Json::num(self.spec_acceptance())),
+            ("ttft", hist(&self.ttft_hist)),
+            ("itl", hist(&self.itl_hist)),
+            ("queue_wait", hist(&self.queue_wait_hist)),
+            ("chunk", hist(&self.chunk_hist)),
+            ("verify", hist(&self.verify_hist)),
+            ("phase_us", phases),
+        ])
+    }
+
+    /// Prometheus text-exposition rendering of the snapshot: counters
+    /// and gauges under a `quoka_` prefix, histograms as
+    /// `quantile`-labelled summary series plus `_count`/`_sum`.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        let mut counter = |name: &str, help: &str, v: f64| {
+            out.push_str(&format!(
+                "# HELP quoka_{name} {help}\n# TYPE quoka_{name} counter\nquoka_{name} {v}\n"
+            ));
+        };
+        counter("steps_total", "Engine steps executed.", self.steps as f64);
+        counter(
+            "prefill_tokens_total",
+            "Prompt tokens prefilled.",
+            self.prefill_tokens as f64,
+        );
+        counter(
+            "decode_tokens_total",
+            "Tokens generated.",
+            self.decode_tokens as f64,
+        );
+        counter(
+            "requests_finished_total",
+            "Requests finished.",
+            self.requests_finished as f64,
+        );
+        counter(
+            "prefix_hit_tokens_total",
+            "Prompt tokens served from the prefix cache.",
+            self.prefix_hit_tokens as f64,
+        );
+        counter(
+            "spec_accepted_tokens_total",
+            "Draft tokens accepted by verification.",
+            self.spec_accepted_tokens as f64,
+        );
+        let mut gauge = |name: &str, help: &str, v: f64| {
+            out.push_str(&format!(
+                "# HELP quoka_{name} {help}\n# TYPE quoka_{name} gauge\nquoka_{name} {v}\n"
+            ));
+        };
+        gauge(
+            "kv_bytes_resident",
+            "Current pool residency, bytes.",
+            self.pool_resident_bytes as f64,
+        );
+        gauge(
+            "kv_bytes_peak",
+            "Peak pool residency, bytes.",
+            self.peak_kv_bytes as f64,
+        );
+        gauge(
+            "tokens_per_s",
+            "Total token throughput.",
+            self.tokens_per_s(),
+        );
+        for (name, help, ns) in PHASE_NAMES
+            .iter()
+            .zip(self.phase_ns.iter())
+            .map(|(n, ns)| (*n, "Forward wall time in this phase, seconds.", *ns))
+        {
+            out.push_str(&format!(
+                "# HELP quoka_phase_seconds {help}\n# TYPE quoka_phase_seconds gauge\n\
+                 quoka_phase_seconds{{phase=\"{name}\"}} {}\n",
+                ns as f64 / 1e9
+            ));
+        }
+        for (name, h) in [
+            ("ttft", &self.ttft_hist),
+            ("itl", &self.itl_hist),
+            ("queue_wait", &self.queue_wait_hist),
+            ("chunk", &self.chunk_hist),
+            ("verify", &self.verify_hist),
+        ] {
+            out.push_str(&format!(
+                "# HELP quoka_{name}_seconds Latency summary.\n# TYPE quoka_{name}_seconds summary\n"
+            ));
+            for q in [0.5, 0.9, 0.99] {
+                if let Some(v) = h.quantile_us(q) {
+                    out.push_str(&format!(
+                        "quoka_{name}_seconds{{quantile=\"{q}\"}} {}\n",
+                        v as f64 / 1e6
+                    ));
+                }
+            }
+            out.push_str(&format!("quoka_{name}_seconds_count {}\n", h.count()));
+            if let Some(mean) = h.mean_us() {
+                out.push_str(&format!(
+                    "quoka_{name}_seconds_sum {}\n",
+                    mean * h.count() as f64 / 1e6
+                ));
+            } else {
+                out.push_str(&format!("quoka_{name}_seconds_sum 0\n"));
+            }
+        }
+        out
     }
 }
 
@@ -328,17 +582,20 @@ mod tests {
         assert_eq!(m.decode_batch_hist[8], 2);
         assert_eq!(m.decode_batch_hist_compact(), "1:1 8:2");
         assert!((m.decode_s - 0.035).abs() < 1e-9);
-        assert!((m.decode_tokens_per_s() - 17.0 / 0.035).abs() < 1e-6);
+        assert!((m.decode_tokens_per_s().unwrap() - 17.0 / 0.035).abs() < 1e-6);
         let s = m.summary();
         assert!(s.contains("decode_tok/s="), "{s}");
         assert!(s.contains("decode_batch_hist=[1:1 8:2]"), "{s}");
 
         // A serial decode fallback (PJRT) still counts tokens but must not
-        // claim a fused batch in the histogram or the summary.
+        // claim a fused batch in the histogram, a throughput over a zero
+        // decode span, or a batch section in the summary.
         let mut p = Metrics::default();
         p.record_step(Duration::from_millis(20), 0, 8, None);
         assert_eq!(p.decode_tokens, 8);
         assert!(p.decode_batch_hist.is_empty());
+        assert_eq!(p.decode_tokens_per_s(), None, "zero decode_s is not a rate");
+        assert!(p.summary().contains("decode_tok/s=n/a"), "{}", p.summary());
         assert!(!p.summary().contains("decode_batch_hist"), "{}", p.summary());
     }
 
@@ -358,13 +615,89 @@ mod tests {
         assert!((m.spec_acceptance() - 4.0 / 5.0).abs() < 1e-12);
         assert!((m.spec_s - 0.015).abs() < 1e-12);
         assert!((m.decode_s - 0.015).abs() < 1e-12, "verify time is decode time");
-        assert!((m.spec_tokens_per_s() - 6.0 / 0.015).abs() < 1e-6);
+        assert!((m.spec_tokens_per_s().unwrap() - 6.0 / 0.015).abs() < 1e-6);
         let s = m.summary();
         assert!(s.contains("spec_accept_rate=80.0%"), "{s}");
         assert!(s.contains("spec_drafted=5"), "{s}");
         // No speculation ⇒ no spec section.
         let q = Metrics::default();
         assert!(!q.summary().contains("spec_"), "{}", q.summary());
+    }
+
+    #[test]
+    fn zero_spec_span_reports_no_rate() {
+        let mut m = Metrics::default();
+        assert_eq!(m.spec_tokens_per_s(), None);
+        // A verify step with a (degenerate) zero duration still has no
+        // spec wall time: the summary must print n/a, not inf/NaN.
+        m.record_verify(Duration::ZERO, 3, 2, 3);
+        assert_eq!(m.spec_tokens_per_s(), None);
+        assert!(m.summary().contains("spec_tok/s=n/a"), "{}", m.summary());
+    }
+
+    #[test]
+    fn kv_peak_tracks_mid_step_growth() {
+        let mut m = Metrics::default();
+        m.note_kv_resident(10_000);
+        m.note_kv_resident(50_000); // transient peak mid-step
+        m.note_kv_resident(20_000); // released before the step ended
+        assert_eq!(m.pool_resident_bytes, 20_000);
+        assert_eq!(m.peak_kv_bytes, 50_000, "mid-step peak must not be lost");
+    }
+
+    #[test]
+    fn summary_reports_latency_quantiles_and_phases() {
+        let mut m = Metrics::default();
+        for i in 1..=100u64 {
+            m.ttft_hist.record_us(i * 1000); // 1..100 ms
+            m.itl_hist.record_us(i * 100); // 0.1..10 ms
+        }
+        m.queue_wait_hist.record_us(2_000);
+        m.add_phase_ns([100, 200, 300, 400]);
+        m.add_phase_ns([0, 100, 0, 0]);
+        assert_eq!(m.phase_ns, [100, 300, 300, 400]);
+        let s = m.summary();
+        assert!(s.contains("ttft_p50/p90/p99="), "{s}");
+        assert!(s.contains("itl_p50/p90/p99="), "{s}");
+        assert!(s.contains("queue_p50/p90/p99="), "{s}");
+        assert!(s.contains("phase[scan="), "{s}");
+        assert!(s.contains("gemm="), "{s}");
+        // Empty metrics stay clean: no quantile or phase sections.
+        let q = Metrics::default();
+        assert!(!q.summary().contains("ttft_p50"), "{}", q.summary());
+        assert!(!q.summary().contains("phase["), "{}", q.summary());
+    }
+
+    #[test]
+    fn snapshot_json_and_prometheus_render() {
+        let mut m = Metrics::default();
+        m.record_step(Duration::from_millis(100), 128, 2, Some(Duration::from_millis(10)));
+        m.record_finish(0.05, 0.01, true);
+        m.ttft_hist.record_secs(0.05);
+        m.itl_hist.record_secs(0.01);
+        m.note_kv_resident(4096);
+        m.add_phase_ns([1_000_000, 2_000_000, 500_000, 3_000_000]);
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("steps").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(snap.get("prefill_tokens").and_then(Json::as_f64), Some(128.0));
+        let ttft = snap.get("ttft").expect("ttft histogram");
+        assert_eq!(ttft.get("count").and_then(Json::as_f64), Some(1.0));
+        assert!(ttft.get("p50_ms").and_then(Json::as_f64).is_some());
+        let phases = snap.get("phase_us").expect("phase table");
+        assert_eq!(phases.get("attn").and_then(Json::as_f64), Some(2000.0));
+        // The snapshot round-trips through the JSON parser.
+        let parsed = Json::parse(&snap.to_string()).expect("valid JSON");
+        assert_eq!(parsed.get("kv_bytes_peak").and_then(Json::as_f64), Some(4096.0));
+        // Null rates stay null, not 0.
+        let empty = Metrics::default().snapshot_json();
+        assert_eq!(empty.get("spec_tokens_per_s"), Some(&Json::Null));
+
+        let prom = m.prometheus_text();
+        assert!(prom.contains("# TYPE quoka_steps_total counter"), "{prom}");
+        assert!(prom.contains("quoka_prefill_tokens_total 128"), "{prom}");
+        assert!(prom.contains("quoka_ttft_seconds{quantile=\"0.5\"}"), "{prom}");
+        assert!(prom.contains("quoka_phase_seconds{phase=\"attn\"} 0.002"), "{prom}");
+        assert!(prom.contains("quoka_ttft_seconds_count 1"), "{prom}");
     }
 
     #[test]

@@ -79,6 +79,11 @@ pub struct SeqEntry {
     pub generated: Vec<u32>,
     pub admitted_at: Instant,
     pub first_token_at: Option<Instant>,
+    /// When the most recent token(s) were emitted — the anchor for the
+    /// inter-token-latency histogram. Set with the first token, advanced
+    /// on every subsequent emission (a batched verify emission advances
+    /// it once and contributes per-token samples).
+    pub last_token_at: Option<Instant>,
     pub finished_at: Option<Instant>,
     /// KV blocks currently leased from the block allocator. In paged mode
     /// these are pool page ids; a prefix-cache hit pre-populates the head
@@ -119,6 +124,7 @@ impl SeqEntry {
             generated: Vec::new(),
             admitted_at: Instant::now(),
             first_token_at: None,
+            last_token_at: None,
             finished_at: None,
             blocks: Vec::new(),
             cached_tokens: 0,

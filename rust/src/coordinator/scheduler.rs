@@ -10,6 +10,7 @@
 
 use super::kv_blocks::BlockAllocator;
 use super::request::{Phase, SeqEntry};
+use crate::obs::{TraceEventKind, Tracer};
 use std::collections::VecDeque;
 
 /// Scheduler configuration.
@@ -110,6 +111,18 @@ impl Scheduler {
         seqs: &mut std::collections::HashMap<u64, SeqEntry>,
         blocks: &mut BlockAllocator,
     ) -> StepPlan {
+        self.plan_traced(seqs, blocks, &mut Tracer::disabled())
+    }
+
+    /// [`Scheduler::plan`] with lifecycle tracing: admissions emit an
+    /// `Admit` event at the decision site (the engine passes its
+    /// tracer; [`Scheduler::plan`] passes a disabled one).
+    pub fn plan_traced(
+        &mut self,
+        seqs: &mut std::collections::HashMap<u64, SeqEntry>,
+        blocks: &mut BlockAllocator,
+        tracer: &mut Tracer,
+    ) -> StepPlan {
         let mut plan = StepPlan::default();
 
         // ---- admission (by real residency) ----
@@ -127,6 +140,7 @@ impl Scheduler {
                     self.waiting.pop_front();
                     self.running.push(cand);
                     plan.admitted.push(cand);
+                    tracer.record(cand, TraceEventKind::Admit);
                 }
                 None => break, // FCFS: don't skip ahead of the head-of-line
             }

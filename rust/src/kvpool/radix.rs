@@ -468,6 +468,19 @@ impl RadixCache {
         pool: &mut KvPool,
         alloc: &mut BlockAllocator,
     ) -> usize {
+        self.evict_until_traced(min_free, pool, alloc, &mut crate::obs::Tracer::disabled())
+    }
+
+    /// [`RadixCache::evict_until`] with lifecycle tracing: a non-empty
+    /// eviction emits one engine-scope `Evict{pages}` event at the
+    /// pressure site (the engine passes its tracer).
+    pub fn evict_until_traced(
+        &mut self,
+        min_free: usize,
+        pool: &mut KvPool,
+        alloc: &mut BlockAllocator,
+        tracer: &mut crate::obs::Tracer,
+    ) -> usize {
         let mut freed = 0;
         while alloc.free_blocks() < min_free {
             // Batch entries stay valid as the batch drains: an evictable
@@ -498,6 +511,9 @@ impl RadixCache {
                 self.stats.evicted_blocks += 1;
                 freed += 1;
             }
+        }
+        if freed > 0 {
+            tracer.record(0, crate::obs::TraceEventKind::Evict { pages: freed as u32 });
         }
         freed
     }

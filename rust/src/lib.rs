@@ -26,6 +26,7 @@
 
 pub mod util;
 pub mod tensor;
+pub mod obs;
 pub mod select;
 pub mod kvpool;
 pub mod spec;

@@ -10,7 +10,7 @@
 
 use quoka::bench::{latency, prefix, spec, tables};
 use quoka::coordinator::{Engine, EngineCfg, KvLayout, SchedCfg};
-use quoka::server::{serve, Client, WireRequest};
+use quoka::server::{serve_with_opts, Client, ServeOpts, WireRequest};
 use quoka::util::cli::{usage, Args, OptSpec};
 
 fn main() {
@@ -23,6 +23,7 @@ fn main() {
     let result = match cmd.as_str() {
         "serve" => cmd_serve(argv),
         "request" => cmd_request(argv),
+        "stats" => cmd_stats(argv),
         "bench" => cmd_bench(argv),
         "eval" => cmd_eval(argv),
         "inspect" => cmd_inspect(argv),
@@ -48,6 +49,7 @@ fn print_help() {
          COMMANDS:\n\
          \x20 serve     start the serving engine (TCP, newline-JSON)\n\
          \x20 request   send one request to a running server\n\
+         \x20 stats     fetch metrics from a running server (JSON or Prometheus)\n\
          \x20 bench     regenerate a paper table/figure (see DESIGN.md §6)\n\
          \x20 eval      score one policy on one workload\n\
          \x20 inspect   print the artifact manifest + model summary\n\n\
@@ -72,6 +74,8 @@ fn serve_specs() -> Vec<OptSpec> {
         OptSpec { name: "spec-gamma", help: "speculative decode: max draft tokens per step (0 = off)", default: Some("0"), boolean: false },
         OptSpec { name: "spec-policy", help: "speculative draft policy (off | pld)", default: Some("pld"), boolean: false },
         OptSpec { name: "kv-dtype", help: "KV cache element type: f32 | int8 (int8 = 4x smaller cache, dequantized in-tile; host backend, dense/quoka* policies)", default: Some("f32"), boolean: false },
+        OptSpec { name: "trace-out", help: "write the request-lifecycle trace (JSONL) here at shutdown and on the flush_trace wire command; enables tracing", default: None, boolean: false },
+        OptSpec { name: "trace-events", help: "lifecycle-trace ring capacity in events (0 = off unless --trace-out is set)", default: Some("0"), boolean: false },
         OptSpec { name: "help", help: "show help", default: None, boolean: true },
     ]
 }
@@ -109,14 +113,19 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     let preset = a.str("preset")?;
     let artifacts = a.str("artifacts")?;
     let addr = a.str("addr")?;
+    let opts = ServeOpts {
+        trace_events: a.usize("trace-events")?,
+        trace_out: a.get("trace-out").map(std::path::PathBuf::from),
+    };
     println!("starting quoka-serve backend={backend} addr={addr}");
-    let handle = serve(
+    let handle = serve_with_opts(
         move || match backend.as_str() {
             "host" => Engine::new_host(&preset, cfg),
             "pjrt" => Engine::new_pjrt(&artifacts, cfg),
             other => anyhow::bail!("unknown backend '{other}'"),
         },
         &addr,
+        opts,
     )?;
     println!("listening on {} — newline-JSON requests; Ctrl-C to stop", handle.addr);
     loop {
@@ -174,6 +183,37 @@ fn cmd_request(argv: Vec<String>) -> anyhow::Result<()> {
         resp.spec_accepted_tokens,
         resp.text
     );
+    Ok(())
+}
+
+fn cmd_stats(argv: Vec<String>) -> anyhow::Result<()> {
+    let specs = vec![
+        OptSpec { name: "addr", help: "server address", default: Some("127.0.0.1:7700"), boolean: false },
+        OptSpec { name: "prometheus", help: "print the Prometheus text exposition instead of JSON", default: None, boolean: true },
+        OptSpec { name: "flush-trace", help: "also flush the server's trace ring to its --trace-out path", default: None, boolean: true },
+        OptSpec { name: "help", help: "show help", default: None, boolean: true },
+    ];
+    let a = Args::parse(argv, &specs)?;
+    if a.bool("help") {
+        println!("{}", usage("stats", "Fetch metrics from a running server.", &specs));
+        return Ok(());
+    }
+    let addr: std::net::SocketAddr = a.str("addr")?.parse()?;
+    let mut c = Client::connect(addr)?;
+    let stats = c.stats()?;
+    if a.bool("prometheus") {
+        let text = stats
+            .get("prometheus")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("stats reply missing prometheus text"))?;
+        print!("{text}");
+    } else {
+        println!("{}", stats.to_string());
+    }
+    if a.bool("flush-trace") {
+        let flush = c.flush_trace()?;
+        eprintln!("{}", flush.to_string());
+    }
     Ok(())
 }
 

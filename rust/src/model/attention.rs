@@ -437,6 +437,7 @@ pub fn chunk_attention(
     scratch: &mut AttnScratch,
     out: &mut [f32],
 ) {
+    let _t = crate::obs::phase::scoped(crate::obs::phase::Phase::Attn);
     debug_assert_eq!(q.len(), n_q_heads * s * d);
     debug_assert_eq!(out.len(), n_q_heads * s * d);
     let n_kv = cache.n_kv;
@@ -1195,6 +1196,7 @@ pub fn paged_chunk_attention(
     scratch: &mut AttnScratch,
     out: &mut [f32],
 ) {
+    let _t = crate::obs::phase::scoped(crate::obs::phase::Phase::Attn);
     debug_assert_eq!(q.len(), n_q_heads * s * d);
     debug_assert_eq!(out.len(), n_q_heads * s * d);
     debug_assert_eq!(paged.d, d);
@@ -1265,6 +1267,7 @@ pub fn batched_decode_attention(
     scratch: &mut AttnScratch,
     out: &mut [f32],
 ) {
+    let _t = crate::obs::phase::scoped(crate::obs::phase::Phase::Attn);
     assert_eq!(seqs.len(), bsz);
     assert!(bsz > 0);
     debug_assert_eq!(q.len(), n_q_heads * bsz * d);

@@ -13,6 +13,7 @@ use super::attention::{
 use super::config::ModelConfig;
 use super::weights::{LayerWeights, Weights};
 use crate::kvpool::{KvDtype, KvPool};
+use crate::obs::phase::{scoped, Phase};
 use crate::select::{fit, QChunk, SelectCtx, Selection, SelectionPolicy};
 use crate::tensor::matmul::{matmul, matmul_bt_argmax};
 use crate::tensor::ops::{rmsnorm, silu, RopeTable};
@@ -180,6 +181,7 @@ impl HostModel {
         pos: RowPos,
         sc: &mut FwdScratch,
     ) {
+        let _t = scoped(Phase::Gemm);
         let cfg = &self.w.cfg;
         let (dm, dh) = (cfg.d_model, cfg.d_head);
         let (nq, nkv) = (cfg.n_q_heads, cfg.n_kv_heads);
@@ -229,6 +231,7 @@ impl HostModel {
     /// `[H, s, dh] → [s, H*dh]` merge of `sc.attn_heads`, output
     /// projection, residual add into `hidden`.
     fn layer_attn_output(&self, lw: &LayerWeights, s: usize, hidden: &mut [f32], sc: &mut FwdScratch) {
+        let _t = scoped(Phase::Gemm);
         let cfg = &self.w.cfg;
         let (dm, dh) = (cfg.d_model, cfg.d_head);
         let nq = cfg.n_q_heads;
@@ -250,6 +253,7 @@ impl HostModel {
 
     /// FFN block (SwiGLU; optional top-1 MoE) with residual add.
     fn layer_ffn(&self, lw: &LayerWeights, s: usize, hidden: &mut [f32], sc: &mut FwdScratch) {
+        let _t = scoped(Phase::Gemm);
         let cfg = &self.w.cfg;
         let dm = cfg.d_model;
         let normed = fit(&mut sc.normed, s * dm);
@@ -337,6 +341,7 @@ impl HostModel {
             let sel = if cache.t == 0 || policy.is_dense() {
                 Selection::All
             } else {
+                let _t = scoped(Phase::Scan);
                 let qv = QChunk::new(&sc.q_heads[..nq * s * dh], nq, s, dh);
                 policy.select(&qv, &cache.k_view(), budget, ctx)
             };
@@ -356,7 +361,14 @@ impl HostModel {
             self.layer_attn_output(lw, s, &mut hidden, sc);
 
             // Append the chunk's KV to the cache (full retention).
-            state.caches[l].append(&sc.k_heads[..nkv * s * dh], &sc.v_heads[..nkv * s * dh], s);
+            {
+                let _t = scoped(Phase::Append);
+                state.caches[l].append(
+                    &sc.k_heads[..nkv * s * dh],
+                    &sc.v_heads[..nkv * s * dh],
+                    s,
+                );
+            }
 
             self.layer_ffn(lw, s, &mut hidden, sc);
         }
@@ -405,6 +417,7 @@ impl HostModel {
             let sel = if pos == 0 || policy.is_dense() {
                 Selection::All
             } else {
+                let _t = scoped(Phase::Scan);
                 let qv = QChunk::new(&sc.q_heads[..nq * s * dh], nq, s, dh);
                 let kc = pool.k_cache(blocks, pos, l);
                 policy.select(&qv, &kc, budget, ctx)
@@ -427,14 +440,17 @@ impl HostModel {
             }
             self.layer_attn_output(lw, s, &mut hidden, sc);
 
-            pool.append_chunk(
-                blocks,
-                l,
-                pos,
-                &sc.k_heads[..nkv * s * dh],
-                &sc.v_heads[..nkv * s * dh],
-                s,
-            );
+            {
+                let _t = scoped(Phase::Append);
+                pool.append_chunk(
+                    blocks,
+                    l,
+                    pos,
+                    &sc.k_heads[..nkv * s * dh],
+                    &sc.v_heads[..nkv * s * dh],
+                    s,
+                );
+            }
 
             self.layer_ffn(lw, s, &mut hidden, sc);
         }
@@ -504,6 +520,7 @@ impl HostModel {
                         q_seq[h * dh..(h + 1) * dh].copy_from_slice(&q_heads[src..src + dh]);
                     }
                     let qv = QChunk::new(&q_seq[..nq * dh], nq, 1, dh);
+                    let _t = scoped(Phase::Scan);
                     std::mem::swap(&mut ctx.shared_indices, &mut seq_shared[bi]);
                     let sel = match &seq.kv {
                         DecodeKv::Private(st) => {
@@ -555,24 +572,28 @@ impl HostModel {
 
             // ---- append each sequence's token KV straight from the batch
             // layout (no contiguous staging copy) ----
-            for (bi, seq) in seqs.iter_mut().enumerate() {
-                match &mut seq.kv {
-                    DecodeKv::Private(st) => st.caches[l].append_token_strided(
-                        &sc.k_heads[..nkv * b * dh],
-                        &sc.v_heads[..nkv * b * dh],
-                        bi,
-                        b,
-                    ),
-                    DecodeKv::Paged { blocks, pos } => {
-                        pool.as_deref_mut().expect("paged decode without a pool").append_token_strided(
-                            blocks,
-                            l,
-                            *pos,
+            {
+                let _t = scoped(Phase::Append);
+                for (bi, seq) in seqs.iter_mut().enumerate() {
+                    match &mut seq.kv {
+                        DecodeKv::Private(st) => st.caches[l].append_token_strided(
                             &sc.k_heads[..nkv * b * dh],
                             &sc.v_heads[..nkv * b * dh],
                             bi,
                             b,
-                        )
+                        ),
+                        DecodeKv::Paged { blocks, pos } => pool
+                            .as_deref_mut()
+                            .expect("paged decode without a pool")
+                            .append_token_strided(
+                                blocks,
+                                l,
+                                *pos,
+                                &sc.k_heads[..nkv * b * dh],
+                                &sc.v_heads[..nkv * b * dh],
+                                bi,
+                                b,
+                            ),
                     }
                 }
             }
@@ -587,6 +608,7 @@ impl HostModel {
 
         // ---- fused logits head: final-norm all rows, one [B, dm] ×
         // embeddingᵀ GEMM reduced straight to per-row argmax ----
+        let _t = scoped(Phase::Gemm);
         let normed = fit(&mut sc.normed, b * dm);
         for i in 0..b {
             rmsnorm(
@@ -680,6 +702,7 @@ impl HostModel {
                     Selection::All
                 } else {
                     let qv = QChunk::new(&sc.q_seq[..nq * dh], nq, 1, dh);
+                    let _t = scoped(Phase::Scan);
                     std::mem::swap(&mut ctx.shared_indices, &mut pos_shared[i]);
                     let sel = match kv {
                         DecodeKv::Private(st) => {
@@ -742,6 +765,7 @@ impl HostModel {
                 // the serial decode order, so later positions see (and
                 // policies may prune) earlier draft keys exactly as a
                 // non-speculative run would.
+                let _ta = scoped(Phase::Append);
                 match kv {
                     DecodeKv::Private(st) => st.caches[l].append_token_strided(
                         &sc.k_heads[..nkv * s * dh],
@@ -773,6 +797,7 @@ impl HostModel {
 
         // ---- fused per-position logits: one [s, dm] × embeddingᵀ GEMM
         // reduced straight to a greedy target per row ----
+        let _t = scoped(Phase::Gemm);
         let normed = fit(&mut sc.normed, s * dm);
         for i in 0..s {
             rmsnorm(
@@ -815,6 +840,7 @@ impl HostModel {
     /// reusable scratch, then the fused GEMV+argmax — the full-vocab
     /// logits row is never materialized.
     pub fn greedy_next(&self, hidden: &[f32]) -> u32 {
+        let _t = scoped(Phase::Gemm);
         let cfg = &self.w.cfg;
         let dm = cfg.d_model;
         let last = &hidden[hidden.len() - dm..];

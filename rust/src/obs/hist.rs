@@ -1,0 +1,300 @@
+//! Streaming log-bucketed latency histograms (HDR-style).
+//!
+//! Fixed memory (one `[u64; 384]` per histogram, ~3 KB), O(1) record,
+//! mergeable, with quantile estimation bounded by the bucket width. The
+//! bucket layout is the classic HDR scheme: values below [`SUB`] land in
+//! exact linear buckets; above that, each power-of-two octave is split
+//! into [`SUB`] sub-buckets, so the relative quantization error is at
+//! most `1/SUB` (6.25%) everywhere. Values beyond the covered range
+//! saturate into the top bucket instead of being dropped, so `count()`
+//! and quantile ranks stay exact even for outliers.
+//!
+//! All values are recorded in **microseconds**; convenience accessors
+//! report milliseconds for human-facing summaries. With `SUB = 16` and
+//! 384 buckets the range covers `[0, ~130 s)` before saturation — far
+//! beyond any per-step latency this engine produces.
+
+use std::time::Duration;
+
+/// log2 of the sub-bucket count per octave.
+const SUB_BITS: usize = 4;
+/// Sub-buckets per octave; also the length of the exact linear prefix.
+const SUB: usize = 1 << SUB_BITS;
+/// Total bucket count. Index `i >= SUB` covers octave `i / SUB` with
+/// lower bound `(SUB + i % SUB) << (i / SUB - 1)` microseconds.
+const N_BUCKETS: usize = 24 * SUB;
+
+/// Index of the bucket holding `v` (saturating at the top bucket).
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize;
+    let sub = ((v >> (msb - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    let idx = (msb - SUB_BITS + 1) * SUB + sub;
+    idx.min(N_BUCKETS - 1)
+}
+
+/// Inclusive lower bound of bucket `i`, in microseconds.
+#[inline]
+fn bucket_low(i: usize) -> u64 {
+    if i < SUB {
+        i as u64
+    } else {
+        ((SUB + i % SUB) as u64) << (i / SUB - 1)
+    }
+}
+
+/// Representative value reported for bucket `i`: the midpoint of its
+/// range (its own width above the lower bound), except the saturating
+/// top bucket, which reports its lower bound.
+#[inline]
+fn bucket_mid(i: usize) -> u64 {
+    if i + 1 >= N_BUCKETS {
+        return bucket_low(i);
+    }
+    (bucket_low(i) + bucket_low(i + 1)) / 2
+}
+
+/// A streaming latency histogram over microsecond samples.
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    counts: [u64; N_BUCKETS],
+    count: u64,
+    sum_us: u64,
+    min_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> LatencyHist {
+        LatencyHist::new()
+    }
+}
+
+impl LatencyHist {
+    pub const fn new() -> LatencyHist {
+        LatencyHist {
+            counts: [0; N_BUCKETS],
+            count: 0,
+            sum_us: 0,
+            min_us: u64::MAX,
+            max_us: 0,
+        }
+    }
+
+    /// Record one sample (microseconds). O(1), allocation-free.
+    #[inline]
+    pub fn record_us(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(v);
+        self.min_us = self.min_us.min(v);
+        self.max_us = self.max_us.max(v);
+    }
+
+    /// Record one sample given as a [`Duration`].
+    #[inline]
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record one sample given in (fractional) seconds.
+    #[inline]
+    pub fn record_secs(&mut self, s: f64) {
+        self.record_us((s.max(0.0) * 1e6) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact max of recorded samples (`None` when empty).
+    pub fn max_us(&self) -> Option<u64> {
+        (self.count > 0).then_some(self.max_us)
+    }
+
+    /// Exact min of recorded samples (`None` when empty).
+    pub fn min_us(&self) -> Option<u64> {
+        (self.count > 0).then_some(self.min_us)
+    }
+
+    /// Exact mean of recorded samples (`None` when empty).
+    pub fn mean_us(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum_us as f64 / self.count as f64)
+    }
+
+    /// Estimated quantile `q in [0, 1]` in microseconds (`None` when
+    /// empty). Reports the representative value of the bucket holding
+    /// the rank-`ceil(q * count)` sample, clamped to the exact observed
+    /// min/max so q=0 / q=1 are exact.
+    pub fn quantile_us(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(bucket_mid(i).clamp(self.min_us, self.max_us));
+            }
+        }
+        Some(self.max_us) // unreachable: seen reaches count
+    }
+
+    /// `quantile_us` in milliseconds.
+    pub fn quantile_ms(&self, q: f64) -> Option<f64> {
+        self.quantile_us(q).map(|us| us as f64 / 1e3)
+    }
+
+    /// Fold another histogram into this one. Merging is exact (bucket
+    /// layouts are identical) and associative/commutative.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// `p50/p90/p99` in milliseconds, for summaries (`None` when empty).
+    pub fn p50_p90_p99_ms(&self) -> Option<(f64, f64, f64)> {
+        Some((
+            self.quantile_ms(0.50)?,
+            self.quantile_ms(0.90)?,
+            self.quantile_ms(0.99)?,
+        ))
+    }
+
+    /// Non-empty buckets as `(low_us, count)` pairs — the export shape
+    /// used by the Prometheus rendering.
+    pub fn nonzero_buckets(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_low(i), c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_contiguous_and_monotonic() {
+        // Every value maps to a bucket whose [low, next-low) range
+        // contains it, and bucket lows strictly increase.
+        for i in 1..N_BUCKETS {
+            assert!(bucket_low(i) > bucket_low(i - 1), "bucket {i} not increasing");
+        }
+        for v in (0..4096u64).chain([1 << 20, (1 << 20) + 7, u64::MAX / 2]) {
+            let i = bucket_of(v);
+            assert!(bucket_low(i) <= v, "v={v} below its bucket low");
+            if i + 1 < N_BUCKETS {
+                assert!(v < bucket_low(i + 1), "v={v} beyond bucket {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_are_monotonic_in_q_and_bounded() {
+        let mut h = LatencyHist::new();
+        let mut x = 1u64;
+        for i in 0..10_000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            h.record_us(i * 17 % 50_000 + (x % 97));
+        }
+        let mut prev = 0u64;
+        for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999, 1.0] {
+            let v = h.quantile_us(q).unwrap();
+            assert!(v >= prev, "quantile decreased at q={q}: {v} < {prev}");
+            assert!(v >= h.min_us().unwrap() && v <= h.max_us().unwrap());
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn quantile_error_is_within_bucket_resolution() {
+        // Uniform 0..100ms: p50 must land within the HDR error bound
+        // (1/SUB relative) of the true 50ms.
+        let mut h = LatencyHist::new();
+        for v in 0..100_000u64 {
+            h.record_us(v);
+        }
+        let p50 = h.quantile_us(0.5).unwrap() as f64;
+        assert!((p50 - 50_000.0).abs() / 50_000.0 < 1.0 / SUB as f64, "p50={p50}");
+    }
+
+    #[test]
+    fn merge_is_associative_and_matches_inline_recording() {
+        let samples: Vec<u64> = (0..999u64).map(|i| i * i % 70_001).collect();
+        let (mut a, mut b, mut c, mut all) = (
+            LatencyHist::new(),
+            LatencyHist::new(),
+            LatencyHist::new(),
+            LatencyHist::new(),
+        );
+        for (i, &v) in samples.iter().enumerate() {
+            [&mut a, &mut b, &mut c][i % 3].record_us(v);
+            all.record_us(v);
+        }
+        // (a + b) + c
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        // a + (b + c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        for h in [&ab_c, &a_bc] {
+            assert_eq!(h.count(), all.count());
+            assert_eq!(h.min_us(), all.min_us());
+            assert_eq!(h.max_us(), all.max_us());
+            assert!(h.counts.iter().eq(all.counts.iter()), "bucket mismatch");
+        }
+    }
+
+    #[test]
+    fn top_bucket_saturates_instead_of_dropping() {
+        let mut h = LatencyHist::new();
+        h.record_us(u64::MAX);
+        h.record_us(u64::MAX / 3);
+        h.record_us(bucket_low(N_BUCKETS - 1)); // exactly at the top
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.counts[N_BUCKETS - 1], 3);
+        // Quantiles stay finite and within the top bucket's range.
+        let p50 = h.quantile_us(0.5).unwrap();
+        assert!(p50 >= bucket_low(N_BUCKETS - 1));
+        assert_eq!(h.max_us().unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn empty_hist_reports_none_everywhere() {
+        let h = LatencyHist::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile_us(0.5), None);
+        assert_eq!(h.mean_us(), None);
+        assert_eq!(h.min_us(), None);
+        assert_eq!(h.max_us(), None);
+        assert_eq!(h.p50_p90_p99_ms(), None);
+    }
+
+    #[test]
+    fn record_secs_and_duration_agree() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        a.record_secs(0.5);
+        b.record(Duration::from_micros(500_000));
+        assert_eq!(a.quantile_us(1.0), b.quantile_us(1.0));
+    }
+}

@@ -1,0 +1,27 @@
+//! Observability: lifecycle tracing, latency histograms, phase timers.
+//!
+//! Three small, dependency-free pieces that the serving stack threads
+//! through every layer (PR 7):
+//!
+//! * [`tracer`] — a ring-buffered, monotonic-clock [`Tracer`] of typed
+//!   per-request lifecycle events (`submit → admit → chunks → first
+//!   token → decode/verify → finish`), flushed to JSONL for
+//!   `scripts/trace_report.py`.
+//! * [`hist`] — fixed-memory HDR-style [`LatencyHist`] histograms for
+//!   TTFT / inter-token latency / queue wait / chunk and verify
+//!   durations, powering the p50/p90/p99 lines of the engine summary
+//!   and the `stats` wire command.
+//! * [`phase`] — thread-local scoped timers splitting forward wall time
+//!   into selection scan / attention tiles / KV append / GEMMs.
+//!
+//! Everything is off the hot path by construction: tracing disabled is
+//! one branch per event site, histograms are O(1) array bumps, and
+//! phase guards are two monotonic-clock reads per scope.
+
+pub mod hist;
+pub mod phase;
+pub mod tracer;
+
+pub use hist::LatencyHist;
+pub use phase::{scoped, Phase, N_PHASES, PHASE_NAMES};
+pub use tracer::{TraceEvent, TraceEventKind, Tracer};

@@ -1,0 +1,143 @@
+//! Per-phase wall-clock breakdown of the forward path.
+//!
+//! Scoped guards around the four hot phases of a forward pass —
+//! selection **scan**, **attention** tiles, KV **append**, and the
+//! projection/FFN/logits **GEMMs** — accumulate elapsed wall time into a
+//! thread-local table. The engine (or a bench) drains the table with
+//! [`take`] after driving the model and folds it into its metrics.
+//!
+//! Guards are allocation-free (two `Instant::now()` calls and a few
+//! `Cell` updates per scope) and nesting-safe: a guard only adds its
+//! elapsed time when it is the *outermost* guard of its phase on the
+//! thread, so instrumenting both a caller (e.g. `forward_chunk`'s
+//! attention call site) and its callee kernel never double-counts.
+//! Accumulation is thread-local to the thread that opens the guard:
+//! kernel entry points open their guard on the calling thread and block
+//! until their internal `parallel_for` completes, so the recorded time
+//! is the phase's wall time as seen by the forward path — exactly the
+//! quantity a latency breakdown wants (not CPU time summed over
+//! workers).
+
+use std::cell::Cell;
+use std::time::Instant;
+
+/// The instrumented phases, in export order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// QUOKA selection scan over the past cache.
+    Scan = 0,
+    /// Attention tiles (past + self), any kernel variant.
+    Attn = 1,
+    /// KV append into private buffers or pool pages.
+    Append = 2,
+    /// Dense GEMMs: QKV/output projections, FFN, logits head.
+    Gemm = 3,
+}
+
+pub const N_PHASES: usize = 4;
+
+/// Export labels, indexed by `Phase as usize`.
+pub const PHASE_NAMES: [&str; N_PHASES] = ["scan", "attn", "append", "gemm"];
+
+thread_local! {
+    static ACC_NS: Cell<[u64; N_PHASES]> = const { Cell::new([0; N_PHASES]) };
+    static DEPTH: Cell<[u32; N_PHASES]> = const { Cell::new([0; N_PHASES]) };
+}
+
+/// RAII guard: time from construction to drop is credited to `phase`
+/// (outermost guard of that phase only).
+pub struct PhaseGuard {
+    phase: usize,
+    start: Instant,
+    outermost: bool,
+}
+
+/// Open a scoped timer for `phase` on the current thread.
+#[inline]
+pub fn scoped(phase: Phase) -> PhaseGuard {
+    let p = phase as usize;
+    let outermost = DEPTH.with(|d| {
+        let mut v = d.get();
+        let outer = v[p] == 0;
+        v[p] += 1;
+        d.set(v);
+        outer
+    });
+    PhaseGuard { phase: p, start: Instant::now(), outermost }
+}
+
+impl Drop for PhaseGuard {
+    #[inline]
+    fn drop(&mut self) {
+        let elapsed = self.start.elapsed().as_nanos() as u64;
+        DEPTH.with(|d| {
+            let mut v = d.get();
+            v[self.phase] -= 1;
+            d.set(v);
+        });
+        if self.outermost {
+            ACC_NS.with(|a| {
+                let mut v = a.get();
+                v[self.phase] += elapsed;
+                a.set(v);
+            });
+        }
+    }
+}
+
+/// Drain the current thread's accumulated phase times (nanoseconds,
+/// indexed by `Phase as usize`), resetting them to zero.
+pub fn take() -> [u64; N_PHASES] {
+    ACC_NS.with(|a| a.replace([0; N_PHASES]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn guard_accumulates_and_take_drains() {
+        let _ = take();
+        {
+            let _g = scoped(Phase::Scan);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let t = take();
+        assert!(t[Phase::Scan as usize] >= 1_000_000, "scan={}", t[Phase::Scan as usize]);
+        assert_eq!(t[Phase::Attn as usize], 0);
+        // Drained: a second take is all zeros.
+        assert_eq!(take(), [0; N_PHASES]);
+    }
+
+    #[test]
+    fn nested_same_phase_counts_wall_time_once() {
+        let _ = take();
+        {
+            let _outer = scoped(Phase::Attn);
+            std::thread::sleep(Duration::from_millis(10));
+            {
+                let _inner = scoped(Phase::Attn);
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+        let t = take();
+        let attn = t[Phase::Attn as usize];
+        // Inner scope must not double-count: total is ~20ms, not ~30ms.
+        assert!(attn >= 19_000_000, "attn={attn}");
+        assert!(attn < 27_000_000, "attn double-counted: {attn}");
+    }
+
+    #[test]
+    fn distinct_phases_accumulate_independently() {
+        let _ = take();
+        {
+            let _a = scoped(Phase::Gemm);
+            let _b = scoped(Phase::Append);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let t = take();
+        assert!(t[Phase::Gemm as usize] > 0);
+        assert!(t[Phase::Append as usize] > 0);
+    }
+}

@@ -1,0 +1,331 @@
+//! Ring-buffered per-request lifecycle tracer.
+//!
+//! One [`Tracer`] lives in the engine and records typed
+//! [`TraceEventKind`] events stamped with a monotonic-clock offset from
+//! the tracer's epoch. The design budget is "cheap enough to leave on
+//! in production, free when off":
+//!
+//! * **Zero allocation on the hot path** — the event buffer is
+//!   preallocated at construction; recording is a bounds-checked store
+//!   (events are `Copy`, no heap payloads). When the ring is full, the
+//!   oldest event is overwritten and counted in
+//!   [`Tracer::overwritten`], never reallocated.
+//! * **No-op when disabled** — [`Tracer::disabled`] allocates nothing
+//!   and [`Tracer::record`] is a single branch, so an untraced engine
+//!   pays one predictable-not-taken branch per call site.
+//! * **Monotonic clock** — timestamps are `Instant`-based microsecond
+//!   offsets; wall-clock jumps cannot reorder a trace.
+//!
+//! Event `id` is the engine request id; `id == 0` marks engine-scope
+//! events (per-step records, evictions). The JSONL export writes one
+//! object per line: `{"t_us":…, "id":…, "ev":"…", …fields}`.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+use super::phase::{N_PHASES, PHASE_NAMES};
+
+/// Typed lifecycle events. All payloads are `Copy` — the record path
+/// must not touch the heap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceEventKind {
+    /// Request entered the engine (`prompt` tokens, before admission).
+    Submit { prompt: u32 },
+    /// Scheduler admitted the request into the running set.
+    Admit,
+    /// Engine rejected the request before serving it (head-of-line
+    /// infeasible: prompt can never fit the pool/budget).
+    Reject,
+    /// Radix-cache prefix hit at submit: `pages` pages adopted cold.
+    PrefixHit { pages: u32 },
+    /// Request parked as a follower on request `on`'s in-flight prefix.
+    ParkOnPrefix { on: u64 },
+    /// Follower adopted `pages` newly published pages (may repeat).
+    AdoptPages { pages: u32 },
+    /// Parked follower resumed prefill.
+    Wake,
+    /// Prefill chunk `[start, start+len)` scheduled this step.
+    ChunkStart { start: u32, len: u32 },
+    /// The chunk finished; `tokens` processed.
+    ChunkEnd { tokens: u32 },
+    /// First generated token sampled (TTFT point).
+    FirstToken,
+    /// Engine-scope: one fused decode step over `batch` sequences.
+    DecodeStep { batch: u32 },
+    /// Speculative verify step: `gamma` drafted, `accepted` accepted.
+    VerifyStep { gamma: u32, accepted: u32 },
+    /// Engine-scope: LRU pressure evicted `pages` cached pages.
+    Evict { pages: u32 },
+    /// Engine-scope: `pages` pages spilled to a colder tier. Reserved —
+    /// no spill tier exists yet; present so the wire format is stable
+    /// when one lands (ROADMAP).
+    Spill { pages: u32 },
+    /// Request finished normally.
+    Finish,
+    /// Request cancelled by the client.
+    Cancel,
+    /// Engine-scope: end-of-step occupancy record.
+    StepEnd { prefill_tokens: u32, decode_seqs: u32, verify_seqs: u32 },
+    /// Engine-scope: per-phase forward wall time accrued this step
+    /// (microseconds, indexed like [`PHASE_NAMES`]).
+    PhaseSample { us: [u32; N_PHASES] },
+}
+
+impl TraceEventKind {
+    /// Stable wire name (the `"ev"` field of the JSONL export).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEventKind::Submit { .. } => "submit",
+            TraceEventKind::Admit => "admit",
+            TraceEventKind::Reject => "reject",
+            TraceEventKind::PrefixHit { .. } => "prefix_hit",
+            TraceEventKind::ParkOnPrefix { .. } => "park_on_prefix",
+            TraceEventKind::AdoptPages { .. } => "adopt_pages",
+            TraceEventKind::Wake => "wake",
+            TraceEventKind::ChunkStart { .. } => "chunk_start",
+            TraceEventKind::ChunkEnd { .. } => "chunk_end",
+            TraceEventKind::FirstToken => "first_token",
+            TraceEventKind::DecodeStep { .. } => "decode_step",
+            TraceEventKind::VerifyStep { .. } => "verify_step",
+            TraceEventKind::Evict { .. } => "evict",
+            TraceEventKind::Spill { .. } => "spill",
+            TraceEventKind::Finish => "finish",
+            TraceEventKind::Cancel => "cancel",
+            TraceEventKind::StepEnd { .. } => "step_end",
+            TraceEventKind::PhaseSample { .. } => "phase_sample",
+        }
+    }
+}
+
+/// One recorded event: epoch offset, request id (0 = engine scope),
+/// typed payload.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub t_us: u64,
+    pub id: u64,
+    pub kind: TraceEventKind,
+}
+
+impl TraceEvent {
+    /// One JSONL object (no trailing newline).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("t_us", Json::num(self.t_us as f64)),
+            ("id", Json::num(self.id as f64)),
+            ("ev", Json::str(self.kind.name())),
+        ];
+        match self.kind {
+            TraceEventKind::Submit { prompt } => {
+                fields.push(("prompt", Json::num(prompt as f64)));
+            }
+            TraceEventKind::PrefixHit { pages }
+            | TraceEventKind::AdoptPages { pages }
+            | TraceEventKind::Evict { pages }
+            | TraceEventKind::Spill { pages } => {
+                fields.push(("pages", Json::num(pages as f64)));
+            }
+            TraceEventKind::ParkOnPrefix { on } => {
+                fields.push(("on", Json::num(on as f64)));
+            }
+            TraceEventKind::ChunkStart { start, len } => {
+                fields.push(("start", Json::num(start as f64)));
+                fields.push(("len", Json::num(len as f64)));
+            }
+            TraceEventKind::ChunkEnd { tokens } => {
+                fields.push(("tokens", Json::num(tokens as f64)));
+            }
+            TraceEventKind::DecodeStep { batch } => {
+                fields.push(("batch", Json::num(batch as f64)));
+            }
+            TraceEventKind::VerifyStep { gamma, accepted } => {
+                fields.push(("gamma", Json::num(gamma as f64)));
+                fields.push(("accepted", Json::num(accepted as f64)));
+            }
+            TraceEventKind::StepEnd { prefill_tokens, decode_seqs, verify_seqs } => {
+                fields.push(("prefill_tokens", Json::num(prefill_tokens as f64)));
+                fields.push(("decode_seqs", Json::num(decode_seqs as f64)));
+                fields.push(("verify_seqs", Json::num(verify_seqs as f64)));
+            }
+            TraceEventKind::PhaseSample { us } => {
+                for (name, v) in PHASE_NAMES.iter().zip(us.iter()) {
+                    fields.push((name, Json::num(*v as f64)));
+                }
+            }
+            _ => {}
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Fixed-capacity event ring with a monotonic epoch.
+pub struct Tracer {
+    epoch: Instant,
+    buf: Vec<TraceEvent>,
+    /// Next slot to overwrite once `buf` reached capacity.
+    head: usize,
+    overwritten: u64,
+    enabled: bool,
+}
+
+impl Tracer {
+    /// An enabled tracer holding up to `capacity` events (oldest
+    /// overwritten beyond that). The buffer is allocated here, once.
+    pub fn new(capacity: usize) -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            buf: Vec::with_capacity(capacity.max(1)),
+            head: 0,
+            overwritten: 0,
+            enabled: true,
+        }
+    }
+
+    /// A disabled tracer: allocates nothing, records nothing.
+    pub fn disabled() -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            buf: Vec::new(),
+            head: 0,
+            overwritten: 0,
+            enabled: false,
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Microseconds since the tracer's epoch (monotonic).
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one event. Disabled: a single branch. Enabled: one store;
+    /// never allocates (the ring was sized at construction).
+    #[inline]
+    pub fn record(&mut self, id: u64, kind: TraceEventKind) {
+        if !self.enabled {
+            return;
+        }
+        let ev = TraceEvent { t_us: self.now_us(), id, kind };
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.buf.len();
+            self.overwritten += 1;
+        }
+    }
+
+    /// Events currently held, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        let (tail, head) = self.buf.split_at(self.head);
+        head.iter().chain(tail.iter())
+    }
+
+    /// Number of events currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events lost to ring wrap-around (oldest-overwritten count).
+    pub fn overwritten(&self) -> u64 {
+        self.overwritten
+    }
+
+    /// Serialize the ring to JSONL, oldest first.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in self.events() {
+            out.push_str(&ev.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Flush the ring to `path` as JSONL. Returns the number of events
+    /// written. The ring is left intact (a later flush rewrites the
+    /// full, newer window).
+    pub fn write_jsonl(&self, path: &std::path::Path) -> std::io::Result<usize> {
+        std::fs::write(path, self.to_jsonl())?;
+        Ok(self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_allocates_and_records_nothing() {
+        let mut t = Tracer::disabled();
+        assert_eq!(t.buf.capacity(), 0);
+        t.record(1, TraceEventKind::Submit { prompt: 8 });
+        t.record(1, TraceEventKind::Finish);
+        assert!(t.is_empty());
+        assert_eq!(t.buf.capacity(), 0, "record must not allocate when disabled");
+        assert_eq!(t.to_jsonl(), "");
+    }
+
+    #[test]
+    fn enabled_tracer_never_grows_past_capacity() {
+        let mut t = Tracer::new(4);
+        let cap = t.buf.capacity();
+        for i in 0..10 {
+            t.record(i, TraceEventKind::Admit);
+        }
+        assert_eq!(t.buf.capacity(), cap, "ring reallocated");
+        assert_eq!(t.len(), cap);
+        assert_eq!(t.overwritten(), 10 - cap as u64);
+        // Oldest-first iteration: the surviving ids are the newest.
+        let ids: Vec<u64> = t.events().map(|e| e.id).collect();
+        let expect: Vec<u64> = (10 - cap as u64..10).collect();
+        assert_eq!(ids, expect);
+    }
+
+    #[test]
+    fn timestamps_are_monotonic() {
+        let mut t = Tracer::new(16);
+        for i in 0..16 {
+            t.record(i, TraceEventKind::Admit);
+        }
+        let ts: Vec<u64> = t.events().map(|e| e.t_us).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn jsonl_roundtrips_through_the_json_parser() {
+        let mut t = Tracer::new(16);
+        t.record(3, TraceEventKind::Submit { prompt: 128 });
+        t.record(3, TraceEventKind::PrefixHit { pages: 5 });
+        t.record(3, TraceEventKind::ChunkStart { start: 0, len: 64 });
+        t.record(3, TraceEventKind::VerifyStep { gamma: 4, accepted: 2 });
+        t.record(0, TraceEventKind::StepEnd {
+            prefill_tokens: 64,
+            decode_seqs: 2,
+            verify_seqs: 1,
+        });
+        t.record(0, TraceEventKind::PhaseSample { us: [1, 2, 3, 4] });
+        t.record(3, TraceEventKind::Finish);
+        let jsonl = t.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 7);
+        for line in &lines {
+            let v = Json::parse(line).expect("valid JSON per line");
+            assert!(v.get("ev").and_then(Json::as_str).is_some());
+            assert!(v.get("t_us").and_then(Json::as_f64).is_some());
+        }
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("ev").and_then(Json::as_str), Some("submit"));
+        assert_eq!(first.get("prompt").and_then(Json::as_f64), Some(128.0));
+        let phase = Json::parse(lines[5]).unwrap();
+        assert_eq!(phase.get("gemm").and_then(Json::as_f64), Some(4.0));
+    }
+}

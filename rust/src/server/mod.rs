@@ -3,5 +3,5 @@
 pub mod proto;
 pub mod tcp;
 
-pub use proto::{WireRequest, WireResponse, WireSpec};
-pub use tcp::{serve, Client, ServerHandle};
+pub use proto::{WireCommand, WireRequest, WireResponse, WireSpec};
+pub use tcp::{serve, serve_with_opts, Client, ServeOpts, ServerHandle};

@@ -76,6 +76,39 @@ impl WireRequest {
     }
 }
 
+/// Control command sharing the request socket: `{"cmd": "stats"}` returns a
+/// metrics snapshot (JSON + Prometheus text), `{"cmd": "flush_trace"}` writes
+/// the lifecycle-trace ring to the server's `--trace-out` path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireCommand {
+    Stats,
+    FlushTrace,
+}
+
+impl WireCommand {
+    /// `None` when the line carries no `cmd` key (i.e. it is a plain
+    /// generation request); `Some(Err(..))` for an unknown command name so
+    /// the caller can reply with a targeted error instead of a confusing
+    /// "prompt missing" from [`WireRequest::parse`].
+    pub fn parse(line: &str) -> Option<anyhow::Result<WireCommand>> {
+        let j = Json::parse(line).ok()?;
+        let cmd = j.get("cmd")?.as_str()?.to_string();
+        Some(match cmd.as_str() {
+            "stats" => Ok(WireCommand::Stats),
+            "flush_trace" => Ok(WireCommand::FlushTrace),
+            other => Err(anyhow::anyhow!("unknown cmd '{other}' (expected stats | flush_trace)")),
+        })
+    }
+
+    pub fn to_line(self) -> String {
+        let name = match self {
+            WireCommand::Stats => "stats",
+            WireCommand::FlushTrace => "flush_trace",
+        };
+        Json::obj(vec![("cmd", Json::str(name))]).to_string()
+    }
+}
+
 /// Render a result for the wire.
 pub fn result_line(r: &RequestResult, text: &str) -> String {
     Json::obj(vec![
@@ -183,6 +216,19 @@ mod tests {
         // spec_policy alone opts in with a server-resolved gamma.
         let p = WireRequest::parse(r#"{"prompt": "x", "spec_policy": "pld"}"#).unwrap();
         assert_eq!(p.spec, Some(WireSpec { policy: "pld".into(), gamma: None }));
+    }
+
+    #[test]
+    fn command_lines() {
+        for cmd in [WireCommand::Stats, WireCommand::FlushTrace] {
+            let parsed = WireCommand::parse(&cmd.to_line());
+            assert_eq!(parsed.unwrap().unwrap(), cmd);
+        }
+        // Unknown command name: detected (Some) but rejected (Err).
+        assert!(WireCommand::parse(r#"{"cmd": "nope"}"#).unwrap().is_err());
+        // Plain request lines carry no cmd key and fall through.
+        assert!(WireCommand::parse(r#"{"prompt": "x"}"#).is_none());
+        assert!(WireCommand::parse("{nope").is_none());
     }
 
     #[test]

@@ -6,14 +6,16 @@
 //! block on their response channel — the classic leader/worker split with
 //! Rust owning the event loop end to end.
 
-use super::proto::{error_line, result_line, WireRequest, WireResponse};
+use super::proto::{error_line, result_line, WireCommand, WireRequest, WireResponse};
 use crate::coordinator::{Engine, PolicySpec};
 use crate::spec::SpecCfg;
+use crate::util::json::Json;
 use crate::workload::corpus::ByteTokenizer;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -23,7 +25,32 @@ enum ToEngine {
         wire: WireRequest,
         resp: mpsc::Sender<String>,
     },
+    /// Metrics snapshot request; answered immediately (no queueing behind
+    /// generation work).
+    Stats {
+        resp: mpsc::Sender<String>,
+    },
+    /// Flush the lifecycle-trace ring to the configured `trace_out` path.
+    FlushTrace {
+        resp: mpsc::Sender<String>,
+    },
     Shutdown,
+}
+
+/// Default trace-ring capacity when `--trace-out` is given without an
+/// explicit event count.
+pub const DEFAULT_TRACE_EVENTS: usize = 1 << 16;
+
+/// Serving options beyond the engine config.
+#[derive(Clone, Debug, Default)]
+pub struct ServeOpts {
+    /// Lifecycle-trace ring capacity in events. 0 leaves tracing off
+    /// unless `trace_out` is set, in which case [`DEFAULT_TRACE_EVENTS`]
+    /// applies.
+    pub trace_events: usize,
+    /// Where to flush the trace ring (JSONL) at shutdown and on the
+    /// `flush_trace` wire command.
+    pub trace_out: Option<PathBuf>,
 }
 
 /// Handle for a running server.
@@ -55,6 +82,14 @@ pub fn serve<F>(make_engine: F, addr: &str) -> Result<ServerHandle>
 where
     F: FnOnce() -> Result<Engine> + Send + 'static,
 {
+    serve_with_opts(make_engine, addr, ServeOpts::default())
+}
+
+/// [`serve`] with tracing options.
+pub fn serve_with_opts<F>(make_engine: F, addr: &str, opts: ServeOpts) -> Result<ServerHandle>
+where
+    F: FnOnce() -> Result<Engine> + Send + 'static,
+{
     let listener = TcpListener::bind(addr).context("bind")?;
     let local = listener.local_addr()?;
     let (tx, rx) = mpsc::channel::<ToEngine>();
@@ -75,6 +110,15 @@ where
                     return;
                 }
             };
+            let trace_out = opts.trace_out.clone();
+            if opts.trace_events > 0 || trace_out.is_some() {
+                let cap = if opts.trace_events > 0 {
+                    opts.trace_events
+                } else {
+                    DEFAULT_TRACE_EVENTS
+                };
+                engine.enable_tracing(cap);
+            }
             let vocab = engine.model_cfg().vocab;
             let tok = ByteTokenizer::new(vocab);
             let mut waiters: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
@@ -133,6 +177,30 @@ where
                                 }
                             }
                         }
+                        ToEngine::Stats { resp } => {
+                            let line = Json::obj(vec![
+                                ("pending", Json::num(engine.pending() as f64)),
+                                ("trace_events", Json::num(engine.tracer.len() as f64)),
+                                ("stats", engine.metrics.snapshot_json()),
+                                ("prometheus", Json::str(engine.metrics.prometheus_text())),
+                            ])
+                            .to_string();
+                            let _ = resp.send(line);
+                        }
+                        ToEngine::FlushTrace { resp } => {
+                            let line = match &trace_out {
+                                Some(path) => match engine.write_trace(path) {
+                                    Ok(n) => Json::obj(vec![
+                                        ("flushed", Json::num(n as f64)),
+                                        ("path", Json::str(path.display().to_string())),
+                                    ])
+                                    .to_string(),
+                                    Err(e) => error_line(&format!("trace flush failed: {e}")),
+                                },
+                                None => error_line("server started without --trace-out"),
+                            };
+                            let _ = resp.send(line);
+                        }
                         ToEngine::Shutdown => {
                             open = false;
                             break;
@@ -151,6 +219,12 @@ where
                     }
                 } else if !open {
                     break;
+                }
+            }
+            if let Some(path) = &trace_out {
+                match engine.write_trace(path) {
+                    Ok(n) => eprintln!("trace: wrote {n} events to {}", path.display()),
+                    Err(e) => eprintln!("trace: write to {} failed: {e}", path.display()),
                 }
             }
             eprintln!("engine: {}", engine.metrics.summary());
@@ -194,16 +268,31 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<ToEngine>) {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match WireRequest::parse(&line) {
-            Ok(wire) => {
+        let reply = match WireCommand::parse(&line) {
+            Some(Ok(cmd)) => {
                 let (rtx, rrx) = mpsc::channel();
-                if tx.send(ToEngine::Submit { wire, resp: rtx }).is_err() {
+                let msg = match cmd {
+                    WireCommand::Stats => ToEngine::Stats { resp: rtx },
+                    WireCommand::FlushTrace => ToEngine::FlushTrace { resp: rtx },
+                };
+                if tx.send(msg).is_err() {
                     error_line("engine stopped")
                 } else {
                     rrx.recv().unwrap_or_else(|_| error_line("engine dropped request"))
                 }
             }
-            Err(e) => error_line(&e.to_string()),
+            Some(Err(e)) => error_line(&e.to_string()),
+            None => match WireRequest::parse(&line) {
+                Ok(wire) => {
+                    let (rtx, rrx) = mpsc::channel();
+                    if tx.send(ToEngine::Submit { wire, resp: rtx }).is_err() {
+                        error_line("engine stopped")
+                    } else {
+                        rrx.recv().unwrap_or_else(|_| error_line("engine dropped request"))
+                    }
+                }
+                Err(e) => error_line(&e.to_string()),
+            },
         };
         if writer.write_all(reply.as_bytes()).and_then(|_| writer.write_all(b"\n")).is_err() {
             break;
@@ -233,6 +322,27 @@ impl Client {
         self.reader.read_line(&mut line)?;
         WireResponse::parse(line.trim())
     }
+
+    /// Send one raw line and return the server's reply verbatim (trimmed).
+    pub fn raw(&mut self, line: &str) -> Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut out = String::new();
+        self.reader.read_line(&mut out)?;
+        Ok(out.trim().to_string())
+    }
+
+    /// Fetch the server's metrics snapshot as a parsed JSON object.
+    pub fn stats(&mut self) -> Result<Json> {
+        let line = self.raw(&WireCommand::Stats.to_line())?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("bad stats reply: {e}"))
+    }
+
+    /// Ask the server to flush its trace ring to its `--trace-out` path.
+    pub fn flush_trace(&mut self) -> Result<Json> {
+        let line = self.raw(&WireCommand::FlushTrace.to_line())?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("bad flush reply: {e}"))
+    }
 }
 
 #[cfg(test)]
@@ -242,7 +352,9 @@ mod tests {
 
     #[test]
     fn end_to_end_over_tcp() {
-        let handle = serve(
+        let trace_path =
+            std::env::temp_dir().join(format!("quoka_tcp_trace_{}.jsonl", std::process::id()));
+        let handle = serve_with_opts(
             || {
                 Engine::new_host(
                     "tiny",
@@ -261,6 +373,7 @@ mod tests {
                 )
             },
             "127.0.0.1:0",
+            ServeOpts { trace_events: 4096, trace_out: Some(trace_path.clone()) },
         )
         .unwrap();
         let addr = handle.addr;
@@ -333,6 +446,38 @@ mod tests {
         });
         assert!(err.is_err());
 
+        // Stats command: JSON snapshot + Prometheus text on the same socket.
+        let stats = c2.stats().unwrap();
+        let finished = stats
+            .get("stats")
+            .and_then(|s| s.get("requests_finished"))
+            .and_then(|v| v.as_usize())
+            .expect("stats.requests_finished present");
+        assert!(finished >= 5, "all completed requests counted, got {finished}");
+        let prom = stats.get("prometheus").and_then(|v| v.as_str()).unwrap();
+        assert!(
+            prom.contains("quoka_requests_finished_total"),
+            "prometheus rendering present"
+        );
+        assert!(stats.get("trace_events").and_then(|v| v.as_usize()).unwrap() > 0);
+
+        // Explicit trace flush writes the ring to the configured path.
+        let flush = c2.flush_trace().unwrap();
+        let flushed = flush.get("flushed").and_then(|v| v.as_usize()).unwrap();
+        assert!(flushed > 0, "trace ring has events to flush");
+        let body = std::fs::read_to_string(&trace_path).unwrap();
+        assert_eq!(body.lines().count(), flushed);
+        assert!(body.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
+
+        // Unknown command: targeted error, not a parse failure about prompts.
+        let nope = c2.raw(r#"{"cmd": "nope"}"#).unwrap();
+        assert!(nope.contains("unknown cmd"), "got: {nope}");
+
         handle.shutdown();
+
+        // Shutdown re-flushes the (possibly larger) ring to the same path.
+        let after = std::fs::read_to_string(&trace_path).unwrap();
+        assert!(after.lines().count() >= flushed);
+        let _ = std::fs::remove_file(&trace_path);
     }
 }

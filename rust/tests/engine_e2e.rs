@@ -2,6 +2,7 @@
 //! backend when artifacts are present, plus failure injection.
 
 use quoka::coordinator::{Engine, EngineCfg, KvLayout, PolicySpec, SchedCfg};
+use quoka::obs::TraceEventKind;
 use quoka::server::{serve, Client, WireRequest};
 
 fn host_cfg() -> EngineCfg {
@@ -286,6 +287,143 @@ fn burst_of_8_schedules_shared_prefix_chunks_exactly_once() {
         let want = iso.run_to_completion().unwrap().remove(0).generated;
         assert_eq!(results[i].generated, want, "request {i} must match its isolated run");
     }
+}
+
+#[test]
+fn traced_burst_reconstructs_lifecycle_and_ttft() {
+    // The observability acceptance run: the shared-prefix burst with the
+    // lifecycle tracer on. The trace alone must reconstruct each request's
+    // span sequence and its TTFT (within 1ms of the engine's own number).
+    let cfg = EngineCfg {
+        sched: SchedCfg { b_cp: 256, step_tokens: 512, max_running: 8, ..SchedCfg::default() },
+        pool_blocks: 1024,
+        block_tokens: 128,
+        seed: 9,
+        kv: KvLayout::Paged { prefix_cache: true },
+        ..EngineCfg::default()
+    };
+    let spec = || PolicySpec { name: "quoka".into(), budget: 128 };
+    let prefix: Vec<u32> =
+        (0..BURST_PREFIX_TOKENS).map(|i| (i * 37 % 239) as u32 + 1).collect();
+    let prompt = |i: usize| {
+        let mut p = prefix.clone();
+        p.extend((0..BURST_SUFFIX_TOKENS).map(|j| ((j * 7 + i * 31) % 239) as u32 + 1));
+        p
+    };
+
+    let mut e = Engine::new_host("tiny", cfg).unwrap();
+    e.enable_tracing(1 << 16);
+    let first = e.submit(prompt(0), 2, spec()).unwrap();
+    e.step().unwrap();
+    let mut ids = vec![first];
+    for i in 1..8 {
+        ids.push(e.submit(prompt(i), 2, spec()).unwrap());
+    }
+    let mut results = e.run_to_completion().unwrap();
+    assert_eq!(results.len(), 8);
+    results.sort_by_key(|r| r.id);
+
+    assert_eq!(e.tracer.overwritten(), 0, "ring sized for the whole burst");
+    // Per-request event sequences, in recording order.
+    let mut seq: std::collections::HashMap<u64, Vec<&TraceEventKind>> =
+        std::collections::HashMap::new();
+    for ev in e.tracer.events() {
+        seq.entry(ev.id).or_default().push(&ev.kind);
+    }
+
+    for (i, &id) in ids.iter().enumerate() {
+        let evs = &seq[&id];
+        let pos = |pred: &dyn Fn(&TraceEventKind) -> bool| evs.iter().position(|k| pred(k));
+        let submit = pos(&|k| matches!(k, TraceEventKind::Submit { .. }))
+            .unwrap_or_else(|| panic!("request {i} has no submit span"));
+        let first_tok = pos(&|k| matches!(k, TraceEventKind::FirstToken))
+            .unwrap_or_else(|| panic!("request {i} has no first_token span"));
+        let finish = pos(&|k| matches!(k, TraceEventKind::Finish))
+            .unwrap_or_else(|| panic!("request {i} has no terminal span"));
+        assert!(submit < first_tok && first_tok < finish, "request {i} spans out of order");
+        assert!(
+            pos(&|k| matches!(k, TraceEventKind::ChunkEnd { .. })).is_some(),
+            "request {i} prefilled at least its suffix"
+        );
+        if i > 0 {
+            // Followers park behind the leader's in-flight publishes and
+            // must adopt pages before waking.
+            let park = pos(&|k| matches!(k, TraceEventKind::ParkOnPrefix { .. }))
+                .unwrap_or_else(|| panic!("follower {i} never parked"));
+            let adopt = pos(&|k| matches!(k, TraceEventKind::AdoptPages { .. }))
+                .unwrap_or_else(|| panic!("follower {i} never adopted pages"));
+            let wake = pos(&|k| matches!(k, TraceEventKind::Wake))
+                .unwrap_or_else(|| panic!("follower {i} never woke"));
+            assert!(park < adopt && adopt < wake, "follower {i}: park -> adopt -> wake");
+        }
+    }
+
+    // TTFT reconstructed from trace timestamps matches the engine's value.
+    for (i, (&id, r)) in ids.iter().zip(&results).enumerate() {
+        assert_eq!(id, r.id);
+        let t_submit = e
+            .tracer
+            .events()
+            .find(|ev| ev.id == id && matches!(ev.kind, TraceEventKind::Submit { .. }))
+            .unwrap()
+            .t_us;
+        let t_first = e
+            .tracer
+            .events()
+            .find(|ev| ev.id == id && matches!(ev.kind, TraceEventKind::FirstToken))
+            .unwrap()
+            .t_us;
+        let trace_ttft_s = (t_first - t_submit) as f64 / 1e6;
+        assert!(
+            (trace_ttft_s - r.ttft_s).abs() < 1e-3,
+            "request {i}: trace TTFT {trace_ttft_s:.6}s vs engine {:.6}s",
+            r.ttft_s
+        );
+    }
+
+    // Engine-scope records: occupancy every non-idle step, plus at least
+    // one per-phase sample (the host model always accrues phase time).
+    let step_ends = e
+        .tracer
+        .events()
+        .filter(|ev| ev.id == 0 && matches!(ev.kind, TraceEventKind::StepEnd { .. }))
+        .count();
+    assert!(step_ends > 0, "no step occupancy records");
+    assert!(
+        e.tracer
+            .events()
+            .any(|ev| matches!(ev.kind, TraceEventKind::PhaseSample { .. })),
+        "no phase samples"
+    );
+
+    // CI artifact hook: flush the ring where the workflow asks for it.
+    if let Ok(path) = std::env::var("QUOKA_TRACE_OUT") {
+        let n = e.write_trace(std::path::Path::new(&path)).unwrap();
+        assert_eq!(n, e.tracer.len());
+        eprintln!("wrote {n} trace events to {path}");
+    }
+}
+
+#[test]
+fn tracing_does_not_change_generation() {
+    // Tracing must be observation only: the same workload with the tracer
+    // on and off generates bit-identical tokens.
+    let run = |traced: bool| {
+        let mut e = Engine::new_host("tiny", paged_cfg()).unwrap();
+        if traced {
+            e.enable_tracing(1 << 14);
+        }
+        let prefix: Vec<u32> = (0..96).map(|i| (i * 13 % 240) as u32 + 1).collect();
+        for i in 0..4u32 {
+            let mut p = prefix.clone();
+            p.extend((0..24).map(|j| (j * 7 + i * 31) % 240 + 1));
+            e.submit(p, 6, PolicySpec { name: "quoka".into(), budget: 48 }).unwrap();
+        }
+        let mut r = e.run_to_completion().unwrap();
+        r.sort_by_key(|x| x.id);
+        r.into_iter().map(|x| x.generated).collect::<Vec<_>>()
+    };
+    assert_eq!(run(false), run(true), "tracing changed what the engine generated");
 }
 
 #[test]

@@ -1,0 +1,253 @@
+#!/usr/bin/env python3
+"""Offline analysis of QUOKA engine lifecycle traces.
+
+Input is the JSONL written by `--trace-out` (serve), the `flush_trace`
+wire command, or `Engine::write_trace`: one event per line,
+`{"t_us": ..., "id": ..., "ev": "...", ...payload}`. Request ids are
+engine ids; `id == 0` marks engine-scope events (step occupancy,
+evictions, phase samples).
+
+Modes:
+
+  trace_report.py TRACE.jsonl              full report: per-request
+                                           waterfall, step-occupancy
+                                           timeline, phase-time table
+  trace_report.py TRACE.jsonl --validate   well-formedness checks only;
+                                           exit 1 on any violation
+
+Validation enforces the span grammar the engine promises:
+
+  * every line parses and carries t_us / id / ev
+  * timestamps are monotonically non-decreasing in ring order
+  * every submitted request reaches a terminal event
+    (finish | cancel | reject)
+  * first_token precedes finish
+  * a parked follower (park_on_prefix) adopts pages (adopt_pages)
+    before it wakes (wake)
+
+Stdlib only — runs anywhere CI can run python3.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+TERMINAL = ("finish", "cancel", "reject")
+PHASES = ("scan", "attn", "append", "gemm")
+
+
+def load(path):
+    """Parse a trace file into a list of event dicts (ring order)."""
+    events = []
+    with open(path, "r", encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{lineno}: bad JSON: {e}") from e
+            events.append(ev)
+    return events
+
+
+def by_request(events):
+    """Group request-scope events by id, preserving ring order."""
+    reqs = defaultdict(list)
+    for ev in events:
+        rid = ev.get("id")
+        if rid:  # id 0 = engine scope
+            reqs[rid].append(ev)
+    return reqs
+
+
+def validate(events):
+    """Return a list of violation strings (empty = well-formed)."""
+    problems = []
+    last_t = None
+    for i, ev in enumerate(events):
+        for key in ("t_us", "id", "ev"):
+            if key not in ev:
+                problems.append(f"event {i}: missing '{key}': {ev}")
+        t = ev.get("t_us")
+        if isinstance(t, (int, float)):
+            if last_t is not None and t < last_t:
+                problems.append(f"event {i}: timestamp regressed {last_t} -> {t}")
+            last_t = t
+
+    for rid, evs in sorted(by_request(events).items()):
+        names = [e.get("ev") for e in evs]
+        if "submit" not in names:
+            # Ring wrap can drop a request's head; that is not a grammar
+            # violation, but nothing else can be checked for it.
+            continue
+        term = [n for n in names if n in TERMINAL]
+        if not term:
+            problems.append(f"request {rid}: submit without terminal event {TERMINAL}")
+            continue
+        if "first_token" in names and "finish" in names:
+            if names.index("first_token") > names.index("finish"):
+                problems.append(f"request {rid}: first_token after finish")
+        if "finish" in names and "first_token" not in names:
+            problems.append(f"request {rid}: finished without a first_token span")
+        if "park_on_prefix" in names:
+            park = names.index("park_on_prefix")
+            if "wake" in names:
+                wake = names.index("wake")
+                adopts = [i for i, n in enumerate(names) if n == "adopt_pages"]
+                if not adopts:
+                    problems.append(f"request {rid}: parked follower woke without adopt_pages")
+                elif not any(park < a < wake for a in adopts):
+                    problems.append(
+                        f"request {rid}: no adopt_pages between park_on_prefix and wake"
+                    )
+            elif "finish" in names:
+                problems.append(f"request {rid}: parked follower finished without waking")
+    return problems
+
+
+def fmt_ms(us):
+    return f"{us / 1000.0:.2f}"
+
+
+def waterfall(events):
+    """Per-request lifecycle table. Returns the printed rows as dicts."""
+    rows = []
+    for rid, evs in sorted(by_request(events).items()):
+        t = {}
+        for e in evs:
+            name = e.get("ev")
+            # Keep the FIRST occurrence of each span kind.
+            if name not in t:
+                t[name] = e
+        if "submit" not in t:
+            continue
+        t0 = t["submit"]["t_us"]
+        terminal = next((n for n in TERMINAL if n in t), None)
+        row = {
+            "id": rid,
+            "prompt": t["submit"].get("prompt", 0),
+            "submit_us": t0,
+            "admit_ms": fmt_ms(t["admit"]["t_us"] - t0) if "admit" in t else "-",
+            "first_chunk_ms": fmt_ms(t["chunk_start"]["t_us"] - t0)
+            if "chunk_start" in t
+            else "-",
+            "ttft_ms": fmt_ms(t["first_token"]["t_us"] - t0) if "first_token" in t else "-",
+            "finish_ms": fmt_ms(t[terminal]["t_us"] - t0) if terminal else "-",
+            "terminal": terminal or "-",
+            "prefix_pages": t.get("prefix_hit", {}).get("pages", 0),
+            "parked": "yes" if "park_on_prefix" in t else "",
+        }
+        rows.append(row)
+
+    cols = [
+        ("id", 5),
+        ("prompt", 7),
+        ("admit_ms", 9),
+        ("first_chunk_ms", 15),
+        ("ttft_ms", 9),
+        ("finish_ms", 10),
+        ("terminal", 9),
+        ("prefix_pages", 13),
+        ("parked", 7),
+    ]
+    print("per-request waterfall (times relative to submit):")
+    print("  " + " ".join(f"{name:>{w}}" for name, w in cols))
+    for row in rows:
+        print("  " + " ".join(f"{str(row[name]):>{w}}" for name, w in cols))
+    print()
+    return rows
+
+
+def occupancy(events, max_rows=24):
+    """Step-occupancy timeline from step_end records."""
+    steps = [e for e in events if e.get("ev") == "step_end"]
+    print(f"step occupancy ({len(steps)} steps):")
+    if not steps:
+        print("  (no step_end records)\n")
+        return steps
+    shown = steps
+    if len(steps) > max_rows:
+        head = steps[: max_rows // 2]
+        tail = steps[-(max_rows - len(head)) :]
+        shown = head + [None] + tail
+    print(f"  {'t_ms':>10} {'prefill_tok':>12} {'decode_seqs':>12} {'verify_seqs':>12}")
+    for s in shown:
+        if s is None:
+            print(f"  {'...':>10}")
+            continue
+        print(
+            f"  {fmt_ms(s['t_us']):>10} {s.get('prefill_tokens', 0):>12} "
+            f"{s.get('decode_seqs', 0):>12} {s.get('verify_seqs', 0):>12}"
+        )
+    busy = sum(1 for s in steps if s.get("prefill_tokens", 0) > 0)
+    print(f"  steps with prefill work: {busy}/{len(steps)}\n")
+    return steps
+
+
+def phase_table(events):
+    """Aggregate phase_sample records into a per-phase time table."""
+    totals = dict.fromkeys(PHASES, 0)
+    n = 0
+    for e in events:
+        if e.get("ev") != "phase_sample":
+            continue
+        n += 1
+        for p in PHASES:
+            totals[p] += e.get(p, 0)
+    print(f"phase time ({n} samples):")
+    if n == 0:
+        print("  (no phase_sample records)\n")
+        return totals
+    grand = sum(totals.values()) or 1
+    for p in PHASES:
+        pct = 100.0 * totals[p] / grand
+        print(f"  {p:>8} {fmt_ms(totals[p]):>12} ms  {pct:5.1f}%")
+    print()
+    return totals
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="trace JSONL written by the engine")
+    ap.add_argument(
+        "--validate",
+        action="store_true",
+        help="check span-grammar well-formedness only; exit 1 on violation",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        events = load(args.trace)
+    except (OSError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+
+    problems = validate(events)
+    if args.validate:
+        if problems:
+            for p in problems:
+                print(f"VIOLATION: {p}", file=sys.stderr)
+            print(f"{len(problems)} violation(s) in {args.trace}", file=sys.stderr)
+            return 1
+        n_req = len(by_request(events))
+        print(f"ok: {len(events)} events, {n_req} requests, span grammar holds")
+        return 0
+
+    print(f"trace: {args.trace} — {len(events)} events\n")
+    waterfall(events)
+    occupancy(events)
+    phase_table(events)
+    if problems:
+        for p in problems:
+            print(f"VIOLATION: {p}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
