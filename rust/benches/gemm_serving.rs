@@ -1,0 +1,6 @@
+//! Dense-GEMM benchmark: packed pool-parallel kernel vs the seed serial
+//! loop, plus the gemm phase share of a real chunked prefill.
+
+fn main() {
+    quoka::bench::gemm::gemm_serving();
+}

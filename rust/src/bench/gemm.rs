@@ -1,0 +1,228 @@
+//! Dense-GEMM benchmark: the pool-backed packed kernel against the seed
+//! scalar loop it replaced, plus the end-to-end effect on prefill.
+//!
+//! Three sections:
+//! 1. **Prefill-shaped** `[b_cp, d_model] × [d_model, d_ff]` — the FFN
+//!    gate/up product that dominates chunked prefill. Arms: the seed
+//!    serial i-k-j kernel, the packed kernel on one participant, and the
+//!    packed kernel on the full pool (row-block parallel).
+//! 2. **Decode-shaped** `[B, d_model] × [d_model, d_ff]` — a batched
+//!    decode step's FFN row; too few rows for row blocks, so the packed
+//!    kernel parallelizes over column panels.
+//! 3. **Forward-pass phase share** — a real chunked prefill with the
+//!    worker count pinned to 1 and then to the pool width, reporting
+//!    TTFT and the `gemm` phase share from the PR-7 phase timers (the
+//!    serial residue this PR removes).
+//!
+//! The packed serial and packed parallel arms are asserted bit-identical
+//! (the kernel's determinism contract); seed-vs-packed is asserted to
+//! 1e-3 (same k-order fold, so they agree far tighter in practice).
+//! Writes `BENCH_gemm.json` (override with `GEMM_OUT`); the CI gate
+//! floors `parallel-speedup` at 2x when the runner has >= 4 cores.
+
+use super::banner;
+use crate::model::{HostModel, ModelConfig, SeqState, Weights};
+use crate::obs::phase::{self, Phase};
+use crate::select::{policy_by_name, SelectCtx};
+use crate::tensor::matmul::{matmul_packed_with, PackedB};
+use crate::util::threadpool::set_workers;
+use crate::util::{Json, Rng};
+use std::time::Instant;
+
+const SEED_BLOCK_K: usize = 256;
+
+/// Verbatim copy of the pre-PR-8 serial kernel (blocked i-k-j with the
+/// per-element zero skip) — the packed-vs-seed reference arm.
+fn seed_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    c.iter_mut().for_each(|v| *v = 0.0);
+    for kb in (0..k).step_by(SEED_BLOCK_K) {
+        let kend = (kb + SEED_BLOCK_K).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+}
+
+fn wall<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    f(); // warm caches and the pool
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+struct ShapeResult {
+    parallel_speedup: f64,
+    packed_speedup: f64,
+    serial_gflops: f64,
+    parallel_gflops: f64,
+}
+
+/// Run the three kernel arms for one `[m,k] × [k,n]` shape.
+fn shape_arms(
+    label: &str,
+    m: usize,
+    k: usize,
+    n: usize,
+    iters: usize,
+    workers: usize,
+    table: &mut crate::util::timing::Table,
+) -> ShapeResult {
+    let mut rng = Rng::new(0x6E44 ^ m as u64);
+    let a = rng.normal_vec(m * k, 1.0);
+    let b = rng.normal_vec(k * n, 1.0);
+    let packed = PackedB::pack(&b, k, n);
+    let mut c_seed = vec![0.0f32; m * n];
+    let mut c_ser = vec![0.0f32; m * n];
+    let mut c_par = vec![0.0f32; m * n];
+
+    let seed_s = wall(iters, || seed_matmul(&a, &b, m, k, n, &mut c_seed));
+    let ser_s = wall(iters, || matmul_packed_with(&a, &packed, m, &mut c_ser, 1));
+    let par_s = wall(iters, || matmul_packed_with(&a, &packed, m, &mut c_par, workers));
+
+    assert_eq!(
+        c_ser, c_par,
+        "packed GEMM must be bit-identical serial vs {workers} participants ({label})"
+    );
+    for (x, y) in c_seed.iter().zip(&c_ser) {
+        assert!((x - y).abs() < 1e-3, "packed kernel diverged from seed: {x} vs {y} ({label})");
+    }
+
+    let flops = (2 * m * k * n * iters) as f64;
+    let gf = |s: f64| flops / s / 1e9;
+    for (arm, s) in [("seed serial", seed_s), ("packed serial", ser_s), ("packed pool", par_s)] {
+        table.row(vec![
+            format!("{label} {arm}"),
+            format!("{:.4}", s),
+            format!("{:.2}", gf(s)),
+            format!("{:.2}", seed_s / s),
+        ]);
+    }
+    ShapeResult {
+        parallel_speedup: ser_s / par_s,
+        packed_speedup: seed_s / ser_s,
+        serial_gflops: gf(ser_s),
+        parallel_gflops: gf(par_s),
+    }
+}
+
+fn prompt(len: usize, vocab: usize) -> Vec<u32> {
+    (0..len).map(|i| ((i as u64 * 131 + 17) % (vocab as u64 - 1) + 1) as u32).collect()
+}
+
+/// One cold prefill of `toks` in `b_cp`-token chunks; returns
+/// (wall seconds, gemm phase share of the accounted phase time).
+fn prefill_once(model: &HostModel, toks: &[u32], b_cp: usize) -> (f64, f64) {
+    let mut st = SeqState::new(model.cfg());
+    let mut ctx = SelectCtx::new(0);
+    let policy = policy_by_name("quoka").unwrap();
+    let _ = phase::take();
+    let t0 = Instant::now();
+    for chunk in toks.chunks(b_cp) {
+        let _ = model.forward_chunk(&mut st, chunk, policy.as_ref(), 128, &mut ctx);
+    }
+    let s = t0.elapsed().as_secs_f64();
+    let ph = phase::take();
+    let total: u64 = ph.iter().sum();
+    let share = if total > 0 { ph[Phase::Gemm as usize] as f64 / total as f64 } else { 0.0 };
+    (s, share)
+}
+
+/// The dense-GEMM benchmark (see module docs). Returns the prefill-shaped
+/// serial-vs-parallel speedup (the CI-gated headline).
+pub fn gemm_serving() -> f64 {
+    banner(
+        "gemm_serving",
+        "§System-level speedup: the dense substrate",
+        "Packed pool-parallel GEMM vs the seed serial kernel, prefill- and decode-shaped, \
+         plus the gemm phase share of a real chunked prefill.",
+    );
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // The bench owns the machine: use every core (sizes the shared pool
+    // before its first fan-out).
+    let workers = cores;
+    set_workers(workers);
+
+    let cfg = ModelConfig::serve_small();
+    let (dm, dff) = (cfg.d_model, cfg.d_ff);
+    let b_cp = 128;
+    let batch = 8;
+    let (pre_iters, dec_iters) = if super::full_mode() { (120, 1200) } else { (40, 400) };
+
+    let mut table =
+        crate::util::timing::Table::new(&["gemm arm", "wall s", "GFLOP/s", "speedup vs seed"]);
+    let pre = shape_arms("prefill 128r", b_cp, dm, dff, pre_iters, workers, &mut table);
+    let dec = shape_arms("decode 8r", batch, dm, dff, dec_iters, workers, &mut table);
+    table.print();
+    println!(
+        "expected shape: packed >= 1x over seed serially (register tiling + panel reuse), \
+         and ~{workers}x-bounded parallel scaling; serial == parallel bitwise is asserted.\n"
+    );
+
+    // ---- forward-pass arm: gemm phase share before/after threading ----
+    let prompt_len = if super::full_mode() { 4096 } else { 1024 };
+    let model = HostModel::new(Weights::generate(&cfg, 7));
+    let toks = prompt(prompt_len, cfg.vocab);
+    set_workers(1);
+    let (ttft_serial, share_serial) = prefill_once(&model, &toks, b_cp);
+    set_workers(workers);
+    let (ttft_par, share_par) = prefill_once(&model, &toks, b_cp);
+
+    let mut fwd = crate::util::timing::Table::new(&["prefill arm", "TTFT s", "gemm share"]);
+    fwd.row(vec![
+        "workers=1".into(),
+        format!("{ttft_serial:.3}"),
+        format!("{:.1}%", share_serial * 100.0),
+    ]);
+    fwd.row(vec![
+        format!("workers={workers}"),
+        format!("{ttft_par:.3}"),
+        format!("{:.1}%", share_par * 100.0),
+    ]);
+    fwd.print();
+    println!(
+        "gemm phase share should drop with workers — the projections/FFN were the last \
+         serial residue of prefill (TTFT speedup here folds in the attention fan-out too).\n"
+    );
+
+    let out_path = std::env::var("GEMM_OUT").unwrap_or_else(|_| "BENCH_gemm.json".to_string());
+    let config = format!(
+        "preset={} b_cp={b_cp} batch={batch} d_model={dm} d_ff={dff} prompt={prompt_len} \
+         workers={workers}",
+        cfg.name
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::str("gemm_serving")),
+        ("config", Json::str(config)),
+        ("cores", Json::num(cores as f64)),
+        ("workers", Json::num(workers as f64)),
+        // The CI-gated headline: prefill-shaped packed serial vs pool.
+        ("parallel-speedup", Json::num(pre.parallel_speedup)),
+        ("packed-vs-seed-speedup", Json::num(pre.packed_speedup)),
+        ("prefill-serial-gflops", Json::num(pre.serial_gflops)),
+        ("prefill-parallel-gflops", Json::num(pre.parallel_gflops)),
+        ("decode-parallel-speedup", Json::num(dec.parallel_speedup)),
+        ("decode-packed-vs-seed-speedup", Json::num(dec.packed_speedup)),
+        ("ttft-serial-s", Json::num(ttft_serial)),
+        ("ttft-parallel-s", Json::num(ttft_par)),
+        ("gemm-share-serial", Json::num(share_serial)),
+        ("gemm-share-parallel", Json::num(share_par)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+    pre.parallel_speedup
+}

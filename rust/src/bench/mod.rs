@@ -10,6 +10,7 @@ pub mod prefix;
 pub mod decode;
 pub mod spec;
 pub mod quant;
+pub mod gemm;
 
 pub use crate::util::timing::{bench, heatmap, BenchCfg, Stats, Table};
 

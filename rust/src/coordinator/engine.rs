@@ -88,6 +88,11 @@ pub struct EngineCfg {
     /// dequantized inside the attention tiles). Applies to both layouts;
     /// host backend only — a pjrt engine downgrades to f32 with a warning.
     pub kv_dtype: KvDtype,
+    /// Fan-out worker count for the parallel GEMM / attention pool
+    /// (`--workers`). `0` keeps the `QUOKA_WORKERS` env override or the
+    /// auto-detected `available_parallelism - 1`. Pinned at engine
+    /// construction, before the first forward pass sizes the shared pool.
+    pub workers: usize,
 }
 
 impl Default for EngineCfg {
@@ -100,6 +105,7 @@ impl Default for EngineCfg {
             kv: KvLayout::Private,
             spec: SpecCfg::off(),
             kv_dtype: KvDtype::env_default(),
+            workers: 0,
         }
     }
 }
@@ -147,6 +153,11 @@ impl Engine {
     }
 
     pub fn with_backend(backend: Backend, mut cfg: EngineCfg) -> Engine {
+        // Pin the fan-out worker count before the first forward pass
+        // lazily sizes the shared pool (0 = QUOKA_WORKERS / auto).
+        if cfg.workers > 0 {
+            crate::util::threadpool::set_workers(cfg.workers);
+        }
         // A PJRT engine with an enabled engine-wide spec default would
         // reject every plain submit() (compiled artifacts have a fixed
         // single-token decode shape) — catch the misconfiguration at
@@ -1344,6 +1355,7 @@ mod tests {
                 kv: KvLayout::Private,
                 spec: SpecCfg::off(),
                 kv_dtype,
+                workers: 0,
             },
         )
         .unwrap()
@@ -1364,6 +1376,7 @@ mod tests {
                 kv: KvLayout::Paged { prefix_cache },
                 spec: SpecCfg::off(),
                 kv_dtype,
+                workers: 0,
             },
         )
         .unwrap()
@@ -1460,6 +1473,7 @@ mod tests {
                 kv: KvLayout::Private,
                 spec: SpecCfg::off(),
                 kv_dtype: KvDtype::env_default(),
+                workers: 0,
             },
         )
         .unwrap();
@@ -1529,6 +1543,7 @@ mod tests {
                 kv: KvLayout::Paged { prefix_cache: true },
                 spec: SpecCfg::off(),
                 kv_dtype: KvDtype::env_default(),
+                workers: 0,
             },
         )
         .unwrap();
@@ -1643,6 +1658,7 @@ mod tests {
                     kv: KvLayout::Paged { prefix_cache: true },
                     spec: SpecCfg::off(),
                     kv_dtype: KvDtype::env_default(),
+                    workers: 0,
                 },
             )
             .unwrap()

@@ -268,7 +268,7 @@ impl Metrics {
         let mut s = format!(
             "steps={} prefill_tok={} decode_tok={} finished={} \
              mean_ttft={:.1}ms mean_tpot={:.1}ms throughput={:.0} tok/s \
-             attention={:.1}% of step time",
+             attention={:.1}% of step time workers={}",
             self.steps,
             self.prefill_tokens,
             self.decode_tokens,
@@ -277,6 +277,9 @@ impl Metrics {
             self.mean_tpot_s() * 1e3,
             self.tokens_per_s(),
             if self.step_s > 0.0 { 100.0 * self.attention_s / self.step_s } else { 0.0 },
+            // Effective fan-out width (--workers / QUOKA_WORKERS / auto):
+            // the GEMM and attention pools both ride it.
+            crate::util::threadpool::default_workers(),
         );
         if self.decode_tokens > 0 {
             match self.decode_tokens_per_s() {

@@ -8,7 +8,7 @@
 //! quoka inspect --artifacts artifacts
 //! ```
 
-use quoka::bench::{latency, prefix, spec, tables};
+use quoka::bench::{gemm, latency, prefix, spec, tables};
 use quoka::coordinator::{Engine, EngineCfg, KvLayout, SchedCfg};
 use quoka::server::{serve_with_opts, Client, ServeOpts, WireRequest};
 use quoka::util::cli::{usage, Args, OptSpec};
@@ -73,6 +73,7 @@ fn serve_specs() -> Vec<OptSpec> {
         OptSpec { name: "prefix-cache", help: "radix prefix cache over the paged pool (implies --paged)", default: None, boolean: true },
         OptSpec { name: "spec-gamma", help: "speculative decode: max draft tokens per step (0 = off)", default: Some("0"), boolean: false },
         OptSpec { name: "spec-policy", help: "speculative draft policy (off | pld)", default: Some("pld"), boolean: false },
+        OptSpec { name: "workers", help: "fan-out worker count for GEMM/attention (0 = QUOKA_WORKERS env or all cores minus one)", default: Some("0"), boolean: false },
         OptSpec { name: "kv-dtype", help: "KV cache element type: f32 | int8 (int8 = 4x smaller cache, dequantized in-tile; host backend, dense/quoka* policies)", default: Some("f32"), boolean: false },
         OptSpec { name: "trace-out", help: "write the request-lifecycle trace (JSONL) here at shutdown and on the flush_trace wire command; enables tracing", default: None, boolean: false },
         OptSpec { name: "trace-events", help: "lifecycle-trace ring capacity in events (0 = off unless --trace-out is set)", default: Some("0"), boolean: false },
@@ -108,6 +109,7 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         // wire fields override it.
         spec: quoka::spec::SpecCfg::parse(&a.str("spec-policy")?, a.usize("spec-gamma")?)?,
         kv_dtype: quoka::kvpool::KvDtype::parse(&a.str("kv-dtype")?)?,
+        workers: a.usize("workers")?,
     };
     let backend = a.str("backend")?;
     let preset = a.str("preset")?;
@@ -240,13 +242,14 @@ fn cmd_bench(argv: Vec<String>) -> anyhow::Result<()> {
         "micro_hotpath" => drop(latency::micro_hotpath()),
         "prefix_serving" => drop(prefix::prefix_serving()),
         "spec_serving" => drop(spec::spec_serving()),
+        "gemm_serving" => drop(gemm::gemm_serving()),
         "all" => {
             for id in [
                 "fig2_geometry", "fig3_deviation", "fig4_niah", "table1_ruler",
                 "table2_ruler_budget", "table3_longbench", "table4_complexity",
                 "table8_math500", "table9_scoring", "table10_aggregation",
                 "table11_bcp", "table12_nq", "fig5_latency", "fig6_decode",
-                "micro_hotpath", "prefix_serving", "spec_serving",
+                "micro_hotpath", "prefix_serving", "spec_serving", "gemm_serving",
             ] {
                 cmd_bench(vec![id.to_string()])?;
             }
@@ -256,7 +259,7 @@ fn cmd_bench(argv: Vec<String>) -> anyhow::Result<()> {
                 "experiments (DESIGN.md §6):\n  fig2_geometry fig3_deviation fig4_niah\n  \
                  table1_ruler table2_ruler_budget table3_longbench table4_complexity\n  \
                  table8_math500 table9_scoring table10_aggregation table11_bcp table12_nq\n  \
-                 fig5_latency fig6_decode micro_hotpath prefix_serving spec_serving all\n\n\
+                 fig5_latency fig6_decode micro_hotpath prefix_serving spec_serving gemm_serving all\n\n\
                  QUOKA_BENCH_FULL=1 for paper-scale grids."
             );
         }

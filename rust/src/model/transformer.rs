@@ -11,11 +11,11 @@ use super::attention::{
     SeqKv,
 };
 use super::config::ModelConfig;
-use super::weights::{LayerWeights, Weights};
+use super::weights::{LayerWeights, PackedLayer, Weights};
 use crate::kvpool::{KvDtype, KvPool};
 use crate::obs::phase::{scoped, Phase};
 use crate::select::{fit, QChunk, SelectCtx, Selection, SelectionPolicy};
-use crate::tensor::matmul::{matmul, matmul_bt_argmax};
+use crate::tensor::matmul::{matmul_bt_argmax, matmul_packed};
 use crate::tensor::ops::{rmsnorm, silu, RopeTable};
 
 /// Per-sequence inference state: one KV buffer per layer + token count.
@@ -143,6 +143,9 @@ impl DecodeKv<'_> {
 /// table (one `theta^(-2i/d)` table per model instead of per token).
 pub struct HostModel {
     pub w: Weights,
+    /// Per-layer projection matrices in the packed-GEMM panel layout,
+    /// built once here so the hot path never pays the pack.
+    packed: Vec<PackedLayer>,
     rope: RopeTable,
     scratch: std::cell::RefCell<FwdScratch>,
 }
@@ -150,7 +153,8 @@ pub struct HostModel {
 impl HostModel {
     pub fn new(w: Weights) -> HostModel {
         let rope = RopeTable::new(w.cfg.d_head, w.cfg.rope_theta);
-        HostModel { w, rope, scratch: Default::default() }
+        let packed = w.layers.iter().map(|l| l.pack()).collect();
+        HostModel { w, packed, rope, scratch: Default::default() }
     }
 
     pub fn cfg(&self) -> &ModelConfig {
@@ -176,6 +180,7 @@ impl HostModel {
     fn layer_attn_inputs(
         &self,
         lw: &LayerWeights,
+        pl: &PackedLayer,
         hidden: &[f32],
         s: usize,
         pos: RowPos,
@@ -196,11 +201,11 @@ impl HostModel {
             );
         }
         let q_proj = fit(&mut sc.q_proj, s * dq);
-        matmul(normed, lw.wq.data(), s, dm, dq, q_proj);
+        matmul_packed(normed, &pl.wq, s, q_proj);
         let k_proj = fit(&mut sc.k_proj, s * dkv);
-        matmul(normed, lw.wk.data(), s, dm, dkv, k_proj);
+        matmul_packed(normed, &pl.wk, s, k_proj);
         let v_proj = fit(&mut sc.v_proj, s * dkv);
-        matmul(normed, lw.wv.data(), s, dm, dkv, v_proj);
+        matmul_packed(normed, &pl.wv, s, v_proj);
 
         let q_heads = fit(&mut sc.q_heads, nq * s * dh);
         for h in 0..nq {
@@ -230,7 +235,13 @@ impl HostModel {
 
     /// `[H, s, dh] → [s, H*dh]` merge of `sc.attn_heads`, output
     /// projection, residual add into `hidden`.
-    fn layer_attn_output(&self, lw: &LayerWeights, s: usize, hidden: &mut [f32], sc: &mut FwdScratch) {
+    fn layer_attn_output(
+        &self,
+        pl: &PackedLayer,
+        s: usize,
+        hidden: &mut [f32],
+        sc: &mut FwdScratch,
+    ) {
         let _t = scoped(Phase::Gemm);
         let cfg = &self.w.cfg;
         let (dm, dh) = (cfg.d_model, cfg.d_head);
@@ -245,14 +256,21 @@ impl HostModel {
             }
         }
         let attn_out = fit(&mut sc.attn_out, s * dm);
-        matmul(attn_merged, lw.wo.data(), s, dq, dm, attn_out);
+        matmul_packed(attn_merged, &pl.wo, s, attn_out);
         for (hv, ov) in hidden.iter_mut().zip(attn_out.iter()) {
             *hv += ov;
         }
     }
 
     /// FFN block (SwiGLU; optional top-1 MoE) with residual add.
-    fn layer_ffn(&self, lw: &LayerWeights, s: usize, hidden: &mut [f32], sc: &mut FwdScratch) {
+    fn layer_ffn(
+        &self,
+        lw: &LayerWeights,
+        pl: &PackedLayer,
+        s: usize,
+        hidden: &mut [f32],
+        sc: &mut FwdScratch,
+    ) {
         let _t = scoped(Phase::Gemm);
         let cfg = &self.w.cfg;
         let dm = cfg.d_model;
@@ -269,13 +287,13 @@ impl HostModel {
         let ffn_out = fit(&mut sc.ffn_out, s * dm);
         if cfg.n_experts == 0 {
             let gate = fit(&mut sc.ffn_gate, s * d_ff);
-            matmul(normed, lw.w_gate.data(), s, dm, d_ff, gate);
+            matmul_packed(normed, &pl.w_gate, s, gate);
             let up = fit(&mut sc.ffn_up, s * d_ff);
-            matmul(normed, lw.w_up.data(), s, dm, d_ff, up);
+            matmul_packed(normed, &pl.w_up, s, up);
             for (gv, uv) in gate.iter_mut().zip(up.iter()) {
                 *gv = silu(*gv) * uv;
             }
-            matmul(gate, lw.w_down.data(), s, d_ff, dm, ffn_out);
+            matmul_packed(gate, &pl.w_down, s, ffn_out);
         } else {
             // Top-1 routing per token.
             for i in 0..s {
@@ -291,19 +309,19 @@ impl HostModel {
                     }
                 }
                 let (wg, wu, wd) = if best.0 == 0 {
-                    (lw.w_gate.data(), lw.w_up.data(), lw.w_down.data())
+                    (&pl.w_gate, &pl.w_up, &pl.w_down)
                 } else {
-                    let ex = &lw.experts[best.0 - 1];
-                    (ex.0.data(), ex.1.data(), ex.2.data())
+                    let ex = &pl.experts[best.0 - 1];
+                    (&ex.0, &ex.1, &ex.2)
                 };
                 let gate = fit(&mut sc.ffn_gate, d_ff);
-                matmul(x, wg, 1, dm, d_ff, gate);
+                matmul_packed(x, wg, 1, gate);
                 let up = fit(&mut sc.ffn_up, d_ff);
-                matmul(x, wu, 1, dm, d_ff, up);
+                matmul_packed(x, wu, 1, up);
                 for (gv, uv) in gate.iter_mut().zip(up.iter()) {
                     *gv = silu(*gv) * uv;
                 }
-                matmul(gate, wd, 1, d_ff, dm, &mut ffn_out[i * dm..(i + 1) * dm]);
+                matmul_packed(gate, wd, 1, &mut ffn_out[i * dm..(i + 1) * dm]);
             }
         }
         for (hv, fv) in hidden.iter_mut().zip(ffn_out.iter()) {
@@ -334,7 +352,7 @@ impl HostModel {
         ctx.n_layers = cfg.n_layers;
         for (l, lw) in self.w.layers.iter().enumerate() {
             ctx.layer = l;
-            self.layer_attn_inputs(lw, &hidden, s, RowPos::Base(state.pos), sc);
+            self.layer_attn_inputs(lw, &self.packed[l], &hidden, s, RowPos::Base(state.pos), sc);
 
             // ---- selection over the past cache + attention ----
             let cache = &state.caches[l];
@@ -358,7 +376,7 @@ impl HostModel {
                 &mut sc.attn,
                 fit(&mut sc.attn_heads, nq * s * dh),
             );
-            self.layer_attn_output(lw, s, &mut hidden, sc);
+            self.layer_attn_output(&self.packed[l], s, &mut hidden, sc);
 
             // Append the chunk's KV to the cache (full retention).
             {
@@ -370,7 +388,7 @@ impl HostModel {
                 );
             }
 
-            self.layer_ffn(lw, s, &mut hidden, sc);
+            self.layer_ffn(lw, &self.packed[l], s, &mut hidden, sc);
         }
         state.pos += s;
         hidden
@@ -411,7 +429,7 @@ impl HostModel {
         ctx.n_layers = cfg.n_layers;
         for (l, lw) in self.w.layers.iter().enumerate() {
             ctx.layer = l;
-            self.layer_attn_inputs(lw, &hidden, s, RowPos::Base(pos), sc);
+            self.layer_attn_inputs(lw, &self.packed[l], &hidden, s, RowPos::Base(pos), sc);
 
             // ---- selection (block-table-aware KCache) + paged attention ----
             let sel = if pos == 0 || policy.is_dense() {
@@ -438,7 +456,7 @@ impl HostModel {
                     fit(&mut sc.attn_heads, nq * s * dh),
                 );
             }
-            self.layer_attn_output(lw, s, &mut hidden, sc);
+            self.layer_attn_output(&self.packed[l], s, &mut hidden, sc);
 
             {
                 let _t = scoped(Phase::Append);
@@ -452,7 +470,7 @@ impl HostModel {
                 );
             }
 
-            self.layer_ffn(lw, s, &mut hidden, sc);
+            self.layer_ffn(lw, &self.packed[l], s, &mut hidden, sc);
         }
         hidden
     }
@@ -502,7 +520,8 @@ impl HostModel {
         ctx.n_layers = cfg.n_layers;
         for (l, lw) in self.w.layers.iter().enumerate() {
             ctx.layer = l;
-            self.layer_attn_inputs(lw, &hidden, b, RowPos::PerRow(&positions), sc);
+            let pl = &self.packed[l];
+            self.layer_attn_inputs(lw, pl, &hidden, b, RowPos::PerRow(&positions), sc);
 
             // ---- per-sequence selection over each private/paged past ----
             let mut sels: Vec<Selection> = Vec::with_capacity(b);
@@ -568,7 +587,7 @@ impl HostModel {
                     fit(&mut sc.attn_heads, nq * b * dh),
                 );
             }
-            self.layer_attn_output(lw, b, &mut hidden, sc);
+            self.layer_attn_output(&self.packed[l], b, &mut hidden, sc);
 
             // ---- append each sequence's token KV straight from the batch
             // layout (no contiguous staging copy) ----
@@ -598,7 +617,7 @@ impl HostModel {
                 }
             }
 
-            self.layer_ffn(lw, b, &mut hidden, sc);
+            self.layer_ffn(lw, &self.packed[l], b, &mut hidden, sc);
         }
         for seq in seqs.iter_mut() {
             if let DecodeKv::Private(st) = &mut seq.kv {
@@ -677,7 +696,7 @@ impl HostModel {
         ctx.n_layers = cfg.n_layers;
         for (l, lw) in self.w.layers.iter().enumerate() {
             ctx.layer = l;
-            self.layer_attn_inputs(lw, &hidden, s, RowPos::Base(pos0), sc);
+            self.layer_attn_inputs(lw, &self.packed[l], &hidden, s, RowPos::Base(pos0), sc);
 
             // ---- serial per-position select → attend → append ----
             for i in 0..s {
@@ -788,8 +807,8 @@ impl HostModel {
                 }
             }
 
-            self.layer_attn_output(lw, s, &mut hidden, sc);
-            self.layer_ffn(lw, s, &mut hidden, sc);
+            self.layer_attn_output(&self.packed[l], s, &mut hidden, sc);
+            self.layer_ffn(lw, &self.packed[l], s, &mut hidden, sc);
         }
         if let DecodeKv::Private(st) = kv {
             st.pos += s;

@@ -10,6 +10,7 @@
 //! policies operate on.
 
 use super::config::ModelConfig;
+use crate::tensor::matmul::PackedB;
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -48,6 +49,50 @@ pub struct Weights {
     pub layers: Vec<LayerWeights>,
     /// `[d_model]` final RMSNorm gain.
     pub final_norm: Tensor,
+}
+
+/// One layer's projection matrices repacked into the tile-major panel
+/// layout the packed GEMM streams ([`PackedB`]). Built once at model load
+/// ([`LayerWeights::pack`]) so the pack cost never rides the forward
+/// pass. Norm gains and the router stay in [`LayerWeights`] — they feed
+/// element-wise kernels, not the GEMM.
+#[derive(Clone, Debug)]
+pub struct PackedLayer {
+    pub wq: PackedB,
+    pub wk: PackedB,
+    pub wv: PackedB,
+    pub wo: PackedB,
+    pub w_gate: PackedB,
+    pub w_up: PackedB,
+    pub w_down: PackedB,
+    /// Experts 1.. (expert 0 uses the dense panels above), mirroring
+    /// [`LayerWeights::experts`].
+    pub experts: Vec<(PackedB, PackedB, PackedB)>,
+}
+
+fn pack2d(t: &Tensor) -> PackedB {
+    let (k, n) = (t.shape()[0], t.shape()[1]);
+    PackedB::pack(t.data(), k, n)
+}
+
+impl LayerWeights {
+    /// Repack every GEMM operand of this layer (see [`PackedLayer`]).
+    pub fn pack(&self) -> PackedLayer {
+        PackedLayer {
+            wq: pack2d(&self.wq),
+            wk: pack2d(&self.wk),
+            wv: pack2d(&self.wv),
+            wo: pack2d(&self.wo),
+            w_gate: pack2d(&self.w_gate),
+            w_up: pack2d(&self.w_up),
+            w_down: pack2d(&self.w_down),
+            experts: self
+                .experts
+                .iter()
+                .map(|(g, u, d)| (pack2d(g), pack2d(u), pack2d(d)))
+                .collect(),
+        }
+    }
 }
 
 fn proj(rng: &mut Rng, rows: usize, cols: usize) -> Tensor {
@@ -136,6 +181,19 @@ mod tests {
         assert_eq!(l.wk.shape(), &[cfg.d_model, cfg.n_kv_heads * cfg.d_head]);
         assert_eq!(l.router.shape(), &[cfg.d_model, cfg.n_experts]);
         assert_eq!(l.experts.len(), cfg.n_experts - 1);
+    }
+
+    #[test]
+    fn packed_layers_round_trip() {
+        let cfg = ModelConfig::preset("gptoss-20b-sim").unwrap();
+        let w = Weights::generate(&cfg, 7);
+        let l = &w.layers[0];
+        let p = l.pack();
+        assert_eq!(p.wq.unpack(), l.wq.data());
+        assert_eq!(p.wo.unpack(), l.wo.data());
+        assert_eq!(p.w_down.unpack(), l.w_down.data());
+        assert_eq!(p.experts.len(), l.experts.len());
+        assert_eq!(p.experts[0].1.unpack(), l.experts[0].1.data());
     }
 
     #[test]

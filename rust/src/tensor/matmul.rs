@@ -1,39 +1,330 @@
-//! Blocked matrix multiplication.
+//! Blocked, packed, pool-parallel matrix multiplication.
 //!
-//! Two entry points cover the engine's needs:
-//! - [`matmul`]: `C[m,n] = A[m,k] · B[k,n]` — projection layers.
+//! Three entry points cover the engine's needs:
+//! - [`matmul`]: `C[m,n] = A[m,k] · B[k,n]` — projection layers with an
+//!   ad-hoc `B` (packs into thread-local scratch on the fly).
+//! - [`matmul_packed`]: the same product against a [`PackedB`] prepared
+//!   once (per-layer weights are packed at model load, so the pack cost
+//!   never rides the hot path).
 //! - [`matmul_bt`]: `C[m,n] = A[m,k] · Bᵀ` with `B[n,k]` — the `QKᵀ` score
 //!   shape, where both operands are row-major token matrices.
 //!
-//! The kernels are cache-blocked and use unrolled inner loops that rustc
-//! auto-vectorizes; `par_matmul*` variants split rows across threads for the
-//! large dense-baseline attention at 32k context.
+//! ## The packed GEMM
+//!
+//! `B` is repacked into tile-major *panels* of [`NR`] = 16 columns
+//! (`panel[kk * NR + j] = B[kk, p*NR + j]`, zero-padded tail), so the
+//! micro-kernel streams one contiguous 64-byte line per `k` step instead
+//! of striding across `B` rows. The AVX2 micro-kernel holds a 4-row ×
+//! 16-column block of `C` in eight YMM accumulators and walks `k` once;
+//! the scalar fallback replicates the identical lane structure.
+//!
+//! ## Determinism under parallelism
+//!
+//! Every output element is one strict left-fold over `k` in increasing
+//! order — plain mul-then-add, one accumulator chain, no FMA (the PR-6
+//! convention: AVX2 per-lane ops match the scalar two-rounding sequence
+//! exactly). Parallelism only ever splits the *output* — row blocks for
+//! prefill-shaped `m`, column panels for decode-shaped `m` — and never
+//! splits `k`, so the packed kernel is bit-identical to its serial run at
+//! every worker count, and each row's result is independent of the batch
+//! it rides in (what keeps batched-vs-serial decode exact).
 
 use super::ops::dot;
-use crate::util::threadpool::parallel_for;
+use crate::util::threadpool::{default_workers, parallel_for, SyncPtr};
+use std::cell::RefCell;
 
-const BLOCK_K: usize = 256;
+/// Panel width of the packed layout: 16 columns = two AVX2 registers.
+pub const NR: usize = 16;
+/// Micro-kernel row block: 4 rows × 2 vectors = 8 YMM accumulators.
+const MR: usize = 4;
+/// Rows per parallel row-block work item.
+const ROW_BLOCK: usize = 8;
+/// Below this many MACs (`m*k*n`) the fork-join wake is not worth it.
+const PAR_MIN_WORK: usize = 1 << 18;
 
-/// `C[m,n] = A[m,k] · B[k,n]`, accumulating into a zeroed `c`.
+/// `B[k,n]` repacked into tile-major panels of [`NR`] columns.
+///
+/// Layout: panel `p` occupies `data[p*k*NR .. (p+1)*k*NR]` with
+/// `data[p*k*NR + kk*NR + j] = B[kk, p*NR + j]` (zero where the final
+/// panel overhangs `n`).
+#[derive(Clone, Debug)]
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack a row-major `B[k,n]`.
+    pub fn pack(b: &[f32], k: usize, n: usize) -> PackedB {
+        let mut data = Vec::new();
+        pack_into(b, k, n, &mut data);
+        PackedB { k, n, data }
+    }
+
+    /// Reconstruct the row-major `B[k,n]` this packing came from.
+    pub fn unpack(&self) -> Vec<f32> {
+        let (k, n) = (self.k, self.n);
+        let mut b = vec![0.0f32; k * n];
+        for p in 0..panels(n) {
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            let panel = &self.data[p * k * NR..(p + 1) * k * NR];
+            for kk in 0..k {
+                b[kk * n + j0..kk * n + j0 + w]
+                    .copy_from_slice(&panel[kk * NR..kk * NR + w]);
+            }
+        }
+        b
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Resident bytes of the packed payload.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[inline]
+fn panels(n: usize) -> usize {
+    n.div_ceil(NR)
+}
+
+/// Pack `B[k,n]` into `out` (reusing its capacity; zero tail padding).
+fn pack_into(b: &[f32], k: usize, n: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(b.len(), k * n);
+    let np = panels(n);
+    out.resize(np * k * NR, 0.0);
+    for p in 0..np {
+        let j0 = p * NR;
+        let w = NR.min(n - j0);
+        let panel = &mut out[p * k * NR..(p + 1) * k * NR];
+        for kk in 0..k {
+            panel[kk * NR..kk * NR + w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+            if w < NR {
+                panel[kk * NR + w..(kk + 1) * NR].iter_mut().for_each(|v| *v = 0.0);
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// Per-thread pack scratch for [`matmul`]'s ad-hoc `B` operands
+    /// (engine workers reuse it; zero steady-state allocation).
+    static PACK_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// `C[m,n] = A[m,k] · B[k,n]`, overwriting `c`. Packs `B` into
+/// thread-local scratch, then runs the packed kernel on the shared pool.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
+    PACK_SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        pack_into(b, k, n, &mut buf);
+        gemm(a, &buf, m, k, n, c, default_workers());
+    });
+}
+
+/// `C[m,n] = A[m,k] · B` for a pre-packed `B`, overwriting `c`, on the
+/// shared pool ([`default_workers`] participants).
+pub fn matmul_packed(a: &[f32], b: &PackedB, m: usize, c: &mut [f32]) {
+    matmul_packed_with(a, b, m, c, default_workers());
+}
+
+/// [`matmul_packed`] with an explicit participant count — bit-identical
+/// to `threads == 1` at every count (benches and the exactness property
+/// test sweep this).
+pub fn matmul_packed_with(a: &[f32], b: &PackedB, m: usize, c: &mut [f32], threads: usize) {
+    debug_assert_eq!(a.len(), m * b.k);
+    gemm(a, &b.data, m, b.k, b.n, c, threads);
+}
+
+/// Driver: split the output across participants (never `k`).
+fn gemm(a: &[f32], packed: &[f32], m: usize, k: usize, n: usize, c: &mut [f32], threads: usize) {
     debug_assert_eq!(c.len(), m * n);
-    c.iter_mut().for_each(|v| *v = 0.0);
-    // i-k-j loop order: unit-stride access on both B and C rows.
-    for kb in (0..k).step_by(BLOCK_K) {
-        let kend = (kb + BLOCK_K).min(k);
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let crow = &mut c[i * n..(i + 1) * n];
-            for kk in kb..kend {
-                let av = arow[kk];
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    crow[j] += av * brow[j];
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.iter_mut().for_each(|v| *v = 0.0);
+        return;
+    }
+    let np = panels(n);
+    let c_ptr = SyncPtr::new(c.as_mut_ptr());
+    let c_ref = &c_ptr;
+    // Captures the operand *slices* (Sync) and the output via `SyncPtr`,
+    // so the closure can cross to pool workers.
+    let run_rows = |i0: usize, i1: usize| {
+        for p in 0..np {
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            // SAFETY: pointers stay in-bounds (checked dims above); row
+            // ranges/panels are disjoint across work items.
+            unsafe {
+                let panel = packed.as_ptr().add(p * k * NR);
+                panel_rows(a.as_ptr(), panel, k, n, w, j0, i0, i1, c_ref.get());
+            }
+        }
+    };
+    if threads <= 1 || m * k * n < PAR_MIN_WORK {
+        run_rows(0, m);
+    } else if m >= threads * 2 * ROW_BLOCK {
+        // Prefill-shaped m: parallelize over output row blocks.
+        let blocks = m.div_ceil(ROW_BLOCK);
+        parallel_for(blocks, threads, |ib| {
+            let i0 = ib * ROW_BLOCK;
+            run_rows(i0, (i0 + ROW_BLOCK).min(m));
+        });
+    } else {
+        // Decode-shaped m (few rows, wide n): parallelize over column
+        // panels — still disjoint C writes, still the same per-element
+        // k-order fold.
+        parallel_for(np, threads, |p| {
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            // SAFETY: as above; each p owns its column strip of C.
+            unsafe {
+                let panel = packed.as_ptr().add(p * k * NR);
+                panel_rows(a.as_ptr(), panel, k, n, w, j0, 0, m, c_ref.get());
+            }
+        });
+    }
+}
+
+/// Compute `C` rows `[i0, i1)` of one packed panel (columns
+/// `[j0, j0+w)`), dispatching to AVX2 when available.
+///
+/// # Safety
+/// `a` must cover `[i1*k]` floats, `panel` `[k*NR]`, `c` `[i1*n]`; the
+/// `[i0, i1) × [j0, j0+w)` region of `c` must be exclusive to this call.
+unsafe fn panel_rows(
+    a: *const f32,
+    panel: *const f32,
+    k: usize,
+    n: usize,
+    w: usize,
+    j0: usize,
+    i0: usize,
+    i1: usize,
+    c: *mut f32,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if super::ops::avx2() {
+        return x86::panel_rows(a, panel, k, n, w, j0, i0, i1, c);
+    }
+    panel_rows_scalar(a, panel, k, n, w, j0, i0, i1, c)
+}
+
+/// Portable micro-kernel: per output element one `acc += a*b` chain over
+/// `k` in order — the reference lane structure the AVX2 path reproduces.
+#[allow(clippy::too_many_arguments)]
+unsafe fn panel_rows_scalar(
+    a: *const f32,
+    panel: *const f32,
+    k: usize,
+    n: usize,
+    w: usize,
+    j0: usize,
+    i0: usize,
+    i1: usize,
+    c: *mut f32,
+) {
+    for i in i0..i1 {
+        let arow = a.add(i * k);
+        let mut acc = [0.0f32; NR];
+        for kk in 0..k {
+            let av = *arow.add(kk);
+            let prow = panel.add(kk * NR);
+            for (j, slot) in acc.iter_mut().enumerate() {
+                *slot += av * *prow.add(j);
+            }
+        }
+        let crow = c.add(i * n + j0);
+        for (j, &v) in acc.iter().take(w).enumerate() {
+            *crow.add(j) = v;
+        }
+    }
+}
+
+/// AVX2 micro-kernels. Per-lane identical to [`panel_rows_scalar`]: one
+/// accumulator per output element, `add(acc, mul(broadcast(a), b))` per
+/// `k` step — no FMA, so the two-rounding scalar result is reproduced
+/// bit-exactly (the PR-6 convention).
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn panel_rows(
+        a: *const f32,
+        panel: *const f32,
+        k: usize,
+        n: usize,
+        w: usize,
+        j0: usize,
+        i0: usize,
+        i1: usize,
+        c: *mut f32,
+    ) {
+        let mut i = i0;
+        while i + MR <= i1 {
+            block::<MR>(a, panel, k, n, w, j0, i, c);
+            i += MR;
+        }
+        while i < i1 {
+            block::<1>(a, panel, k, n, w, j0, i, c);
+            i += 1;
+        }
+    }
+
+    /// `R` rows × one 16-wide panel, `2R` YMM accumulators. Always
+    /// inlined into the `target_feature` caller (a generic fn cannot
+    /// carry the attribute itself on older toolchains).
+    #[inline(always)]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn block<const R: usize>(
+        a: *const f32,
+        panel: *const f32,
+        k: usize,
+        n: usize,
+        w: usize,
+        j0: usize,
+        i: usize,
+        c: *mut f32,
+    ) {
+        let mut lo = [_mm256_setzero_ps(); R];
+        let mut hi = [_mm256_setzero_ps(); R];
+        for kk in 0..k {
+            let prow = panel.add(kk * NR);
+            let b0 = _mm256_loadu_ps(prow);
+            let b1 = _mm256_loadu_ps(prow.add(8));
+            for r in 0..R {
+                let av = _mm256_set1_ps(*a.add((i + r) * k + kk));
+                lo[r] = _mm256_add_ps(lo[r], _mm256_mul_ps(av, b0));
+                hi[r] = _mm256_add_ps(hi[r], _mm256_mul_ps(av, b1));
+            }
+        }
+        for r in 0..R {
+            let crow = c.add((i + r) * n + j0);
+            if w == NR {
+                _mm256_storeu_ps(crow, lo[r]);
+                _mm256_storeu_ps(crow.add(8), hi[r]);
+            } else {
+                let mut tmp = [0f32; NR];
+                _mm256_storeu_ps(tmp.as_mut_ptr(), lo[r]);
+                _mm256_storeu_ps(tmp.as_mut_ptr().add(8), hi[r]);
+                for (j, &v) in tmp.iter().take(w).enumerate() {
+                    *crow.add(j) = v;
                 }
             }
         }
@@ -68,23 +359,19 @@ pub fn par_matmul_bt(
         return matmul_bt(a, b, m, k, n, c);
     }
     debug_assert_eq!(c.len(), m * n);
-    // Rows are disjoint; hand each thread an independent &mut row via raw
+    // Rows are disjoint; hand each worker an independent &mut row via raw
     // pointer arithmetic wrapped in a Sync cell.
-    let c_ptr = SyncPtr(c.as_mut_ptr());
+    let c_ptr = SyncPtr::new(c.as_mut_ptr());
     let c_ref = &c_ptr; // capture the Sync wrapper, not the raw pointer field
     parallel_for(m, threads, |i| {
         let arow = &a[i * k..(i + 1) * k];
         // SAFETY: each i writes exclusively to its own row slice.
-        let crow = unsafe { std::slice::from_raw_parts_mut(c_ref.0.add(i * n), n) };
+        let crow = unsafe { std::slice::from_raw_parts_mut(c_ref.get().add(i * n), n) };
         for j in 0..n {
             crow[j] = dot(arow, &b[j * k..(j + 1) * k]);
         }
     });
 }
-
-struct SyncPtr<T>(*mut T);
-unsafe impl<T> Sync for SyncPtr<T> {}
-unsafe impl<T> Send for SyncPtr<T> {}
 
 /// Fused `argmax_j (A · Bᵀ)[i, j]` per row: for each of the `m` rows of
 /// `A[m,k]`, the index of the largest dot product against the `n` rows of
@@ -92,8 +379,10 @@ unsafe impl<T> Send for SyncPtr<T> {}
 /// materializing the `[m, n]` logits. Each dot is computed exactly as
 /// [`matmul_bt`] computes it and ties break to the lower index, so the
 /// result is bit-identical to `topk_indices(&matmul_bt_row, 1)[0]`.
-/// Rows are split across threads when the reduction is large enough to
-/// amortize the fork-join.
+/// Rows are split across the shared pool when the reduction is large
+/// enough to amortize the fan-out wake (a lower bar than the old per-call
+/// thread spawn — the persistent pool makes smaller logits heads worth
+/// parallelizing).
 pub fn matmul_bt_argmax(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [u32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
@@ -111,18 +400,18 @@ pub fn matmul_bt_argmax(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out:
         }
         best_j
     };
-    let threads = crate::util::threadpool::default_workers().min(m);
-    if threads <= 1 || m * n * k < 1 << 20 {
+    let threads = default_workers().min(m);
+    if threads <= 1 || m * n * k < PAR_MIN_WORK {
         for (i, o) in out.iter_mut().enumerate() {
             *o = row_argmax(&a[i * k..(i + 1) * k]);
         }
         return;
     }
-    let o_ptr = SyncPtr(out.as_mut_ptr());
+    let o_ptr = SyncPtr::new(out.as_mut_ptr());
     let o_ref = &o_ptr;
     parallel_for(m, threads, |i| {
         // SAFETY: each i writes exclusively to its own output slot.
-        unsafe { *o_ref.0.add(i) = row_argmax(&a[i * k..(i + 1) * k]) };
+        unsafe { *o_ref.get().add(i) = row_argmax(&a[i * k..(i + 1) * k]) };
     });
 }
 
@@ -151,12 +440,29 @@ mod tests {
         for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 2), (7, 300, 9), (16, 64, 16)] {
             let a = rng.normal_vec(m * k, 1.0);
             let b = rng.normal_vec(k * n, 1.0);
-            let mut c = vec![1.0; m * n]; // nonzero: matmul must zero it
+            let mut c = vec![1.0; m * n]; // nonzero: matmul must overwrite it
             matmul(&a, &b, m, k, n, &mut c);
             let want = naive(&a, &b, m, k, n);
             for (x, y) in c.iter().zip(&want) {
                 assert!((x - y).abs() < 1e-3, "{x} vs {y}");
             }
+        }
+    }
+
+    #[test]
+    fn packed_path_matches_adhoc_matmul_bitwise() {
+        // Pre-packed weights and the pack-on-the-fly path must agree to
+        // the bit (the transformer mixes both).
+        let mut rng = Rng::new(14);
+        for &(m, k, n) in &[(1usize, 7usize, 3usize), (5, 33, 16), (8, 64, 100), (64, 48, 31)] {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            let mut c1 = vec![0.0; m * n];
+            matmul(&a, &b, m, k, n, &mut c1);
+            let packed = PackedB::pack(&b, k, n);
+            let mut c2 = vec![0.0; m * n];
+            matmul_packed(&a, &packed, m, &mut c2);
+            assert_eq!(c1, c2, "({m},{k},{n})");
         }
     }
 

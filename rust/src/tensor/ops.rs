@@ -42,9 +42,10 @@
 //! streams at 1 byte/element and no fp32 copy of a tile is ever
 //! materialized.
 
-/// Runtime AVX2 capability, probed once.
+/// Runtime AVX2 capability, probed once. Shared with the packed GEMM in
+/// [`super::matmul`], which follows the same dispatch convention.
 #[inline]
-fn avx2() -> bool {
+pub(crate) fn avx2() -> bool {
     #[cfg(target_arch = "x86_64")]
     {
         static HAS: std::sync::OnceLock<bool> = std::sync::OnceLock::new();

@@ -1,15 +1,46 @@
-//! Fixed-size scoped worker pool (tokio is unavailable offline; the engine
-//! is CPU-bound anyway, so OS threads + channels are the right substrate).
+//! Fixed-size worker pools (tokio is unavailable offline; the engine is
+//! CPU-bound anyway, so OS threads + condvars are the right substrate).
 //!
 //! Two primitives:
 //! - [`ThreadPool`] — long-lived workers consuming boxed jobs, used by the
 //!   serving engine for per-sequence layer work.
 //! - [`parallel_for`] — fork-join helper over index ranges, used by the
-//!   host tensor backend's blocked matmul and by benchmark sweeps.
+//!   packed GEMM, the tiled-attention fan-out, the QUOKA key scan and
+//!   benchmark sweeps.
+//!
+//! ## The fork-join fan-out pool
+//!
+//! `parallel_for` used to spawn fresh OS threads through `thread::scope`
+//! on every call — fine for one 32k-context attention pass, ruinous for
+//! the per-layer projection GEMMs that fan out thousands of times per
+//! request. It now publishes each job to a single lazily-initialized
+//! process-wide pool ([`fan`]):
+//!
+//! - **Zero allocation per call.** The closure is published as a raw
+//!   `(data, call)` pair — a pointer to the caller's stack plus a
+//!   monomorphized shim — never boxed. The caller blocks until every
+//!   participant has retired, so the borrow cannot escape the call.
+//! - **Chunked work-stealing.** Participants claim `grain`-sized index
+//!   chunks from one shared atomic (`fetch_add(grain)`), one RMW per
+//!   chunk instead of one per index, while irregular per-index cost still
+//!   rebalances across workers.
+//! - **Caller participation.** The publishing thread drains chunks like
+//!   any worker, so a job completes even on a pool of size zero, and
+//!   `threads` participants need only `threads - 1` pool workers.
+//! - **Serial fallback under contention.** Publication is serialized by a
+//!   `try_lock`; a nested or concurrent fork-join (two engine sequences
+//!   projecting at once) runs inline on its own thread instead of
+//!   deadlocking or queueing.
+//!
+//! The pool is sized once, on first use, from [`default_workers`] — set
+//! [`set_workers`] (or `QUOKA_WORKERS`) before the first fan-out. Later
+//! `set_workers` calls still cap per-job participation via the `threads`
+//! argument plumbed by callers, which is how benches sweep worker counts
+//! without resizing the pool.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -51,7 +82,7 @@ impl<T> Copy for SyncPtr<T> {}
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
 }
 
 impl ThreadPool {
@@ -60,7 +91,7 @@ impl ThreadPool {
         let n = n.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
         let workers = (0..n)
             .map(|i| {
                 let rx = Arc::clone(&rx);
@@ -124,12 +155,166 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Fork-join: run `f(i)` for `i in 0..n` across up to `threads` OS threads.
-///
-/// `f` must be `Sync`; chunks are balanced by an atomic work-stealing index
-/// so irregular per-index cost (e.g. different sequence lengths) stays
-/// balanced.
-pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
+// ---------------------------------------------------------------------------
+// Persistent fork-join fan-out pool backing `parallel_for`.
+// ---------------------------------------------------------------------------
+
+/// A published fork-join job, type-erased. `data` points at the caller's
+/// stack-borrowed closure; `call` is the monomorphized shim that invokes
+/// it for one index. Valid only while the publishing `parallel_for_grain`
+/// call is blocked (it waits for `in_flight == 0` before returning).
+#[derive(Clone, Copy)]
+struct RawJob {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    n: usize,
+    grain: usize,
+}
+
+// The pointer pair crosses threads only inside the publisher's blocking
+// window; `F: Sync` on the closure is enforced at the `parallel_for` API.
+unsafe impl Send for RawJob {}
+
+unsafe fn noop_shim(_: *const (), _: usize) {}
+
+const NO_JOB: RawJob = RawJob { data: std::ptr::null(), call: noop_shim, n: 0, grain: 1 };
+
+struct FanState {
+    /// Bumped once per published job; workers key their wake-up off it.
+    seq: u64,
+    job: RawJob,
+    /// Worker participation slots remaining for the current job.
+    slots: usize,
+    /// Workers currently draining the current job.
+    in_flight: usize,
+    /// A worker's chunk panicked during the current job.
+    panicked: bool,
+}
+
+/// The process-wide fan-out pool: publication state + wake/quiesce
+/// condvars + the shared chunk cursor.
+struct Fan {
+    state: Mutex<FanState>,
+    /// Workers park here between jobs.
+    start: Condvar,
+    /// The publisher parks here until `in_flight` drops to zero.
+    quiet: Condvar,
+    /// Shared chunk cursor for the current job (reset per publication;
+    /// publication is serialized by `FANOUT`, so generations never mix).
+    next: AtomicUsize,
+    /// Number of pool workers (participants minus the caller).
+    size: usize,
+}
+
+static FAN: OnceLock<&'static Fan> = OnceLock::new();
+/// Serializes fork-join publication; losers of the flag run inline.
+/// (A plain atomic rather than a `Mutex` so a panicking job can never
+/// poison publication for the rest of the process.)
+static FANOUT: AtomicBool = AtomicBool::new(false);
+/// Worker count override installed by `set_workers` (0 = unset).
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+/// Releases the publication flag even if the caller's chunks panic.
+struct FanoutGuard;
+
+impl Drop for FanoutGuard {
+    fn drop(&mut self) {
+        FANOUT.store(false, Ordering::Release);
+    }
+}
+
+/// Runs the quiesce protocol on drop, so a panic while the caller drains
+/// its own chunks still waits out in-flight workers before the stack
+/// frame holding the job's closure unwinds.
+struct Quiesce<'a>(&'a Fan);
+
+impl Drop for Quiesce<'_> {
+    fn drop(&mut self) {
+        let fan = self.0;
+        let mut st = fan.state.lock().unwrap();
+        // Close the slot window so late-waking workers skip this job, then
+        // wait out the ones already in flight.
+        st.slots = 0;
+        while st.in_flight > 0 {
+            st = fan.quiet.wait(st).unwrap();
+        }
+    }
+}
+
+fn worker_loop(fan: &'static Fan) {
+    let mut last_seq = 0u64;
+    loop {
+        let job;
+        {
+            let mut st = fan.state.lock().unwrap();
+            loop {
+                if st.seq != last_seq {
+                    last_seq = st.seq;
+                    if st.slots > 0 {
+                        st.slots -= 1;
+                        st.in_flight += 1;
+                        job = st.job;
+                        break;
+                    }
+                    // No slot on this job; wait for the next one.
+                }
+                st = fan.start.wait(st).unwrap();
+            }
+        }
+        let drained = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let start = fan.next.fetch_add(job.grain, Ordering::Relaxed);
+            if start >= job.n {
+                break;
+            }
+            for i in start..(start + job.grain).min(job.n) {
+                // SAFETY: the publisher blocks until `in_flight` hits zero,
+                // so the closure behind `job.data` is still alive.
+                unsafe { (job.call)(job.data, i) };
+            }
+        }));
+        let mut st = fan.state.lock().unwrap();
+        if drained.is_err() {
+            st.panicked = true;
+        }
+        st.in_flight -= 1;
+        if st.in_flight == 0 {
+            fan.quiet.notify_all();
+        }
+    }
+}
+
+/// The lazily-built fan-out pool. Sized once from [`default_workers`]
+/// minus one (the publishing thread is itself a participant).
+fn fan() -> &'static Fan {
+    *FAN.get_or_init(|| {
+        let size = default_workers().saturating_sub(1);
+        let fan: &'static Fan = Box::leak(Box::new(Fan {
+            state: Mutex::new(FanState {
+                seq: 0,
+                job: NO_JOB,
+                slots: 0,
+                in_flight: 0,
+                panicked: false,
+            }),
+            start: Condvar::new(),
+            quiet: Condvar::new(),
+            next: AtomicUsize::new(0),
+            size,
+        }));
+        for i in 0..size {
+            thread::Builder::new()
+                .name(format!("quoka-fan-{i}"))
+                .spawn(move || worker_loop(fan))
+                .expect("spawn fan worker");
+        }
+        fan
+    })
+}
+
+/// Fork-join: run `f(i)` for `i in 0..n` across up to `threads`
+/// participants (the calling thread plus pool workers), claiming
+/// `grain`-sized index chunks from a shared work-stealing cursor.
+pub fn parallel_for_grain<F: Fn(usize) + Sync>(n: usize, threads: usize, grain: usize, f: F) {
     let threads = threads.max(1).min(n.max(1));
     if threads <= 1 || n <= 1 {
         for i in 0..n {
@@ -137,23 +322,95 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
         }
         return;
     }
-    let next = AtomicUsize::new(0);
-    thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                f(i);
-            });
+    let fan = fan();
+    // One fan-out at a time; a nested or concurrent fork-join runs inline
+    // (never blocks, never deadlocks).
+    if fan.size == 0
+        || FANOUT.compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed).is_err()
+    {
+        for i in 0..n {
+            f(i);
         }
-    });
+        return;
+    }
+    let _publication = FanoutGuard;
+    let grain = grain.max(1);
+    unsafe fn shim<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+        (*(data as *const F))(i)
+    }
+    fan.next.store(0, Ordering::Relaxed);
+    {
+        let mut st = fan.state.lock().unwrap();
+        debug_assert_eq!(st.in_flight, 0, "publication while a job is live");
+        st.seq += 1;
+        st.job = RawJob { data: &f as *const F as *const (), call: shim::<F>, n, grain };
+        st.slots = (threads - 1).min(fan.size);
+        st.panicked = false;
+    }
+    fan.start.notify_all();
+    {
+        // Quiesces on drop — including a panic unwind out of `f` below —
+        // so `f` (and the buffers it borrows) outlives every worker.
+        let _quiesce = Quiesce(fan);
+        // Participate: drain chunks alongside the workers.
+        loop {
+            let start = fan.next.fetch_add(grain, Ordering::Relaxed);
+            if start >= n {
+                break;
+            }
+            for i in start..(start + grain).min(n) {
+                f(i);
+            }
+        }
+    }
+    if fan.state.lock().unwrap().panicked {
+        panic!("parallel_for worker panicked");
+    }
 }
 
-/// Default worker count: physical parallelism minus one for the scheduler.
+/// Fork-join: run `f(i)` for `i in 0..n` across up to `threads`
+/// participants with a default grain of ~4 chunks per participant —
+/// coarse enough to amortize the shared-cursor RMW, fine enough that
+/// irregular per-index cost (different sequence lengths) stays balanced.
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
+    let grain = (n / (threads.max(1) * 4)).max(1);
+    parallel_for_grain(n, threads, grain, f)
+}
+
+/// Pin the worker count used by [`default_workers`] (and hence every
+/// fan-out call site that doesn't pass an explicit thread count).
+/// Call before the first `parallel_for` to also size the pool itself;
+/// afterwards it only caps/raises per-job participation.
+pub fn set_workers(n: usize) {
+    CONFIGURED.store(n.max(1), Ordering::Relaxed);
+}
+
+/// `QUOKA_WORKERS` env override, probed once (0 = unset).
+fn env_workers() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("QUOKA_WORKERS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(0)
+    })
+}
+
+/// Default worker count: [`set_workers`] override, else `QUOKA_WORKERS`,
+/// else physical parallelism minus one for the scheduler.
 pub fn default_workers() -> usize {
-    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).saturating_sub(1).max(1)
+    let configured = CONFIGURED.load(Ordering::Relaxed);
+    if configured > 0 {
+        return configured;
+    }
+    let env = env_workers();
+    if env > 0 {
+        return env;
+    }
+    static AUTO: OnceLock<usize> = OnceLock::new();
+    *AUTO.get_or_init(|| {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(4).saturating_sub(1).max(1)
+    })
 }
 
 #[cfg(test)]
@@ -201,11 +458,53 @@ mod tests {
     }
 
     #[test]
+    fn parallel_for_covers_range_at_every_grain() {
+        for grain in [1usize, 2, 3, 7, 64, 1000] {
+            let hits: Vec<AtomicU64> = (0..129).map(|_| AtomicU64::new(0)).collect();
+            parallel_for_grain(129, 4, grain, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "grain {grain} missed or duplicated indices"
+            );
+        }
+    }
+
+    #[test]
     fn parallel_for_single_thread_fallback() {
         let hits = AtomicU64::new(0);
         parallel_for(5, 1, |_| {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn parallel_for_is_reentrant_via_serial_fallback() {
+        // A fan-out inside a fan-out must not deadlock: the inner call
+        // loses the publication try_lock and runs inline.
+        let hits: Vec<AtomicU64> = (0..8 * 8).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(8, 4, |i| {
+            parallel_for(8, 4, |j| {
+                hits[i * 8 + j].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_back_to_back_jobs_stay_isolated() {
+        // Successive jobs reuse the same pool; indices from one must never
+        // leak into the next (the quiesce step guarantees this).
+        for round in 0..50u64 {
+            let n = 16 + (round as usize % 7);
+            let sum = AtomicU64::new(0);
+            parallel_for(n, 4, |i| {
+                sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            });
+            let want = (n as u64) * (n as u64 + 1) / 2;
+            assert_eq!(sum.load(Ordering::Relaxed), want, "round {round}");
+        }
     }
 }

@@ -1,0 +1,90 @@
+//! Determinism contract of the pool-backed packed GEMM (PR 8).
+//!
+//! The kernel computes every output element as one strict left-fold over
+//! `k` in increasing order (mul-then-add, single accumulator) and
+//! parallelism only partitions the *output* (row blocks or column
+//! panels), never the reduction — so the result must be bit-identical at
+//! every worker count, on every shape, against the serial packed path
+//! and against the ad-hoc [`matmul`] entry point.
+
+use quoka::tensor::matmul::{matmul, matmul_packed, matmul_packed_with, PackedB};
+use quoka::util::Rng;
+
+/// Shapes covering: tiny, panel-tail (n % 16 != 0), micro-kernel row tail
+/// (m % 4 != 0), the parallel row-block regime (large m), and the
+/// column-panel regime (small m, wide n).
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 7, 3),
+    (5, 33, 16),
+    (8, 64, 100),
+    (64, 48, 31),
+    (128, 256, 768),
+    (4, 256, 768),
+];
+
+fn inputs(m: usize, k: usize, n: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(0x9E3779B9 ^ (m * 1000 + k * 10 + n) as u64);
+    (rng.normal_vec(m * k, 1.0), rng.normal_vec(k * n, 1.0))
+}
+
+#[test]
+fn parallel_is_bit_identical_to_serial_at_every_worker_count() {
+    for &(m, k, n) in SHAPES {
+        let (a, b) = inputs(m, k, n);
+        let packed = PackedB::pack(&b, k, n);
+        let mut serial = vec![0.0f32; m * n];
+        matmul_packed_with(&a, &packed, m, &mut serial, 1);
+        for workers in [2, 4, 7] {
+            let mut par = vec![0.0f32; m * n];
+            matmul_packed_with(&a, &packed, m, &mut par, workers);
+            assert_eq!(serial, par, "shape ({m},{k},{n}) diverged at workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn adhoc_matmul_matches_prepacked_path_bitwise() {
+    for &(m, k, n) in SHAPES {
+        let (a, b) = inputs(m, k, n);
+        let packed = PackedB::pack(&b, k, n);
+        let mut adhoc = vec![0.0f32; m * n];
+        matmul(&a, &b, m, k, n, &mut adhoc);
+        let mut pre = vec![0.0f32; m * n];
+        matmul_packed(&a, &packed, m, &mut pre);
+        assert_eq!(adhoc, pre, "shape ({m},{k},{n})");
+    }
+}
+
+#[test]
+fn pack_round_trips_including_panel_tails() {
+    for &(k, n) in &[(1usize, 1usize), (3, 16), (7, 17), (64, 768), (48, 31)] {
+        let mut rng = Rng::new(k as u64 * 31 + n as u64);
+        let b = rng.normal_vec(k * n, 1.0);
+        let packed = PackedB::pack(&b, k, n);
+        assert_eq!(packed.k(), k);
+        assert_eq!(packed.n(), n);
+        assert_eq!(packed.unpack(), b, "({k},{n}) did not round-trip");
+    }
+}
+
+#[test]
+fn matches_naive_reference() {
+    let (m, k, n) = (9, 37, 50);
+    let (a, b) = inputs(m, k, n);
+    let mut naive = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            naive[i * n + j] = acc;
+        }
+    }
+    let packed = PackedB::pack(&b, k, n);
+    let mut got = vec![0.0f32; m * n];
+    matmul_packed_with(&a, &packed, m, &mut got, 4);
+    for (x, y) in got.iter().zip(&naive) {
+        assert!((x - y).abs() <= 1e-4 * y.abs().max(1.0), "{x} vs {y}");
+    }
+}

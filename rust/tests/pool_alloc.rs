@@ -1,0 +1,110 @@
+//! Steady-state allocation invariant of the persistent fan-out pool
+//! (PR 8): once the pool is warm, `parallel_for` publishes jobs by raw
+//! pointer — no boxed closures, no per-call `thread::scope`, no channel
+//! sends — so the *calling thread* must not allocate at all. Measured
+//! with a counting global allocator; only this thread's allocations are
+//! counted, so concurrently-running test threads cannot perturb it.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use quoka::tensor::matmul::{matmul_packed_with, PackedB};
+use quoka::util::threadpool::{parallel_for, parallel_for_grain};
+use quoka::util::Rng;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// Counting lives in a const-initialized thread-local `Cell`, which is
+// itself allocation-free to access; realloc/alloc_zeroed count too so a
+// `Vec` growth inside the measured region cannot slip through.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn this_thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+#[test]
+fn warm_parallel_for_does_not_allocate_on_the_calling_thread() {
+    let threads = 4;
+    let out: Vec<AtomicU64> = (0..1024).map(|_| AtomicU64::new(0)).collect();
+    // Warm: first call spawns the pool and caches the core-count lookups.
+    for _ in 0..4 {
+        parallel_for(out.len(), threads, |i| {
+            out[i].fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    let rounds = 100u64;
+    let before = this_thread_allocs();
+    for _ in 0..rounds {
+        parallel_for(out.len(), threads, |i| {
+            out[i].fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    let grew = this_thread_allocs() - before;
+    assert_eq!(grew, 0, "warm parallel_for allocated {grew} times on the calling thread");
+    for (i, v) in out.iter().enumerate() {
+        assert_eq!(v.load(Ordering::Relaxed), 4 + rounds, "index {i} missed iterations");
+    }
+}
+
+#[test]
+fn warm_parallel_for_grain_does_not_allocate_on_the_calling_thread() {
+    let out: Vec<AtomicU64> = (0..513).map(|_| AtomicU64::new(0)).collect();
+    for _ in 0..2 {
+        parallel_for_grain(out.len(), 3, 7, |i| {
+            out[i].fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    let before = this_thread_allocs();
+    for _ in 0..50 {
+        parallel_for_grain(out.len(), 3, 7, |i| {
+            out[i].fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    assert_eq!(this_thread_allocs() - before, 0);
+    assert_eq!(out[0].load(Ordering::Relaxed), 52);
+}
+
+#[test]
+fn warm_prepacked_gemm_does_not_allocate_on_the_calling_thread() {
+    // The forward-pass configuration: weights packed once at load, output
+    // buffers reused — the per-chunk GEMM itself must be allocation-free.
+    let (m, k, n) = (128usize, 256usize, 768usize);
+    let mut rng = Rng::new(11);
+    let a = rng.normal_vec(m * k, 1.0);
+    let b = rng.normal_vec(k * n, 1.0);
+    let packed = PackedB::pack(&b, k, n);
+    let mut c = vec![0.0f32; m * n];
+    for _ in 0..2 {
+        matmul_packed_with(&a, &packed, m, &mut c, 4);
+    }
+    let before = this_thread_allocs();
+    for _ in 0..20 {
+        matmul_packed_with(&a, &packed, m, &mut c, 4);
+    }
+    assert_eq!(this_thread_allocs() - before, 0, "warm pre-packed GEMM allocated");
+}

@@ -22,14 +22,21 @@
 #    fused decode steps with fp32 vs int8 private KV, plus the QUOKA
 #    paged key scan at pool geometry → BENCH_quant.json (decode tokens/sec
 #    each + speedup, scan seconds each + speedup).
+# 6. Dense GEMM: `cargo bench --bench gemm_serving` — the pool-backed
+#    packed projection/FFN kernel vs the seed serial loop on prefill- and
+#    decode-shaped operands, plus the gemm phase share of a real chunked
+#    prefill at workers=1 vs the full pool → BENCH_gemm.json (serial and
+#    parallel GFLOP/s, speedups, TTFT + phase shares; packed serial ==
+#    packed parallel asserted bitwise).
 #
 # CI bench gate: the `bench` job in .github/workflows/ci.yml runs this
-# script on a CI-sized config, uploads the five JSONs as the
+# script on a CI-sized config, uploads the six JSONs as the
 # `bench-results` artifact, and then runs `scripts/check_bench.py`, which
 # FAILS the job when tiled-vs-seed speedup, warm-vs-cold or
 # in-flight-vs-cold prefix TTFT ratio, batched-vs-serial decode
-# throughput, speculative-vs-plain decode throughput, or int8-vs-fp32
-# decode throughput fall below absolute floors or regress beyond tolerance
+# throughput, speculative-vs-plain decode throughput, int8-vs-fp32
+# decode throughput, or parallel-vs-serial GEMM speedup (waived on
+# runners with fewer than 4 cores) fall below absolute floors or regress beyond tolerance
 # against the committed baselines in bench/baselines/ (bootstrap stubs
 # until the first CI artifacts are committed — see bench/baselines/README.md).
 #
@@ -39,6 +46,7 @@
 #   DECODE_OUT=/path/to.json  override the decode-serving output location
 #   SPEC_OUT=/path/to.json    override the speculative-decode output location
 #   QUANT_OUT=/path/to.json   override the quantized-KV output location
+#   GEMM_OUT=/path/to.json    override the dense-GEMM output location
 #   BENCH_CHECK=1             run the regression gate after the benches
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -49,14 +57,16 @@ export PREFIX_OUT="${PREFIX_OUT:-$PWD/BENCH_prefix.json}"
 export DECODE_OUT="${DECODE_OUT:-$PWD/BENCH_decode.json}"
 export SPEC_OUT="${SPEC_OUT:-$PWD/BENCH_spec.json}"
 export QUANT_OUT="${QUANT_OUT:-$PWD/BENCH_quant.json}"
+export GEMM_OUT="${GEMM_OUT:-$PWD/BENCH_gemm.json}"
 
 cargo bench --manifest-path rust/Cargo.toml --bench micro_hotpath
 cargo bench --manifest-path rust/Cargo.toml --bench prefix_serving
 cargo bench --manifest-path rust/Cargo.toml --bench decode_serving
 cargo bench --manifest-path rust/Cargo.toml --bench spec_serving
 cargo bench --manifest-path rust/Cargo.toml --bench quant_serving
+cargo bench --manifest-path rust/Cargo.toml --bench gemm_serving
 
-echo "bench_smoke: wrote $BENCH_OUT, $PREFIX_OUT, $DECODE_OUT, $SPEC_OUT and $QUANT_OUT"
+echo "bench_smoke: wrote $BENCH_OUT, $PREFIX_OUT, $DECODE_OUT, $SPEC_OUT, $QUANT_OUT and $GEMM_OUT"
 
 if [[ "${BENCH_CHECK:-0}" == "1" ]]; then
   python3 scripts/check_bench.py

@@ -1,13 +1,17 @@
 #!/usr/bin/env python3
 """Bench regression gate for CI.
 
-Reads the five bench artifacts written by scripts/bench_smoke.sh
+Reads the six bench artifacts written by scripts/bench_smoke.sh
 
   BENCH_hotpath.json  — tiled-vs-seed chunk-attention kernel speedup
   BENCH_prefix.json   — warm-vs-cold and in-flight-vs-cold prefix TTFT
   BENCH_decode.json   — batched-vs-serial decode throughput
   BENCH_spec.json     — speculative-vs-plain decode throughput
   BENCH_quant.json    — int8-vs-fp32 KV decode throughput
+  BENCH_gemm.json     — parallel-vs-serial packed GEMM speedup (prefill
+                        shape; the floor is waived when the artifact
+                        reports fewer than 4 cores — a 2x parallel
+                        speedup is not achievable there)
 
 and fails (exit 1) when a headline metric
 
@@ -23,7 +27,8 @@ committed to bench/baselines/ to arm the relative gate.
 
 Environment overrides (floors): CHECK_BENCH_MIN_HOTPATH,
 CHECK_BENCH_MIN_PREFIX_WARM, CHECK_BENCH_MIN_PREFIX_INFLIGHT,
-CHECK_BENCH_MIN_DECODE, CHECK_BENCH_MIN_SPEC, CHECK_BENCH_MIN_QUANT;
+CHECK_BENCH_MIN_DECODE, CHECK_BENCH_MIN_SPEC, CHECK_BENCH_MIN_QUANT,
+CHECK_BENCH_MIN_GEMM;
 relative tolerance: CHECK_BENCH_TOL (fraction, default 0.35 — CI runners
 are noisy).
 
@@ -50,7 +55,12 @@ FLOORS = {
     "decode-batched-speedup": env_float("CHECK_BENCH_MIN_DECODE", 1.2),
     "spec-decode-speedup": env_float("CHECK_BENCH_MIN_SPEC", 1.5),
     "quant-decode-speedup": env_float("CHECK_BENCH_MIN_QUANT", 1.5),
+    "gemm-parallel-speedup": env_float("CHECK_BENCH_MIN_GEMM", 2.0),
 }
+
+# The parallel-GEMM floor assumes enough cores to scale; below this the
+# absolute floor is waived (the relative gate still applies).
+GEMM_MIN_CORES = 4
 
 
 def load(path):
@@ -107,6 +117,11 @@ def gather(bench_dir):
     out["spec-decode-speedup"] = (metric(sp, "speedup"), sp.get("config") if sp else None)
     qt = load(os.path.join(bench_dir, "BENCH_quant.json"))
     out["quant-decode-speedup"] = (metric(qt, "speedup"), qt.get("config") if qt else None)
+    gm = load(os.path.join(bench_dir, "BENCH_gemm.json"))
+    out["gemm-parallel-speedup"] = (
+        metric(gm, "parallel-speedup"),
+        gm.get("config") if gm else None,
+    )
     return out
 
 
@@ -126,9 +141,21 @@ def main():
 
     fresh = gather(args.bench_dir)
     base = gather(args.baseline_dir)
+    gemm_doc = load(os.path.join(args.bench_dir, "BENCH_gemm.json"))
+    gemm_cores = metric(gemm_doc, "cores")
     failures, rows = [], []
     for name, (value, cfg) in fresh.items():
         floor = FLOORS[name]
+        if (
+            name == "gemm-parallel-speedup"
+            and gemm_cores is not None
+            and gemm_cores < GEMM_MIN_CORES
+        ):
+            print(
+                f"note: {name} floor waived — runner has {gemm_cores:.0f} cores "
+                f"(< {GEMM_MIN_CORES})"
+            )
+            floor = 0.0
         bvalue, bcfg = base.get(name, (None, None))
         if value is None:
             failures.append(f"{name}: missing from fresh bench output")
