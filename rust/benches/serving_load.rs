@@ -1,0 +1,5 @@
+//! `cargo bench --bench serving_load` — open-loop Poisson load over the
+//! real TCP server with streaming + cancellation (writes BENCH_serving.json).
+fn main() {
+    quoka::bench::serving::serving_load();
+}

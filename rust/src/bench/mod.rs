@@ -11,6 +11,7 @@ pub mod decode;
 pub mod spec;
 pub mod quant;
 pub mod gemm;
+pub mod serving;
 
 pub use crate::util::timing::{bench, heatmap, BenchCfg, Stats, Table};
 

@@ -1,0 +1,352 @@
+//! Open-loop serving benchmark: Poisson arrivals over the real TCP
+//! server, with streaming, cancellation, tenants, and a shared-prefix
+//! request mixture — the closest thing in-tree to production traffic.
+//!
+//! Unlike the closed-loop benches (submit a batch, run to completion),
+//! this harness spawns one client thread per request and releases each at
+//! its exponentially-distributed arrival time, so load does not adapt to
+//! server slowness — queueing delay shows up in the tail instead of
+//! hiding in the offered rate. Every request streams (`"stream": true`);
+//! half share a common preamble (exercising the radix prefix cache),
+//! half of those opt into speculative decode with a repetition-friendly
+//! suffix (PLD accepts) while the rest carry corpus babble (PLD starves),
+//! requests rotate across three tenants (one weighted), and every eighth
+//! request cancels itself after its first delta frame.
+//!
+//! Reports client-observed TTFT plus the server's own PR-7 latency
+//! histograms (TTFT / ITL / queue wait, p50/p99), goodput, and cancel
+//! latency, and writes `BENCH_serving.json` (override with `SERVING_OUT`)
+//! for the CI gate in `scripts/check_bench.py`: the `ttft-p50-over-p99`
+//! ratio is floored so the tail cannot silently detach from the median.
+//!
+//! `SERVING_REQS` / `SERVING_RPS` override the request count and offered
+//! rate; `QUOKA_BENCH_FULL=1` selects the larger grid.
+
+use super::{banner, full_mode};
+use crate::coordinator::{Engine, EngineCfg, KvLayout, SchedCfg};
+use crate::server::{serve_with_opts, Client, ServeOpts, WireFrame, WireRequest, WireSpec};
+use crate::util::timing::Table;
+use crate::util::{Json, Rng};
+use crate::workload::corpus::Corpus;
+use std::time::{Duration, Instant};
+
+/// Admission backpressure threshold for the benched server. Far above the
+/// smoke-grid queue depth — the path is configured and exercised by tests;
+/// the bench measures queueing, not rejection.
+const MAX_QUEUE: usize = 512;
+/// Every N-th request cancels itself after its first delta frame.
+const CANCEL_EVERY: usize = 8;
+/// Tenants requests rotate through ("" is the default pool).
+const TENANTS: [&str; 3] = ["", "acme", "bravo"];
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// One exponential inter-arrival sample (Poisson process at `rps`).
+fn exp_interval_s(rng: &mut Rng, rps: f64) -> f64 {
+    let u = (1.0 - rng.f32() as f64).max(1e-9);
+    -u.ln() / rps
+}
+
+/// Everything decided about a request before the clock starts.
+struct ReqPlan {
+    arrival_s: f64,
+    wire: WireRequest,
+    cancel: bool,
+}
+
+/// What one client thread observed.
+struct Outcome {
+    /// Final response frame; `None` for backpressured / errored requests.
+    done: Option<crate::server::WireResponse>,
+    /// Client-side delta concatenation (must equal `done.text`).
+    assembled: String,
+    ttft_ms: f64,
+    /// Gaps between successive delta frames.
+    itl_ms: Vec<f64>,
+    /// Cancel-send → final-frame latency (designated cancels only).
+    cancel_ms: Option<f64>,
+    designated_cancel: bool,
+    backpressured: bool,
+    error: Option<String>,
+}
+
+fn build_plans(n_reqs: usize, rps: f64) -> Vec<ReqPlan> {
+    let mut rng = Rng::new(0x5E21);
+    let mut corpus = Corpus::new(0xBEEF);
+    let preamble = corpus.text(480);
+    let mut t = 0.0f64;
+    (0..n_reqs)
+        .map(|i| {
+            t += exp_interval_s(&mut rng, rps);
+            let cancel = i % CANCEL_EVERY == CANCEL_EVERY - 1;
+            let shared = i % 2 == 0;
+            let spec_friendly = i % 4 < 2;
+            let body = if spec_friendly {
+                "the quick brown fox jumps over the lazy dog. ".repeat(5)
+            } else {
+                corpus.text(160 + rng.below(160))
+            };
+            let prompt = if shared {
+                format!("{preamble}{body} [req {i}]")
+            } else {
+                format!("{body} [req {i}]")
+            };
+            let tenant = TENANTS[i % TENANTS.len()];
+            let wire = WireRequest {
+                prompt,
+                // Cancelled requests get slack so the cancel lands while
+                // they are still decoding.
+                max_new: if cancel { 48 } else { 8 },
+                policy: "quoka".into(),
+                budget: 256,
+                spec: if spec_friendly {
+                    Some(WireSpec { policy: "pld".into(), gamma: Some(4) })
+                } else {
+                    None
+                },
+                tenant: tenant.into(),
+                tenant_weight: if tenant == "acme" { 2 } else { 1 },
+                stream: true,
+            };
+            ReqPlan { arrival_s: t, wire, cancel }
+        })
+        .collect()
+}
+
+/// Drive one request through the server, open-loop: sleep to the arrival
+/// time, stream, optionally cancel after the first delta frame.
+fn run_one(addr: std::net::SocketAddr, plan: ReqPlan, t0: Instant) -> Outcome {
+    let mut out = Outcome {
+        done: None,
+        assembled: String::new(),
+        ttft_ms: 0.0,
+        itl_ms: Vec::new(),
+        cancel_ms: None,
+        designated_cancel: plan.cancel,
+        backpressured: false,
+        error: None,
+    };
+    let target = Duration::from_secs_f64(plan.arrival_s);
+    let elapsed = t0.elapsed();
+    if target > elapsed {
+        std::thread::sleep(target - elapsed);
+    }
+    let mut c = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            out.error = Some(format!("connect: {e}"));
+            return out;
+        }
+    };
+    let sent_at = Instant::now();
+    if let Err(e) = c.send(&plan.wire) {
+        out.error = Some(format!("send: {e}"));
+        return out;
+    }
+    let mut last_frame: Option<Instant> = None;
+    let mut cancel_sent: Option<Instant> = None;
+    loop {
+        match c.read_frame() {
+            Ok(WireFrame::Token { id, delta, .. }) => {
+                let now = Instant::now();
+                match last_frame {
+                    Some(prev) => out.itl_ms.push((now - prev).as_secs_f64() * 1e3),
+                    None => out.ttft_ms = (now - sent_at).as_secs_f64() * 1e3,
+                }
+                last_frame = Some(now);
+                out.assembled.push_str(&delta);
+                if plan.cancel && cancel_sent.is_none() {
+                    let _ = c.cancel(id);
+                    cancel_sent = Some(Instant::now());
+                }
+            }
+            Ok(WireFrame::Done(resp)) => {
+                let now = Instant::now();
+                if last_frame.is_none() {
+                    out.ttft_ms = (now - sent_at).as_secs_f64() * 1e3;
+                }
+                out.cancel_ms = cancel_sent.map(|cs| (now - cs).as_secs_f64() * 1e3);
+                out.done = Some(resp);
+                return out;
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                out.backpressured = msg.contains("server saturated");
+                out.error = Some(msg);
+                return out;
+            }
+        }
+    }
+}
+
+fn pctl(xs: &mut [f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((xs.len() as f64 - 1.0) * q).round() as usize;
+    xs[idx]
+}
+
+/// The open-loop serving benchmark (see module docs).
+pub fn serving_load() -> Table {
+    banner(
+        "serving_load",
+        "serving §open-loop load",
+        "Poisson arrivals over the real TCP server: streaming, cancels, tenants, shared prefixes.",
+    );
+    let (def_reqs, def_rps) = if full_mode() { (256, 60.0) } else { (96, 40.0) };
+    let n_reqs = env_usize("SERVING_REQS", def_reqs);
+    let rps = env_f64("SERVING_RPS", def_rps);
+
+    let handle = serve_with_opts(
+        || {
+            Engine::new_host(
+                "tiny",
+                EngineCfg {
+                    sched: SchedCfg {
+                        b_cp: 64,
+                        step_tokens: 256,
+                        max_running: 8,
+                        ..SchedCfg::default()
+                    },
+                    pool_blocks: 1024,
+                    block_tokens: 32,
+                    seed: 7,
+                    kv: KvLayout::Paged { prefix_cache: true },
+                    ..EngineCfg::default()
+                },
+            )
+        },
+        "127.0.0.1:0",
+        ServeOpts { max_queue: MAX_QUEUE, ..ServeOpts::default() },
+    )
+    .expect("serving_load server");
+    let addr = handle.addr;
+
+    let plans = build_plans(n_reqs, rps);
+    let t0 = Instant::now();
+    let threads: Vec<_> = plans
+        .into_iter()
+        .map(|p| std::thread::spawn(move || run_one(addr, p, t0)))
+        .collect();
+    let outcomes: Vec<Outcome> = threads.into_iter().map(|h| h.join().unwrap()).collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // Every request must end in a terminal state the harness understands.
+    for o in &outcomes {
+        if o.done.is_none() && !o.backpressured {
+            panic!("request died without a terminal frame: {:?}", o.error);
+        }
+        if let Some(d) = &o.done {
+            assert_eq!(
+                o.assembled, d.text,
+                "delta concatenation must equal the done frame's text (id {})",
+                d.id
+            );
+        }
+    }
+    let n_ok = outcomes.iter().filter(|o| o.done.as_ref().is_some_and(|d| !d.cancelled)).count();
+    let n_cancelled =
+        outcomes.iter().filter(|o| o.done.as_ref().is_some_and(|d| d.cancelled)).count();
+    let n_bp = outcomes.iter().filter(|o| o.backpressured).count();
+    let n_designated = outcomes.iter().filter(|o| o.designated_cancel).count();
+    assert!(n_cancelled >= 1, "at least one mid-stream cancel must land");
+    assert!(n_cancelled <= n_designated, "only designated requests may cancel");
+    assert!(
+        n_ok * 3 >= n_reqs * 2,
+        "at least two thirds of the offered load must complete (got {n_ok}/{n_reqs})"
+    );
+
+    // Server-side view: counts must reconcile with the client's, and the
+    // PR-7 histograms supply the latency distribution.
+    let mut sc = Client::connect(addr).expect("stats client");
+    let stats = sc.stats().expect("stats reply");
+    let body = stats.get("stats").expect("stats body").clone();
+    drop(sc);
+    handle.shutdown();
+    let hist = |h: &str, q: &str| {
+        body.get(h).and_then(|o| o.get(q)).and_then(|v| v.as_f64()).unwrap_or(0.0)
+    };
+    let count = |k: &str| body.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+    assert_eq!(count("requests_finished"), n_ok, "server finished-count reconciles");
+    assert_eq!(count("requests_cancelled"), n_cancelled, "server cancel-count reconciles");
+
+    let mut ttft_c: Vec<f64> =
+        outcomes.iter().filter(|o| o.done.is_some()).map(|o| o.ttft_ms).collect();
+    let mut itl_c: Vec<f64> = outcomes.iter().flat_map(|o| o.itl_ms.iter().copied()).collect();
+    let mut cancel_lat: Vec<f64> = outcomes
+        .iter()
+        .filter(|o| o.done.as_ref().is_some_and(|d| d.cancelled))
+        .filter_map(|o| o.cancel_ms)
+        .collect();
+    let (ttft_p50, ttft_p99) = (hist("ttft", "p50_ms"), hist("ttft", "p99_ms"));
+    let (itl_p50, itl_p99) = (hist("itl", "p50_ms"), hist("itl", "p99_ms"));
+    let (qw_p50, qw_p99) = (hist("queue_wait", "p50_ms"), hist("queue_wait", "p99_ms"));
+    let goodput = n_ok as f64 / wall_s;
+    // CI gate: median-to-tail ratio (1.0 = perfectly flat distribution;
+    // the floor in check_bench.py keeps p99 within a bounded multiple of
+    // p50). Degenerate empty histograms read as perfectly flat.
+    let tail_ratio = if ttft_p99 > 0.0 { ttft_p50 / ttft_p99 } else { 1.0 };
+
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(vec!["requests (ok/cancel/bp)".into(), format!("{n_ok}/{n_cancelled}/{n_bp}")]);
+    table.row(vec!["offered rps".into(), format!("{rps:.0}")]);
+    table.row(vec!["goodput rps".into(), format!("{goodput:.1}")]);
+    table.row(vec![
+        "client ttft p50/p99 ms".into(),
+        format!("{:.1}/{:.1}", pctl(&mut ttft_c, 0.50), pctl(&mut ttft_c, 0.99)),
+    ]);
+    table.row(vec!["server ttft p50/p99 ms".into(), format!("{ttft_p50:.1}/{ttft_p99:.1}")]);
+    table.row(vec!["server itl p50/p99 ms".into(), format!("{itl_p50:.2}/{itl_p99:.2}")]);
+    table.row(vec!["queue wait p50/p99 ms".into(), format!("{qw_p50:.1}/{qw_p99:.1}")]);
+    table.row(vec![
+        "cancel latency p50 ms".into(),
+        format!("{:.1}", pctl(&mut cancel_lat, 0.50)),
+    ]);
+    table.print();
+    println!(
+        "expected shape: goodput tracks the offered rate until max_running saturates; \
+         queue wait absorbs the excess; cancels land within one engine step\n"
+    );
+
+    let out_path =
+        std::env::var("SERVING_OUT").unwrap_or_else(|_| "BENCH_serving.json".to_string());
+    let config = format!(
+        "reqs={n_reqs} rps={rps} max_running=8 b_cp=64 step_tokens=256 block_tokens=32 \
+         prefix_cache=true max_queue={MAX_QUEUE} cancel_every={CANCEL_EVERY} preset=tiny"
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serving_load")),
+        ("config", Json::str(config)),
+        ("requests", Json::num(n_reqs as f64)),
+        ("completed", Json::num(n_ok as f64)),
+        ("cancelled", Json::num(n_cancelled as f64)),
+        ("backpressured", Json::num(n_bp as f64)),
+        ("rps-offered", Json::num(rps)),
+        ("goodput-rps", Json::num(goodput)),
+        ("ttft-client-p50-ms", Json::num(pctl(&mut ttft_c, 0.50))),
+        ("ttft-client-p99-ms", Json::num(pctl(&mut ttft_c, 0.99))),
+        ("ttft-p50-ms", Json::num(ttft_p50)),
+        ("ttft-p99-ms", Json::num(ttft_p99)),
+        ("itl-p50-ms", Json::num(itl_p50)),
+        ("itl-p99-ms", Json::num(itl_p99)),
+        ("itl-client-p50-ms", Json::num(pctl(&mut itl_c, 0.50))),
+        ("itl-client-p99-ms", Json::num(pctl(&mut itl_c, 0.99))),
+        ("queue-wait-p50-ms", Json::num(qw_p50)),
+        ("queue-wait-p99-ms", Json::num(qw_p99)),
+        ("cancel-latency-p50-ms", Json::num(pctl(&mut cancel_lat, 0.50))),
+        ("ttft-p50-over-p99", Json::num(tail_ratio)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+    table
+}

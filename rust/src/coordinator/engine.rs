@@ -325,6 +325,22 @@ impl Engine {
         policy: PolicySpec,
         spec: SpecCfg,
     ) -> Result<u64> {
+        self.submit_tagged(tokens, max_new, policy, spec, "", 1)
+    }
+
+    /// [`Engine::submit_spec`] with a fair-share tag: `tenant` names the
+    /// scheduler's weighted round-robin admission group (empty = the
+    /// shared default tenant — what every untagged submit uses) and
+    /// `weight` its admissions per turn. See `Scheduler::enqueue_as`.
+    pub fn submit_tagged(
+        &mut self,
+        tokens: Vec<u32>,
+        max_new: usize,
+        policy: PolicySpec,
+        spec: SpecCfg,
+        tenant: &str,
+        tenant_weight: usize,
+    ) -> Result<u64> {
         anyhow::ensure!(!tokens.is_empty(), "empty prompt");
         if spec.enabled() {
             anyhow::ensure!(
@@ -453,13 +469,26 @@ impl Engine {
             }
         }
         self.seqs.insert(id, entry);
-        self.sched.enqueue(id);
+        self.sched.enqueue_as(id, tenant, tenant_weight);
         Ok(id)
     }
 
     /// Number of unfinished requests.
     pub fn pending(&self) -> usize {
         self.seqs.len()
+    }
+
+    /// Number of requests still waiting for admission — the quantity the
+    /// serving front-end's backpressure limit is measured against.
+    pub fn queue_depth(&self) -> usize {
+        self.sched.waiting.len()
+    }
+
+    /// The tokens request `id` has generated so far (`None` once it
+    /// finished or was never submitted). The streaming front-end polls
+    /// this between steps to emit `delta` frames.
+    pub fn generated_so_far(&self, id: u64) -> Option<&[u32]> {
+        self.seqs.get(&id).map(|e| e.generated.as_slice())
     }
 
     /// Cancel a queued or running request (client abort). Its pages are
@@ -477,6 +506,7 @@ impl Engine {
         self.sched.waiting.retain(|&w| w != id);
         self.sched.retire(id);
         self.backs.remove(&id);
+        self.metrics.requests_cancelled += 1;
         self.tracer.record(id, TraceEventKind::Cancel);
         self.discard(entry);
         true
@@ -507,6 +537,12 @@ impl Engine {
             }
         } else {
             self.blocks.release(&mut entry.blocks);
+        }
+        // Residency moves at teardown too: an out-of-step cancel that
+        // frees the last leased pages must be visible in the stats gauge
+        // without waiting for another step to sample it.
+        if let Some(pool) = &self.pool {
+            self.metrics.note_kv_resident(pool.resident_bytes(self.blocks.leased_blocks()));
         }
         // The empty generation IS the unserved sentinel (the only signal
         // `RequestResult` carries): a decode-phase cancel must not hand
@@ -619,26 +655,30 @@ impl Engine {
 
     /// Execute one engine step. Returns false when fully idle.
     pub fn step(&mut self) -> Result<bool> {
-        // Reject requests that can never fit the pool (otherwise FCFS
-        // head-of-line would wedge the queue forever). The bound is the
-        // blocks the request could ever obtain: total MINUS the pages it
-        // already holds — those stay leased (and un-evictable, refcount
-        // >= 2) for as long as the entry references them, so comparing
-        // against the raw total would let an unfittable prefix-hit
-        // request spin the engine forever.
-        while let Some(&head) = self.sched.waiting.front() {
-            let entry = &self.seqs[&head];
+        // Reject requests that can never fit the pool (otherwise an
+        // unfittable admission candidate would wedge the queue forever).
+        // The whole queue is swept, not just the front: fair-share
+        // admission can make ANY tenant's oldest request the candidate,
+        // so an unfittable request parked mid-queue would still jam its
+        // tenant's turn. The bound is the blocks the request could ever
+        // obtain: total MINUS the pages it already holds — those stay
+        // leased (and un-evictable, refcount >= 2) for as long as the
+        // entry references them, so comparing against the raw total would
+        // let an unfittable prefix-hit request spin the engine forever.
+        let queued: Vec<u64> = self.sched.waiting.iter().copied().collect();
+        for id in queued {
+            let entry = &self.seqs[&id];
             let held = entry.blocks.len();
             let need = entry.residual_blocks(&self.blocks);
             if need > self.blocks.total_blocks().saturating_sub(held) {
-                self.sched.waiting.pop_front();
-                let entry = self.seqs.remove(&head).unwrap();
+                self.sched.waiting.retain(|&w| w != id);
+                self.sched.retire(id);
+                let entry = self.seqs.remove(&id).unwrap();
                 // Pages (and the empty-generation rejection result) go
                 // through the shared unserved-teardown path.
-                self.tracer.record(head, TraceEventKind::Reject);
+                self.metrics.requests_rejected += 1;
+                self.tracer.record(id, TraceEventKind::Reject);
                 self.discard(entry);
-            } else {
-                break;
             }
         }
         // Extend and wake parked followers BEFORE planning: a producer
@@ -646,13 +686,14 @@ impl Engine {
         // not leave its followers parked, and pages adopted here shrink
         // the pool pressure the admission/evict checks below see.
         self.advance_followers();
-        // Paged mode: when the head-of-line can't be admitted from the free
+        // Paged mode: when the admission candidate (the fair-share pick,
+        // not necessarily the queue front) can't be admitted from the free
         // list alone, evict cold prefix-cache pages (LRU leaves with no
         // live owner) to make room before planning.
         if let (Some(pool), Some(radix)) = (self.pool.as_mut(), self.radix.as_mut()) {
             if self.sched.running.len() < self.sched.cfg.max_running {
-                if let Some(&head) = self.sched.waiting.front() {
-                    let need = self.seqs[&head].residual_blocks(&self.blocks);
+                if let Some(cand) = self.sched.admission_candidate() {
+                    let need = self.seqs[&cand].residual_blocks(&self.blocks);
                     if need > self.blocks.free_blocks() {
                         radix.evict_until_traced(need, pool, &mut self.blocks, &mut self.tracer);
                     }

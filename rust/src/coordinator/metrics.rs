@@ -13,6 +13,12 @@ pub struct Metrics {
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
     pub requests_finished: u64,
+    /// Requests ended unserved by [`Engine::cancel`] (client abort,
+    /// disconnect) — they report an empty generation, never a finish.
+    pub requests_cancelled: u64,
+    /// Requests rejected at admission because they could never fit the
+    /// KV pool (the engine's unfittable-queue sweep).
+    pub requests_rejected: u64,
     /// Wall time inside attention+selection (the paper's "attention
     /// module" latency), seconds.
     pub attention_s: f64,
@@ -281,6 +287,12 @@ impl Metrics {
             // the GEMM and attention pools both ride it.
             crate::util::threadpool::default_workers(),
         );
+        if self.requests_cancelled > 0 || self.requests_rejected > 0 {
+            s.push_str(&format!(
+                " cancelled={} rejected={}",
+                self.requests_cancelled, self.requests_rejected
+            ));
+        }
         if self.decode_tokens > 0 {
             match self.decode_tokens_per_s() {
                 Some(v) => s.push_str(&format!(" decode_tok/s={v:.0}")),
@@ -395,6 +407,8 @@ impl Metrics {
             ("prefill_tokens", Json::num(self.prefill_tokens as f64)),
             ("decode_tokens", Json::num(self.decode_tokens as f64)),
             ("requests_finished", Json::num(self.requests_finished as f64)),
+            ("requests_cancelled", Json::num(self.requests_cancelled as f64)),
+            ("requests_rejected", Json::num(self.requests_rejected as f64)),
             ("step_s", Json::num(self.step_s)),
             ("attention_s", Json::num(self.attention_s)),
             ("decode_s", Json::num(self.decode_s)),
@@ -472,6 +486,16 @@ impl Metrics {
             "requests_finished_total",
             "Requests finished.",
             self.requests_finished as f64,
+        );
+        counter(
+            "requests_cancelled_total",
+            "Requests cancelled by the client.",
+            self.requests_cancelled as f64,
+        );
+        counter(
+            "requests_rejected_total",
+            "Requests rejected at admission.",
+            self.requests_rejected as f64,
         );
         counter(
             "prefix_hit_tokens_total",

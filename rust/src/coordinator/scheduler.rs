@@ -7,11 +7,16 @@
 //! pool and the running-set cap allow. This is the interleaving that makes
 //! chunked prefill (and thus QUOKA) matter: prefill work is sliced so
 //! decode latency stays bounded (Agrawal et al., 2023/2024).
+//!
+//! Admission is fair-share across *tenants* (the wire `tenant` field):
+//! tenants take weighted round-robin turns at the admission slot, FIFO
+//! within each tenant. Untagged requests all share the default tenant, so
+//! a single-tenant workload reduces exactly to the original FCFS order.
 
 use super::kv_blocks::BlockAllocator;
 use super::request::{Phase, SeqEntry};
 use crate::obs::{TraceEventKind, Tracer};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 /// Scheduler configuration.
 #[derive(Clone, Copy, Debug)]
@@ -78,27 +83,108 @@ pub struct StepPlan {
     pub parked: usize,
 }
 
-/// FCFS scheduler state.
+/// A waiting request's fair-share tag. Only non-default tags are stored;
+/// absent ⇒ the default tenant (`""`) at weight 1.
+struct TenantTag {
+    name: String,
+    weight: usize,
+}
+
+/// Scheduler state: FIFO per tenant, weighted round-robin across tenants.
 pub struct Scheduler {
     pub cfg: SchedCfg,
-    /// Request ids waiting for admission, FCFS.
+    /// Request ids waiting for admission, in arrival order.
     pub waiting: VecDeque<u64>,
     /// Running ids in admission order.
     pub running: Vec<u64>,
+    /// Fair-share tags of waiting requests (non-default only).
+    tenants: HashMap<u64, TenantTag>,
+    /// The tenant the last admission went to, and how many more
+    /// back-to-back admissions its weight still entitles it to.
+    rr_last: Option<String>,
+    rr_credit: usize,
 }
 
 impl Scheduler {
     pub fn new(cfg: SchedCfg) -> Scheduler {
-        Scheduler { cfg, waiting: VecDeque::new(), running: Vec::new() }
+        Scheduler {
+            cfg,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            tenants: HashMap::new(),
+            rr_last: None,
+            rr_credit: 0,
+        }
     }
 
     pub fn enqueue(&mut self, id: u64) {
+        self.enqueue_as(id, "", 1);
+    }
+
+    /// [`Scheduler::enqueue`] with a fair-share tag: `tenant` names the
+    /// round-robin group (empty = the shared default tenant), `weight` how
+    /// many back-to-back admissions a turn is worth (clamped to ≥ 1).
+    pub fn enqueue_as(&mut self, id: u64, tenant: &str, weight: usize) {
+        if !tenant.is_empty() || weight > 1 {
+            self.tenants.insert(id, TenantTag { name: tenant.to_string(), weight: weight.max(1) });
+        }
         self.waiting.push_back(id);
     }
 
-    /// Remove a finished/cancelled id from the running set.
+    /// Remove a finished/cancelled/rejected id from the scheduler.
     pub fn retire(&mut self, id: u64) {
         self.running.retain(|&r| r != id);
+        self.tenants.remove(&id);
+    }
+
+    fn tenant_of(&self, id: u64) -> &str {
+        self.tenants.get(&id).map(|t| t.name.as_str()).unwrap_or("")
+    }
+
+    /// The id the next admission attempt will consider: the FIFO head of
+    /// the tenant whose round-robin turn it is. Tenant order is the
+    /// arrival order of each tenant's oldest waiting request; the last
+    /// admitted tenant keeps the slot while its weight credit lasts (and
+    /// it still has waiting work), then the turn passes to its cyclic
+    /// successor. With a single tenant this is exactly `waiting.front()`.
+    ///
+    /// Pure query — admission itself calls [`Scheduler::plan`], which
+    /// advances the round-robin state only when the candidate is actually
+    /// admitted, so a failed block reservation retries the same candidate
+    /// (no head-of-line bypass within or across tenants).
+    pub fn admission_candidate(&self) -> Option<u64> {
+        let mut order: Vec<&str> = Vec::new();
+        for &id in &self.waiting {
+            let t = self.tenant_of(id);
+            if !order.contains(&t) {
+                order.push(t);
+            }
+        }
+        let pick: &str = match &self.rr_last {
+            _ if order.is_empty() => return None,
+            Some(last) if self.rr_credit > 0 && order.contains(&last.as_str()) => last.as_str(),
+            Some(last) => match order.iter().position(|t| *t == last.as_str()) {
+                Some(i) => order[(i + 1) % order.len()],
+                None => order[0], // the last tenant has nothing waiting
+            },
+            None => order[0],
+        };
+        self.waiting.iter().copied().find(|&id| self.tenant_of(id) == pick)
+    }
+
+    /// Advance the round-robin state after `id` was admitted.
+    fn note_admitted(&mut self, id: u64) {
+        let (name, weight) = match self.tenants.get(&id) {
+            Some(t) => (t.name.clone(), t.weight.max(1)),
+            None => (String::new(), 1),
+        };
+        match &self.rr_last {
+            Some(last) if *last == name => self.rr_credit = self.rr_credit.saturating_sub(1),
+            _ => {
+                self.rr_last = Some(name);
+                self.rr_credit = weight - 1;
+            }
+        }
     }
 
     /// Build the next step plan.
@@ -129,20 +215,23 @@ impl Scheduler {
         // A sequence is charged the blocks for its whole prompt + decode
         // budget MINUS whatever it already holds — prefix-cache hits arrive
         // with shared pages at the head of their block table, so a mostly
-        // cached request admits almost for free.
+        // cached request admits almost for free. The candidate each slot
+        // considers is the fair-share pick ([`admission_candidate`]):
+        // weighted round-robin across tenants, FIFO within one.
         while self.running.len() < self.cfg.max_running {
-            let Some(&cand) = self.waiting.front() else { break };
+            let Some(cand) = self.admission_candidate() else { break };
             let entry = seqs.get_mut(&cand).expect("waiting id unknown");
             let need = entry.residual_blocks(blocks);
             match blocks.alloc(need) {
                 Some(mut lease) => {
                     entry.blocks.append(&mut lease);
-                    self.waiting.pop_front();
+                    self.waiting.retain(|&w| w != cand);
                     self.running.push(cand);
+                    self.note_admitted(cand);
                     plan.admitted.push(cand);
                     tracer.record(cand, TraceEventKind::Admit);
                 }
-                None => break, // FCFS: don't skip ahead of the head-of-line
+                None => break, // don't skip ahead of the fair-share pick
             }
         }
 
@@ -714,6 +803,96 @@ mod tests {
         s.enqueue(7);
         let plan = s.plan(&mut seqs, &mut blocks);
         assert_eq!(plan.items, vec![WorkItem::PrefillChunk { id: 7, start: 0, len: 16 }]);
+    }
+
+    fn mk_tenant(
+        seqs: &mut HashMap<u64, SeqEntry>,
+        s: &mut Scheduler,
+        id: u64,
+        tenant: &str,
+        weight: usize,
+    ) {
+        mk(seqs, id, 100, 2);
+        s.enqueue_as(id, tenant, weight);
+    }
+
+    #[test]
+    fn tenants_round_robin_fifo_within() {
+        // Arrival order: a1 a2 a3 b1 b2 c1. Equal weights ⇒ admission
+        // rotates a b c a b c-style, oldest request first within a tenant.
+        let mut seqs = HashMap::new();
+        let mut blocks = BlockAllocator::new(64, 128);
+        let mut s = Scheduler::new(SchedCfg { max_running: 8, ..SchedCfg::default() });
+        for (id, t) in [(1, "a"), (2, "a"), (3, "a"), (4, "b"), (5, "b"), (6, "c")] {
+            mk_tenant(&mut seqs, &mut s, id, t, 1);
+        }
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(
+            plan.admitted,
+            vec![1, 4, 6, 2, 5, 3],
+            "round-robin across tenants, FIFO within each"
+        );
+    }
+
+    #[test]
+    fn tenant_weights_scale_admission_share() {
+        // Tenant a at weight 2, b at weight 1 ⇒ a a b a a b.
+        let mut seqs = HashMap::new();
+        let mut blocks = BlockAllocator::new(64, 128);
+        let mut s = Scheduler::new(SchedCfg { max_running: 8, ..SchedCfg::default() });
+        for (id, t, w) in [
+            (1, "a", 2),
+            (2, "a", 2),
+            (3, "a", 2),
+            (4, "a", 2),
+            (5, "b", 1),
+            (6, "b", 1),
+        ] {
+            mk_tenant(&mut seqs, &mut s, id, t, w);
+        }
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(plan.admitted, vec![1, 2, 5, 3, 4, 6], "weight 2 takes two slots per turn");
+    }
+
+    #[test]
+    fn single_tenant_reduces_to_fcfs() {
+        // Untagged requests (the old wire shape) must admit in exactly
+        // the order the pre-tenant scheduler used: arrival order.
+        let mut seqs = HashMap::new();
+        let mut blocks = BlockAllocator::new(64, 128);
+        let mut s = Scheduler::new(SchedCfg { max_running: 8, ..SchedCfg::default() });
+        for id in 1..=5 {
+            mk(&mut seqs, id, 100, 2);
+            s.enqueue(id);
+            assert_eq!(s.admission_candidate(), Some(1), "candidate is always the queue head");
+        }
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(plan.admitted, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn tenant_candidate_survives_failed_admission_and_departures() {
+        let mut seqs = HashMap::new();
+        // One 128-token block: fits a single 100-token request, so
+        // admission stalls after the first.
+        let mut blocks = BlockAllocator::new(1, 128);
+        let mut s = Scheduler::new(SchedCfg { max_running: 8, ..SchedCfg::default() });
+        mk_tenant(&mut seqs, &mut s, 1, "a", 1);
+        mk_tenant(&mut seqs, &mut s, 2, "b", 1);
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(plan.admitted, vec![1]);
+        // b's turn now; a failed reservation must not rotate past b.
+        assert_eq!(s.admission_candidate(), Some(2));
+        let plan = s.plan(&mut seqs, &mut blocks);
+        assert_eq!(plan.admitted, Vec::<u64>::new(), "no blocks — nobody admitted");
+        assert_eq!(s.admission_candidate(), Some(2), "candidate unchanged after the failure");
+        // The only waiting tenant departing (cancel path) falls back to
+        // whoever is left — here, a fresh default-tenant request.
+        s.waiting.retain(|&w| w != 2);
+        s.retire(2);
+        mk(&mut seqs, 3, 100, 2);
+        s.enqueue(3);
+        assert_eq!(s.admission_candidate(), Some(3));
     }
 
     #[test]

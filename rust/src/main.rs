@@ -8,7 +8,7 @@
 //! quoka inspect --artifacts artifacts
 //! ```
 
-use quoka::bench::{gemm, latency, prefix, spec, tables};
+use quoka::bench::{gemm, latency, prefix, serving, spec, tables};
 use quoka::coordinator::{Engine, EngineCfg, KvLayout, SchedCfg};
 use quoka::server::{serve_with_opts, Client, ServeOpts, WireRequest};
 use quoka::util::cli::{usage, Args, OptSpec};
@@ -77,6 +77,7 @@ fn serve_specs() -> Vec<OptSpec> {
         OptSpec { name: "kv-dtype", help: "KV cache element type: f32 | int8 (int8 = 4x smaller cache, dequantized in-tile; host backend, dense/quoka* policies)", default: Some("f32"), boolean: false },
         OptSpec { name: "trace-out", help: "write the request-lifecycle trace (JSONL) here at shutdown and on the flush_trace wire command; enables tracing", default: None, boolean: false },
         OptSpec { name: "trace-events", help: "lifecycle-trace ring capacity in events (0 = off unless --trace-out is set)", default: Some("0"), boolean: false },
+        OptSpec { name: "max-queue", help: "admission backpressure: reject new requests while this many wait for admission (0 = unbounded)", default: Some("0"), boolean: false },
         OptSpec { name: "help", help: "show help", default: None, boolean: true },
     ]
 }
@@ -118,6 +119,7 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     let opts = ServeOpts {
         trace_events: a.usize("trace-events")?,
         trace_out: a.get("trace-out").map(std::path::PathBuf::from),
+        max_queue: a.usize("max-queue")?,
     };
     println!("starting quoka-serve backend={backend} addr={addr}");
     let handle = serve_with_opts(
@@ -144,6 +146,9 @@ fn cmd_request(argv: Vec<String>) -> anyhow::Result<()> {
         OptSpec { name: "budget", help: "selection budget B_SA", default: Some("1024"), boolean: false },
         OptSpec { name: "spec-gamma", help: "speculative decode: max draft tokens per step (0 = off)", default: None, boolean: false },
         OptSpec { name: "spec-policy", help: "speculative draft policy (off | pld); server resolves gamma when omitted", default: None, boolean: false },
+        OptSpec { name: "tenant", help: "fair-share scheduling group (empty = default pool)", default: Some(""), boolean: false },
+        OptSpec { name: "tenant-weight", help: "admission weight of the tenant (>= 1)", default: Some("1"), boolean: false },
+        OptSpec { name: "stream", help: "stream per-token delta frames as they are generated", default: None, boolean: true },
         OptSpec { name: "help", help: "show help", default: None, boolean: true },
     ];
     let a = Args::parse(argv, &specs)?;
@@ -166,13 +171,36 @@ fn cmd_request(argv: Vec<String>) -> anyhow::Result<()> {
     } else {
         None
     };
-    let resp = c.request(&WireRequest {
+    let req = WireRequest {
         prompt: a.str("prompt")?,
         max_new: a.usize("max-new")?,
         policy: a.str("policy")?,
         budget: a.usize("budget")?,
         spec,
-    })?;
+        tenant: a.str("tenant")?,
+        tenant_weight: a.usize("tenant-weight")?.max(1),
+        stream: a.bool("stream"),
+    };
+    let resp = if req.stream {
+        // Print deltas as they arrive; the final line repeats the full text
+        // with the timing fields, exactly like the blocking shape.
+        c.send(&req)?;
+        use std::io::Write as _;
+        loop {
+            match c.read_frame()? {
+                quoka::server::WireFrame::Token { delta, .. } => {
+                    print!("{delta}");
+                    std::io::stdout().flush().ok();
+                }
+                quoka::server::WireFrame::Done(resp) => {
+                    println!();
+                    break resp;
+                }
+            }
+        }
+    } else {
+        c.request(&req)?
+    };
     println!(
         "id={} ttft={:.1}ms tpot={:.2}ms prompt_tokens={} generated={} \
          spec_drafted={} spec_accepted={}\ntext: {:?}",
@@ -243,6 +271,7 @@ fn cmd_bench(argv: Vec<String>) -> anyhow::Result<()> {
         "prefix_serving" => drop(prefix::prefix_serving()),
         "spec_serving" => drop(spec::spec_serving()),
         "gemm_serving" => drop(gemm::gemm_serving()),
+        "serving_load" => drop(serving::serving_load()),
         "all" => {
             for id in [
                 "fig2_geometry", "fig3_deviation", "fig4_niah", "table1_ruler",
@@ -250,6 +279,7 @@ fn cmd_bench(argv: Vec<String>) -> anyhow::Result<()> {
                 "table8_math500", "table9_scoring", "table10_aggregation",
                 "table11_bcp", "table12_nq", "fig5_latency", "fig6_decode",
                 "micro_hotpath", "prefix_serving", "spec_serving", "gemm_serving",
+                "serving_load",
             ] {
                 cmd_bench(vec![id.to_string()])?;
             }
@@ -259,7 +289,8 @@ fn cmd_bench(argv: Vec<String>) -> anyhow::Result<()> {
                 "experiments (DESIGN.md §6):\n  fig2_geometry fig3_deviation fig4_niah\n  \
                  table1_ruler table2_ruler_budget table3_longbench table4_complexity\n  \
                  table8_math500 table9_scoring table10_aggregation table11_bcp table12_nq\n  \
-                 fig5_latency fig6_decode micro_hotpath prefix_serving spec_serving gemm_serving all\n\n\
+                 fig5_latency fig6_decode micro_hotpath prefix_serving spec_serving gemm_serving\n  \
+                 serving_load all\n\n\
                  QUOKA_BENCH_FULL=1 for paper-scale grids."
             );
         }

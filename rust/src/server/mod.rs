@@ -1,7 +1,11 @@
 //! JSON-over-TCP serving front-end and client.
+//!
+//! Wire format: `docs/WIRE_PROTOCOL.md`. Serving architecture (engine
+//! thread, reader/writer split, streaming, cancel, backpressure):
+//! `docs/ARCHITECTURE.md`.
 
 pub mod proto;
 pub mod tcp;
 
-pub use proto::{WireCommand, WireRequest, WireResponse, WireSpec};
+pub use proto::{WireCommand, WireFrame, WireRequest, WireResponse, WireSpec};
 pub use tcp::{serve, serve_with_opts, Client, ServeOpts, ServerHandle};

@@ -1,12 +1,38 @@
 //! Wire protocol: newline-delimited JSON over TCP.
 //!
+//! The full message catalogue (every field, example lines, back-compat
+//! notes) lives in `docs/WIRE_PROTOCOL.md`; the short version:
+//!
 //! Request:  `{"prompt": "...", "max_new": 16, "policy": "quoka", "budget": 1024}`
+//!           plus optional `spec_policy`/`spec_gamma` (speculative decode
+//!           override), `tenant`/`tenant_weight` (fair-share scheduling),
+//!           and `stream` (per-token frames instead of one response).
 //! Response: `{"id": 3, "text": "...", "ttft_ms": 12.5, "tpot_ms": 2.1,
 //!             "prompt_tokens": 812, "generated": 16}`
-//! Errors:   `{"error": "..."}`
+//! Stream:   `{"id": 3, "index": 0, "tokens": 2, "delta": "ab"}` frames,
+//!           then the response object above with `"done": true`.
+//! Commands: `{"cmd": "stats"}`, `{"cmd": "flush_trace"}`,
+//!           `{"cmd": "cancel", "id": 3}`.
+//! Errors:   `{"error": "..."}` (plus `"backpressure": true` when the
+//!           submission queue is full — retry later).
 
 use crate::coordinator::request::RequestResult;
 use crate::util::json::Json;
+
+/// Top-level request fields the server understands. Anything else is
+/// rejected by [`WireRequest::parse`] — typo protection (`spec_gama`
+/// would otherwise silently run without speculation).
+const REQUEST_KEYS: [&str; 9] = [
+    "prompt",
+    "max_new",
+    "policy",
+    "budget",
+    "spec_policy",
+    "spec_gamma",
+    "tenant",
+    "tenant_weight",
+    "stream",
+];
 
 /// Per-request speculative-decode override carried on the wire
 /// (`spec_policy` / `spec_gamma` fields). Absent entirely ⇒ the server's
@@ -31,11 +57,52 @@ pub struct WireRequest {
     /// Optional speculative-decode override; `None` requests (and old
     /// clients that never send the fields) inherit the server default.
     pub spec: Option<WireSpec>,
+    /// Fair-share scheduling group. Empty (the default, and what old
+    /// clients implicitly send) pools the request with every other
+    /// untagged one; distinct tenants round-robin for admission before
+    /// FIFO order applies within a tenant.
+    pub tenant: String,
+    /// Admission weight of this request's tenant (≥ 1; a tenant with
+    /// weight 2 is admitted twice per round-robin turn). The scheduler
+    /// uses the weight carried by the tenant's oldest waiting request.
+    pub tenant_weight: usize,
+    /// When true the server streams per-token `delta` frames and finishes
+    /// with a `"done": true` response object; when false (default) it
+    /// sends the single response object old clients expect.
+    pub stream: bool,
+}
+
+impl Default for WireRequest {
+    fn default() -> Self {
+        WireRequest {
+            prompt: String::new(),
+            max_new: 16,
+            policy: "quoka".into(),
+            budget: 1024,
+            spec: None,
+            tenant: String::new(),
+            tenant_weight: 1,
+            stream: false,
+        }
+    }
 }
 
 impl WireRequest {
     pub fn parse(line: &str) -> anyhow::Result<WireRequest> {
         let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("request must be a json object"))?;
+        let unknown: Vec<&str> = obj
+            .keys()
+            .map(|k| k.as_str())
+            .filter(|k| !REQUEST_KEYS.contains(k))
+            .collect();
+        if !unknown.is_empty() {
+            anyhow::bail!(
+                "unknown request field(s): {} (expected one of: {})",
+                unknown.join(", "),
+                REQUEST_KEYS.join(", ")
+            );
+        }
         let spec_gamma = j.get("spec_gamma").and_then(|v| v.as_usize());
         let spec_policy = j.get("spec_policy").and_then(|v| v.as_str());
         let spec = match (spec_policy, spec_gamma) {
@@ -56,6 +123,13 @@ impl WireRequest {
                 .to_string(),
             budget: j.get("budget").and_then(|v| v.as_usize()).unwrap_or(1024),
             spec,
+            tenant: j.get("tenant").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            tenant_weight: j
+                .get("tenant_weight")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(1)
+                .max(1),
+            stream: j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false),
         })
     }
 
@@ -72,17 +146,34 @@ impl WireRequest {
                 fields.push(("spec_gamma", Json::num(g as f64)));
             }
         }
+        // New fields are emitted only when they differ from the defaults,
+        // so default-shaped requests stay parseable by old servers.
+        if !self.tenant.is_empty() {
+            fields.push(("tenant", Json::str(self.tenant.clone())));
+        }
+        if self.tenant_weight > 1 {
+            fields.push(("tenant_weight", Json::num(self.tenant_weight as f64)));
+        }
+        if self.stream {
+            fields.push(("stream", Json::Bool(true)));
+        }
         Json::obj(fields).to_string()
     }
 }
 
 /// Control command sharing the request socket: `{"cmd": "stats"}` returns a
 /// metrics snapshot (JSON + Prometheus text), `{"cmd": "flush_trace"}` writes
-/// the lifecycle-trace ring to the server's `--trace-out` path.
+/// the lifecycle-trace ring to the server's `--trace-out` path, and
+/// `{"cmd": "cancel", "id": N}` aborts an in-flight streaming request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WireCommand {
     Stats,
     FlushTrace,
+    /// Cancel the in-flight request with this server-assigned id (the `id`
+    /// field of its `delta` frames). The stream ends with a
+    /// `"done": true, "cancelled": true` response carrying the tokens
+    /// generated so far.
+    Cancel { id: u64 },
 }
 
 impl WireCommand {
@@ -96,22 +187,51 @@ impl WireCommand {
         Some(match cmd.as_str() {
             "stats" => Ok(WireCommand::Stats),
             "flush_trace" => Ok(WireCommand::FlushTrace),
-            other => Err(anyhow::anyhow!("unknown cmd '{other}' (expected stats | flush_trace)")),
+            "cancel" => match j.get("id").and_then(|v| v.as_usize()) {
+                Some(id) => Ok(WireCommand::Cancel { id: id as u64 }),
+                None => Err(anyhow::anyhow!("cancel needs a numeric 'id' field")),
+            },
+            other => Err(anyhow::anyhow!(
+                "unknown cmd '{other}' (expected stats | flush_trace | cancel)"
+            )),
         })
     }
 
     pub fn to_line(self) -> String {
-        let name = match self {
-            WireCommand::Stats => "stats",
-            WireCommand::FlushTrace => "flush_trace",
-        };
-        Json::obj(vec![("cmd", Json::str(name))]).to_string()
+        match self {
+            WireCommand::Stats => Json::obj(vec![("cmd", Json::str("stats"))]).to_string(),
+            WireCommand::FlushTrace => {
+                Json::obj(vec![("cmd", Json::str("flush_trace"))]).to_string()
+            }
+            WireCommand::Cancel { id } => Json::obj(vec![
+                ("cmd", Json::str("cancel")),
+                ("id", Json::num(id as f64)),
+            ])
+            .to_string(),
+        }
     }
 }
 
-/// Render a result for the wire.
-pub fn result_line(r: &RequestResult, text: &str) -> String {
+/// Render one streaming delta frame: `index` is how many tokens preceded
+/// this delta, `tokens` how many it carries. Both count *tokens*, not
+/// bytes — the byte tokenizer drops non-byte ids, so text length alone
+/// can't reconstruct progress.
+pub fn token_line(id: u64, index: usize, tokens: usize, delta: &str) -> String {
     Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("index", Json::num(index as f64)),
+        ("tokens", Json::num(tokens as f64)),
+        ("delta", Json::str(delta)),
+    ])
+    .to_string()
+}
+
+/// Render a result for the wire. `done` tags the frame as a stream
+/// terminator; `cancelled` marks a request ended by `cancel` (or client
+/// disconnect) rather than by reaching `max_new`. Both are omitted when
+/// false, so blocking responses keep the exact pre-streaming shape.
+pub fn result_line_tagged(r: &RequestResult, text: &str, done: bool, cancelled: bool) -> String {
+    let mut fields = vec![
         ("id", Json::num(r.id as f64)),
         ("text", Json::str(text)),
         ("ttft_ms", Json::num(r.ttft_s * 1e3)),
@@ -121,12 +241,37 @@ pub fn result_line(r: &RequestResult, text: &str) -> String {
         ("spec_drafted_tokens", Json::num(r.spec_drafted_tokens as f64)),
         ("spec_accepted_tokens", Json::num(r.spec_accepted_tokens as f64)),
         ("generated", Json::num(r.generated.len() as f64)),
-    ])
-    .to_string()
+    ];
+    if done {
+        fields.push(("done", Json::Bool(true)));
+    }
+    if cancelled {
+        fields.push(("cancelled", Json::Bool(true)));
+    }
+    Json::obj(fields).to_string()
+}
+
+/// Render a blocking (non-streaming) result — the original wire shape.
+pub fn result_line(r: &RequestResult, text: &str) -> String {
+    result_line_tagged(r, text, false, false)
 }
 
 pub fn error_line(msg: &str) -> String {
     Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
+/// Render an admission-backpressure rejection. Carries
+/// `"backpressure": true` so clients can distinguish "retry later" from
+/// hard errors.
+pub fn backpressure_line(queued: usize, max_queue: usize) -> String {
+    Json::obj(vec![
+        (
+            "error",
+            Json::str(format!("server saturated: {queued} requests queued (max {max_queue})")),
+        ),
+        ("backpressure", Json::Bool(true)),
+    ])
+    .to_string()
 }
 
 /// Parsed server response (client side).
@@ -145,6 +290,9 @@ pub struct WireResponse {
     pub spec_drafted_tokens: usize,
     pub spec_accepted_tokens: usize,
     pub generated: usize,
+    /// True when the request was ended early by `cancel` or client
+    /// disconnect (absent on old servers and completed requests ⇒ false).
+    pub cancelled: bool,
 }
 
 impl WireResponse {
@@ -172,7 +320,40 @@ impl WireResponse {
                 .and_then(|v| v.as_usize())
                 .unwrap_or(0),
             generated: j.req("generated")?.as_usize().unwrap_or(0),
+            cancelled: j.get("cancelled").and_then(|v| v.as_bool()).unwrap_or(false),
         })
+    }
+}
+
+/// One frame of a streaming response, as seen by the client: zero or more
+/// `Token` deltas, then exactly one `Done` carrying the final response
+/// object (its `text` is always the full generation — byte-identical to
+/// what a blocking client would have received).
+#[derive(Clone, Debug)]
+pub enum WireFrame {
+    Token { id: u64, index: usize, tokens: usize, delta: String },
+    Done(WireResponse),
+}
+
+impl WireFrame {
+    pub fn parse(line: &str) -> anyhow::Result<WireFrame> {
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad frame json: {e}"))?;
+        if let Some(err) = j.get("error").and_then(|e| e.as_str()) {
+            anyhow::bail!("server error: {err}");
+        }
+        if j.get("delta").is_some() {
+            return Ok(WireFrame::Token {
+                id: j.req("id")?.as_usize().unwrap_or(0) as u64,
+                index: j.req("index")?.as_usize().unwrap_or(0),
+                tokens: j.req("tokens")?.as_usize().unwrap_or(0),
+                delta: j
+                    .req("delta")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("delta must be a string"))?
+                    .to_string(),
+            });
+        }
+        Ok(WireFrame::Done(WireResponse::parse(line)?))
     }
 }
 
@@ -187,7 +368,7 @@ mod tests {
             max_new: 8,
             policy: "quoka".into(),
             budget: 512,
-            spec: None,
+            ..WireRequest::default()
         };
         let back = WireRequest::parse(&r.to_line()).unwrap();
         assert_eq!(r, back);
@@ -199,6 +380,15 @@ mod tests {
             let back = WireRequest::parse(&s.to_line()).unwrap();
             assert_eq!(s, back);
         }
+        // Streaming + tenant fields survive the round trip too.
+        let t = WireRequest {
+            tenant: "acme".into(),
+            tenant_weight: 3,
+            stream: true,
+            ..r.clone()
+        };
+        let back = WireRequest::parse(&t.to_line()).unwrap();
+        assert_eq!(t, back);
     }
 
     #[test]
@@ -207,6 +397,9 @@ mod tests {
         assert_eq!(r.max_new, 16);
         assert_eq!(r.policy, "quoka");
         assert_eq!(r.spec, None, "absent spec fields inherit the server default");
+        assert_eq!(r.tenant, "", "old clients land in the default tenant");
+        assert_eq!(r.tenant_weight, 1);
+        assert!(!r.stream, "old clients get the blocking response shape");
         // spec_gamma alone implies the default drafter.
         let g = WireRequest::parse(r#"{"prompt": "x", "spec_gamma": 4}"#).unwrap();
         assert_eq!(g.spec, Some(WireSpec { policy: "pld".into(), gamma: Some(4) }));
@@ -219,13 +412,35 @@ mod tests {
     }
 
     #[test]
+    fn unknown_keys_rejected() {
+        // The classic typo: "spec_gama" must not silently disable
+        // speculation — the error names the offending key.
+        let err = WireRequest::parse(r#"{"prompt": "x", "spec_gama": 4}"#).unwrap_err();
+        assert!(err.to_string().contains("spec_gama"), "got: {err}");
+        assert!(err.to_string().contains("unknown request field"), "got: {err}");
+        // Old-client back-compat: every key an old client could send —
+        // the full pre-streaming field set — still parses.
+        let old = concat!(
+            r#"{"prompt": "x", "max_new": 8, "policy": "dense", "budget": 64, "#,
+            r#""spec_policy": "pld", "spec_gamma": 2}"#
+        );
+        let r = WireRequest::parse(old).unwrap();
+        assert_eq!(r.policy, "dense");
+        assert_eq!(r.spec, Some(WireSpec { policy: "pld".into(), gamma: Some(2) }));
+        // Non-object payloads get a targeted error.
+        assert!(WireRequest::parse(r#"[1, 2]"#).is_err());
+    }
+
+    #[test]
     fn command_lines() {
-        for cmd in [WireCommand::Stats, WireCommand::FlushTrace] {
+        for cmd in [WireCommand::Stats, WireCommand::FlushTrace, WireCommand::Cancel { id: 42 }] {
             let parsed = WireCommand::parse(&cmd.to_line());
             assert_eq!(parsed.unwrap().unwrap(), cmd);
         }
         // Unknown command name: detected (Some) but rejected (Err).
         assert!(WireCommand::parse(r#"{"cmd": "nope"}"#).unwrap().is_err());
+        // Cancel without an id: detected but rejected.
+        assert!(WireCommand::parse(r#"{"cmd": "cancel"}"#).unwrap().is_err());
         // Plain request lines carry no cmd key and fall through.
         assert!(WireCommand::parse(r#"{"prompt": "x"}"#).is_none());
         assert!(WireCommand::parse("{nope").is_none());
@@ -245,12 +460,21 @@ mod tests {
             total_s: 0.02,
         };
         let line = result_line(&rr, "out");
+        // Blocking responses keep the exact pre-streaming shape: no
+        // done/cancelled keys for old clients to trip over.
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("done").is_none());
+        assert!(j.get("cancelled").is_none());
         let resp = WireResponse::parse(&line).unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.generated, 2);
         assert_eq!(resp.cached_prefix_tokens, 64);
         assert_eq!(resp.spec_drafted_tokens, 10);
         assert_eq!(resp.spec_accepted_tokens, 7);
+        assert!(!resp.cancelled);
+        let tagged = result_line_tagged(&rr, "out", true, true);
+        let resp = WireResponse::parse(&tagged).unwrap();
+        assert!(resp.cancelled);
         // Back-compat: responses without the fields parse as 0.
         let legacy = r#"{"id": 1, "text": "x", "ttft_ms": 1.0, "tpot_ms": 1.0, "prompt_tokens": 5, "generated": 1}"#;
         let legacy = WireResponse::parse(legacy).unwrap();
@@ -258,5 +482,43 @@ mod tests {
         assert_eq!(legacy.spec_drafted_tokens, 0);
         assert!(WireResponse::parse(&error_line("boom")).is_err());
         assert!(WireRequest::parse("{nope").is_err());
+    }
+
+    #[test]
+    fn stream_frames() {
+        let t = token_line(3, 5, 2, "ab");
+        match WireFrame::parse(&t).unwrap() {
+            WireFrame::Token { id, index, tokens, delta } => {
+                assert_eq!((id, index, tokens), (3, 5, 2));
+                assert_eq!(delta, "ab");
+            }
+            other => panic!("expected a token frame, got {other:?}"),
+        }
+        let rr = RequestResult {
+            id: 3,
+            generated: vec![1, 2, 3],
+            ttft_s: 0.01,
+            tpot_s: 0.002,
+            prompt_tokens: 9,
+            cached_prefix_tokens: 0,
+            spec_drafted_tokens: 0,
+            spec_accepted_tokens: 0,
+            total_s: 0.02,
+        };
+        let done = result_line_tagged(&rr, "abc", true, false);
+        match WireFrame::parse(&done).unwrap() {
+            WireFrame::Done(resp) => {
+                assert_eq!(resp.text, "abc");
+                assert!(!resp.cancelled);
+            }
+            other => panic!("expected a done frame, got {other:?}"),
+        }
+        // Error lines surface as Err from frame parsing too.
+        assert!(WireFrame::parse(&error_line("boom")).is_err());
+        // Backpressure rejections are error lines with a marker flag.
+        let bp = backpressure_line(9, 8);
+        assert!(WireFrame::parse(&bp).is_err());
+        let j = Json::parse(&bp).unwrap();
+        assert_eq!(j.get("backpressure").and_then(|v| v.as_bool()), Some(true));
     }
 }

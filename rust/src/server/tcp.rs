@@ -1,38 +1,65 @@
 //! TCP serving front-end.
 //!
 //! One engine thread owns the [`Engine`] and loops: drain submissions →
-//! `step()` → dispatch finished results to per-request response channels.
-//! Connection threads parse newline-JSON requests, tokenize, submit, and
-//! block on their response channel — the classic leader/worker split with
-//! Rust owning the event loop end to end.
+//! `step()` → stream fresh tokens → dispatch finished results. Connection
+//! handling is split per socket into a reader thread (parse newline-JSON,
+//! forward to the engine) and a writer thread (drain an outbox channel to
+//! the socket), so a connection is never blocked on its own pending
+//! request: submissions from one client multiplex onto the engine while
+//! earlier requests still run — continuous batching end to end, with
+//! per-token `delta` frames for `"stream": true` requests, `cancel`
+//! riding [`Engine::cancel`], and admission backpressure when the waiting
+//! queue exceeds [`ServeOpts::max_queue`].
+//!
+//! The wire format is documented in `docs/WIRE_PROTOCOL.md`; the serving
+//! architecture in `docs/ARCHITECTURE.md`.
 
-use super::proto::{error_line, result_line, WireCommand, WireRequest, WireResponse};
+use super::proto::{
+    backpressure_line, error_line, result_line_tagged, token_line, WireCommand, WireFrame,
+    WireRequest, WireResponse,
+};
 use crate::coordinator::{Engine, PolicySpec};
 use crate::spec::SpecCfg;
 use crate::util::json::Json;
 use crate::workload::corpus::ByteTokenizer;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::mpsc;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
 use std::sync::Arc;
 
 enum ToEngine {
     Submit {
         wire: WireRequest,
-        resp: mpsc::Sender<String>,
+        /// Originating connection — lets a disconnect reclaim every
+        /// request the connection still has in flight.
+        conn: u64,
+        out: mpsc::Sender<String>,
+    },
+    /// Client-initiated cancel of an in-flight request. Success is
+    /// observable as the request's final (cancelled) frame; only an
+    /// unknown id draws a direct error reply.
+    Cancel {
+        id: u64,
+        out: mpsc::Sender<String>,
     },
     /// Metrics snapshot request; answered immediately (no queueing behind
     /// generation work).
     Stats {
-        resp: mpsc::Sender<String>,
+        out: mpsc::Sender<String>,
     },
     /// Flush the lifecycle-trace ring to the configured `trace_out` path.
     FlushTrace {
-        resp: mpsc::Sender<String>,
+        out: mpsc::Sender<String>,
+    },
+    /// The connection's reader saw EOF: cancel and forget everything it
+    /// still owns (mid-prefill requests release their pages through
+    /// [`Engine::cancel`]).
+    Disconnect {
+        conn: u64,
     },
     Shutdown,
 }
@@ -51,6 +78,25 @@ pub struct ServeOpts {
     /// Where to flush the trace ring (JSONL) at shutdown and on the
     /// `flush_trace` wire command.
     pub trace_out: Option<PathBuf>,
+    /// Admission backpressure: submissions arriving while this many
+    /// requests already wait for admission are rejected with a
+    /// `"backpressure": true` error instead of growing the queue without
+    /// bound. 0 (default) disables the limit.
+    pub max_queue: usize,
+}
+
+/// Server-side bookkeeping for one in-flight request.
+struct Waiter {
+    out: mpsc::Sender<String>,
+    conn: u64,
+    stream: bool,
+    /// Token ids already sent as `delta` frames (streaming only) — a
+    /// prefix of the engine's generation for this id.
+    sent: Vec<u32>,
+    /// Set by `cancel` so the final frame is tagged; the engine reports
+    /// cancelled requests with an empty generation (its unserved
+    /// sentinel), so `sent` is also what the done frame echoes back.
+    cancelled: bool,
 }
 
 /// Handle for a running server.
@@ -85,7 +131,7 @@ where
     serve_with_opts(make_engine, addr, ServeOpts::default())
 }
 
-/// [`serve`] with tracing options.
+/// [`serve`] with tracing and backpressure options.
 pub fn serve_with_opts<F>(make_engine: F, addr: &str, opts: ServeOpts) -> Result<ServerHandle>
 where
     F: FnOnce() -> Result<Engine> + Send + 'static,
@@ -121,10 +167,10 @@ where
             }
             let vocab = engine.model_cfg().vocab;
             let tok = ByteTokenizer::new(vocab);
-            let mut waiters: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
+            let mut waiters: HashMap<u64, Waiter> = HashMap::new();
             let mut open = true;
             loop {
-                // Drain submissions without blocking while work remains.
+                // Drain the mailbox; block only when the engine is idle.
                 loop {
                     let msg = if engine.pending() > 0 {
                         match rx.try_recv() {
@@ -145,49 +191,24 @@ where
                         }
                     };
                     match msg {
-                        ToEngine::Submit { wire, resp } => {
-                            let tokens = tok.encode(&wire.prompt);
-                            let spec = PolicySpec { name: wire.policy.clone(), budget: wire.budget };
-                            // Per-request speculative override; absent
-                            // fields leave the engine-wide default, and a
-                            // policy-only opt-in inherits the default's
-                            // gamma (DEFAULT_GAMMA when the default is
-                            // off — an explicit opt-in must not resolve
-                            // to gamma 0 and silently disable itself).
-                            let submitted = match &wire.spec {
-                                Some(ws) => {
-                                    let default = engine.default_spec();
-                                    let gamma = ws.gamma.unwrap_or(if default.enabled() {
-                                        default.gamma
-                                    } else {
-                                        crate::spec::DEFAULT_GAMMA
-                                    });
-                                    SpecCfg::parse(&ws.policy, gamma).and_then(|sc| {
-                                        engine.submit_spec(tokens, wire.max_new, spec, sc)
-                                    })
-                                }
-                                None => engine.submit(tokens, wire.max_new, spec),
-                            };
-                            match submitted {
-                                Ok(id) => {
-                                    waiters.insert(id, resp);
-                                }
-                                Err(e) => {
-                                    let _ = resp.send(error_line(&e.to_string()));
-                                }
-                            }
+                        ToEngine::Submit { wire, conn, out } => {
+                            handle_submit(&mut engine, &mut waiters, &tok, wire, conn, out, &opts);
                         }
-                        ToEngine::Stats { resp } => {
+                        ToEngine::Cancel { id, out } => {
+                            handle_cancel(&mut engine, &mut waiters, &tok, id, out);
+                        }
+                        ToEngine::Stats { out } => {
                             let line = Json::obj(vec![
                                 ("pending", Json::num(engine.pending() as f64)),
+                                ("queued", Json::num(engine.queue_depth() as f64)),
                                 ("trace_events", Json::num(engine.tracer.len() as f64)),
                                 ("stats", engine.metrics.snapshot_json()),
                                 ("prometheus", Json::str(engine.metrics.prometheus_text())),
                             ])
                             .to_string();
-                            let _ = resp.send(line);
+                            let _ = out.send(line);
                         }
-                        ToEngine::FlushTrace { resp } => {
+                        ToEngine::FlushTrace { out } => {
                             let line = match &trace_out {
                                 Some(path) => match engine.write_trace(path) {
                                     Ok(n) => Json::obj(vec![
@@ -199,24 +220,38 @@ where
                                 },
                                 None => error_line("server started without --trace-out"),
                             };
-                            let _ = resp.send(line);
+                            let _ = out.send(line);
+                        }
+                        ToEngine::Disconnect { conn } => {
+                            let ids: Vec<u64> = waiters
+                                .iter()
+                                .filter(|(_, w)| w.conn == conn)
+                                .map(|(&id, _)| id)
+                                .collect();
+                            for id in ids {
+                                // Forget first, then cancel: the result the
+                                // cancel pushes finds no waiter and is
+                                // dropped — nobody is listening.
+                                waiters.remove(&id);
+                                engine.cancel(id);
+                            }
                         }
                         ToEngine::Shutdown => {
                             open = false;
                             break;
                         }
                     }
+                    // A message can finish a request without a step (cancel,
+                    // disconnect, failed submit on an idle engine): deliver
+                    // its final frame now rather than after the next step.
+                    dispatch_results(&mut engine, &mut waiters, &tok);
                 }
                 if engine.pending() > 0 {
                     if let Err(e) = engine.step() {
                         eprintln!("engine step error: {e:#}");
                     }
-                    for r in engine.take_results() {
-                        if let Some(w) = waiters.remove(&r.id) {
-                            let text = tok.decode(&r.generated);
-                            let _ = w.send(result_line(&r, &text));
-                        }
-                    }
+                    stream_deltas(&engine, &mut waiters, &tok);
+                    dispatch_results(&mut engine, &mut waiters, &tok);
                 } else if !open {
                     break;
                 }
@@ -243,62 +278,204 @@ where
     let accept_thread = std::thread::Builder::new()
         .name("quoka-accept".into())
         .spawn(move || {
+            let mut next_conn = 0u64;
             for conn in listener.incoming() {
                 if stop_accept.load(Ordering::SeqCst) {
                     break;
                 }
                 let Ok(stream) = conn else { continue };
+                next_conn += 1;
+                let id = next_conn;
                 let tx = tx_accept.clone();
-                std::thread::spawn(move || handle_conn(stream, tx));
+                std::thread::spawn(move || handle_conn(stream, tx, id));
             }
         })?;
 
     Ok(ServerHandle { addr: local, tx, stop, threads: vec![engine_thread, accept_thread] })
 }
 
-fn handle_conn(stream: TcpStream, tx: mpsc::Sender<ToEngine>) {
-    let peer = stream.peer_addr().ok();
-    let mut writer = match stream.try_clone() {
+/// Admit one wire request into the engine (engine thread).
+fn handle_submit(
+    engine: &mut Engine,
+    waiters: &mut HashMap<u64, Waiter>,
+    tok: &ByteTokenizer,
+    wire: WireRequest,
+    conn: u64,
+    out: mpsc::Sender<String>,
+    opts: &ServeOpts,
+) {
+    if opts.max_queue > 0 && engine.queue_depth() >= opts.max_queue {
+        let _ = out.send(backpressure_line(engine.queue_depth(), opts.max_queue));
+        return;
+    }
+    let tokens = tok.encode(&wire.prompt);
+    let policy = PolicySpec { name: wire.policy.clone(), budget: wire.budget };
+    // Per-request speculative override; absent fields leave the
+    // engine-wide default, and a policy-only opt-in inherits the
+    // default's gamma (DEFAULT_GAMMA when the default is off — an
+    // explicit opt-in must not resolve to gamma 0 and silently disable
+    // itself).
+    let spec = match &wire.spec {
+        Some(ws) => {
+            let default = engine.default_spec();
+            let gamma = ws.gamma.unwrap_or(if default.enabled() {
+                default.gamma
+            } else {
+                crate::spec::DEFAULT_GAMMA
+            });
+            match SpecCfg::parse(&ws.policy, gamma) {
+                Ok(sc) => sc,
+                Err(e) => {
+                    let _ = out.send(error_line(&e.to_string()));
+                    return;
+                }
+            }
+        }
+        None => engine.default_spec(),
+    };
+    match engine.submit_tagged(tokens, wire.max_new, policy, spec, &wire.tenant, wire.tenant_weight)
+    {
+        Ok(id) => {
+            waiters.insert(
+                id,
+                Waiter { out, conn, stream: wire.stream, sent: Vec::new(), cancelled: false },
+            );
+        }
+        Err(e) => {
+            let _ = out.send(error_line(&e.to_string()));
+        }
+    }
+}
+
+/// Client cancel (engine thread): flush whatever the stream has not seen
+/// yet, tag the waiter, and pull the request out of the engine — its
+/// final frame goes out through the usual result dispatch.
+fn handle_cancel(
+    engine: &mut Engine,
+    waiters: &mut HashMap<u64, Waiter>,
+    tok: &ByteTokenizer,
+    id: u64,
+    out: mpsc::Sender<String>,
+) {
+    let Some(w) = waiters.get_mut(&id) else {
+        let _ = out.send(error_line(&format!("cancel: no in-flight request with id {id}")));
+        return;
+    };
+    if w.stream {
+        if let Some(gen) = engine.generated_so_far(id) {
+            if gen.len() > w.sent.len() {
+                let delta = &gen[w.sent.len()..];
+                let line = token_line(id, w.sent.len(), delta.len(), &tok.decode(delta));
+                let _ = w.out.send(line);
+                w.sent.extend_from_slice(delta);
+            }
+        }
+    }
+    w.cancelled = true;
+    engine.cancel(id);
+}
+
+/// Send `delta` frames for tokens generated since the last step to every
+/// live streaming waiter.
+fn stream_deltas(engine: &Engine, waiters: &mut HashMap<u64, Waiter>, tok: &ByteTokenizer) {
+    for (&id, w) in waiters.iter_mut() {
+        if !w.stream || w.cancelled {
+            continue;
+        }
+        let Some(gen) = engine.generated_so_far(id) else { continue };
+        if gen.len() > w.sent.len() {
+            let delta = &gen[w.sent.len()..];
+            let line = token_line(id, w.sent.len(), delta.len(), &tok.decode(delta));
+            let _ = w.out.send(line);
+            w.sent.extend_from_slice(delta);
+        }
+    }
+}
+
+/// Deliver final frames for every finished (or cancelled) request.
+fn dispatch_results(engine: &mut Engine, waiters: &mut HashMap<u64, Waiter>, tok: &ByteTokenizer) {
+    for mut r in engine.take_results() {
+        let Some(w) = waiters.remove(&r.id) else { continue };
+        if w.stream {
+            if w.cancelled {
+                // The engine's unserved sentinel empties the generation;
+                // the final frame echoes what was actually streamed so the
+                // client's assembled text matches its fields.
+                r.generated = w.sent;
+            } else if r.generated.len() > w.sent.len() {
+                let delta = &r.generated[w.sent.len()..];
+                let line = token_line(r.id, w.sent.len(), delta.len(), &tok.decode(delta));
+                let _ = w.out.send(line);
+            }
+            let text = tok.decode(&r.generated);
+            let _ = w.out.send(result_line_tagged(&r, &text, true, w.cancelled));
+        } else {
+            let text = tok.decode(&r.generated);
+            let _ = w.out.send(result_line_tagged(&r, &text, false, w.cancelled));
+        }
+    }
+}
+
+/// Per-connection reader: parse lines, forward to the engine, and fan all
+/// replies through a dedicated writer thread so slow generation on one
+/// request never blocks parsing (or cancelling) the next.
+fn handle_conn(stream: TcpStream, tx: mpsc::Sender<ToEngine>, conn: u64) {
+    let writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
+    let (out_tx, out_rx) = mpsc::channel::<String>();
+    let writer_thread = std::thread::spawn(move || {
+        let mut w = BufWriter::new(writer);
+        while let Ok(line) = out_rx.recv() {
+            let res = w
+                .write_all(line.as_bytes())
+                .and_then(|_| w.write_all(b"\n"))
+                .and_then(|_| w.flush());
+            if res.is_err() {
+                break;
+            }
+        }
+    });
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match WireCommand::parse(&line) {
+        match WireCommand::parse(&line) {
             Some(Ok(cmd)) => {
-                let (rtx, rrx) = mpsc::channel();
                 let msg = match cmd {
-                    WireCommand::Stats => ToEngine::Stats { resp: rtx },
-                    WireCommand::FlushTrace => ToEngine::FlushTrace { resp: rtx },
+                    WireCommand::Stats => ToEngine::Stats { out: out_tx.clone() },
+                    WireCommand::FlushTrace => ToEngine::FlushTrace { out: out_tx.clone() },
+                    WireCommand::Cancel { id } => ToEngine::Cancel { id, out: out_tx.clone() },
                 };
                 if tx.send(msg).is_err() {
-                    error_line("engine stopped")
-                } else {
-                    rrx.recv().unwrap_or_else(|_| error_line("engine dropped request"))
+                    let _ = out_tx.send(error_line("engine stopped"));
                 }
             }
-            Some(Err(e)) => error_line(&e.to_string()),
+            Some(Err(e)) => {
+                let _ = out_tx.send(error_line(&e.to_string()));
+            }
             None => match WireRequest::parse(&line) {
                 Ok(wire) => {
-                    let (rtx, rrx) = mpsc::channel();
-                    if tx.send(ToEngine::Submit { wire, resp: rtx }).is_err() {
-                        error_line("engine stopped")
-                    } else {
-                        rrx.recv().unwrap_or_else(|_| error_line("engine dropped request"))
+                    let msg = ToEngine::Submit { wire, conn, out: out_tx.clone() };
+                    if tx.send(msg).is_err() {
+                        let _ = out_tx.send(error_line("engine stopped"));
                     }
                 }
-                Err(e) => error_line(&e.to_string()),
+                Err(e) => {
+                    let _ = out_tx.send(error_line(&e.to_string()));
+                }
             },
-        };
-        if writer.write_all(reply.as_bytes()).and_then(|_| writer.write_all(b"\n")).is_err() {
-            break;
         }
     }
-    let _ = peer;
+    // Reader gone (EOF or error): reclaim everything this connection still
+    // owns, then let the writer drain and exit — it finishes once the
+    // engine drops the last outbox sender it holds for this connection.
+    let _ = tx.send(ToEngine::Disconnect { conn });
+    drop(out_tx);
+    let _ = writer_thread.join();
 }
 
 /// Blocking client for examples/benches.
@@ -314,19 +491,61 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream), writer })
     }
 
-    /// Send one request and wait for its response.
+    /// Send one request and wait for its (single, blocking-shape) response.
     pub fn request(&mut self, req: &WireRequest) -> Result<WireResponse> {
-        self.writer.write_all(req.to_line().as_bytes())?;
-        self.writer.write_all(b"\n")?;
+        self.send(req)?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         WireResponse::parse(line.trim())
     }
 
-    /// Send one raw line and return the server's reply verbatim (trimmed).
-    pub fn raw(&mut self, line: &str) -> Result<String> {
+    /// Send a request line without waiting for the reply (streaming and
+    /// pipelined use — replies are read with [`Client::read_frame`]).
+    pub fn send(&mut self, req: &WireRequest) -> Result<()> {
+        self.send_line(&req.to_line())
+    }
+
+    /// Send one raw line without reading a reply.
+    pub fn send_line(&mut self, line: &str) -> Result<()> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Read and parse the next streaming frame.
+    pub fn read_frame(&mut self) -> Result<WireFrame> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "connection closed mid-stream");
+        WireFrame::parse(line.trim())
+    }
+
+    /// Send `req` with streaming forced on and collect the whole stream:
+    /// returns the client-assembled delta concatenation plus the final
+    /// response (whose `text` must match the assembly byte for byte).
+    pub fn request_streaming(&mut self, req: &WireRequest) -> Result<(String, WireResponse)> {
+        let mut req = req.clone();
+        req.stream = true;
+        self.send(&req)?;
+        let mut assembled = String::new();
+        loop {
+            match self.read_frame()? {
+                WireFrame::Token { delta, .. } => assembled.push_str(&delta),
+                WireFrame::Done(resp) => return Ok((assembled, resp)),
+            }
+        }
+    }
+
+    /// Fire a cancel for an in-flight request id. No direct reply on
+    /// success — the request's stream ends with a `cancelled` done frame;
+    /// unknown ids draw an error line.
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        self.send_line(&WireCommand::Cancel { id }.to_line())
+    }
+
+    /// Send one raw line and return the server's reply verbatim (trimmed).
+    pub fn raw(&mut self, line: &str) -> Result<String> {
+        self.send_line(line)?;
         let mut out = String::new();
         self.reader.read_line(&mut out)?;
         Ok(out.trim().to_string())
@@ -373,7 +592,11 @@ mod tests {
                 )
             },
             "127.0.0.1:0",
-            ServeOpts { trace_events: 4096, trace_out: Some(trace_path.clone()) },
+            ServeOpts {
+                trace_events: 4096,
+                trace_out: Some(trace_path.clone()),
+                ..ServeOpts::default()
+            },
         )
         .unwrap();
         let addr = handle.addr;
@@ -385,12 +608,13 @@ mod tests {
                 max_new: 4,
                 policy: "quoka".into(),
                 budget: 32,
-                spec: None,
+                ..WireRequest::default()
             })
             .unwrap();
         assert_eq!(resp.generated, 4);
         assert!(resp.ttft_ms > 0.0);
         assert_eq!(resp.prompt_tokens, 0 /* not echoed in text */ + 20);
+        assert!(!resp.cancelled);
 
         // Speculative decode over the wire: same prompt, spec enabled —
         // byte-identical text (losslessness crosses the protocol), with
@@ -404,6 +628,7 @@ mod tests {
                     policy: "quoka".into(),
                     budget: 32,
                     spec: Some(crate::server::WireSpec { policy: "pld".into(), gamma: Some(4) }),
+                    ..WireRequest::default()
                 })
                 .unwrap();
             assert_eq!(spec_resp.generated, 4);
@@ -412,6 +637,24 @@ mod tests {
                 spec_resp.spec_accepted_tokens <= spec_resp.spec_drafted_tokens,
                 "acceptance accounting is consistent"
             );
+        }
+
+        // Streaming on the same server: the assembled deltas and the done
+        // frame's text both match the blocking response byte for byte.
+        {
+            let mut cs = Client::connect(addr).unwrap();
+            let (assembled, done) = cs
+                .request_streaming(&WireRequest {
+                    prompt: "the quick brown fox".into(),
+                    max_new: 4,
+                    policy: "quoka".into(),
+                    budget: 32,
+                    ..WireRequest::default()
+                })
+                .unwrap();
+            assert_eq!(done.text, resp.text, "streaming must not change the text");
+            assert_eq!(assembled, resp.text, "delta frames reassemble the text");
+            assert_eq!(done.generated, 4);
         }
 
         // Concurrent clients.
@@ -424,7 +667,7 @@ mod tests {
                         max_new: 2,
                         policy: "dense".into(),
                         budget: 0,
-                        spec: None,
+                        ..WireRequest::default()
                     })
                     .unwrap()
                 })
@@ -442,7 +685,7 @@ mod tests {
             max_new: 1,
             policy: "bogus".into(),
             budget: 1,
-            spec: None,
+            ..WireRequest::default()
         });
         assert!(err.is_err());
 
@@ -453,7 +696,7 @@ mod tests {
             .and_then(|s| s.get("requests_finished"))
             .and_then(|v| v.as_usize())
             .expect("stats.requests_finished present");
-        assert!(finished >= 5, "all completed requests counted, got {finished}");
+        assert!(finished >= 6, "all completed requests counted, got {finished}");
         let prom = stats.get("prometheus").and_then(|v| v.as_str()).unwrap();
         assert!(
             prom.contains("quoka_requests_finished_total"),

@@ -464,7 +464,7 @@ fn tcp_server_failure_injection() {
             max_new: 1,
             policy: "warpdrive".into(),
             budget: 8,
-            spec: None,
+            ..WireRequest::default()
         });
         assert!(err.is_err());
     }
@@ -477,7 +477,7 @@ fn tcp_server_failure_injection() {
                 max_new: 3,
                 policy: "quoka".into(),
                 budget: 16,
-                spec: None,
+                ..WireRequest::default()
             })
             .unwrap();
         assert_eq!(ok.generated, 3);

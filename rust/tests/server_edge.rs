@@ -1,0 +1,319 @@
+//! Server edge-condition tests: disconnects mid-prefill, malformed
+//! frames, mid-stream cancellation, admission backpressure, and the
+//! streaming/blocking equivalence guarantee.
+
+use quoka::coordinator::{Engine, EngineCfg, KvLayout, SchedCfg};
+use quoka::server::{serve_with_opts, Client, ServeOpts, WireFrame, WireRequest, WireSpec};
+use quoka::util::Json;
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+fn host_cfg() -> EngineCfg {
+    EngineCfg {
+        sched: SchedCfg { b_cp: 16, step_tokens: 64, max_running: 4, ..SchedCfg::default() },
+        pool_blocks: 512,
+        block_tokens: 16,
+        seed: 9,
+        ..EngineCfg::default()
+    }
+}
+
+/// Counter out of the `stats` reply body (0 when absent).
+fn stat(s: &Json, key: &str) -> usize {
+    s.get("stats").and_then(|b| b.get(key)).and_then(|v| v.as_usize()).unwrap_or(0)
+}
+
+/// Poll the server's `stats` command until `pred` holds (or fail loudly).
+fn wait_for(addr: SocketAddr, what: &str, pred: impl Fn(&Json) -> bool) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let mut c = Client::connect(addr).unwrap();
+        let s = c.stats().unwrap();
+        if pred(&s) {
+            return s;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}: {}", s.to_string());
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// The acceptance guarantee: a streaming client and a blocking client get
+/// bit-identical generations (and the assembled deltas equal the final
+/// text), with and without speculative decode.
+#[test]
+fn streaming_matches_blocking_bit_for_bit() {
+    let handle = serve_with_opts(
+        || Engine::new_host("tiny", host_cfg()),
+        "127.0.0.1:0",
+        ServeOpts::default(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+    for spec in [None, Some(WireSpec { policy: "pld".into(), gamma: Some(4) })] {
+        let req = WireRequest {
+            prompt: "pack my box with five dozen liquor jugs, again and again and again".into(),
+            max_new: 12,
+            policy: "quoka".into(),
+            budget: 64,
+            spec,
+            ..WireRequest::default()
+        };
+        let mut cb = Client::connect(addr).unwrap();
+        let blocking = cb.request(&req).unwrap();
+        let mut cs = Client::connect(addr).unwrap();
+        let (assembled, done) = cs.request_streaming(&req).unwrap();
+        assert_eq!(done.text, blocking.text, "streaming changed the generation");
+        assert_eq!(assembled, done.text, "deltas must reassemble the final text");
+        assert_eq!(done.generated, blocking.generated);
+        assert!(!done.cancelled);
+    }
+    handle.shutdown();
+}
+
+/// A client vanishing mid-prefill must release the request: the engine
+/// cancels it, every KV page goes back to the pool, and the server keeps
+/// serving.
+#[test]
+fn disconnect_mid_prefill_releases_request() {
+    let handle = serve_with_opts(
+        || {
+            Engine::new_host(
+                "tiny",
+                EngineCfg {
+                    sched: SchedCfg {
+                        b_cp: 32,
+                        step_tokens: 32,
+                        max_running: 2,
+                        ..SchedCfg::default()
+                    },
+                    pool_blocks: 512,
+                    block_tokens: 32,
+                    seed: 3,
+                    kv: KvLayout::Paged { prefix_cache: false },
+                    ..EngineCfg::default()
+                },
+            )
+        },
+        "127.0.0.1:0",
+        ServeOpts::default(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    // A prompt long enough that prefill takes many 32-token steps.
+    let long: String = "a long document that will still be prefilling when we vanish. "
+        .repeat(132)
+        .chars()
+        .take(8192)
+        .collect();
+    let mut c = Client::connect(addr).unwrap();
+    c.send(&WireRequest {
+        prompt: long,
+        max_new: 4,
+        policy: "quoka".into(),
+        budget: 256,
+        stream: true,
+        ..WireRequest::default()
+    })
+    .unwrap();
+    wait_for(addr, "prefill to start and lease pages", |s| {
+        stat(s, "prefill_tokens") > 0 && stat(s, "kv_bytes_resident") > 0
+    });
+    // Vanish. The reader thread sees EOF and the engine cancels the orphan.
+    drop(c);
+    let s = wait_for(addr, "cancel + full page release", |s| {
+        stat(s, "requests_cancelled") == 1 && stat(s, "kv_bytes_resident") == 0
+    });
+    assert_eq!(stat(&s, "requests_finished"), 0, "the orphan must not count as finished");
+
+    // The server is still healthy for the next client.
+    let mut c2 = Client::connect(addr).unwrap();
+    let r = c2
+        .request(&WireRequest {
+            prompt: "hello after the ghost".into(),
+            max_new: 2,
+            policy: "quoka".into(),
+            budget: 64,
+            ..WireRequest::default()
+        })
+        .unwrap();
+    assert_eq!(r.generated, 2);
+    handle.shutdown();
+}
+
+/// Malformed input draws targeted errors and never wedges the connection.
+#[test]
+fn malformed_frames_get_targeted_errors() {
+    let handle = serve_with_opts(
+        || Engine::new_host("tiny", host_cfg()),
+        "127.0.0.1:0",
+        ServeOpts::default(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+    let mut c = Client::connect(addr).unwrap();
+
+    // Garbage JSON.
+    let e = c.raw("{definitely not json").unwrap();
+    assert!(e.contains("error"), "got: {e}");
+    // The classic typo: an unknown field is rejected BY NAME instead of
+    // silently running without speculation.
+    let e = c.raw(r#"{"prompt": "x", "spec_gama": 4}"#).unwrap();
+    assert!(e.contains("spec_gama"), "got: {e}");
+    assert!(e.contains("unknown request field"), "got: {e}");
+    // Cancelling an id that does not exist.
+    let e = c.raw(r#"{"cmd": "cancel", "id": 424242}"#).unwrap();
+    assert!(e.contains("no in-flight request"), "got: {e}");
+    // Cancel without an id.
+    let e = c.raw(r#"{"cmd": "cancel"}"#).unwrap();
+    assert!(e.contains("numeric 'id'"), "got: {e}");
+
+    // Same connection still serves real work.
+    let r = c
+        .request(&WireRequest {
+            prompt: "still alive".into(),
+            max_new: 2,
+            policy: "quoka".into(),
+            budget: 32,
+            ..WireRequest::default()
+        })
+        .unwrap();
+    assert_eq!(r.generated, 2);
+    handle.shutdown();
+}
+
+/// A mid-stream `cancel` ends the stream with a `cancelled` done frame
+/// whose text matches exactly what was streamed.
+#[test]
+fn mid_stream_cancel_ends_with_cancelled_frame() {
+    let handle = serve_with_opts(
+        || Engine::new_host("tiny", host_cfg()),
+        "127.0.0.1:0",
+        ServeOpts::default(),
+    )
+    .unwrap();
+    let addr = handle.addr;
+    let mut c = Client::connect(addr).unwrap();
+    c.send(&WireRequest {
+        prompt: "count to a very large number".into(),
+        max_new: 64,
+        policy: "quoka".into(),
+        budget: 64,
+        stream: true,
+        ..WireRequest::default()
+    })
+    .unwrap();
+    let mut assembled = String::new();
+    let mut tokens_seen = 0usize;
+    let mut cancel_sent = false;
+    let done = loop {
+        match c.read_frame().unwrap() {
+            WireFrame::Token { id, tokens, delta, .. } => {
+                assembled.push_str(&delta);
+                tokens_seen += tokens;
+                if !cancel_sent {
+                    c.cancel(id).unwrap();
+                    cancel_sent = true;
+                }
+            }
+            WireFrame::Done(resp) => break resp,
+        }
+    };
+    assert!(done.cancelled, "final frame must be tagged cancelled");
+    assert_eq!(done.text, assembled, "done frame echoes exactly what was streamed");
+    assert_eq!(done.generated, tokens_seen, "token accounting matches the frames");
+    assert!(done.generated < 64, "the request must not have run to completion");
+    assert!(done.generated >= 1, "at least the pre-cancel token was served");
+    let s = wait_for(addr, "cancel counter", |s| stat(s, "requests_cancelled") == 1);
+    assert_eq!(stat(&s, "requests_finished"), 0);
+    handle.shutdown();
+}
+
+/// With `max_queue = 1` and a single running slot, a third submission is
+/// rejected with a backpressure error while the first two proceed.
+#[test]
+fn backpressure_rejects_when_admission_saturated() {
+    let handle = serve_with_opts(
+        || {
+            Engine::new_host(
+                "tiny",
+                EngineCfg {
+                    sched: SchedCfg {
+                        b_cp: 16,
+                        step_tokens: 16,
+                        max_running: 1,
+                        ..SchedCfg::default()
+                    },
+                    pool_blocks: 512,
+                    block_tokens: 16,
+                    seed: 5,
+                    ..EngineCfg::default()
+                },
+            )
+        },
+        "127.0.0.1:0",
+        ServeOpts { max_queue: 1, ..ServeOpts::default() },
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    // r1: long prompt, slow prefill — occupies the single running slot.
+    let mut c1 = Client::connect(addr).unwrap();
+    c1.send(&WireRequest {
+        prompt: "an occupant that holds the only running slot for a while. ".repeat(40),
+        max_new: 32,
+        policy: "quoka".into(),
+        budget: 128,
+        stream: true,
+        ..WireRequest::default()
+    })
+    .unwrap();
+    wait_for(addr, "r1 admitted", |s| {
+        s.get("pending").and_then(|v| v.as_usize()) == Some(1)
+            && s.get("queued").and_then(|v| v.as_usize()) == Some(0)
+    });
+
+    // r2: queues behind r1 (the one allowed waiter).
+    let mut c2 = Client::connect(addr).unwrap();
+    c2.send(&WireRequest {
+        prompt: "patient second request".into(),
+        max_new: 2,
+        policy: "quoka".into(),
+        budget: 32,
+        ..WireRequest::default()
+    })
+    .unwrap();
+    wait_for(addr, "r2 queued", |s| s.get("queued").and_then(|v| v.as_usize()) == Some(1));
+
+    // r3: the queue is full — rejected immediately with the marker flag.
+    let mut c3 = Client::connect(addr).unwrap();
+    let err = c3
+        .request(&WireRequest {
+            prompt: "one too many".into(),
+            max_new: 1,
+            policy: "quoka".into(),
+            budget: 32,
+            ..WireRequest::default()
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("server saturated"), "got: {err}");
+    let raw = c3.raw(r#"{"prompt": "one too many, raw", "max_new": 1}"#).unwrap();
+    let j = Json::parse(&raw).unwrap();
+    assert_eq!(j.get("backpressure").and_then(|v| v.as_bool()), Some(true), "got: {raw}");
+
+    // Dropping r1's connection cancels it; r2 gets the slot and finishes
+    // (its blocking reply is the next line on c2's socket).
+    drop(c1);
+    match c2.read_frame().unwrap() {
+        WireFrame::Done(resp) => {
+            assert_eq!(resp.generated, 2);
+            assert!(!resp.cancelled);
+        }
+        other => panic!("expected r2's blocking response, got {other:?}"),
+    }
+    let s = wait_for(addr, "r1 cancelled + r2 finished", |s| {
+        stat(s, "requests_cancelled") == 1 && stat(s, "requests_finished") == 1
+    });
+    assert_eq!(stat(&s, "requests_rejected"), 0, "backpressure is not an engine reject");
+    handle.shutdown();
+}

@@ -28,15 +28,20 @@
 #    prefill at workers=1 vs the full pool → BENCH_gemm.json (serial and
 #    parallel GFLOP/s, speedups, TTFT + phase shares; packed serial ==
 #    packed parallel asserted bitwise).
+# 7. Open-loop serving: `cargo bench --bench serving_load` — Poisson
+#    arrivals over the real TCP server (streaming, cancels, tenants,
+#    shared prefixes) → BENCH_serving.json (client + server TTFT/ITL
+#    p50/p99, queue wait, goodput, cancel latency).
 #
 # CI bench gate: the `bench` job in .github/workflows/ci.yml runs this
-# script on a CI-sized config, uploads the six JSONs as the
+# script on a CI-sized config, uploads the seven JSONs as the
 # `bench-results` artifact, and then runs `scripts/check_bench.py`, which
 # FAILS the job when tiled-vs-seed speedup, warm-vs-cold or
 # in-flight-vs-cold prefix TTFT ratio, batched-vs-serial decode
 # throughput, speculative-vs-plain decode throughput, int8-vs-fp32
-# decode throughput, or parallel-vs-serial GEMM speedup (waived on
-# runners with fewer than 4 cores) fall below absolute floors or regress beyond tolerance
+# decode throughput, parallel-vs-serial GEMM speedup (waived on
+# runners with fewer than 4 cores), or the serving TTFT p50/p99 tail
+# ratio fall below absolute floors or regress beyond tolerance
 # against the committed baselines in bench/baselines/ (bootstrap stubs
 # until the first CI artifacts are committed — see bench/baselines/README.md).
 #
@@ -47,6 +52,7 @@
 #   SPEC_OUT=/path/to.json    override the speculative-decode output location
 #   QUANT_OUT=/path/to.json   override the quantized-KV output location
 #   GEMM_OUT=/path/to.json    override the dense-GEMM output location
+#   SERVING_OUT=/path/to.json override the open-loop serving output location
 #   BENCH_CHECK=1             run the regression gate after the benches
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -58,6 +64,7 @@ export DECODE_OUT="${DECODE_OUT:-$PWD/BENCH_decode.json}"
 export SPEC_OUT="${SPEC_OUT:-$PWD/BENCH_spec.json}"
 export QUANT_OUT="${QUANT_OUT:-$PWD/BENCH_quant.json}"
 export GEMM_OUT="${GEMM_OUT:-$PWD/BENCH_gemm.json}"
+export SERVING_OUT="${SERVING_OUT:-$PWD/BENCH_serving.json}"
 
 cargo bench --manifest-path rust/Cargo.toml --bench micro_hotpath
 cargo bench --manifest-path rust/Cargo.toml --bench prefix_serving
@@ -65,8 +72,9 @@ cargo bench --manifest-path rust/Cargo.toml --bench decode_serving
 cargo bench --manifest-path rust/Cargo.toml --bench spec_serving
 cargo bench --manifest-path rust/Cargo.toml --bench quant_serving
 cargo bench --manifest-path rust/Cargo.toml --bench gemm_serving
+cargo bench --manifest-path rust/Cargo.toml --bench serving_load
 
-echo "bench_smoke: wrote $BENCH_OUT, $PREFIX_OUT, $DECODE_OUT, $SPEC_OUT, $QUANT_OUT and $GEMM_OUT"
+echo "bench_smoke: wrote $BENCH_OUT, $PREFIX_OUT, $DECODE_OUT, $SPEC_OUT, $QUANT_OUT, $GEMM_OUT and $SERVING_OUT"
 
 if [[ "${BENCH_CHECK:-0}" == "1" ]]; then
   python3 scripts/check_bench.py

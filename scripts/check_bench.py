@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Bench regression gate for CI.
 
-Reads the six bench artifacts written by scripts/bench_smoke.sh
+Reads the seven bench artifacts written by scripts/bench_smoke.sh
 
   BENCH_hotpath.json  — tiled-vs-seed chunk-attention kernel speedup
   BENCH_prefix.json   — warm-vs-cold and in-flight-vs-cold prefix TTFT
@@ -12,6 +12,10 @@ Reads the six bench artifacts written by scripts/bench_smoke.sh
                         shape; the floor is waived when the artifact
                         reports fewer than 4 cores — a 2x parallel
                         speedup is not achievable there)
+  BENCH_serving.json  — open-loop serving TTFT tail tightness: the
+                        p50/p99 ratio of the server's TTFT histogram
+                        (1.0 = flat; the floor keeps p99 within a
+                        bounded multiple of p50 under Poisson load)
 
 and fails (exit 1) when a headline metric
 
@@ -28,7 +32,7 @@ committed to bench/baselines/ to arm the relative gate.
 Environment overrides (floors): CHECK_BENCH_MIN_HOTPATH,
 CHECK_BENCH_MIN_PREFIX_WARM, CHECK_BENCH_MIN_PREFIX_INFLIGHT,
 CHECK_BENCH_MIN_DECODE, CHECK_BENCH_MIN_SPEC, CHECK_BENCH_MIN_QUANT,
-CHECK_BENCH_MIN_GEMM;
+CHECK_BENCH_MIN_GEMM, CHECK_BENCH_MIN_SERVING;
 relative tolerance: CHECK_BENCH_TOL (fraction, default 0.35 — CI runners
 are noisy).
 
@@ -56,6 +60,9 @@ FLOORS = {
     "spec-decode-speedup": env_float("CHECK_BENCH_MIN_SPEC", 1.5),
     "quant-decode-speedup": env_float("CHECK_BENCH_MIN_QUANT", 1.5),
     "gemm-parallel-speedup": env_float("CHECK_BENCH_MIN_GEMM", 2.0),
+    # TTFT p50/p99 under open-loop load: 0.02 means p99 may be at most
+    # 50x the median before the gate trips.
+    "serving-ttft-tail": env_float("CHECK_BENCH_MIN_SERVING", 0.02),
 }
 
 # The parallel-GEMM floor assumes enough cores to scale; below this the
@@ -121,6 +128,11 @@ def gather(bench_dir):
     out["gemm-parallel-speedup"] = (
         metric(gm, "parallel-speedup"),
         gm.get("config") if gm else None,
+    )
+    sv = load(os.path.join(bench_dir, "BENCH_serving.json"))
+    out["serving-ttft-tail"] = (
+        metric(sv, "ttft-p50-over-p99"),
+        sv.get("config") if sv else None,
     )
     return out
 
