@@ -81,6 +81,29 @@ def test_validate_catches_wake_without_adopt():
     assert any("adopt_pages" in p for p in problems)
 
 
+def test_validate_accepts_promote_in_place_of_adopt():
+    # Spill-tier promotion: the promote kick lands at submit (before the
+    # park) and a promoted waiter may wake with zero adopt_pages.
+    events = [e for e in good_trace() if e["ev"] != "adopt_pages"]
+    i = next(k for k, e in enumerate(events) if e["ev"] == "park_on_prefix")
+    events.insert(i, ev(events[i]["t_us"], 2, "promote", pages=3))
+    assert trace_report.validate(events) == []
+
+
+def test_waterfall_renders_tiering(capsys):
+    events = good_trace()
+    i = next(k for k, e in enumerate(events) if e["ev"] == "park_on_prefix")
+    events.insert(i, ev(events[i]["t_us"], 2, "promote", pages=3))
+    events.insert(i, ev(events[i]["t_us"], 0, "spill", pages=5))
+    rows = trace_report.waterfall(events)
+    by_id = {r["id"]: r for r in rows}
+    assert by_id[2]["promoted"] == 3
+    assert by_id[1]["promoted"] == 0
+    out = capsys.readouterr().out
+    assert "5 pages demoted to spill" in out
+    assert "3 promotion pages kicked" in out
+
+
 def test_validate_catches_timestamp_regression():
     events = good_trace()
     events[3]["t_us"] = 1  # earlier than its predecessor

@@ -1,0 +1,6 @@
+//! Tiered KV pool: warm-from-RAM vs warm-from-spill vs cold TTFT for a
+//! re-requested shared prefix under pool pressure (`BENCH_tiered.json`).
+
+fn main() {
+    quoka::bench::tiered::tiered_serving();
+}

@@ -12,6 +12,7 @@ pub mod spec;
 pub mod quant;
 pub mod gemm;
 pub mod serving;
+pub mod tiered;
 
 pub use crate::util::timing::{bench, heatmap, BenchCfg, Stats, Table};
 

@@ -1,0 +1,267 @@
+//! Tiered KV pool benchmark: the mmap-backed cold-page spill tier under
+//! the workload it exists for — a long shared prefix whose pages were
+//! evicted under pool pressure, then re-requested.
+//!
+//! Eight requests share a 12k-token prefix. Three arms, same prompts:
+//!
+//! * **warm-RAM** — ample pool, prefix cache resident: the upper bound
+//!   (pages never leave RAM).
+//! * **warm-spill** — tight pool + spill tier: filler traffic demotes the
+//!   prefix to the spill file; the re-requested batch promotes it back
+//!   through the async readahead instead of recomputing.
+//! * **cold** — tight pool, no spill: the same pressure hard-evicts the
+//!   prefix, so the batch recomputes the full prefill.
+//!
+//! Reports mean TTFT per arm, batch prefill tokens, promotion counts and
+//! the promote-wait distribution, and writes `BENCH_tiered.json`
+//! (override with `TIERED_OUT`) gated in CI by `scripts/check_bench.py`
+//! (floor: warm-spill TTFT at least 2x better than cold).
+
+use super::banner;
+use crate::coordinator::{Engine, EngineCfg, KvLayout, PolicySpec, SchedCfg};
+use crate::kvpool::{slot_stride, KvDtype, KvPool, PoolCfg};
+use crate::model::ModelConfig;
+use crate::util::Json;
+use crate::util::Rng;
+
+const PREFIX_TOKENS: usize = 12 * 1024;
+const SUFFIX_TOKENS: usize = 96;
+const N_REQUESTS: usize = 8;
+const MAX_NEW: usize = 4;
+const BLOCK_TOKENS: usize = 128;
+/// Ample pool: the whole working set stays resident (warm-RAM arm).
+const POOL_AMPLE: usize = 2048;
+/// Tight pool: one request fits (97 pages), the cached prefix does not
+/// survive the filler traffic.
+const POOL_TIGHT: usize = 128;
+const FILLERS: usize = 4;
+const FILLER_TOKENS: usize = 4096;
+/// Spill capacity in slots: the 96-page prefix plus every filler page
+/// that demotes while promotions make room.
+const SPILL_SLOTS: usize = 256;
+
+fn spill_cap_bytes() -> usize {
+    // One slot holds one checksummed page image of the bench model.
+    let mc = ModelConfig::preset("tiny").expect("tiny preset");
+    let probe = KvPool::new_with_dtype(
+        PoolCfg {
+            n_layers: mc.n_layers,
+            n_kv: mc.n_kv_heads,
+            d: mc.d_head,
+            block_tokens: BLOCK_TOKENS,
+            total_blocks: 1,
+        },
+        KvDtype::env_default(),
+    );
+    slot_stride(probe.page_image_bytes()) * SPILL_SLOTS
+}
+
+fn mk_engine(pool_blocks: usize, spill: Option<&std::path::Path>) -> Engine {
+    Engine::new_host(
+        "tiny",
+        EngineCfg {
+            sched: SchedCfg {
+                b_cp: 256,
+                step_tokens: 512,
+                max_running: N_REQUESTS,
+                ..SchedCfg::default()
+            },
+            pool_blocks,
+            block_tokens: BLOCK_TOKENS,
+            seed: 11,
+            kv: KvLayout::Paged { prefix_cache: true },
+            spill_path: spill.map(|p| p.to_path_buf()),
+            spill_cap_bytes: spill.map(|_| spill_cap_bytes()).unwrap_or(0),
+            ..EngineCfg::default()
+        },
+    )
+    .expect("tiny host engine")
+}
+
+fn prompt(prefix: &[u32], i: usize) -> Vec<u32> {
+    let mut rng = Rng::new(0x71E4ED + i as u64);
+    let mut p = prefix.to_vec();
+    p.extend((0..SUFFIX_TOKENS).map(|_| rng.below(240) as u32 + 1));
+    p
+}
+
+fn filler(i: usize) -> Vec<u32> {
+    let mut rng = Rng::new(0xF111E4 + i as u64 * 7919);
+    (0..FILLER_TOKENS).map(|_| rng.below(240) as u32 + 1).collect()
+}
+
+fn spec() -> PolicySpec {
+    PolicySpec { name: "quoka".into(), budget: 1024 }
+}
+
+/// One warmup request populates the prefix cache.
+fn warm_cache(e: &mut Engine, prefix: &[u32]) {
+    e.submit(prompt(prefix, 0), MAX_NEW, spec()).unwrap();
+    e.run_to_completion().unwrap();
+}
+
+/// Unrelated filler traffic under the tight pool: each admission evicts
+/// the cold prefix pages — demoting them when a spill tier is attached,
+/// destroying them when not.
+fn pressure(e: &mut Engine) {
+    for f in 0..FILLERS {
+        e.submit(filler(f), MAX_NEW, spec()).unwrap();
+        e.run_to_completion().unwrap();
+    }
+}
+
+/// The measured batch: every request re-uses the shared prefix. Returns
+/// (mean TTFT seconds, per-request generations sorted by id).
+fn run_batch(e: &mut Engine, prefix: &[u32]) -> (f64, Vec<Vec<u32>>) {
+    for i in 0..N_REQUESTS {
+        e.submit(prompt(prefix, i), MAX_NEW, spec()).unwrap();
+    }
+    let mut results = e.run_to_completion().unwrap();
+    assert_eq!(results.len(), N_REQUESTS);
+    results.sort_by_key(|r| r.id);
+    let mean_ttft = results.iter().map(|r| r.ttft_s).sum::<f64>() / results.len() as f64;
+    (mean_ttft, results.into_iter().map(|r| r.generated).collect())
+}
+
+/// The tiered-pool serving benchmark (see module docs).
+pub fn tiered_serving() -> crate::util::timing::Table {
+    banner(
+        "tiered_serving",
+        "serving §tiered-kv-pool",
+        "8 requests re-using a 12k-token prefix after pool-pressure eviction: \
+         resident / spill-promoted / recomputed.",
+    );
+    if !cfg!(unix) {
+        println!("tiered_serving: the spill tier needs unix mmap — skipping\n");
+        return crate::util::timing::Table::new(&["arm", "mean TTFT ms"]);
+    }
+    let mut rng = Rng::new(0x71E2ED);
+    let prefix: Vec<u32> = (0..PREFIX_TOKENS).map(|_| rng.below(240) as u32 + 1).collect();
+    let spill_path =
+        std::env::temp_dir().join(format!("quoka-tiered-{}.spill", std::process::id()));
+    let _ = std::fs::remove_file(&spill_path);
+
+    // Warm-RAM: ample pool, no pressure — the prefix never leaves RAM.
+    let mut ram = mk_engine(POOL_AMPLE, None);
+    warm_cache(&mut ram, &prefix);
+    let ram_warmup_prefill = ram.metrics.prefill_tokens;
+    let (ttft_ram, gen_ram) = run_batch(&mut ram, &prefix);
+    let ram_prefill = ram.metrics.prefill_tokens - ram_warmup_prefill;
+
+    // Warm-spill: tight pool + spill file — pressure demotes the prefix,
+    // the batch promotes it back off disk.
+    let mut sp = mk_engine(POOL_TIGHT, Some(&spill_path));
+    warm_cache(&mut sp, &prefix);
+    pressure(&mut sp);
+    assert!(
+        sp.radix.as_ref().unwrap().spilled_nodes() > 0,
+        "filler pressure must demote cached pages into the spill tier"
+    );
+    let sp_warmup_prefill = sp.metrics.prefill_tokens;
+    let (ttft_spill, gen_spill) = run_batch(&mut sp, &prefix);
+    let spill_prefill = sp.metrics.prefill_tokens - sp_warmup_prefill;
+    assert!(sp.metrics.promotions > 0, "the batch must be served by promotions, not recompute");
+    assert!(
+        (spill_prefill as usize) < PREFIX_TOKENS,
+        "spill-warm batch recomputed the prefix ({spill_prefill} prefill tokens) \
+         instead of promoting it"
+    );
+
+    // Cold: the same pressure with no spill tier hard-evicts the prefix —
+    // the batch pays the full prefill again.
+    let mut cold = mk_engine(POOL_TIGHT, None);
+    warm_cache(&mut cold, &prefix);
+    pressure(&mut cold);
+    let cold_warmup_prefill = cold.metrics.prefill_tokens;
+    let (ttft_cold, gen_cold) = run_batch(&mut cold, &prefix);
+    let cold_prefill = cold.metrics.prefill_tokens - cold_warmup_prefill;
+    assert!(
+        cold_prefill as usize >= PREFIX_TOKENS,
+        "the cold arm must recompute the evicted prefix"
+    );
+
+    // Tier transitions must never change the numerics.
+    assert_eq!(gen_ram, gen_spill, "spill-promoted generation differs from resident");
+    assert_eq!(gen_ram, gen_cold, "cold recompute differs from resident");
+
+    let speedup = if ttft_spill > 0.0 { ttft_cold / ttft_spill } else { 0.0 };
+    let mut table = crate::util::timing::Table::new(&[
+        "arm",
+        "mean TTFT ms",
+        "batch prefill tok",
+        "promotions",
+        "spilled pages",
+    ]);
+    table.row(vec![
+        "warm-RAM".into(),
+        format!("{:.1}", ttft_ram * 1e3),
+        format!("{ram_prefill}"),
+        "0".into(),
+        "0".into(),
+    ]);
+    table.row(vec![
+        "warm-spill".into(),
+        format!("{:.1}", ttft_spill * 1e3),
+        format!("{spill_prefill}"),
+        format!("{}", sp.metrics.promotions),
+        format!("{}", sp.metrics.spilled_pages),
+    ]);
+    table.row(vec![
+        "cold".into(),
+        format!("{:.1}", ttft_cold * 1e3),
+        format!("{cold_prefill}"),
+        "0".into(),
+        "0".into(),
+    ]);
+    table.print();
+    println!(
+        "expected shape: warm-spill TTFT sits between warm-RAM and cold — promotion \
+         reads {} page images off the mmap instead of recomputing {} prefill tokens\n",
+        PREFIX_TOKENS / BLOCK_TOKENS,
+        PREFIX_TOKENS
+    );
+
+    let out_path = std::env::var("TIERED_OUT").unwrap_or_else(|_| "BENCH_tiered.json".to_string());
+    let config = format!(
+        "prefix={PREFIX_TOKENS} suffix={SUFFIX_TOKENS} reqs={N_REQUESTS} \
+         block_tokens={BLOCK_TOKENS} pool_tight={POOL_TIGHT} fillers={FILLERS}x{FILLER_TOKENS} \
+         spill_slots={SPILL_SLOTS} policy=quoka budget=1024 preset=tiny"
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::str("tiered_serving")),
+        ("config", Json::str(config)),
+        ("ttft-ram-ms", Json::num(ttft_ram * 1e3)),
+        ("ttft-spill-ms", Json::num(ttft_spill * 1e3)),
+        ("ttft-cold-ms", Json::num(ttft_cold * 1e3)),
+        ("spill-warm-speedup", Json::num(speedup)),
+        (
+            "ram-warm-speedup",
+            Json::num(if ttft_ram > 0.0 { ttft_cold / ttft_ram } else { 0.0 }),
+        ),
+        ("prefill-tokens-ram-batch", Json::num(ram_prefill as f64)),
+        ("prefill-tokens-spill-batch", Json::num(spill_prefill as f64)),
+        ("prefill-tokens-cold-batch", Json::num(cold_prefill as f64)),
+        ("promotions", Json::num(sp.metrics.promotions as f64)),
+        ("spilled-pages", Json::num(sp.metrics.spilled_pages as f64)),
+        ("spill-bytes", Json::num(sp.metrics.spill_bytes as f64)),
+        (
+            "promote-wait-p50-ms",
+            Json::num(sp.metrics.promote_wait_hist.quantile_ms(0.50).unwrap_or(0.0)),
+        ),
+        (
+            "promote-wait-p99-ms",
+            Json::num(sp.metrics.promote_wait_hist.quantile_ms(0.99).unwrap_or(0.0)),
+        ),
+        ("ttft-spill-p50-ms", Json::num(sp.metrics.ttft_hist.quantile_ms(0.50).unwrap_or(0.0))),
+        ("ttft-spill-p99-ms", Json::num(sp.metrics.ttft_hist.quantile_ms(0.99).unwrap_or(0.0))),
+        ("ttft-cold-p50-ms", Json::num(cold.metrics.ttft_hist.quantile_ms(0.50).unwrap_or(0.0))),
+        ("ttft-cold-p99-ms", Json::num(cold.metrics.ttft_hist.quantile_ms(0.99).unwrap_or(0.0))),
+    ]);
+    match std::fs::write(&out_path, doc.to_string()) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+    drop(sp);
+    let _ = std::fs::remove_file(&spill_path);
+    table
+}

@@ -12,7 +12,9 @@ use super::kv_blocks::BlockAllocator;
 use super::metrics::Metrics;
 use super::request::{Phase, PolicySpec, Request, RequestResult, SeqEntry};
 use super::scheduler::{SchedCfg, Scheduler, WorkItem};
-use crate::kvpool::{policy_ns, KvDtype, KvPool, PoolCfg, RadixCache};
+use crate::kvpool::{
+    policy_ns, slot_stride, KvDtype, KvPool, PoolCfg, PromoteDone, Promoter, RadixCache, SpillFile,
+};
 use crate::model::{DecodeKv, DecodeSeq, HostModel, ModelConfig, SeqState, Weights};
 use crate::obs::{self, TraceEventKind, Tracer};
 use crate::runtime::exec::{AttnMode, PjrtBackend, PjrtSeq};
@@ -93,6 +95,16 @@ pub struct EngineCfg {
     /// auto-detected `available_parallelism - 1`. Pinned at engine
     /// construction, before the first forward pass sizes the shared pool.
     pub workers: usize,
+    /// Cold-tier spill file (`--kv-spill`): radix-cached pages evicted
+    /// under pool pressure are demoted to this mmap-backed file instead
+    /// of destroyed, and promoted back on a radix hit. Requires the
+    /// paged prefix cache; `None` disables the tier.
+    pub spill_path: Option<std::path::PathBuf>,
+    /// Spill file capacity in bytes (`--kv-spill-cap`). Must be a whole
+    /// number of page slots — engine construction hard-errors otherwise
+    /// (a slot is the checksummed page image rounded to 64 bytes; see
+    /// [`slot_stride`]).
+    pub spill_cap_bytes: usize,
 }
 
 impl Default for EngineCfg {
@@ -106,8 +118,20 @@ impl Default for EngineCfg {
             spec: SpecCfg::off(),
             kv_dtype: KvDtype::env_default(),
             workers: 0,
+            spill_path: None,
+            spill_cap_bytes: 0,
         }
     }
+}
+
+/// One in-flight background promotion: the radix node (and its liveness
+/// generation) a spill slot will be restored into, plus every sequence
+/// parked on the result.
+struct PendingPromotion {
+    node: usize,
+    gen: u64,
+    waiters: Vec<u64>,
+    t_kick: Instant,
 }
 
 /// The engine.
@@ -134,6 +158,19 @@ pub struct Engine {
     /// Lifecycle event ring ([`crate::obs::tracer`]). Disabled (and
     /// unallocated) by default; [`Engine::enable_tracing`] turns it on.
     pub tracer: Tracer,
+    /// Cold spill tier (paged prefix-cache mode with `--kv-spill` only):
+    /// demoted page images live here until promoted back or dropped.
+    spill: Option<SpillFile>,
+    /// Background promotion thread staging spilled slots back into RAM.
+    promoter: Option<Promoter>,
+    /// In-flight promotions by spill slot.
+    promos: HashMap<u32, PendingPromotion>,
+    /// Completed promotions waiting for a free RAM page. Applying a
+    /// promotion consumes one page and each follower adoption releases
+    /// one reservation page back, so under full-pool pressure the two
+    /// drain in lockstep across steps — a completion that cannot get a
+    /// page *this* step is retried, never dropped.
+    promo_backlog: Vec<PromoteDone>,
     results: Vec<RequestResult>,
     next_id: u64,
 }
@@ -143,16 +180,16 @@ impl Engine {
     pub fn new_host(preset: &str, cfg: EngineCfg) -> Result<Engine> {
         let mc = ModelConfig::preset(preset)?;
         let model = HostModel::new(Weights::generate(&mc, cfg.seed));
-        Ok(Self::with_backend(Backend::Host(model), cfg))
+        Self::with_backend(Backend::Host(model), cfg)
     }
 
     /// PJRT-backend engine over an artifact directory.
     pub fn new_pjrt(artifact_dir: &str, cfg: EngineCfg) -> Result<Engine> {
         let be = PjrtBackend::load_lazy(artifact_dir, cfg.seed)?;
-        Ok(Self::with_backend(Backend::Pjrt(Box::new(be)), cfg))
+        Self::with_backend(Backend::Pjrt(Box::new(be)), cfg)
     }
 
-    pub fn with_backend(backend: Backend, mut cfg: EngineCfg) -> Engine {
+    pub fn with_backend(backend: Backend, mut cfg: EngineCfg) -> Result<Engine> {
         // Pin the fan-out worker count before the first forward pass
         // lazily sizes the shared pool (0 = QUOKA_WORKERS / auto).
         if cfg.workers > 0 {
@@ -224,7 +261,41 @@ impl Engine {
             KvLayout::Paged { prefix_cache: true } => Some(RadixCache::new(cfg.block_tokens)),
             _ => None,
         };
-        Engine {
+        // Cold spill tier. A misconfigured capacity is a hard error — a
+        // cap that is not a whole number of page slots silently strands
+        // the remainder, so it is almost certainly a typo. A path whose
+        // filesystem lacks mmap write-back support, by contrast, degrades
+        // to no-spill with a warning (the PJRT-downgrade pattern): the
+        // engine still serves, just without a cold tier.
+        let mut spill = None;
+        if let Some(path) = cfg.spill_path.as_deref() {
+            if let (Some(pool), true) = (&pool, radix.is_some()) {
+                let payload = pool.page_image_bytes();
+                let slot = slot_stride(payload);
+                anyhow::ensure!(
+                    cfg.spill_cap_bytes > 0 && cfg.spill_cap_bytes % slot == 0,
+                    "--kv-spill-cap {} is not a whole number of {slot}-byte page slots \
+                     (one slot per {}-token page image); use a multiple of {slot}",
+                    cfg.spill_cap_bytes,
+                    cfg.block_tokens,
+                );
+                match SpillFile::open(path, cfg.spill_cap_bytes, payload) {
+                    Ok(sf) => spill = Some(sf),
+                    Err(e) => eprintln!(
+                        "quoka: --kv-spill {}: {e:#}; the path lacks mmap write-back \
+                         support — running without a cold KV tier",
+                        path.display()
+                    ),
+                }
+            } else {
+                eprintln!(
+                    "quoka: --kv-spill requires the paged prefix cache \
+                     (--prefix-cache); running without a cold KV tier"
+                );
+            }
+        }
+        let promoter = spill.as_ref().map(|sf| Promoter::spawn(sf.reader()));
+        Ok(Engine {
             backend,
             sched: Scheduler::new(cfg.sched),
             blocks: BlockAllocator::new(cfg.pool_blocks, cfg.block_tokens),
@@ -239,9 +310,19 @@ impl Engine {
             ctx: SelectCtx::new(cfg.seed ^ 0xE1),
             metrics: Metrics::default(),
             tracer: Tracer::disabled(),
+            spill,
+            promoter,
+            promos: HashMap::new(),
+            promo_backlog: Vec::new(),
             results: Vec::new(),
             next_id: 1,
-        }
+        })
+    }
+
+    /// The cold spill tier, when configured (`--kv-spill`); test and
+    /// bench hook for slot-occupancy assertions.
+    pub fn spill(&self) -> Option<&SpillFile> {
+        self.spill.as_ref()
     }
 
     /// Turn on lifecycle tracing with a ring of `capacity` events
@@ -460,12 +541,58 @@ impl Engine {
                     }
                 }
             }
+            // Spill-tier readahead: when the cached chain continues past
+            // the resident match with demoted pages, kick their async
+            // promotion now — at submit, before admission — and park the
+            // sequence until they land. The fp32 scoring metadata never
+            // left RAM, so only the page images come off disk; each
+            // promotion flips its node back to `Resident` and the parked
+            // sequence adopts the pages through the normal follower poll.
+            let mut promo_target = matched_pages;
+            if self.spill.is_some() && self.promoter.is_some() {
+                let run = radix.spilled_run(ns, &entry.req.tokens, matched_pages);
+                // Grid-quantized like the resident match: promoting a
+                // tail this sequence could never resume from would spend
+                // RAM on pages it will not adopt.
+                let usable = run.len() - run.len() % grid;
+                if usable > 0 {
+                    let sp = self.spill.as_mut().unwrap();
+                    let promoter = self.promoter.as_ref().unwrap();
+                    for &(node, gen, slot) in &run[..usable] {
+                        match self.promos.entry(slot) {
+                            std::collections::hash_map::Entry::Occupied(mut o) => {
+                                o.get_mut().waiters.push(id);
+                            }
+                            std::collections::hash_map::Entry::Vacant(v) => {
+                                sp.pin(slot);
+                                promoter.request(slot);
+                                v.insert(PendingPromotion {
+                                    node,
+                                    gen,
+                                    waiters: vec![id],
+                                    t_kick: Instant::now(),
+                                });
+                            }
+                        }
+                        entry.promote_pending += 1;
+                    }
+                    promo_target = matched_pages + usable;
+                    self.tracer.record(id, TraceEventKind::Promote { pages: usable as u32 });
+                }
+            }
             if let Some((target, lid)) = best {
                 entry.waiting_on = Some(lid);
-                entry.wait_pages = target;
+                entry.wait_pages = target.max(promo_target);
                 entry.phase = Phase::WaitingOnPrefix { next: entry.cached_tokens };
                 self.metrics.inflight_followers += 1;
                 self.tracer.record(id, TraceEventKind::ParkOnPrefix { on: lid });
+            } else if promo_target > matched_pages {
+                // Parked on the spill tier alone: no producing leader
+                // (`waiting_on == None`) — `promote_pending` is what keeps
+                // the sequence in WaitingOnPrefix until the pages land.
+                entry.wait_pages = promo_target;
+                entry.phase = Phase::WaitingOnPrefix { next: entry.cached_tokens };
+                self.tracer.record(id, TraceEventKind::ParkOnPrefix { on: 0 });
             }
         }
         self.seqs.insert(id, entry);
@@ -544,6 +671,8 @@ impl Engine {
         if let Some(pool) = &self.pool {
             self.metrics.note_kv_resident(pool.resident_bytes(self.blocks.leased_blocks()));
         }
+        // Unpublishing can remove spilled nodes too — return their slots.
+        self.drain_freed_slots();
         // The empty generation IS the unserved sentinel (the only signal
         // `RequestResult` carries): a decode-phase cancel must not hand
         // back a truncated generation that reads as a completed request.
@@ -632,7 +761,12 @@ impl Engine {
                 }
             }
             let cursor = entry.cached_tokens;
-            if cursor / bt >= entry.wait_pages || !producing {
+            // Wake once the wait window is covered, or once there is
+            // nothing left to wait for: no producing leader AND no
+            // promotion still in flight (a spill-parked sequence has
+            // `waiting_on == None` from the start — `promote_pending` is
+            // its park signal).
+            if cursor / bt >= entry.wait_pages || (!producing && entry.promote_pending == 0) {
                 // Wake. The cursor is on the deterministic chunk grid by
                 // construction (match, adoption and the wait target are
                 // all quantized to [`Engine::grid_pages`]), so the resumed
@@ -653,8 +787,128 @@ impl Engine {
         std::mem::take(&mut self.results)
     }
 
+    /// Apply every completed background promotion: restore the verified
+    /// page image into a freshly leased RAM page, flip the radix node
+    /// back to `Resident`, and release the parked waiters' pending
+    /// counts. A promotion that fails — checksum mismatch, node dropped
+    /// or re-evicted since the kick, no RAM page obtainable — drops the
+    /// unrecoverable spilled subtree; its waiters wake through the normal
+    /// follower poll and recompute the tail like a producer abort.
+    fn apply_promotions(&mut self) {
+        if self.promoter.is_none() {
+            return;
+        }
+        let mut queue = std::mem::take(&mut self.promo_backlog);
+        while let Some(done) = self.promoter.as_ref().unwrap().try_recv() {
+            queue.push(done);
+        }
+        let mut queue = queue.into_iter();
+        for done in queue.by_ref() {
+            if let Some(deferred) = self.apply_one_promotion(done) {
+                // No RAM page this step: follower adoptions will free
+                // reservation pages — retry the rest next step, in order.
+                self.promo_backlog.push(deferred);
+                break;
+            }
+        }
+        self.promo_backlog.extend(queue);
+        self.drain_freed_slots();
+    }
+
+    /// Apply one completed promotion; returns it back when no RAM page
+    /// could be obtained (retry next step). Any other failure — checksum
+    /// error or a node the tree dropped/re-evicted since the kick — is
+    /// terminal and drops the unrecoverable spilled subtree.
+    fn apply_one_promotion(&mut self, done: PromoteDone) -> Option<PromoteDone> {
+        let slot = done.slot;
+        if !self.promos.contains_key(&slot) {
+            // Nothing waiting (tier raced a teardown): just release the pin.
+            if let Some(sp) = self.spill.as_mut() {
+                sp.unpin(slot);
+            }
+            return None;
+        }
+        if done.bytes.is_ok() {
+            // A promoted page is charged like any reservation: its RAM
+            // page comes off the free list, demoting colder pages first
+            // when the pool is at pressure.
+            if self.blocks.free_blocks() == 0 {
+                let pool = self.pool.as_mut().expect("promotion without a pool");
+                let radix = self.radix.as_mut().expect("promotion without a radix cache");
+                radix.evict_until_spill(
+                    1,
+                    pool,
+                    &mut self.blocks,
+                    self.spill.as_mut(),
+                    &mut self.tracer,
+                );
+            }
+            if self.blocks.free_blocks() == 0 {
+                return Some(done); // keep the pin and the pending entry
+            }
+        }
+        if let Some(sp) = self.spill.as_mut() {
+            sp.unpin(slot);
+        }
+        let p = self.promos.remove(&slot).unwrap();
+        let pool = self.pool.as_mut().expect("promotion without a pool");
+        let radix = self.radix.as_mut().expect("promotion without a radix cache");
+        let mut promoted = false;
+        if let Ok(img) = &done.bytes {
+            if let Some(pages) = self.blocks.alloc(1) {
+                let b = pages[0];
+                pool.adopt_new(&pages);
+                let ok = pool.restore_page_image(b, img).is_ok()
+                    && radix.promote_node(p.node, p.gen, slot, b);
+                if ok {
+                    promoted = true;
+                    self.metrics
+                        .note_kv_resident(pool.resident_bytes(self.blocks.leased_blocks()));
+                } else {
+                    // Stale node: the tree moved on — hand the page back.
+                    pool.release_block(b, &mut self.blocks);
+                }
+            }
+        }
+        if !promoted {
+            radix.drop_spilled_subtree(p.node, p.gen);
+        }
+        let wait = p.t_kick.elapsed();
+        for id in p.waiters {
+            self.metrics.promote_wait_hist.record(wait);
+            if let Some(e) = self.seqs.get_mut(&id) {
+                e.promote_pending = e.promote_pending.saturating_sub(1);
+            }
+        }
+        None
+    }
+
+    /// Hand slots the radix tree released (promoted nodes, dropped
+    /// subtrees, hard-evicted or unpublished spilled nodes) back to the
+    /// spill file's free list and refresh the spill-tier gauges. Called
+    /// after every pass that can touch spilled nodes; a slot still pinned
+    /// by an in-flight read is deferred inside the spill file until its
+    /// unpin.
+    fn drain_freed_slots(&mut self) {
+        let Some(sp) = self.spill.as_mut() else {
+            return;
+        };
+        if let Some(radix) = self.radix.as_mut() {
+            for slot in radix.take_freed_slots() {
+                sp.free_slot(slot);
+            }
+            self.metrics.spilled_pages = radix.stats.spilled_blocks;
+            self.metrics.promotions = radix.stats.promoted_blocks;
+        }
+        self.metrics.spill_bytes = sp.used_bytes();
+    }
+
     /// Execute one engine step. Returns false when fully idle.
     pub fn step(&mut self) -> Result<bool> {
+        // Land completed background promotions FIRST: their pages become
+        // adoptable in this step's follower poll, and the slots they free
+        // are reusable by this step's demotions.
+        self.apply_promotions();
         // Reject requests that can never fit the pool (otherwise an
         // unfittable admission candidate would wedge the queue forever).
         // The whole queue is swept, not just the front: fair-share
@@ -695,11 +949,18 @@ impl Engine {
                 if let Some(cand) = self.sched.admission_candidate() {
                     let need = self.seqs[&cand].residual_blocks(&self.blocks);
                     if need > self.blocks.free_blocks() {
-                        radix.evict_until_traced(need, pool, &mut self.blocks, &mut self.tracer);
+                        radix.evict_until_spill(
+                            need,
+                            pool,
+                            &mut self.blocks,
+                            self.spill.as_mut(),
+                            &mut self.tracer,
+                        );
                     }
                 }
             }
         }
+        self.drain_freed_slots();
         let plan = self.sched.plan_traced(&mut self.seqs, &mut self.blocks, &mut self.tracer);
         // Materialize backend state for newly admitted sequences; in paged
         // mode, adopt the freshly leased pages (refcount 1, zeroed
@@ -735,6 +996,23 @@ impl Engine {
             // the moment their producer stops producing).
             let parked =
                 self.seqs.values().any(|e| matches!(e.phase, Phase::WaitingOnPrefix { .. }));
+            // A step idled by in-flight promotions blocks briefly on the
+            // promoter channel instead of spinning: whatever lands is
+            // applied now, so the follower poll of the NEXT step adopts
+            // it — the park→adopt→wake latency is disk time, not a
+            // busy-wait race.
+            if parked && self.seqs.values().any(|e| e.promote_pending > 0) {
+                if let Some(done) = self
+                    .promoter
+                    .as_ref()
+                    .and_then(|p| p.recv_timeout(std::time::Duration::from_millis(1)))
+                {
+                    if let Some(deferred) = self.apply_one_promotion(done) {
+                        self.promo_backlog.push(deferred);
+                    }
+                    self.drain_freed_slots();
+                }
+            }
             return Ok(!self.seqs.is_empty() && (!self.sched.waiting.is_empty() || parked));
         }
 
@@ -859,6 +1137,9 @@ impl Engine {
                 .record_finish(r.ttft_s, r.tpot_s, entry.generated.len() > 1);
             self.results.push(r);
         }
+        // Mid-step demotions/evictions (decode-path pressure) may have
+        // released spill slots after the planning-time drain.
+        self.drain_freed_slots();
         Ok(!self.seqs.is_empty())
     }
 
@@ -1083,7 +1364,13 @@ impl Engine {
         if !ok {
             if let (Some(pool), Some(radix)) = (self.pool.as_mut(), self.radix.as_mut()) {
                 let missing = self.blocks.blocks_for(need).saturating_sub(lease.len());
-                radix.evict_until_traced(missing, pool, &mut self.blocks, &mut self.tracer);
+                radix.evict_until_spill(
+                    missing,
+                    pool,
+                    &mut self.blocks,
+                    self.spill.as_mut(),
+                    &mut self.tracer,
+                );
             }
             ok = self.blocks.ensure(&mut lease, need);
         }
@@ -1394,9 +1681,8 @@ mod tests {
                 block_tokens: 16,
                 seed: 1,
                 kv: KvLayout::Private,
-                spec: SpecCfg::off(),
                 kv_dtype,
-                workers: 0,
+                ..EngineCfg::default()
             },
         )
         .unwrap()
@@ -1415,9 +1701,8 @@ mod tests {
                 block_tokens: 16,
                 seed: 1,
                 kv: KvLayout::Paged { prefix_cache },
-                spec: SpecCfg::off(),
                 kv_dtype,
-                workers: 0,
+                ..EngineCfg::default()
             },
         )
         .unwrap()
@@ -1512,9 +1797,7 @@ mod tests {
                 block_tokens: 16,
                 seed: 1,
                 kv: KvLayout::Private,
-                spec: SpecCfg::off(),
-                kv_dtype: KvDtype::env_default(),
-                workers: 0,
+                ..EngineCfg::default()
             },
         )
         .unwrap();
@@ -1582,9 +1865,7 @@ mod tests {
                 block_tokens: 16,
                 seed: 1,
                 kv: KvLayout::Paged { prefix_cache: true },
-                spec: SpecCfg::off(),
-                kv_dtype: KvDtype::env_default(),
-                workers: 0,
+                ..EngineCfg::default()
             },
         )
         .unwrap();
@@ -1697,9 +1978,7 @@ mod tests {
                     block_tokens: 16,
                     seed: 1,
                     kv: KvLayout::Paged { prefix_cache: true },
-                    spec: SpecCfg::off(),
-                    kv_dtype: KvDtype::env_default(),
-                    workers: 0,
+                    ..EngineCfg::default()
                 },
             )
             .unwrap()

@@ -43,8 +43,21 @@ pub struct Metrics {
     /// Peak KV bytes resident across sequences.
     pub peak_kv_bytes: usize,
     /// Current physical residency of the shared paged pool (leased pages ×
-    /// page bytes, metadata included); 0 in private-buffer mode.
+    /// page bytes, metadata included); 0 in private-buffer mode. **RAM
+    /// tier only**: a demoted page releases its lease before its spill
+    /// slot is charged to `spill_bytes`, so a page is never counted in
+    /// both tiers at once.
     pub pool_resident_bytes: usize,
+    /// Pages demoted to the mmap spill tier (cumulative; `kvpool/spill.rs`).
+    pub spilled_pages: u64,
+    /// Current payload bytes parked in the spill tier (gauge — rises on
+    /// demote, falls on promote / slot reuse).
+    pub spill_bytes: usize,
+    /// Pages promoted back from the spill tier into the pool (cumulative).
+    pub promotions: u64,
+    /// Submit→pages-resident wait of promotion-parked requests (one
+    /// sample per request whose prefix came off the spill tier).
+    pub promote_wait_hist: LatencyHist,
     /// Prefix-cache lookups (one per submitted request in paged+prefix
     /// mode) and the prompt tokens they covered.
     pub prefix_lookups: u64,
@@ -336,6 +349,17 @@ impl Metrics {
                 self.prefix_bytes_saved,
             ));
         }
+        if self.spilled_pages > 0 || self.promotions > 0 {
+            s.push_str(&format!(
+                " spilled_pages={} spill_bytes={} promotions={}",
+                self.spilled_pages, self.spill_bytes, self.promotions,
+            ));
+            if let Some((p50, p90, p99)) = self.promote_wait_hist.p50_p90_p99_ms() {
+                s.push_str(&format!(
+                    " promote_wait_p50/p90/p99={p50:.1}/{p90:.1}/{p99:.1}ms"
+                ));
+            }
+        }
         if self.inflight_followers > 0 || self.inflight_published_pages > 0 {
             s.push_str(&format!(
                 " inflight_followers={} inflight_adopted_tok={} inflight_published_pages={}",
@@ -425,6 +449,9 @@ impl Metrics {
             ("mean_tpot_ms", Json::num(self.mean_tpot_s() * 1e3)),
             ("kv_bytes_resident", Json::num(self.pool_resident_bytes as f64)),
             ("kv_bytes_peak", Json::num(self.peak_kv_bytes as f64)),
+            ("spilled_pages", Json::num(self.spilled_pages as f64)),
+            ("spill_bytes", Json::num(self.spill_bytes as f64)),
+            ("promotions", Json::num(self.promotions as f64)),
             ("prefix_lookups", Json::num(self.prefix_lookups as f64)),
             ("prefix_hits", Json::num(self.prefix_hits as f64)),
             ("prefix_hit_tokens", Json::num(self.prefix_hit_tokens as f64)),
@@ -457,6 +484,7 @@ impl Metrics {
             ("queue_wait", hist(&self.queue_wait_hist)),
             ("chunk", hist(&self.chunk_hist)),
             ("verify", hist(&self.verify_hist)),
+            ("promote_wait", hist(&self.promote_wait_hist)),
             ("phase_us", phases),
         ])
     }
@@ -507,6 +535,16 @@ impl Metrics {
             "Draft tokens accepted by verification.",
             self.spec_accepted_tokens as f64,
         );
+        counter(
+            "spilled_pages_total",
+            "KV pages demoted to the spill tier.",
+            self.spilled_pages as f64,
+        );
+        counter(
+            "promotions_total",
+            "KV pages promoted back from the spill tier.",
+            self.promotions as f64,
+        );
         let mut gauge = |name: &str, help: &str, v: f64| {
             out.push_str(&format!(
                 "# HELP quoka_{name} {help}\n# TYPE quoka_{name} gauge\nquoka_{name} {v}\n"
@@ -521,6 +559,11 @@ impl Metrics {
             "kv_bytes_peak",
             "Peak pool residency, bytes.",
             self.peak_kv_bytes as f64,
+        );
+        gauge(
+            "spill_bytes",
+            "Current spill-tier payload, bytes.",
+            self.spill_bytes as f64,
         );
         gauge(
             "tokens_per_s",
@@ -544,6 +587,7 @@ impl Metrics {
             ("queue_wait", &self.queue_wait_hist),
             ("chunk", &self.chunk_hist),
             ("verify", &self.verify_hist),
+            ("promote_wait", &self.promote_wait_hist),
         ] {
             out.push_str(&format!(
                 "# HELP quoka_{name}_seconds Latency summary.\n# TYPE quoka_{name}_seconds summary\n"

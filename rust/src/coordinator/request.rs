@@ -100,6 +100,12 @@ pub struct SeqEntry {
     /// whole pages, capped so at least one token is always left to
     /// prefill).
     pub wait_pages: usize,
+    /// Spill-tier promotions still in flight for this sequence's prefix.
+    /// While non-zero the sequence stays parked in
+    /// [`Phase::WaitingOnPrefix`] even with no producing leader
+    /// (`waiting_on == None`): the pages it waits for are coming off
+    /// disk, not off another sequence's prefill.
+    pub promote_pending: usize,
     /// Pages of this sequence's own prompt already in the radix cache
     /// (publish watermark; starts at the submit-time match and advances as
     /// completed pages are published mid-prefill).
@@ -130,6 +136,7 @@ impl SeqEntry {
             cached_tokens: 0,
             waiting_on: None,
             wait_pages: 0,
+            promote_pending: 0,
             published_pages: 0,
             radix_cursor: None,
             spec_drafted: 0,

@@ -78,6 +78,8 @@
 
 pub mod pool;
 pub mod radix;
+pub mod spill;
 
 pub use pool::{KvDtype, KvPool, PagedKv, PoolCfg};
-pub use radix::{policy_ns, RadixCache, RadixCursor, RadixStats};
+pub use radix::{policy_ns, PageRef, RadixCache, RadixCursor, RadixStats};
+pub use spill::{slot_stride, PromoteDone, Promoter, SpillFile};

@@ -706,6 +706,135 @@ impl KvPool {
     pub fn resident_bytes(&self, leased_pages: usize) -> usize {
         leased_pages * self.page_bytes()
     }
+
+    // ------------------------------------------------------- page images
+    //
+    // The spill tier (`kvpool/spill.rs`) demotes cold prefix pages to an
+    // mmapped file and promotes them back later, possibly into a different
+    // page id. The unit of exchange is a *page image*: every byte of
+    // per-page state across all layers, serialized in a fixed order so a
+    // demote → promote round trip is bit-identical for both row
+    // representations (codes + scales under int8, raw rows under f32,
+    // inverse norms, key sums and fill counters in either).
+
+    /// Serialized size of one page image (fixed for a given pool config).
+    pub fn page_image_bytes(&self) -> usize {
+        let c = &self.cfg;
+        let pf = self.page_floats();
+        let nf = c.n_kv * c.block_tokens;
+        let sf = c.n_kv * c.d;
+        let rows = 2 * pf * self.dtype.bytes();
+        let scales = match self.dtype {
+            KvDtype::F32 => 0,
+            KvDtype::Int8 => 2 * nf * 4,
+        };
+        c.n_layers * (rows + scales + nf * 4 + sf * 4 + 2)
+    }
+
+    /// Serialize page `b` into `out` (cleared first). Layout per layer:
+    /// K rows, V rows (f32 or int8 per the pool dtype), K/V dequant scales
+    /// (int8 only), inverse norms, key sums, fill counter — all
+    /// little-endian.
+    pub fn extract_page_image(&self, b: u32, out: &mut Vec<u8>) {
+        let bi = b as usize;
+        assert!(bi < self.capacity_pages, "image of never-ensured page {b}");
+        let pf = self.page_floats();
+        let nf = self.cfg.n_kv * self.cfg.block_tokens;
+        let sf = self.cfg.n_kv * self.cfg.d;
+        out.clear();
+        out.reserve(self.page_image_bytes());
+        let push_f32 = |out: &mut Vec<u8>, s: &[f32]| {
+            for &x in s {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        };
+        for lp in &self.layers {
+            match self.dtype {
+                KvDtype::F32 => {
+                    push_f32(out, &lp.k[bi * pf..(bi + 1) * pf]);
+                    push_f32(out, &lp.v[bi * pf..(bi + 1) * pf]);
+                }
+                KvDtype::Int8 => {
+                    out.extend(lp.kq[bi * pf..(bi + 1) * pf].iter().map(|&x| x as u8));
+                    out.extend(lp.vq[bi * pf..(bi + 1) * pf].iter().map(|&x| x as u8));
+                    push_f32(out, &lp.k_scale[bi * nf..(bi + 1) * nf]);
+                    push_f32(out, &lp.v_scale[bi * nf..(bi + 1) * nf]);
+                }
+            }
+            push_f32(out, &lp.inv_norm[bi * nf..(bi + 1) * nf]);
+            push_f32(out, &lp.key_sums[bi * sf..(bi + 1) * sf]);
+            out.extend_from_slice(&lp.fill[bi].to_le_bytes());
+        }
+        debug_assert_eq!(out.len(), self.page_image_bytes());
+    }
+
+    /// The fp32 per-(layer, head) key-sum vectors of page `b`, concatenated
+    /// — the QUOKA scan's page mean-key metadata. The spill tier keeps this
+    /// slice resident in RAM when the page itself is demoted, so scoring a
+    /// spilled prefix never touches disk.
+    pub fn page_key_sums(&self, b: u32) -> Vec<f32> {
+        let bi = b as usize;
+        let sf = self.cfg.n_kv * self.cfg.d;
+        let mut out = Vec::with_capacity(self.cfg.n_layers * sf);
+        for lp in &self.layers {
+            out.extend_from_slice(&lp.key_sums[bi * sf..(bi + 1) * sf]);
+        }
+        out
+    }
+
+    /// Restore page `b` from an image produced by
+    /// [`KvPool::extract_page_image`] (possibly under a different page id).
+    /// The page must be exclusively owned and freshly adopted
+    /// ([`KvPool::adopt_new`] — which also ensures storage). Errors on a
+    /// size mismatch (an image from a different pool geometry or dtype).
+    pub fn restore_page_image(&mut self, b: u32, img: &[u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            img.len() == self.page_image_bytes(),
+            "page image is {} bytes, pool expects {}",
+            img.len(),
+            self.page_image_bytes()
+        );
+        let bi = b as usize;
+        assert!(self.refcount[bi] == 1, "restore into shared/unowned page {b}");
+        self.ensure_page(bi);
+        let pf = self.page_floats();
+        let nf = self.cfg.n_kv * self.cfg.block_tokens;
+        let sf = self.cfg.n_kv * self.cfg.d;
+        let dtype = self.dtype;
+        let mut off = 0usize;
+        let take_f32 = |img: &[u8], off: &mut usize, dst: &mut [f32]| {
+            for x in dst.iter_mut() {
+                *x = f32::from_le_bytes(img[*off..*off + 4].try_into().unwrap());
+                *off += 4;
+            }
+        };
+        for lp in &mut self.layers {
+            match dtype {
+                KvDtype::F32 => {
+                    take_f32(img, &mut off, &mut lp.k[bi * pf..(bi + 1) * pf]);
+                    take_f32(img, &mut off, &mut lp.v[bi * pf..(bi + 1) * pf]);
+                }
+                KvDtype::Int8 => {
+                    for x in lp.kq[bi * pf..(bi + 1) * pf].iter_mut() {
+                        *x = img[off] as i8;
+                        off += 1;
+                    }
+                    for x in lp.vq[bi * pf..(bi + 1) * pf].iter_mut() {
+                        *x = img[off] as i8;
+                        off += 1;
+                    }
+                    take_f32(img, &mut off, &mut lp.k_scale[bi * nf..(bi + 1) * nf]);
+                    take_f32(img, &mut off, &mut lp.v_scale[bi * nf..(bi + 1) * nf]);
+                }
+            }
+            take_f32(img, &mut off, &mut lp.inv_norm[bi * nf..(bi + 1) * nf]);
+            take_f32(img, &mut off, &mut lp.key_sums[bi * sf..(bi + 1) * sf]);
+            lp.fill[bi] = u16::from_le_bytes(img[off..off + 2].try_into().unwrap());
+            off += 2;
+        }
+        debug_assert_eq!(off, img.len());
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -12,6 +12,17 @@
 //! aborted in-flight publisher's unadopted tail can be withdrawn with
 //! [`RadixCache::unpublish_tail`].
 //!
+//! With a spill tier attached ([`RadixCache::evict_until_spill`]), cold
+//! pages are *demoted* instead of destroyed: the page image moves to the
+//! mmapped spill file, the node keeps [`PageRef::Spilled`] (suffix-first —
+//! a node demotes only once all its children are spilled), and a later
+//! hit on the spilled prefix promotes pages back
+//! ([`RadixCache::spilled_run`] → async read → [`RadixCache::promote_node`]).
+//! Lookups and follower polls only ever return *resident* pages; a
+//! spilled continuation is surfaced separately so the engine can park the
+//! request on the promotion instead of retaining a page that is not
+//! there.
+//!
 //! Trees are *namespaced* by a `(policy, budget, b_cp)` hash (see
 //! [`policy_ns`]): under sparse selection the cached hidden states (hence
 //! KV) depend on the selection configuration, so prefixes must not be
@@ -52,6 +63,16 @@ pub fn policy_ns(name: &str, budget: usize, b_cp: usize) -> u64 {
 const PARENT_ROOT: usize = usize::MAX;
 const PARENT_FREE: usize = usize::MAX - 1;
 
+/// Where a cached page's KV currently lives: a RAM pool page, or a slot
+/// of the mmapped spill file (`kvpool/spill.rs`). A spilled node's fp32
+/// key-sum metadata stays resident in the spill tier's sidecar, so the
+/// QUOKA scan can still score the prefix without touching disk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageRef {
+    Resident(u32),
+    Spilled(u32),
+}
+
 struct Node {
     /// Child edges, keyed by their `block_tokens`-long token span.
     children: HashMap<Vec<u32>, usize>,
@@ -60,8 +81,8 @@ struct Node {
     parent: usize,
     /// Token span of the edge from `parent` (empty for roots).
     edge: Vec<u32>,
-    /// Pool page holding this span's KV (unused for roots).
-    block: u32,
+    /// Pool page or spill slot holding this span's KV (unused for roots).
+    block: PageRef,
     /// LRU clock value of the last lookup/insert touching this node.
     last_use: u64,
     /// Slot generation, bumped whenever the slot is freed — remembered
@@ -105,6 +126,12 @@ pub struct RadixStats {
     /// — kept separate from evictions so cancel-heavy traffic does not
     /// read as memory pressure.
     pub withdrawn_blocks: u64,
+    /// Pages demoted to the spill tier instead of destroyed
+    /// ([`RadixCache::evict_until_spill`]).
+    pub spilled_blocks: u64,
+    /// Pages promoted back from the spill tier
+    /// ([`RadixCache::promote_node`]).
+    pub promoted_blocks: u64,
 }
 
 /// The prefix tree.
@@ -116,6 +143,13 @@ pub struct RadixCache {
     block_tokens: usize,
     tick: u64,
     pub stats: RadixStats,
+    /// Spill slots whose owning node was removed or revived — the engine
+    /// drains these into `SpillFile::free_slot` after any call that can
+    /// drop a spilled node (removal cannot free the slot directly: the
+    /// spill file is not threaded through every removal path, and a slot
+    /// with an in-flight promotion read must go through the file's
+    /// pin/defer protocol).
+    freed_slots: Vec<u32>,
 }
 
 impl RadixCache {
@@ -128,6 +162,7 @@ impl RadixCache {
             block_tokens,
             tick: 0,
             stats: RadixStats::default(),
+            freed_slots: Vec::new(),
         }
     }
 
@@ -135,7 +170,13 @@ impl RadixCache {
         self.block_tokens
     }
 
-    fn new_node(&mut self, parent: usize, edge: Vec<u32>, block: u32) -> usize {
+    /// Drain the spill slots orphaned since the last call (see the field
+    /// doc) — the engine feeds them to `SpillFile::free_slot`.
+    pub fn take_freed_slots(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.freed_slots)
+    }
+
+    fn new_node(&mut self, parent: usize, edge: Vec<u32>, block: PageRef) -> usize {
         let node =
             Node { children: HashMap::new(), parent, edge, block, last_use: self.tick, gen: 0 };
         match self.free_nodes.pop() {
@@ -156,15 +197,18 @@ impl RadixCache {
         if let Some(&r) = self.roots.get(&ns) {
             return r;
         }
-        let r = self.new_node(PARENT_ROOT, Vec::new(), u32::MAX);
+        let r = self.new_node(PARENT_ROOT, Vec::new(), PageRef::Resident(u32::MAX));
         self.roots.insert(ns, r);
         r
     }
 
-    /// Longest cached prefix of `tokens` in namespace `ns`, as pool page
-    /// ids (one per `block_tokens` tokens). Never matches the entire
-    /// prompt: at least one token is left to prefill. The caller owns
-    /// nothing yet — it must `KvPool::retain` every returned page.
+    /// Longest *resident* cached prefix of `tokens` in namespace `ns`, as
+    /// pool page ids (one per `block_tokens` tokens). Never matches the
+    /// entire prompt: at least one token is left to prefill. The walk
+    /// stops at the first spilled node — spilled pages cannot be retained;
+    /// the caller discovers the spilled continuation with
+    /// [`RadixCache::spilled_run`] and promotes it instead. The caller
+    /// owns nothing yet — it must `KvPool::retain` every returned page.
     pub fn lookup(&mut self, ns: u64, tokens: &[u32]) -> Vec<u32> {
         self.tick += 1;
         self.stats.lookups += 1;
@@ -180,9 +224,12 @@ impl RadixCache {
             let span = &tokens[j * bt..(j + 1) * bt];
             match self.nodes[cur].children.get(span) {
                 Some(&next) => {
+                    let PageRef::Resident(b) = self.nodes[next].block else {
+                        break;
+                    };
                     cur = next;
                     self.nodes[cur].last_use = self.tick;
-                    out.push(self.nodes[cur].block);
+                    out.push(b);
                 }
                 None => break,
             }
@@ -192,6 +239,106 @@ impl RadixCache {
             self.stats.hit_tokens += (out.len() * bt) as u64;
         }
         out
+    }
+
+    /// The contiguous spilled continuation of a prompt's match: spill
+    /// slots for the pages of `tokens` starting at page `from_pages`
+    /// (normally the resident match length a [`RadixCache::lookup`] just
+    /// returned), each as `(node, generation, slot)` — the readahead
+    /// target the engine hands to the promotion thread at `submit`. The
+    /// run stops at the first resident or uncached page and never covers
+    /// the whole prompt (same one-token floor as `lookup`). Touches the
+    /// LRU clock: a hit on a spilled prefix is still a hit.
+    pub fn spilled_run(
+        &mut self,
+        ns: u64,
+        tokens: &[u32],
+        from_pages: usize,
+    ) -> Vec<(usize, u64, u32)> {
+        self.tick += 1;
+        let bt = self.block_tokens;
+        let max_blocks = tokens.len().saturating_sub(1) / bt;
+        let Some(&root) = self.roots.get(&ns) else {
+            return Vec::new();
+        };
+        let mut cur = root;
+        let mut out = Vec::new();
+        for j in 0..max_blocks {
+            let span = &tokens[j * bt..(j + 1) * bt];
+            let Some(&next) = self.nodes[cur].children.get(span) else {
+                break;
+            };
+            cur = next;
+            if j >= from_pages {
+                let PageRef::Spilled(slot) = self.nodes[cur].block else {
+                    break;
+                };
+                self.nodes[cur].last_use = self.tick;
+                out.push((cur, self.nodes[cur].gen, slot));
+            }
+        }
+        out
+    }
+
+    /// Apply a finished promotion: the node (validated live via its
+    /// generation and still holding `slot`) flips to
+    /// `PageRef::Resident(page)`; the caller has restored the image into
+    /// `page`, whose single reference (from `KvPool::adopt_new`) becomes
+    /// the tree's own. Returns false when the node was removed or revived
+    /// while the read was in flight — the caller keeps its page lease and
+    /// releases it. Either way the slot is done: on success it is pushed
+    /// to the orphan list for the engine to free.
+    pub fn promote_node(&mut self, idx: usize, gen: u64, slot: u32, page: u32) -> bool {
+        let live = idx < self.nodes.len()
+            && self.nodes[idx].gen == gen
+            && self.nodes[idx].parent != PARENT_FREE
+            && self.nodes[idx].block == PageRef::Spilled(slot);
+        if !live {
+            return false;
+        }
+        self.nodes[idx].block = PageRef::Resident(page);
+        self.freed_slots.push(slot);
+        self.stats.promoted_blocks += 1;
+        true
+    }
+
+    /// Drop a spilled node and its (necessarily all-spilled) subtree —
+    /// the promotion failure path (torn slot, or no RAM page could be
+    /// allocated): the chain is no longer recoverable, so waiters fall
+    /// back to a cold prefill. No-op when the node is stale. Slots land
+    /// on the orphan list.
+    pub fn drop_spilled_subtree(&mut self, idx: usize, gen: u64) {
+        let live = idx < self.nodes.len()
+            && self.nodes[idx].gen == gen
+            && self.nodes[idx].parent != PARENT_FREE
+            && matches!(self.nodes[idx].block, PageRef::Spilled(_));
+        if !live {
+            return;
+        }
+        let mut stack = vec![idx];
+        let mut order = Vec::new();
+        while let Some(i) = stack.pop() {
+            order.push(i);
+            stack.extend(self.nodes[i].children.values().copied());
+        }
+        // Unlink from the surviving parent once, then free deepest-first.
+        let parent = self.nodes[idx].parent;
+        let edge = std::mem::take(&mut self.nodes[idx].edge);
+        let removed = self.nodes[parent].children.remove(edge.as_slice());
+        debug_assert_eq!(removed, Some(idx));
+        for &i in order.iter().rev() {
+            match self.nodes[i].block {
+                PageRef::Spilled(s) => self.freed_slots.push(s),
+                PageRef::Resident(_) => {
+                    debug_assert!(false, "resident node {i} under a spilled subtree")
+                }
+            }
+            self.nodes[i].children = HashMap::new();
+            self.nodes[i].edge = Vec::new();
+            self.nodes[i].parent = PARENT_FREE;
+            self.nodes[i].gen += 1;
+            self.free_nodes.push(i);
+        }
     }
 
     /// Insert the full pages of `tokens` (a finished prefill's prompt) with
@@ -208,14 +355,29 @@ impl RadixCache {
             if let Some(&next) = self.nodes[cur].children.get(span) {
                 cur = next;
                 self.nodes[cur].last_use = self.tick;
+                self.revive(cur, blocks[j], pool);
             } else {
                 let span = span.to_vec();
-                let node = self.new_node(cur, span.clone(), blocks[j]);
+                let node = self.new_node(cur, span.clone(), PageRef::Resident(blocks[j]));
                 self.nodes[cur].children.insert(span, node);
                 pool.retain(blocks[j]);
                 self.stats.inserted_blocks += 1;
                 cur = node;
             }
+        }
+    }
+
+    /// A publisher walked onto an existing *spilled* node for a span it
+    /// just recomputed: adopt the fresh page as the node's resident copy
+    /// (the spilled image is identical KV — same namespace, same span
+    /// chain) and orphan the slot. Keeps demoted chains from shadowing
+    /// re-publishes forever.
+    fn revive(&mut self, idx: usize, block: u32, pool: &mut KvPool) {
+        if let PageRef::Spilled(slot) = self.nodes[idx].block {
+            self.nodes[idx].block = PageRef::Resident(block);
+            pool.retain(block);
+            self.freed_slots.push(slot);
+            self.stats.inserted_blocks += 1;
         }
     }
 
@@ -309,9 +471,10 @@ impl RadixCache {
             if let Some(&next) = self.nodes[cur].children.get(span) {
                 cur = next;
                 self.nodes[cur].last_use = self.tick;
+                self.revive(cur, blocks[j], pool);
             } else {
                 let span = span.to_vec();
-                let node = self.new_node(cur, span.clone(), blocks[j]);
+                let node = self.new_node(cur, span.clone(), PageRef::Resident(blocks[j]));
                 self.nodes[cur].children.insert(span, node);
                 pool.retain(blocks[j]);
                 self.stats.inserted_blocks += 1;
@@ -353,13 +516,19 @@ impl RadixCache {
             let span = &tokens[j * bt..(j + 1) * bt];
             match self.nodes[cur].children.get(span) {
                 Some(&next) => {
+                    if j >= from_pages {
+                        // Only resident pages can be adopted (the caller
+                        // retains them); a spilled continuation is the
+                        // promotion machinery's job, not the poll's.
+                        let PageRef::Resident(b) = self.nodes[next].block else {
+                            break;
+                        };
+                        out.push(b);
+                    }
                     cur = next;
                     depth = j + 1;
                     if depth == from_pages {
                         at_from = Some(cur);
-                    }
-                    if j >= from_pages {
-                        out.push(self.nodes[cur].block);
                     }
                 }
                 None => break,
@@ -425,7 +594,11 @@ impl RadixCache {
         let mut freed = 0;
         while chain.len() > keep_pages {
             let idx = chain.pop().unwrap();
-            if !self.nodes[idx].children.is_empty() || pool.refcount(self.nodes[idx].block) != 1 {
+            let sole_owner = match self.nodes[idx].block {
+                PageRef::Resident(b) => pool.refcount(b) == 1,
+                PageRef::Spilled(_) => true, // spill slots have no pool owner
+            };
+            if !self.nodes[idx].children.is_empty() || !sole_owner {
                 break;
             }
             self.remove_leaf(idx, pool, alloc);
@@ -435,21 +608,37 @@ impl RadixCache {
         freed
     }
 
-    /// Pool page ids of every cached node (test hook for publish
-    /// invariants, e.g. "every cached page is fully filled").
+    /// Pool page ids of every *resident* cached node (test hook for
+    /// publish invariants, e.g. "every cached page is fully filled").
     pub fn cached_pages(&self) -> Vec<u32> {
         self.nodes
             .iter()
             .filter(|n| n.parent != PARENT_FREE && n.parent != PARENT_ROOT)
-            .map(|n| n.block)
+            .filter_map(|n| match n.block {
+                PageRef::Resident(b) => Some(b),
+                PageRef::Spilled(_) => None,
+            })
             .collect()
     }
 
-    /// Number of pages the tree currently holds a reference on.
+    /// Number of RAM pages the tree currently holds a reference on
+    /// (spilled nodes hold a spill slot, not a pool reference).
     pub fn cached_blocks(&self) -> usize {
         self.nodes
             .iter()
-            .filter(|n| n.parent != PARENT_FREE && n.parent != PARENT_ROOT)
+            .filter(|n| {
+                n.parent != PARENT_FREE
+                    && n.parent != PARENT_ROOT
+                    && matches!(n.block, PageRef::Resident(_))
+            })
+            .count()
+    }
+
+    /// Number of cached pages currently demoted to the spill tier.
+    pub fn spilled_nodes(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.parent != PARENT_FREE && matches!(n.block, PageRef::Spilled(_)))
             .count()
     }
 
@@ -473,7 +662,8 @@ impl RadixCache {
 
     /// [`RadixCache::evict_until`] with lifecycle tracing: a non-empty
     /// eviction emits one engine-scope `Evict{pages}` event at the
-    /// pressure site (the engine passes its tracer).
+    /// pressure site (the engine passes its tracer). No spill tier:
+    /// every cold page is destroyed.
     pub fn evict_until_traced(
         &mut self,
         min_free: usize,
@@ -481,12 +671,38 @@ impl RadixCache {
         alloc: &mut BlockAllocator,
         tracer: &mut crate::obs::Tracer,
     ) -> usize {
-        let mut freed = 0;
+        self.evict_until_spill(min_free, pool, alloc, None, tracer)
+    }
+
+    /// [`RadixCache::evict_until_traced`] over a tiered pool: cold pages
+    /// are **demoted** to the spill file instead of destroyed — the page
+    /// image (rows, scales, inverse norms, key sums, fill) moves to a
+    /// checksummed slot, the node flips to [`PageRef::Spilled`], and the
+    /// RAM page goes back to the allocator, so `kv_bytes_resident`
+    /// (computed from leased blocks) counts only the RAM tier. Demotion
+    /// is suffix-first: a node is eligible once every child is already
+    /// spilled, so interior pages of a cold chain demote too, not just
+    /// leaves. When the spill file is full (or absent) the pass falls
+    /// back to hard eviction, dropping an exhausted node's spilled
+    /// subtree first when one is in the way. Returns RAM pages freed
+    /// (demoted + evicted); emits engine-scope `Spill{pages}` /
+    /// `Evict{pages}` events for the non-empty kinds.
+    pub fn evict_until_spill(
+        &mut self,
+        min_free: usize,
+        pool: &mut KvPool,
+        alloc: &mut BlockAllocator,
+        mut spill: Option<&mut crate::kvpool::spill::SpillFile>,
+        tracer: &mut crate::obs::Tracer,
+    ) -> usize {
+        let mut evicted = 0u32;
+        let mut demoted = 0u32;
+        let mut img = Vec::new();
         while alloc.free_blocks() < min_free {
-            // Batch entries stay valid as the batch drains: an evictable
-            // leaf's parent has children (so is never in the same batch),
-            // and no refcount or child set changes except by the removals
-            // themselves.
+            // Batch entries stay valid as the batch drains: an eligible
+            // node's parent has a resident child (so is never in the same
+            // batch), and no refcount or child set changes except by the
+            // removals/demotions themselves.
             let mut batch: Vec<(u64, usize)> = self
                 .nodes
                 .iter()
@@ -494,8 +710,10 @@ impl RadixCache {
                 .filter(|(_, n)| {
                     n.parent != PARENT_FREE
                         && n.parent != PARENT_ROOT
-                        && n.children.is_empty()
-                        && pool.refcount(n.block) == 1
+                        && matches!(n.block, PageRef::Resident(b) if pool.refcount(b) == 1)
+                        && n.children
+                            .values()
+                            .all(|&c| matches!(self.nodes[c].block, PageRef::Spilled(_)))
                 })
                 .map(|(i, n)| (n.last_use, i))
                 .collect();
@@ -503,19 +721,53 @@ impl RadixCache {
                 break;
             }
             batch.sort_unstable();
+            let mut progress = false;
             for (_, idx) in batch {
                 if alloc.free_blocks() >= min_free {
                     break;
                 }
+                let PageRef::Resident(b) = self.nodes[idx].block else {
+                    unreachable!("batch filter keeps resident nodes only")
+                };
+                if let Some(sp) = spill.as_deref_mut() {
+                    pool.extract_page_image(b, &mut img);
+                    let sums = pool.page_key_sums(b);
+                    if let Some(slot) = sp.write(&img, sums) {
+                        self.nodes[idx].block = PageRef::Spilled(slot);
+                        pool.release_block(b, alloc);
+                        self.stats.spilled_blocks += 1;
+                        demoted += 1;
+                        progress = true;
+                        continue;
+                    }
+                }
+                // Spill full or absent: destroy. A node with spilled
+                // children cannot be unlinked until they are dropped —
+                // the tier is exhausted, so the subtree is unrecoverable
+                // pressure anyway.
+                if !self.nodes[idx].children.is_empty() {
+                    let children: Vec<usize> =
+                        self.nodes[idx].children.values().copied().collect();
+                    for c in children {
+                        self.drop_spilled_subtree(c, self.nodes[c].gen);
+                    }
+                }
                 self.remove_leaf(idx, pool, alloc);
                 self.stats.evicted_blocks += 1;
-                freed += 1;
+                evicted += 1;
+                progress = true;
+            }
+            if !progress {
+                break;
             }
         }
-        if freed > 0 {
-            tracer.record(0, crate::obs::TraceEventKind::Evict { pages: freed as u32 });
+        if demoted > 0 {
+            tracer.record(0, crate::obs::TraceEventKind::Spill { pages: demoted });
         }
-        freed
+        if evicted > 0 {
+            tracer.record(0, crate::obs::TraceEventKind::Evict { pages: evicted });
+        }
+        (evicted + demoted) as usize
     }
 
     fn remove_leaf(&mut self, idx: usize, pool: &mut KvPool, alloc: &mut BlockAllocator) {
@@ -524,7 +776,10 @@ impl RadixCache {
         let edge = std::mem::take(&mut self.nodes[idx].edge);
         let removed = self.nodes[parent].children.remove(edge.as_slice());
         debug_assert_eq!(removed, Some(idx));
-        pool.release_block(self.nodes[idx].block, alloc);
+        match self.nodes[idx].block {
+            PageRef::Resident(b) => pool.release_block(b, alloc),
+            PageRef::Spilled(slot) => self.freed_slots.push(slot),
+        }
         self.nodes[idx].children = HashMap::new();
         self.nodes[idx].parent = PARENT_FREE;
         self.nodes[idx].gen += 1; // invalidate remembered cursors
@@ -554,8 +809,21 @@ impl RadixCache {
                 if p.children.get(n.edge.as_slice()) != Some(&i) {
                     return Err(format!("node {i}: parent link broken"));
                 }
-                if pool.refcount(n.block) == 0 {
-                    return Err(format!("node {i}: cached page {} unowned", n.block));
+                match n.block {
+                    PageRef::Resident(b) => {
+                        if pool.refcount(b) == 0 {
+                            return Err(format!("node {i}: cached page {b} unowned"));
+                        }
+                    }
+                    PageRef::Spilled(_) => {
+                        // Demotion is suffix-first, so a spilled node's
+                        // children can never be resident.
+                        for &c in n.children.values() {
+                            if matches!(self.nodes[c].block, PageRef::Resident(_)) {
+                                return Err(format!("node {i}: resident child {c} under spill"));
+                            }
+                        }
+                    }
                 }
             }
             for (edge, &c) in &n.children {

@@ -1,0 +1,436 @@
+//! Spill tier: an mmap-backed cold-page store under the paged KV pool.
+//!
+//! The radix prefix cache demotes cold pages here instead of destroying
+//! them under pool pressure (`RadixCache::evict_until`): the page image —
+//! rows (f32 or int8 codes), dequant scales, inverse norms, key sums and
+//! fill counter — is serialized into a fixed-size *slot* of an mmapped
+//! file, the radix node flips to `PageRef::Spilled(slot)`, and the RAM
+//! page is released. A later radix hit on the spilled prefix promotes the
+//! slots back into fresh pool pages on a background thread (`Promoter`),
+//! while the requesting sequence parks in the engine's existing
+//! `Phase::WaitingOnPrefix` machinery.
+//!
+//! Layout: the file is a flat array of slots, each
+//!
+//! ```text
+//! [ magic u64 | payload_len u64 | fnv1a64(payload) u64 | payload … pad ]
+//! ```
+//!
+//! written payload-first, header-last, so a crash mid-demote leaves a
+//! torn slot whose checksum fails — `SpillFile::open` keeps only
+//! checksum-valid slots and returns the rest to the free list (the
+//! crash-safety property pinned in `rust/tests/kvpool_props.rs`). Freed
+//! slots are reused. Alongside each occupied slot the file keeps a RAM
+//! sidecar with the page's fp32 key sums (`slot_key_sums`), so the QUOKA
+//! paged scan can score — and skip — a spilled prefix without touching
+//! disk.
+//!
+//! Threading: the engine thread is the sole writer. The `Promoter`
+//! worker only ever reads slots the engine has pinned for an in-flight
+//! promotion; `free_slot` on a pinned slot defers until `unpin`, so a
+//! slot is never recycled under a concurrent read.
+
+use std::collections::{HashMap, HashSet};
+use std::fs::{File, OpenOptions};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+const SLOT_MAGIC: u64 = 0x51554f4b41535031; // "QUOKASP1"
+const HEADER_BYTES: usize = 24;
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+/// Align slots to 64 bytes so payloads start cache-line aligned.
+fn slot_bytes_for(payload_bytes: usize) -> usize {
+    (HEADER_BYTES + payload_bytes + 63) & !63
+}
+
+/// Bytes one spilled page occupies on disk for a pool whose
+/// `page_image_bytes()` is `payload_bytes` — the unit `--kv-spill-cap`
+/// must be a whole multiple of.
+pub fn slot_stride(payload_bytes: usize) -> usize {
+    slot_bytes_for(payload_bytes)
+}
+
+// ------------------------------------------------------------- mmap FFI
+
+#[cfg(unix)]
+mod sys {
+    use std::os::unix::io::RawFd;
+
+    pub const PROT_READ: i32 = 0x1;
+    pub const PROT_WRITE: i32 = 0x2;
+    pub const MAP_SHARED: i32 = 0x01;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: RawFd,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+}
+
+/// A shared-mapping region. Unmapped when the last handle drops, so the
+/// promotion worker can outlive the `SpillFile` briefly during shutdown.
+struct RegionInner {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the region is a plain byte range; the engine thread is the only
+// writer and never writes a slot the worker is reading (pin protocol
+// above), so there are no data races on live slots.
+unsafe impl Send for RegionInner {}
+unsafe impl Sync for RegionInner {}
+
+impl Drop for RegionInner {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        unsafe {
+            sys::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+#[derive(Clone)]
+struct Region(Arc<RegionInner>);
+
+impl Region {
+    #[cfg(unix)]
+    fn map(file: &File, len: usize) -> anyhow::Result<Region> {
+        use std::os::unix::io::AsRawFd;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 || ptr.is_null() {
+            anyhow::bail!("mmap(MAP_SHARED) failed — no write-back support on this filesystem?");
+        }
+        Ok(Region(Arc::new(RegionInner { ptr, len })))
+    }
+
+    fn bytes(&self, off: usize, len: usize) -> &[u8] {
+        assert!(off + len <= self.0.len);
+        unsafe { std::slice::from_raw_parts(self.0.ptr.add(off), len) }
+    }
+
+    /// SAFETY contract: caller is the sole writer (engine thread) and the
+    /// range is not a slot pinned for a concurrent worker read.
+    #[allow(clippy::mut_from_ref)]
+    fn bytes_mut(&self, off: usize, len: usize) -> &mut [u8] {
+        assert!(off + len <= self.0.len);
+        unsafe { std::slice::from_raw_parts_mut(self.0.ptr.add(off), len) }
+    }
+}
+
+// ----------------------------------------------------------- spill file
+
+/// The engine-side handle to the spill tier: slot allocation, demote
+/// writes, checksummed reads, and the resident key-sum sidecar.
+pub struct SpillFile {
+    _file: File,
+    path: PathBuf,
+    region: Region,
+    payload_bytes: usize,
+    slot_bytes: usize,
+    n_slots: usize,
+    free: Vec<u32>,
+    /// fp32 key sums per occupied slot — the scan metadata that stays in
+    /// RAM when the page itself is cold.
+    key_sums: HashMap<u32, Vec<f32>>,
+    /// Slots with an in-flight worker read; `free_slot` defers for these.
+    pinned: HashSet<u32>,
+    zombie: HashSet<u32>,
+}
+
+impl SpillFile {
+    /// Open (creating if absent) a spill file of exactly `cap_bytes`,
+    /// slotted for pages of `payload_bytes`. `cap_bytes` must be a whole
+    /// number of slots (`slot_stride(payload_bytes)`) — the engine
+    /// validates this up front and reports the stride in its error.
+    /// Reopening an existing file keeps every checksum-valid slot
+    /// occupied (their key-sum sidecars are rebuilt lazily by the pool on
+    /// promotion) and drops torn or stale slots to the free list.
+    #[cfg(unix)]
+    pub fn open(path: &Path, cap_bytes: usize, payload_bytes: usize) -> anyhow::Result<SpillFile> {
+        let slot_bytes = slot_bytes_for(payload_bytes);
+        anyhow::ensure!(cap_bytes > 0, "spill cap is zero");
+        anyhow::ensure!(
+            cap_bytes % slot_bytes == 0,
+            "spill cap {} is not a whole number of {}-byte page slots",
+            cap_bytes,
+            slot_bytes
+        );
+        let n_slots = cap_bytes / slot_bytes;
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)?;
+        let existing = file.metadata()?.len();
+        file.set_len(cap_bytes as u64)?;
+        let region = Region::map(&file, cap_bytes)?;
+        let mut sf = SpillFile {
+            _file: file,
+            path: path.to_path_buf(),
+            region,
+            payload_bytes,
+            slot_bytes,
+            n_slots,
+            free: Vec::with_capacity(n_slots),
+            key_sums: HashMap::new(),
+            pinned: HashSet::new(),
+            zombie: HashSet::new(),
+        };
+        // Scan headers oldest-slot-first; a torn tail (crash mid-demote)
+        // fails its checksum and lands on the free list.
+        let scan_slots = ((existing as usize) / slot_bytes).min(n_slots);
+        let mut occupied = 0usize;
+        for s in (0..n_slots).rev() {
+            if s < scan_slots && sf.slot_valid(s as u32) {
+                occupied += 1;
+            } else {
+                sf.free.push(s as u32);
+            }
+        }
+        let _ = occupied;
+        Ok(sf)
+    }
+
+    #[cfg(not(unix))]
+    pub fn open(_path: &Path, _cap: usize, _payload: usize) -> anyhow::Result<SpillFile> {
+        anyhow::bail!("KV spill requires a unix mmap; tier disabled on this platform")
+    }
+
+    fn slot_off(&self, slot: u32) -> usize {
+        slot as usize * self.slot_bytes
+    }
+
+    fn slot_valid(&self, slot: u32) -> bool {
+        let off = self.slot_off(slot);
+        let hdr = self.region.bytes(off, HEADER_BYTES);
+        let magic = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+        let len = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
+        let sum = u64::from_le_bytes(hdr[16..24].try_into().unwrap());
+        magic == SLOT_MAGIC
+            && len == self.payload_bytes
+            && fnv1a64(self.region.bytes(off + HEADER_BYTES, len)) == sum
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+    pub fn capacity_slots(&self) -> usize {
+        self.n_slots
+    }
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+    pub fn used_slots(&self) -> usize {
+        self.n_slots - self.free.len()
+    }
+    pub fn payload_bytes(&self) -> usize {
+        self.payload_bytes
+    }
+    /// Bytes of page payload currently parked in the spill tier.
+    pub fn used_bytes(&self) -> usize {
+        self.used_slots() * self.payload_bytes
+    }
+
+    /// Demote: write one page image (and keep its fp32 key sums resident).
+    /// Returns the slot, or `None` when the file is full — the caller
+    /// falls back to a hard evict.
+    pub fn write(&mut self, img: &[u8], key_sums: Vec<f32>) -> Option<u32> {
+        assert_eq!(img.len(), self.payload_bytes, "page image size mismatch");
+        let slot = self.free.pop()?;
+        let off = self.slot_off(slot);
+        // Payload first, header (with checksum) last: a torn write is
+        // dropped on reopen instead of restoring garbage.
+        self.region
+            .bytes_mut(off + HEADER_BYTES, img.len())
+            .copy_from_slice(img);
+        let hdr = self.region.bytes_mut(off, HEADER_BYTES);
+        hdr[0..8].copy_from_slice(&SLOT_MAGIC.to_le_bytes());
+        hdr[8..16].copy_from_slice(&(img.len() as u64).to_le_bytes());
+        hdr[16..24].copy_from_slice(&fnv1a64(img).to_le_bytes());
+        self.key_sums.insert(slot, key_sums);
+        Some(slot)
+    }
+
+    /// Checksum-verified read of one slot's page image (engine-thread
+    /// synchronous path; the promotion worker uses `SpillReader`).
+    pub fn read(&self, slot: u32, out: &mut Vec<u8>) -> anyhow::Result<()> {
+        anyhow::ensure!((slot as usize) < self.n_slots, "slot {slot} out of range");
+        anyhow::ensure!(self.slot_valid(slot), "spill slot {slot} failed checksum");
+        out.clear();
+        out.extend_from_slice(
+            self.region
+                .bytes(self.slot_off(slot) + HEADER_BYTES, self.payload_bytes),
+        );
+        Ok(())
+    }
+
+    /// The resident fp32 key sums for an occupied slot (None after a
+    /// reopen, until the slot is promoted once).
+    pub fn slot_key_sums(&self, slot: u32) -> Option<&[f32]> {
+        self.key_sums.get(&slot).map(|v| v.as_slice())
+    }
+
+    /// Pin a slot for an in-flight worker read; `free_slot` defers until
+    /// `unpin`.
+    pub fn pin(&mut self, slot: u32) {
+        self.pinned.insert(slot);
+    }
+
+    /// Drop a pin; if the slot was freed while pinned, release it now.
+    pub fn unpin(&mut self, slot: u32) {
+        self.pinned.remove(&slot);
+        if self.zombie.remove(&slot) {
+            self.release(slot);
+        }
+    }
+
+    /// Return a slot to the free list (promotion applied, or the owning
+    /// radix node was removed). Deferred while the slot is pinned.
+    pub fn free_slot(&mut self, slot: u32) {
+        if self.pinned.contains(&slot) {
+            self.zombie.insert(slot);
+            return;
+        }
+        self.release(slot);
+    }
+
+    fn release(&mut self, slot: u32) {
+        // Invalidate the header so a reopen does not resurrect the slot.
+        let off = self.slot_off(slot);
+        self.region.bytes_mut(off, 8).copy_from_slice(&0u64.to_le_bytes());
+        self.key_sums.remove(&slot);
+        debug_assert!(!self.free.contains(&slot), "double free of spill slot {slot}");
+        self.free.push(slot);
+    }
+
+    /// A read-only view the promotion worker can take to another thread.
+    pub fn reader(&self) -> SpillReader {
+        SpillReader {
+            region: self.region.clone(),
+            payload_bytes: self.payload_bytes,
+            slot_bytes: self.slot_bytes,
+            n_slots: self.n_slots,
+        }
+    }
+}
+
+/// Read-only slot access for the promotion worker thread.
+pub struct SpillReader {
+    region: Region,
+    payload_bytes: usize,
+    slot_bytes: usize,
+    n_slots: usize,
+}
+
+impl SpillReader {
+    fn read(&self, slot: u32) -> anyhow::Result<Vec<u8>> {
+        anyhow::ensure!((slot as usize) < self.n_slots, "slot {slot} out of range");
+        let off = slot as usize * self.slot_bytes;
+        let hdr = self.region.bytes(off, HEADER_BYTES);
+        let magic = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+        let len = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
+        let sum = u64::from_le_bytes(hdr[16..24].try_into().unwrap());
+        anyhow::ensure!(
+            magic == SLOT_MAGIC && len == self.payload_bytes,
+            "spill slot {slot} header invalid"
+        );
+        let payload = self.region.bytes(off + HEADER_BYTES, len);
+        anyhow::ensure!(fnv1a64(payload) == sum, "spill slot {slot} failed checksum");
+        Ok(payload.to_vec())
+    }
+}
+
+// ------------------------------------------------------------ promoter
+
+/// One staged promotion: the slot's verified page image (or the checksum
+/// error), ready for the engine thread to apply.
+pub struct PromoteDone {
+    pub slot: u32,
+    pub bytes: anyhow::Result<Vec<u8>>,
+}
+
+/// Background promotion thread: the engine enqueues slots at `submit`
+/// (readahead on a spilled radix hit); the worker reads + checksum-
+/// verifies each slot off the critical path and stages the bytes back.
+/// All pool/radix mutation stays on the engine thread.
+pub struct Promoter {
+    tx: Option<mpsc::Sender<u32>>,
+    rx: mpsc::Receiver<PromoteDone>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Promoter {
+    pub fn spawn(reader: SpillReader) -> Promoter {
+        let (tx, req_rx) = mpsc::channel::<u32>();
+        let (done_tx, rx) = mpsc::channel::<PromoteDone>();
+        let handle = std::thread::Builder::new()
+            .name("quoka-promote".into())
+            .spawn(move || {
+                while let Ok(slot) = req_rx.recv() {
+                    let bytes = reader.read(slot);
+                    if done_tx.send(PromoteDone { slot, bytes }).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn promotion thread");
+        Promoter {
+            tx: Some(tx),
+            rx,
+            handle: Some(handle),
+        }
+    }
+
+    /// Kick an async read of `slot`. The caller must pin the slot first.
+    pub fn request(&self, slot: u32) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(slot);
+        }
+    }
+
+    /// Non-blocking drain of staged promotions.
+    pub fn try_recv(&self) -> Option<PromoteDone> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Short blocking wait — used when a step has nothing to do but wait
+    /// for promotions, so the engine does not busy-spin.
+    pub fn recv_timeout(&self, timeout: std::time::Duration) -> Option<PromoteDone> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+}
+
+impl Drop for Promoter {
+    fn drop(&mut self) {
+        self.tx.take(); // close the request channel → worker exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -8,7 +8,7 @@
 //! quoka inspect --artifacts artifacts
 //! ```
 
-use quoka::bench::{gemm, latency, prefix, serving, spec, tables};
+use quoka::bench::{gemm, latency, prefix, serving, spec, tables, tiered};
 use quoka::coordinator::{Engine, EngineCfg, KvLayout, SchedCfg};
 use quoka::server::{serve_with_opts, Client, ServeOpts, WireRequest};
 use quoka::util::cli::{usage, Args, OptSpec};
@@ -75,6 +75,8 @@ fn serve_specs() -> Vec<OptSpec> {
         OptSpec { name: "spec-policy", help: "speculative draft policy (off | pld)", default: Some("pld"), boolean: false },
         OptSpec { name: "workers", help: "fan-out worker count for GEMM/attention (0 = QUOKA_WORKERS env or all cores minus one)", default: Some("0"), boolean: false },
         OptSpec { name: "kv-dtype", help: "KV cache element type: f32 | int8 (int8 = 4x smaller cache, dequantized in-tile; host backend, dense/quoka* policies)", default: Some("f32"), boolean: false },
+        OptSpec { name: "kv-spill", help: "mmap-backed cold-tier spill file: prefix-cache pages evicted under pool pressure demote here and promote back on a radix hit (requires --prefix-cache)", default: None, boolean: false },
+        OptSpec { name: "kv-spill-cap", help: "spill file capacity in bytes; must be a whole number of page slots (a page image rounded up to 64 bytes)", default: Some("0"), boolean: false },
         OptSpec { name: "trace-out", help: "write the request-lifecycle trace (JSONL) here at shutdown and on the flush_trace wire command; enables tracing", default: None, boolean: false },
         OptSpec { name: "trace-events", help: "lifecycle-trace ring capacity in events (0 = off unless --trace-out is set)", default: Some("0"), boolean: false },
         OptSpec { name: "max-queue", help: "admission backpressure: reject new requests while this many wait for admission (0 = unbounded)", default: Some("0"), boolean: false },
@@ -111,6 +113,8 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         spec: quoka::spec::SpecCfg::parse(&a.str("spec-policy")?, a.usize("spec-gamma")?)?,
         kv_dtype: quoka::kvpool::KvDtype::parse(&a.str("kv-dtype")?)?,
         workers: a.usize("workers")?,
+        spill_path: a.get("kv-spill").map(std::path::PathBuf::from),
+        spill_cap_bytes: a.usize("kv-spill-cap")?,
     };
     let backend = a.str("backend")?;
     let preset = a.str("preset")?;
@@ -272,6 +276,7 @@ fn cmd_bench(argv: Vec<String>) -> anyhow::Result<()> {
         "spec_serving" => drop(spec::spec_serving()),
         "gemm_serving" => drop(gemm::gemm_serving()),
         "serving_load" => drop(serving::serving_load()),
+        "tiered_serving" => drop(tiered::tiered_serving()),
         "all" => {
             for id in [
                 "fig2_geometry", "fig3_deviation", "fig4_niah", "table1_ruler",
@@ -279,7 +284,7 @@ fn cmd_bench(argv: Vec<String>) -> anyhow::Result<()> {
                 "table8_math500", "table9_scoring", "table10_aggregation",
                 "table11_bcp", "table12_nq", "fig5_latency", "fig6_decode",
                 "micro_hotpath", "prefix_serving", "spec_serving", "gemm_serving",
-                "serving_load",
+                "serving_load", "tiered_serving",
             ] {
                 cmd_bench(vec![id.to_string()])?;
             }
@@ -290,7 +295,7 @@ fn cmd_bench(argv: Vec<String>) -> anyhow::Result<()> {
                  table1_ruler table2_ruler_budget table3_longbench table4_complexity\n  \
                  table8_math500 table9_scoring table10_aggregation table11_bcp table12_nq\n  \
                  fig5_latency fig6_decode micro_hotpath prefix_serving spec_serving gemm_serving\n  \
-                 serving_load all\n\n\
+                 serving_load tiered_serving all\n\n\
                  QUOKA_BENCH_FULL=1 for paper-scale grids."
             );
         }

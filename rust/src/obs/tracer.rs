@@ -57,10 +57,13 @@ pub enum TraceEventKind {
     VerifyStep { gamma: u32, accepted: u32 },
     /// Engine-scope: LRU pressure evicted `pages` cached pages.
     Evict { pages: u32 },
-    /// Engine-scope: `pages` pages spilled to a colder tier. Reserved —
-    /// no spill tier exists yet; present so the wire format is stable
-    /// when one lands (ROADMAP).
+    /// Engine-scope: LRU pressure demoted `pages` cached pages to the
+    /// mmap spill tier (`kvpool/spill.rs`) instead of destroying them.
     Spill { pages: u32 },
+    /// Promotion readahead kicked for the request: `pages` spilled pages
+    /// of its prefix are being read back from the spill tier (the request
+    /// parks until they are resident).
+    Promote { pages: u32 },
     /// Request finished normally.
     Finish,
     /// Request cancelled by the client.
@@ -90,6 +93,7 @@ impl TraceEventKind {
             TraceEventKind::VerifyStep { .. } => "verify_step",
             TraceEventKind::Evict { .. } => "evict",
             TraceEventKind::Spill { .. } => "spill",
+            TraceEventKind::Promote { .. } => "promote",
             TraceEventKind::Finish => "finish",
             TraceEventKind::Cancel => "cancel",
             TraceEventKind::StepEnd { .. } => "step_end",
@@ -122,7 +126,8 @@ impl TraceEvent {
             TraceEventKind::PrefixHit { pages }
             | TraceEventKind::AdoptPages { pages }
             | TraceEventKind::Evict { pages }
-            | TraceEventKind::Spill { pages } => {
+            | TraceEventKind::Spill { pages }
+            | TraceEventKind::Promote { pages } => {
                 fields.push(("pages", Json::num(pages as f64)));
             }
             TraceEventKind::ParkOnPrefix { on } => {

@@ -529,3 +529,132 @@ fn pjrt_engine_end_to_end_when_artifacts_exist() {
     let rd = results.iter().find(|r| r.id == id_d).unwrap();
     assert_eq!(rq.generated, rd.generated, "quoka (under-budget) must match dense");
 }
+
+/// Tiered KV pool acceptance: a prefix evicted under pool pressure with a
+/// spill tier attached is demoted (not destroyed); re-requesting it
+/// promotes the pages back off the mmap with ZERO prefill chunks
+/// scheduled for the covered pages, and the generation is bit-identical
+/// to a cold recompute.
+#[cfg(unix)]
+#[test]
+fn spilled_prefix_promotes_with_zero_prefill_and_identical_generation() {
+    use quoka::kvpool::{slot_stride, KvDtype, KvPool, PoolCfg};
+    use quoka::model::ModelConfig;
+
+    let spill_path =
+        std::env::temp_dir().join(format!("quoka-e2e-{}.spill", std::process::id()));
+    let _ = std::fs::remove_file(&spill_path);
+    // One slot per 16-token page image of the "tiny" preset.
+    let mc = ModelConfig::preset("tiny").unwrap();
+    let payload = KvPool::new_with_dtype(
+        PoolCfg {
+            n_layers: mc.n_layers,
+            n_kv: mc.n_kv_heads,
+            d: mc.d_head,
+            block_tokens: 16,
+            total_blocks: 1,
+        },
+        KvDtype::env_default(),
+    )
+    .page_image_bytes();
+    let cfg = EngineCfg {
+        sched: SchedCfg { b_cp: 16, step_tokens: 64, max_running: 4, ..SchedCfg::default() },
+        pool_blocks: 16, // tight: filler traffic must push the prefix out
+        block_tokens: 16,
+        seed: 4,
+        kv: KvLayout::Paged { prefix_cache: true },
+        spill_path: Some(spill_path.clone()),
+        spill_cap_bytes: slot_stride(payload) * 32,
+        ..EngineCfg::default()
+    };
+    let spec = || PolicySpec { name: "quoka".into(), budget: 48 };
+    let prefix: Vec<u32> = (0..96).map(|i| (i * 13 % 240) as u32).collect(); // 6 pages
+    let suffix_a: Vec<u32> = (0..32).map(|i| (i * 7 % 240) as u32 + 1).collect();
+    let suffix_b: Vec<u32> = (0..32).map(|i| (i * 11 % 240) as u32 + 3).collect();
+    let prompt_a: Vec<u32> = prefix.iter().chain(&suffix_a).copied().collect();
+    let prompt_b: Vec<u32> = prefix.iter().chain(&suffix_b).copied().collect();
+    let filler = |f: usize| -> Vec<u32> {
+        (0..100).map(|i| ((i * 29 + f * 101) % 239) as u32 + 1).collect()
+    };
+
+    let mut e = Engine::new_host("tiny", cfg.clone()).unwrap();
+    e.enable_tracing(1 << 14);
+    assert!(e.spill().is_some(), "spill tier must be attached");
+    // Warm: A publishes the prefix pages into the radix cache.
+    e.submit(prompt_a, 4, spec()).unwrap();
+    e.run_to_completion().unwrap();
+    // Pressure: unrelated fillers force admission evictions — with the
+    // spill tier attached these demote instead of destroying.
+    for f in 0..3 {
+        e.submit(filler(f), 4, spec()).unwrap();
+        e.run_to_completion().unwrap();
+    }
+    let spilled = e.radix.as_ref().unwrap().spilled_nodes();
+    assert!(spilled >= 3, "pool pressure must demote cached pages (spilled {spilled})");
+    assert!(e.metrics.spilled_pages as usize >= spilled);
+
+    // Re-request the prefix: served from the spill tier.
+    let prefill_before = e.metrics.prefill_tokens;
+    let id_b = e.submit(prompt_b.clone(), 4, spec()).unwrap();
+    let rb = e.run_to_completion().unwrap().remove(0);
+    assert_eq!(rb.id, id_b);
+    assert_eq!(rb.cached_prefix_tokens, 96, "whole shared prefix served without recompute");
+    assert_eq!(
+        e.metrics.prefill_tokens - prefill_before,
+        (prompt_b.len() - 96) as u64,
+        "zero prefill chunks scheduled for spill-covered pages"
+    );
+    assert!(e.metrics.promotions > 0, "pages must come back through promotion");
+    assert!(e.metrics.promote_wait_hist.count() > 0, "promote wait recorded per waiter");
+    // Trace grammar: the promotion request parked, promoted and woke.
+    let kinds: Vec<&TraceEventKind> =
+        e.tracer.events().filter(|ev| ev.id == id_b).map(|ev| &ev.kind).collect();
+    assert!(
+        kinds.iter().any(|k| matches!(k, TraceEventKind::Promote { pages } if *pages > 0)),
+        "submit must record the promotion readahead kick"
+    );
+    assert!(kinds.iter().any(|k| matches!(k, TraceEventKind::ParkOnPrefix { .. })));
+    assert!(kinds.iter().any(|k| matches!(k, TraceEventKind::Wake)));
+
+    // Cold recompute oracle: a fresh engine with no spill tier generates
+    // the exact same tokens for prompt B.
+    let mut cold = Engine::new_host(
+        "tiny",
+        EngineCfg { spill_path: None, spill_cap_bytes: 0, ..cfg },
+    )
+    .unwrap();
+    cold.submit(prompt_b, 4, spec()).unwrap();
+    let rb_cold = cold.run_to_completion().unwrap().remove(0);
+    assert_eq!(rb_cold.cached_prefix_tokens, 0);
+    assert_eq!(
+        rb.generated, rb_cold.generated,
+        "promotion from the spill tier must not change generation"
+    );
+    drop(e);
+    let _ = std::fs::remove_file(&spill_path);
+}
+
+/// A misaligned spill cap is a hard construction error; a zero cap with a
+/// path set is too (zero slots). The error names the slot stride.
+#[cfg(unix)]
+#[test]
+fn misaligned_spill_cap_is_a_hard_error() {
+    let spill_path =
+        std::env::temp_dir().join(format!("quoka-e2e-cap-{}.spill", std::process::id()));
+    let _ = std::fs::remove_file(&spill_path);
+    let mk = |cap: usize| {
+        Engine::new_host(
+            "tiny",
+            EngineCfg {
+                kv: KvLayout::Paged { prefix_cache: true },
+                spill_path: Some(spill_path.clone()),
+                spill_cap_bytes: cap,
+                ..host_cfg()
+            },
+        )
+    };
+    let err = mk(12345).expect_err("misaligned cap must not construct");
+    assert!(err.to_string().contains("page slot"), "{err:#}");
+    assert!(mk(0).is_err(), "zero cap with a spill path must not construct");
+    let _ = std::fs::remove_file(&spill_path);
+}

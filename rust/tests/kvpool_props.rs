@@ -7,6 +7,8 @@
 //! publish/adopt/abort/evict).
 
 use quoka::coordinator::{BlockAllocator, Engine, EngineCfg, KvLayout, PolicySpec, SchedCfg};
+#[cfg(unix)]
+use quoka::kvpool::{slot_stride, SpillFile};
 use quoka::kvpool::{policy_ns, KvDtype, KvPool, PoolCfg, RadixCache};
 use quoka::util::prop::{check, ensure, ensure_eq};
 use quoka::util::Rng;
@@ -869,4 +871,277 @@ fn cow_isolates_writers_and_conserves_pages() {
             ensure_eq(alloc.free_blocks(), TOTAL, "all pages returned after COW traffic")
         },
     );
+}
+
+// ---------------------------------------------------------- spill tier
+
+#[cfg(unix)]
+fn spill_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("quoka-props-{}-{tag}.spill", std::process::id()))
+}
+
+/// Demote → promote round trip through the mmap spill file is
+/// byte-identical for both dtypes: the page image (f32 rows or int8 codes
+/// + per-row dequant scales), the per-(layer, page) fill counters, key
+/// sums, and inverse norms all survive, and the resident key-sum sidecar
+/// equals the page's own metadata.
+#[cfg(unix)]
+#[test]
+fn spill_round_trip_restores_pages_bitexact() {
+    for &q8 in &[false, true] {
+        let path = spill_path(if q8 { "rt-q8" } else { "rt-f32" });
+        let _ = std::fs::remove_file(&path);
+        check(
+            if q8 { "spill-round-trip-int8" } else { "spill-round-trip-f32" },
+            8,
+            |rng: &mut Rng, size| (1 + rng.below(size.max(1)).min(4), rng.next_u64()),
+            |&(pages, seed)| {
+                let (_radix, mut pool, mut alloc) = if q8 { setup_q8() } else { setup() };
+                let mut rng = Rng::new(seed);
+                let mut table = Vec::new();
+                ensure(alloc.ensure(&mut table, pages * BT), "lease source pages")?;
+                pool.adopt_new(&table);
+                append_tokens(&mut pool, &table, 0, pages * BT, &mut rng);
+                let payload = pool.page_image_bytes();
+                let mut sf = SpillFile::open(&path, slot_stride(payload) * 8, payload)
+                    .map_err(|e| format!("open spill: {e:#}"))?;
+                for pi in 0..pages {
+                    let b = table[pi];
+                    let mut img = Vec::new();
+                    pool.extract_page_image(b, &mut img);
+                    let sums = pool.page_key_sums(b);
+                    let slot = sf
+                        .write(&img, sums.clone())
+                        .ok_or_else(|| "spill file full".to_string())?;
+                    ensure_eq(
+                        sf.slot_key_sums(slot).unwrap().to_vec(),
+                        sums,
+                        "resident key-sum sidecar matches the demoted page",
+                    )?;
+                    let mut back = Vec::new();
+                    sf.read(slot, &mut back).map_err(|e| format!("spill read: {e:#}"))?;
+                    ensure(back == img, "spilled image round-trips byte-identical")?;
+                    // Promote into a fresh page and compare every surface.
+                    let mut fresh = Vec::new();
+                    ensure(alloc.ensure(&mut fresh, BT), "lease promoted page")?;
+                    pool.adopt_new(&fresh);
+                    let b2 = fresh[0];
+                    pool.restore_page_image(b2, &back)
+                        .map_err(|e| format!("restore: {e:#}"))?;
+                    let (m1, m2) = if q8 {
+                        (page_meta_q8(&pool, &table, b), page_meta_q8(&pool, &fresh, b2))
+                    } else {
+                        (page_meta(&pool, &table, b), page_meta(&pool, &fresh, b2))
+                    };
+                    ensure_eq(m1, m2, "fill/key-sum/inv-norm/scale metadata after promote")?;
+                    if q8 {
+                        ensure_eq(
+                            page_codes(&pool, &table, b),
+                            page_codes(&pool, &fresh, b2),
+                            "int8 code image after promote",
+                        )?;
+                    }
+                    let mut img2 = Vec::new();
+                    pool.extract_page_image(b2, &mut img2);
+                    ensure(img2 == img, "re-extracted promoted image identical")?;
+                    pool.release_seq(&mut fresh, &mut alloc);
+                    sf.free_slot(slot);
+                }
+                Ok(())
+            },
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// Under random insert/release/demote pressure, a page referenced by any
+/// live sequence is never demoted out from under it: every live prompt
+/// still resolves its full cached prefix as resident pages, lease-layer
+/// conservation holds (spilled pages are not leased), and slot accounting
+/// matches the tree once `freed_slots` is drained.
+#[cfg(unix)]
+#[test]
+fn demotion_never_touches_referenced_pages() {
+    let path = spill_path("demote-safety");
+    let _ = std::fs::remove_file(&path);
+    check(
+        "spill-demote-safety",
+        8,
+        |rng: &mut Rng, size| {
+            let n = 2 + rng.below(size.max(1));
+            let seqs: Vec<Vec<u32>> = (0..n).map(|_| gen_tokens(rng, 5)).collect();
+            (seqs, rng.next_u64())
+        },
+        |(seqs, seed)| {
+            let (mut radix, mut pool, mut alloc) = setup();
+            let ns = policy_ns("quoka", 32, 16);
+            let mut rng = Rng::new(*seed);
+            let _ = std::fs::remove_file(&path);
+            let payload = pool.page_image_bytes();
+            // Small cap on purpose: a full spill file must fall back to
+            // hard eviction, never to demoting a referenced page.
+            let mut sf = SpillFile::open(&path, slot_stride(payload) * 24, payload)
+                .map_err(|e| format!("open spill: {e:#}"))?;
+            let mut tracer = quoka::obs::Tracer::disabled();
+            let mut live: Vec<(Vec<u32>, Vec<u32>)> = Vec::new();
+            for toks in seqs {
+                let matched = radix.lookup(ns, toks);
+                for &b in &matched {
+                    pool.retain(b);
+                }
+                let mut table = matched;
+                if !alloc.ensure(&mut table, toks.len()) {
+                    pool.release_seq(&mut table, &mut alloc);
+                    continue;
+                }
+                pool.adopt_new(&table);
+                let n_full = toks.len() / BT;
+                radix.insert(ns, &toks[..n_full * BT], &table[..n_full], &mut pool);
+                if rng.below(3) > 0 {
+                    live.push((toks.clone(), table));
+                } else {
+                    let mut t = table;
+                    pool.release_seq(&mut t, &mut alloc);
+                }
+                let want_free = rng.below(TOTAL + 1);
+                radix.evict_until_spill(
+                    want_free,
+                    &mut pool,
+                    &mut alloc,
+                    Some(&mut sf),
+                    &mut tracer,
+                );
+                for s in radix.take_freed_slots() {
+                    sf.free_slot(s);
+                }
+                // Every live sequence still finds its whole cached prefix
+                // resident — demotion never claimed a referenced page.
+                for (ltoks, ltable) in &live {
+                    let cap = (ltoks.len() - 1) / BT;
+                    let want = (ltoks.len() / BT).min(cap);
+                    let m = radix.lookup(ns, ltoks);
+                    ensure_eq(
+                        m,
+                        ltable[..want].to_vec(),
+                        "live prefix demoted or evicted while referenced",
+                    )?;
+                }
+                let tables: Vec<Vec<u32>> =
+                    live.iter().map(|(_, t)| t.clone()).collect();
+                check_conservation(&pool, &alloc, &tables, &radix)?;
+                ensure_eq(
+                    sf.used_slots(),
+                    radix.spilled_nodes(),
+                    "spill slots match spilled tree nodes",
+                )?;
+            }
+            // Release everything: full pressure demotes what fits and
+            // hard-evicts the rest; no resident cached pages remain.
+            for (_, mut table) in live.drain(..) {
+                pool.release_seq(&mut table, &mut alloc);
+            }
+            radix.evict_until_spill(TOTAL, &mut pool, &mut alloc, Some(&mut sf), &mut tracer);
+            for s in radix.take_freed_slots() {
+                sf.free_slot(s);
+            }
+            ensure_eq(alloc.free_blocks(), TOTAL, "all pages evictable once unreferenced")?;
+            ensure_eq(radix.cached_blocks(), 0, "no resident cached pages under full pressure")?;
+            ensure_eq(sf.used_slots(), radix.spilled_nodes(), "slot accounting after drain")
+        },
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Crash safety: reopening a spill file after a torn tail write (payload
+/// corrupted before the header checksum landed) or a truncation keeps
+/// exactly the checksum-valid slots, byte-identical, and returns the torn
+/// ones to the free list.
+#[cfg(unix)]
+#[test]
+fn spill_reopen_keeps_only_checksummed_slots() {
+    let path = spill_path("crash-reopen");
+    check(
+        "spill-crash-reopen",
+        8,
+        |rng: &mut Rng, _size| (2 + rng.below(3), rng.next_u64()),
+        |&(pages, seed)| {
+            let (_radix, mut pool, mut alloc) = setup();
+            let mut rng = Rng::new(seed);
+            let _ = std::fs::remove_file(&path);
+            let mut table = Vec::new();
+            ensure(alloc.ensure(&mut table, pages * BT), "lease source pages")?;
+            pool.adopt_new(&table);
+            append_tokens(&mut pool, &table, 0, pages * BT, &mut rng);
+            let payload = pool.page_image_bytes();
+            let slot_bytes = slot_stride(payload);
+            let cap = slot_bytes * 8;
+            let mut images: Vec<(u32, Vec<u8>)> = Vec::new();
+            {
+                let mut sf = SpillFile::open(&path, cap, payload)
+                    .map_err(|e| format!("open spill: {e:#}"))?;
+                for pi in 0..pages {
+                    let mut img = Vec::new();
+                    pool.extract_page_image(table[pi], &mut img);
+                    let sums = pool.page_key_sums(table[pi]);
+                    let slot =
+                        sf.write(&img, sums).ok_or_else(|| "spill file full".to_string())?;
+                    images.push((slot, img));
+                }
+            } // drop = crash point; MAP_SHARED pages stay coherent on disk
+            // Torn write: flip one payload byte of the last-written slot.
+            let (torn_slot, _) = *images.last().unwrap();
+            {
+                use std::io::{Read, Seek, SeekFrom, Write};
+                let mut f = std::fs::OpenOptions::new()
+                    .read(true)
+                    .write(true)
+                    .open(&path)
+                    .map_err(|e| e.to_string())?;
+                let off = torn_slot as u64 * slot_bytes as u64 + 24 + 7;
+                f.seek(SeekFrom::Start(off)).map_err(|e| e.to_string())?;
+                let mut byte = [0u8; 1];
+                f.read_exact(&mut byte).map_err(|e| e.to_string())?;
+                byte[0] ^= 0x5A;
+                f.seek(SeekFrom::Start(off)).map_err(|e| e.to_string())?;
+                f.write_all(&byte).map_err(|e| e.to_string())?;
+            }
+            {
+                let sf = SpillFile::open(&path, cap, payload)
+                    .map_err(|e| format!("reopen: {e:#}"))?;
+                ensure_eq(sf.used_slots(), pages - 1, "torn slot dropped on reopen")?;
+                let mut back = Vec::new();
+                for (slot, img) in &images[..pages - 1] {
+                    sf.read(*slot, &mut back).map_err(|e| format!("read: {e:#}"))?;
+                    ensure(back == *img, "surviving slot byte-identical after reopen")?;
+                }
+                ensure(sf.read(torn_slot, &mut back).is_err(), "torn slot unreadable")?;
+            }
+            // Truncation mid-file: only whole slots before the cut survive.
+            let keep = 1usize;
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(&path)
+                .map_err(|e| e.to_string())?;
+            f.set_len((keep * slot_bytes + 37) as u64).map_err(|e| e.to_string())?;
+            drop(f);
+            let sf = SpillFile::open(&path, cap, payload)
+                .map_err(|e| format!("reopen after truncate: {e:#}"))?;
+            let survivors: Vec<&(u32, Vec<u8>)> = images[..pages - 1]
+                .iter()
+                .filter(|(s, _)| ((*s as usize) + 1) * slot_bytes <= keep * slot_bytes)
+                .collect();
+            ensure_eq(
+                sf.used_slots(),
+                survivors.len(),
+                "truncation keeps only whole checksummed slots",
+            )?;
+            let mut back = Vec::new();
+            for (slot, img) in survivors {
+                sf.read(*slot, &mut back).map_err(|e| format!("read: {e:#}"))?;
+                ensure(back == *img, "slot before the cut byte-identical")?;
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_file(&path);
 }

@@ -13,7 +13,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 src="${1:?usage: scripts/arm_bench_baselines.sh /path/to/bench-results}"
-files=(BENCH_hotpath.json BENCH_prefix.json BENCH_decode.json BENCH_spec.json BENCH_quant.json BENCH_gemm.json BENCH_serving.json)
+files=(BENCH_hotpath.json BENCH_prefix.json BENCH_decode.json BENCH_spec.json BENCH_quant.json BENCH_gemm.json BENCH_serving.json BENCH_tiered.json)
 
 for f in "${files[@]}"; do
   [[ -s "$src/$f" ]] || { echo "error: $src/$f missing or empty — need the full artifact set" >&2; exit 1; }

@@ -32,16 +32,23 @@
 #    arrivals over the real TCP server (streaming, cancels, tenants,
 #    shared prefixes) → BENCH_serving.json (client + server TTFT/ITL
 #    p50/p99, queue wait, goodput, cancel latency).
+# 8. Tiered KV pool: `cargo bench --bench tiered_serving` — 8 requests
+#    re-using a 12k-token prefix after pool-pressure eviction; three
+#    arms: warm-from-RAM, warm-from-spill (pages promoted back off the
+#    mmap spill file) and cold recompute → BENCH_tiered.json (TTFT per
+#    arm, spill-warm speedup, promotion counts; identical generations
+#    asserted).
 #
 # CI bench gate: the `bench` job in .github/workflows/ci.yml runs this
-# script on a CI-sized config, uploads the seven JSONs as the
+# script on a CI-sized config, uploads the eight JSONs as the
 # `bench-results` artifact, and then runs `scripts/check_bench.py`, which
 # FAILS the job when tiled-vs-seed speedup, warm-vs-cold or
 # in-flight-vs-cold prefix TTFT ratio, batched-vs-serial decode
 # throughput, speculative-vs-plain decode throughput, int8-vs-fp32
 # decode throughput, parallel-vs-serial GEMM speedup (waived on
-# runners with fewer than 4 cores), or the serving TTFT p50/p99 tail
-# ratio fall below absolute floors or regress beyond tolerance
+# runners with fewer than 4 cores), the serving TTFT p50/p99 tail
+# ratio, or the spill-warm-vs-cold tiered TTFT ratio fall below
+# absolute floors or regress beyond tolerance
 # against the committed baselines in bench/baselines/ (bootstrap stubs
 # until the first CI artifacts are committed — see bench/baselines/README.md).
 #
@@ -53,6 +60,7 @@
 #   QUANT_OUT=/path/to.json   override the quantized-KV output location
 #   GEMM_OUT=/path/to.json    override the dense-GEMM output location
 #   SERVING_OUT=/path/to.json override the open-loop serving output location
+#   TIERED_OUT=/path/to.json  override the tiered-KV-pool output location
 #   BENCH_CHECK=1             run the regression gate after the benches
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -65,6 +73,7 @@ export SPEC_OUT="${SPEC_OUT:-$PWD/BENCH_spec.json}"
 export QUANT_OUT="${QUANT_OUT:-$PWD/BENCH_quant.json}"
 export GEMM_OUT="${GEMM_OUT:-$PWD/BENCH_gemm.json}"
 export SERVING_OUT="${SERVING_OUT:-$PWD/BENCH_serving.json}"
+export TIERED_OUT="${TIERED_OUT:-$PWD/BENCH_tiered.json}"
 
 cargo bench --manifest-path rust/Cargo.toml --bench micro_hotpath
 cargo bench --manifest-path rust/Cargo.toml --bench prefix_serving
@@ -73,8 +82,9 @@ cargo bench --manifest-path rust/Cargo.toml --bench spec_serving
 cargo bench --manifest-path rust/Cargo.toml --bench quant_serving
 cargo bench --manifest-path rust/Cargo.toml --bench gemm_serving
 cargo bench --manifest-path rust/Cargo.toml --bench serving_load
+cargo bench --manifest-path rust/Cargo.toml --bench tiered_serving
 
-echo "bench_smoke: wrote $BENCH_OUT, $PREFIX_OUT, $DECODE_OUT, $SPEC_OUT, $QUANT_OUT, $GEMM_OUT and $SERVING_OUT"
+echo "bench_smoke: wrote $BENCH_OUT, $PREFIX_OUT, $DECODE_OUT, $SPEC_OUT, $QUANT_OUT, $GEMM_OUT, $SERVING_OUT and $TIERED_OUT"
 
 if [[ "${BENCH_CHECK:-0}" == "1" ]]; then
   python3 scripts/check_bench.py

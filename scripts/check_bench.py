@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Bench regression gate for CI.
 
-Reads the seven bench artifacts written by scripts/bench_smoke.sh
+Reads the eight bench artifacts written by scripts/bench_smoke.sh
 
   BENCH_hotpath.json  — tiled-vs-seed chunk-attention kernel speedup
   BENCH_prefix.json   — warm-vs-cold and in-flight-vs-cold prefix TTFT
@@ -16,6 +16,10 @@ Reads the seven bench artifacts written by scripts/bench_smoke.sh
                         p50/p99 ratio of the server's TTFT histogram
                         (1.0 = flat; the floor keeps p99 within a
                         bounded multiple of p50 under Poisson load)
+  BENCH_tiered.json   — tiered KV pool: warm-from-spill vs cold-recompute
+                        TTFT for a re-requested shared prefix evicted
+                        under pool pressure (promoting page images off
+                        the mmap spill tier must beat recomputing them)
 
 and fails (exit 1) when a headline metric
 
@@ -32,7 +36,7 @@ committed to bench/baselines/ to arm the relative gate.
 Environment overrides (floors): CHECK_BENCH_MIN_HOTPATH,
 CHECK_BENCH_MIN_PREFIX_WARM, CHECK_BENCH_MIN_PREFIX_INFLIGHT,
 CHECK_BENCH_MIN_DECODE, CHECK_BENCH_MIN_SPEC, CHECK_BENCH_MIN_QUANT,
-CHECK_BENCH_MIN_GEMM, CHECK_BENCH_MIN_SERVING;
+CHECK_BENCH_MIN_GEMM, CHECK_BENCH_MIN_SERVING, CHECK_BENCH_MIN_TIERED;
 relative tolerance: CHECK_BENCH_TOL (fraction, default 0.35 — CI runners
 are noisy).
 
@@ -63,6 +67,9 @@ FLOORS = {
     # TTFT p50/p99 under open-loop load: 0.02 means p99 may be at most
     # 50x the median before the gate trips.
     "serving-ttft-tail": env_float("CHECK_BENCH_MIN_SERVING", 0.02),
+    # Re-serving an evicted prefix from the spill tier must beat
+    # recomputing it by at least this factor.
+    "tiered-spill-ttft-speedup": env_float("CHECK_BENCH_MIN_TIERED", 2.0),
 }
 
 # The parallel-GEMM floor assumes enough cores to scale; below this the
@@ -133,6 +140,11 @@ def gather(bench_dir):
     out["serving-ttft-tail"] = (
         metric(sv, "ttft-p50-over-p99"),
         sv.get("config") if sv else None,
+    )
+    td = load(os.path.join(bench_dir, "BENCH_tiered.json"))
+    out["tiered-spill-ttft-speedup"] = (
+        metric(td, "spill-warm-speedup"),
+        td.get("config") if td else None,
     )
     return out
 

@@ -23,7 +23,8 @@ Validation enforces the span grammar the engine promises:
     (finish | cancel | reject)
   * first_token precedes finish
   * a parked follower (park_on_prefix) adopts pages (adopt_pages)
-    before it wakes (wake)
+    before it wakes (wake), or has a spill-tier promotion in flight
+    (promote — emitted at submit, before the park)
 
 Stdlib only — runs anywhere CI can run python3.
 """
@@ -99,11 +100,21 @@ def validate(events):
             if "wake" in names:
                 wake = names.index("wake")
                 adopts = [i for i, n in enumerate(names) if n == "adopt_pages"]
-                if not adopts:
-                    problems.append(f"request {rid}: parked follower woke without adopt_pages")
-                elif not any(park < a < wake for a in adopts):
+                # A spill-tier promotion kicked at submit also legitimises
+                # the park: the request waits on promoted pages, not on a
+                # producer's publishes, and a failed promotion may wake it
+                # with zero adopts (degrading to recompute).
+                promotes = [i for i, n in enumerate(names) if n == "promote"]
+                if not adopts and not promotes:
                     problems.append(
-                        f"request {rid}: no adopt_pages between park_on_prefix and wake"
+                        f"request {rid}: parked follower woke without adopt_pages or promote"
+                    )
+                elif not any(park < a < wake for a in adopts) and not any(
+                    p < wake for p in promotes
+                ):
+                    problems.append(
+                        f"request {rid}: no adopt_pages between park_on_prefix and wake "
+                        f"and no promote before wake"
                     )
             elif "finish" in names:
                 problems.append(f"request {rid}: parked follower finished without waking")
@@ -140,6 +151,7 @@ def waterfall(events):
             "finish_ms": fmt_ms(t[terminal]["t_us"] - t0) if terminal else "-",
             "terminal": terminal or "-",
             "prefix_pages": t.get("prefix_hit", {}).get("pages", 0),
+            "promoted": t.get("promote", {}).get("pages", 0),
             "parked": "yes" if "park_on_prefix" in t else "",
         }
         rows.append(row)
@@ -153,12 +165,21 @@ def waterfall(events):
         ("finish_ms", 10),
         ("terminal", 9),
         ("prefix_pages", 13),
+        ("promoted", 9),
         ("parked", 7),
     ]
     print("per-request waterfall (times relative to submit):")
     print("  " + " ".join(f"{name:>{w}}" for name, w in cols))
     for row in rows:
         print("  " + " ".join(f"{str(row[name]):>{w}}" for name, w in cols))
+    demoted = sum(e.get("pages", 0) for e in events if e.get("ev") == "spill")
+    evicted = sum(e.get("pages", 0) for e in events if e.get("ev") == "evict")
+    promoted = sum(e.get("pages", 0) for e in events if e.get("ev") == "promote")
+    if demoted or evicted or promoted:
+        print(
+            f"  kv tiering: {demoted} pages demoted to spill, "
+            f"{promoted} promotion pages kicked, {evicted} pages hard-evicted"
+        )
     print()
     return rows
 
